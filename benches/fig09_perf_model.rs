@@ -1,0 +1,70 @@
+//! Fig 9 reproduction: fit the §5 linear performance models from a
+//! profiling sweep and report (α, β, R²) plus predicted-vs-measured
+//! sample points. Paper: both fits reach R² = 0.96.
+
+use caraserve::bench::{f, Report};
+use caraserve::config::GpuSpec;
+use caraserve::model::LlamaConfig;
+use caraserve::perfmodel::{profiler, KernelKind};
+use caraserve::sim::GpuModel;
+use caraserve::util::rng::Rng;
+
+fn main() {
+    let gm = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+    let ctx = 160usize;
+    let plan = profiler::ProfilePlan::default();
+
+    let mut report = Report::new(
+        "Fig 9: performance-model fits (decode latency)",
+        &["kernel", "alpha (s/feat)", "beta (ms)", "R^2"],
+    );
+    let mut models = Vec::new();
+    for kernel in [KernelKind::Bgmv, KernelKind::Mbgmv] {
+        let g = gm.clone();
+        // Profile with mild measurement noise (real profiling jitters).
+        let mut rng = Rng::new(13);
+        let m = profiler::calibrate(kernel, &plan, |ranks| {
+            g.decode_iter(&vec![ctx; ranks.len()])
+                + g.lora_decode_overhead(kernel, ranks)
+                + rng.normal_with(0.0, 1e-4)
+        })
+        .unwrap();
+        report.row(vec![
+            format!("{kernel:?}"),
+            format!("{:.3e}", m.alpha),
+            f(m.beta * 1e3, 2),
+            f(m.r2, 4),
+        ]);
+        models.push((kernel, m));
+    }
+    report.note("paper: R^2 = 0.96 for both kernels");
+    report.print();
+    report.save("fig09_fits").ok();
+
+    // Predicted vs measured on held-out batches.
+    let mut check = Report::new(
+        "Fig 9 (check): predicted vs measured on held-out batches",
+        &["kernel", "batch", "feature", "measured (ms)", "predicted (ms)", "err %"],
+    );
+    let mut rng = Rng::new(99);
+    for (kernel, m) in &models {
+        for _ in 0..5 {
+            let b = rng.range(3, 48);
+            let ranks: Vec<usize> =
+                (0..b).map(|_| *rng.choose(&[8, 16, 32, 64, 128])).collect();
+            let measured = gm.decode_iter(&vec![ctx; b])
+                + gm.lora_decode_overhead(*kernel, &ranks);
+            let predicted = m.predict(&ranks);
+            check.row(vec![
+                format!("{kernel:?}"),
+                b.to_string(),
+                f(kernel.feature(&ranks), 0),
+                f(measured * 1e3, 2),
+                f(predicted * 1e3, 2),
+                f((predicted / measured - 1.0) * 100.0, 1),
+            ]);
+        }
+    }
+    check.print();
+    check.save("fig09_check").ok();
+}

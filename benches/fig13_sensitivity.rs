@@ -1,0 +1,74 @@
+//! Fig 13 reproduction: sensitivity to LoRA rank and load.
+//!
+//! Top: RPS = 9, rank = 32 (smaller adapters ⇒ shorter loads).
+//! Bottom: RPS = 6, rank = 64 (lighter traffic ⇒ fewer cold prefills).
+//! Paper overheads vs CACHED —
+//!   top: ondmd 88/28/25 %, s-lora 126/36/31 %, caraserve 36/5/6 %;
+//!   bottom: ondmd 42/25/24 %, s-lora 41/25/20 %, caraserve 1/10/9 %.
+
+use caraserve::bench::{f, Report};
+use caraserve::config::GpuSpec;
+use caraserve::model::LlamaConfig;
+use caraserve::sim::{GpuModel, ServingMode, SimInstance, Simulation, SingleServer};
+use caraserve::util::stats::mean;
+
+fn run_config(rps: f64, rank: usize, label: &str, paper: &str) {
+    let reqs = caraserve::sim::workload::synthetic(2, rps, rank, 300.0);
+    let modes = [
+        ServingMode::Cached,
+        ServingMode::OnDemand,
+        ServingMode::SLora,
+        ServingMode::CaraServe,
+    ];
+    let mut rep = Report::new(
+        &format!("Fig 13 ({label}): overhead vs CACHED, rps={rps} rank={rank}"),
+        &["mode", "ttft +%", "tpt +%", "latency +%"],
+    );
+    let mut base: Option<(f64, f64, f64)> = None;
+    for mode in modes {
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let mut sim =
+            Simulation::new(vec![SimInstance::new(0, model, mode, 64, 32, 1024)]);
+        let out = sim.run(&reqs, &mut SingleServer);
+        let t = mean(&out.column("ttft"));
+        let p = mean(&out.column("tpt"));
+        let l = mean(&out.column("latency"));
+        match base {
+            None => {
+                base = Some((t, p, l));
+                rep.row(vec![
+                    mode.name().to_string(),
+                    "base".into(),
+                    "base".into(),
+                    "base".into(),
+                ]);
+            }
+            Some((bt, bp, bl)) => {
+                rep.row(vec![
+                    mode.name().to_string(),
+                    f((t / bt - 1.0) * 100.0, 0),
+                    f((p / bp - 1.0) * 100.0, 0),
+                    f((l / bl - 1.0) * 100.0, 0),
+                ]);
+            }
+        }
+    }
+    rep.note(paper);
+    rep.print();
+    rep.save(&format!("fig13_{label}")).ok();
+}
+
+fn main() {
+    run_config(
+        9.0,
+        32,
+        "top",
+        "paper: ondmd 88/28/25, s-lora 126/36/31, caraserve 36/5/6 (%)",
+    );
+    run_config(
+        6.0,
+        64,
+        "bottom",
+        "paper: ondmd 42/25/24, s-lora 41/25/20, caraserve 1/10/9 (%)",
+    );
+}

@@ -1,0 +1,71 @@
+//! Fig 16 reproduction: sync-free CPU LoRA invocation vs the native
+//! (explicit host-synchronization) path, measured wall-clock on the
+//! FIFO device-queue substrate.
+//!
+//! The native path blocks the submitting thread on a queue drain
+//! between the memcpy and the worker signal at every attention layer;
+//! the fused async copy+signal command never blocks. Paper: up to 16%
+//! prefill-latency reduction, growing with token count.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use caraserve::bench::{f, Report};
+use caraserve::cpu_lora::{DeviceQueue, InvokeMode};
+use caraserve::ipc::Doorbell;
+
+/// Run one full "prefill" of `layers` attention layers and return the
+/// wall-clock time until both the submitter AND the device queue finish.
+fn prefill_walltime(
+    mode: InvokeMode,
+    layers: usize,
+    kernel: Duration,
+    copy_bytes: usize,
+) -> Duration {
+    let q = DeviceQueue::spawn(25.0); // 25 GB/s activation copies
+    let bell = Arc::new(Doorbell::new());
+    let t0 = Instant::now();
+    for _ in 0..layers {
+        q.invoke_layer(mode, kernel, copy_bytes, &bell);
+    }
+    q.synchronize();
+    t0.elapsed()
+}
+
+fn main() {
+    let layers = 32; // Llama2-7B attention layers
+    let mut rep = Report::new(
+        "Fig 16: prefill latency — native sync vs CaraServe fused operator",
+        &["tokens", "native (ms)", "sync-free (ms)", "reduction %"],
+    );
+    for tokens in [128usize, 256, 512, 1024, 2048] {
+        // Per-layer kernel time and activation bytes scale with tokens.
+        let kernel = Duration::from_micros(60 + (tokens / 8) as u64);
+        let copy_bytes = tokens * 4096 * 2; // fp16 activations
+        // Median of 5 runs each.
+        let mut native: Vec<f64> = (0..5)
+            .map(|_| {
+                prefill_walltime(InvokeMode::NativeSync, layers, kernel, copy_bytes)
+                    .as_secs_f64()
+            })
+            .collect();
+        let mut fused: Vec<f64> = (0..5)
+            .map(|_| {
+                prefill_walltime(InvokeMode::SyncFree, layers, kernel, copy_bytes)
+                    .as_secs_f64()
+            })
+            .collect();
+        native.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        fused.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (n, s) = (native[2], fused[2]);
+        rep.row(vec![
+            tokens.to_string(),
+            f(n * 1e3, 2),
+            f(s * 1e3, 2),
+            f((1.0 - s / n) * 100.0, 1),
+        ]);
+    }
+    rep.note("paper: CaraServe's kernel gains up to 16% as prefill tokens increase");
+    rep.print();
+    rep.save("fig16_syncfree").ok();
+}

@@ -1,0 +1,144 @@
+//! Fig 17 reproduction: CPU LoRA invocation cost under shared-memory
+//! vs Unix-domain-socket IPC as the number of receiver workers grows.
+//!
+//! Measures the full round trip: scatter 16 tokens of activation to
+//! each worker, worker computes xAB with the real kernel, gather the
+//! results. Paper: sockets degrade linearly with receivers
+//! (serialization + per-connection overheads); shared memory stays
+//! near-constant and the data-transfer share drops under 1 ms.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use caraserve::bench::{f, Report};
+use caraserve::cpu_lora::{AdapterTable, WorkerPool};
+use caraserve::ipc::socket::SocketChannel;
+use caraserve::kernels::lora_apply;
+use caraserve::model::TargetMatrix;
+
+const HIDDEN: usize = 4096;
+const RANK: usize = 64;
+const TOKENS_PER_WORKER: usize = 16;
+
+/// Median-of-n wall time.
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn shm_roundtrip(n_workers: usize) -> f64 {
+    let table = Arc::new(AdapterTable::new());
+    table.install_synthetic(1, HIDDEN, RANK);
+    let pool = WorkerPool::spawn(n_workers, HIDDEN, TOKENS_PER_WORKER, table).unwrap();
+    let x = vec![0.3f32; TOKENS_PER_WORKER * HIDDEN];
+    let mut out = Vec::new();
+    // Warm.
+    for w in 0..n_workers {
+        let t = pool.submit(w, 1, TargetMatrix::Q, TOKENS_PER_WORKER, HIDDEN, &x);
+        pool.collect(w, t, &mut out);
+    }
+    median(
+        (0..9)
+            .map(|_| {
+                let t0 = Instant::now();
+                let tokens: Vec<(usize, u32)> = (0..n_workers)
+                    .map(|w| {
+                        (w, pool.submit(w, 1, TargetMatrix::Q, TOKENS_PER_WORKER, HIDDEN, &x))
+                    })
+                    .collect();
+                for (w, t) in tokens {
+                    pool.collect(w, t, &mut out);
+                }
+                t0.elapsed().as_secs_f64()
+            })
+            .collect(),
+    )
+}
+
+fn socket_roundtrip(n_workers: usize) -> f64 {
+    // One socket pair per worker; workers compute the same xAB.
+    let mut mains = Vec::new();
+    let mut handles = Vec::new();
+    for w in 0..n_workers {
+        let (main, mut worker) = SocketChannel::pair().unwrap();
+        mains.push(main);
+        handles.push(std::thread::spawn(move || {
+            let ad = caraserve::kernels::AdapterWeights::synthetic(
+                w as u64, HIDDEN, HIDDEN, RANK,
+            );
+            let mut buf = Vec::new();
+            let mut y = vec![0.0f32; TOKENS_PER_WORKER * HIDDEN];
+            let mut scratch = vec![0.0f32; TOKENS_PER_WORKER * RANK];
+            // 1 warm + 9 measured rounds.
+            for _ in 0..10 {
+                if worker.recv(&mut buf).is_err() {
+                    return;
+                }
+                y.fill(0.0);
+                lora_apply(
+                    TOKENS_PER_WORKER,
+                    HIDDEN,
+                    HIDDEN,
+                    RANK,
+                    &buf,
+                    &ad.a,
+                    &ad.b,
+                    &mut y,
+                    &mut scratch,
+                );
+                if worker.send(&y).is_err() {
+                    return;
+                }
+            }
+        }));
+    }
+    let x = vec![0.3f32; TOKENS_PER_WORKER * HIDDEN];
+    let mut resp = Vec::new();
+    // Warm round.
+    for m in mains.iter_mut() {
+        m.send(&x).unwrap();
+    }
+    for m in mains.iter_mut() {
+        m.recv(&mut resp).unwrap();
+    }
+    let t = median(
+        (0..9)
+            .map(|_| {
+                let t0 = Instant::now();
+                for m in mains.iter_mut() {
+                    m.send(&x).unwrap();
+                }
+                for m in mains.iter_mut() {
+                    m.recv(&mut resp).unwrap();
+                }
+                t0.elapsed().as_secs_f64()
+            })
+            .collect(),
+    );
+    drop(mains);
+    for h in handles {
+        let _ = h.join();
+    }
+    t
+}
+
+fn main() {
+    let mut rep = Report::new(
+        "Fig 17: CPU LoRA round trip — shared memory vs domain socket (16 tokens/worker)",
+        &["receivers", "shm (ms)", "socket (ms)", "socket/shm"],
+    );
+    for n in [1usize, 2, 4, 8] {
+        let shm = shm_roundtrip(n);
+        let sock = socket_roundtrip(n);
+        rep.row(vec![
+            n.to_string(),
+            f(shm * 1e3, 3),
+            f(sock * 1e3, 3),
+            f(sock / shm, 2),
+        ]);
+    }
+    rep.note("paper: socket IPC grows ~linearly with receivers; shm stays near-constant, <1 ms transfer");
+    rep.note("note: this 1-core host serializes worker compute; the IPC delta is the signal");
+    rep.print();
+    rep.save("fig17_ipc").ok();
+}

@@ -1,0 +1,75 @@
+//! Fig 20 reproduction [Testbed-scale]: 8 instances serving Llama2-7B
+//! with the CACHED backend (as the paper does on its 8×A10 testbed),
+//! 1200 requests sampled from the MAF trace at aggregate RPS ≈ 60,
+//! SLO = 1.5× HF-PEFT time-per-token.
+//!
+//! Paper: CaraServe's rank-aware scheduler attains the highest SLO
+//! compliance (80%) among MostIdle / FirstFit / Random.
+
+use caraserve::bench::{f, Report};
+use caraserve::config::GpuSpec;
+use caraserve::model::LlamaConfig;
+use caraserve::perfmodel::{profiler, KernelKind};
+use caraserve::scheduler::{policy_by_name, RankAwareConfig};
+use caraserve::sim::{GpuModel, MafTrace, ServingMode, SimInstance, Simulation};
+use caraserve::util::stats::{mean, percentile};
+
+fn main() {
+    let gm = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+    let avg_ctx = 160usize;
+    let slo = 1.5 * gm.decode_iter(&[avg_ctx]);
+    let kernel = KernelKind::Bgmv;
+
+    let plan = profiler::ProfilePlan::default();
+    let g1 = gm.clone();
+    let dec = profiler::calibrate(kernel, &plan, |ranks| {
+        g1.decode_iter(&vec![avg_ctx; ranks.len()])
+            + g1.lora_decode_overhead(kernel, ranks)
+    })
+    .unwrap();
+    let g2 = gm.clone();
+    let pre =
+        profiler::calibrate(kernel, &plan, |ranks| g2.prefill(ranks.len() * 28)).unwrap();
+
+    // 1200 requests at ~60 rps ⇒ 20 s of trace.
+    let trace = MafTrace::new(23, 4096, 1.0, &[8, 16, 32, 64]);
+    let mut reqs = trace.generate(29, 60.0, 3600.0);
+    reqs.truncate(1200);
+
+    let mut rep = Report::new(
+        &format!(
+            "Fig 20: 8-instance testbed (CACHED backend, BGMV), {} requests, SLO {:.1} ms",
+            reqs.len(),
+            slo * 1e3
+        ),
+        &["policy", "SLO attain %", "tpt mean (ms)", "tpt p50", "tpt p99"],
+    );
+    for policy_name in ["rank-aware", "most-idle", "first-fit", "random"] {
+        let instances: Vec<SimInstance> = (0..8)
+            .map(|i| SimInstance::new(i, gm.clone(), ServingMode::Cached, 64, 32, 4096))
+            .collect();
+        let mut policy = policy_by_name(
+            policy_name,
+            pre.clone(),
+            dec.clone(),
+            RankAwareConfig {
+                slo,
+                ..Default::default()
+            },
+            7,
+        );
+        let mut sim = Simulation::new(instances);
+        let out = sim.run(&reqs, policy.as_mut());
+        let tpt = out.column("tpt");
+        rep.row(vec![
+            policy_name.to_string(),
+            f(out.slo_attainment(slo) * 100.0, 1),
+            f(mean(&tpt) * 1e3, 2),
+            f(percentile(&tpt, 50.0) * 1e3, 2),
+            f(percentile(&tpt, 99.0) * 1e3, 2),
+        ]);
+    }
+    rep.note("paper: rank-aware achieves the highest attainment (80%) on the real 8xA10 testbed");
+    rep.print();
+    rep.save("fig20_testbed").ok();
+}

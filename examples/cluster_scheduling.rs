@@ -1,0 +1,83 @@
+//! Cluster scheduling study (the paper's §7.5 scenario): heterogeneous
+//! LoRA requests routed across 8 inference servers by four policies;
+//! reports SLO attainment and mean time-per-token for both kernel
+//! backends (BGMV and MBGMV).
+//!
+//! ```sh
+//! cargo run --release --example cluster_scheduling
+//! ```
+
+use caraserve::config::GpuSpec;
+use caraserve::model::LlamaConfig;
+use caraserve::perfmodel::{profiler, KernelKind};
+use caraserve::scheduler::{policy_by_name, RankAwareConfig};
+use caraserve::sim::{GpuModel, MafTrace, ServingMode, SimInstance, Simulation};
+use caraserve::util::stats::mean;
+
+fn main() {
+    let gm = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+    let avg_ctx = 160;
+    // SLO = 1.5× what the HF-PEFT-style (one request per model) setup
+    // achieves (§7.5).
+    let slo = 1.5 * gm.decode_iter(&[avg_ctx]);
+    println!("SLO: time per token ≤ {:.1} ms\n", slo * 1e3);
+
+    for kernel in [KernelKind::Bgmv, KernelKind::Mbgmv] {
+        // Fit the §5 performance models by profiling.
+        let plan = profiler::ProfilePlan::default();
+        let g1 = gm.clone();
+        let dec = profiler::calibrate(kernel, &plan, |ranks| {
+            g1.decode_iter(&vec![avg_ctx; ranks.len()])
+                + g1.lora_decode_overhead(kernel, ranks)
+        })
+        .unwrap();
+        let g2 = gm.clone();
+        let pre =
+            profiler::calibrate(kernel, &plan, |ranks| g2.prefill(ranks.len() * 28)).unwrap();
+        println!(
+            "[{kernel:?}] perf model: alpha={:.2e}, beta={:.1} ms, R²={:.3}",
+            dec.alpha,
+            dec.beta * 1e3,
+            dec.r2
+        );
+
+        let mode = match kernel {
+            KernelKind::Bgmv => ServingMode::CaraServe,
+            KernelKind::Mbgmv => ServingMode::SLora,
+        };
+        let trace = MafTrace::new(3, 2048, 1.0, &[8, 16, 32, 64]);
+        let reqs = trace.generate(5, 45.0, 120.0);
+        println!(
+            "  workload: {} requests over 120 s across 8 instances",
+            reqs.len()
+        );
+        println!(
+            "  {:<12} {:>14} {:>16}",
+            "policy", "SLO attain", "mean tpt (ms)"
+        );
+        for policy_name in ["rank-aware", "most-idle", "first-fit", "random"] {
+            let instances: Vec<SimInstance> = (0..8)
+                .map(|i| SimInstance::new(i, gm.clone(), mode, 48, 32, 512))
+                .collect();
+            let mut policy = policy_by_name(
+                policy_name,
+                pre.clone(),
+                dec.clone(),
+                RankAwareConfig {
+                    slo,
+                    ..Default::default()
+                },
+                42,
+            );
+            let mut sim = Simulation::new(instances);
+            let out = sim.run(&reqs, policy.as_mut());
+            println!(
+                "  {:<12} {:>13.1}% {:>16.2}",
+                policy_name,
+                out.slo_attainment(slo) * 100.0,
+                mean(&out.column("tpt")) * 1e3
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,65 @@
+//! Multi-tenant serving study (the paper's §7.2 scenario at simulator
+//! scale): one Llama2-7B/A10 server multiplexing hundreds of LoRA
+//! adapters under a skewed MAF-like workload, comparing all four
+//! serving modes on the three user-facing metrics.
+//!
+//! ```sh
+//! cargo run --release --example multi_tenant_serving
+//! ```
+
+use caraserve::config::GpuSpec;
+use caraserve::model::LlamaConfig;
+use caraserve::sim::{GpuModel, MafTrace, ServingMode, SimInstance, Simulation, SingleServer};
+use caraserve::util::stats::Summary;
+
+fn main() {
+    let n_adapters = 512;
+    let rps = MafTrace::scaled_rps(n_adapters); // 7.7 (paper §7.2)
+    let trace = MafTrace::new(7, n_adapters, 1.0, &[64]);
+    let reqs = trace.generate(11, rps, 300.0);
+    println!(
+        "workload: {} adapters (MAF-skewed), {:.1} rps, {} requests over 300s\n",
+        n_adapters,
+        rps,
+        reqs.len()
+    );
+
+    println!(
+        "{:<10} {:>12} {:>12} {:>14} {:>12}",
+        "mode", "ttft (ms)", "tpt (ms)", "latency (ms)", "cold (%)"
+    );
+    let mut cached_ttft = None;
+    for mode in [
+        ServingMode::Cached,
+        ServingMode::OnDemand,
+        ServingMode::SLora,
+        ServingMode::CaraServe,
+    ] {
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let mut sim =
+            Simulation::new(vec![SimInstance::new(0, model, mode, 64, 32, 128)]);
+        let out = sim.run(&reqs, &mut SingleServer);
+        let ttft = Summary::of(&out.column("ttft")).unwrap();
+        let tpt = Summary::of(&out.column("tpt")).unwrap();
+        let lat = Summary::of(&out.column("latency")).unwrap();
+        let cold = Summary::of(&out.column("cold_frac")).unwrap();
+        println!(
+            "{:<10} {:>12.2} {:>12.2} {:>14.1} {:>12.2}",
+            mode.name(),
+            ttft.mean * 1e3,
+            tpt.mean * 1e3,
+            lat.mean * 1e3,
+            cold.mean * 1e2
+        );
+        if mode == ServingMode::Cached {
+            cached_ttft = Some(ttft.mean);
+        }
+    }
+    if let Some(base) = cached_ttft {
+        println!(
+            "\n(overheads are relative to the CACHED oracle, ttft {base_ms:.1} ms — \
+             the paper's §7.2 comparison)",
+            base_ms = base * 1e3
+        );
+    }
+}

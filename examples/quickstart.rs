@@ -1,0 +1,65 @@
+//! Quickstart: the smallest end-to-end CaraServe run.
+//!
+//! Loads the AOT artifacts (run `make artifacts` first), stands up one
+//! inference server with CPU-assisted cold-start handling, serves three
+//! multi-tenant LoRA requests, and prints the generated tokens and
+//! latency metrics.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use caraserve::model::LoraSpec;
+use caraserve::runtime::ModelRuntime;
+use caraserve::server::{ColdStartMode, EngineConfig, InferenceRequest, InferenceServer};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the compiled model (HLO text → PJRT executables).
+    let artifacts = std::path::Path::new("artifacts");
+    anyhow::ensure!(
+        artifacts.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let runtime = ModelRuntime::load(artifacts)?;
+    println!(
+        "loaded {} artifacts (hidden={}, layers={}, vocab={})",
+        runtime.manifest.artifacts.len(),
+        runtime.hidden,
+        runtime.layers,
+        runtime.vocab
+    );
+
+    // 2. Stand up a server with CaraServe's cold-start overlap.
+    let mut server = InferenceServer::new(
+        runtime,
+        EngineConfig {
+            cold_start: ColdStartMode::CaraServe,
+            ..Default::default()
+        },
+    )?;
+    for id in 0..3 {
+        server.install_adapter(LoraSpec::standard(id, 8, "tiny"));
+    }
+
+    // 3. Serve three requests against three different LoRA adapters.
+    for (id, adapter) in [(0u64, 0u64), (1, 1), (2, 2)] {
+        server.submit(InferenceRequest {
+            id,
+            adapter,
+            prompt: (0..12).map(|i| (i * 83 + id as i32 * 17) % 1024).collect(),
+            max_new_tokens: 8,
+        })?;
+    }
+    server.run_until_idle()?;
+
+    // 4. Inspect outputs + metrics.
+    for out in server.outputs() {
+        println!("request {} → tokens {:?}", out.id, out.tokens);
+    }
+    for metric in ["ttft", "tpt", "latency"] {
+        if let Some(s) = server.metrics().summary(metric) {
+            println!("{metric:>8}: mean {:.2} ms, p99 {:.2} ms", s.mean * 1e3, s.p99 * 1e3);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,222 @@
+"""AOT compile path: lower the L2 model to HLO text artifacts.
+
+Usage (from ``python/``)::
+
+    python -m compile.aot --out ../artifacts
+
+Emits, per (phase, bucket):
+
+* ``artifacts/<name>.hlo.txt`` — HLO **text** (NOT a serialized proto:
+  jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+  rejects; the text parser reassigns ids — see /opt/xla-example/README).
+* ``artifacts/weights.npz`` — deterministic synthetic base weights +
+  LoRA stacks (uncompressed npz; the Rust runtime reads it with
+  ``Literal::read_npz``).
+* ``artifacts/manifest.json`` — model config, bucket table, and the
+  exact input ordering per artifact.
+
+Python runs only here; the Rust binary is self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def weight_specs(cfg):
+    v, h, l, i = cfg["vocab"], cfg["hidden"], cfg["layers"], cfg["intermediate"]
+    s, r = M.LORA_SLOTS, M.LORA_MAX_RANK
+    shapes = {
+        "embed": (v, h),
+        "wq": (l, h, h),
+        "wk": (l, h, h),
+        "wv": (l, h, h),
+        "wo": (l, h, h),
+        "w_gate": (l, h, i),
+        "w_up": (l, h, i),
+        "w_down": (l, i, h),
+        "ln_attn": (l, h),
+        "ln_ffn": (l, h),
+        "ln_final": (h,),
+        "lm_head": (h, v),
+        "a_q": (l, s, h, r),
+        "b_q": (l, s, r, h),
+        "a_k": (l, s, h, r),
+        "b_k": (l, s, r, h),
+        "a_v": (l, s, h, r),
+        "b_v": (l, s, r, h),
+    }
+    return shapes
+
+
+def lower_prefill(b, s):
+    cfg = M.TINY
+    shapes = weight_specs(cfg)
+    f32 = jnp.float32
+    i32 = jnp.int32
+    args = [
+        jax.ShapeDtypeStruct(shapes[n], f32)
+        for n in M.WEIGHT_NAMES + M.LORA_NAMES
+    ]
+    args += [
+        jax.ShapeDtypeStruct((b,), i32),  # idx
+        jax.ShapeDtypeStruct((b, s), i32),  # tokens
+        jax.ShapeDtypeStruct((b,), i32),  # lens
+    ]
+    return jax.jit(M.prefill_flat).lower(*args)
+
+
+def lower_decode(b, m):
+    cfg = M.TINY
+    shapes = weight_specs(cfg)
+    f32 = jnp.float32
+    i32 = jnp.int32
+    h, l = cfg["hidden"], cfg["layers"]
+    args = [
+        jax.ShapeDtypeStruct(shapes[n], f32)
+        for n in M.WEIGHT_NAMES + M.LORA_NAMES
+    ]
+    args += [
+        jax.ShapeDtypeStruct((b,), i32),  # idx
+        jax.ShapeDtypeStruct((b,), i32),  # tokens
+        jax.ShapeDtypeStruct((b,), i32),  # pos
+        jax.ShapeDtypeStruct((l, b, m, h), f32),  # k_cache
+        jax.ShapeDtypeStruct((l, b, m, h), f32),  # v_cache
+    ]
+    return jax.jit(M.decode_flat).lower(*args)
+
+
+# The adapter slot ranks baked into weights.npz (heterogeneous on purpose
+# so MBGMV's rank mask is exercised end to end).
+SLOT_RANKS = [8, 8, 4, 4, 8, 2, 8, 8]
+WEIGHTS_SEED = 20240131
+
+
+def build(out_dir: str, force: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    # Input fingerprint for the no-op fast path (make artifacts is
+    # idempotent when sources are unchanged).
+    src_dir = os.path.dirname(os.path.abspath(__file__))
+    hasher = hashlib.sha256()
+    for fname in sorted(
+        os.path.join(dp, f)
+        for dp, _, fs in os.walk(src_dir)
+        for f in fs
+        if f.endswith(".py")
+    ):
+        with open(fname, "rb") as fh:
+            hasher.update(fh.read())
+    fingerprint = hasher.hexdigest()
+    stamp_path = os.path.join(out_dir, ".stamp")
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    if not force and os.path.exists(stamp_path) and os.path.exists(manifest_path):
+        with open(stamp_path) as fh:
+            if fh.read().strip() == fingerprint:
+                print(f"artifacts up to date in {out_dir} (stamp match)")
+                return
+
+    cfg = M.TINY
+    prefill_buckets, decode_buckets = M.bucket_specs()
+
+    # --- weights ---
+    w = M.init_weights(WEIGHTS_SEED)
+    lora = M.init_lora(WEIGHTS_SEED, SLOT_RANKS)
+    arrays = {n: np.asarray(w[n]) for n in M.WEIGHT_NAMES}
+    arrays.update({n: np.asarray(lora[n]) for n in M.LORA_NAMES})
+    arrays["ranks"] = np.asarray(lora["ranks"])
+    np.savez(os.path.join(out_dir, "weights.npz"), **arrays)
+    print(f"wrote weights.npz ({len(arrays)} arrays)")
+
+    artifacts = []
+
+    # --- prefill buckets ---
+    for b, s in prefill_buckets:
+        name = f"prefill_b{b}_s{s}"
+        text = to_hlo_text(lower_prefill(b, s))
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        artifacts.append(
+            {
+                "name": name,
+                "phase": "prefill",
+                "batch": b,
+                "seq": s,
+                "path": f"{name}.hlo.txt",
+                "inputs": M.WEIGHT_NAMES + M.LORA_NAMES + ["idx", "tokens", "lens"],
+                "outputs": ["logits", "k_cache", "v_cache"],
+            }
+        )
+        print(f"wrote {name}.hlo.txt ({len(text)} chars)")
+
+    # --- decode buckets ---
+    for b, m in decode_buckets:
+        name = f"decode_b{b}_m{m}"
+        text = to_hlo_text(lower_decode(b, m))
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        artifacts.append(
+            {
+                "name": name,
+                "phase": "decode",
+                "batch": b,
+                "seq": m,
+                "path": f"{name}.hlo.txt",
+                "inputs": M.WEIGHT_NAMES
+                + M.LORA_NAMES
+                + ["idx", "tokens", "pos", "k_cache", "v_cache"],
+                "outputs": ["logits", "k_new", "v_new"],
+            }
+        )
+        print(f"wrote {name}.hlo.txt ({len(text)} chars)")
+
+    manifest = {
+        "model": cfg,
+        "lora": {
+            "slots": M.LORA_SLOTS,
+            "max_rank": M.LORA_MAX_RANK,
+            "slot_ranks": SLOT_RANKS,
+        },
+        "weights": "weights.npz",
+        "weight_names": M.WEIGHT_NAMES,
+        "lora_names": M.LORA_NAMES,
+        "artifacts": artifacts,
+    }
+    with open(manifest_path, "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    with open(stamp_path, "w") as fh:
+        fh.write(fingerprint)
+    print(f"wrote manifest.json ({len(artifacts)} artifacts)")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    parser.add_argument(
+        "--force", action="store_true", help="rebuild even if stamp matches"
+    )
+    args = parser.parse_args()
+    build(args.out, force=args.force)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,106 @@
+"""L1 Pallas kernels: BGMV (padded) and MBGMV (padding-free rank-masked).
+
+These are the GPU-LoRA gather kernels of Punica / S-LoRA re-thought for
+the TPU idiom (DESIGN.md §Hardware-Adaptation):
+
+* one grid step per token (the CUDA version maps tokens to thread
+  blocks); ``BlockSpec`` streams each token's activation row through
+  VMEM while the (small) adapter stacks stay VMEM-resident;
+* the per-token dynamic gather ``A[idx[n]]`` is a dynamic-slice on the
+  leading axis — the Mosaic analogue of Punica's warp-level gather;
+* BGMV does the full padded-rank matmul (cost ∝ max rank, Fig 4-Left);
+  MBGMV masks the inactive columns so only the true rank contributes
+  (cost ∝ Σ ranks on real hardware, Fig 4-Right).
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that
+both the python tests and the Rust runtime can run. Real-TPU efficiency
+is estimated analytically in DESIGN.md §8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bgmv_kernel(idx_ref, x_ref, a_ref, b_ref, o_ref):
+    """One token per grid step: o[n] = x[n] @ A[idx[n]] @ B[idx[n]]."""
+    n = pl.program_id(0)
+    j = idx_ref[n]
+    x = x_ref[0, :]  # [H] — this token's activation row (VMEM block)
+    a = a_ref[j]  # [H, R] dynamic gather from the adapter stack
+    b = b_ref[j]  # [R, H2]
+    t = jnp.dot(x.astype(jnp.float32), a.astype(jnp.float32))  # [R]
+    y = jnp.dot(t, b.astype(jnp.float32))  # [H2]
+    o_ref[0, :] = y.astype(o_ref.dtype)
+
+
+def _mbgmv_kernel(idx_ref, ranks_ref, x_ref, a_ref, b_ref, o_ref):
+    """Rank-masked variant: only the first ranks[idx[n]] columns count."""
+    n = pl.program_id(0)
+    j = idx_ref[n]
+    x = x_ref[0, :]
+    a = a_ref[j]
+    b = b_ref[j]
+    r = a.shape[-1]
+    mask = (jnp.arange(r) < ranks_ref[j]).astype(jnp.float32)
+    t = jnp.dot(x.astype(jnp.float32), a.astype(jnp.float32)) * mask
+    y = jnp.dot(t, b.astype(jnp.float32))
+    o_ref[0, :] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def bgmv(x, a_stack, b_stack, idx):
+    """Padded BGMV: ``y[n] = x[n] @ A[idx[n]] @ B[idx[n]]``.
+
+    Args:
+      x: [N, H] activations.
+      a_stack: [S, H, R] adapter A stack (zero-padded to max rank R).
+      b_stack: [S, R, H2] adapter B stack.
+      idx: [N] int32 adapter index per token.
+
+    Returns:
+      [N, H2] LoRA delta, dtype of x.
+    """
+    n, _h = x.shape
+    h2 = b_stack.shape[-1]
+    return pl.pallas_call(
+        _bgmv_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # idx: whole array
+            pl.BlockSpec((1, x.shape[1]), lambda i: (i, 0)),  # x row
+            pl.BlockSpec(memory_space=pl.ANY),  # A stack resident
+            pl.BlockSpec(memory_space=pl.ANY),  # B stack resident
+        ],
+        out_specs=pl.BlockSpec((1, h2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h2), x.dtype),
+        interpret=True,
+    )(idx, x, a_stack, b_stack)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mbgmv(x, a_stack, b_stack, idx, ranks):
+    """Padding-free MBGMV: per-token true-rank masked gather matvec.
+
+    Args:
+      ranks: [S] int32 true rank of each adapter in the stack.
+    """
+    n, _h = x.shape
+    h2 = b_stack.shape[-1]
+    return pl.pallas_call(
+        _mbgmv_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # idx
+            pl.BlockSpec(memory_space=pl.ANY),  # ranks
+            pl.BlockSpec((1, x.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, h2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h2), x.dtype),
+        interpret=True,
+    )(idx, ranks, x, a_stack, b_stack)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: `python/tests/test_kernel.py`
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels match
+these references to tolerance.
+
+Semantics (matching Punica's BGMV / S-LoRA's MBGMV, paper §2.3):
+a batch of N tokens, token n mapped by ``idx[n]`` to one of S adapters;
+``y[n] = x[n] @ A[idx[n]] @ B[idx[n]]``.
+"""
+
+import jax.numpy as jnp
+
+
+def bgmv_ref(x, a_stack, b_stack, idx):
+    """Padded BGMV reference.
+
+    Args:
+      x: [N, H] token activations.
+      a_stack: [S, H, R] per-adapter A matrices (padded to max rank R).
+      b_stack: [S, R, H2] per-adapter B matrices.
+      idx: [N] int32 adapter index per token.
+
+    Returns:
+      [N, H2] LoRA deltas x·A·B.
+    """
+    a = a_stack[idx]  # [N, H, R]
+    b = b_stack[idx]  # [N, R, H2]
+    t = jnp.einsum("nh,nhr->nr", x, a)
+    return jnp.einsum("nr,nrk->nk", t, b).astype(x.dtype)
+
+
+def mbgmv_ref(x, a_stack, b_stack, idx, ranks):
+    """Padding-free MBGMV reference.
+
+    Identical to ``bgmv_ref`` but each token only uses the first
+    ``ranks[idx[n]]`` columns of its adapter (the true rank), matching
+    S-LoRA's padding-free kernel. When the stacks are zero-padded beyond
+    each adapter's true rank the result equals ``bgmv_ref``.
+
+    Args:
+      ranks: [S] int32 true rank per adapter.
+    """
+    a = a_stack[idx]  # [N, H, R]
+    b = b_stack[idx]  # [N, R, H2]
+    r = a_stack.shape[-1]
+    mask = (jnp.arange(r)[None, :] < ranks[idx][:, None]).astype(x.dtype)  # [N, R]
+    t = jnp.einsum("nh,nhr->nr", x, a) * mask
+    return jnp.einsum("nr,nrk->nk", t, b).astype(x.dtype)

@@ -1,0 +1,308 @@
+"""L2: TinyLlama forward pass with LoRA adaptation (build-time JAX).
+
+A scaled-down Llama-2-style transformer (RMSNorm, RoPE, SwiGLU, MHA)
+whose W_Q/W_K/W_V projections are adapted by LoRA through the L1 Pallas
+BGMV kernel — the same architecture/adaptation layout as the paper's
+Llama2-7B deployment, at a size the CPU PJRT plugin executes quickly.
+
+Two entry points are AOT-lowered per (batch, seq) bucket by ``aot.py``:
+
+* ``prefill``: padded prompt batch → last-token logits + the KV cache
+  rows for every prompt position.
+* ``decode_step``: one token per running request + the (padded) KV cache
+  → next-token logits + the new KV rows (the Rust KV-cache manager owns
+  cache assembly; only the new rows cross the boundary back).
+
+Shapes must stay in sync with ``rust/src/model/mod.rs::LlamaConfig::tiny``
+and the manifest consumed by ``rust/src/runtime``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.bgmv import bgmv
+
+# Must match rust/src/model/mod.rs::LlamaConfig::tiny().
+TINY = dict(
+    vocab=1024,
+    hidden=256,
+    layers=4,
+    heads=8,
+    kv_heads=8,
+    intermediate=688,
+    max_seq=256,
+)
+
+# Number of device adapter slots and the padded max rank of the LoRA
+# stacks baked into every artifact (must match manifest.json).
+LORA_SLOTS = 8
+LORA_MAX_RANK = 8
+
+# Flat weight-argument order shared with aot.py / the Rust runtime.
+WEIGHT_NAMES = [
+    "embed",     # [V, H]
+    "wq",        # [L, H, H]
+    "wk",        # [L, H, H]
+    "wv",        # [L, H, H]
+    "wo",        # [L, H, H]
+    "w_gate",    # [L, H, I]
+    "w_up",      # [L, H, I]
+    "w_down",    # [L, I, H]
+    "ln_attn",   # [L, H]
+    "ln_ffn",    # [L, H]
+    "ln_final",  # [H]
+    "lm_head",   # [H, V]
+]
+
+LORA_NAMES = [
+    "a_q",  # [L, S, H, R]
+    "b_q",  # [L, S, R, H]
+    "a_k",
+    "b_k",
+    "a_v",
+    "b_v",
+]
+
+
+def init_weights(seed: int, cfg=None):
+    """Deterministic synthetic weights (paper uses dummy LoRA weights;
+    the base weights just need to be numerically tame)."""
+    cfg = cfg or TINY
+    v, h, l, i = cfg["vocab"], cfg["hidden"], cfg["layers"], cfg["intermediate"]
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, 12)
+
+    def mk(k, shape, scale):
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(jnp.float32)
+
+    s = 1.0 / (h ** 0.5)
+    return {
+        "embed": mk(keys[0], (v, h), 0.02),
+        "wq": mk(keys[1], (l, h, h), s),
+        "wk": mk(keys[2], (l, h, h), s),
+        "wv": mk(keys[3], (l, h, h), s),
+        "wo": mk(keys[4], (l, h, h), s),
+        "w_gate": mk(keys[5], (l, h, i), s),
+        "w_up": mk(keys[6], (l, h, i), s),
+        "w_down": mk(keys[7], (l, i, h), 1.0 / (i ** 0.5)),
+        "ln_attn": jnp.ones((l, h), jnp.float32),
+        "ln_ffn": jnp.ones((l, h), jnp.float32),
+        "ln_final": jnp.ones((h,), jnp.float32),
+        "lm_head": mk(keys[8], (h, v), 0.02),
+    }
+
+
+def init_lora(seed: int, ranks, cfg=None):
+    """LoRA stacks for ``LORA_SLOTS`` adapters with the given true ranks
+    (zero-padded to LORA_MAX_RANK so BGMV and MBGMV agree numerically)."""
+    cfg = cfg or TINY
+    h, l = cfg["hidden"], cfg["layers"]
+    assert len(ranks) == LORA_SLOTS
+    key = jax.random.PRNGKey(seed + 1)
+    out = {}
+    for t, name in enumerate(["q", "k", "v"]):
+        ka, kb = jax.random.split(jax.random.fold_in(key, t))
+        a = jax.random.normal(ka, (l, LORA_SLOTS, h, LORA_MAX_RANK), jnp.float32)
+        b = jax.random.normal(kb, (l, LORA_SLOTS, LORA_MAX_RANK, h), jnp.float32)
+        # Zero-pad beyond each slot's true rank; scale like LoRA init.
+        col = jnp.arange(LORA_MAX_RANK)
+        mask = (col[None, :] < jnp.asarray(ranks)[:, None]).astype(jnp.float32)
+        a = a * mask[None, :, None, :] * 0.05
+        b = b * mask[None, :, :, None] * 0.05
+        out[f"a_{name}"] = a
+        out[f"b_{name}"] = b
+    out["ranks"] = jnp.asarray(ranks, jnp.int32)
+    return out
+
+
+def _rmsnorm(x, g, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def _rope(x, positions):
+    """Rotary embedding. x: [..., T, heads, head_dim]; positions: [..., T]."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _qkv_with_lora(x_flat, w, lora, layer, idx_flat):
+    """Project tokens through Wq/Wk/Wv with LoRA deltas via the Pallas
+    BGMV kernel. x_flat: [N, H]; idx_flat: [N] adapter slot per token."""
+    outs = []
+    for name, wmat in (("q", w["wq"]), ("k", w["wk"]), ("v", w["wv"])):
+        base = x_flat @ wmat[layer]
+        delta = bgmv(
+            x_flat, lora[f"a_{name}"][layer], lora[f"b_{name}"][layer], idx_flat
+        )
+        outs.append(base + delta)
+    return outs
+
+
+def _attention(q, k, v, mask, cfg):
+    """q: [B, Tq, heads, hd]; k/v: [B, Tk, heads, hd]; mask: [B, Tq, Tk]."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (hd ** 0.5)
+    scores = jnp.where(mask[:, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _ffn(x, w, layer):
+    gate = jax.nn.silu(x @ w["w_gate"][layer])
+    up = x @ w["w_up"][layer]
+    return (gate * up) @ w["w_down"][layer]
+
+
+def prefill(w, lora, idx, tokens, lens):
+    """Prefill a padded prompt batch.
+
+    Args:
+      w: weight dict (WEIGHT_NAMES).
+      lora: LoRA stacks (LORA_NAMES).
+      idx: [B] int32 adapter slot per request.
+      tokens: [B, S] int32 padded prompts.
+      lens: [B] int32 true prompt lengths (≤ S).
+
+    Returns:
+      logits: [B, V] logits at each request's last real token.
+      k_cache, v_cache: [L, B, S, H] per-layer KV rows for all positions.
+    """
+    cfg = TINY
+    b, s = tokens.shape
+    h, heads = cfg["hidden"], cfg["heads"]
+    hd = h // heads
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    # Causal mask ∧ key-position < len (padded keys never attended).
+    causal = jnp.tril(jnp.ones((s, s), bool))[None]
+    valid = positions[:, None, :] < lens[:, None, None]
+    mask = causal & valid
+
+    x = w["embed"][tokens]  # [B, S, H]
+    idx_flat = jnp.repeat(idx, s)  # token n belongs to request n // s
+    ks, vs = [], []
+    for layer in range(cfg["layers"]):
+        xn = _rmsnorm(x, w["ln_attn"][layer])
+        q, k, v = _qkv_with_lora(
+            xn.reshape(b * s, h), w, lora, layer, idx_flat
+        )
+        q = _rope(q.reshape(b, s, heads, hd), positions)
+        k = _rope(k.reshape(b, s, heads, hd), positions)
+        v = v.reshape(b, s, heads, hd)
+        attn = _attention(q, k, v, mask, cfg).reshape(b, s, h)
+        x = x + attn @ w["wo"][layer]
+        xf = _rmsnorm(x, w["ln_ffn"][layer])
+        x = x + _ffn(xf, w, layer)
+        ks.append(k.reshape(b, s, h))
+        vs.append(v.reshape(b, s, h))
+
+    x = _rmsnorm(x, w["ln_final"])
+    logits_all = x @ w["lm_head"]  # [B, S, V]
+    last = jnp.clip(lens - 1, 0, s - 1)
+    logits = jnp.take_along_axis(
+        logits_all, last[:, None, None], axis=1
+    ).squeeze(1)
+    k_cache = jnp.stack(ks)  # [L, B, S, H]
+    v_cache = jnp.stack(vs)
+    return logits, k_cache, v_cache
+
+
+def decode_step(w, lora, idx, tokens, pos, k_cache, v_cache):
+    """One decode iteration for a running batch.
+
+    Args:
+      idx: [B] adapter slot per request.
+      tokens: [B] int32 current token per request.
+      pos: [B] int32 current position (= tokens generated so far + prompt
+        length); the new token sits at this position.
+      k_cache, v_cache: [L, B, M, H] padded caches; rows ≥ pos[b] are
+        garbage and masked out.
+
+    Returns:
+      logits: [B, V] next-token logits.
+      k_new, v_new: [L, B, H] this token's KV rows (the Rust KV manager
+        appends them; the big cache never round-trips as an output).
+    """
+    cfg = TINY
+    l_, b, m, h = k_cache.shape
+    heads = cfg["heads"]
+    hd = h // heads
+    x = w["embed"][tokens]  # [B, H]
+    key_positions = jnp.arange(m)[None, :]  # [1, M]
+    cache_mask = key_positions < pos[:, None]  # [B, M]
+
+    k_news, v_news = [], []
+    for layer in range(cfg["layers"]):
+        xn = _rmsnorm(x, w["ln_attn"][layer])
+        q, k, v = _qkv_with_lora(xn, w, lora, layer, idx)
+        q = _rope(q.reshape(b, 1, heads, hd), pos[:, None])
+        k = _rope(k.reshape(b, 1, heads, hd), pos[:, None])
+        v = v.reshape(b, 1, heads, hd)
+        # Keys = cache ∥ self; self always attended.
+        k_all = jnp.concatenate(
+            [k_cache[layer].reshape(b, m, heads, hd), k], axis=1
+        )
+        v_all = jnp.concatenate(
+            [v_cache[layer].reshape(b, m, heads, hd), v], axis=1
+        )
+        mask = jnp.concatenate(
+            [cache_mask, jnp.ones((b, 1), bool)], axis=1
+        )[:, None, :]  # [B, 1, M+1]
+        attn = _attention(q, k_all, v_all, mask, cfg).reshape(b, h)
+        x = x + attn @ w["wo"][layer]
+        xf = _rmsnorm(x, w["ln_ffn"][layer])
+        x = x + _ffn(xf, w, layer)
+        k_news.append(k.reshape(b, h))
+        v_news.append(v.reshape(b, h))
+
+    x = _rmsnorm(x, w["ln_final"])
+    logits = x @ w["lm_head"]
+    return logits, jnp.stack(k_news), jnp.stack(v_news)
+
+
+def _flat_weights(w):
+    return [w[n] for n in WEIGHT_NAMES]
+
+
+def _flat_lora(lora):
+    return [lora[n] for n in LORA_NAMES]
+
+
+def prefill_flat(*args):
+    """Flat-argument prefill for AOT lowering. Argument order:
+    WEIGHT_NAMES ++ LORA_NAMES ++ [idx, tokens, lens]."""
+    nw, nl = len(WEIGHT_NAMES), len(LORA_NAMES)
+    w = dict(zip(WEIGHT_NAMES, args[:nw]))
+    lora = dict(zip(LORA_NAMES, args[nw : nw + nl]))
+    idx, tokens, lens = args[nw + nl :]
+    return prefill(w, lora, idx, tokens, lens)
+
+
+def decode_flat(*args):
+    """Flat-argument decode_step. Argument order:
+    WEIGHT_NAMES ++ LORA_NAMES ++ [idx, tokens, pos, k_cache, v_cache]."""
+    nw, nl = len(WEIGHT_NAMES), len(LORA_NAMES)
+    w = dict(zip(WEIGHT_NAMES, args[:nw]))
+    lora = dict(zip(LORA_NAMES, args[nw : nw + nl]))
+    idx, tokens, pos, k_cache, v_cache = args[nw + nl :]
+    return decode_step(w, lora, idx, tokens, pos, k_cache, v_cache)
+
+
+@functools.lru_cache(maxsize=None)
+def bucket_specs():
+    """The (phase, batch, seq/cache) buckets lowered to artifacts.
+
+    Prefill buckets are (B, S_prompt); decode buckets are (B, M_cache).
+    Must match the Rust runtime's bucket table.
+    """
+    prefill_buckets = [(1, 16), (1, 32), (1, 64), (2, 32), (4, 32), (4, 64)]
+    decode_buckets = [(1, 128), (2, 128), (4, 128), (8, 128)]
+    return prefill_buckets, decode_buckets

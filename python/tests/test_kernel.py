@@ -1,0 +1,140 @@
+"""L1 kernel correctness: Pallas BGMV/MBGMV vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; `numpy.testing.assert_allclose`
+against `ref.py` is THE correctness signal for the kernel layer.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.bgmv import bgmv, mbgmv
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def make_case(rng, n, h, h2, s, r, dtype):
+    x = rng.normal(size=(n, h)).astype(dtype)
+    a = rng.normal(size=(s, h, r)).astype(dtype)
+    b = rng.normal(size=(s, r, h2)).astype(dtype)
+    idx = rng.integers(0, s, size=n).astype(np.int32)
+    ranks = rng.integers(1, r + 1, size=s).astype(np.int32)
+    return x, a, b, idx, ranks
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == np.float16 else dict(
+        rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 9),
+    h=st.sampled_from([8, 16, 64]),
+    h2=st.sampled_from([8, 32]),
+    s=st.integers(1, 5),
+    r=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bgmv_matches_ref(n, h, h2, s, r, seed):
+    rng = np.random.default_rng(seed)
+    x, a, b, idx, _ = make_case(rng, n, h, h2, s, r, np.float32)
+    got = np.asarray(bgmv(jnp.asarray(x), jnp.asarray(a), jnp.asarray(b), jnp.asarray(idx)))
+    want = np.asarray(ref.bgmv_ref(jnp.asarray(x), jnp.asarray(a), jnp.asarray(b), jnp.asarray(idx)))
+    np.testing.assert_allclose(got, want, **tol(np.float32))
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 9),
+    h=st.sampled_from([8, 16, 64]),
+    s=st.integers(1, 5),
+    r=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mbgmv_matches_ref(n, h, s, r, seed):
+    rng = np.random.default_rng(seed)
+    x, a, b, idx, ranks = make_case(rng, n, h, h, s, r, np.float32)
+    got = np.asarray(
+        mbgmv(jnp.asarray(x), jnp.asarray(a), jnp.asarray(b), jnp.asarray(idx), jnp.asarray(ranks))
+    )
+    want = np.asarray(
+        ref.mbgmv_ref(jnp.asarray(x), jnp.asarray(a), jnp.asarray(b), jnp.asarray(idx), jnp.asarray(ranks))
+    )
+    np.testing.assert_allclose(got, want, **tol(np.float32))
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bgmv_bf16(n, seed):
+    """bfloat16 path (the deployment dtype on TPU)."""
+    rng = np.random.default_rng(seed)
+    x, a, b, idx, _ = make_case(rng, n, 16, 16, 3, 4, np.float32)
+    xb, ab, bb = (jnp.asarray(v, jnp.bfloat16) for v in (x, a, b))
+    got = np.asarray(bgmv(xb, ab, bb, jnp.asarray(idx)), np.float32)
+    want = np.asarray(
+        ref.bgmv_ref(xb, ab, bb, jnp.asarray(idx)), np.float32
+    )
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+def test_bgmv_equals_mbgmv_when_zero_padded():
+    """With zero-padded stacks (what init_lora produces), the padded and
+    padding-free kernels must agree — the numerical basis for comparing
+    their perf models on the same workload."""
+    rng = np.random.default_rng(7)
+    s, h, r = 4, 32, 8
+    ranks = np.asarray([2, 4, 8, 1], np.int32)
+    a = rng.normal(size=(s, h, r)).astype(np.float32)
+    b = rng.normal(size=(s, r, h)).astype(np.float32)
+    col = np.arange(r)
+    a *= (col[None, None, :] < ranks[:, None, None])
+    b *= (col[None, :, None] < ranks[:, None, None])
+    x = rng.normal(size=(6, h)).astype(np.float32)
+    idx = rng.integers(0, s, size=6).astype(np.int32)
+    y1 = np.asarray(bgmv(jnp.asarray(x), jnp.asarray(a), jnp.asarray(b), jnp.asarray(idx)))
+    y2 = np.asarray(
+        mbgmv(jnp.asarray(x), jnp.asarray(a), jnp.asarray(b), jnp.asarray(idx), jnp.asarray(ranks))
+    )
+    np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-5)
+
+
+def test_gather_selects_correct_adapter():
+    """Adapters with distinguishable outputs: each token must use its own."""
+    h = 8
+    a = np.zeros((2, h, 1), np.float32)
+    b = np.zeros((2, 1, h), np.float32)
+    a[0, :, 0] = 1.0
+    b[0, 0, :] = 1.0  # adapter 0: y = sum(x)
+    a[1, :, 0] = 1.0
+    b[1, 0, :] = -1.0  # adapter 1: y = -sum(x)
+    x = np.ones((2, h), np.float32)
+    idx = np.asarray([0, 1], np.int32)
+    y = np.asarray(bgmv(jnp.asarray(x), jnp.asarray(a), jnp.asarray(b), jnp.asarray(idx)))
+    np.testing.assert_allclose(y[0], np.full(h, 8.0), rtol=1e-6)
+    np.testing.assert_allclose(y[1], np.full(h, -8.0), rtol=1e-6)
+
+
+def test_single_token_batch():
+    rng = np.random.default_rng(3)
+    x, a, b, idx, _ = make_case(rng, 1, 16, 16, 1, 4, np.float32)
+    got = np.asarray(bgmv(jnp.asarray(x), jnp.asarray(a), jnp.asarray(b), jnp.asarray(idx)))
+    want = np.asarray(ref.bgmv_ref(jnp.asarray(x), jnp.asarray(a), jnp.asarray(b), jnp.asarray(idx)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_zero_rank_mask_gives_zero_delta():
+    """An adapter masked to rank 0 via MBGMV contributes nothing."""
+    rng = np.random.default_rng(11)
+    x, a, b, idx, _ = make_case(rng, 4, 16, 16, 2, 4, np.float32)
+    ranks = np.zeros(2, np.int32)
+    y = np.asarray(
+        mbgmv(jnp.asarray(x), jnp.asarray(a), jnp.asarray(b), jnp.asarray(idx), jnp.asarray(ranks))
+    )
+    np.testing.assert_allclose(y, np.zeros_like(y), atol=1e-7)

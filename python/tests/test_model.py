@@ -1,0 +1,139 @@
+"""L2 model correctness: shapes, LoRA plumbing, and the decode/prefill
+consistency invariant that the Rust serving path relies on."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.aot import SLOT_RANKS, WEIGHTS_SEED
+
+
+@pytest.fixture(scope="module")
+def setup():
+    w = M.init_weights(WEIGHTS_SEED)
+    lora = M.init_lora(WEIGHTS_SEED, SLOT_RANKS)
+    return w, lora
+
+
+def prompts(rng, b, s):
+    return jnp.asarray(rng.integers(0, M.TINY["vocab"], (b, s)), jnp.int32)
+
+
+def test_prefill_shapes(setup):
+    w, lora = setup
+    rng = np.random.default_rng(0)
+    tokens = prompts(rng, 2, 32)
+    idx = jnp.asarray([0, 3], jnp.int32)
+    lens = jnp.asarray([32, 20], jnp.int32)
+    logits, kc, vc = M.prefill(w, lora, idx, tokens, lens)
+    assert logits.shape == (2, M.TINY["vocab"])
+    assert kc.shape == (M.TINY["layers"], 2, 32, M.TINY["hidden"])
+    assert vc.shape == kc.shape
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_decode_shapes(setup):
+    w, lora = setup
+    l, h = M.TINY["layers"], M.TINY["hidden"]
+    b, m = 4, 128
+    kc = jnp.zeros((l, b, m, h), jnp.float32)
+    vc = jnp.zeros((l, b, m, h), jnp.float32)
+    idx = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    tokens = jnp.asarray([5, 6, 7, 8], jnp.int32)
+    pos = jnp.asarray([0, 0, 0, 0], jnp.int32)
+    logits, kn, vn = M.decode_step(w, lora, idx, tokens, pos, kc, vc)
+    assert logits.shape == (b, M.TINY["vocab"])
+    assert kn.shape == (l, b, h)
+    assert vn.shape == (l, b, h)
+
+
+def test_decode_consistent_with_prefill(setup):
+    """Greedy-decoding one token via decode_step must equal prefilling
+    the extended prompt — the invariant the continuous batcher relies on
+    when a request transitions from prefill to decode."""
+    w, lora = setup
+    rng = np.random.default_rng(1)
+    tokens = prompts(rng, 1, 16)
+    idx = jnp.asarray([2], jnp.int32)
+    lens = jnp.asarray([16], jnp.int32)
+    logits, kc, vc = M.prefill(w, lora, idx, tokens, lens)
+    next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    l, b, s, h = kc.shape
+    m = 128
+    kpad = jnp.zeros((l, b, m, h), jnp.float32).at[:, :, :s].set(kc)
+    vpad = jnp.zeros((l, b, m, h), jnp.float32).at[:, :, :s].set(vc)
+    logits_dec, _, _ = M.decode_step(w, lora, idx, next_tok, lens, kpad, vpad)
+
+    ext = jnp.concatenate([tokens, next_tok[None]], axis=1)
+    ext_pad = jnp.pad(ext, ((0, 0), (0, 15)))
+    logits_pre, _, _ = M.prefill(w, lora, idx, ext_pad, jnp.asarray([17], jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(logits_dec), np.asarray(logits_pre), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_padding_does_not_change_logits(setup):
+    """The same prompt in a larger bucket must yield the same logits —
+    the Rust router picks buckets freely."""
+    w, lora = setup
+    rng = np.random.default_rng(2)
+    tokens16 = prompts(rng, 1, 16)
+    idx = jnp.asarray([1], jnp.int32)
+    lens = jnp.asarray([16], jnp.int32)
+    lg16, _, _ = M.prefill(w, lora, idx, tokens16, lens)
+    tokens32 = jnp.pad(tokens16, ((0, 0), (0, 16)))
+    lg32, _, _ = M.prefill(w, lora, idx, tokens32, lens)
+    np.testing.assert_allclose(
+        np.asarray(lg16), np.asarray(lg32), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_different_adapters_give_different_logits(setup):
+    """LoRA must actually flow through the forward pass."""
+    w, lora = setup
+    rng = np.random.default_rng(3)
+    tokens = prompts(rng, 1, 16)
+    lens = jnp.asarray([16], jnp.int32)
+    lg_a, _, _ = M.prefill(w, lora, jnp.asarray([0], jnp.int32), tokens, lens)
+    lg_b, _, _ = M.prefill(w, lora, jnp.asarray([5], jnp.int32), tokens, lens)
+    assert float(jnp.abs(lg_a - lg_b).max()) > 1e-3
+
+
+def test_batch_order_invariance(setup):
+    """Each request's output must not depend on its batch position —
+    the invariant that lets the batcher reorder/join requests freely."""
+    w, lora = setup
+    rng = np.random.default_rng(4)
+    t = prompts(rng, 2, 32)
+    idx = jnp.asarray([0, 4], jnp.int32)
+    lens = jnp.asarray([30, 22], jnp.int32)
+    lg, _, _ = M.prefill(w, lora, idx, t, lens)
+    lg_swap, _, _ = M.prefill(
+        w, lora, idx[::-1], t[::-1], lens[::-1]
+    )
+    np.testing.assert_allclose(
+        np.asarray(lg[0]), np.asarray(lg_swap[1]), rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(lg[1]), np.asarray(lg_swap[0]), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_lora_stacks_zero_padded_beyond_rank(setup):
+    """init_lora must zero-pad so BGMV (padded) and MBGMV (masked) agree."""
+    _, lora = setup
+    ranks = np.asarray(SLOT_RANKS)
+    a_q = np.asarray(lora["a_q"])  # [L, S, H, R]
+    col = np.arange(M.LORA_MAX_RANK)
+    for slot in range(M.LORA_SLOTS):
+        dead = a_q[:, slot, :, :][:, :, col >= ranks[slot]]
+        assert np.all(dead == 0.0), f"slot {slot} not zero-padded"
+
+
+def test_bucket_specs_cover_manifest():
+    pre, dec = M.bucket_specs()
+    assert (1, 16) in pre and (4, 64) in pre
+    assert all(m == 128 for _, m in dec)
+    assert sorted(b for b, _ in dec) == [1, 2, 4, 8]

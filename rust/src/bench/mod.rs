@@ -1,0 +1,310 @@
+//! Mini-criterion: a self-contained benchmark harness (the offline vendor
+//! set has no `criterion`). Every `benches/*.rs` target uses this.
+//!
+//! Two kinds of benchmarks coexist in this repo:
+//!
+//! 1. **Wall-clock micro/meso benchmarks** ([`Bencher`]): warmup, then
+//!    timed iterations, reporting mean/p50/p99 like criterion.
+//! 2. **Experiment reproductions** ([`Report`]): benches that re-run a
+//!    paper experiment (usually on the discrete-event simulator) and
+//!    print the figure's rows/series as aligned tables, with a JSON dump
+//!    for machine consumption.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::{self, Json};
+use crate::util::stats::Summary;
+
+/// One wall-clock benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    fn from_samples(name: &str, samples_ns: &[f64]) -> BenchResult {
+        let s = Summary::of(samples_ns).expect("no samples");
+        let d = |ns: f64| Duration::from_nanos(ns.max(0.0) as u64);
+        BenchResult {
+            name: name.to_string(),
+            iters: s.count,
+            mean: d(s.mean),
+            p50: d(s.p50),
+            p99: d(s.p99),
+            min: d(s.min),
+            max: d(s.max),
+        }
+    }
+}
+
+/// Wall-clock bencher with warmup + adaptive iteration count.
+pub struct Bencher {
+    /// Target measurement time per benchmark.
+    pub measure_time: Duration,
+    /// Warmup time before measurement.
+    pub warmup_time: Duration,
+    /// Hard cap on measured iterations.
+    pub max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    /// Default: 0.5 s warmup, 2 s measurement (overridable via
+    /// `CARA_BENCH_FAST=1` for CI, which cuts both to ~100 ms).
+    pub fn new() -> Self {
+        let fast = std::env::var("CARA_BENCH_FAST").is_ok();
+        Self {
+            measure_time: if fast {
+                Duration::from_millis(100)
+            } else {
+                Duration::from_secs(2)
+            },
+            warmup_time: if fast {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_millis(500)
+            },
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one benchmark: `f` is called once per iteration; its return
+    /// value is black-boxed to prevent dead-code elimination.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup.
+        let warm_start = Instant::now();
+        while warm_start.elapsed() < self.warmup_time {
+            black_box(f());
+        }
+        // Measure.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure_time && samples_ns.len() < self.max_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        let result = BenchResult::from_samples(name, &samples_ns);
+        println!(
+            "{:<48} {:>12} {:>12} {:>12}  ({} iters)",
+            result.name,
+            fmt_dur(result.mean),
+            fmt_dur(result.p50),
+            fmt_dur(result.p99),
+            result.iters
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Print the header row for bench output.
+    pub fn header(&self, title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<48} {:>12} {:>12} {:>12}",
+            "benchmark", "mean", "p50", "p99"
+        );
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Opaque-value hint against dead-code elimination (stable-Rust version of
+/// `std::hint::black_box`, which is available and used directly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Format a duration with adaptive units.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// A figure/table reproduction report: named columns, rows of cells, and
+/// free-form notes; renders as an aligned text table plus optional JSON.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    /// New report with column headers.
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the column count).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Append a free-form note printed under the table.
+    pub fn note(&mut self, text: impl Into<String>) {
+        self.notes.push(text.into());
+    }
+
+    /// Render as an aligned table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n=== {} ===\n", self.title));
+        let hdr: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect();
+        out.push_str(&hdr.join("  "));
+        out.push('\n');
+        out.push_str(&"-".repeat(hdr.join("  ").len()));
+        out.push('\n');
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            out.push_str(&line.join("  "));
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// JSON form for machine consumption / EXPERIMENTS.md regeneration.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("title", json::s(&self.title)),
+            (
+                "columns",
+                Json::Arr(self.columns.iter().map(|c| json::s(c)).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| json::s(c)).collect()))
+                        .collect(),
+                ),
+            ),
+            (
+                "notes",
+                Json::Arr(self.notes.iter().map(|n| json::s(n)).collect()),
+            ),
+        ])
+    }
+
+    /// Write the JSON form under `target/bench-reports/<slug>.json`.
+    pub fn save(&self, slug: &str) -> std::io::Result<()> {
+        let dir = std::path::Path::new("target/bench-reports");
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{slug}.json")), self.to_json().to_string_pretty())
+    }
+}
+
+/// Format a float cell with fixed precision.
+pub fn f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+/// Format a millisecond cell from seconds.
+pub fn ms(seconds: f64) -> String {
+    format!("{:.2}", seconds * 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_measures_something() {
+        std::env::set_var("CARA_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        let r = b.bench("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters > 10);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.min <= r.p50 && r.p50 <= r.max);
+    }
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let mut rep = Report::new("Fig X", &["rps", "ttft_ms"]);
+        rep.row(vec!["3".into(), "12.5".into()]);
+        rep.row(vec!["9".into(), "40.1".into()]);
+        rep.note("shape matches paper");
+        let text = rep.render();
+        assert!(text.contains("Fig X"));
+        assert!(text.contains("40.1"));
+        let j = rep.to_json();
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn report_arity_checked() {
+        let mut rep = Report::new("t", &["a", "b"]);
+        rep.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(50)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+}

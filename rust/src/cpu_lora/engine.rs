@@ -1,0 +1,187 @@
+//! [`CpuLoraEngine`] — the front end of CPU-assisted LoRA serving.
+//!
+//! Splits a request's L prompt tokens over ⌈L/c⌉ workers (profiling-
+//! guided, §4.2), scatters the activation slices through shared memory,
+//! and gathers the per-slice `xAB` results. All workers compute
+//! concurrently; the scatter/gather cost is what Fig 17/18 measure.
+
+use std::sync::Arc;
+
+use super::profiles::CoreProfile;
+use super::worker::{AdapterTable, WorkerPool};
+use crate::model::TargetMatrix;
+
+/// CPU-assisted LoRA execution engine.
+pub struct CpuLoraEngine {
+    pool: WorkerPool,
+    profile: CoreProfile,
+    hidden: usize,
+}
+
+impl CpuLoraEngine {
+    /// Build an engine with `n_workers` workers at hidden size `hidden`,
+    /// each able to hold `max_tokens` tokens, using the given profile
+    /// for core allocation.
+    pub fn new(
+        n_workers: usize,
+        hidden: usize,
+        max_tokens: usize,
+        table: Arc<AdapterTable>,
+        profile: CoreProfile,
+    ) -> Result<CpuLoraEngine, crate::ipc::shm::ShmError> {
+        let pool = WorkerPool::spawn(n_workers, hidden, max_tokens, table)?;
+        Ok(CpuLoraEngine {
+            pool,
+            profile,
+            hidden,
+        })
+    }
+
+    /// The worker pool's adapter table.
+    pub fn table(&self) -> &Arc<AdapterTable> {
+        self.pool.table()
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// The active core profile.
+    pub fn profile(&self) -> &CoreProfile {
+        &self.profile
+    }
+
+    /// Compute `xAB` for `n_tok` tokens against `adapter_id`/`target`,
+    /// splitting across ⌈n_tok/c⌉ workers. Returns the n_tok×hidden
+    /// adaptation delta.
+    pub fn apply(
+        &self,
+        adapter_id: u64,
+        target: TargetMatrix,
+        n_tok: usize,
+        x: &[f32],
+    ) -> Vec<f32> {
+        assert_eq!(x.len(), n_tok * self.hidden);
+        if n_tok == 0 {
+            return Vec::new();
+        }
+        let cores = self.profile.cores_for(n_tok, self.pool.len());
+        let chunks = CoreProfile::split_tokens(n_tok, cores);
+
+        // Scatter.
+        let mut tokens_sent = 0usize;
+        let mut pending: Vec<(usize, u32, usize)> = Vec::with_capacity(chunks.len());
+        for (w, &chunk) in chunks.iter().enumerate() {
+            let start = tokens_sent * self.hidden;
+            let end = (tokens_sent + chunk) * self.hidden;
+            let token =
+                self.pool
+                    .submit(w, adapter_id, target, chunk, self.hidden, &x[start..end]);
+            pending.push((w, token, chunk));
+            tokens_sent += chunk;
+        }
+
+        // Gather in submission order (results are position-dependent).
+        let mut out = Vec::with_capacity(n_tok * self.hidden);
+        let mut buf = Vec::new();
+        for (w, token, chunk) in pending {
+            self.pool.collect(w, token, &mut buf);
+            debug_assert_eq!(buf.len(), chunk * self.hidden);
+            out.extend_from_slice(&buf);
+        }
+        out
+    }
+
+    /// Apply all three standard targets (Q, K, V) for a prefill slice,
+    /// returning the three deltas. This is the per-attention-layer call
+    /// the base inference process makes during CPU-assisted prefill.
+    pub fn apply_qkv(
+        &self,
+        adapter_id: u64,
+        n_tok: usize,
+        x: &[f32],
+    ) -> [Vec<f32>; 3] {
+        [
+            self.apply(adapter_id, TargetMatrix::Q, n_tok, x),
+            self.apply(adapter_id, TargetMatrix::K, n_tok, x),
+            self.apply(adapter_id, TargetMatrix::V, n_tok, x),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gemm::lora_apply;
+
+    fn engine(workers: usize, hidden: usize, c: usize) -> CpuLoraEngine {
+        let table = Arc::new(AdapterTable::new());
+        table.install_synthetic(1, hidden, 8);
+        // Synthetic profile with budget c tokens/core.
+        let profile = CoreProfile::from_rate(hidden, 8, c as f64 * 100.0, 10.0);
+        CpuLoraEngine::new(workers, hidden, 256, table, profile).unwrap()
+    }
+
+    fn reference(e: &CpuLoraEngine, n_tok: usize, hidden: usize, x: &[f32]) -> Vec<f32> {
+        let weights = e.table().get(1).unwrap();
+        let ad = &weights[0];
+        let mut want = vec![0.0f32; n_tok * hidden];
+        let mut scratch = vec![0.0f32; n_tok * ad.rank];
+        lora_apply(
+            n_tok, hidden, hidden, ad.rank, x, &ad.a, &ad.b, &mut want, &mut scratch,
+        );
+        want
+    }
+
+    #[test]
+    fn split_apply_equals_single_core() {
+        let hidden = 32;
+        let e = engine(4, hidden, 8); // c=8 → 4 workers for 32 tokens
+        let n_tok = 32;
+        let x: Vec<f32> = (0..n_tok * hidden).map(|i| ((i % 7) as f32) * 0.25).collect();
+        let got = e.apply(1, TargetMatrix::Q, n_tok, &x);
+        let want = reference(&e, n_tok, hidden, &x);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn uneven_split_preserves_order() {
+        let hidden = 16;
+        let e = engine(3, hidden, 4); // 10 tokens → 3 workers (4,3,3)
+        let n_tok = 10;
+        let x: Vec<f32> = (0..n_tok * hidden).map(|i| i as f32 * 0.01).collect();
+        let got = e.apply(1, TargetMatrix::V, n_tok, &x);
+        let want = {
+            let weights = e.table().get(1).unwrap();
+            let ad = &weights[2];
+            let mut w = vec![0.0f32; n_tok * hidden];
+            let mut s = vec![0.0f32; n_tok * ad.rank];
+            lora_apply(n_tok, hidden, hidden, ad.rank, &x, &ad.a, &ad.b, &mut w, &mut s);
+            w
+        };
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn zero_tokens_is_empty() {
+        let e = engine(2, 8, 4);
+        assert!(e.apply(1, TargetMatrix::Q, 0, &[]).is_empty());
+    }
+
+    #[test]
+    fn qkv_returns_three_distinct_deltas() {
+        let hidden = 16;
+        let e = engine(2, hidden, 8);
+        let x = vec![1.0f32; hidden];
+        let [q, k, v] = e.apply_qkv(1, 1, &x);
+        assert_eq!(q.len(), hidden);
+        assert_ne!(q, k);
+        assert_ne!(k, v);
+    }
+}

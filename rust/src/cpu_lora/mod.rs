@@ -1,0 +1,27 @@
+//! CPU-assisted LoRA serving (paper §4).
+//!
+//! While an adapter's weights stream host→device (the cold-start window),
+//! the prefill-phase LoRA computation `xAB` runs on host cores. The
+//! pieces:
+//!
+//! - [`profiles`] — profiling-guided parallelization (§4.2): measure
+//!   single-core token throughput, derive the per-core token budget `c`,
+//!   allocate ⌈L/c⌉ cores per request.
+//! - [`worker`] — the per-core worker pool fed through the shared-memory
+//!   slots of [`crate::ipc::shm`] (isolated-process-ready data plane).
+//! - [`engine`] — [`CpuLoraEngine`]: splits a request's tokens across
+//!   workers, scatters via shm, gathers `xAB`.
+//! - [`device_queue`] — a strict-FIFO device command queue modelling the
+//!   CUDA stream, with the paper's *native* (explicit host sync between
+//!   memcpy and signal) and *sync-free* (fused async memcpy+signal
+//!   command) invocation modes (Fig 8 / Fig 16).
+
+pub mod device_queue;
+pub mod engine;
+pub mod profiles;
+pub mod worker;
+
+pub use device_queue::{DeviceQueue, InvokeMode};
+pub use engine::CpuLoraEngine;
+pub use profiles::CoreProfile;
+pub use worker::{AdapterTable, WorkerPool};

@@ -1,0 +1,159 @@
+//! Profiling-guided parallelization (paper §4.2, Fig 18).
+//!
+//! The paper profiles single-core LoRA throughput under varying token
+//! counts, fixes a per-core token budget `c`, and allocates ⌈L/c⌉ cores
+//! to a request of L prompt tokens. [`CoreProfile::measure`] reproduces
+//! that profiling pass on the actual host using the real
+//! [`crate::kernels::gemm::lora_apply`] kernel.
+
+use std::time::Instant;
+
+use crate::kernels::gemm::lora_apply;
+use crate::kernels::AdapterWeights;
+
+/// Result of profiling one core: throughput and the derived budget.
+#[derive(Debug, Clone)]
+pub struct CoreProfile {
+    /// Hidden size the profile was taken at.
+    pub hidden: usize,
+    /// Rank the profile was taken at.
+    pub rank: usize,
+    /// Measured tokens/second for the xAB computation on one core.
+    pub tokens_per_sec: f64,
+    /// Token budget per core: the max tokens one core may be assigned
+    /// so that its slice finishes within `target_ms`.
+    pub tokens_per_core: usize,
+    /// The latency target used to derive the budget (ms).
+    pub target_ms: f64,
+}
+
+impl CoreProfile {
+    /// Profile the real kernel on this host: time `xAB` over a batch of
+    /// `probe_tokens` tokens, several repetitions, take the best rate.
+    pub fn measure(hidden: usize, rank: usize, target_ms: f64) -> CoreProfile {
+        let probe_tokens = 64usize;
+        let ad = AdapterWeights::synthetic(0xC0DE, hidden, hidden, rank);
+        let x = vec![0.5f32; probe_tokens * hidden];
+        let mut y = vec![0.0f32; probe_tokens * hidden];
+        let mut scratch = vec![0.0f32; probe_tokens * rank];
+        // Warm once.
+        lora_apply(
+            probe_tokens,
+            hidden,
+            hidden,
+            rank,
+            &x,
+            &ad.a,
+            &ad.b,
+            &mut y,
+            &mut scratch,
+        );
+        let mut best_rate = 0.0f64;
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            lora_apply(
+                probe_tokens,
+                hidden,
+                hidden,
+                rank,
+                &x,
+                &ad.a,
+                &ad.b,
+                &mut y,
+                &mut scratch,
+            );
+            let dt = t0.elapsed().as_secs_f64();
+            best_rate = best_rate.max(probe_tokens as f64 / dt);
+        }
+        Self::from_rate(hidden, rank, best_rate, target_ms)
+    }
+
+    /// Build a profile from an externally known rate (used by the
+    /// simulator with the paper's A10-host numbers).
+    pub fn from_rate(
+        hidden: usize,
+        rank: usize,
+        tokens_per_sec: f64,
+        target_ms: f64,
+    ) -> CoreProfile {
+        let budget = (tokens_per_sec * target_ms / 1e3).floor().max(1.0) as usize;
+        CoreProfile {
+            hidden,
+            rank,
+            tokens_per_sec,
+            tokens_per_core: budget,
+            target_ms,
+        }
+    }
+
+    /// ⌈L/c⌉ — cores to allocate for an L-token request (§4.2), capped at
+    /// `available`.
+    pub fn cores_for(&self, prompt_tokens: usize, available: usize) -> usize {
+        if prompt_tokens == 0 {
+            return 0;
+        }
+        prompt_tokens
+            .div_ceil(self.tokens_per_core)
+            .clamp(1, available.max(1))
+    }
+
+    /// Expected single-core time (seconds) to process `tokens`.
+    pub fn time_for(&self, tokens: usize) -> f64 {
+        tokens as f64 / self.tokens_per_sec
+    }
+
+    /// Split `tokens` as evenly as possible over `cores` chunks; returns
+    /// per-chunk token counts (all within ±1 of each other, no zeros).
+    pub fn split_tokens(tokens: usize, cores: usize) -> Vec<usize> {
+        assert!(cores > 0);
+        let cores = cores.min(tokens.max(1));
+        let base = tokens / cores;
+        let extra = tokens % cores;
+        (0..cores)
+            .map(|i| base + usize::from(i < extra))
+            .filter(|&n| n > 0)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_on_this_host_is_sane() {
+        let p = CoreProfile::measure(256, 16, 10.0);
+        assert!(p.tokens_per_sec > 100.0, "rate={}", p.tokens_per_sec);
+        assert!(p.tokens_per_core >= 1);
+    }
+
+    #[test]
+    fn cores_for_ceil_division() {
+        let p = CoreProfile::from_rate(4096, 64, 3_200.0, 10.0); // c = 32
+        assert_eq!(p.tokens_per_core, 32);
+        assert_eq!(p.cores_for(0, 8), 0);
+        assert_eq!(p.cores_for(1, 8), 1);
+        assert_eq!(p.cores_for(32, 8), 1);
+        assert_eq!(p.cores_for(33, 8), 2);
+        assert_eq!(p.cores_for(128, 8), 4);
+        assert_eq!(p.cores_for(10_000, 8), 8); // capped
+    }
+
+    #[test]
+    fn split_tokens_balanced_and_complete() {
+        for (tokens, cores) in [(128, 4), (7, 3), (1, 5), (100, 7)] {
+            let chunks = CoreProfile::split_tokens(tokens, cores);
+            assert_eq!(chunks.iter().sum::<usize>(), tokens);
+            let mx = *chunks.iter().max().unwrap();
+            let mn = *chunks.iter().min().unwrap();
+            assert!(mx - mn <= 1, "{chunks:?}");
+            assert!(chunks.iter().all(|&c| c > 0));
+        }
+    }
+
+    #[test]
+    fn time_scales_linearly() {
+        let p = CoreProfile::from_rate(4096, 64, 1000.0, 10.0);
+        assert!((p.time_for(500) - 0.5).abs() < 1e-12);
+    }
+}

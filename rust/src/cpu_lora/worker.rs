@@ -1,0 +1,282 @@
+//! The CPU-LoRA worker pool (paper §4.2).
+//!
+//! Each worker emulates one of the paper's isolated, core-pinned LoRA
+//! processes: it owns one shared-memory [`SlotChannel`] and loops
+//! `recv x-slice → compute xAB → send result`. Job metadata (adapter id,
+//! target, token count) travels in a small fixed header at the front of
+//! the shm payload — nothing is serialized.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+
+use crate::ipc::shm::{slot_channels, ShmRegion, SlotChannel};
+use crate::kernels::gemm::lora_apply;
+use crate::kernels::AdapterWeights;
+use crate::model::TargetMatrix;
+
+/// Header floats prepended to each request payload:
+/// `[adapter_id, target_idx, n_tok, hidden]`.
+pub const HEADER_F32S: usize = 4;
+
+fn target_idx(t: TargetMatrix) -> usize {
+    match t {
+        TargetMatrix::Q => 0,
+        TargetMatrix::K => 1,
+        TargetMatrix::V => 2,
+        TargetMatrix::O => 3,
+    }
+}
+
+/// Host-memory adapter weight table shared by the base process and all
+/// workers (the paper's "local LoRA repository" compute view): adapter id
+/// → per-target (A, B) weights.
+#[derive(Default)]
+pub struct AdapterTable {
+    inner: RwLock<HashMap<u64, Arc<[AdapterWeights; 4]>>>,
+}
+
+impl AdapterTable {
+    /// Empty table.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install synthetic weights for adapter `id` with `rank` at `hidden`.
+    /// Targets Q/K/V/O all get weights (O unused in the standard config).
+    pub fn install_synthetic(&self, id: u64, hidden: usize, rank: usize) {
+        let mk = |t: u64| AdapterWeights::synthetic(id * 31 + t, hidden, hidden, rank);
+        let entry = Arc::new([mk(0), mk(1), mk(2), mk(3)]);
+        self.inner.write().unwrap().insert(id, entry);
+    }
+
+    /// Fetch an adapter's weights.
+    pub fn get(&self, id: u64) -> Option<Arc<[AdapterWeights; 4]>> {
+        self.inner.read().unwrap().get(&id).cloned()
+    }
+
+    /// Number of installed adapters.
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A pool of CPU-LoRA workers, one per (simulated) core.
+pub struct WorkerPool {
+    /// Keep the shm region alive for the workers' lifetime.
+    _region: Arc<ShmRegion>,
+    slots: Vec<Arc<SlotChannel>>,
+    handles: Vec<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    table: Arc<AdapterTable>,
+}
+
+impl WorkerPool {
+    /// Spawn `n_workers` workers, each with a slot holding up to
+    /// `max_tokens`×`hidden` activation floats.
+    pub fn spawn(
+        n_workers: usize,
+        hidden: usize,
+        max_tokens: usize,
+        table: Arc<AdapterTable>,
+    ) -> Result<WorkerPool, crate::ipc::shm::ShmError> {
+        let capacity = HEADER_F32S + max_tokens * hidden;
+        let (region, raw_slots) = slot_channels(n_workers, capacity)?;
+        let region = Arc::new(region);
+        let slots: Vec<Arc<SlotChannel>> = raw_slots.into_iter().map(Arc::new).collect();
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for slot in &slots {
+            let slot = slot.clone();
+            let stop = stop.clone();
+            let table = table.clone();
+            let region = region.clone();
+            handles.push(std::thread::spawn(move || {
+                let _keep = region;
+                worker_loop(&slot, &stop, &table);
+            }));
+        }
+        Ok(WorkerPool {
+            _region: region,
+            slots,
+            handles,
+            stop,
+            table,
+        })
+    }
+
+    /// Number of workers.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True if no workers.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// The shared adapter table.
+    pub fn table(&self) -> &Arc<AdapterTable> {
+        &self.table
+    }
+
+    /// Submit `x` (n_tok×hidden) for adapter/target to worker `w`.
+    /// Returns the doorbell token to pass to [`Self::collect`].
+    pub fn submit(
+        &self,
+        w: usize,
+        adapter_id: u64,
+        target: TargetMatrix,
+        n_tok: usize,
+        hidden: usize,
+        x: &[f32],
+    ) -> u32 {
+        assert_eq!(x.len(), n_tok * hidden);
+        let mut payload = Vec::with_capacity(HEADER_F32S + x.len());
+        payload.push(adapter_id as f32);
+        payload.push(target_idx(target) as f32);
+        payload.push(n_tok as f32);
+        payload.push(hidden as f32);
+        payload.extend_from_slice(x);
+        self.slots[w].send_request(&payload)
+    }
+
+    /// Block until worker `w` responds; the result (n_tok×hidden xAB) is
+    /// appended into `out`.
+    pub fn collect(&self, w: usize, token: u32, out: &mut Vec<f32>) {
+        self.slots[w].recv_response(token, out);
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // Wake each worker with an empty poison request.
+        for slot in &self.slots {
+            slot.send_request(&[f32::NAN, 0.0, 0.0, 0.0]);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(slot: &SlotChannel, stop: &AtomicBool, table: &AdapterTable) {
+    // Bootstrap from 0, not request_seq(): the region is freshly zeroed,
+    // and a request may already have been submitted (ringing the bell)
+    // before this thread first observes the slot — reading the live
+    // sequence here would swallow that request and deadlock the caller.
+    let mut seen = 0u32;
+    let mut buf: Vec<f32> = Vec::new();
+    let mut y: Vec<f32> = Vec::new();
+    let mut scratch: Vec<f32> = Vec::new();
+    loop {
+        seen = slot.recv_request(seen, &mut buf);
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        if buf.len() < HEADER_F32S || buf[0].is_nan() {
+            continue;
+        }
+        let adapter_id = buf[0] as u64;
+        let t_idx = buf[1] as usize;
+        let n_tok = buf[2] as usize;
+        let hidden = buf[3] as usize;
+        let x = &buf[HEADER_F32S..HEADER_F32S + n_tok * hidden];
+        match table.get(adapter_id) {
+            Some(weights) => {
+                let ad = &weights[t_idx.min(3)];
+                y.clear();
+                y.resize(n_tok * hidden, 0.0);
+                scratch.clear();
+                scratch.resize(n_tok * ad.rank, 0.0);
+                lora_apply(
+                    n_tok, hidden, hidden, ad.rank, x, &ad.a, &ad.b, &mut y,
+                    &mut scratch,
+                );
+                slot.send_response(&y);
+            }
+            None => {
+                // Unknown adapter: respond with zeros so the base process
+                // never deadlocks; it treats this as "no adaptation".
+                y.clear();
+                y.resize(n_tok * hidden, 0.0);
+                slot.send_response(&y);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gemm::lora_apply;
+
+    #[test]
+    fn worker_computes_xab() {
+        let hidden = 32;
+        let rank = 4;
+        let table = Arc::new(AdapterTable::new());
+        table.install_synthetic(7, hidden, rank);
+        let pool = WorkerPool::spawn(2, hidden, 16, table.clone()).unwrap();
+
+        let n_tok = 5;
+        let x: Vec<f32> = (0..n_tok * hidden).map(|i| (i % 13) as f32 * 0.1).collect();
+        let token = pool.submit(0, 7, TargetMatrix::Q, n_tok, hidden, &x);
+        let mut got = Vec::new();
+        pool.collect(0, token, &mut got);
+
+        // Reference.
+        let weights = table.get(7).unwrap();
+        let ad = &weights[0];
+        let mut want = vec![0.0f32; n_tok * hidden];
+        let mut scratch = vec![0.0f32; n_tok * rank];
+        lora_apply(
+            n_tok, hidden, hidden, rank, &x, &ad.a, &ad.b, &mut want, &mut scratch,
+        );
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn unknown_adapter_returns_zeros() {
+        let table = Arc::new(AdapterTable::new());
+        let pool = WorkerPool::spawn(1, 8, 4, table).unwrap();
+        let token = pool.submit(0, 999, TargetMatrix::K, 2, 8, &[1.0; 16]);
+        let mut got = Vec::new();
+        pool.collect(0, token, &mut got);
+        assert_eq!(got, vec![0.0; 16]);
+    }
+
+    #[test]
+    fn pool_shuts_down_cleanly() {
+        let table = Arc::new(AdapterTable::new());
+        let pool = WorkerPool::spawn(4, 8, 4, table).unwrap();
+        assert_eq!(pool.len(), 4);
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn distinct_targets_use_distinct_weights() {
+        let hidden = 16;
+        let table = Arc::new(AdapterTable::new());
+        table.install_synthetic(1, hidden, 2);
+        let pool = WorkerPool::spawn(1, hidden, 4, table).unwrap();
+        let x = vec![1.0f32; hidden];
+        let t_q = pool.submit(0, 1, TargetMatrix::Q, 1, hidden, &x);
+        let mut y_q = Vec::new();
+        pool.collect(0, t_q, &mut y_q);
+        let t_k = pool.submit(0, 1, TargetMatrix::K, 1, hidden, &x);
+        let mut y_k = Vec::new();
+        pool.collect(0, t_k, &mut y_k);
+        assert_ne!(y_q, y_k);
+    }
+}

@@ -1,0 +1,20 @@
+//! Inter-process communication substrate for the CPU-assisted LoRA
+//! engine (paper §4.2, Figs 8 & 17).
+//!
+//! The paper runs CPU-LoRA workers as isolated processes and feeds them
+//! through **shared memory** (vs. the domain-socket IPC of existing
+//! frameworks). We keep the data plane byte-for-byte process-ready:
+//!
+//! - [`shm`] — a real `mmap(MAP_SHARED | MAP_ANONYMOUS)` region carved
+//!   into fixed slots, each with a seqlock-style state word; works
+//!   unchanged across `fork()`.
+//! - [`socket`] — the Unix-domain-socket baseline used by Fig 17.
+//! - [`signal`] — futex-backed doorbells: the "asynchronous signaling"
+//!   half of the paper's fused memcpy+signal operator.
+
+pub mod shm;
+pub mod signal;
+pub mod socket;
+
+pub use shm::{ShmRegion, SlotChannel};
+pub use signal::Doorbell;

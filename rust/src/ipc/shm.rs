@@ -1,0 +1,322 @@
+//! Shared-memory data plane (paper §4.2 "Shared memory data transfer").
+//!
+//! A [`ShmRegion`] is a real `mmap(MAP_SHARED | MAP_ANONYMOUS)` mapping —
+//! visible across `fork()`, i.e. genuinely usable by the paper's isolated
+//! CPU-LoRA *processes*; in this repo the workers are threads (1-core
+//! testbed) but the data plane makes no such assumption.
+//!
+//! The region is carved into [`SlotChannel`]s: single-producer/
+//! single-consumer f32 slots with a doorbell pair. The base process
+//! writes the input activation x into the request slot and rings the
+//! request bell; the worker computes xAB into the response slot and
+//! rings the response bell. No serialization, no copies beyond the
+//! activation itself — the property Fig 17 measures against sockets.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use super::signal::Doorbell;
+
+/// Error type for shm operations.
+#[derive(Debug, thiserror::Error)]
+pub enum ShmError {
+    #[error("mmap failed: {0}")]
+    Mmap(std::io::Error),
+    #[error("region too small: need {need} bytes, have {have}")]
+    TooSmall { need: usize, have: usize },
+}
+
+/// A shared anonymous mapping. Dropped ⇒ unmapped.
+pub struct ShmRegion {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// The region is plain memory; synchronization is the user's business
+// (SlotChannel provides it).
+unsafe impl Send for ShmRegion {}
+unsafe impl Sync for ShmRegion {}
+
+impl ShmRegion {
+    /// Map `len` bytes of MAP_SHARED|MAP_ANONYMOUS memory, zeroed.
+    pub fn new(len: usize) -> Result<ShmRegion, ShmError> {
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED | libc::MAP_ANONYMOUS,
+                -1,
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            return Err(ShmError::Mmap(std::io::Error::last_os_error()));
+        }
+        Ok(ShmRegion {
+            ptr: ptr as *mut u8,
+            len,
+        })
+    }
+
+    /// Region length in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if zero-length.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Raw base pointer.
+    pub fn as_ptr(&self) -> *mut u8 {
+        self.ptr
+    }
+}
+
+impl Drop for ShmRegion {
+    fn drop(&mut self) {
+        unsafe {
+            libc::munmap(self.ptr as *mut libc::c_void, self.len);
+        }
+    }
+}
+
+/// Header of one SPSC slot, laid out at the front of its shm segment.
+#[repr(C)]
+struct SlotHeader {
+    /// Payload length (number of f32s) of the current message.
+    len: AtomicU32,
+    /// Producer→consumer doorbell.
+    req: Doorbell,
+    /// Consumer→producer doorbell.
+    resp: Doorbell,
+}
+
+/// A single-producer single-consumer f32 message slot inside a
+/// [`ShmRegion`]: one in-flight request + one in-flight response
+/// (exactly the per-layer LoRA exchange pattern: x in, xAB out).
+pub struct SlotChannel {
+    header: *mut SlotHeader,
+    req_buf: *mut f32,
+    resp_buf: *mut f32,
+    capacity: usize,
+}
+
+unsafe impl Send for SlotChannel {}
+unsafe impl Sync for SlotChannel {}
+
+impl SlotChannel {
+    /// Bytes needed for one slot with `capacity` f32s each way.
+    pub fn bytes_needed(capacity: usize) -> usize {
+        std::mem::size_of::<SlotHeader>() + 2 * capacity * 4
+    }
+
+    /// Carve a slot out of `region` at byte offset `offset`.
+    ///
+    /// # Safety contract (checked)
+    /// The range must lie inside the region; alignment of the region base
+    /// (page-aligned) plus 4-byte multiples keeps atomics aligned.
+    pub fn at(
+        region: &ShmRegion,
+        offset: usize,
+        capacity: usize,
+    ) -> Result<SlotChannel, ShmError> {
+        let need = offset + Self::bytes_needed(capacity);
+        if need > region.len() {
+            return Err(ShmError::TooSmall {
+                need,
+                have: region.len(),
+            });
+        }
+        assert_eq!(offset % 8, 0, "slot offset must be 8-byte aligned");
+        unsafe {
+            let base = region.as_ptr().add(offset);
+            let header = base as *mut SlotHeader;
+            let req_buf = base.add(std::mem::size_of::<SlotHeader>()) as *mut f32;
+            let resp_buf = req_buf.add(capacity);
+            Ok(SlotChannel {
+                header,
+                req_buf,
+                resp_buf,
+                capacity,
+            })
+        }
+    }
+
+    /// Capacity in f32s per direction.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn header(&self) -> &SlotHeader {
+        unsafe { &*self.header }
+    }
+
+    /// Producer: publish a request payload and ring the request bell.
+    /// Returns the doorbell sequence to pass to [`Self::recv_response`].
+    pub fn send_request(&self, payload: &[f32]) -> u32 {
+        assert!(payload.len() <= self.capacity, "payload exceeds slot");
+        unsafe {
+            std::ptr::copy_nonoverlapping(payload.as_ptr(), self.req_buf, payload.len());
+        }
+        self.header()
+            .len
+            .store(payload.len() as u32, Ordering::Release);
+        let resp_seen = self.header().resp.load();
+        self.header().req.ring();
+        resp_seen
+    }
+
+    /// Consumer: wait for a request past `seen`, copy it out.
+    /// Returns (payload, new_seen).
+    pub fn recv_request(&self, seen: u32, out: &mut Vec<f32>) -> u32 {
+        let new_seen = self.header().req.wait_past(seen);
+        let len = self.header().len.load(Ordering::Acquire) as usize;
+        out.clear();
+        out.reserve(len);
+        unsafe {
+            let src = std::slice::from_raw_parts(self.req_buf, len);
+            out.extend_from_slice(src);
+        }
+        new_seen
+    }
+
+    /// Consumer: publish the response and ring the response bell.
+    pub fn send_response(&self, payload: &[f32]) {
+        assert!(payload.len() <= self.capacity, "payload exceeds slot");
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                payload.as_ptr(),
+                self.resp_buf,
+                payload.len(),
+            );
+        }
+        self.header()
+            .len
+            .store(payload.len() as u32, Ordering::Release);
+        self.header().resp.ring();
+    }
+
+    /// Producer: wait for the response rung after `resp_seen` and copy it
+    /// into `out` (resized to the message length).
+    pub fn recv_response(&self, resp_seen: u32, out: &mut Vec<f32>) {
+        self.header().resp.wait_past(resp_seen);
+        let len = self.header().len.load(Ordering::Acquire) as usize;
+        out.clear();
+        unsafe {
+            let src = std::slice::from_raw_parts(self.resp_buf, len);
+            out.extend_from_slice(src);
+        }
+    }
+
+    /// Current request doorbell sequence (consumer bootstrap).
+    pub fn request_seq(&self) -> u32 {
+        self.header().req.load()
+    }
+}
+
+/// Convenience: allocate a region holding `n` slots of `capacity` f32s
+/// and return the region with its carved channels.
+pub fn slot_channels(
+    n: usize,
+    capacity: usize,
+) -> Result<(ShmRegion, Vec<SlotChannel>), ShmError> {
+    // 8-byte align each slot.
+    let stride = (SlotChannel::bytes_needed(capacity) + 7) & !7;
+    let region = ShmRegion::new(stride * n.max(1))?;
+    let mut slots = Vec::with_capacity(n);
+    for i in 0..n {
+        slots.push(SlotChannel::at(&region, i * stride, capacity)?);
+    }
+    Ok((region, slots))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn region_maps_and_zeroes() {
+        let r = ShmRegion::new(4096).unwrap();
+        assert_eq!(r.len(), 4096);
+        let s = unsafe { std::slice::from_raw_parts(r.as_ptr(), 4096) };
+        assert!(s.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn roundtrip_single_thread() {
+        let (_region, slots) = slot_channels(1, 64).unwrap();
+        let ch = &slots[0];
+        let resp_seen = ch.send_request(&[1.0, 2.0, 3.0]);
+        let mut got = Vec::new();
+        let _ = ch.recv_request(0, &mut got);
+        assert_eq!(got, vec![1.0, 2.0, 3.0]);
+        ch.send_response(&[9.0, 8.0]);
+        let mut resp = Vec::new();
+        ch.recv_response(resp_seen, &mut resp);
+        assert_eq!(resp, vec![9.0, 8.0]);
+    }
+
+    #[test]
+    fn roundtrip_across_threads_many_messages() {
+        let (region, mut slots) = slot_channels(1, 256).unwrap();
+        let region = Arc::new(region);
+        let ch = Arc::new(slots.remove(0));
+        let ch2 = ch.clone();
+        let _keep = region.clone();
+        let rounds = 500usize;
+        let worker = std::thread::spawn(move || {
+            // Start from 0 (fresh region): reading request_seq() here
+            // would race with an early send_request from the main thread.
+            let mut seen = 0u32;
+            let mut buf = Vec::new();
+            for _ in 0..rounds {
+                seen = ch2.recv_request(seen, &mut buf);
+                // Echo doubled.
+                let doubled: Vec<f32> = buf.iter().map(|v| v * 2.0).collect();
+                ch2.send_response(&doubled);
+            }
+        });
+        let mut resp = Vec::new();
+        for i in 0..rounds {
+            let payload: Vec<f32> = (0..16).map(|k| (i * 16 + k) as f32).collect();
+            let resp_seen = ch.send_request(&payload);
+            ch.recv_response(resp_seen, &mut resp);
+            assert_eq!(resp.len(), 16);
+            for (k, v) in resp.iter().enumerate() {
+                assert_eq!(*v, (i * 16 + k) as f32 * 2.0);
+            }
+        }
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn multiple_slots_are_independent() {
+        let (_region, slots) = slot_channels(4, 8).unwrap();
+        for (i, ch) in slots.iter().enumerate() {
+            ch.send_request(&[i as f32]);
+        }
+        for (i, ch) in slots.iter().enumerate() {
+            let mut got = Vec::new();
+            ch.recv_request(0, &mut got);
+            assert_eq!(got, vec![i as f32]);
+        }
+    }
+
+    #[test]
+    fn capacity_checked() {
+        let (_region, slots) = slot_channels(1, 2).unwrap();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            slots[0].send_request(&[0.0; 3]);
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn too_small_region_rejected() {
+        let r = ShmRegion::new(16).unwrap();
+        assert!(SlotChannel::at(&r, 0, 1024).is_err());
+    }
+}

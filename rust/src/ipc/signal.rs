@@ -1,0 +1,150 @@
+//! Futex-backed doorbells: cheap one-to-one wake-ups between the base
+//! process and CPU-LoRA workers.
+//!
+//! This is the signaling half of the paper's fused async-memcpy+signal
+//! operator (§4.2, Fig 8): the producer rings the doorbell *after* the
+//! payload write is visible (release ordering); the consumer waits
+//! without spinning the core. On Linux the wait parks on `futex(2)`,
+//! which works across processes when the atomic lives in MAP_SHARED
+//! memory — matching the paper's process-isolated workers.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// A monotonically increasing event counter the consumer can wait on.
+#[repr(C)]
+pub struct Doorbell {
+    seq: AtomicU32,
+}
+
+impl Default for Doorbell {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Doorbell {
+    /// New doorbell with sequence 0.
+    pub const fn new() -> Self {
+        Self {
+            seq: AtomicU32::new(0),
+        }
+    }
+
+    /// Current sequence value (acquire).
+    pub fn load(&self) -> u32 {
+        self.seq.load(Ordering::Acquire)
+    }
+
+    /// Ring: bump the sequence (release) and wake all waiters.
+    pub fn ring(&self) {
+        self.seq.fetch_add(1, Ordering::Release);
+        futex_wake_all(&self.seq);
+    }
+
+    /// Wait until the sequence moves past `seen` (as returned by
+    /// [`Doorbell::load`] before the caller started waiting). Spins
+    /// briefly (the common sub-microsecond case), then parks on futex.
+    pub fn wait_past(&self, seen: u32) -> u32 {
+        // Short spin: LoRA layer sync is typically < 1 µs away.
+        for _ in 0..1024 {
+            let cur = self.seq.load(Ordering::Acquire);
+            if cur != seen {
+                return cur;
+            }
+            std::hint::spin_loop();
+        }
+        loop {
+            let cur = self.seq.load(Ordering::Acquire);
+            if cur != seen {
+                return cur;
+            }
+            futex_wait(&self.seq, seen);
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn futex_wait(atom: &AtomicU32, expected: u32) {
+    unsafe {
+        libc::syscall(
+            libc::SYS_futex,
+            atom.as_ptr(),
+            libc::FUTEX_WAIT,
+            expected,
+            std::ptr::null::<libc::timespec>(),
+        );
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn futex_wake_all(atom: &AtomicU32) {
+    unsafe {
+        libc::syscall(libc::SYS_futex, atom.as_ptr(), libc::FUTEX_WAKE, i32::MAX);
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn futex_wait(_atom: &AtomicU32, _expected: u32) {
+    std::thread::yield_now();
+}
+
+#[cfg(not(target_os = "linux"))]
+fn futex_wake_all(_atom: &AtomicU32) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn ring_wakes_waiter() {
+        let bell = Arc::new(Doorbell::new());
+        let bell2 = bell.clone();
+        let seen = bell.load();
+        let h = std::thread::spawn(move || bell2.wait_past(seen));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        bell.ring();
+        let got = h.join().unwrap();
+        assert_eq!(got, seen + 1);
+    }
+
+    #[test]
+    fn wait_returns_immediately_if_already_past() {
+        let bell = Doorbell::new();
+        let seen = bell.load();
+        bell.ring();
+        assert_eq!(bell.wait_past(seen), seen + 1);
+    }
+
+    #[test]
+    fn many_rings_counted() {
+        let bell = Doorbell::new();
+        for _ in 0..10 {
+            bell.ring();
+        }
+        assert_eq!(bell.load(), 10);
+    }
+
+    #[test]
+    fn ping_pong_between_threads() {
+        let a = Arc::new(Doorbell::new());
+        let b = Arc::new(Doorbell::new());
+        let (a2, b2) = (a.clone(), b.clone());
+        let rounds = 1_000;
+        let h = std::thread::spawn(move || {
+            let mut seen_a = 0;
+            for _ in 0..rounds {
+                seen_a = a2.wait_past(seen_a);
+                b2.ring();
+            }
+        });
+        let mut seen_b = 0;
+        for _ in 0..rounds {
+            a.ring();
+            seen_b = b.wait_past(seen_b);
+        }
+        h.join().unwrap();
+        assert_eq!(a.load(), rounds);
+        assert_eq!(b.load(), rounds);
+    }
+}

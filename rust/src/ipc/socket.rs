@@ -1,0 +1,89 @@
+//! Unix-domain-socket IPC baseline (Fig 17's comparator).
+//!
+//! Mirrors the message-passing IPC of existing LLM frameworks: each
+//! message is length-prefixed and the f32 payload is serialized through
+//! the kernel socket buffer — i.e. two copies plus syscalls per hop,
+//! which is exactly the overhead the shared-memory plane avoids.
+
+use std::io::{Read, Write};
+use std::os::unix::net::UnixStream;
+
+/// One end of a framed f32 message channel over a Unix socket pair.
+pub struct SocketChannel {
+    stream: UnixStream,
+}
+
+impl SocketChannel {
+    /// Create a connected pair (base-process end, worker end).
+    pub fn pair() -> std::io::Result<(SocketChannel, SocketChannel)> {
+        let (a, b) = UnixStream::pair()?;
+        Ok((SocketChannel { stream: a }, SocketChannel { stream: b }))
+    }
+
+    /// Send one framed message: u32 length (f32 count) + payload bytes.
+    pub fn send(&mut self, payload: &[f32]) -> std::io::Result<()> {
+        let len = payload.len() as u32;
+        self.stream.write_all(&len.to_le_bytes())?;
+        // Serialize: this byte-copy is the cost sockets pay and shm avoids.
+        let bytes: Vec<u8> = payload.iter().flat_map(|v| v.to_le_bytes()).collect();
+        self.stream.write_all(&bytes)
+    }
+
+    /// Receive one framed message into `out`.
+    pub fn recv(&mut self, out: &mut Vec<f32>) -> std::io::Result<()> {
+        let mut len_buf = [0u8; 4];
+        self.stream.read_exact(&mut len_buf)?;
+        let len = u32::from_le_bytes(len_buf) as usize;
+        let mut bytes = vec![0u8; len * 4];
+        self.stream.read_exact(&mut bytes)?;
+        out.clear();
+        out.reserve(len);
+        for chunk in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let (mut a, mut b) = SocketChannel::pair().unwrap();
+        a.send(&[1.0, -2.5, 3.25]).unwrap();
+        let mut got = Vec::new();
+        b.recv(&mut got).unwrap();
+        assert_eq!(got, vec![1.0, -2.5, 3.25]);
+    }
+
+    #[test]
+    fn echo_across_threads() {
+        let (mut a, mut b) = SocketChannel::pair().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut buf = Vec::new();
+            for _ in 0..100 {
+                b.recv(&mut buf).unwrap();
+                let doubled: Vec<f32> = buf.iter().map(|v| v * 2.0).collect();
+                b.send(&doubled).unwrap();
+            }
+        });
+        let mut resp = Vec::new();
+        for i in 0..100 {
+            a.send(&[i as f32; 16]).unwrap();
+            a.recv(&mut resp).unwrap();
+            assert!(resp.iter().all(|&v| v == i as f32 * 2.0));
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn empty_message_ok() {
+        let (mut a, mut b) = SocketChannel::pair().unwrap();
+        a.send(&[]).unwrap();
+        let mut got = vec![1.0];
+        b.recv(&mut got).unwrap();
+        assert!(got.is_empty());
+    }
+}

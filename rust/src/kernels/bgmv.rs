@@ -1,0 +1,227 @@
+//! Batched-Gather Matrix-Vector kernels: the CPU twins of Punica's BGMV
+//! and S-LoRA's MBGMV (paper §2.3 / §4.1).
+//!
+//! Semantics, matching the CUDA originals and the L1 Pallas kernels:
+//! a batch of tokens, each mapped by `indices[i]` to one adapter;
+//! `y[i] += x[i] · A[idx] · B[idx]`.
+//!
+//! - **BGMV** ([`bgmv_padded`]): every adapter is *padded* to the max rank
+//!   in the adapter set, so the work per token is `O(H · max_rank)` —
+//!   this is why Punica's latency tracks `|S| · max_rank` (Fig 4-Left).
+//! - **MBGMV** ([`mbgmv`]): no padding; each token does `O(H · r_idx)`
+//!   work, so batch latency tracks `Σ rank` (Fig 4-Right).
+
+use super::gemm::lora_apply;
+
+/// Weights of one adapter for one target matrix: A (h1×r) and B (r×h2),
+/// row-major f32. `rank` is the true (unpadded) rank.
+#[derive(Debug, Clone)]
+pub struct AdapterWeights {
+    pub rank: usize,
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+    pub h1: usize,
+    pub h2: usize,
+}
+
+impl AdapterWeights {
+    /// Deterministic pseudo-random weights (the paper uses dummy weights;
+    /// the values don't matter for system behaviour, but they must be
+    /// reproducible for the Rust↔Pallas cross-check).
+    pub fn synthetic(seed: u64, h1: usize, h2: usize, rank: usize) -> Self {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let scale = 1.0 / (rank as f32).sqrt();
+        let a = (0..h1 * rank)
+            .map(|_| (rng.f32() * 2.0 - 1.0) * scale)
+            .collect();
+        let b = (0..rank * h2)
+            .map(|_| (rng.f32() * 2.0 - 1.0) * scale)
+            .collect();
+        Self { rank, a, b, h1, h2 }
+    }
+
+    /// Zero-pad this adapter's A/B out to `max_rank` (what BGMV does on
+    /// device). Padding columns of A and rows of B are zero, so results
+    /// are unchanged while the compute cost grows to `max_rank`.
+    pub fn padded_to(&self, max_rank: usize) -> AdapterWeights {
+        assert!(max_rank >= self.rank);
+        let mut a = vec![0.0f32; self.h1 * max_rank];
+        for row in 0..self.h1 {
+            a[row * max_rank..row * max_rank + self.rank]
+                .copy_from_slice(&self.a[row * self.rank..(row + 1) * self.rank]);
+        }
+        let mut b = vec![0.0f32; max_rank * self.h2];
+        b[..self.rank * self.h2].copy_from_slice(&self.b);
+        AdapterWeights {
+            rank: max_rank,
+            a,
+            b,
+            h1: self.h1,
+            h2: self.h2,
+        }
+    }
+
+    /// Weight bytes (f32 here; fp16 on the modeled GPU).
+    pub fn len_bytes(&self) -> usize {
+        (self.a.len() + self.b.len()) * 4
+    }
+}
+
+/// Padded BGMV: `y[i] += x[i] · A[idx_i] · B[idx_i]` where all adapters
+/// have been padded to a common `max_rank`. Each token performs
+/// `O(h1·max_rank + max_rank·h2)` work regardless of its true rank —
+/// faithfully reproducing Punica's cost model.
+pub fn bgmv_padded(
+    adapters: &[AdapterWeights],
+    indices: &[usize],
+    h1: usize,
+    h2: usize,
+    x: &[f32],
+    y: &mut [f32],
+) {
+    let n = indices.len();
+    assert_eq!(x.len(), n * h1);
+    assert_eq!(y.len(), n * h2);
+    let max_rank = adapters.iter().map(|a| a.rank).max().unwrap_or(0);
+    if max_rank == 0 || n == 0 {
+        return;
+    }
+    // Pad each distinct adapter once (the device keeps them padded).
+    let padded: Vec<AdapterWeights> =
+        adapters.iter().map(|a| a.padded_to(max_rank)).collect();
+    let mut scratch = vec![0.0f32; max_rank];
+    for (i, &idx) in indices.iter().enumerate() {
+        let ad = &padded[idx];
+        assert_eq!(ad.h1, h1);
+        assert_eq!(ad.h2, h2);
+        lora_apply(
+            1,
+            h1,
+            h2,
+            max_rank,
+            &x[i * h1..(i + 1) * h1],
+            &ad.a,
+            &ad.b,
+            &mut y[i * h2..(i + 1) * h2],
+            &mut scratch,
+        );
+    }
+}
+
+/// MBGMV: padding-free multi-size BGMV. Each token does work proportional
+/// to its *own* adapter's rank — reproducing S-LoRA's Σrank cost model.
+pub fn mbgmv(
+    adapters: &[AdapterWeights],
+    indices: &[usize],
+    h1: usize,
+    h2: usize,
+    x: &[f32],
+    y: &mut [f32],
+) {
+    let n = indices.len();
+    assert_eq!(x.len(), n * h1);
+    assert_eq!(y.len(), n * h2);
+    let max_rank = adapters.iter().map(|a| a.rank).max().unwrap_or(0);
+    let mut scratch = vec![0.0f32; max_rank.max(1)];
+    for (i, &idx) in indices.iter().enumerate() {
+        let ad = &adapters[idx];
+        assert_eq!(ad.h1, h1);
+        assert_eq!(ad.h2, h2);
+        lora_apply(
+            1,
+            h1,
+            h2,
+            ad.rank,
+            &x[i * h1..(i + 1) * h1],
+            &ad.a,
+            &ad.b,
+            &mut y[i * h2..(i + 1) * h2],
+            &mut scratch,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn padding_preserves_results() {
+        let ad = AdapterWeights::synthetic(7, 16, 16, 4);
+        let padded = ad.padded_to(16);
+        let mut rng = Rng::new(1);
+        let x = rand_vec(&mut rng, 16);
+        let mut y1 = vec![0.0f32; 16];
+        let mut y2 = vec![0.0f32; 16];
+        let mut s = vec![0.0f32; 16];
+        lora_apply(1, 16, 16, 4, &x, &ad.a, &ad.b, &mut y1, &mut s);
+        lora_apply(1, 16, 16, 16, &x, &padded.a, &padded.b, &mut y2, &mut s);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn bgmv_equals_mbgmv_numerically() {
+        // Padding changes cost, not results: both kernels must agree.
+        let h = 32;
+        let adapters: Vec<AdapterWeights> = [2usize, 4, 8]
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| AdapterWeights::synthetic(i as u64, h, h, r))
+            .collect();
+        let indices = [0usize, 1, 2, 1, 0, 2, 2];
+        let mut rng = Rng::new(9);
+        let x = rand_vec(&mut rng, indices.len() * h);
+        let mut y1 = vec![0.0f32; indices.len() * h];
+        let mut y2 = vec![0.0f32; indices.len() * h];
+        bgmv_padded(&adapters, &indices, h, h, &x, &mut y1);
+        mbgmv(&adapters, &indices, h, h, &x, &mut y2);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn gather_picks_the_right_adapter() {
+        // Two adapters with very different B matrices; check each token's
+        // output reflects its own adapter.
+        let h = 8;
+        let mut a0 = AdapterWeights::synthetic(0, h, h, 1);
+        let mut a1 = AdapterWeights::synthetic(1, h, h, 1);
+        a0.a.fill(1.0);
+        a0.b.fill(1.0); // output = sum(x) in every column
+        a1.a.fill(1.0);
+        a1.b.fill(-1.0); // output = -sum(x)
+        let x = vec![1.0f32; 2 * h]; // sum = 8 per token
+        let mut y = vec![0.0f32; 2 * h];
+        mbgmv(&[a0, a1], &[0, 1], h, h, &x, &mut y);
+        assert!(y[..h].iter().all(|&v| (v - 8.0).abs() < 1e-5));
+        assert!(y[h..].iter().all(|&v| (v + 8.0).abs() < 1e-5));
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let adapters = vec![AdapterWeights::synthetic(0, 4, 4, 2)];
+        let mut y: Vec<f32> = vec![];
+        bgmv_padded(&adapters, &[], 4, 4, &[], &mut y);
+        mbgmv(&adapters, &[], 4, 4, &[], &mut y);
+    }
+
+    #[test]
+    fn accumulates_into_y() {
+        let h = 4;
+        let mut ad = AdapterWeights::synthetic(0, h, h, 1);
+        ad.a.fill(0.0);
+        ad.b.fill(0.0);
+        let x = vec![1.0f32; h];
+        let mut y = vec![5.0f32; h];
+        mbgmv(&[ad], &[0], h, h, &x, &mut y);
+        assert_eq!(y, vec![5.0; h]); // zero adapter leaves y unchanged
+    }
+}

@@ -1,0 +1,169 @@
+//! f32 GEMM/GEMV micro-kernels.
+//!
+//! Row-major, no external BLAS (offline build). The hot path is
+//! [`lora_apply`]: y[n,H2] += x[n,H1]·A[H1,r]·B[r,H2] with r ≪ H — the
+//! low-rank structure means we materialize the small intermediate
+//! t = x·A (n×r) and never form A·B. Loops are ordered ikj so the inner
+//! loop is a contiguous AXPY the compiler auto-vectorizes.
+
+/// C[m,n] += A[m,k] · B[k,n]; all row-major slices.
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for (p, &a_ip) in a_row.iter().enumerate() {
+            if a_ip == 0.0 {
+                continue;
+            }
+            let b_row = &b[p * n..(p + 1) * n];
+            // AXPY over contiguous memory — auto-vectorizes.
+            for (c_v, &b_v) in c_row.iter_mut().zip(b_row) {
+                *c_v += a_ip * b_v;
+            }
+        }
+    }
+}
+
+/// y[n] += A[m,n]^T-free matvec: y[m] += A[m,n] · x[n].
+pub fn gemv(m: usize, n: usize, a: &[f32], x: &[f32], y: &mut [f32]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), m);
+    for i in 0..m {
+        let row = &a[i * n..(i + 1) * n];
+        let mut acc = 0.0f32;
+        for (a_v, x_v) in row.iter().zip(x) {
+            acc += a_v * x_v;
+        }
+        y[i] += acc;
+    }
+}
+
+/// LoRA adaptation for a block of tokens:
+/// `y[n_tok, h2] += (x[n_tok, h1] · A[h1, r]) · B[r, h2]`.
+///
+/// `scratch` must have room for `n_tok * r` f32s (the t = x·A
+/// intermediate); it is overwritten. Keeping the scratch caller-owned
+/// avoids per-invocation allocation on the layer-synchronous hot path.
+pub fn lora_apply(
+    n_tok: usize,
+    h1: usize,
+    h2: usize,
+    r: usize,
+    x: &[f32],
+    a: &[f32],
+    b: &[f32],
+    y: &mut [f32],
+    scratch: &mut [f32],
+) {
+    assert_eq!(x.len(), n_tok * h1, "x shape");
+    assert_eq!(a.len(), h1 * r, "A shape");
+    assert_eq!(b.len(), r * h2, "B shape");
+    assert_eq!(y.len(), n_tok * h2, "y shape");
+    assert!(scratch.len() >= n_tok * r, "scratch too small");
+    let t = &mut scratch[..n_tok * r];
+    t.fill(0.0);
+    gemm(n_tok, h1, r, x, a, t);
+    gemm(n_tok, r, h2, t, b, y);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += a[i * k + p] * b[p * n + j];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (16, 64, 8), (8, 128, 128)] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let want = naive_gemm(m, k, n, &a, &b);
+            let mut got = vec![0.0f32; m * n];
+            gemm(m, k, n, &a, &b, &mut got);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_accumulates_into_c() {
+        let a = vec![1.0f32; 4]; // 2x2 ones
+        let b = vec![1.0f32; 4];
+        let mut c = vec![10.0f32; 4];
+        gemm(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, vec![12.0; 4]);
+    }
+
+    #[test]
+    fn gemv_matches_gemm() {
+        let mut rng = Rng::new(2);
+        let (m, n) = (17, 33);
+        let a = rand_vec(&mut rng, m * n);
+        let x = rand_vec(&mut rng, n);
+        let mut y1 = vec![0.0f32; m];
+        gemv(m, n, &a, &x, &mut y1);
+        let want = naive_gemm(m, n, 1, &a, &x);
+        for (g, w) in y1.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn lora_apply_equals_explicit_ab() {
+        let mut rng = Rng::new(3);
+        let (n_tok, h1, h2, r) = (5, 32, 32, 4);
+        let x = rand_vec(&mut rng, n_tok * h1);
+        let a = rand_vec(&mut rng, h1 * r);
+        let b = rand_vec(&mut rng, r * h2);
+        // want = x · (A·B)
+        let ab = naive_gemm(h1, r, h2, &a, &b);
+        let want = naive_gemm(n_tok, h1, h2, &x, &ab);
+        let mut y = vec![0.0f32; n_tok * h2];
+        let mut scratch = vec![0.0f32; n_tok * r];
+        lora_apply(n_tok, h1, h2, r, &x, &a, &b, &mut y, &mut scratch);
+        for (g, w) in y.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "scratch")]
+    fn lora_apply_checks_scratch() {
+        let mut y = vec![0.0f32; 4];
+        let mut scratch = vec![0.0f32; 1];
+        lora_apply(
+            2,
+            2,
+            2,
+            2,
+            &[0.0; 4],
+            &[0.0; 4],
+            &[0.0; 4],
+            &mut y,
+            &mut scratch,
+        );
+    }
+}

@@ -1,0 +1,12 @@
+//! CPU compute kernels for LoRA adaptation.
+//!
+//! These are the Rust twins of the Pallas L1 kernels: the CPU-assisted
+//! LoRA engine ([`crate::cpu_lora`]) runs these on host cores during the
+//! cold-start window, with semantics identical to `python/compile/
+//! kernels/bgmv.py` (checked by the cross-validation integration test).
+
+pub mod bgmv;
+pub mod gemm;
+
+pub use bgmv::{bgmv_padded, mbgmv, AdapterWeights};
+pub use gemm::{gemm, gemv, lora_apply};

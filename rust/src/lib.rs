@@ -1,0 +1,52 @@
+//! # CaraServe — CPU-Assisted and Rank-Aware LoRA Serving (reproduction)
+//!
+//! This crate reproduces the system described in *"CaraServe: CPU-Assisted
+//! and Rank-Aware LoRA Serving for Generative LLM Inference"* (cs.DC 2024)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the serving system: continuous batching engine,
+//!   paged KV-cache manager, LoRA adapter registry/loader/device-cache,
+//!   CPU-assisted LoRA engine (sync-free invocation, shared-memory IPC,
+//!   profiling-guided parallelization), linear performance models, the
+//!   rank-aware cluster scheduler (Algorithm 1), and a discrete-event
+//!   cluster simulator used to regenerate every figure in the paper's
+//!   evaluation.
+//! - **L2 (python/compile/model.py)** — a tiny Llama-style forward pass
+//!   with LoRA adaptation, AOT-lowered to HLO text at build time.
+//! - **L1 (python/compile/kernels/)** — Pallas BGMV/MBGMV LoRA kernels
+//!   (interpret mode), checked against a pure-jnp oracle.
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! AOT artifacts through the PJRT C API (`xla` crate) and executes them
+//! from Rust.
+//!
+//! ## Quick tour
+//!
+//! - [`server::InferenceServer`] — a single LLM inference server
+//!   (base model + local LoRA repository + continuous batcher).
+//! - [`scheduler::RankAwareScheduler`] — Algorithm 1 over a cluster.
+//! - [`sim::Simulation`] — discrete-event cluster simulator calibrated to
+//!   the paper's A10/A100 latency shapes.
+//! - [`cpu_lora::CpuLoraEngine`] — the CPU-assisted prefill engine.
+//!
+//! See `examples/quickstart.rs` for a 30-line end-to-end run.
+
+pub mod adapters;
+pub mod bench;
+pub mod config;
+pub mod cpu_lora;
+pub mod ipc;
+pub mod kernels;
+pub mod model;
+pub mod perfmodel;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod sim;
+pub mod testkit;
+pub mod util;
+
+/// Crate version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,261 @@
+//! CaraServe CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!
+//! - `serve`     — load the AOT artifacts and serve a synthetic batch of
+//!   requests through the real PJRT runtime, printing metrics.
+//! - `simulate`  — run a single-instance simulation of one §7.2 workload.
+//! - `schedule`  — run the §7.5 cluster scheduling simulation.
+//! - `profile`   — fit the §5 performance models and print (α, β, R²).
+//! - `info`      — print model/GPU tables (paper Table 2).
+
+use caraserve::config::GpuSpec;
+use caraserve::model::LlamaConfig;
+use caraserve::perfmodel::{profiler, KernelKind, PerfModel};
+use caraserve::scheduler::{policy_by_name, RankAwareConfig};
+use caraserve::sim::{
+    GpuModel, MafTrace, ServingMode, SimInstance, Simulation, SingleServer,
+};
+use caraserve::util::cli::Args;
+use caraserve::util::stats::{mean, Summary};
+
+const USAGE: &str = "\
+caraserve <subcommand> [options]
+
+subcommands:
+  serve     --artifacts DIR --requests N --mode cached|ondemand|caraserve
+  simulate  --mode cached|ondmd|s-lora|caraserve --rps F --rank N --secs F
+  schedule  --policy rank-aware|most-idle|first-fit|random --instances N
+            --kernel bgmv|mbgmv --rps F --secs F
+  profile   --kernel bgmv|mbgmv
+  info
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env(&[
+        "artifacts",
+        "requests",
+        "mode",
+        "rps",
+        "rank",
+        "secs",
+        "policy",
+        "instances",
+        "kernel",
+        "seed",
+    ])
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    match args.subcommand() {
+        Some("serve") => cmd_serve(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("schedule") => cmd_schedule(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use caraserve::server::{ColdStartMode, EngineConfig, InferenceServer};
+    let dir = args.opt_or("artifacts", "artifacts");
+    let n: usize = args.opt_parse_or("requests", 16).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mode = match args.opt_or("mode", "caraserve").as_str() {
+        "cached" => ColdStartMode::Cached,
+        "ondemand" | "ondmd" => ColdStartMode::OnDemand,
+        _ => ColdStartMode::CaraServe,
+    };
+    let seed: u64 = args.opt_parse_or("seed", 1).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    println!("loading artifacts from {dir} ...");
+    let runtime = caraserve::runtime::ModelRuntime::load(std::path::Path::new(&dir))?;
+    let mut server = InferenceServer::new(
+        runtime,
+        EngineConfig {
+            cold_start: mode,
+            ..Default::default()
+        },
+    )?;
+
+    let mut rng = caraserve::util::rng::Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    for id in 0..n as u64 {
+        let prompt: Vec<i32> = (0..rng.range(8, 32))
+            .map(|_| rng.range(0, 1024) as i32)
+            .collect();
+        server.submit(caraserve::server::InferenceRequest {
+            id,
+            adapter: rng.range(0, 64) as u64,
+            prompt,
+            max_new_tokens: rng.range(4, 16),
+        })?;
+    }
+    server.run_until_idle()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let m = server.metrics();
+    for metric in ["ttft", "tpt", "latency"] {
+        if let Some(s) = m.summary(metric) {
+            println!(
+                "{metric:>8}: mean {:.2} ms  p50 {:.2} ms  p99 {:.2} ms",
+                s.mean * 1e3,
+                s.p50 * 1e3,
+                s.p99 * 1e3
+            );
+        }
+    }
+    let (rps, tps) = m.throughput(wall);
+    println!("throughput: {rps:.1} req/s, {tps:.1} tok/s (mode {mode:?})");
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let mode = match args.opt_or("mode", "caraserve").as_str() {
+        "cached" => ServingMode::Cached,
+        "ondmd" | "ondemand" => ServingMode::OnDemand,
+        "s-lora" | "slora" => ServingMode::SLora,
+        _ => ServingMode::CaraServe,
+    };
+    let rps: f64 = args.opt_parse_or("rps", 9.0).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let rank: usize = args.opt_parse_or("rank", 64).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let secs: f64 = args.opt_parse_or("secs", 300.0).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let seed: u64 = args.opt_parse_or("seed", 1).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let reqs = caraserve::sim::workload::synthetic(seed, rps, rank, secs);
+    let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+    // 32 host cores for CPU LoRA (the paper's testbeds have 128+ vCPUs).
+    let mut sim = Simulation::new(vec![SimInstance::new(0, model, mode, 64, 32, 512)]);
+    let out = sim.run(&reqs, &mut SingleServer);
+
+    println!(
+        "mode={} requests={} rps={rps} rank={rank}",
+        mode.name(),
+        out.requests.len()
+    );
+    for metric in ["ttft", "tpt", "latency", "cold_frac"] {
+        let col = out.column(metric);
+        if let Some(s) = Summary::of(&col) {
+            println!(
+                "{metric:>10}: mean {:.2} ms  p50 {:.2} ms  p99 {:.2} ms",
+                s.mean * 1e3,
+                s.p50 * 1e3,
+                s.p99 * 1e3
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
+    let policy_name = args.opt_or("policy", "rank-aware");
+    let n_instances: usize = args
+        .opt_parse_or("instances", 8)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let kernel_name = args.opt_or("kernel", "bgmv");
+    let rps: f64 = args.opt_parse_or("rps", 60.0).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let secs: f64 = args.opt_parse_or("secs", 60.0).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let seed: u64 = args.opt_parse_or("seed", 1).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let kernel = KernelKind::parse(&kernel_name)
+        .ok_or_else(|| anyhow::anyhow!("bad kernel {kernel_name}"))?;
+    let gm = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+
+    // Fit perf models by profiling the GPU model (what §5 does on real HW).
+    let plan = profiler::ProfilePlan::default();
+    let avg_ctx = 160usize;
+    let dec_measure = |ranks: &[usize]| {
+        gm.decode_iter(&vec![avg_ctx; ranks.len()]) + gm.lora_decode_overhead(kernel, ranks)
+    };
+    let pre_measure = |ranks: &[usize]| gm.prefill(ranks.len() * 28);
+    let dec = profiler::calibrate(kernel, &plan, dec_measure).unwrap();
+    let pre = profiler::calibrate(kernel, &plan, pre_measure).unwrap();
+    let slo = 1.5 * gm.decode_iter(&[avg_ctx]);
+
+    let mode = match kernel {
+        KernelKind::Bgmv => ServingMode::CaraServe,
+        KernelKind::Mbgmv => ServingMode::SLora,
+    };
+    let instances: Vec<SimInstance> = (0..n_instances)
+        .map(|i| SimInstance::new(i, gm.clone(), mode, 64, 8, 512))
+        .collect();
+    let trace = MafTrace::new(seed, 2048, 1.0, &[8, 16, 32, 64]);
+    let reqs = trace.generate(seed + 1, rps, secs);
+
+    let mut policy = policy_by_name(
+        &policy_name,
+        pre,
+        dec,
+        RankAwareConfig {
+            slo,
+            ..Default::default()
+        },
+        seed,
+    );
+    let mut sim = Simulation::new(instances);
+    let out = sim.run(&reqs, policy.as_mut());
+    let tpt = out.column("tpt");
+    println!(
+        "policy={policy_name} kernel={kernel_name} instances={n_instances} requests={}",
+        out.requests.len()
+    );
+    println!(
+        "SLO ({:.1} ms): attainment {:.1}%  |  mean tpt {:.2} ms",
+        slo * 1e3,
+        out.slo_attainment(slo) * 100.0,
+        mean(&tpt) * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    let kernel_name = args.opt_or("kernel", "bgmv");
+    let kernel = KernelKind::parse(&kernel_name)
+        .ok_or_else(|| anyhow::anyhow!("bad kernel {kernel_name}"))?;
+    let gm = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+    let plan = profiler::ProfilePlan::default();
+    let model: PerfModel = profiler::calibrate(kernel, &plan, |ranks| {
+        gm.decode_iter(&vec![160; ranks.len()]) + gm.lora_decode_overhead(kernel, ranks)
+    })
+    .unwrap();
+    println!(
+        "kernel={kernel_name}: alpha={:.3e} s/feature, beta={:.2} ms, R^2={:.4}",
+        model.alpha,
+        model.beta * 1e3,
+        model.r2
+    );
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("Base models (paper Table 2):");
+    println!(
+        "{:<12} {:>8} {:>7} {:>9} {:>12}",
+        "model", "hidden", "layers", "params", "gpu config"
+    );
+    for (cfg, gpus) in [
+        (LlamaConfig::llama2_7b(), "1x A10"),
+        (LlamaConfig::llama2_13b(), "2x A10"),
+        (LlamaConfig::llama2_70b(), "4x A100"),
+        (LlamaConfig::tiny(), "cpu-pjrt"),
+    ] {
+        println!(
+            "{:<12} {:>8} {:>7} {:>8.1}B {:>12}",
+            cfg.name,
+            cfg.hidden,
+            cfg.layers,
+            cfg.param_count() / 1e9,
+            gpus
+        );
+    }
+    Ok(())
+}

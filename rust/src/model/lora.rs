@@ -1,0 +1,98 @@
+//! LoRA adapter descriptions: rank, target matrices, and memory math.
+
+use super::{LlamaConfig, BYTES_PER_PARAM};
+
+/// Which base weight matrix an adapter pair (A, B) applies to.
+/// The paper follows the standard setting: adapters on W_Q, W_K, W_V.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TargetMatrix {
+    Q,
+    K,
+    V,
+    O,
+}
+
+impl TargetMatrix {
+    /// The standard paper configuration: Q, K, V.
+    pub fn standard() -> Vec<TargetMatrix> {
+        vec![TargetMatrix::Q, TargetMatrix::K, TargetMatrix::V]
+    }
+}
+
+/// A LoRA adapter specification (metadata; weights live in
+/// [`crate::adapters::HostRepository`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoraSpec {
+    /// Globally unique adapter id.
+    pub id: u64,
+    /// LoRA rank r.
+    pub rank: usize,
+    /// Base weights this adapter applies to.
+    pub targets: Vec<TargetMatrix>,
+    /// Name of the base model this adapter was trained from.
+    pub base_model: String,
+}
+
+impl LoraSpec {
+    /// Standard Q/K/V adapter of rank `rank` for `base_model`.
+    pub fn standard(id: u64, rank: usize, base_model: &str) -> Self {
+        Self {
+            id,
+            rank,
+            targets: TargetMatrix::standard(),
+            base_model: base_model.to_string(),
+        }
+    }
+
+    /// Parameter count: per layer and target, A∈R^{H×r} + B∈R^{r×H}.
+    pub fn param_count(&self, cfg: &LlamaConfig) -> f64 {
+        let h = cfg.hidden as f64;
+        let r = self.rank as f64;
+        self.targets.len() as f64 * cfg.layers as f64 * (h * r + r * h)
+    }
+
+    /// Weight bytes at fp16 — what must cross PCIe on a cold start.
+    pub fn weight_bytes(&self, cfg: &LlamaConfig) -> f64 {
+        self.param_count(cfg) * BYTES_PER_PARAM
+    }
+
+    /// FLOPs for applying this adapter to `n_tokens` tokens:
+    /// per target+layer, x·A (2·n·H·r) + (xA)·B (2·n·r·H).
+    pub fn apply_flops(&self, cfg: &LlamaConfig, n_tokens: f64) -> f64 {
+        let h = cfg.hidden as f64;
+        let r = self.rank as f64;
+        self.targets.len() as f64 * cfg.layers as f64 * 4.0 * n_tokens * h * r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank64_adapter_is_about_100mib_on_7b() {
+        // Paper §2.3: a single rank-64 adapter on Wq/Wk/Wv of Llama2-7B
+        // demands ~100 MiB.
+        let cfg = LlamaConfig::llama2_7b();
+        let spec = LoraSpec::standard(1, 64, &cfg.name);
+        let mib = spec.weight_bytes(&cfg) / (1024.0 * 1024.0);
+        assert!((80.0..130.0).contains(&mib), "adapter = {mib} MiB");
+    }
+
+    #[test]
+    fn bytes_scale_linearly_with_rank() {
+        let cfg = LlamaConfig::llama2_7b();
+        let b32 = LoraSpec::standard(1, 32, &cfg.name).weight_bytes(&cfg);
+        let b64 = LoraSpec::standard(2, 64, &cfg.name).weight_bytes(&cfg);
+        assert!((b64 / b32 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adapter_flops_tiny_vs_base() {
+        // Paper §2.1: xAB is orders of magnitude cheaper than xW.
+        let cfg = LlamaConfig::llama2_7b();
+        let spec = LoraSpec::standard(1, 64, &cfg.name);
+        let ratio = spec.apply_flops(&cfg, 1.0) / cfg.fwd_flops(1.0, 1.0);
+        assert!(ratio < 0.05, "ratio = {ratio}");
+    }
+}

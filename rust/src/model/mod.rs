@@ -1,0 +1,210 @@
+//! Model descriptions and analytical cost math.
+//!
+//! [`LlamaConfig`] captures the transformer shapes from the paper's
+//! Table 2 (Llama2-7B/13B/70B) plus the runnable TinyLlama used by the
+//! functional PJRT path. The FLOPs/bytes accounting here drives the
+//! roofline GPU latency model in [`crate::sim::gpu`] and the adapter
+//! memory/cold-start math in [`crate::adapters`].
+
+pub mod lora;
+
+pub use lora::{LoraSpec, TargetMatrix};
+
+/// Bytes per parameter for the simulated deployment (fp16 like the paper).
+pub const BYTES_PER_PARAM: f64 = 2.0;
+
+/// A Llama-family transformer configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LlamaConfig {
+    /// Human-readable name ("llama2-7b", "tiny", ...).
+    pub name: String,
+    /// Hidden dimension H.
+    pub hidden: usize,
+    /// Number of transformer layers.
+    pub layers: usize,
+    /// Number of attention heads.
+    pub heads: usize,
+    /// Number of KV heads (grouped-query attention; = heads for MHA).
+    pub kv_heads: usize,
+    /// FFN intermediate size H'.
+    pub intermediate: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Max sequence length supported by the KV cache.
+    pub max_seq: usize,
+}
+
+impl LlamaConfig {
+    /// Llama2-7B (Table 2: hidden 4096, 32 layers; served on 1×A10).
+    pub fn llama2_7b() -> Self {
+        Self {
+            name: "llama2-7b".into(),
+            hidden: 4096,
+            layers: 32,
+            heads: 32,
+            kv_heads: 32,
+            intermediate: 11008,
+            vocab: 32000,
+            max_seq: 4096,
+        }
+    }
+
+    /// Llama2-13B (Table 2: hidden 5120, 40 layers; 2×A10 tensor-parallel).
+    pub fn llama2_13b() -> Self {
+        Self {
+            name: "llama2-13b".into(),
+            hidden: 5120,
+            layers: 40,
+            heads: 40,
+            kv_heads: 40,
+            intermediate: 13824,
+            vocab: 32000,
+            max_seq: 4096,
+        }
+    }
+
+    /// Llama2-70B (Table 2: hidden 8192, 80 layers; 4×A100, GQA kv=8).
+    pub fn llama2_70b() -> Self {
+        Self {
+            name: "llama2-70b".into(),
+            hidden: 8192,
+            layers: 80,
+            heads: 64,
+            kv_heads: 8,
+            intermediate: 28672,
+            vocab: 32000,
+            max_seq: 4096,
+        }
+    }
+
+    /// The tiny, actually-runnable model compiled to HLO artifacts by
+    /// `python/compile/aot.py` and executed through PJRT in the e2e
+    /// example and integration tests. Must stay in sync with
+    /// `python/compile/model.py::TINY`.
+    pub fn tiny() -> Self {
+        Self {
+            name: "tiny".into(),
+            hidden: 256,
+            layers: 4,
+            heads: 8,
+            kv_heads: 8,
+            intermediate: 688,
+            vocab: 1024,
+            max_seq: 256,
+        }
+    }
+
+    /// Look up a named config.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "llama2-7b" | "7b" => Some(Self::llama2_7b()),
+            "llama2-13b" | "13b" => Some(Self::llama2_13b()),
+            "llama2-70b" | "70b" => Some(Self::llama2_70b()),
+            "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    /// Head dimension.
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Total parameter count (weights only, incl. embeddings + lm head).
+    pub fn param_count(&self) -> f64 {
+        let h = self.hidden as f64;
+        let kv_h = (self.kv_heads * self.head_dim()) as f64;
+        let inter = self.intermediate as f64;
+        let per_layer =
+            // Wq, Wo: H×H each; Wk, Wv: H×kv_h each.
+            2.0 * h * h + 2.0 * h * kv_h
+            // SwiGLU FFN: gate, up (H×H'), down (H'×H).
+            + 3.0 * h * inter;
+        let embed = 2.0 * self.vocab as f64 * h; // tied-ish: embed + lm_head
+        per_layer * self.layers as f64 + embed
+    }
+
+    /// Model weight bytes at fp16.
+    pub fn weight_bytes(&self) -> f64 {
+        self.param_count() * BYTES_PER_PARAM
+    }
+
+    /// KV-cache bytes per token (all layers, fp16).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 // K and V
+            * (self.kv_heads * self.head_dim()) as f64
+            * self.layers as f64
+            * BYTES_PER_PARAM
+    }
+
+    /// Forward-pass FLOPs for `n_tokens` processed in one iteration with
+    /// total attended context `ctx_tokens` (per request, summed outside).
+    /// Uses the standard 2·params·tokens approximation for the dense part
+    /// plus the attention score/value FLOPs that scale with context.
+    pub fn fwd_flops(&self, n_tokens: f64, ctx_tokens: f64) -> f64 {
+        let h = self.hidden as f64;
+        let dense = 2.0 * self.param_count() * n_tokens;
+        // QK^T and attn·V per layer: 2 · 2 · n · ctx · H
+        let attn = 4.0 * self.layers as f64 * n_tokens * ctx_tokens * h;
+        dense + attn
+    }
+
+    /// Bytes of weights + KV that one decode iteration must stream from
+    /// device memory (batch-shared weights counted once).
+    pub fn decode_bytes(&self, batch: f64, avg_ctx: f64) -> f64 {
+        self.weight_bytes() + batch * avg_ctx * self.kv_bytes_per_token()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_are_plausible() {
+        // Within 15% of the nominal sizes.
+        let b7 = LlamaConfig::llama2_7b().param_count() / 1e9;
+        assert!((6.0..8.0).contains(&b7), "7B params = {b7}B");
+        let b13 = LlamaConfig::llama2_13b().param_count() / 1e9;
+        assert!((11.5..14.5).contains(&b13), "13B params = {b13}B");
+        let b70 = LlamaConfig::llama2_70b().param_count() / 1e9;
+        assert!((62.0..76.0).contains(&b70), "70B params = {b70}B");
+    }
+
+    #[test]
+    fn kv_bytes_match_paper_equivalence() {
+        // Paper §2.3: a rank-64 adapter over Wq/Wk/Wv of Llama2-7B is
+        // ~100 MiB ≈ the KV cache of 200 tokens. Check the 200-token KV
+        // size is in that ballpark.
+        let cfg = LlamaConfig::llama2_7b();
+        let kv200 = cfg.kv_bytes_per_token() * 200.0 / (1024.0 * 1024.0);
+        assert!((80.0..130.0).contains(&kv200), "kv200 = {kv200} MiB");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for name in ["llama2-7b", "llama2-13b", "llama2-70b", "tiny"] {
+            assert_eq!(LlamaConfig::by_name(name).unwrap().name, name);
+        }
+        assert!(LlamaConfig::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn flops_monotonic_in_tokens_and_ctx() {
+        let cfg = LlamaConfig::llama2_7b();
+        assert!(cfg.fwd_flops(2.0, 100.0) > cfg.fwd_flops(1.0, 100.0));
+        assert!(cfg.fwd_flops(1.0, 200.0) > cfg.fwd_flops(1.0, 100.0));
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        for cfg in [
+            LlamaConfig::llama2_7b(),
+            LlamaConfig::llama2_13b(),
+            LlamaConfig::llama2_70b(),
+            LlamaConfig::tiny(),
+        ] {
+            assert_eq!(cfg.head_dim() * cfg.heads, cfg.hidden, "{}", cfg.name);
+        }
+    }
+}

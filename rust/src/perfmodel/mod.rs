@@ -1,0 +1,201 @@
+//! Heterogeneity-aware performance models (paper §5, Fig 9).
+//!
+//! The paper fits linear models from serving profiles:
+//!
+//! ```text
+//! Perf_BGMV(S)  = α_B · |S| · max_{i∈S} rank(i) + β_B
+//! Perf_MBGMV(S) = α_M · Σ_{i∈S} rank(i)         + β_M
+//! ```
+//!
+//! Both kernels are memory-bandwidth bound (>70% membw in the paper's
+//! Nsight characterization), which is where the linearity comes from:
+//! BGMV streams `|S| · max_rank` padded adapter rows, MBGMV streams
+//! exactly `Σ rank` rows. [`PerfModel::fit`] recovers (α, β) from
+//! profiled points via OLS and reports R² (the paper gets 0.96).
+
+pub mod profiler;
+
+use crate::util::stats::{ols, LinearFit};
+
+/// Which GPU LoRA kernel a server uses (determines the cost feature).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Punica-style padded kernel: feature = |S| · max_rank.
+    Bgmv,
+    /// S-LoRA-style padding-free kernel: feature = Σ rank.
+    Mbgmv,
+}
+
+impl KernelKind {
+    /// Parse from the config string.
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "bgmv" => Some(KernelKind::Bgmv),
+            "mbgmv" => Some(KernelKind::Mbgmv),
+            _ => None,
+        }
+    }
+
+    /// The scalar feature this kernel's latency is linear in.
+    pub fn feature(&self, ranks: &[usize]) -> f64 {
+        self.feature_iter(ranks.iter().copied())
+    }
+
+    /// Feature over an iterator of ranks — lets the scheduler compose
+    /// running ∥ queued ∥ candidate without concatenating vectors (the
+    /// allocation-free hot path of Algorithm 1; see EXPERIMENTS.md §Perf).
+    pub fn feature_iter(&self, ranks: impl Iterator<Item = usize>) -> f64 {
+        match self {
+            KernelKind::Bgmv => {
+                let (mut n, mut max) = (0usize, 0usize);
+                for r in ranks {
+                    n += 1;
+                    max = max.max(r);
+                }
+                (n * max) as f64
+            }
+            KernelKind::Mbgmv => ranks.sum::<usize>() as f64,
+        }
+    }
+}
+
+/// A fitted linear latency model `latency = α · feature + β` for one
+/// (kernel, phase) pair.
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    pub kernel: KernelKind,
+    /// Slope α (seconds per feature unit).
+    pub alpha: f64,
+    /// Intercept β (seconds) — the batch-independent base-model cost.
+    pub beta: f64,
+    /// Fit quality on the training profile.
+    pub r2: f64,
+}
+
+impl PerfModel {
+    /// Construct directly from known coefficients.
+    pub fn from_coefficients(kernel: KernelKind, alpha: f64, beta: f64) -> PerfModel {
+        PerfModel {
+            kernel,
+            alpha,
+            beta,
+            r2: 1.0,
+        }
+    }
+
+    /// Fit from profiled `(ranks-in-batch, measured latency)` points.
+    pub fn fit(kernel: KernelKind, points: &[(Vec<usize>, f64)]) -> Option<PerfModel> {
+        let xs: Vec<Vec<f64>> = points
+            .iter()
+            .map(|(ranks, _)| vec![kernel.feature(ranks)])
+            .collect();
+        let ys: Vec<f64> = points.iter().map(|&(_, y)| y).collect();
+        let LinearFit { coef, intercept, r2 } = ols(&xs, &ys)?;
+        Some(PerfModel {
+            kernel,
+            alpha: coef[0],
+            beta: intercept,
+            r2,
+        })
+    }
+
+    /// Predicted iteration latency (seconds) for a batch with the given
+    /// ranks — the linear extension `α·feature + β` for *all* batch
+    /// sizes, including the empty batch (→ β).
+    ///
+    /// Returning 0 for the empty batch would make Algorithm 1's marginal
+    /// cost `Δ = predict(S+r) − predict(S)` jump by β when a server is
+    /// idle, so the scheduler would avoid empty servers and herd
+    /// requests onto loaded ones (observed as an attainment collapse at
+    /// 60-instance scale before this was fixed).
+    pub fn predict(&self, ranks: &[usize]) -> f64 {
+        self.alpha * self.kernel.feature(ranks) + self.beta
+    }
+
+    /// Allocation-free prediction over an iterator of ranks.
+    pub fn predict_iter(&self, ranks: impl Iterator<Item = usize>) -> f64 {
+        self.alpha * self.kernel.feature_iter(ranks) + self.beta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn features_match_paper_definitions() {
+        let ranks = vec![8, 64, 32];
+        assert_eq!(KernelKind::Bgmv.feature(&ranks), (3 * 64) as f64);
+        assert_eq!(KernelKind::Mbgmv.feature(&ranks), 104.0);
+        assert_eq!(KernelKind::Bgmv.feature(&[]), 0.0);
+    }
+
+    #[test]
+    fn fit_recovers_synthetic_linear_model() {
+        // Ground truth: latency = 5e-6 · feature + 30e-3.
+        let mut points = Vec::new();
+        for batch in 1..=32usize {
+            for &rank in &[8usize, 16, 32, 64] {
+                let ranks = vec![rank; batch];
+                let f = KernelKind::Bgmv.feature(&ranks);
+                points.push((ranks, 5e-6 * f + 30e-3));
+            }
+        }
+        let m = PerfModel::fit(KernelKind::Bgmv, &points).unwrap();
+        assert!((m.alpha - 5e-6).abs() < 1e-9);
+        assert!((m.beta - 30e-3).abs() < 1e-7);
+        assert!(m.r2 > 0.9999);
+    }
+
+    #[test]
+    fn bgmv_sensitive_to_max_mbgmv_to_sum() {
+        let b = PerfModel::from_coefficients(KernelKind::Bgmv, 1e-5, 0.0);
+        let m = PerfModel::from_coefficients(KernelKind::Mbgmv, 1e-5, 0.0);
+        // Adding one rank-64 request to 24 rank-32 requests:
+        let before: Vec<usize> = vec![32; 24];
+        let mut after = before.clone();
+        after.push(64);
+        // BGMV jumps: max rank doubles for the whole batch.
+        let bgmv_jump = b.predict(&after) / b.predict(&before);
+        assert!(bgmv_jump > 2.0, "bgmv jump {bgmv_jump}");
+        // MBGMV grows only by the added rank.
+        let mbgmv_jump = m.predict(&after) / m.predict(&before);
+        assert!(mbgmv_jump < 1.1, "mbgmv jump {mbgmv_jump}");
+    }
+
+    #[test]
+    fn paper_toy_example_fig5() {
+        // Fig 5: Instance1 = 24×rank-32, Instance2 = 16×rank-64, SLO 36ms.
+        // BGMV: 34.8ms and 35.8ms; MBGMV: 35.3ms and 35.9ms.
+        // Calibrate coefficients to land near those numbers.
+        let b = PerfModel::from_coefficients(KernelKind::Bgmv, 1.3e-5, 24.8e-3);
+        let i1: Vec<usize> = vec![32; 24];
+        let i2: Vec<usize> = vec![64; 16];
+        let l1 = b.predict(&i1);
+        let l2 = b.predict(&i2);
+        assert!((l1 - 34.8e-3).abs() < 1e-3, "{l1}");
+        assert!((l2 - 38.1e-3).abs() < 3e-3, "{l2}");
+        // New rank-64 request: to I1 raises max rank to 64 → violates 36ms.
+        let mut i1_new = i1.clone();
+        i1_new.push(64);
+        assert!(b.predict(&i1_new) > 36e-3);
+    }
+
+    #[test]
+    fn empty_batch_predicts_intercept() {
+        // Linear extension: predict(∅) = β, so Algorithm 1's marginal
+        // cost has no cliff at idle servers.
+        let m = PerfModel::from_coefficients(KernelKind::Mbgmv, 1e-5, 30e-3);
+        assert_eq!(m.predict(&[]), 30e-3);
+        let marginal_idle = m.predict(&[8]) - m.predict(&[]);
+        let marginal_busy = m.predict(&[8, 8]) - m.predict(&[8]);
+        assert!((marginal_idle - marginal_busy).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_kernel_kind() {
+        assert_eq!(KernelKind::parse("BGMV"), Some(KernelKind::Bgmv));
+        assert_eq!(KernelKind::parse("mbgmv"), Some(KernelKind::Mbgmv));
+        assert_eq!(KernelKind::parse("cutlass"), None);
+    }
+}

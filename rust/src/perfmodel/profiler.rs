@@ -1,0 +1,131 @@
+//! Profiling driver for performance-model calibration (paper §5:
+//! "lightweight serving performance profiling, involving varying batch
+//! sizes and heterogeneous adapters on a specific GPU").
+//!
+//! The profiler sweeps a (batch-size × rank-mix) grid, measures each
+//! configuration with a caller-supplied measurement function (the
+//! analytical GPU model in simulation; wall-clock kernels on a real
+//! testbed), and fits a [`PerfModel`] per kernel.
+
+use super::{KernelKind, PerfModel};
+use crate::util::rng::Rng;
+
+/// A profiling plan: which batch sizes and ranks to sweep.
+#[derive(Debug, Clone)]
+pub struct ProfilePlan {
+    pub batch_sizes: Vec<usize>,
+    pub ranks: Vec<usize>,
+    /// Heterogeneous mixes per batch size (random rank assignments).
+    pub mixes_per_size: usize,
+    pub seed: u64,
+}
+
+impl Default for ProfilePlan {
+    fn default() -> Self {
+        ProfilePlan {
+            batch_sizes: vec![1, 2, 4, 8, 16, 24, 32, 48, 64],
+            ranks: vec![8, 16, 32, 64, 128],
+            mixes_per_size: 6,
+            seed: 0x9A9A,
+        }
+    }
+}
+
+impl ProfilePlan {
+    /// Enumerate the batches (rank vectors) this plan profiles:
+    /// homogeneous batches for every (size, rank) plus random
+    /// heterogeneous mixes.
+    pub fn batches(&self) -> Vec<Vec<usize>> {
+        let mut rng = Rng::new(self.seed);
+        let mut out = Vec::new();
+        for &b in &self.batch_sizes {
+            for &r in &self.ranks {
+                out.push(vec![r; b]);
+            }
+            for _ in 0..self.mixes_per_size {
+                let mix: Vec<usize> =
+                    (0..b).map(|_| *rng.choose(&self.ranks)).collect();
+                out.push(mix);
+            }
+        }
+        out
+    }
+}
+
+/// Run the plan against `measure` and fit a model for `kernel`.
+/// `measure(ranks)` must return the observed iteration latency (seconds).
+pub fn calibrate(
+    kernel: KernelKind,
+    plan: &ProfilePlan,
+    mut measure: impl FnMut(&[usize]) -> f64,
+) -> Option<PerfModel> {
+    let points: Vec<(Vec<usize>, f64)> = plan
+        .batches()
+        .into_iter()
+        .map(|ranks| {
+            let y = measure(&ranks);
+            (ranks, y)
+        })
+        .collect();
+    PerfModel::fit(kernel, &points)
+}
+
+/// Calibrate both kernels at once against per-kernel measurement closures.
+pub fn calibrate_both(
+    plan: &ProfilePlan,
+    mut measure_bgmv: impl FnMut(&[usize]) -> f64,
+    mut measure_mbgmv: impl FnMut(&[usize]) -> f64,
+) -> Option<(PerfModel, PerfModel)> {
+    let b = calibrate(KernelKind::Bgmv, plan, &mut measure_bgmv)?;
+    let m = calibrate(KernelKind::Mbgmv, plan, &mut measure_mbgmv)?;
+    Some((b, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_includes_homogeneous_and_mixed() {
+        let plan = ProfilePlan::default();
+        let batches = plan.batches();
+        let homo = batches
+            .iter()
+            .filter(|b| b.windows(2).all(|w| w[0] == w[1]))
+            .count();
+        assert!(homo >= plan.batch_sizes.len() * plan.ranks.len());
+        assert!(batches.len() > homo, "need heterogeneous mixes too");
+    }
+
+    #[test]
+    fn calibrate_recovers_noisy_linear_ground_truth() {
+        let plan = ProfilePlan::default();
+        let mut rng = Rng::new(3);
+        let model = calibrate(KernelKind::Mbgmv, &plan, |ranks| {
+            let f = KernelKind::Mbgmv.feature(ranks);
+            7e-6 * f + 28e-3 + rng.normal_with(0.0, 2e-4)
+        })
+        .unwrap();
+        assert!((model.alpha - 7e-6).abs() < 5e-7, "alpha={}", model.alpha);
+        assert!((model.beta - 28e-3).abs() < 5e-4, "beta={}", model.beta);
+        // The paper reports R² = 0.96; with small noise we should beat it.
+        assert!(model.r2 > 0.96, "r2={}", model.r2);
+    }
+
+    #[test]
+    fn calibrate_both_returns_two_models() {
+        let plan = ProfilePlan {
+            mixes_per_size: 2,
+            ..Default::default()
+        };
+        let (b, m) = calibrate_both(
+            &plan,
+            |r| 1e-5 * KernelKind::Bgmv.feature(r) + 0.03,
+            |r| 2e-5 * KernelKind::Mbgmv.feature(r) + 0.03,
+        )
+        .unwrap();
+        assert_eq!(b.kernel, KernelKind::Bgmv);
+        assert_eq!(m.kernel, KernelKind::Mbgmv);
+        assert!(b.r2 > 0.999 && m.r2 > 0.999);
+    }
+}

@@ -1,0 +1,264 @@
+//! [`ModelRuntime`]: compile-once / execute-many PJRT wrapper.
+//!
+//! Adapted from `/opt/xla-example/load_hlo`: HLO **text** → proto →
+//! `XlaComputation` → `client.compile`. The weight + LoRA arrays from
+//! `weights.npz` are uploaded to device buffers **once** at startup and
+//! reused by every call (`execute_b`), so the per-iteration host→device
+//! traffic is only the small dynamic inputs (tokens, positions, KV) —
+//! the same buffer-residency discipline a real serving stack uses.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::Manifest;
+
+/// Prefill call result.
+#[derive(Debug, Clone)]
+pub struct PrefillOut {
+    /// [batch, vocab] last-token logits (row-major, bucket batch rows).
+    pub logits: Vec<f32>,
+    /// [layers, batch, seq, hidden] KV rows for the prompt positions.
+    pub k_cache: Vec<f32>,
+    pub v_cache: Vec<f32>,
+    /// Bucket used: (batch, seq).
+    pub bucket: (usize, usize),
+}
+
+/// Decode call result.
+#[derive(Debug, Clone)]
+pub struct DecodeOut {
+    /// [batch, vocab] next-token logits.
+    pub logits: Vec<f32>,
+    /// [layers, batch, hidden] the new token's K rows.
+    pub k_new: Vec<f32>,
+    /// [layers, batch, hidden] the new token's V rows.
+    pub v_new: Vec<f32>,
+    /// Bucket used: (batch, cache capacity M).
+    pub bucket: (usize, usize),
+}
+
+/// The compiled model runtime.
+pub struct ModelRuntime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    executables: HashMap<(String, usize, usize), PjRtLoadedExecutable>,
+    /// Device-resident weight+LoRA buffers, in manifest argument order.
+    weight_buffers: Vec<PjRtBuffer>,
+    /// Model dims cached from the manifest.
+    pub hidden: usize,
+    pub layers: usize,
+    pub vocab: usize,
+}
+
+impl ModelRuntime {
+    /// Load everything from an artifacts directory: parse the manifest,
+    /// compile every artifact, upload the weights.
+    pub fn load(dir: &Path) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(dir)?;
+        Self::load_with_manifest(manifest)
+    }
+
+    /// Load from a pre-parsed manifest (tests use a subset manifest).
+    pub fn load_with_manifest(manifest: Manifest) -> Result<ModelRuntime> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e}"))?;
+
+        // Upload weights once.
+        let npz = manifest.dir.join(&manifest.weights);
+        let arrays = Literal::read_npz(&npz, &())
+            .map_err(|e| anyhow!("read {npz:?}: {e}"))?;
+        let by_name: HashMap<String, Literal> = arrays.into_iter().collect();
+        let mut weight_buffers = Vec::new();
+        for name in manifest.weight_names.iter().chain(&manifest.lora_names) {
+            let lit = by_name
+                .get(name)
+                .ok_or_else(|| anyhow!("weights.npz missing array {name}"))?;
+            let buf = client
+                .buffer_from_host_literal(None, lit)
+                .map_err(|e| anyhow!("upload {name}: {e}"))?;
+            weight_buffers.push(buf);
+        }
+
+        // Compile all artifacts.
+        let mut executables = HashMap::new();
+        for art in &manifest.artifacts {
+            let path = manifest.dir.join(&art.path);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e}", art.name))?;
+            executables.insert((art.phase.clone(), art.batch, art.seq), exe);
+        }
+
+        let hidden = manifest
+            .model_value("hidden")
+            .context("manifest missing hidden")?;
+        let layers = manifest
+            .model_value("layers")
+            .context("manifest missing layers")?;
+        let vocab = manifest
+            .model_value("vocab")
+            .context("manifest missing vocab")?;
+        Ok(ModelRuntime {
+            client,
+            manifest,
+            executables,
+            weight_buffers,
+            hidden,
+            layers,
+            vocab,
+        })
+    }
+
+    fn i32_buffer(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("h2d i32: {e}"))
+    }
+
+    fn f32_buffer(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("h2d f32: {e}"))
+    }
+
+    fn run(
+        &self,
+        phase: &str,
+        bucket: (usize, usize),
+        dynamic: Vec<PjRtBuffer>,
+    ) -> Result<Vec<Literal>> {
+        let exe = self
+            .executables
+            .get(&(phase.to_string(), bucket.0, bucket.1))
+            .ok_or_else(|| anyhow!("no executable for {phase} {bucket:?}"))?;
+        let mut inputs: Vec<&PjRtBuffer> = self.weight_buffers.iter().collect();
+        for b in &dynamic {
+            inputs.push(b);
+        }
+        let result = exe
+            .execute_b(&inputs)
+            .map_err(|e| anyhow!("execute {phase} {bucket:?}: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("d2h: {e}"))?;
+        tuple.to_tuple().map_err(|e| anyhow!("untuple: {e}"))
+    }
+
+    /// Run prefill for up to `bucket.0` requests.
+    ///
+    /// `idx[b]` adapter slot, `tokens` row-major [batch, prompt], `lens`
+    /// true lengths. Inputs are padded to the chosen bucket; rows beyond
+    /// `idx.len()` in the outputs are padding garbage the caller must
+    /// ignore.
+    pub fn prefill(
+        &self,
+        idx: &[i32],
+        tokens: &[Vec<i32>],
+        lens: &[i32],
+    ) -> Result<PrefillOut> {
+        let batch = idx.len();
+        assert_eq!(tokens.len(), batch);
+        assert_eq!(lens.len(), batch);
+        let max_prompt = tokens.iter().map(Vec::len).max().unwrap_or(1);
+        let bucket = self
+            .manifest
+            .pick_prefill_bucket(batch, max_prompt)
+            .ok_or_else(|| anyhow!("no prefill bucket for b={batch} s={max_prompt}"))?;
+        let (bb, bs) = bucket;
+
+        let mut idx_p = vec![0i32; bb];
+        idx_p[..batch].copy_from_slice(idx);
+        let mut lens_p = vec![1i32; bb];
+        lens_p[..batch].copy_from_slice(lens);
+        let mut tok_p = vec![0i32; bb * bs];
+        for (b, row) in tokens.iter().enumerate() {
+            tok_p[b * bs..b * bs + row.len()].copy_from_slice(row);
+        }
+
+        let dynamic = vec![
+            self.i32_buffer(&idx_p, &[bb])?,
+            self.i32_buffer(&tok_p, &[bb, bs])?,
+            self.i32_buffer(&lens_p, &[bb])?,
+        ];
+        let outs = self.run("prefill", bucket, dynamic)?;
+        anyhow::ensure!(outs.len() == 3, "expected 3 outputs, got {}", outs.len());
+        Ok(PrefillOut {
+            logits: outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+            k_cache: outs[1].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+            v_cache: outs[2].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+            bucket,
+        })
+    }
+
+    /// Run one decode step for up to `bucket.0` requests.
+    ///
+    /// `k_cache`/`v_cache` are row-major [layers, batch, M, hidden] for
+    /// the *bucket* batch (caller pads); `pos[b]` is each request's
+    /// current length.
+    pub fn decode(
+        &self,
+        idx: &[i32],
+        tokens: &[i32],
+        pos: &[i32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+    ) -> Result<DecodeOut> {
+        let batch = idx.len();
+        let bucket = self
+            .manifest
+            .pick_decode_bucket(batch)
+            .ok_or_else(|| anyhow!("no decode bucket for b={batch}"))?;
+        let (bb, m) = bucket;
+        let expect = self.layers * bb * m * self.hidden;
+        anyhow::ensure!(
+            k_cache.len() == expect,
+            "k_cache len {} != {expect} (caller must pad to bucket {bucket:?})",
+            k_cache.len()
+        );
+
+        let mut idx_p = vec![0i32; bb];
+        idx_p[..batch].copy_from_slice(idx);
+        let mut tok_p = vec![0i32; bb];
+        tok_p[..batch].copy_from_slice(tokens);
+        let mut pos_p = vec![0i32; bb];
+        pos_p[..batch].copy_from_slice(pos);
+
+        let dims = [self.layers, bb, m, self.hidden];
+        let dynamic = vec![
+            self.i32_buffer(&idx_p, &[bb])?,
+            self.i32_buffer(&tok_p, &[bb])?,
+            self.i32_buffer(&pos_p, &[bb])?,
+            self.f32_buffer(k_cache, &dims)?,
+            self.f32_buffer(v_cache, &dims)?,
+        ];
+        let outs = self.run("decode", bucket, dynamic)?;
+        anyhow::ensure!(outs.len() == 3, "expected 3 outputs, got {}", outs.len());
+        Ok(DecodeOut {
+            logits: outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+            k_new: outs[1].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+            v_new: outs[2].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+            bucket,
+        })
+    }
+
+    /// Greedy argmax over one logits row.
+    pub fn argmax_row(&self, logits: &[f32], row: usize) -> i32 {
+        let start = row * self.vocab;
+        let slice = &logits[start..start + self.vocab];
+        let mut best = 0usize;
+        for (i, &v) in slice.iter().enumerate() {
+            if v > slice[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+}
+
+// PJRT integration tests live in rust/tests/integration_runtime.rs (they
+// need `make artifacts` to have run).

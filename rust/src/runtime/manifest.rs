@@ -1,0 +1,272 @@
+//! `artifacts/manifest.json` parsing.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Metadata for one compiled artifact (one phase × bucket).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// "prefill" or "decode".
+    pub phase: String,
+    /// Batch-size bucket.
+    pub batch: usize,
+    /// Prompt-length bucket (prefill) or cache capacity M (decode).
+    pub seq: usize,
+    /// HLO text file, relative to the artifacts dir.
+    pub path: PathBuf,
+    /// Input tensor names, in argument order.
+    pub inputs: Vec<String>,
+    /// Output tensor names, in tuple order.
+    pub outputs: Vec<String>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Model config as key → value (vocab, hidden, layers, ...).
+    pub model: Vec<(String, usize)>,
+    /// Number of device adapter slots.
+    pub lora_slots: usize,
+    /// Padded max rank of the LoRA stacks.
+    pub lora_max_rank: usize,
+    /// True rank per slot.
+    pub slot_ranks: Vec<usize>,
+    /// Weights npz file name.
+    pub weights: String,
+    /// Weight array names in argument order.
+    pub weight_names: Vec<String>,
+    /// LoRA array names in argument order.
+    pub lora_names: Vec<String>,
+    pub artifacts: Vec<ArtifactMeta>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and parse `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let model_obj = j.req("model").map_err(|e| anyhow::anyhow!("{e}"))?;
+        let model: Vec<(String, usize)> = model_obj
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("model not an object"))?
+            .iter()
+            .filter_map(|(k, v)| v.as_usize().map(|n| (k.clone(), n)))
+            .collect();
+        let lora = j.req("lora").map_err(|e| anyhow::anyhow!("{e}"))?;
+        let lora_slots = lora
+            .req("slots")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("bad lora.slots"))?;
+        let lora_max_rank = lora
+            .req("max_rank")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("bad lora.max_rank"))?;
+        let slot_ranks: Vec<usize> = lora
+            .get("slot_ranks")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_default();
+
+        let strings = |key: &str| -> anyhow::Result<Vec<String>> {
+            Ok(j.req(key)
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("{key} not an array"))?
+                .iter()
+                .filter_map(|v| v.as_str().map(str::to_string))
+                .collect())
+        };
+        let weight_names = strings("weight_names")?;
+        let lora_names = strings("lora_names")?;
+        let weights = j
+            .get("weights")
+            .and_then(Json::as_str)
+            .unwrap_or("weights.npz")
+            .to_string();
+
+        let mut artifacts = Vec::new();
+        for item in j
+            .req("artifacts")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("artifacts not an array"))?
+        {
+            let get_str = |k: &str| -> anyhow::Result<String> {
+                Ok(item
+                    .get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing {k}"))?
+                    .to_string())
+            };
+            let get_n = |k: &str| -> anyhow::Result<usize> {
+                item.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing {k}"))
+            };
+            artifacts.push(ArtifactMeta {
+                name: get_str("name")?,
+                phase: get_str("phase")?,
+                batch: get_n("batch")?,
+                seq: get_n("seq")?,
+                path: PathBuf::from(get_str("path")?),
+                inputs: item
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter().filter_map(|v| v.as_str().map(str::to_string)).collect()
+                    })
+                    .unwrap_or_default(),
+                outputs: item
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter().filter_map(|v| v.as_str().map(str::to_string)).collect()
+                    })
+                    .unwrap_or_default(),
+            });
+        }
+        Ok(Manifest {
+            model,
+            lora_slots,
+            lora_max_rank,
+            slot_ranks,
+            weights,
+            weight_names,
+            lora_names,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Model config value by key.
+    pub fn model_value(&self, key: &str) -> Option<usize> {
+        self.model.iter().find(|(k, _)| k == key).map(|&(_, v)| v)
+    }
+
+    /// Prefill buckets, sorted by (batch, seq).
+    pub fn prefill_buckets(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.phase == "prefill")
+            .map(|a| (a.batch, a.seq))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Decode buckets, sorted by batch.
+    pub fn decode_buckets(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.phase == "decode")
+            .map(|a| (a.batch, a.seq))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Smallest prefill bucket that fits (batch, prompt_len); `None` if
+    /// nothing fits.
+    pub fn pick_prefill_bucket(&self, batch: usize, prompt: usize) -> Option<(usize, usize)> {
+        self.prefill_buckets()
+            .into_iter()
+            .filter(|&(b, s)| b >= batch && s >= prompt)
+            .min_by_key(|&(b, s)| (b, s))
+    }
+
+    /// Smallest decode bucket with capacity ≥ batch.
+    pub fn pick_decode_bucket(&self, batch: usize) -> Option<(usize, usize)> {
+        self.decode_buckets()
+            .into_iter()
+            .filter(|&(b, _)| b >= batch)
+            .min_by_key(|&(b, _)| b)
+    }
+
+    /// Find the artifact for (phase, batch, seq).
+    pub fn artifact(&self, phase: &str, batch: usize, seq: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.phase == phase && a.batch == batch && a.seq == seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"vocab": 1024, "hidden": 256, "layers": 4, "heads": 8,
+                "kv_heads": 8, "intermediate": 688, "max_seq": 256},
+      "lora": {"slots": 8, "max_rank": 8, "slot_ranks": [8,8,4,4,8,2,8,8]},
+      "weights": "weights.npz",
+      "weight_names": ["embed", "wq"],
+      "lora_names": ["a_q", "b_q"],
+      "artifacts": [
+        {"name": "prefill_b1_s16", "phase": "prefill", "batch": 1, "seq": 16,
+         "path": "prefill_b1_s16.hlo.txt",
+         "inputs": ["embed", "wq", "a_q", "b_q", "idx", "tokens", "lens"],
+         "outputs": ["logits", "k_cache", "v_cache"]},
+        {"name": "prefill_b4_s32", "phase": "prefill", "batch": 4, "seq": 32,
+         "path": "prefill_b4_s32.hlo.txt", "inputs": [], "outputs": []},
+        {"name": "decode_b2_m128", "phase": "decode", "batch": 2, "seq": 128,
+         "path": "decode_b2_m128.hlo.txt", "inputs": [], "outputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.model_value("hidden"), Some(256));
+        assert_eq!(m.lora_slots, 8);
+        assert_eq!(m.slot_ranks, vec![8, 8, 4, 4, 8, 2, 8, 8]);
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.prefill_buckets(), vec![(1, 16), (4, 32)]);
+        assert_eq!(m.decode_buckets(), vec![(2, 128)]);
+    }
+
+    #[test]
+    fn bucket_picking() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.pick_prefill_bucket(1, 10), Some((1, 16)));
+        assert_eq!(m.pick_prefill_bucket(1, 17), Some((4, 32)));
+        assert_eq!(m.pick_prefill_bucket(2, 20), Some((4, 32)));
+        assert_eq!(m.pick_prefill_bucket(5, 20), None);
+        assert_eq!(m.pick_decode_bucket(1), Some((2, 128)));
+        assert_eq!(m.pick_decode_bucket(3), None);
+    }
+
+    #[test]
+    fn artifact_lookup() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert!(m.artifact("prefill", 1, 16).is_some());
+        assert!(m.artifact("decode", 2, 128).is_some());
+        assert!(m.artifact("decode", 4, 128).is_none());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Integration-lite: parse the actual artifacts dir when present.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert_eq!(m.model_value("hidden"), Some(256));
+            assert!(!m.prefill_buckets().is_empty());
+            assert!(!m.decode_buckets().is_empty());
+            assert_eq!(m.weight_names.len(), 12);
+            assert_eq!(m.lora_names.len(), 6);
+        }
+    }
+}

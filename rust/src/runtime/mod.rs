@@ -1,0 +1,17 @@
+//! The PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust request path.
+//!
+//! - [`manifest`] — parses `artifacts/manifest.json` (model config,
+//!   bucket table, per-artifact input ordering).
+//! - [`executor`] — wraps `xla::PjRtClient`: compiles each
+//!   `*.hlo.txt` once, uploads the weight arrays once as device
+//!   buffers, and serves `prefill`/`decode` calls with bucket routing.
+//!
+//! Python never runs here; the artifacts directory is the only contract
+//! between the layers.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{DecodeOut, ModelRuntime, PrefillOut};
+pub use manifest::{ArtifactMeta, Manifest};

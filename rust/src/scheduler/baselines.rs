@@ -1,0 +1,173 @@
+//! Baseline scheduling policies (paper §7.5): MostIdle, FirstFit
+//! (Punica's strategy), and Random.
+
+use super::{Policy, SchedRequest, ServerStats};
+use crate::perfmodel::PerfModel;
+use crate::util::rng::Rng;
+
+/// Route to the server with the least total requests.
+pub struct MostIdle;
+
+impl Policy for MostIdle {
+    fn pick(&mut self, _req: &SchedRequest, stats: &[ServerStats]) -> Option<usize> {
+        stats
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.eligible)
+            .min_by_key(|(_, s)| s.total_requests())
+            .map(|(i, _)| i)
+    }
+
+    fn name(&self) -> &'static str {
+        "most-idle"
+    }
+}
+
+/// First-fit bin packing (Punica): scan servers in fixed order, take the
+/// first whose predicted decode latency stays within a capacity bound.
+/// Falls back to the last eligible server when none "fits".
+pub struct FirstFit {
+    dec_perf: PerfModel,
+    capacity: f64,
+}
+
+impl FirstFit {
+    /// `capacity` is the decode-latency bound treated as bin capacity.
+    pub fn new(dec_perf: PerfModel, capacity: f64) -> Self {
+        FirstFit { dec_perf, capacity }
+    }
+}
+
+impl Policy for FirstFit {
+    fn pick(&mut self, req: &SchedRequest, stats: &[ServerStats]) -> Option<usize> {
+        let mut last_eligible = None;
+        for (i, s) in stats.iter().enumerate() {
+            if !s.eligible {
+                continue;
+            }
+            last_eligible = Some(i);
+            let mut ranks: Vec<usize> = s.running_ranks.clone();
+            ranks.extend(&s.queued_ranks);
+            ranks.push(req.rank);
+            if self.dec_perf.predict(&ranks) <= self.capacity {
+                return Some(i);
+            }
+        }
+        last_eligible
+    }
+
+    fn name(&self) -> &'static str {
+        "first-fit"
+    }
+}
+
+/// Uniformly random among eligible servers.
+pub struct RandomPick {
+    rng: Rng,
+}
+
+impl RandomPick {
+    /// Seeded for reproducibility.
+    pub fn new(rng: Rng) -> Self {
+        RandomPick { rng }
+    }
+}
+
+impl Policy for RandomPick {
+    fn pick(&mut self, _req: &SchedRequest, stats: &[ServerStats]) -> Option<usize> {
+        let eligible: Vec<usize> = stats
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.eligible)
+            .map(|(i, _)| i)
+            .collect();
+        if eligible.is_empty() {
+            None
+        } else {
+            Some(eligible[self.rng.range(0, eligible.len())])
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::KernelKind;
+
+    fn stats(loads: &[usize]) -> Vec<ServerStats> {
+        loads
+            .iter()
+            .map(|&n| ServerStats {
+                running_ranks: vec![32; n],
+                queued_ranks: vec![],
+                eligible: true,
+            })
+            .collect()
+    }
+
+    fn req() -> SchedRequest {
+        SchedRequest {
+            id: 1,
+            adapter: 1,
+            rank: 32,
+            prompt_len: 16,
+        }
+    }
+
+    #[test]
+    fn most_idle_picks_least_loaded() {
+        let mut p = MostIdle;
+        assert_eq!(p.pick(&req(), &stats(&[5, 2, 9])), Some(1));
+    }
+
+    #[test]
+    fn most_idle_skips_ineligible() {
+        let mut p = MostIdle;
+        let mut s = stats(&[5, 2, 9]);
+        s[1].eligible = false;
+        assert_eq!(p.pick(&req(), &s), Some(0));
+    }
+
+    #[test]
+    fn first_fit_takes_first_that_fits() {
+        let dec = PerfModel::from_coefficients(KernelKind::Bgmv, 1.3e-5, 24.8e-3);
+        let mut p = FirstFit::new(dec, 36e-3);
+        // Server 0: 24×32 + req → 25·32·1.3e-5+24.8e-3 = 35.2ms ≤ 36ms: fits.
+        assert_eq!(p.pick(&req(), &stats(&[24, 0])), Some(0));
+    }
+
+    #[test]
+    fn first_fit_overflows_to_next_and_falls_back() {
+        let dec = PerfModel::from_coefficients(KernelKind::Bgmv, 1.3e-5, 24.8e-3);
+        let mut p = FirstFit::new(dec, 36e-3);
+        // Server 0 full (40×32 → >36ms), server 1 empty: pick 1.
+        assert_eq!(p.pick(&req(), &stats(&[40, 0])), Some(1));
+        // All full: fall back to the last eligible.
+        assert_eq!(p.pick(&req(), &stats(&[40, 40])), Some(1));
+    }
+
+    #[test]
+    fn random_is_uniform_ish_and_respects_eligibility() {
+        let mut p = RandomPick::new(Rng::new(7));
+        let mut s = stats(&[1, 1, 1]);
+        s[2].eligible = false;
+        let mut counts = [0usize; 3];
+        for _ in 0..1000 {
+            counts[p.pick(&req(), &s).unwrap()] += 1;
+        }
+        assert_eq!(counts[2], 0);
+        assert!(counts[0] > 300 && counts[1] > 300, "{counts:?}");
+    }
+
+    #[test]
+    fn all_policies_none_on_empty() {
+        let dec = PerfModel::from_coefficients(KernelKind::Bgmv, 1e-5, 0.03);
+        assert!(MostIdle.pick(&req(), &[]).is_none());
+        assert!(FirstFit::new(dec, 0.036).pick(&req(), &[]).is_none());
+        assert!(RandomPick::new(Rng::new(1)).pick(&req(), &[]).is_none());
+    }
+}

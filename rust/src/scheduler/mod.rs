@@ -1,0 +1,336 @@
+//! Cluster-level request scheduling (paper §5, Algorithm 1).
+//!
+//! The scheduler receives every user request, gathers each candidate
+//! server's running-batch/queue state, scores the *additional* latency
+//! cost the new request would impose via the per-kernel performance
+//! models, adds an SLO-violation penalty, and routes to the minimum-cost
+//! server. Baselines from §7.5 (MostIdle, FirstFit, Random) live in
+//! [`baselines`]; the global adapter-metadata store in [`registry`].
+
+pub mod baselines;
+pub mod registry;
+
+use crate::perfmodel::PerfModel;
+use crate::util::rng::Rng;
+
+/// A request as the scheduler sees it.
+#[derive(Debug, Clone)]
+pub struct SchedRequest {
+    pub id: u64,
+    /// LoRA adapter id.
+    pub adapter: u64,
+    /// Adapter rank (from the global registry).
+    pub rank: usize,
+    /// Prompt length in tokens.
+    pub prompt_len: usize,
+}
+
+/// A snapshot of one inference server's load (what `GetStats` returns in
+/// Algorithm 1).
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    /// Ranks of requests currently in the running (decoding) batch.
+    pub running_ranks: Vec<usize>,
+    /// Ranks of requests queued for prefill.
+    pub queued_ranks: Vec<usize>,
+    /// True if the server hosts this request's base model + adapter and
+    /// has GPU memory headroom.
+    pub eligible: bool,
+}
+
+impl ServerStats {
+    /// Total requests on the server (running + queued).
+    pub fn total_requests(&self) -> usize {
+        self.running_ranks.len() + self.queued_ranks.len()
+    }
+}
+
+/// A scheduling policy: choose a server index for a request.
+pub trait Policy {
+    /// Pick among `stats` (one entry per server); `None` if no server is
+    /// eligible.
+    fn pick(&mut self, req: &SchedRequest, stats: &[ServerStats]) -> Option<usize>;
+
+    /// Policy name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Configuration for the rank-aware policy.
+#[derive(Debug, Clone)]
+pub struct RankAwareConfig {
+    /// Time-per-token SLO (seconds) on decode latency.
+    pub slo: f64,
+    /// Penalty added to the cost score on predicted SLO violation.
+    pub penalty: f64,
+    /// Average response length (tokens) used to amortize prefill cost.
+    pub avg_resp_len: f64,
+}
+
+impl Default for RankAwareConfig {
+    fn default() -> Self {
+        RankAwareConfig {
+            slo: 36e-3,
+            penalty: 1.0,
+            avg_resp_len: 60.0,
+        }
+    }
+}
+
+/// Algorithm 1: rank-aware scheduling with performance-model cost scores.
+pub struct RankAwareScheduler {
+    /// Prefill-latency model (per iteration).
+    pub pre_perf: PerfModel,
+    /// Decode-latency model (per iteration).
+    pub dec_perf: PerfModel,
+    pub cfg: RankAwareConfig,
+}
+
+impl RankAwareScheduler {
+    /// Build from fitted models and config.
+    pub fn new(pre_perf: PerfModel, dec_perf: PerfModel, cfg: RankAwareConfig) -> Self {
+        RankAwareScheduler {
+            pre_perf,
+            dec_perf,
+            cfg,
+        }
+    }
+
+    /// `CalcCost` (Algorithm 1, lines 13–23): the marginal latency the
+    /// new request inflicts on a server with the given state.
+    ///
+    /// Allocation-free: features are computed over chained iterators
+    /// instead of concatenated vectors — this runs once per (arrival ×
+    /// server) and dominated the 60-instance routing loop before the
+    /// rewrite (EXPERIMENTS.md §Perf).
+    pub fn calc_cost(&self, req: &SchedRequest, stats: &ServerStats) -> f64 {
+        let run = stats.running_ranks.iter().copied();
+        let q = stats.queued_ranks.iter().copied();
+        let one = std::iter::once(req.rank);
+
+        // Δ_prefill = PrePerf(queue + req) − PrePerf(queue)
+        let d_prefill = self.pre_perf.predict_iter(q.clone().chain(one.clone()))
+            - self.pre_perf.predict_iter(q.clone());
+
+        // Δ_decode = DecPerf(exists + req) − DecPerf(exists), where
+        // exists = running_batch + queue.
+        let dec_plus = self
+            .dec_perf
+            .predict_iter(run.clone().chain(q.clone()).chain(one));
+        let d_decode = dec_plus - self.dec_perf.predict_iter(run.chain(q));
+
+        let mut cost = d_prefill / self.cfg.avg_resp_len + d_decode;
+        if dec_plus > self.cfg.slo {
+            cost += self.cfg.penalty;
+        }
+        cost
+    }
+}
+
+impl Policy for RankAwareScheduler {
+    fn pick(&mut self, req: &SchedRequest, stats: &[ServerStats]) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, s) in stats.iter().enumerate() {
+            if !s.eligible {
+                continue;
+            }
+            // total_cost = cost · requests (Algorithm 1 line 8 weights the
+            // marginal cost by how many requests it disturbs).
+            let cost = self.calc_cost(req, s);
+            let total = cost * (s.total_requests() + 1) as f64;
+            match best {
+                None => best = Some((i, total)),
+                Some((_, b)) if total < b => best = Some((i, total)),
+                _ => {}
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    fn name(&self) -> &'static str {
+        "rank-aware"
+    }
+}
+
+/// Construct a policy by name ("rank-aware", "most-idle", "first-fit",
+/// "random") with the given models/config/seed.
+pub fn policy_by_name(
+    name: &str,
+    pre: PerfModel,
+    dec: PerfModel,
+    cfg: RankAwareConfig,
+    seed: u64,
+) -> Box<dyn Policy> {
+    match name {
+        "rank-aware" => Box::new(RankAwareScheduler::new(pre, dec, cfg)),
+        "most-idle" => Box::new(baselines::MostIdle),
+        "first-fit" => Box::new(baselines::FirstFit::new(dec, cfg.slo)),
+        "random" => Box::new(baselines::RandomPick::new(Rng::new(seed))),
+        other => panic!("unknown policy {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::KernelKind;
+
+    fn models_bgmv() -> (PerfModel, PerfModel) {
+        // Calibrated to the Fig 5 toy example (see perfmodel tests).
+        let dec = PerfModel::from_coefficients(KernelKind::Bgmv, 1.3e-5, 24.8e-3);
+        let pre = PerfModel::from_coefficients(KernelKind::Bgmv, 4e-5, 60e-3);
+        (pre, dec)
+    }
+
+    fn models_mbgmv() -> (PerfModel, PerfModel) {
+        let dec = PerfModel::from_coefficients(KernelKind::Mbgmv, 1.05e-5, 25.1e-3);
+        let pre = PerfModel::from_coefficients(KernelKind::Mbgmv, 3e-5, 60e-3);
+        (pre, dec)
+    }
+
+    fn fig5_stats() -> Vec<ServerStats> {
+        vec![
+            ServerStats {
+                running_ranks: vec![32; 24],
+                queued_ranks: vec![],
+                eligible: true,
+            },
+            ServerStats {
+                running_ranks: vec![64; 16],
+                queued_ranks: vec![],
+                eligible: true,
+            },
+        ]
+    }
+
+    #[test]
+    fn fig5_bgmv_routes_to_instance2() {
+        // Paper Fig 5: with BGMV, a new rank-64 request must go to
+        // Instance 2 (Instance 1 would jump to max-rank 64 for 25 reqs).
+        let (pre, dec) = models_bgmv();
+        let mut sched = RankAwareScheduler::new(
+            pre,
+            dec,
+            RankAwareConfig {
+                slo: 36e-3,
+                ..Default::default()
+            },
+        );
+        let req = SchedRequest {
+            id: 1,
+            adapter: 9,
+            rank: 64,
+            prompt_len: 32,
+        };
+        assert_eq!(sched.pick(&req, &fig5_stats()), Some(1));
+    }
+
+    #[test]
+    fn fig5_mbgmv_routes_to_instance1() {
+        // With MBGMV the cost tracks Σrank: Instance 2 already has the
+        // higher rank-sum, so the request goes to Instance 1.
+        let (pre, dec) = models_mbgmv();
+        let mut sched = RankAwareScheduler::new(
+            pre,
+            dec,
+            RankAwareConfig {
+                slo: 36e-3,
+                ..Default::default()
+            },
+        );
+        let req = SchedRequest {
+            id: 1,
+            adapter: 9,
+            rank: 64,
+            prompt_len: 32,
+        };
+        assert_eq!(sched.pick(&req, &fig5_stats()), Some(0));
+    }
+
+    #[test]
+    fn ineligible_servers_skipped() {
+        let (pre, dec) = models_bgmv();
+        let mut sched = RankAwareScheduler::new(pre, dec, RankAwareConfig::default());
+        let req = SchedRequest {
+            id: 1,
+            adapter: 1,
+            rank: 8,
+            prompt_len: 16,
+        };
+        let mut stats = fig5_stats();
+        stats[1].eligible = false;
+        assert_eq!(sched.pick(&req, &stats), Some(0));
+        stats[0].eligible = false;
+        assert_eq!(sched.pick(&req, &stats), None);
+    }
+
+    #[test]
+    fn slo_penalty_applied() {
+        let (pre, dec) = models_bgmv();
+        let sched = RankAwareScheduler::new(
+            pre,
+            dec,
+            RankAwareConfig {
+                slo: 36e-3,
+                penalty: 100.0,
+                avg_resp_len: 60.0,
+            },
+        );
+        let req = SchedRequest {
+            id: 1,
+            adapter: 1,
+            rank: 64,
+            prompt_len: 16,
+        };
+        // 24×r32 + new r64 violates (25·64 feature → ~45.6ms > 36ms).
+        let crowded = ServerStats {
+            running_ranks: vec![32; 24],
+            queued_ranks: vec![],
+            eligible: true,
+        };
+        let idle = ServerStats {
+            running_ranks: vec![],
+            queued_ranks: vec![],
+            eligible: true,
+        };
+        assert!(sched.calc_cost(&req, &crowded) > 100.0);
+        assert!(sched.calc_cost(&req, &idle) < 1.0);
+    }
+
+    #[test]
+    fn empty_cluster_returns_none() {
+        let (pre, dec) = models_bgmv();
+        let mut sched = RankAwareScheduler::new(pre, dec, RankAwareConfig::default());
+        let req = SchedRequest {
+            id: 1,
+            adapter: 1,
+            rank: 8,
+            prompt_len: 16,
+        };
+        assert_eq!(sched.pick(&req, &[]), None);
+    }
+
+    #[test]
+    fn prefers_emptier_server_all_else_equal() {
+        let (pre, dec) = models_bgmv();
+        let mut sched = RankAwareScheduler::new(pre, dec, RankAwareConfig::default());
+        let req = SchedRequest {
+            id: 1,
+            adapter: 1,
+            rank: 32,
+            prompt_len: 16,
+        };
+        let stats = vec![
+            ServerStats {
+                running_ranks: vec![32; 10],
+                queued_ranks: vec![],
+                eligible: true,
+            },
+            ServerStats {
+                running_ranks: vec![32; 2],
+                queued_ranks: vec![],
+                eligible: true,
+            },
+        ];
+        assert_eq!(sched.pick(&req, &stats), Some(1));
+    }
+}

@@ -1,0 +1,228 @@
+//! Global LoRA registry (paper §3): metadata for every adapter in the
+//! cluster — rank, base model, weights location — plus which servers
+//! currently host it. The paper prototypes this with SQLite; here it is
+//! an in-memory store with optional JSON persistence.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+use std::sync::RwLock;
+
+use crate::util::json::{self, Json};
+
+/// Metadata for one registered adapter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdapterMeta {
+    pub id: u64,
+    pub rank: usize,
+    pub base_model: String,
+    /// Path (or URI) of the weights file.
+    pub weights_path: String,
+}
+
+/// The cluster-wide adapter registry.
+#[derive(Default)]
+pub struct GlobalRegistry {
+    inner: RwLock<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    adapters: BTreeMap<u64, AdapterMeta>,
+    /// adapter id → servers hosting it in their local repository.
+    placements: BTreeMap<u64, BTreeSet<usize>>,
+}
+
+impl GlobalRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or update) an adapter's metadata.
+    pub fn register(&self, meta: AdapterMeta) {
+        self.inner.write().unwrap().adapters.insert(meta.id, meta);
+    }
+
+    /// Look up an adapter.
+    pub fn get(&self, id: u64) -> Option<AdapterMeta> {
+        self.inner.read().unwrap().adapters.get(&id).cloned()
+    }
+
+    /// Record that `server` hosts adapter `id` in its local repository.
+    pub fn place(&self, id: u64, server: usize) {
+        self.inner
+            .write()
+            .unwrap()
+            .placements
+            .entry(id)
+            .or_default()
+            .insert(server);
+    }
+
+    /// Remove a placement.
+    pub fn unplace(&self, id: u64, server: usize) {
+        if let Some(set) = self.inner.write().unwrap().placements.get_mut(&id) {
+            set.remove(&server);
+        }
+    }
+
+    /// Servers hosting adapter `id`.
+    pub fn servers_for(&self, id: u64) -> Vec<usize> {
+        self.inner
+            .read()
+            .unwrap()
+            .placements
+            .get(&id)
+            .map(|s| s.iter().copied().collect())
+            .unwrap_or_default()
+    }
+
+    /// Number of registered adapters.
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().adapters.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Serialize the registry to JSON.
+    pub fn to_json(&self) -> Json {
+        let inner = self.inner.read().unwrap();
+        let adapters: Vec<Json> = inner
+            .adapters
+            .values()
+            .map(|m| {
+                json::obj(vec![
+                    ("id", json::num(m.id as f64)),
+                    ("rank", json::num(m.rank as f64)),
+                    ("base_model", json::s(&m.base_model)),
+                    ("weights_path", json::s(&m.weights_path)),
+                    (
+                        "servers",
+                        Json::Arr(
+                            inner
+                                .placements
+                                .get(&m.id)
+                                .map(|s| {
+                                    s.iter().map(|&x| json::num(x as f64)).collect()
+                                })
+                                .unwrap_or_default(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        json::obj(vec![("adapters", Json::Arr(adapters))])
+    }
+
+    /// Persist to a JSON file.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+
+    /// Load from a JSON file produced by [`Self::save`].
+    pub fn load(path: &Path) -> anyhow::Result<GlobalRegistry> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let reg = GlobalRegistry::new();
+        for item in j.req("adapters").map_err(|e| anyhow::anyhow!("{e}"))?.as_arr().unwrap_or(&[]) {
+            let id = item
+                .get("id")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("bad id"))? as u64;
+            let rank = item
+                .get("rank")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("bad rank"))?;
+            let base_model = item
+                .get("base_model")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string();
+            let weights_path = item
+                .get("weights_path")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string();
+            reg.register(AdapterMeta {
+                id,
+                rank,
+                base_model,
+                weights_path,
+            });
+            if let Some(servers) = item.get("servers").and_then(Json::as_arr) {
+                for s in servers {
+                    if let Some(sv) = s.as_usize() {
+                        reg.place(id, sv);
+                    }
+                }
+            }
+        }
+        Ok(reg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(id: u64, rank: usize) -> AdapterMeta {
+        AdapterMeta {
+            id,
+            rank,
+            base_model: "llama2-7b".into(),
+            weights_path: format!("/adapters/{id}.npz"),
+        }
+    }
+
+    #[test]
+    fn register_and_lookup() {
+        let reg = GlobalRegistry::new();
+        reg.register(meta(1, 64));
+        reg.register(meta(2, 8));
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.get(1).unwrap().rank, 64);
+        assert!(reg.get(99).is_none());
+    }
+
+    #[test]
+    fn placements_tracked() {
+        let reg = GlobalRegistry::new();
+        reg.register(meta(1, 64));
+        reg.place(1, 0);
+        reg.place(1, 3);
+        reg.place(1, 3); // idempotent
+        assert_eq!(reg.servers_for(1), vec![0, 3]);
+        reg.unplace(1, 0);
+        assert_eq!(reg.servers_for(1), vec![3]);
+        assert!(reg.servers_for(42).is_empty());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let reg = GlobalRegistry::new();
+        reg.register(meta(1, 64));
+        reg.register(meta(7, 16));
+        reg.place(7, 2);
+        let dir = std::env::temp_dir().join("caraserve-registry-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("registry.json");
+        reg.save(&path).unwrap();
+        let back = GlobalRegistry::load(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get(7).unwrap().rank, 16);
+        assert_eq!(back.servers_for(7), vec![2]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn update_overwrites() {
+        let reg = GlobalRegistry::new();
+        reg.register(meta(1, 8));
+        reg.register(meta(1, 32));
+        assert_eq!(reg.get(1).unwrap().rank, 32);
+        assert_eq!(reg.len(), 1);
+    }
+}

@@ -1,0 +1,47 @@
+//! Request/response types for the inference server.
+
+/// A user inference request.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    /// LoRA adapter id (mapped to a device slot by the engine).
+    pub adapter: u64,
+    /// Prompt token ids.
+    pub prompt: Vec<i32>,
+    /// Number of tokens to generate.
+    pub max_new_tokens: usize,
+}
+
+/// The completed output for a request.
+#[derive(Debug, Clone)]
+pub struct RequestOutput {
+    pub id: u64,
+    /// Generated token ids (greedy).
+    pub tokens: Vec<i32>,
+}
+
+/// Lifecycle state the engine tracks per request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Queued,
+    Prefilling,
+    Decoding,
+    Finished,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_construction() {
+        let r = InferenceRequest {
+            id: 1,
+            adapter: 3,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 8,
+        };
+        assert_eq!(r.prompt.len(), 3);
+        assert_eq!(Phase::Queued, Phase::Queued);
+    }
+}

@@ -1,0 +1,261 @@
+//! Iteration-level continuous batching policy (Fig 2 / Orca-style).
+//!
+//! Pure decision logic, separated from execution so the policy is unit-
+//! and property-testable: given the queue and the running set, decide
+//! whether the next iteration is a prefill (admit new requests — they
+//! preempt decoding) or a decode, and which requests participate.
+
+use std::collections::VecDeque;
+
+use super::api::InferenceRequest;
+
+/// A queued request with arrival metadata.
+#[derive(Debug, Clone)]
+pub struct QueuedReq {
+    pub req: InferenceRequest,
+    pub arrival: std::time::Instant,
+}
+
+/// A running (decoding) request.
+#[derive(Debug, Clone)]
+pub struct RunningReq {
+    pub id: u64,
+    pub adapter: u64,
+    /// Context length (prompt + generated so far).
+    pub ctx: usize,
+    /// Tokens generated so far.
+    pub generated: usize,
+    /// Generation budget.
+    pub max_new_tokens: usize,
+    /// Last emitted token (input to the next decode step).
+    pub last_token: i32,
+}
+
+impl RunningReq {
+    /// Is this request done after `generated` tokens?
+    pub fn finished(&self) -> bool {
+        self.generated >= self.max_new_tokens
+    }
+}
+
+/// What the engine should run next.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NextAction {
+    /// Admit these queue positions (front-first) into a prefill pass.
+    Prefill { admit: usize },
+    /// Run one decode iteration over the running batch.
+    Decode,
+    /// Nothing to do.
+    Idle,
+}
+
+/// The batching policy.
+pub struct Batcher {
+    /// Max running requests (decode bucket capacity).
+    pub max_batch: usize,
+    /// Max requests admitted per prefill pass (prefill bucket capacity).
+    pub max_prefill_batch: usize,
+    /// Queue of waiting requests.
+    pub queue: VecDeque<QueuedReq>,
+    /// Running batch.
+    pub running: Vec<RunningReq>,
+}
+
+impl Batcher {
+    /// New policy with the given bucket capacities.
+    pub fn new(max_batch: usize, max_prefill_batch: usize) -> Batcher {
+        Batcher {
+            max_batch,
+            max_prefill_batch,
+            queue: VecDeque::new(),
+            running: Vec::new(),
+        }
+    }
+
+    /// Enqueue an arrival.
+    pub fn enqueue(&mut self, req: InferenceRequest) {
+        self.queue.push_back(QueuedReq {
+            req,
+            arrival: std::time::Instant::now(),
+        });
+    }
+
+    /// Decide the next iteration (Fig 2: arrivals preempt decode).
+    /// `can_admit(prompt_len)` is the KV manager's admission check.
+    pub fn next_action(&self, can_admit: impl Fn(usize) -> bool) -> NextAction {
+        if !self.queue.is_empty() && self.running.len() < self.max_batch {
+            // Admit from the front while capacity and KV pages allow.
+            let room = (self.max_batch - self.running.len()).min(self.max_prefill_batch);
+            let mut admit = 0;
+            for q in self.queue.iter().take(room) {
+                if can_admit(q.req.prompt.len()) {
+                    admit += 1;
+                } else {
+                    break; // FIFO: don't starve the head of the queue
+                }
+            }
+            if admit > 0 {
+                return NextAction::Prefill { admit };
+            }
+        }
+        if !self.running.is_empty() {
+            NextAction::Decode
+        } else {
+            NextAction::Idle
+        }
+    }
+
+    /// Pop the first `admit` queued requests (after a Prefill decision).
+    pub fn take_admits(&mut self, admit: usize) -> Vec<QueuedReq> {
+        (0..admit)
+            .map(|_| self.queue.pop_front().expect("admit > queue len"))
+            .collect()
+    }
+
+    /// Move a prefilled request into the running set.
+    pub fn start_running(&mut self, r: RunningReq) {
+        assert!(
+            self.running.len() < self.max_batch,
+            "running batch overflow"
+        );
+        self.running.push(r);
+    }
+
+    /// Remove finished requests, returning them.
+    pub fn reap_finished(&mut self) -> Vec<RunningReq> {
+        let (done, keep): (Vec<_>, Vec<_>) =
+            self.running.drain(..).partition(|r| r.finished());
+        self.running = keep;
+        done
+    }
+
+    /// Total load (queue + running) — the scheduler's GetStats view.
+    pub fn load(&self) -> usize {
+        self.queue.len() + self.running.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt: usize) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            adapter: id,
+            prompt: vec![1; prompt],
+            max_new_tokens: 4,
+        }
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        let b = Batcher::new(8, 4);
+        assert_eq!(b.next_action(|_| true), NextAction::Idle);
+    }
+
+    #[test]
+    fn prefill_preempts_decode() {
+        let mut b = Batcher::new(8, 4);
+        b.start_running(RunningReq {
+            id: 1,
+            adapter: 1,
+            ctx: 10,
+            generated: 1,
+            max_new_tokens: 5,
+            last_token: 0,
+        });
+        assert_eq!(b.next_action(|_| true), NextAction::Decode);
+        b.enqueue(req(2, 16));
+        assert_eq!(b.next_action(|_| true), NextAction::Prefill { admit: 1 });
+    }
+
+    #[test]
+    fn admits_bounded_by_room_and_prefill_bucket() {
+        let mut b = Batcher::new(4, 2);
+        for i in 0..5 {
+            b.enqueue(req(i, 8));
+        }
+        // Prefill bucket limits to 2.
+        assert_eq!(b.next_action(|_| true), NextAction::Prefill { admit: 2 });
+        // Fill running to 3: room = 1.
+        for i in 10..13 {
+            b.start_running(RunningReq {
+                id: i,
+                adapter: i,
+                ctx: 8,
+                generated: 0,
+                max_new_tokens: 4,
+                last_token: 0,
+            });
+        }
+        assert_eq!(b.next_action(|_| true), NextAction::Prefill { admit: 1 });
+    }
+
+    #[test]
+    fn full_batch_decodes_despite_queue() {
+        let mut b = Batcher::new(2, 2);
+        b.enqueue(req(1, 8));
+        for i in 10..12 {
+            b.start_running(RunningReq {
+                id: i,
+                adapter: i,
+                ctx: 8,
+                generated: 0,
+                max_new_tokens: 4,
+                last_token: 0,
+            });
+        }
+        assert_eq!(b.next_action(|_| true), NextAction::Decode);
+    }
+
+    #[test]
+    fn kv_pressure_blocks_admission_fifo() {
+        let mut b = Batcher::new(8, 4);
+        b.enqueue(req(1, 100)); // too big for KV
+        b.enqueue(req(2, 4)); // would fit, but FIFO blocks behind head
+        let action = b.next_action(|p| p <= 50);
+        assert_eq!(action, NextAction::Idle);
+        // With a running batch it decodes instead of idling.
+        b.start_running(RunningReq {
+            id: 9,
+            adapter: 9,
+            ctx: 4,
+            generated: 0,
+            max_new_tokens: 4,
+            last_token: 0,
+        });
+        assert_eq!(b.next_action(|p| p <= 50), NextAction::Decode);
+    }
+
+    #[test]
+    fn reap_finished_partitions() {
+        let mut b = Batcher::new(8, 4);
+        for (id, gen) in [(1u64, 4usize), (2, 2), (3, 4)] {
+            b.start_running(RunningReq {
+                id,
+                adapter: id,
+                ctx: 10,
+                generated: gen,
+                max_new_tokens: 4,
+                last_token: 0,
+            });
+        }
+        let done = b.reap_finished();
+        assert_eq!(done.len(), 2);
+        assert_eq!(b.running.len(), 1);
+        assert_eq!(b.running[0].id, 2);
+    }
+
+    #[test]
+    fn take_admits_fifo_order() {
+        let mut b = Batcher::new(8, 4);
+        for i in 0..3 {
+            b.enqueue(req(i, 8));
+        }
+        let admits = b.take_admits(2);
+        assert_eq!(admits[0].req.id, 0);
+        assert_eq!(admits[1].req.id, 1);
+        assert_eq!(b.queue.len(), 1);
+    }
+}

@@ -1,0 +1,175 @@
+//! Per-request serving metrics (§7.1: time-to-first-token, time per
+//! token, request latency) and aggregation.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::util::stats::{Ecdf, Summary};
+
+/// One request's completed timing record.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub ttft: f64,
+    pub time_per_token: f64,
+    pub latency: f64,
+    pub output_len: usize,
+}
+
+struct InFlight {
+    arrival: Instant,
+    first_token: Option<Instant>,
+    tokens: usize,
+}
+
+/// Records request lifecycles and produces summaries.
+#[derive(Default)]
+pub struct MetricsRecorder {
+    inflight: HashMap<u64, InFlight>,
+    done: Vec<RequestRecord>,
+}
+
+impl MetricsRecorder {
+    /// Empty recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A request arrived.
+    pub fn arrived(&mut self, id: u64) {
+        self.inflight.insert(
+            id,
+            InFlight {
+                arrival: Instant::now(),
+                first_token: None,
+                tokens: 0,
+            },
+        );
+    }
+
+    /// A token was emitted for a request.
+    pub fn token(&mut self, id: u64) {
+        if let Some(f) = self.inflight.get_mut(&id) {
+            f.tokens += 1;
+            if f.first_token.is_none() {
+                f.first_token = Some(Instant::now());
+            }
+        }
+    }
+
+    /// The request finished; finalize its record.
+    pub fn finished(&mut self, id: u64) {
+        if let Some(f) = self.inflight.remove(&id) {
+            let now = Instant::now();
+            let latency = now.duration_since(f.arrival).as_secs_f64();
+            let ttft = f
+                .first_token
+                .map(|t| t.duration_since(f.arrival).as_secs_f64())
+                .unwrap_or(latency);
+            self.done.push(RequestRecord {
+                id,
+                ttft,
+                time_per_token: latency / f.tokens.max(1) as f64,
+                latency,
+                output_len: f.tokens,
+            });
+        }
+    }
+
+    /// Completed records.
+    pub fn records(&self) -> &[RequestRecord] {
+        &self.done
+    }
+
+    /// Requests still in flight.
+    pub fn inflight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Summary of one metric column ("ttft" | "tpt" | "latency").
+    pub fn summary(&self, metric: &str) -> Option<Summary> {
+        Summary::of(&self.column(metric))
+    }
+
+    /// ECDF of one metric column.
+    pub fn ecdf(&self, metric: &str) -> Ecdf {
+        Ecdf::new(&self.column(metric))
+    }
+
+    fn column(&self, metric: &str) -> Vec<f64> {
+        self.done
+            .iter()
+            .map(|r| match metric {
+                "ttft" => r.ttft,
+                "tpt" => r.time_per_token,
+                "latency" => r.latency,
+                other => panic!("unknown metric {other}"),
+            })
+            .collect()
+    }
+
+    /// Aggregate throughput over the recorded window: (requests/s,
+    /// tokens/s) given the wall-clock duration of the run.
+    pub fn throughput(&self, wall_seconds: f64) -> (f64, f64) {
+        let reqs = self.done.len() as f64 / wall_seconds;
+        let toks: usize = self.done.iter().map(|r| r.output_len).sum();
+        (reqs, toks as f64 / wall_seconds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_produces_record() {
+        let mut m = MetricsRecorder::new();
+        m.arrived(1);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        m.token(1);
+        m.token(1);
+        m.finished(1);
+        assert_eq!(m.records().len(), 1);
+        let r = &m.records()[0];
+        assert!(r.ttft >= 5e-3);
+        assert!(r.latency >= r.ttft);
+        assert_eq!(r.output_len, 2);
+        assert!(r.time_per_token > 0.0);
+        assert_eq!(m.inflight(), 0);
+    }
+
+    #[test]
+    fn summary_and_ecdf() {
+        let mut m = MetricsRecorder::new();
+        for id in 0..10 {
+            m.arrived(id);
+            m.token(id);
+            m.finished(id);
+        }
+        let s = m.summary("latency").unwrap();
+        assert_eq!(s.count, 10);
+        assert_eq!(m.ecdf("ttft").len(), 10);
+    }
+
+    #[test]
+    fn unknown_ids_ignored() {
+        let mut m = MetricsRecorder::new();
+        m.token(99);
+        m.finished(99);
+        assert!(m.records().is_empty());
+    }
+
+    #[test]
+    fn throughput_math() {
+        let mut m = MetricsRecorder::new();
+        for id in 0..4 {
+            m.arrived(id);
+            m.token(id);
+            m.token(id);
+            m.finished(id);
+        }
+        let (rps, tps) = m.throughput(2.0);
+        assert!((rps - 2.0).abs() < 1e-9);
+        assert!((tps - 4.0).abs() < 1e-9);
+    }
+}

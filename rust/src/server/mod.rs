@@ -1,0 +1,26 @@
+//! The LLM inference server (the paper's per-server component, §3):
+//! request queue + continuous batcher + paged KV-cache manager + the
+//! PJRT model runtime + cold-start handling.
+//!
+//! - [`api`] — request/response types and per-request lifecycle state.
+//! - [`kvcache`] — paged KV-cache manager (block-granular alloc/free,
+//!   batch assembly for the decode bucket inputs).
+//! - [`batcher`] — iteration-level continuous-batching policy (Fig 2):
+//!   arrivals preempt decode; completed requests leave every iteration.
+//! - [`engine`] — [`InferenceServer`]: drives the runtime, streams
+//!   tokens, records TTFT / time-per-token / request latency, and
+//!   applies the serving mode's cold-start behaviour (Cached / OnDemand
+//!   / CaraServe overlap).
+//! - [`metrics`] — per-request metric recording and summaries.
+
+pub mod api;
+pub mod batcher;
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+
+pub use api::{InferenceRequest, RequestOutput};
+pub use batcher::{Batcher, NextAction};
+pub use engine::{ColdStartMode, EngineConfig, InferenceServer};
+pub use kvcache::KvCacheManager;
+pub use metrics::{MetricsRecorder, RequestRecord};

@@ -1,0 +1,265 @@
+//! Analytical GPU latency model (roofline-style), calibrated to the
+//! paper's A10/A100 measurements.
+//!
+//! The paper's latency behaviour decomposes cleanly:
+//!
+//! - **decode** iterations are memory-bandwidth bound: every iteration
+//!   streams all weights + the batch's KV cache once;
+//! - **prefill** iterations are compute bound (large GEMMs);
+//! - **LoRA kernel overhead** is membw bound (>70% membw in the paper's
+//!   Nsight profile): BGMV streams `|S|·max_rank` padded adapter rows,
+//!   MBGMV streams `Σ rank` — the linear models of Fig 9 fall out of the
+//!   byte counts;
+//! - **adapter loading** is PCIe transfer + a fixed driver/alloc floor
+//!   (Fig 3-Right);
+//! - **CPU LoRA** prefill runs at a per-core token rate with near-linear
+//!   multi-core scaling (Fig 18).
+
+use crate::config::GpuSpec;
+use crate::model::{LlamaConfig, LoraSpec};
+use crate::perfmodel::KernelKind;
+
+/// Latency model for one server's GPU(s).
+#[derive(Debug, Clone)]
+pub struct GpuModel {
+    pub cfg: LlamaConfig,
+    pub gpu: GpuSpec,
+    /// Tensor-parallel degree.
+    pub tp: usize,
+    /// Efficiency of TP scaling (NCCL overhead): 1 GPU → 1.0.
+    pub tp_eff: f64,
+    /// Fixed per-iteration launch/framework overhead (seconds).
+    pub iter_overhead: f64,
+}
+
+impl GpuModel {
+    /// Standard model for a (model, gpu, tp) triple.
+    pub fn new(cfg: LlamaConfig, gpu: GpuSpec, tp: usize) -> GpuModel {
+        GpuModel {
+            cfg,
+            gpu,
+            tp,
+            tp_eff: if tp > 1 { 0.85 } else { 1.0 },
+            // LightLLM-style frameworks spend a few ms per iteration on
+            // batching, sampling, and kernel launches.
+            iter_overhead: 4e-3,
+        }
+    }
+
+    /// Aggregate effective memory bandwidth across TP shards.
+    fn agg_mem_bw(&self) -> f64 {
+        self.gpu.eff_mem_bw() * self.tp as f64 * self.tp_eff
+    }
+
+    /// Aggregate effective compute across TP shards.
+    fn agg_flops(&self) -> f64 {
+        self.gpu.eff_flops() * self.tp as f64 * self.tp_eff
+    }
+
+    /// One decode iteration for a batch with the given per-request
+    /// context lengths (tokens attended). Membw-bound: stream weights
+    /// once + each request's KV.
+    pub fn decode_iter(&self, ctx_lens: &[usize]) -> f64 {
+        if ctx_lens.is_empty() {
+            return 0.0;
+        }
+        let kv_bytes: f64 = ctx_lens
+            .iter()
+            .map(|&c| c as f64 * self.cfg.kv_bytes_per_token())
+            .sum();
+        let bytes = self.cfg.weight_bytes() + kv_bytes;
+        self.iter_overhead + bytes / self.agg_mem_bw()
+    }
+
+    /// A prefill pass over `total_tokens` prompt tokens (compute bound).
+    pub fn prefill(&self, total_tokens: usize) -> f64 {
+        if total_tokens == 0 {
+            return 0.0;
+        }
+        let flops = self.cfg.fwd_flops(total_tokens as f64, total_tokens as f64);
+        self.iter_overhead + flops / self.agg_flops()
+    }
+
+    /// Per-iteration GPU LoRA kernel overhead for a batch with the given
+    /// adapter ranks (decode: one token per request).
+    pub fn lora_decode_overhead(&self, kernel: KernelKind, ranks: &[usize]) -> f64 {
+        if ranks.is_empty() {
+            return 0.0;
+        }
+        // Bytes streamed per token per rank unit: A row + B row per layer
+        // per target, fp16.
+        let per_rank_bytes = 4.0 // A column + B row, 2 bytes each
+            * self.cfg.hidden as f64
+            * self.cfg.layers as f64
+            * 3.0; // Q, K, V
+        let feature = kernel.feature(ranks);
+        // Kernel launch floor per iteration (32 layers × 3 launches).
+        let launch = 2e-6 * self.cfg.layers as f64 * 3.0;
+        launch + feature * per_rank_bytes / self.agg_mem_bw()
+    }
+
+    /// Cold-start: load one adapter host→device (Fig 3-Right).
+    pub fn adapter_load(&self, spec: &LoraSpec) -> f64 {
+        self.gpu.h2d_time(spec.weight_bytes(&self.cfg))
+    }
+
+    /// CPU-LoRA prefill token rate for one host core (tokens/s) at the
+    /// given rank: xAB is 4·H·r FLOPs per token per layer per target.
+    pub fn cpu_core_token_rate(&self, rank: usize) -> f64 {
+        // One vectorized host core sustains ~32 GFLOP/s on this GEMM
+        // shape (calibrated so that Fig 18-Left's single-core curve and
+        // §7.2's 22% TTFT overhead over CACHED both hold).
+        let core_flops = 32e9;
+        let flops_per_token =
+            4.0 * self.cfg.hidden as f64 * rank as f64 * self.cfg.layers as f64 * 3.0;
+        core_flops / flops_per_token
+    }
+
+    /// CPU-LoRA prefill time for `tokens` across `cores` with the
+    /// paper's multi-core scaling (near-linear: 1.7×/8 over the
+    /// PyTorch-native baseline, ~0.92 parallel efficiency per doubling).
+    pub fn cpu_prefill(&self, tokens: usize, rank: usize, cores: usize) -> f64 {
+        if tokens == 0 {
+            return 0.0;
+        }
+        let cores = cores.max(1) as f64;
+        let rate = self.cpu_core_token_rate(rank) * cores.powf(0.95);
+        tokens as f64 / rate
+    }
+
+    /// CaraServe's effective prefill cost for one cold request (§4.1
+    /// "Mitigating GPU cold-start", Fig 1/7).
+    ///
+    /// During the load window the **base model keeps running on the
+    /// GPU**; only the lightweight xAB runs on host cores, layer-
+    /// synchronized through shared memory. Prefill therefore completes in
+    /// `max(gpu_prefill, cpu_lora_time)` plus the sub-ms sync overhead —
+    /// nearly independent of the adapter load time (whatever loading
+    /// remains after prefill is hidden behind the first decode
+    /// iterations, where CPU LoRA trivially covers 1 token/request).
+    ///
+    /// Returns (total_prefill_time, residual_coldstart_exposed).
+    pub fn overlapped_prefill(
+        &self,
+        prompt: usize,
+        rank: usize,
+        cores: usize,
+        _load_time: f64,
+    ) -> (f64, f64) {
+        let gpu_time = self.prefill(prompt);
+        // Time for the host cores to push the prompt through xAB.
+        let cpu_time = self.cpu_prefill(prompt, rank, cores);
+        // Sync overhead of the layer-wise CPU/GPU exchange: sub-ms total
+        // with shared memory + the fused async memcpy+signal operator
+        // (Figs 16/17).
+        let sync = 0.8e-3;
+        let total = gpu_time.max(cpu_time) + sync;
+        let residual = (total - gpu_time).max(0.0);
+        (total, residual)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a10_7b() -> GpuModel {
+        GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1)
+    }
+
+    #[test]
+    fn decode_iter_matches_paper_scale() {
+        // Paper Fig 4/5: decode iterations for Llama2-7B/A10 with tens of
+        // requests land in the ~30–40 ms band.
+        let m = a10_7b();
+        let d = m.decode_iter(&vec![256; 24]);
+        assert!((25e-3..55e-3).contains(&d), "decode={d}");
+    }
+
+    #[test]
+    fn decode_scales_with_batch_kv() {
+        let m = a10_7b();
+        assert!(m.decode_iter(&vec![512; 16]) > m.decode_iter(&vec![128; 16]));
+        assert!(m.decode_iter(&vec![256; 32]) > m.decode_iter(&vec![256; 8]));
+        assert_eq!(m.decode_iter(&[]), 0.0);
+    }
+
+    #[test]
+    fn prefill_matches_paper_scale() {
+        // A 128-token prompt on 7B/A10: ~tens of ms.
+        let m = a10_7b();
+        let p = m.prefill(128);
+        assert!((10e-3..120e-3).contains(&p), "prefill={p}");
+    }
+
+    #[test]
+    fn adapter_load_matches_fig3_right() {
+        // Fig 3-Right: rank 8..128 loads take ~few..tens of ms on A10.
+        let m = a10_7b();
+        let cfg = LlamaConfig::llama2_7b();
+        let t8 = m.adapter_load(&LoraSpec::standard(1, 8, &cfg.name));
+        let t64 = m.adapter_load(&LoraSpec::standard(1, 64, &cfg.name));
+        let t128 = m.adapter_load(&LoraSpec::standard(1, 128, &cfg.name));
+        assert!((5e-3..12e-3).contains(&t8), "t8={t8}");
+        assert!((15e-3..30e-3).contains(&t64), "t64={t64}");
+        assert!(t128 > t64 && t64 > t8);
+    }
+
+    #[test]
+    fn bgmv_overhead_tracks_max_rank() {
+        let m = a10_7b();
+        let homo = m.lora_decode_overhead(KernelKind::Bgmv, &vec![32; 24]);
+        let mut with64 = vec![32; 24];
+        with64.push(64);
+        let bumped = m.lora_decode_overhead(KernelKind::Bgmv, &with64);
+        assert!(bumped > homo * 1.7, "homo={homo} bumped={bumped}");
+        // MBGMV only grows by the added rank.
+        let m_homo = m.lora_decode_overhead(KernelKind::Mbgmv, &vec![32; 24]);
+        let m_bumped = m.lora_decode_overhead(KernelKind::Mbgmv, &with64);
+        assert!(m_bumped < m_homo * 1.2);
+    }
+
+    #[test]
+    fn overlapped_prefill_hides_most_of_the_load() {
+        let m = a10_7b();
+        let cfg = LlamaConfig::llama2_7b();
+        let spec = LoraSpec::standard(1, 64, &cfg.name);
+        let load = m.adapter_load(&spec);
+        let prompt = 128;
+        // With 8 cores a 128-token prompt is CPU-bound: no worse than
+        // load-then-prefill (this is why §4.2 allocates ⌈L/c⌉ cores).
+        let (total8, residual8) = m.overlapped_prefill(prompt, 64, 8, load);
+        let naive = load + m.prefill(prompt);
+        assert!(total8 <= naive * 1.01, "total8={total8} naive={naive}");
+        assert!(residual8 <= load * 1.6, "residual8={residual8} load={load}");
+        // With the profiling-guided core allotment the reduction is
+        // large (§4.2 headline: 57.9% prefill latency reduction).
+        let (total, _) = m.overlapped_prefill(prompt, 64, 32, load);
+        let reduction = 1.0 - total / naive;
+        assert!(
+            (0.2..0.95).contains(&reduction),
+            "reduction={reduction} total={total} naive={naive}"
+        );
+        // With ample cores the residual exposure is sub-5ms (sync + CPU
+        // slowdown only), regardless of adapter size.
+        let (_, residual_many) = m.overlapped_prefill(prompt, 64, 32, load);
+        assert!(residual_many < 5e-3, "residual_many={residual_many}");
+    }
+
+    #[test]
+    fn tp_speeds_up_decode() {
+        let cfg = LlamaConfig::llama2_13b();
+        let m1 = GpuModel::new(cfg.clone(), GpuSpec::a10(), 1);
+        let m2 = GpuModel::new(cfg, GpuSpec::a10(), 2);
+        assert!(m2.decode_iter(&vec![256; 8]) < m1.decode_iter(&vec![256; 8]));
+    }
+
+    #[test]
+    fn cpu_rate_is_plausible() {
+        // Fig 18-Left: one core handles ~10s of tokens within a prefill
+        // window for 7B-scale adapters.
+        let m = a10_7b();
+        let rate = m.cpu_core_token_rate(64);
+        assert!((50.0..5000.0).contains(&rate), "rate={rate}");
+    }
+}

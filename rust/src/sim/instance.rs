@@ -1,0 +1,522 @@
+//! A simulated LLM inference server with continuous batching (Fig 2)
+//! and the four serving modes of §7.1: CACHED (oracle), ONDMD
+//! (on-demand loading), S-LoRA (on-demand + MBGMV), and CARASERVE
+//! (CPU-assisted overlap).
+
+use std::collections::VecDeque;
+
+use super::gpu::GpuModel;
+use super::workload::WorkloadRequest;
+use crate::model::LoraSpec;
+use crate::perfmodel::KernelKind;
+
+/// Serving backend mode (the baselines of §7.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServingMode {
+    /// All adapters pre-cached in unlimited GPU memory (upper bound).
+    Cached,
+    /// Load on demand; cold-start blocks prefill (Punica-style, BGMV).
+    OnDemand,
+    /// Load on demand with the MBGMV kernel (S-LoRA).
+    SLora,
+    /// CPU-assisted overlap of loading and prefill (this paper).
+    CaraServe,
+}
+
+impl ServingMode {
+    /// The GPU LoRA kernel each mode uses (§7.1: all baselines except
+    /// S-LoRA use BGMV for a fair single-GPU comparison).
+    pub fn kernel(&self) -> KernelKind {
+        match self {
+            ServingMode::SLora => KernelKind::Mbgmv,
+            _ => KernelKind::Bgmv,
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServingMode::Cached => "cached",
+            ServingMode::OnDemand => "ondmd",
+            ServingMode::SLora => "s-lora",
+            ServingMode::CaraServe => "caraserve",
+        }
+    }
+}
+
+/// Per-request bookkeeping inside an instance.
+#[derive(Debug, Clone)]
+pub struct SimReq {
+    pub req: WorkloadRequest,
+    /// Context length so far (tokens in KV cache).
+    pub ctx: usize,
+    /// Output tokens generated so far.
+    pub generated: usize,
+    /// Time of first emitted token (set at prefill-iteration end).
+    pub first_token: Option<f64>,
+    /// Completion time.
+    pub finish: Option<f64>,
+    /// Cold-start seconds this request was exposed to.
+    pub cold_start: f64,
+    /// Per-token emission times (for time-per-token CDFs).
+    pub token_times: Vec<f64>,
+}
+
+impl SimReq {
+    fn new(req: WorkloadRequest) -> SimReq {
+        SimReq {
+            req,
+            ctx: 0,
+            generated: 0,
+            first_token: None,
+            finish: None,
+            cold_start: 0.0,
+            token_times: Vec::new(),
+        }
+    }
+}
+
+/// Device adapter cache with LRU eviction (capacity in adapter count;
+/// the paper's systems bound adapter memory on the GPU).
+///
+/// Stamp-based LRU: `touch`/`contains` are O(1); the O(n) victim scan
+/// only runs on a cold insert at capacity (was an O(n)-per-touch
+/// VecDeque scan before the §Perf pass).
+#[derive(Debug, Clone)]
+pub struct AdapterCache {
+    capacity: usize,
+    clock: u64,
+    /// adapter id → last-use stamp.
+    stamps: std::collections::HashMap<u64, u64>,
+}
+
+impl AdapterCache {
+    /// Cache holding up to `capacity` adapters (usize::MAX ⇒ unlimited).
+    pub fn new(capacity: usize) -> AdapterCache {
+        AdapterCache {
+            capacity,
+            clock: 0,
+            stamps: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Is the adapter resident? (Non-mutating.)
+    pub fn contains(&self, id: u64) -> bool {
+        self.stamps.contains_key(&id)
+    }
+
+    /// Is the adapter resident? (Touches LRU position on hit.)
+    pub fn touch(&mut self, id: u64) -> bool {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(stamp) = self.stamps.get_mut(&id) {
+            *stamp = clock;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Insert after a load; evicts the least-recently used if full.
+    pub fn insert(&mut self, id: u64) {
+        if self.touch(id) {
+            return;
+        }
+        if self.stamps.len() >= self.capacity {
+            if let Some((&victim, _)) =
+                self.stamps.iter().min_by_key(|&(_, &stamp)| stamp)
+            {
+                self.stamps.remove(&victim);
+            }
+        }
+        self.clock += 1;
+        self.stamps.insert(id, self.clock);
+    }
+
+    /// Number of resident adapters.
+    pub fn len(&self) -> usize {
+        self.stamps.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.stamps.is_empty()
+    }
+}
+
+/// One iteration's record (Fig 11's per-iteration latency data).
+#[derive(Debug, Clone, Copy)]
+pub struct IterRecord {
+    pub is_prefill: bool,
+    pub duration: f64,
+}
+
+/// A simulated inference server.
+pub struct SimInstance {
+    pub id: usize,
+    pub model: GpuModel,
+    pub mode: ServingMode,
+    /// Max requests in the running batch.
+    pub max_batch: usize,
+    /// Host cores available to CPU-LoRA (CaraServe mode).
+    pub cpu_cores: usize,
+    /// Device adapter cache.
+    pub cache: AdapterCache,
+    /// Queue of routed-but-not-prefilled requests.
+    pub queue: VecDeque<SimReq>,
+    /// Running (decoding) batch.
+    pub running: Vec<SimReq>,
+    /// Completed requests.
+    pub done: Vec<SimReq>,
+    /// Iteration log.
+    pub iters: Vec<IterRecord>,
+    /// Whether an iteration is in flight.
+    pub busy: bool,
+    /// Requests admitted by the in-flight prefill iteration.
+    pending_prefill: Vec<SimReq>,
+    /// Duration of the in-flight iteration.
+    pending_duration: f64,
+    /// Cold-start seconds the in-flight prefill iteration exposes to the
+    /// *blocked* running requests (Fig 2: every arrival's adapter load
+    /// delays all in-flight decoding — the cumulative effect Fig 3-Left
+    /// measures).
+    pending_cold_exposure: f64,
+}
+
+impl SimInstance {
+    /// New instance in the given mode.
+    pub fn new(
+        id: usize,
+        model: GpuModel,
+        mode: ServingMode,
+        max_batch: usize,
+        cpu_cores: usize,
+        cache_capacity: usize,
+    ) -> SimInstance {
+        let capacity = if mode == ServingMode::Cached {
+            usize::MAX
+        } else {
+            cache_capacity
+        };
+        SimInstance {
+            id,
+            model,
+            mode,
+            max_batch,
+            cpu_cores,
+            cache: AdapterCache::new(capacity),
+            queue: VecDeque::new(),
+            running: Vec::new(),
+            done: Vec::new(),
+            iters: Vec::new(),
+            busy: false,
+            pending_prefill: Vec::new(),
+            pending_duration: 0.0,
+            pending_cold_exposure: 0.0,
+        }
+    }
+
+    /// Enqueue an arrival (already routed to this instance).
+    pub fn enqueue(&mut self, req: WorkloadRequest) {
+        self.queue.push_back(SimReq::new(req));
+    }
+
+    /// Ranks of the running batch (scheduler stats).
+    pub fn running_ranks(&self) -> Vec<usize> {
+        self.running.iter().map(|r| r.req.rank).collect()
+    }
+
+    /// Ranks of the queued requests (scheduler stats).
+    pub fn queued_ranks(&self) -> Vec<usize> {
+        self.queue.iter().map(|r| r.req.rank).collect()
+    }
+
+    /// Is there work to start?
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || !self.running.is_empty()
+    }
+
+    /// Begin the next iteration at time `now`; returns its duration.
+    /// New arrivals preempt decoding (Fig 2): if the queue is non-empty
+    /// and the batch has room, a prefill iteration runs; otherwise a
+    /// decode iteration.
+    pub fn start_iteration(&mut self, now: f64) -> f64 {
+        assert!(!self.busy, "iteration already in flight");
+        assert!(self.has_work(), "no work");
+        self.busy = true;
+        if !self.queue.is_empty() && self.running.len() < self.max_batch {
+            self.start_prefill(now)
+        } else {
+            self.start_decode()
+        }
+    }
+
+    fn start_prefill(&mut self, _now: f64) -> f64 {
+        let room = self.max_batch - self.running.len();
+        let admit = room.min(self.queue.len());
+        let mut duration = 0.0;
+        let mut cold_exposure = 0.0;
+        let mut pending: Vec<SimReq> = Vec::with_capacity(admit);
+        // Count the cold admits first so CaraServe splits its host cores.
+        let cold_admits = self
+            .queue
+            .iter()
+            .take(admit)
+            .filter(|r| {
+                self.mode != ServingMode::Cached
+                    && !self.cache.contains(r.req.adapter)
+            })
+            .count()
+            .max(1);
+        for _ in 0..admit {
+            let mut sr = self.queue.pop_front().unwrap();
+            let spec =
+                LoraSpec::standard(sr.req.adapter, sr.req.rank, &self.model.cfg.name);
+            let resident = self.cache.touch(sr.req.adapter);
+            let load = if resident || self.mode == ServingMode::Cached {
+                0.0
+            } else {
+                self.model.adapter_load(&spec)
+            };
+            let gpu_pre = self.model.prefill(sr.req.prompt_len);
+            let (cost, cold) = match self.mode {
+                ServingMode::Cached => (gpu_pre, 0.0),
+                ServingMode::OnDemand | ServingMode::SLora => (load + gpu_pre, load),
+                ServingMode::CaraServe => {
+                    if load == 0.0 {
+                        (gpu_pre, 0.0)
+                    } else {
+                        let cores = (self.cpu_cores / cold_admits).max(1);
+                        self.model.overlapped_prefill(
+                            sr.req.prompt_len,
+                            sr.req.rank,
+                            cores,
+                            load,
+                        )
+                    }
+                }
+            };
+            self.cache.insert(sr.req.adapter);
+            sr.cold_start += cold;
+            cold_exposure += cold;
+            duration += cost;
+            pending.push(sr);
+        }
+        // Stash admits; their state is applied at iteration end.
+        self.pending_prefill = pending;
+        self.pending_cold_exposure = cold_exposure;
+        self.iters.push(IterRecord {
+            is_prefill: true,
+            duration,
+        });
+        self.pending_duration = duration;
+        duration
+    }
+
+    fn start_decode(&mut self) -> f64 {
+        let ctx: Vec<usize> = self.running.iter().map(|r| r.ctx).collect();
+        let ranks = self.running_ranks();
+        let duration = self.model.decode_iter(&ctx)
+            + self
+                .model
+                .lora_decode_overhead(self.mode.kernel(), &ranks);
+        self.iters.push(IterRecord {
+            is_prefill: false,
+            duration,
+        });
+        self.pending_duration = duration;
+        duration
+    }
+
+    /// Complete the in-flight iteration at time `now` (= start + the
+    /// duration returned by [`Self::start_iteration`]).
+    pub fn finish_iteration(&mut self, now: f64) {
+        assert!(self.busy, "no iteration in flight");
+        self.busy = false;
+        if !self.pending_prefill.is_empty() {
+            // The blocked in-flight requests absorbed this iteration's
+            // cold-start time too (Fig 2's cumulative delay).
+            for r in self.running.iter_mut() {
+                r.cold_start += self.pending_cold_exposure;
+            }
+            self.pending_cold_exposure = 0.0;
+            // Prefill completion: admitted requests emit their first token.
+            for mut sr in std::mem::take(&mut self.pending_prefill) {
+                sr.first_token = Some(now);
+                sr.token_times.push(now);
+                sr.ctx = sr.req.prompt_len;
+                sr.generated = 1;
+                if sr.generated >= sr.req.output_len {
+                    sr.finish = Some(now);
+                    self.done.push(sr);
+                } else {
+                    self.running.push(sr);
+                }
+            }
+        } else {
+            // Decode completion: everyone emits one token.
+            let mut still_running = Vec::with_capacity(self.running.len());
+            for mut sr in self.running.drain(..) {
+                sr.generated += 1;
+                sr.ctx += 1;
+                sr.token_times.push(now);
+                if sr.generated >= sr.req.output_len {
+                    sr.finish = Some(now);
+                    self.done.push(sr);
+                } else {
+                    still_running.push(sr);
+                }
+            }
+            self.running = still_running;
+        }
+    }
+
+    /// Duration of the iteration currently in flight.
+    pub fn pending_duration(&self) -> f64 {
+        self.pending_duration
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+    use crate::model::LlamaConfig;
+
+    fn instance(mode: ServingMode) -> SimInstance {
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        SimInstance::new(0, model, mode, 32, 8, 64)
+    }
+
+    fn req(id: u64, adapter: u64, prompt: usize, output: usize) -> WorkloadRequest {
+        WorkloadRequest {
+            id,
+            arrival: 0.0,
+            adapter,
+            rank: 64,
+            prompt_len: prompt,
+            output_len: output,
+        }
+    }
+
+    fn run_to_completion(inst: &mut SimInstance) -> f64 {
+        let mut t = 0.0;
+        let mut guard = 0;
+        while inst.has_work() {
+            let d = inst.start_iteration(t);
+            t += d;
+            inst.finish_iteration(t);
+            guard += 1;
+            assert!(guard < 100_000, "non-terminating sim");
+        }
+        t
+    }
+
+    #[test]
+    fn single_request_lifecycle() {
+        let mut inst = instance(ServingMode::Cached);
+        inst.enqueue(req(1, 1, 64, 5));
+        let end = run_to_completion(&mut inst);
+        assert_eq!(inst.done.len(), 1);
+        let r = &inst.done[0];
+        assert_eq!(r.generated, 5);
+        assert_eq!(r.token_times.len(), 5);
+        assert!(r.first_token.unwrap() > 0.0);
+        assert!((r.finish.unwrap() - end).abs() < 1e-12);
+        // Cached mode: zero cold start.
+        assert_eq!(r.cold_start, 0.0);
+        // 1 prefill + 4 decode iterations.
+        assert_eq!(inst.iters.iter().filter(|i| i.is_prefill).count(), 1);
+        assert_eq!(inst.iters.iter().filter(|i| !i.is_prefill).count(), 4);
+    }
+
+    #[test]
+    fn ondemand_pays_cold_start_caraserve_hides_most() {
+        let mut on = instance(ServingMode::OnDemand);
+        on.enqueue(req(1, 1, 64, 5));
+        run_to_completion(&mut on);
+        let cold_on = on.done[0].cold_start;
+        assert!(cold_on > 5e-3, "ondemand cold={cold_on}");
+
+        let mut cara = instance(ServingMode::CaraServe);
+        cara.enqueue(req(1, 1, 64, 5));
+        run_to_completion(&mut cara);
+        let cold_cara = cara.done[0].cold_start;
+        assert!(
+            cold_cara < cold_on * 0.7,
+            "cara={cold_cara} on={cold_on}"
+        );
+    }
+
+    #[test]
+    fn warm_adapter_has_no_cold_start() {
+        let mut inst = instance(ServingMode::OnDemand);
+        inst.enqueue(req(1, 7, 32, 2));
+        run_to_completion(&mut inst);
+        // Same adapter again: now resident.
+        inst.enqueue(req(2, 7, 32, 2));
+        run_to_completion(&mut inst);
+        assert_eq!(inst.done[1].cold_start, 0.0);
+    }
+
+    #[test]
+    fn lru_eviction_causes_recold() {
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let mut inst = SimInstance::new(0, model, ServingMode::OnDemand, 32, 8, 2);
+        for (i, ad) in [(1u64, 1u64), (2, 2), (3, 3)] {
+            inst.enqueue(req(i, ad, 16, 1));
+            run_to_completion(&mut inst);
+        }
+        // Adapter 1 was evicted by 3 (capacity 2) → cold again.
+        inst.enqueue(req(4, 1, 16, 1));
+        run_to_completion(&mut inst);
+        assert!(inst.done[3].cold_start > 0.0);
+    }
+
+    #[test]
+    fn new_arrival_preempts_decode() {
+        let mut inst = instance(ServingMode::Cached);
+        inst.enqueue(req(1, 1, 64, 50));
+        let d1 = inst.start_iteration(0.0);
+        inst.finish_iteration(d1);
+        // Request 1 decoding; request 2 arrives.
+        inst.enqueue(req(2, 2, 64, 50));
+        let d2 = inst.start_iteration(d1);
+        // Must be a prefill iteration (preempts decode).
+        assert!(inst.iters.last().unwrap().is_prefill);
+        inst.finish_iteration(d1 + d2);
+        assert_eq!(inst.running.len(), 2);
+    }
+
+    #[test]
+    fn batch_respects_max_batch() {
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let mut inst = SimInstance::new(0, model, ServingMode::Cached, 2, 8, 64);
+        for i in 0..5 {
+            inst.enqueue(req(i, i as u64, 16, 10));
+        }
+        let d = inst.start_iteration(0.0);
+        inst.finish_iteration(d);
+        assert_eq!(inst.running.len(), 2);
+        assert_eq!(inst.queue.len(), 3);
+    }
+
+    #[test]
+    fn slora_uses_mbgmv_kernel() {
+        assert_eq!(ServingMode::SLora.kernel(), KernelKind::Mbgmv);
+        assert_eq!(ServingMode::CaraServe.kernel(), KernelKind::Bgmv);
+    }
+
+    #[test]
+    fn adapter_cache_lru_semantics() {
+        let mut c = AdapterCache::new(2);
+        c.insert(1);
+        c.insert(2);
+        assert!(c.touch(1)); // 1 now MRU
+        c.insert(3); // evicts 2
+        assert!(c.touch(1));
+        assert!(!c.touch(2));
+        assert!(c.touch(3));
+        assert_eq!(c.len(), 2);
+    }
+}

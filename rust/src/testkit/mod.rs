@@ -1,0 +1,8 @@
+//! Mini property-testing framework (the offline vendor set has no
+//! `proptest`): random-input generation with automatic shrinking on
+//! failure. Used by `rust/tests/prop_*.rs` to check coordinator
+//! invariants (routing, batching, KV-cache accounting).
+
+pub mod prop;
+
+pub use prop::{forall, Config, Gen};

@@ -1,0 +1,271 @@
+//! Property-based testing: generators over a seeded PRNG + greedy
+//! shrinking. A property is a `Fn(&T) -> Result<(), String>`; on failure
+//! the framework shrinks the input via `Shrink` candidates and panics
+//! with the minimal counterexample.
+
+use crate::util::rng::Rng;
+
+/// A value generator: produces a `T` from the PRNG.
+pub struct Gen<T> {
+    f: Box<dyn Fn(&mut Rng) -> T>,
+}
+
+impl<T: 'static> Gen<T> {
+    /// Wrap a closure as a generator.
+    pub fn new(f: impl Fn(&mut Rng) -> T + 'static) -> Self {
+        Self { f: Box::new(f) }
+    }
+
+    /// Generate one value.
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.f)(rng)
+    }
+
+    /// Map the generated value.
+    pub fn map<U: 'static>(self, g: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |rng| g(self.sample(rng)))
+    }
+}
+
+/// Generator for usize in `[lo, hi)`.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    Gen::new(move |rng| rng.range(lo, hi))
+}
+
+/// Generator for f64 in `[lo, hi)`.
+pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(move |rng| rng.uniform(lo, hi))
+}
+
+/// Generator for a Vec of `n_lo..n_hi` elements from `elem`.
+pub fn vec_of<T: 'static>(elem: Gen<T>, n_lo: usize, n_hi: usize) -> Gen<Vec<T>> {
+    Gen::new(move |rng| {
+        let n = rng.range(n_lo, n_hi);
+        (0..n).map(|_| elem.sample(rng)).collect()
+    })
+}
+
+/// Generator picking uniformly from a fixed set.
+pub fn one_of<T: Clone + 'static>(items: Vec<T>) -> Gen<T> {
+    assert!(!items.is_empty());
+    Gen::new(move |rng| items[rng.range(0, items.len())].clone())
+}
+
+/// Types that can propose smaller candidate values for shrinking.
+pub trait Shrink: Sized + Clone {
+    /// Candidate strictly-"smaller" values, most aggressive first.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+            if self.fract() != 0.0 {
+                out.push(self.trunc());
+            }
+        }
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // Remove halves, then single elements, then shrink each element.
+        out.push(Vec::new());
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        if self.len() <= 16 {
+            for i in 0..self.len() {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+            for i in 0..self.len() {
+                for cand in self[i].shrink() {
+                    let mut v = self.clone();
+                    v[i] = cand;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<(A, B)> {
+        let mut out: Vec<(A, B)> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// PRNG seed (change to explore a different corner of the space).
+    pub seed: u64,
+    /// Max shrink steps.
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 256,
+            seed: 0xCA7A_5E7E,
+            max_shrink: 2_000,
+        }
+    }
+}
+
+/// Run `prop` against `cases` random values from `gen`; on failure,
+/// greedily shrink and panic with the minimal counterexample.
+pub fn forall<T: Shrink + std::fmt::Debug + 'static>(
+    cfg: &Config,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let value = gen.sample(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // Shrink.
+            let mut best = value;
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: loop {
+                for cand in best.shrink() {
+                    steps += 1;
+                    if steps > cfg.max_shrink {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {seed:#x}):\n  input: {best:?}\n  error: {best_msg}",
+                seed = cfg.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let cfg = Config {
+            cases: 100,
+            ..Default::default()
+        };
+        forall(&cfg, &usize_in(0, 1000), |&x| {
+            if x < 1000 {
+                Ok(())
+            } else {
+                Err("oob".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let cfg = Config::default();
+        let gen = usize_in(0, 10_000);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            forall(&cfg, &gen, |&x| {
+                if x < 50 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} >= 50"))
+                }
+            });
+        }));
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Greedy shrinking should land on exactly 50.
+        assert!(msg.contains("input: 50"), "{msg}");
+    }
+
+    #[test]
+    fn vec_shrinking_reduces_length() {
+        let cfg = Config::default();
+        let gen = vec_of(usize_in(0, 100), 0, 20);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            forall(&cfg, &gen, |v: &Vec<usize>| {
+                if v.len() < 3 {
+                    Ok(())
+                } else {
+                    Err("too long".into())
+                }
+            });
+        }));
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Minimal failing vec has exactly 3 elements, all shrunk to 0.
+        assert!(msg.contains("input: [0, 0, 0]"), "{msg}");
+    }
+
+    #[test]
+    fn generators_are_deterministic_given_seed() {
+        let gen = vec_of(usize_in(0, 100), 1, 10);
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        assert_eq!(gen.sample(&mut r1), gen.sample(&mut r2));
+    }
+
+    #[test]
+    fn one_of_and_map() {
+        let gen = one_of(vec![8usize, 16, 32, 64]).map(|r| r * 2);
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let v = gen.sample(&mut rng);
+            assert!([16, 32, 64, 128].contains(&v));
+        }
+    }
+}

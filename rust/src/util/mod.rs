@@ -1,0 +1,10 @@
+//! Foundation utilities built in-repo because the offline vendor set has
+//! no `rand`, `serde`, `clap`, or `statrs`: PRNGs and distribution
+//! samplers ([`rng`]), descriptive statistics and least-squares fitting
+//! ([`stats`]), a minimal JSON codec ([`json`]), and a tiny CLI argument
+//! parser ([`cli`]).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,388 @@
+//! Descriptive statistics, empirical CDFs, and ordinary least squares.
+//!
+//! Used by the metrics layer (TTFT / time-per-token / request-latency
+//! percentiles, CDF tables for the paper's figures) and by the
+//! performance-model fitter (§5 of the paper: linear models with R²).
+
+/// Summary of a sample: count, mean, std, min/max, percentiles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns `None` for an empty sample.
+    pub fn of(xs: &[f64]) -> Option<Summary> {
+        if xs.is_empty() {
+            return None;
+        }
+        let mut sorted: Vec<f64> = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let count = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / count as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / count as f64;
+        Some(Summary {
+            count,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: percentile_sorted(&sorted, 50.0),
+            p90: percentile_sorted(&sorted, 90.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
+            max: sorted[count - 1],
+        })
+    }
+}
+
+/// Percentile (0..=100) of an already-sorted sample, with linear
+/// interpolation between closest ranks.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Percentile of an unsorted sample (copies + sorts).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, p)
+}
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// An empirical CDF: sorted values + the fraction ≤ each value.
+/// `points(n)` returns `n` evenly spaced (value, cum_fraction) pairs for
+/// plotting the paper's CDF figures (Figs 10, 13, 15, 19, 20).
+#[derive(Debug, Clone)]
+pub struct Ecdf {
+    sorted: Vec<f64>,
+}
+
+impl Ecdf {
+    /// Build from a sample (empty samples allowed; `points` then empty).
+    pub fn new(xs: &[f64]) -> Self {
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self { sorted }
+    }
+
+    /// Fraction of the sample ≤ `x`.
+    pub fn eval(&self, x: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        self.sorted.partition_point(|&v| v <= x) as f64 / self.sorted.len() as f64
+    }
+
+    /// `n` (value, fraction) pairs at evenly spaced quantiles.
+    pub fn points(&self, n: usize) -> Vec<(f64, f64)> {
+        if self.sorted.is_empty() || n == 0 {
+            return Vec::new();
+        }
+        (0..n)
+            .map(|i| {
+                let q = (i as f64 + 1.0) / n as f64;
+                let v = percentile_sorted(&self.sorted, q * 100.0);
+                (v, q)
+            })
+            .collect()
+    }
+
+    /// Number of underlying samples.
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// True if no samples.
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+}
+
+/// A fixed-width histogram over `[lo, hi)` with `bins` buckets
+/// (under/overflow clamped into the edge buckets).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    /// New histogram covering `[lo, hi)` with `bins` buckets.
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Self {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            total: 0,
+        }
+    }
+
+    /// Record one observation.
+    pub fn record(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let idx = if x < self.lo {
+            0
+        } else if x >= self.hi {
+            bins - 1
+        } else {
+            (((x - self.lo) / (self.hi - self.lo)) * bins as f64) as usize
+        };
+        self.counts[idx.min(bins - 1)] += 1;
+        self.total += 1;
+    }
+
+    /// (bucket_midpoint, fraction) rows.
+    pub fn normalized(&self) -> Vec<(f64, f64)> {
+        let width = (self.hi - self.lo) / self.counts.len() as f64;
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                let mid = self.lo + width * (i as f64 + 0.5);
+                let frac = if self.total == 0 {
+                    0.0
+                } else {
+                    c as f64 / self.total as f64
+                };
+                (mid, frac)
+            })
+            .collect()
+    }
+
+    /// Total number of recorded observations.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+}
+
+/// Result of a simple (possibly multivariate) least-squares fit.
+#[derive(Debug, Clone)]
+pub struct LinearFit {
+    /// Coefficients for each feature column.
+    pub coef: Vec<f64>,
+    /// Intercept term.
+    pub intercept: f64,
+    /// Coefficient of determination on the training data.
+    pub r2: f64,
+}
+
+impl LinearFit {
+    /// Predict for one feature row.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.coef.len());
+        self.intercept + x.iter().zip(&self.coef).map(|(a, b)| a * b).sum::<f64>()
+    }
+}
+
+/// Ordinary least squares for `y ≈ intercept + coef·x`.
+///
+/// `xs` is row-major: one feature row per observation. Solves the normal
+/// equations by Gaussian elimination with partial pivoting — the perf
+/// models here have 1–2 features, so numerics are not a concern.
+pub fn ols(xs: &[Vec<f64>], ys: &[f64]) -> Option<LinearFit> {
+    let n = xs.len();
+    if n == 0 || n != ys.len() {
+        return None;
+    }
+    let k = xs[0].len();
+    if xs.iter().any(|r| r.len() != k) {
+        return None;
+    }
+    let dim = k + 1; // features + intercept
+    if n < dim {
+        return None;
+    }
+
+    // Build X^T X and X^T y with an implicit leading 1s column.
+    let mut a = vec![vec![0.0f64; dim]; dim];
+    let mut b = vec![0.0f64; dim];
+    for (row, &y) in xs.iter().zip(ys) {
+        let mut ext = Vec::with_capacity(dim);
+        ext.push(1.0);
+        ext.extend_from_slice(row);
+        for i in 0..dim {
+            b[i] += ext[i] * y;
+            for j in 0..dim {
+                a[i][j] += ext[i] * ext[j];
+            }
+        }
+    }
+
+    let sol = solve(&mut a, &mut b)?;
+    let intercept = sol[0];
+    let coef = sol[1..].to_vec();
+
+    // R² on the training data.
+    let y_mean = mean(ys);
+    let mut ss_res = 0.0;
+    let mut ss_tot = 0.0;
+    for (row, &y) in xs.iter().zip(ys) {
+        let pred =
+            intercept + row.iter().zip(&coef).map(|(a, b)| a * b).sum::<f64>();
+        ss_res += (y - pred) * (y - pred);
+        ss_tot += (y - y_mean) * (y - y_mean);
+    }
+    let r2 = if ss_tot == 0.0 {
+        1.0
+    } else {
+        1.0 - ss_res / ss_tot
+    };
+
+    Some(LinearFit {
+        coef,
+        intercept,
+        r2,
+    })
+}
+
+/// Gaussian elimination with partial pivoting; consumes its inputs.
+fn solve(a: &mut [Vec<f64>], b: &mut [f64]) -> Option<Vec<f64>> {
+    let n = b.len();
+    for col in 0..n {
+        // Pivot.
+        let mut pivot = col;
+        for row in col + 1..n {
+            if a[row][col].abs() > a[pivot][col].abs() {
+                pivot = row;
+            }
+        }
+        if a[pivot][col].abs() < 1e-12 {
+            return None; // singular
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        // Eliminate below.
+        for row in col + 1..n {
+            let f = a[row][col] / a[col][col];
+            for j in col..n {
+                a[row][j] -= f * a[col][j];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    // Back-substitute.
+    let mut x = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut acc = b[col];
+        for j in col + 1..n {
+            acc -= a[col][j] * x[j];
+        }
+        x[col] = acc / a[col][col];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.count, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert!((percentile(&xs, 0.0) - 10.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 40.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ecdf_eval_and_points() {
+        let e = Ecdf::new(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((e.eval(0.5) - 0.0).abs() < 1e-12);
+        assert!((e.eval(2.0) - 0.5).abs() < 1e-12);
+        assert!((e.eval(10.0) - 1.0).abs() < 1e-12);
+        let pts = e.points(4);
+        assert_eq!(pts.len(), 4);
+        assert!((pts[3].1 - 1.0).abs() < 1e-12);
+        assert!((pts[3].0 - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_and_clamps() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.record(-5.0); // clamps to bucket 0
+        h.record(0.5);
+        h.record(9.5);
+        h.record(50.0); // clamps to last bucket
+        assert_eq!(h.total(), 4);
+        let rows = h.normalized();
+        assert!((rows[0].1 - 0.5).abs() < 1e-12);
+        assert!((rows[9].1 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ols_recovers_exact_line() {
+        // y = 3 + 2a - b
+        let xs: Vec<Vec<f64>> = (0..20)
+            .map(|i| vec![i as f64, (i * i % 7) as f64])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|r| 3.0 + 2.0 * r[0] - r[1]).collect();
+        let fit = ols(&xs, &ys).unwrap();
+        assert!((fit.intercept - 3.0).abs() < 1e-8);
+        assert!((fit.coef[0] - 2.0).abs() < 1e-8);
+        assert!((fit.coef[1] + 1.0).abs() < 1e-8);
+        assert!(fit.r2 > 0.999999);
+        assert!((fit.predict(&[5.0, 1.0]) - 12.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn ols_with_noise_high_r2() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let xs: Vec<Vec<f64>> = (0..200).map(|_| vec![rng.uniform(0.0, 100.0)]).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|r| 1.5 * r[0] + 4.0 + rng.normal_with(0.0, 1.0))
+            .collect();
+        let fit = ols(&xs, &ys).unwrap();
+        assert!((fit.coef[0] - 1.5).abs() < 0.05, "coef={:?}", fit.coef);
+        assert!(fit.r2 > 0.99, "r2={}", fit.r2);
+    }
+
+    #[test]
+    fn ols_degenerate_cases() {
+        assert!(ols(&[], &[]).is_none());
+        // Singular: identical feature rows.
+        let xs = vec![vec![1.0], vec![1.0], vec![1.0]];
+        let ys = vec![1.0, 2.0, 3.0];
+        assert!(ols(&xs, &ys).is_none());
+    }
+}

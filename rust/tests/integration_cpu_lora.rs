@@ -1,0 +1,136 @@
+//! Integration: the CPU-assisted LoRA engine across its real substrates
+//! (shared-memory IPC + worker pool + profiling-guided split) and the
+//! Rust↔Pallas kernel semantic equivalence.
+
+use std::sync::Arc;
+
+use caraserve::cpu_lora::{AdapterTable, CoreProfile, CpuLoraEngine};
+use caraserve::ipc::{Doorbell, SlotChannel};
+use caraserve::kernels::{bgmv_padded, mbgmv, AdapterWeights};
+use caraserve::model::TargetMatrix;
+use caraserve::util::rng::Rng;
+
+#[test]
+fn engine_matches_direct_kernel_over_many_shapes() {
+    let hidden = 64;
+    let table = Arc::new(AdapterTable::new());
+    for id in 0..4 {
+        table.install_synthetic(id, hidden, 4 + (id as usize % 3) * 2);
+    }
+    let profile = CoreProfile::from_rate(hidden, 8, 1600.0, 10.0); // c = 16
+    let engine = CpuLoraEngine::new(4, hidden, 512, table.clone(), profile).unwrap();
+
+    let mut rng = Rng::new(11);
+    for &n_tok in &[1usize, 7, 16, 33, 64, 127] {
+        for adapter in 0..4u64 {
+            let x: Vec<f32> = (0..n_tok * hidden).map(|_| rng.f32() - 0.5).collect();
+            let got = engine.apply(adapter, TargetMatrix::Q, n_tok, &x);
+            // Direct single-shot reference.
+            let weights = table.get(adapter).unwrap();
+            let ad = &weights[0];
+            let mut want = vec![0.0f32; n_tok * hidden];
+            let mut scratch = vec![0.0f32; n_tok * ad.rank];
+            caraserve::kernels::lora_apply(
+                n_tok, hidden, hidden, ad.rank, &x, &ad.a, &ad.b, &mut want,
+                &mut scratch,
+            );
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "n={n_tok} adapter={adapter}");
+            }
+        }
+    }
+}
+
+#[test]
+fn rust_bgmv_and_mbgmv_agree_on_zero_padded_stacks() {
+    // Mirrors python/tests/test_kernel.py::test_bgmv_equals_mbgmv: the
+    // padded and padding-free kernels agree when stacks are zero-padded
+    // beyond true rank — the numerical basis for the Fig 4 cost split.
+    let h = 48;
+    let ranks = [2usize, 8, 5, 1];
+    let adapters: Vec<AdapterWeights> = ranks
+        .iter()
+        .enumerate()
+        .map(|(i, &r)| {
+            let mut a = AdapterWeights::synthetic(i as u64, h, h, 8);
+            // Zero beyond true rank r.
+            for row in 0..h {
+                for c in r..8 {
+                    a.a[row * 8 + c] = 0.0;
+                }
+            }
+            for rr in r..8 {
+                for c in 0..h {
+                    a.b[rr * h + c] = 0.0;
+                }
+            }
+            a
+        })
+        .collect();
+    let mut rng = Rng::new(3);
+    let indices: Vec<usize> = (0..12).map(|_| rng.range(0, 4)).collect();
+    let x: Vec<f32> = (0..indices.len() * h).map(|_| rng.f32() - 0.5).collect();
+    let mut y1 = vec![0.0f32; indices.len() * h];
+    let mut y2 = vec![0.0f32; indices.len() * h];
+    bgmv_padded(&adapters, &indices, h, h, &x, &mut y1);
+    mbgmv(&adapters, &indices, h, h, &x, &mut y2);
+    for (a, b) in y1.iter().zip(&y2) {
+        assert!((a - b).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn shm_slot_survives_sustained_bidirectional_traffic() {
+    let (region, mut slots) = caraserve::ipc::shm::slot_channels(1, 1024).unwrap();
+    let region = Arc::new(region);
+    let ch = Arc::new(slots.remove(0));
+    let (ch2, keep) = (ch.clone(), region.clone());
+    let h = std::thread::spawn(move || {
+        let _k = keep;
+        let mut seen = 0u32;
+        let mut buf = Vec::new();
+        for _ in 0..2_000 {
+            seen = ch2.recv_request(seen, &mut buf);
+            let sum: f32 = buf.iter().sum();
+            ch2.send_response(&[sum]);
+        }
+    });
+    let mut resp = Vec::new();
+    let mut rng = Rng::new(5);
+    for i in 0..2_000 {
+        let n = rng.range(1, 1024);
+        let payload: Vec<f32> = vec![1.0; n];
+        let token = ch.send_request(&payload);
+        ch.recv_response(token, &mut resp);
+        assert_eq!(resp.len(), 1, "round {i}");
+        assert_eq!(resp[0], n as f32, "round {i}");
+    }
+    h.join().unwrap();
+}
+
+#[test]
+fn doorbell_fan_out_to_many_waiters() {
+    let bell = Arc::new(Doorbell::new());
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let b = bell.clone();
+            std::thread::spawn(move || b.wait_past(0))
+        })
+        .collect();
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    bell.ring();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), 1);
+    }
+}
+
+#[test]
+fn slot_channel_capacity_bytes_accounting() {
+    // bytes_needed must cover header + both payload directions.
+    let need = SlotChannel::bytes_needed(100);
+    assert!(need >= 2 * 100 * 4);
+    let region = caraserve::ipc::ShmRegion::new(need + 8).unwrap();
+    assert!(SlotChannel::at(&region, 0, 100).is_ok());
+    assert!(SlotChannel::at(&region, 8, 100).is_ok()); // exactly fits
+    assert!(SlotChannel::at(&region, 16, 100).is_err()); // off end
+}

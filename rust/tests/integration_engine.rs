@@ -1,0 +1,161 @@
+//! Integration: the full serving engine over the real PJRT runtime —
+//! continuous batching + paged KV + device slot cache + cold-start
+//! modes, end to end. Skips cleanly when artifacts aren't built.
+
+use std::path::PathBuf;
+
+use caraserve::model::LoraSpec;
+use caraserve::runtime::ModelRuntime;
+use caraserve::server::{ColdStartMode, EngineConfig, InferenceRequest, InferenceServer};
+use caraserve::util::rng::Rng;
+
+fn make_server(mode: ColdStartMode) -> Option<InferenceServer> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let runtime = ModelRuntime::load(&dir).expect("runtime");
+    let mut server = InferenceServer::new(
+        runtime,
+        EngineConfig {
+            cold_start: mode,
+            // Keep modeled loads small so the test runs fast but the
+            // serialize-vs-overlap distinction is still visible.
+            load_scale: 0.2,
+            ..Default::default()
+        },
+    )
+    .expect("server");
+    for id in 0..32u64 {
+        server.install_adapter(LoraSpec::standard(id, 8, "tiny"));
+    }
+    Some(server)
+}
+
+fn requests(n: usize, seed: u64) -> Vec<InferenceRequest> {
+    let mut rng = Rng::new(seed);
+    (0..n as u64)
+        .map(|id| InferenceRequest {
+            id,
+            adapter: rng.range(0, 32) as u64,
+            prompt: (0..rng.range(8, 30)).map(|_| rng.range(0, 1024) as i32).collect(),
+            max_new_tokens: rng.range(2, 8),
+        })
+        .collect()
+}
+
+#[test]
+fn serves_batch_to_completion_with_correct_outputs() {
+    let Some(mut server) = make_server(ColdStartMode::CaraServe) else {
+        return;
+    };
+    let reqs = requests(12, 7);
+    let expect: Vec<(u64, usize)> =
+        reqs.iter().map(|r| (r.id, r.max_new_tokens)).collect();
+    for r in reqs {
+        server.submit(r).unwrap();
+    }
+    server.run_until_idle().unwrap();
+
+    assert_eq!(server.outputs().len(), 12);
+    for (id, want_len) in expect {
+        let out = server
+            .outputs()
+            .iter()
+            .find(|o| o.id == id)
+            .unwrap_or_else(|| panic!("missing output {id}"));
+        assert_eq!(out.tokens.len(), want_len, "request {id}");
+        assert!(out.tokens.iter().all(|&t| (0..1024).contains(&t)));
+    }
+    // Metrics recorded for all.
+    assert_eq!(server.metrics().records().len(), 12);
+    assert_eq!(server.metrics().inflight(), 0);
+}
+
+#[test]
+fn greedy_output_independent_of_batching_and_mode() {
+    // The same request must produce the same tokens whether served alone
+    // (Cached) or batched with others under CaraServe — continuous
+    // batching must not change results.
+    let Some(mut solo) = make_server(ColdStartMode::Cached) else {
+        return;
+    };
+    let probe = InferenceRequest {
+        id: 1000,
+        adapter: 3,
+        prompt: (0..20).map(|i| (i * 31 + 5) % 1024).collect(),
+        max_new_tokens: 6,
+    };
+    solo.submit(probe.clone()).unwrap();
+    solo.run_until_idle().unwrap();
+    let want = solo.outputs()[0].tokens.clone();
+
+    let Some(mut busy) = make_server(ColdStartMode::CaraServe) else {
+        return;
+    };
+    for r in requests(6, 9) {
+        busy.submit(r).unwrap();
+    }
+    busy.submit(probe).unwrap();
+    busy.run_until_idle().unwrap();
+    let got = busy
+        .outputs()
+        .iter()
+        .find(|o| o.id == 1000)
+        .expect("probe output")
+        .tokens
+        .clone();
+    assert_eq!(got, want, "batching changed greedy output");
+}
+
+#[test]
+fn rejects_invalid_requests() {
+    let Some(mut server) = make_server(ColdStartMode::Cached) else {
+        return;
+    };
+    // Empty prompt.
+    assert!(server
+        .submit(InferenceRequest {
+            id: 1,
+            adapter: 0,
+            prompt: vec![],
+            max_new_tokens: 4
+        })
+        .is_err());
+    // Prompt over the largest bucket.
+    assert!(server
+        .submit(InferenceRequest {
+            id: 2,
+            adapter: 0,
+            prompt: vec![1; 65],
+            max_new_tokens: 4
+        })
+        .is_err());
+    // Zero generation budget.
+    assert!(server
+        .submit(InferenceRequest {
+            id: 3,
+            adapter: 0,
+            prompt: vec![1; 8],
+            max_new_tokens: 0
+        })
+        .is_err());
+}
+
+#[test]
+fn kv_pages_are_reclaimed_across_waves() {
+    let Some(mut server) = make_server(ColdStartMode::CaraServe) else {
+        return;
+    };
+    // Three waves of requests; page leaks would exhaust the pool.
+    for wave in 0..3 {
+        for r in requests(8, 100 + wave) {
+            let mut r = r;
+            r.id += wave * 1000;
+            server.submit(r).unwrap();
+        }
+        server.run_until_idle().unwrap();
+    }
+    assert_eq!(server.outputs().len(), 24);
+}

@@ -1,0 +1,144 @@
+//! Integration: the AOT artifacts → PJRT runtime path.
+//!
+//! Requires `make artifacts` to have run (skips cleanly otherwise so
+//! `cargo test` works on a fresh checkout).
+
+use std::path::PathBuf;
+
+use caraserve::runtime::ModelRuntime;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+// PJRT handles are thread-bound (Rc inside the xla crate), so each test
+// loads its own runtime; the test binary runs them on one thread anyway.
+fn load() -> Option<ModelRuntime> {
+    artifacts_dir().map(|d| ModelRuntime::load(&d).expect("runtime load"))
+}
+
+#[test]
+fn loads_and_compiles_all_artifacts() {
+    let Some(rt) = load() else { return };
+    assert_eq!(rt.hidden, 256);
+    assert_eq!(rt.layers, 4);
+    assert_eq!(rt.vocab, 1024);
+    assert!(!rt.manifest.prefill_buckets().is_empty());
+    assert!(!rt.manifest.decode_buckets().is_empty());
+}
+
+#[test]
+fn prefill_produces_finite_logits_and_kv() {
+    let Some(rt) = load() else { return };
+    let prompt: Vec<i32> = (0..16).map(|i| (i * 37) % 1024).collect();
+    let out = rt
+        .prefill(&[2], &[prompt], &[16])
+        .expect("prefill");
+    let (bb, bs) = out.bucket;
+    assert!(bb >= 1 && bs >= 16);
+    assert_eq!(out.logits.len(), bb * rt.vocab);
+    assert_eq!(out.k_cache.len(), rt.layers * bb * bs * rt.hidden);
+    assert!(out.logits.iter().all(|v| v.is_finite()));
+    assert!(out.k_cache.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn decode_step_consistent_with_prefill_extension() {
+    // THE cross-layer correctness check: greedy-decoding one token via
+    // the decode artifact must match prefilling the extended prompt via
+    // the prefill artifact (mirrors python/tests/test_model.py).
+    let Some(rt) = load() else { return };
+    let prompt: Vec<i32> = (0..16).map(|i| (i * 13 + 7) % 1024).collect();
+    let pre = rt.prefill(&[1], &[prompt.clone()], &[16]).expect("prefill");
+    let first = rt.argmax_row(&pre.logits, 0);
+
+    // Assemble the decode cache: pad prefill KV [L,1,16,H] → [L,B,M,H].
+    let (bb, m) = rt.manifest.pick_decode_bucket(1).unwrap();
+    let (pb, ps) = pre.bucket;
+    let mut k = vec![0.0f32; rt.layers * bb * m * rt.hidden];
+    let mut v = vec![0.0f32; rt.layers * bb * m * rt.hidden];
+    for layer in 0..rt.layers {
+        for t in 0..16 {
+            let src = ((layer * pb) * ps + t) * rt.hidden;
+            let dst = ((layer * bb) * m + t) * rt.hidden;
+            k[dst..dst + rt.hidden]
+                .copy_from_slice(&pre.k_cache[src..src + rt.hidden]);
+            v[dst..dst + rt.hidden]
+                .copy_from_slice(&pre.v_cache[src..src + rt.hidden]);
+        }
+    }
+    let dec = rt.decode(&[1], &[first], &[16], &k, &v).expect("decode");
+    let dec_next = rt.argmax_row(&dec.logits, 0);
+
+    // Reference: prefill the 17-token prompt.
+    let mut ext = prompt;
+    ext.push(first);
+    let pre2 = rt.prefill(&[1], &[ext], &[17]).expect("prefill ext");
+    let ref_next = rt.argmax_row(&pre2.logits, 0);
+    assert_eq!(dec_next, ref_next, "decode vs prefill-extension mismatch");
+
+    // Logits agree numerically, not just argmax.
+    let mut max_err = 0.0f32;
+    for i in 0..rt.vocab {
+        let a = dec.logits[i];
+        let b = pre2.logits[i];
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 1e-2, "logits diverge: {max_err}");
+}
+
+#[test]
+fn different_adapter_slots_change_logits() {
+    let Some(rt) = load() else { return };
+    let prompt: Vec<i32> = (0..16).map(|i| (i * 5) % 1024).collect();
+    let a = rt.prefill(&[0], &[prompt.clone()], &[16]).unwrap();
+    let b = rt.prefill(&[5], &[prompt], &[16]).unwrap();
+    let diff: f32 = a
+        .logits
+        .iter()
+        .zip(&b.logits)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max);
+    assert!(diff > 1e-3, "LoRA slot must affect logits (diff={diff})");
+}
+
+#[test]
+fn batch_prefill_rows_match_single_requests() {
+    // Batch-order invariance across the runtime path.
+    let Some(rt) = load() else { return };
+    let p1: Vec<i32> = (0..20).map(|i| (i * 11) % 1024).collect();
+    let p2: Vec<i32> = (0..28).map(|i| (i * 3 + 1) % 1024).collect();
+    let batch = rt
+        .prefill(&[1, 4], &[p1.clone(), p2.clone()], &[20, 28])
+        .unwrap();
+    let solo1 = rt.prefill(&[1], &[p1], &[20]).unwrap();
+    let solo2 = rt.prefill(&[4], &[p2], &[28]).unwrap();
+    let row = |out: &caraserve::runtime::PrefillOut, r: usize| {
+        out.logits[r * rt.vocab..(r + 1) * rt.vocab].to_vec()
+    };
+    let err1: f32 = row(&batch, 0)
+        .iter()
+        .zip(row(&solo1, 0).iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    let err2: f32 = row(&batch, 1)
+        .iter()
+        .zip(row(&solo2, 0).iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(err1 < 1e-3, "row0 err {err1}");
+    assert!(err2 < 1e-3, "row1 err {err2}");
+}
+
+#[test]
+fn prompt_too_long_is_an_error() {
+    let Some(rt) = load() else { return };
+    let long: Vec<i32> = vec![1; 500];
+    assert!(rt.prefill(&[0], &[long], &[500]).is_err());
+}

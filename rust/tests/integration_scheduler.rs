@@ -1,0 +1,112 @@
+//! Integration: scheduler policies over the cluster simulator — the
+//! §7.5 pipeline (profile → fit → route → measure SLO attainment) at
+//! test scale.
+
+use caraserve::config::GpuSpec;
+use caraserve::model::LlamaConfig;
+use caraserve::perfmodel::{profiler, KernelKind};
+use caraserve::scheduler::{policy_by_name, RankAwareConfig};
+use caraserve::sim::{GpuModel, MafTrace, ServingMode, SimInstance, Simulation};
+
+struct Setup {
+    gm: GpuModel,
+    slo: f64,
+}
+
+fn setup() -> Setup {
+    let gm = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+    // SLO = 1.5× the single-request (HF-PEFT-like) decode latency (§7.5).
+    let slo = 1.5 * gm.decode_iter(&[160]);
+    Setup { gm, slo }
+}
+
+fn run_policy(s: &Setup, policy_name: &str, kernel: KernelKind, seed: u64) -> (f64, f64) {
+    let plan = profiler::ProfilePlan::default();
+    let gm = s.gm.clone();
+    let dec = profiler::calibrate(kernel, &plan, |ranks| {
+        gm.decode_iter(&vec![160; ranks.len()]) + gm.lora_decode_overhead(kernel, ranks)
+    })
+    .unwrap();
+    let pre = profiler::calibrate(kernel, &plan, |ranks| gm.prefill(ranks.len() * 28)).unwrap();
+
+    let mode = match kernel {
+        KernelKind::Bgmv => ServingMode::CaraServe,
+        KernelKind::Mbgmv => ServingMode::SLora,
+    };
+    let instances: Vec<SimInstance> = (0..6)
+        .map(|i| SimInstance::new(i, s.gm.clone(), mode, 48, 32, 512))
+        .collect();
+    // ~7.5 rps/instance creates enough contention that policies separate.
+    let trace = MafTrace::new(seed, 512, 1.0, &[8, 16, 32, 64]);
+    let reqs = trace.generate(seed + 1, 45.0, 60.0);
+    let mut policy = policy_by_name(
+        policy_name,
+        pre,
+        dec,
+        RankAwareConfig {
+            slo: s.slo,
+            ..Default::default()
+        },
+        seed,
+    );
+    let mut sim = Simulation::new(instances);
+    let out = sim.run(&reqs, policy.as_mut());
+    (
+        out.slo_attainment(s.slo),
+        caraserve::util::stats::mean(&out.column("tpt")),
+    )
+}
+
+#[test]
+fn rank_aware_beats_baselines_on_slo_attainment() {
+    let s = setup();
+    let (ra, ra_tpt) = run_policy(&s, "rank-aware", KernelKind::Bgmv, 42);
+    let (ff, _) = run_policy(&s, "first-fit", KernelKind::Bgmv, 42);
+    let (rnd, _) = run_policy(&s, "random", KernelKind::Bgmv, 42);
+    // §7.5: rank-aware achieves the highest attainment. First-fit packs
+    // and must be clearly beaten; random may tie within noise when the
+    // cluster is underloaded, so allow a small tolerance there.
+    assert!(ra > ff, "rank-aware {ra} ≤ first-fit {ff}");
+    assert!(ra >= rnd - 0.02, "rank-aware {ra} ≪ random {rnd}");
+    assert!(ra > 0.5, "attainment collapsed: {ra}");
+    assert!(ra_tpt > 0.0);
+}
+
+#[test]
+fn rank_aware_works_with_mbgmv_backend_too() {
+    let s = setup();
+    let (ra, _) = run_policy(&s, "rank-aware", KernelKind::Mbgmv, 7);
+    let (ff, _) = run_policy(&s, "first-fit", KernelKind::Mbgmv, 7);
+    assert!(ra >= ff, "rank-aware {ra} < first-fit {ff} (mbgmv)");
+}
+
+#[test]
+fn all_policies_complete_all_requests() {
+    let s = setup();
+    for name in ["rank-aware", "most-idle", "first-fit", "random"] {
+        let (att, tpt) = run_policy(&s, name, KernelKind::Bgmv, 99);
+        assert!((0.0..=1.0).contains(&att), "{name}: {att}");
+        assert!(tpt > 0.0, "{name}");
+    }
+}
+
+#[test]
+fn perf_model_fit_quality_matches_paper() {
+    // Fig 9: linear fits reach R² ≈ 0.96 on profiled data.
+    let s = setup();
+    let plan = profiler::ProfilePlan::default();
+    let gm = s.gm.clone();
+    let bgmv = profiler::calibrate(KernelKind::Bgmv, &plan, |ranks| {
+        gm.decode_iter(&vec![160; ranks.len()])
+            + gm.lora_decode_overhead(KernelKind::Bgmv, ranks)
+    })
+    .unwrap();
+    assert!(bgmv.r2 > 0.9, "BGMV R² = {}", bgmv.r2);
+    let gm2 = s.gm.clone();
+    let mbgmv = profiler::calibrate(KernelKind::Mbgmv, &plan, |ranks| {
+        gm2.decode_iter(&vec![160; ranks.len()])
+            + gm2.lora_decode_overhead(KernelKind::Mbgmv, ranks)
+    })
+    .unwrap();
+    assert!(mbgmv.r2 > 0.8, "MBGMV R² = {}", mbgmv.r2);
+}

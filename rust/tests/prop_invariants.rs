@@ -1,0 +1,248 @@
+//! Property-based tests on coordinator invariants (routing, batching,
+//! KV accounting, simulation conservation laws) using the in-repo
+//! mini-proptest framework ([`caraserve::testkit`]).
+
+use caraserve::config::GpuSpec;
+use caraserve::model::LlamaConfig;
+use caraserve::perfmodel::{KernelKind, PerfModel};
+use caraserve::scheduler::{Policy, RankAwareConfig, RankAwareScheduler, SchedRequest, ServerStats};
+use caraserve::server::kvcache::KvCacheManager;
+use caraserve::sim::{
+    GpuModel, ServingMode, SimInstance, Simulation, SingleServer, WorkloadRequest,
+};
+use caraserve::testkit::prop::{self, Config, Gen};
+use caraserve::util::rng::Rng;
+
+fn gen_ranks() -> Gen<Vec<usize>> {
+    prop::vec_of(prop::one_of(vec![8usize, 16, 32, 64, 128]), 0, 40)
+}
+
+#[test]
+fn prop_perf_models_monotone_in_added_request() {
+    // Adding a request never decreases predicted latency for either
+    // kernel — the property Algorithm 1's Δcost relies on.
+    let cfg = Config::default();
+    forall_ranks(&cfg, |ranks| {
+        for kernel in [KernelKind::Bgmv, KernelKind::Mbgmv] {
+            let m = PerfModel::from_coefficients(kernel, 1e-5, 25e-3);
+            let before = m.predict(ranks);
+            for add in [8usize, 64, 128] {
+                let mut after = ranks.to_vec();
+                after.push(add);
+                if m.predict(&after) + 1e-12 < before {
+                    return Err(format!(
+                        "{kernel:?}: predict decreased when adding rank {add}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn forall_ranks(cfg: &Config, f: impl Fn(&Vec<usize>) -> Result<(), String>) {
+    prop::forall(cfg, &gen_ranks(), f);
+}
+
+#[test]
+fn prop_rank_aware_always_picks_an_eligible_server() {
+    let cfg = Config {
+        cases: 128,
+        ..Default::default()
+    };
+    // Generate clusters: vec of (load, eligible) pairs encoded as usize
+    // (load*2 + eligible).
+    let gen = prop::vec_of(prop::usize_in(0, 80), 1, 12);
+    prop::forall(&cfg, &gen, |encoded| {
+        let stats: Vec<ServerStats> = encoded
+            .iter()
+            .map(|&e| ServerStats {
+                running_ranks: vec![32; e / 2],
+                queued_ranks: vec![],
+                eligible: e % 2 == 1,
+            })
+            .collect();
+        let mut sched = RankAwareScheduler::new(
+            PerfModel::from_coefficients(KernelKind::Bgmv, 4e-5, 60e-3),
+            PerfModel::from_coefficients(KernelKind::Bgmv, 1.3e-5, 24.8e-3),
+            RankAwareConfig::default(),
+        );
+        let req = SchedRequest {
+            id: 1,
+            adapter: 1,
+            rank: 32,
+            prompt_len: 16,
+        };
+        let pick = sched.pick(&req, &stats);
+        let any_eligible = stats.iter().any(|s| s.eligible);
+        match pick {
+            Some(i) if !stats[i].eligible => Err(format!("picked ineligible {i}")),
+            Some(_) if !any_eligible => Err("picked from empty".into()),
+            None if any_eligible => Err("missed eligible server".into()),
+            _ => Ok(()),
+        }
+    });
+}
+
+#[test]
+fn prop_kv_manager_conserves_pages() {
+    // Random admit/append/free sequences never leak or double-free pages.
+    let cfg = Config {
+        cases: 64,
+        ..Default::default()
+    };
+    let gen = prop::vec_of(prop::usize_in(0, 100), 1, 60);
+    prop::forall(&cfg, &gen, |ops| {
+        let layers = 2;
+        let hidden = 8;
+        let mut kv = KvCacheManager::new(layers, hidden, 4, 16, 64);
+        let total = kv.total_pages();
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        let k = vec![0.5f32; layers * 1 * 8 * hidden];
+        for &op in ops {
+            match op % 3 {
+                0 => {
+                    // Admit with prompt length 1..8.
+                    let len = 1 + op / 13 % 8;
+                    if kv.can_admit(len) {
+                        kv.admit_from_prefill(next_id, &k, &k, 1, 8, 0, len)
+                            .map_err(|e| format!("admit: {e}"))?;
+                        live.push(next_id);
+                        next_id += 1;
+                    }
+                }
+                1 => {
+                    if let Some(&id) = live.first() {
+                        let row = vec![0.1f32; layers * hidden];
+                        // Append may legitimately fail when out of pages
+                        // or at capacity; must not corrupt state.
+                        let _ = kv.append_token(id, &row, &row, 1, 0);
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let id = live.remove(0);
+                        kv.free_request(id).map_err(|e| format!("free: {e}"))?;
+                    }
+                }
+            }
+            let used: usize = total - kv.free_pages();
+            if kv.live_requests() == 0 && used != 0 {
+                return Err(format!("leak: {used} pages with no live requests"));
+            }
+        }
+        for id in live {
+            kv.free_request(id).map_err(|e| format!("final free: {e}"))?;
+        }
+        if kv.free_pages() != total {
+            return Err(format!(
+                "pages not conserved: {} != {total}",
+                kv.free_pages()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulation_conserves_requests_and_orders_tokens() {
+    // Every generated request completes exactly once, with monotone
+    // token times and ttft ≤ latency — under random workloads and modes.
+    let cfg = Config {
+        cases: 24,
+        ..Default::default()
+    };
+    let gen = prop::usize_in(0, 10_000);
+    prop::forall(&cfg, &gen, |&seed| {
+        let mut rng = Rng::new(seed as u64);
+        let mode = *rng.choose(&[
+            ServingMode::Cached,
+            ServingMode::OnDemand,
+            ServingMode::SLora,
+            ServingMode::CaraServe,
+        ]);
+        let rps = rng.uniform(1.0, 12.0);
+        let reqs: Vec<WorkloadRequest> =
+            caraserve::sim::workload::synthetic(seed as u64, rps, 64, 20.0);
+        let n = reqs.len();
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let mut sim =
+            Simulation::new(vec![SimInstance::new(0, model, mode, 32, 16, 256)]);
+        let out = sim.run(&reqs, &mut SingleServer);
+        if out.requests.len() != n {
+            return Err(format!("{} of {n} requests completed", out.requests.len()));
+        }
+        for r in &out.requests {
+            if r.ttft < 0.0 || r.latency + 1e-9 < r.ttft {
+                return Err(format!("bad timing: ttft={} latency={}", r.ttft, r.latency));
+            }
+            if r.time_per_token <= 0.0 {
+                return Err("nonpositive tpt".into());
+            }
+            if r.cold_start < 0.0 {
+                return Err("negative cold".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_never_exceeds_max_batch() {
+    use caraserve::server::batcher::{Batcher, NextAction, RunningReq};
+    use caraserve::server::InferenceRequest;
+    let cfg = Config {
+        cases: 128,
+        ..Default::default()
+    };
+    let gen = prop::vec_of(prop::usize_in(1, 20), 0, 30);
+    prop::forall(&cfg, &gen, |prompts| {
+        let mut b = Batcher::new(4, 2);
+        for (i, &p) in prompts.iter().enumerate() {
+            b.enqueue(InferenceRequest {
+                id: i as u64,
+                adapter: i as u64,
+                prompt: vec![1; p],
+                max_new_tokens: 2,
+            });
+        }
+        // Drain: alternate admissions and reaps.
+        let mut guard = 0;
+        loop {
+            guard += 1;
+            if guard > 1000 {
+                return Err("did not drain".into());
+            }
+            match b.next_action(|_| true) {
+                NextAction::Idle => break,
+                NextAction::Prefill { admit } => {
+                    let admits = b.take_admits(admit);
+                    for q in admits {
+                        b.start_running(RunningReq {
+                            id: q.req.id,
+                            adapter: q.req.adapter,
+                            ctx: q.req.prompt.len(),
+                            generated: 1,
+                            max_new_tokens: q.req.max_new_tokens,
+                            last_token: 0,
+                        });
+                    }
+                    if b.running.len() > 4 {
+                        return Err(format!("batch overflow: {}", b.running.len()));
+                    }
+                }
+                NextAction::Decode => {
+                    for r in b.running.iter_mut() {
+                        r.generated += 1;
+                    }
+                    b.reap_finished();
+                }
+            }
+        }
+        if !b.running.is_empty() || !b.queue.is_empty() {
+            return Err("work left after drain".into());
+        }
+        Ok(())
+    });
+}
