@@ -12,7 +12,7 @@ use caraserve::model::LlamaConfig;
 use caraserve::perfmodel::{profiler, KernelKind};
 use caraserve::scheduler::{policy_by_name, RankAwareConfig};
 use caraserve::sim::{GpuModel, MafTrace, ServingMode, SimInstance, Simulation};
-use caraserve::util::stats::mean;
+use caraserve::util::stats::{mean, percentile};
 
 fn main() {
     let gm = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
@@ -52,8 +52,8 @@ fn main() {
             reqs.len()
         );
         println!(
-            "  {:<12} {:>14} {:>16}",
-            "policy", "SLO attain", "mean tpt (ms)"
+            "  {:<12} {:>14} {:>16} {:>15}",
+            "policy", "SLO attain", "mean tpt (ms)", "p99 tpt (ms)"
         );
         for policy_name in ["rank-aware", "most-idle", "first-fit", "random"] {
             let instances: Vec<SimInstance> = (0..8)
@@ -71,11 +71,13 @@ fn main() {
             );
             let mut sim = Simulation::new(instances);
             let out = sim.run(&reqs, policy.as_mut());
+            let tpt = out.column("tpt");
             println!(
-                "  {:<12} {:>13.1}% {:>16.2}",
+                "  {:<12} {:>13.1}% {:>16.2} {:>15.2}",
                 policy_name,
                 out.slo_attainment(slo) * 100.0,
-                mean(&out.column("tpt")) * 1e3
+                mean(&tpt) * 1e3,
+                percentile(&tpt, 99.0) * 1e3
             );
         }
         println!();

@@ -1,7 +1,8 @@
 //! End-to-end driver (the EXPERIMENTS.md validation run): load the real
 //! tiny model through PJRT and serve a sustained multi-tenant batch of
-//! requests under each cold-start mode, reporting latency and
-//! throughput — proving all three layers compose on a real workload.
+//! requests under each cold-start mode through the streaming lifecycle
+//! API, reporting latency, throughput, and SLO attainment — proving all
+//! three layers compose on a real workload.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example e2e_serving
@@ -12,23 +13,26 @@ use std::time::Instant;
 
 use caraserve::model::LoraSpec;
 use caraserve::runtime::ModelRuntime;
-use caraserve::server::{ColdStartMode, EngineConfig, InferenceRequest, InferenceServer};
+use caraserve::server::{
+    ColdStartMode, EngineConfig, InferenceServer, LifecycleState, ServeRequest,
+};
 use caraserve::util::rng::Rng;
 
 const N_REQUESTS: usize = 48;
 const N_ADAPTERS: u64 = 64;
 
-fn workload(seed: u64) -> Vec<InferenceRequest> {
+fn workload(seed: u64) -> Vec<ServeRequest> {
     let mut rng = Rng::new(seed);
-    (0..N_REQUESTS as u64)
-        .map(|id| InferenceRequest {
-            id,
+    (0..N_REQUESTS)
+        .map(|_| {
             // 64 adapters over 8 device slots → plenty of cold starts.
-            adapter: rng.range(0, N_ADAPTERS as usize) as u64,
-            prompt: (0..rng.range(8, 32))
+            let adapter = rng.range(0, N_ADAPTERS as usize) as u64;
+            let prompt: Vec<i32> = (0..rng.range(8, 32))
                 .map(|_| rng.range(0, 1024) as i32)
-                .collect(),
-            max_new_tokens: rng.range(4, 12),
+                .collect();
+            ServeRequest::new(adapter, prompt)
+                .max_new_tokens(rng.range(4, 12))
+                .slo(250.0, 60.0)
         })
         .collect()
 }
@@ -47,16 +51,14 @@ fn run_mode(mode: ColdStartMode) -> anyhow::Result<()> {
     }
 
     let reqs = workload(2024);
-    let total_tokens: usize = reqs.iter().map(|r| r.max_new_tokens).sum();
+    let total_tokens: usize = reqs.iter().map(|r| r.sampling.max_new_tokens).sum();
     let t0 = Instant::now();
-    for r in reqs {
-        server.submit(r)?;
-    }
+    let handles: Vec<_> = reqs.into_iter().map(|r| server.submit(r)).collect();
     server.run_until_idle()?;
     let wall = t0.elapsed().as_secs_f64();
 
     println!("\n--- mode {mode:?} ---");
-    for metric in ["ttft", "tpt", "latency"] {
+    for metric in ["ttft", "tpot", "latency"] {
         if let Some(s) = server.metrics().summary(metric) {
             println!(
                 "{metric:>8}: mean {:8.2} ms   p50 {:8.2} ms   p99 {:8.2} ms",
@@ -66,12 +68,18 @@ fn run_mode(mode: ColdStartMode) -> anyhow::Result<()> {
             );
         }
     }
+    if let Some(att) = server.metrics().slo_attainment() {
+        println!("SLO (250 ms ttft / 60 ms tpot): attainment {:5.1}%", att * 100.0);
+    }
+    let finished = handles
+        .iter()
+        .filter(|h| h.state() == LifecycleState::Finished)
+        .count();
     let (rps, tps) = server.metrics().throughput(wall);
     println!(
-        "completed {} requests / {total_tokens} tokens in {wall:.2}s → {rps:.1} req/s, {tps:.1} tok/s",
-        server.outputs().len()
+        "completed {finished} requests / {total_tokens} tokens in {wall:.2}s → {rps:.1} req/s, {tps:.1} tok/s"
     );
-    anyhow::ensure!(server.outputs().len() == N_REQUESTS, "request loss");
+    anyhow::ensure!(finished == N_REQUESTS, "request loss");
     Ok(())
 }
 

@@ -1,9 +1,10 @@
-//! Quickstart: the smallest end-to-end CaraServe run.
+//! Quickstart: the smallest end-to-end CaraServe run, on the streaming
+//! request-lifecycle API.
 //!
 //! Loads the AOT artifacts (run `make artifacts` first), stands up one
-//! inference server with CPU-assisted cold-start handling, serves three
-//! multi-tenant LoRA requests, and prints the generated tokens and
-//! latency metrics.
+//! inference server with CPU-assisted cold-start handling, streams three
+//! multi-tenant LoRA requests through [`RequestHandle`] event streams,
+//! and prints the generated tokens and latency metrics.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
@@ -11,7 +12,9 @@
 
 use caraserve::model::LoraSpec;
 use caraserve::runtime::ModelRuntime;
-use caraserve::server::{ColdStartMode, EngineConfig, InferenceRequest, InferenceServer};
+use caraserve::server::{
+    ColdStartMode, EngineConfig, InferenceServer, Priority, RequestEvent, ServeRequest,
+};
 
 fn main() -> anyhow::Result<()> {
     // 1. Load the compiled model (HLO text → PJRT executables).
@@ -41,25 +44,45 @@ fn main() -> anyhow::Result<()> {
         server.install_adapter(LoraSpec::standard(id, 8, "tiny"));
     }
 
-    // 3. Serve three requests against three different LoRA adapters.
-    for (id, adapter) in [(0u64, 0u64), (1, 1), (2, 2)] {
-        server.submit(InferenceRequest {
-            id,
-            adapter,
-            prompt: (0..12).map(|i| (i * 83 + id as i32 * 17) % 1024).collect(),
-            max_new_tokens: 8,
-        })?;
-    }
+    // 3. Submit three requests against three different LoRA adapters.
+    //    Each submit returns a handle streaming that request's lifecycle.
+    let handles: Vec<_> = (0..3u64)
+        .map(|adapter| {
+            server.submit(
+                ServeRequest::new(
+                    adapter,
+                    (0..12).map(|i| (i * 83 + adapter as i32 * 17) % 1024).collect(),
+                )
+                .max_new_tokens(8)
+                .priority(Priority::Standard)
+                .slo(200.0, 50.0),
+            )
+        })
+        .collect();
     server.run_until_idle()?;
 
-    // 4. Inspect outputs + metrics.
-    for out in server.outputs() {
-        println!("request {} → tokens {:?}", out.id, out.tokens);
+    // 4. Drain each handle's event stream and inspect metrics.
+    for handle in &handles {
+        print!("request {}:", handle.id());
+        for event in handle.drain_events() {
+            match event {
+                RequestEvent::Admitted => print!(" admitted"),
+                RequestEvent::FirstToken(t) => print!(" | first {t}"),
+                RequestEvent::Token(t) => print!(" {t}"),
+                RequestEvent::Finished(reason) => print!(" | finished ({reason:?})"),
+                RequestEvent::Cancelled => print!(" | cancelled"),
+                RequestEvent::Rejected(why) => print!(" | rejected: {why}"),
+            }
+        }
+        println!(" → tokens {:?}", handle.tokens());
     }
-    for metric in ["ttft", "tpt", "latency"] {
+    for metric in ["ttft", "tpot", "latency"] {
         if let Some(s) = server.metrics().summary(metric) {
             println!("{metric:>8}: mean {:.2} ms, p99 {:.2} ms", s.mean * 1e3, s.p99 * 1e3);
         }
+    }
+    if let Some(att) = server.metrics().slo_attainment() {
+        println!("SLO attainment: {:.0}%", att * 100.0);
     }
     Ok(())
 }

@@ -17,13 +17,24 @@ use std::sync::atomic::{AtomicU32, Ordering};
 use super::signal::Doorbell;
 
 /// Error type for shm operations.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ShmError {
-    #[error("mmap failed: {0}")]
     Mmap(std::io::Error),
-    #[error("region too small: need {need} bytes, have {have}")]
     TooSmall { need: usize, have: usize },
 }
+
+impl std::fmt::Display for ShmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShmError::Mmap(e) => write!(f, "mmap failed: {e}"),
+            ShmError::TooSmall { need, have } => {
+                write!(f, "region too small: need {need} bytes, have {have}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShmError {}
 
 /// A shared anonymous mapping. Dropped ⇒ unmapped.
 pub struct ShmRegion {

@@ -22,14 +22,37 @@
 //!
 //! ## Quick tour
 //!
-//! - [`server::InferenceServer`] — a single LLM inference server
-//!   (base model + local LoRA repository + continuous batcher).
-//! - [`scheduler::RankAwareScheduler`] — Algorithm 1 over a cluster.
-//! - [`sim::Simulation`] — discrete-event cluster simulator calibrated to
-//!   the paper's A10/A100 latency shapes.
+//! Serving is a streaming request lifecycle: build a
+//! [`server::ServeRequest`] (adapter, prompt, sampling, priority,
+//! optional SLO), `submit` it to any [`server::ServingFront`] backend,
+//! and poll the returned [`server::RequestHandle`] for per-token
+//! [`server::RequestEvent`]s — `Admitted → FirstToken → Token* →
+//! Finished`, with `cancel()` and stop tokens honored mid-flight and
+//! rejection surfaced as a terminal `Rejected` event.
+//!
+//! ```ignore
+//! let handle = front.submit(
+//!     ServeRequest::new(adapter, prompt)
+//!         .max_new_tokens(32)
+//!         .priority(Priority::Interactive)
+//!         .slo(200.0, 50.0),
+//! );
+//! front.run_until_idle()?;
+//! while let Some(event) = handle.poll_event() { /* stream tokens */ }
+//! ```
+//!
+//! - [`server::ServingFront`] — the uniform backend surface
+//!   (submit / poll / cancel / stats), implemented by both backends
+//!   below so schedulers and drivers route against one interface.
+//! - [`server::InferenceServer`] — the real single-server engine
+//!   (base model + local LoRA repository + continuous batcher + PJRT).
+//! - [`sim::SimFront`] — the discrete-event simulator behind the same
+//!   API; [`sim::Simulation`] runs calibrated cluster experiments.
+//! - [`scheduler::RankAwareScheduler`] — Algorithm 1 over a cluster,
+//!   consuming the [`scheduler::ServerStats`] every front produces.
 //! - [`cpu_lora::CpuLoraEngine`] — the CPU-assisted prefill engine.
 //!
-//! See `examples/quickstart.rs` for a 30-line end-to-end run.
+//! See `examples/quickstart.rs` for a compact end-to-end run.
 
 pub mod adapters;
 pub mod bench;

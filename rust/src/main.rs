@@ -24,6 +24,7 @@ caraserve <subcommand> [options]
 
 subcommands:
   serve     --artifacts DIR --requests N --mode cached|ondemand|caraserve
+            --slo-ttft-ms F --slo-tpot-ms F
   simulate  --mode cached|ondmd|s-lora|caraserve --rps F --rank N --secs F
   schedule  --policy rank-aware|most-idle|first-fit|random --instances N
             --kernel bgmv|mbgmv --rps F --secs F
@@ -50,6 +51,8 @@ fn run() -> anyhow::Result<()> {
         "instances",
         "kernel",
         "seed",
+        "slo-ttft-ms",
+        "slo-tpot-ms",
     ])
     .map_err(|e| anyhow::anyhow!("{e}"))?;
 
@@ -67,7 +70,10 @@ fn run() -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    use caraserve::server::{ColdStartMode, EngineConfig, InferenceServer};
+    use caraserve::model::LoraSpec;
+    use caraserve::server::{
+        ColdStartMode, EngineConfig, InferenceServer, LifecycleState, ServeRequest,
+    };
     let dir = args.opt_or("artifacts", "artifacts");
     let n: usize = args.opt_parse_or("requests", 16).map_err(|e| anyhow::anyhow!("{e}"))?;
     let mode = match args.opt_or("mode", "caraserve").as_str() {
@@ -76,6 +82,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         _ => ColdStartMode::CaraServe,
     };
     let seed: u64 = args.opt_parse_or("seed", 1).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let slo_ttft: f64 = args
+        .opt_parse_or("slo-ttft-ms", 200.0)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let slo_tpot: f64 = args
+        .opt_parse_or("slo-tpot-ms", 50.0)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
 
     println!("loading artifacts from {dir} ...");
     let runtime = caraserve::runtime::ModelRuntime::load(std::path::Path::new(&dir))?;
@@ -86,25 +98,34 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             ..Default::default()
         },
     )?;
+    for id in 0..64u64 {
+        server.install_adapter(LoraSpec::standard(id, 8, "tiny"));
+    }
 
     let mut rng = caraserve::util::rng::Rng::new(seed);
     let t0 = std::time::Instant::now();
-    for id in 0..n as u64 {
+    let mut handles = Vec::with_capacity(n);
+    for _ in 0..n {
         let prompt: Vec<i32> = (0..rng.range(8, 32))
             .map(|_| rng.range(0, 1024) as i32)
             .collect();
-        server.submit(caraserve::server::InferenceRequest {
-            id,
-            adapter: rng.range(0, 64) as u64,
-            prompt,
-            max_new_tokens: rng.range(4, 16),
-        })?;
+        let req = ServeRequest::new(rng.range(0, 64) as u64, prompt)
+            .max_new_tokens(rng.range(4, 16))
+            .slo(slo_ttft, slo_tpot);
+        handles.push(server.submit(req));
     }
     server.run_until_idle()?;
     let wall = t0.elapsed().as_secs_f64();
 
+    let finished = handles
+        .iter()
+        .filter(|h| h.state() == LifecycleState::Finished)
+        .count();
+    anyhow::ensure!(finished == n, "only {finished}/{n} requests finished");
+
+    // The paper's §7 headline metrics, from the real run.
     let m = server.metrics();
-    for metric in ["ttft", "tpt", "latency"] {
+    for metric in ["ttft", "tpot", "latency"] {
         if let Some(s) = m.summary(metric) {
             println!(
                 "{metric:>8}: mean {:.2} ms  p50 {:.2} ms  p99 {:.2} ms",
@@ -113,6 +134,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 s.p99 * 1e3
             );
         }
+    }
+    if let Some(att) = m.slo_attainment() {
+        println!(
+            "SLO (ttft ≤ {slo_ttft} ms, tpot ≤ {slo_tpot} ms): attainment {:.1}%",
+            att * 100.0
+        );
     }
     let (rps, tps) = m.throughput(wall);
     println!("throughput: {rps:.1} req/s, {tps:.1} tok/s (mode {mode:?})");

@@ -105,6 +105,7 @@ mod tests {
                 running_ranks: vec![32; n],
                 queued_ranks: vec![],
                 eligible: true,
+                tpot_slo: None,
             })
             .collect()
     }

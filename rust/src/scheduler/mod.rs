@@ -26,7 +26,10 @@ pub struct SchedRequest {
 }
 
 /// A snapshot of one inference server's load (what `GetStats` returns in
-/// Algorithm 1).
+/// Algorithm 1). Produced uniformly by every [`ServingFront`] backend
+/// (`ServingFront::stats`), real engine and simulator alike.
+///
+/// [`ServingFront`]: crate::server::ServingFront
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
     /// Ranks of requests currently in the running (decoding) batch.
@@ -36,6 +39,11 @@ pub struct ServerStats {
     /// True if the server hosts this request's base model + adapter and
     /// has GPU memory headroom.
     pub eligible: bool,
+    /// Tightest per-output-token SLO (seconds) among the server's live
+    /// requests, if any carries one. The scheduler compares its
+    /// predicted decode latency against this instead of the global
+    /// default, so routing respects the thinnest headroom on board.
+    pub tpot_slo: Option<f64>,
 }
 
 impl ServerStats {
@@ -119,7 +127,12 @@ impl RankAwareScheduler {
         let d_decode = dec_plus - self.dec_perf.predict_iter(run.chain(q));
 
         let mut cost = d_prefill / self.cfg.avg_resp_len + d_decode;
-        if dec_plus > self.cfg.slo {
+        // SLO headroom: judge against the tightest per-token SLO the
+        // server's live requests carry, when stricter than the default.
+        let slo = stats
+            .tpot_slo
+            .map_or(self.cfg.slo, |s| s.min(self.cfg.slo));
+        if dec_plus > slo {
             cost += self.cfg.penalty;
         }
         cost
@@ -193,11 +206,13 @@ mod tests {
                 running_ranks: vec![32; 24],
                 queued_ranks: vec![],
                 eligible: true,
+                tpot_slo: None,
             },
             ServerStats {
                 running_ranks: vec![64; 16],
                 queued_ranks: vec![],
                 eligible: true,
+                tpot_slo: None,
             },
         ]
     }
@@ -286,14 +301,47 @@ mod tests {
             running_ranks: vec![32; 24],
             queued_ranks: vec![],
             eligible: true,
+            tpot_slo: None,
         };
         let idle = ServerStats {
             running_ranks: vec![],
             queued_ranks: vec![],
             eligible: true,
+            tpot_slo: None,
         };
         assert!(sched.calc_cost(&req, &crowded) > 100.0);
         assert!(sched.calc_cost(&req, &idle) < 1.0);
+    }
+
+    #[test]
+    fn tighter_onboard_slo_triggers_penalty_earlier() {
+        let (pre, dec) = models_bgmv();
+        let sched = RankAwareScheduler::new(
+            pre,
+            dec,
+            RankAwareConfig {
+                slo: 36e-3,
+                penalty: 100.0,
+                avg_resp_len: 60.0,
+            },
+        );
+        let req = SchedRequest {
+            id: 1,
+            adapter: 1,
+            rank: 32,
+            prompt_len: 16,
+        };
+        // A lightly loaded server: within the 36 ms default SLO…
+        let mut stats = ServerStats {
+            running_ranks: vec![32; 8],
+            queued_ranks: vec![],
+            eligible: true,
+            tpot_slo: None,
+        };
+        assert!(sched.calc_cost(&req, &stats) < 1.0);
+        // …but a resident request carrying a 25 ms SLO flips the penalty.
+        stats.tpot_slo = Some(25e-3);
+        assert!(sched.calc_cost(&req, &stats) > 100.0);
     }
 
     #[test]
@@ -324,11 +372,13 @@ mod tests {
                 running_ranks: vec![32; 10],
                 queued_ranks: vec![],
                 eligible: true,
+                tpot_slo: None,
             },
             ServerStats {
                 running_ranks: vec![32; 2],
                 queued_ranks: vec![],
                 eligible: true,
+                tpot_slo: None,
             },
         ];
         assert_eq!(sched.pick(&req, &stats), Some(1));

@@ -48,6 +48,12 @@ impl GlobalRegistry {
         self.inner.read().unwrap().adapters.get(&id).cloned()
     }
 
+    /// Rank of a registered adapter (the scheduler's and the serving
+    /// fronts' fast path — avoids cloning the full metadata).
+    pub fn rank_of(&self, id: u64) -> Option<usize> {
+        self.inner.read().unwrap().adapters.get(&id).map(|m| m.rank)
+    }
+
     /// Record that `server` hosts adapter `id` in its local repository.
     pub fn place(&self, id: u64, server: usize) {
         self.inner
@@ -184,7 +190,9 @@ mod tests {
         reg.register(meta(2, 8));
         assert_eq!(reg.len(), 2);
         assert_eq!(reg.get(1).unwrap().rank, 64);
+        assert_eq!(reg.rank_of(1), Some(64));
         assert!(reg.get(99).is_none());
+        assert!(reg.rank_of(99).is_none());
     }
 
     #[test]

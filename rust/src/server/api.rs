@@ -1,32 +1,463 @@
-//! Request/response types for the inference server.
+//! The streaming request-lifecycle API.
+//!
+//! CaraServe's headline properties — cold-start masking and rank-aware
+//! SLO scheduling — are *per-token, per-request* properties, so the
+//! serving surface is built around an observable request lifecycle
+//! rather than a batch-drain call:
+//!
+//! - [`ServeRequest`] — what a client submits: adapter id, prompt,
+//!   [`SamplingParams`], a [`Priority`] class, and an optional
+//!   [`SloSpec`] carried on the wire to the scheduler and metrics.
+//! - [`RequestHandle`] — returned by `submit()`: a pollable stream of
+//!   [`RequestEvent`]s plus mid-flight [`RequestHandle::cancel`].
+//! - [`ServingFront`] — the uniform backend surface (submit / poll /
+//!   cancel / stats) implemented by both the PJRT engine
+//!   ([`crate::server::InferenceServer`]) and the simulator
+//!   ([`crate::sim::front::SimFront`]), so schedulers and drivers route
+//!   against one interface.
+//!
+//! Every submitted request terminates in **exactly one** terminal event:
+//! `Finished`, `Cancelled`, or `Rejected`.
 
-/// A user inference request.
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::scheduler::ServerStats;
+
+/// Request priority class (admission order within a backend's queue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    /// Throughput-oriented background work; admitted last.
+    Batch,
+    /// The default class.
+    #[default]
+    Standard,
+    /// Latency-sensitive traffic; jumps ahead of other classes.
+    Interactive,
+}
+
+/// Per-request latency SLO (§5, §7.5: TTFT and per-output-token targets).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// Time-to-first-token target, milliseconds.
+    pub ttft_ms: f64,
+    /// Time-per-output-token (decode) target, milliseconds.
+    pub tpot_ms: f64,
+}
+
+/// Token sampling configuration carried with each request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    /// Generation budget (≥ 1).
+    pub max_new_tokens: usize,
+    /// Generation halts after emitting any of these tokens.
+    pub stop_tokens: Vec<i32>,
+    /// `0` or `1` ⇒ greedy argmax; `k > 1` ⇒ top-k sampling.
+    pub top_k: usize,
+    /// Seed for top-k sampling (ignored when greedy).
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            max_new_tokens: 16,
+            stop_tokens: Vec::new(),
+            top_k: 0,
+            seed: 0,
+        }
+    }
+}
+
+/// A user inference request, built fluently:
+///
+/// ```ignore
+/// let req = ServeRequest::new(adapter, prompt)
+///     .max_new_tokens(32)
+///     .stop_token(2)
+///     .priority(Priority::Interactive)
+///     .slo(200.0, 50.0);
+/// let handle = front.submit(req);
+/// ```
 #[derive(Debug, Clone)]
-pub struct InferenceRequest {
-    pub id: u64,
-    /// LoRA adapter id (mapped to a device slot by the engine).
+pub struct ServeRequest {
+    /// LoRA adapter id (must be installed/registered on the backend).
     pub adapter: u64,
     /// Prompt token ids.
     pub prompt: Vec<i32>,
-    /// Number of tokens to generate.
-    pub max_new_tokens: usize,
+    /// Sampling configuration.
+    pub sampling: SamplingParams,
+    /// Priority class.
+    pub priority: Priority,
+    /// Optional latency SLO.
+    pub slo: Option<SloSpec>,
 }
 
-/// The completed output for a request.
-#[derive(Debug, Clone)]
-pub struct RequestOutput {
-    pub id: u64,
-    /// Generated token ids (greedy).
-    pub tokens: Vec<i32>,
+impl ServeRequest {
+    /// A request against `adapter` with default sampling and priority.
+    pub fn new(adapter: u64, prompt: Vec<i32>) -> ServeRequest {
+        ServeRequest {
+            adapter,
+            prompt,
+            sampling: SamplingParams::default(),
+            priority: Priority::default(),
+            slo: None,
+        }
+    }
+
+    /// Set the generation budget.
+    pub fn max_new_tokens(mut self, n: usize) -> ServeRequest {
+        self.sampling.max_new_tokens = n;
+        self
+    }
+
+    /// Add one stop token.
+    pub fn stop_token(mut self, token: i32) -> ServeRequest {
+        self.sampling.stop_tokens.push(token);
+        self
+    }
+
+    /// Enable seeded top-k sampling.
+    pub fn top_k(mut self, k: usize, seed: u64) -> ServeRequest {
+        self.sampling.top_k = k;
+        self.sampling.seed = seed;
+        self
+    }
+
+    /// Replace the whole sampling configuration.
+    pub fn sampling(mut self, sampling: SamplingParams) -> ServeRequest {
+        self.sampling = sampling;
+        self
+    }
+
+    /// Set the priority class.
+    pub fn priority(mut self, priority: Priority) -> ServeRequest {
+        self.priority = priority;
+        self
+    }
+
+    /// Attach a latency SLO (TTFT and per-output-token, milliseconds).
+    pub fn slo(mut self, ttft_ms: f64, tpot_ms: f64) -> ServeRequest {
+        self.slo = Some(SloSpec { ttft_ms, tpot_ms });
+        self
+    }
 }
 
-/// Lifecycle state the engine tracks per request.
+/// Why a request finished generating.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Phase {
+pub enum FinishReason {
+    /// Generation budget (`max_new_tokens`) exhausted.
+    Length,
+    /// A configured stop token was emitted.
+    Stop,
+}
+
+/// One step of a request's observable lifecycle.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RequestEvent {
+    /// Validated and accepted into the serving queue.
+    Admitted,
+    /// Prefill completed; the first output token.
+    FirstToken(i32),
+    /// One decode-step output token.
+    Token(i32),
+    /// Terminal: generation completed.
+    Finished(FinishReason),
+    /// Terminal: cancelled by the client before completion.
+    Cancelled,
+    /// Terminal: the backend refused the request (with the reason).
+    Rejected(String),
+}
+
+impl RequestEvent {
+    /// Is this one of the three terminal events?
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            RequestEvent::Finished(_) | RequestEvent::Cancelled | RequestEvent::Rejected(_)
+        )
+    }
+}
+
+/// Coarse request state, derived from the event stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LifecycleState {
+    /// Admitted, waiting for prefill.
     Queued,
-    Prefilling,
-    Decoding,
+    /// Emitted at least one token; decoding.
+    Running,
+    /// Terminal: finished generating.
     Finished,
+    /// Terminal: cancelled.
+    Cancelled,
+    /// Terminal: rejected at submission.
+    Rejected,
+}
+
+impl LifecycleState {
+    /// Is the request done (any terminal state)?
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            LifecycleState::Finished | LifecycleState::Cancelled | LifecycleState::Rejected
+        )
+    }
+}
+
+/// The shared per-request channel between a backend and its
+/// [`RequestHandle`]: the backend pushes events, the handle polls them.
+///
+/// Public so [`ServingFront`] backends outside this module (the
+/// simulator front) can emit events; user code only ever touches
+/// [`RequestHandle`].
+#[derive(Debug, Default)]
+pub struct EventChannel {
+    events: VecDeque<RequestEvent>,
+    tokens: Vec<i32>,
+    cancel_requested: bool,
+    state: Option<LifecycleState>,
+}
+
+impl EventChannel {
+    /// Record an event, updating derived token/state views.
+    ///
+    /// Panics if pushed after a terminal event — backends must uphold the
+    /// exactly-one-terminal-event contract.
+    pub fn push(&mut self, event: RequestEvent) {
+        assert!(
+            !self.state.is_some_and(|s| s.is_terminal()),
+            "event {event:?} pushed after terminal state {:?}",
+            self.state
+        );
+        match &event {
+            RequestEvent::Admitted => self.state = Some(LifecycleState::Queued),
+            RequestEvent::FirstToken(t) | RequestEvent::Token(t) => {
+                self.tokens.push(*t);
+                self.state = Some(LifecycleState::Running);
+            }
+            RequestEvent::Finished(_) => self.state = Some(LifecycleState::Finished),
+            RequestEvent::Cancelled => self.state = Some(LifecycleState::Cancelled),
+            RequestEvent::Rejected(_) => self.state = Some(LifecycleState::Rejected),
+        }
+        self.events.push_back(event);
+    }
+
+    /// Has the client requested cancellation?
+    pub fn cancel_requested(&self) -> bool {
+        self.cancel_requested
+    }
+
+    /// Mark a cancellation request (observed by the backend at its next
+    /// iteration boundary).
+    pub fn request_cancel(&mut self) {
+        self.cancel_requested = true;
+    }
+
+    /// Request cancellation unless the request already terminated.
+    /// Returns true if it was still live (a terminal `Cancelled` event
+    /// will follow) — the one cancel semantic every backend shares.
+    pub fn try_request_cancel(&mut self) -> bool {
+        if self.is_terminal() {
+            false
+        } else {
+            self.cancel_requested = true;
+            true
+        }
+    }
+
+    /// Has a terminal event been recorded?
+    pub fn is_terminal(&self) -> bool {
+        self.state.is_some_and(|s| s.is_terminal())
+    }
+
+    /// Current derived state (Queued before any event).
+    pub fn state(&self) -> LifecycleState {
+        self.state.unwrap_or(LifecycleState::Queued)
+    }
+
+    /// Tokens emitted so far.
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    /// Pop the oldest undelivered event.
+    pub fn pop_event(&mut self) -> Option<RequestEvent> {
+        self.events.pop_front()
+    }
+}
+
+/// A client's view of one in-flight request: poll events, read the
+/// token stream, cancel. Cheap to clone; all clones observe the same
+/// request (but each event is delivered to only one poller).
+#[derive(Debug, Clone)]
+pub struct RequestHandle {
+    id: u64,
+    channel: Arc<Mutex<EventChannel>>,
+}
+
+impl RequestHandle {
+    /// Create a handle plus the backend half of its channel.
+    pub fn new(id: u64) -> (RequestHandle, Arc<Mutex<EventChannel>>) {
+        let channel = Arc::new(Mutex::new(EventChannel::default()));
+        (
+            RequestHandle {
+                id,
+                channel: Arc::clone(&channel),
+            },
+            channel,
+        )
+    }
+
+    /// The backend-assigned request id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Pop the next undelivered lifecycle event, if any.
+    pub fn poll_event(&self) -> Option<RequestEvent> {
+        self.channel.lock().unwrap().pop_event()
+    }
+
+    /// Drain all undelivered events.
+    pub fn drain_events(&self) -> Vec<RequestEvent> {
+        let mut chan = self.channel.lock().unwrap();
+        let mut out = Vec::new();
+        while let Some(ev) = chan.pop_event() {
+            out.push(ev);
+        }
+        out
+    }
+
+    /// Request cancellation. The backend acknowledges with a terminal
+    /// `Cancelled` event at its next iteration boundary (a no-op if the
+    /// request already terminated).
+    pub fn cancel(&self) {
+        self.channel.lock().unwrap().request_cancel();
+    }
+
+    /// Current coarse state.
+    pub fn state(&self) -> LifecycleState {
+        self.channel.lock().unwrap().state()
+    }
+
+    /// Has the request reached a terminal state?
+    pub fn is_terminal(&self) -> bool {
+        self.channel.lock().unwrap().is_terminal()
+    }
+
+    /// Snapshot of the tokens emitted so far.
+    pub fn tokens(&self) -> Vec<i32> {
+        self.channel.lock().unwrap().tokens().to_vec()
+    }
+}
+
+/// The backend-independent admission checks: prompt within `(0,
+/// max_prompt]`, a positive generation budget, and `prompt + output ≤
+/// kv_capacity + 1`. Shared by every [`ServingFront`] backend so the
+/// same request is admitted (or rejected, with the same message) on
+/// engine and simulator alike; only the adapter-installation check
+/// stays backend-specific.
+pub fn validate_shape(
+    req: &ServeRequest,
+    max_prompt: usize,
+    kv_capacity: usize,
+) -> Result<(), String> {
+    if req.prompt.is_empty() || req.prompt.len() > max_prompt {
+        return Err(format!(
+            "prompt length {} outside (0, {max_prompt}]",
+            req.prompt.len()
+        ));
+    }
+    if req.sampling.max_new_tokens < 1 {
+        return Err("must generate ≥ 1 token".to_string());
+    }
+    let total = req.prompt.len().saturating_add(req.sampling.max_new_tokens);
+    if total > kv_capacity.saturating_add(1) {
+        return Err(format!("prompt+output exceeds KV capacity {kv_capacity}"));
+    }
+    Ok(())
+}
+
+/// Insertion position for a new request of priority `p` into a queue
+/// whose current priorities are yielded front-to-back: after every
+/// entry of equal-or-higher priority, ahead of lower ones (FIFO within
+/// a class). Shared by every [`ServingFront`] backend so their
+/// admission orders cannot drift apart.
+pub fn priority_insert_pos<I>(queue: I, p: Priority) -> usize
+where
+    I: IntoIterator<Item = Priority>,
+    I::IntoIter: DoubleEndedIterator + ExactSizeIterator,
+{
+    queue.into_iter().rposition(|q| q >= p).map_or(0, |i| i + 1)
+}
+
+/// The tightest per-output-token SLO (seconds) among an iterator of
+/// per-request SLOs — the `ServerStats::tpot_slo` every backend
+/// reports, computed one way.
+pub fn tightest_tpot_slo<'a, I>(slos: I) -> Option<f64>
+where
+    I: IntoIterator<Item = &'a Option<SloSpec>>,
+{
+    let mut out: Option<f64> = None;
+    for slo in slos {
+        if let Some(s) = slo {
+            let v = s.tpot_ms / 1e3;
+            out = Some(out.map_or(v, |t| f64::min(t, v)));
+        }
+    }
+    out
+}
+
+/// A validated request as backends carry it internally: the wire fields
+/// of [`ServeRequest`] plus the backend-assigned id.
+#[derive(Debug, Clone)]
+pub struct ActiveRequest {
+    pub id: u64,
+    pub adapter: u64,
+    pub prompt: Vec<i32>,
+    pub sampling: SamplingParams,
+    pub priority: Priority,
+    pub slo: Option<SloSpec>,
+}
+
+impl ActiveRequest {
+    /// Bind a submitted request to its backend id.
+    pub fn from_submit(id: u64, req: ServeRequest) -> ActiveRequest {
+        ActiveRequest {
+            id,
+            adapter: req.adapter,
+            prompt: req.prompt,
+            sampling: req.sampling,
+            priority: req.priority,
+            slo: req.slo,
+        }
+    }
+}
+
+/// The uniform serving surface every backend exposes — the PJRT engine
+/// and the simulator implement this trait, so `scheduler::Policy` and
+/// cluster drivers route against one interface.
+pub trait ServingFront {
+    /// Submit a request. Rejection surfaces as a terminal
+    /// [`RequestEvent::Rejected`] on the returned handle, never as a
+    /// panic or a silent drop.
+    fn submit(&mut self, req: ServeRequest) -> RequestHandle;
+
+    /// Advance the backend by one iteration. Returns `false` when idle.
+    fn poll(&mut self) -> anyhow::Result<bool>;
+
+    /// Request cancellation of request `id`. Returns `true` if the
+    /// request was still live (a terminal `Cancelled` event follows).
+    fn cancel(&mut self, id: u64) -> bool;
+
+    /// The scheduler's `GetStats` view of this backend's load.
+    fn stats(&self) -> ServerStats;
+
+    /// Drive iterations until idle.
+    fn run_until_idle(&mut self) -> anyhow::Result<()> {
+        while self.poll()? {}
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -34,14 +465,140 @@ mod tests {
     use super::*;
 
     #[test]
-    fn request_construction() {
-        let r = InferenceRequest {
-            id: 1,
-            adapter: 3,
-            prompt: vec![1, 2, 3],
-            max_new_tokens: 8,
-        };
-        assert_eq!(r.prompt.len(), 3);
-        assert_eq!(Phase::Queued, Phase::Queued);
+    fn builder_sets_every_field() {
+        let r = ServeRequest::new(7, vec![1, 2, 3])
+            .max_new_tokens(9)
+            .stop_token(42)
+            .top_k(4, 123)
+            .priority(Priority::Interactive)
+            .slo(200.0, 50.0);
+        assert_eq!(r.adapter, 7);
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.sampling.max_new_tokens, 9);
+        assert_eq!(r.sampling.stop_tokens, vec![42]);
+        assert_eq!(r.sampling.top_k, 4);
+        assert_eq!(r.sampling.seed, 123);
+        assert_eq!(r.priority, Priority::Interactive);
+        assert_eq!(
+            r.slo,
+            Some(SloSpec {
+                ttft_ms: 200.0,
+                tpot_ms: 50.0
+            })
+        );
+    }
+
+    #[test]
+    fn priority_ordering() {
+        assert!(Priority::Interactive > Priority::Standard);
+        assert!(Priority::Standard > Priority::Batch);
+        assert_eq!(Priority::default(), Priority::Standard);
+    }
+
+    #[test]
+    fn handle_streams_events_and_tokens() {
+        let (handle, chan) = RequestHandle::new(3);
+        assert_eq!(handle.id(), 3);
+        assert_eq!(handle.state(), LifecycleState::Queued);
+        {
+            let mut c = chan.lock().unwrap();
+            c.push(RequestEvent::Admitted);
+            c.push(RequestEvent::FirstToken(5));
+            c.push(RequestEvent::Token(6));
+            c.push(RequestEvent::Finished(FinishReason::Length));
+        }
+        assert_eq!(handle.tokens(), vec![5, 6]);
+        assert!(handle.is_terminal());
+        assert_eq!(handle.state(), LifecycleState::Finished);
+        let events = handle.drain_events();
+        assert_eq!(events.len(), 4);
+        assert_eq!(events[0], RequestEvent::Admitted);
+        assert!(events[3].is_terminal());
+        assert_eq!(handle.poll_event(), None);
+    }
+
+    #[test]
+    fn cancel_flag_is_visible_to_backend() {
+        let (handle, chan) = RequestHandle::new(1);
+        assert!(!chan.lock().unwrap().cancel_requested());
+        handle.cancel();
+        assert!(chan.lock().unwrap().cancel_requested());
+    }
+
+    #[test]
+    #[should_panic(expected = "after terminal state")]
+    fn channel_rejects_events_after_terminal() {
+        let (_handle, chan) = RequestHandle::new(1);
+        let mut c = chan.lock().unwrap();
+        c.push(RequestEvent::Cancelled);
+        c.push(RequestEvent::Token(1));
+    }
+
+    #[test]
+    fn validate_shape_covers_all_bounds() {
+        let ok = ServeRequest::new(1, vec![1; 8]).max_new_tokens(4);
+        assert!(validate_shape(&ok, 64, 128).is_ok());
+        let empty = ServeRequest::new(1, vec![]);
+        assert!(validate_shape(&empty, 64, 128).unwrap_err().contains("prompt length"));
+        let long = ServeRequest::new(1, vec![1; 65]);
+        assert!(validate_shape(&long, 64, 128).is_err());
+        let zero = ServeRequest::new(1, vec![1; 8]).max_new_tokens(0);
+        assert!(validate_shape(&zero, 64, 128).unwrap_err().contains("≥ 1"));
+        let over = ServeRequest::new(1, vec![1; 8]).max_new_tokens(122);
+        assert!(validate_shape(&over, 64, 128).unwrap_err().contains("KV capacity"));
+        let fits = ServeRequest::new(1, vec![1; 8]).max_new_tokens(121);
+        assert!(validate_shape(&fits, 64, 128).is_ok());
+    }
+
+    #[test]
+    fn priority_insert_pos_orders_classes() {
+        use Priority::{Batch, Interactive, Standard};
+        assert_eq!(priority_insert_pos([], Standard), 0);
+        assert_eq!(priority_insert_pos([Standard, Batch], Interactive), 0);
+        assert_eq!(priority_insert_pos([Interactive, Standard, Batch], Standard), 2);
+        assert_eq!(priority_insert_pos([Interactive, Standard], Batch), 2);
+        // FIFO within a class: equal priority lands after.
+        assert_eq!(priority_insert_pos([Standard, Standard], Standard), 2);
+    }
+
+    #[test]
+    fn tightest_tpot_slo_folds_minimum() {
+        assert_eq!(tightest_tpot_slo([]), None);
+        assert_eq!(tightest_tpot_slo([&None, &None]), None);
+        let a = Some(SloSpec {
+            ttft_ms: 100.0,
+            tpot_ms: 60.0,
+        });
+        let b = Some(SloSpec {
+            ttft_ms: 100.0,
+            tpot_ms: 40.0,
+        });
+        let got = tightest_tpot_slo([&a, &None, &b]).unwrap();
+        assert!((got - 0.040).abs() < 1e-12);
+    }
+
+    #[test]
+    fn try_request_cancel_respects_terminal_state() {
+        let (_h, chan) = RequestHandle::new(1);
+        assert!(chan.lock().unwrap().try_request_cancel());
+        assert!(chan.lock().unwrap().try_request_cancel()); // still live
+        let (_h2, chan2) = RequestHandle::new(2);
+        chan2.lock().unwrap().push(RequestEvent::Cancelled);
+        assert!(!chan2.lock().unwrap().try_request_cancel());
+    }
+
+    #[test]
+    fn rejected_is_terminal_with_reason() {
+        let (handle, chan) = RequestHandle::new(9);
+        chan.lock()
+            .unwrap()
+            .push(RequestEvent::Rejected("no such adapter".into()));
+        assert_eq!(handle.state(), LifecycleState::Rejected);
+        match handle.poll_event() {
+            Some(RequestEvent::Rejected(reason)) => {
+                assert!(reason.contains("adapter"));
+            }
+            other => panic!("expected Rejected, got {other:?}"),
+        }
     }
 }

@@ -4,15 +4,17 @@
 //! and property-testable: given the queue and the running set, decide
 //! whether the next iteration is a prefill (admit new requests — they
 //! preempt decoding) or a decode, and which requests participate.
+//! Carries the lifecycle API's [`ActiveRequest`]s: priority classes
+//! order the queue, and cancellation removes entries from either side.
 
 use std::collections::VecDeque;
 
-use super::api::InferenceRequest;
+use super::api::{ActiveRequest, SamplingParams, SloSpec};
 
 /// A queued request with arrival metadata.
 #[derive(Debug, Clone)]
 pub struct QueuedReq {
-    pub req: InferenceRequest,
+    pub req: ActiveRequest,
     pub arrival: std::time::Instant,
 }
 
@@ -25,16 +27,20 @@ pub struct RunningReq {
     pub ctx: usize,
     /// Tokens generated so far.
     pub generated: usize,
-    /// Generation budget.
-    pub max_new_tokens: usize,
+    /// Sampling configuration (budget, stop tokens, top-k seed).
+    pub sampling: SamplingParams,
+    /// Latency SLO, if the request carries one.
+    pub slo: Option<SloSpec>,
     /// Last emitted token (input to the next decode step).
     pub last_token: i32,
+    /// Set when a stop token was emitted (finishes ahead of the budget).
+    pub stopped: bool,
 }
 
 impl RunningReq {
     /// Is this request done after `generated` tokens?
     pub fn finished(&self) -> bool {
-        self.generated >= self.max_new_tokens
+        self.stopped || self.generated >= self.sampling.max_new_tokens
     }
 }
 
@@ -55,7 +61,7 @@ pub struct Batcher {
     pub max_batch: usize,
     /// Max requests admitted per prefill pass (prefill bucket capacity).
     pub max_prefill_batch: usize,
-    /// Queue of waiting requests.
+    /// Queue of waiting requests, ordered by (priority desc, arrival).
     pub queue: VecDeque<QueuedReq>,
     /// Running batch.
     pub running: Vec<RunningReq>,
@@ -72,12 +78,32 @@ impl Batcher {
         }
     }
 
-    /// Enqueue an arrival.
-    pub fn enqueue(&mut self, req: InferenceRequest) {
-        self.queue.push_back(QueuedReq {
-            req,
-            arrival: std::time::Instant::now(),
-        });
+    /// Enqueue an arrival: after every queued request of equal-or-higher
+    /// priority, ahead of lower ones (FIFO within a class).
+    pub fn enqueue(&mut self, req: ActiveRequest) {
+        let pos = super::api::priority_insert_pos(
+            self.queue.iter().map(|q| q.req.priority),
+            req.priority,
+        );
+        self.queue.insert(
+            pos,
+            QueuedReq {
+                req,
+                arrival: std::time::Instant::now(),
+            },
+        );
+    }
+
+    /// Remove a queued request by id (cancellation before prefill).
+    pub fn remove_queued(&mut self, id: u64) -> Option<QueuedReq> {
+        let pos = self.queue.iter().position(|q| q.req.id == id)?;
+        self.queue.remove(pos)
+    }
+
+    /// Remove a running request by id (cancellation mid-decode).
+    pub fn remove_running(&mut self, id: u64) -> Option<RunningReq> {
+        let pos = self.running.iter().position(|r| r.id == id)?;
+        Some(self.running.remove(pos))
     }
 
     /// Decide the next iteration (Fig 2: arrivals preempt decode).
@@ -138,13 +164,35 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::server::api::Priority;
 
-    fn req(id: u64, prompt: usize) -> InferenceRequest {
-        InferenceRequest {
+    fn req(id: u64, prompt: usize) -> ActiveRequest {
+        ActiveRequest {
             id,
             adapter: id,
             prompt: vec![1; prompt],
-            max_new_tokens: 4,
+            sampling: SamplingParams {
+                max_new_tokens: 4,
+                ..Default::default()
+            },
+            priority: Priority::Standard,
+            slo: None,
+        }
+    }
+
+    fn running(id: u64, ctx: usize, generated: usize, max: usize) -> RunningReq {
+        RunningReq {
+            id,
+            adapter: id,
+            ctx,
+            generated,
+            sampling: SamplingParams {
+                max_new_tokens: max,
+                ..Default::default()
+            },
+            slo: None,
+            last_token: 0,
+            stopped: false,
         }
     }
 
@@ -157,14 +205,7 @@ mod tests {
     #[test]
     fn prefill_preempts_decode() {
         let mut b = Batcher::new(8, 4);
-        b.start_running(RunningReq {
-            id: 1,
-            adapter: 1,
-            ctx: 10,
-            generated: 1,
-            max_new_tokens: 5,
-            last_token: 0,
-        });
+        b.start_running(running(1, 10, 1, 5));
         assert_eq!(b.next_action(|_| true), NextAction::Decode);
         b.enqueue(req(2, 16));
         assert_eq!(b.next_action(|_| true), NextAction::Prefill { admit: 1 });
@@ -180,14 +221,7 @@ mod tests {
         assert_eq!(b.next_action(|_| true), NextAction::Prefill { admit: 2 });
         // Fill running to 3: room = 1.
         for i in 10..13 {
-            b.start_running(RunningReq {
-                id: i,
-                adapter: i,
-                ctx: 8,
-                generated: 0,
-                max_new_tokens: 4,
-                last_token: 0,
-            });
+            b.start_running(running(i, 8, 0, 4));
         }
         assert_eq!(b.next_action(|_| true), NextAction::Prefill { admit: 1 });
     }
@@ -197,14 +231,7 @@ mod tests {
         let mut b = Batcher::new(2, 2);
         b.enqueue(req(1, 8));
         for i in 10..12 {
-            b.start_running(RunningReq {
-                id: i,
-                adapter: i,
-                ctx: 8,
-                generated: 0,
-                max_new_tokens: 4,
-                last_token: 0,
-            });
+            b.start_running(running(i, 8, 0, 4));
         }
         assert_eq!(b.next_action(|_| true), NextAction::Decode);
     }
@@ -217,14 +244,7 @@ mod tests {
         let action = b.next_action(|p| p <= 50);
         assert_eq!(action, NextAction::Idle);
         // With a running batch it decodes instead of idling.
-        b.start_running(RunningReq {
-            id: 9,
-            adapter: 9,
-            ctx: 4,
-            generated: 0,
-            max_new_tokens: 4,
-            last_token: 0,
-        });
+        b.start_running(running(9, 4, 0, 4));
         assert_eq!(b.next_action(|p| p <= 50), NextAction::Decode);
     }
 
@@ -232,19 +252,21 @@ mod tests {
     fn reap_finished_partitions() {
         let mut b = Batcher::new(8, 4);
         for (id, gen) in [(1u64, 4usize), (2, 2), (3, 4)] {
-            b.start_running(RunningReq {
-                id,
-                adapter: id,
-                ctx: 10,
-                generated: gen,
-                max_new_tokens: 4,
-                last_token: 0,
-            });
+            b.start_running(running(id, 10, gen, 4));
         }
         let done = b.reap_finished();
         assert_eq!(done.len(), 2);
         assert_eq!(b.running.len(), 1);
         assert_eq!(b.running[0].id, 2);
+    }
+
+    #[test]
+    fn stopped_requests_reap_before_budget() {
+        let mut b = Batcher::new(8, 4);
+        let mut r = running(1, 10, 1, 8);
+        r.stopped = true;
+        b.start_running(r);
+        assert_eq!(b.reap_finished().len(), 1);
     }
 
     #[test]
@@ -257,5 +279,38 @@ mod tests {
         assert_eq!(admits[0].req.id, 0);
         assert_eq!(admits[1].req.id, 1);
         assert_eq!(b.queue.len(), 1);
+    }
+
+    #[test]
+    fn priority_orders_queue_fifo_within_class() {
+        let mut b = Batcher::new(8, 4);
+        let mut std1 = req(1, 8);
+        std1.priority = Priority::Standard;
+        let mut batch2 = req(2, 8);
+        batch2.priority = Priority::Batch;
+        let mut hot3 = req(3, 8);
+        hot3.priority = Priority::Interactive;
+        let mut hot4 = req(4, 8);
+        hot4.priority = Priority::Interactive;
+        for r in [std1, batch2, hot3, hot4] {
+            b.enqueue(r);
+        }
+        let order: Vec<u64> = b.queue.iter().map(|q| q.req.id).collect();
+        assert_eq!(order, vec![3, 4, 1, 2]);
+    }
+
+    #[test]
+    fn remove_queued_and_running_by_id() {
+        let mut b = Batcher::new(8, 4);
+        b.enqueue(req(1, 8));
+        b.enqueue(req(2, 8));
+        assert_eq!(b.remove_queued(1).unwrap().req.id, 1);
+        assert!(b.remove_queued(1).is_none());
+        assert_eq!(b.queue.len(), 1);
+
+        b.start_running(running(5, 8, 1, 4));
+        assert_eq!(b.remove_running(5).unwrap().id, 5);
+        assert!(b.remove_running(5).is_none());
+        assert_eq!(b.load(), 1);
     }
 }

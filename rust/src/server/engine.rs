@@ -2,7 +2,10 @@
 //!
 //! Wires the continuous batcher, the paged KV manager, the device slot
 //! cache, and the PJRT [`ModelRuntime`] into the iteration loop of
-//! Fig 2. Cold starts follow the configured [`ColdStartMode`]:
+//! Fig 2, behind the streaming lifecycle API ([`super::api`]): `submit`
+//! returns a [`RequestHandle`] whose event stream the prefill/decode
+//! loop feeds token by token, honoring cancellation and stop tokens
+//! mid-flight. Cold starts follow the configured [`ColdStartMode`]:
 //!
 //! - `Cached` — oracle: every adapter pre-resident, no load delay.
 //! - `OnDemand` — the load window *serializes* with prefill (Punica/
@@ -15,17 +18,23 @@
 //!   `max(load, prefill)` instead of `load + prefill`.
 
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use super::api::{InferenceRequest, RequestOutput};
+use super::api::{
+    ActiveRequest, EventChannel, FinishReason, RequestEvent, RequestHandle, SamplingParams,
+    ServeRequest, ServingFront,
+};
 use super::batcher::{Batcher, NextAction, RunningReq};
 use super::kvcache::KvCacheManager;
 use super::metrics::MetricsRecorder;
 use crate::adapters::{DeviceSlotCache, HostRepository, LoaderModel};
 use crate::model::LoraSpec;
 use crate::runtime::ModelRuntime;
+use crate::scheduler::ServerStats;
+use crate::util::rng::Rng;
 
 /// Cold-start handling mode (§7.1 baselines).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -76,9 +85,10 @@ pub struct InferenceServer {
     repo: HostRepository,
     loader: LoaderModel,
     metrics: MetricsRecorder,
-    outputs: Vec<RequestOutput>,
-    /// Per-request generated tokens (accumulating).
-    generating: HashMap<u64, Vec<i32>>,
+    /// Event channels of live (non-terminal) requests.
+    handles: HashMap<u64, Arc<Mutex<EventChannel>>>,
+    /// Next engine-assigned request id.
+    next_id: u64,
     /// Per-request device slot.
     slots: HashMap<u64, usize>,
     /// Largest prompt the compiled buckets accept.
@@ -140,8 +150,8 @@ impl InferenceServer {
             repo: HostRepository::new(),
             loader,
             metrics: MetricsRecorder::new(),
-            outputs: Vec::new(),
-            generating: HashMap::new(),
+            handles: HashMap::new(),
+            next_id: 0,
             slots: HashMap::new(),
             max_prompt,
             cache_m,
@@ -152,33 +162,46 @@ impl InferenceServer {
         })
     }
 
-    /// Register an adapter in the host repository.
+    /// Register an adapter in the host repository. Requests against
+    /// uninstalled adapters are rejected at submission.
     pub fn install_adapter(&mut self, spec: LoraSpec) {
         self.repo.install(spec);
     }
 
-    /// Submit a request (must fit the compiled buckets).
-    pub fn submit(&mut self, req: InferenceRequest) -> Result<()> {
-        anyhow::ensure!(
-            !req.prompt.is_empty() && req.prompt.len() <= self.max_prompt,
-            "prompt length {} outside (0, {}]",
-            req.prompt.len(),
-            self.max_prompt
-        );
-        anyhow::ensure!(
-            req.prompt.len() + req.max_new_tokens <= self.cache_m + 1,
-            "prompt+output exceeds KV capacity {}",
-            self.cache_m
-        );
-        anyhow::ensure!(req.max_new_tokens >= 1, "must generate ≥ 1 token");
-        self.metrics.arrived(req.id);
-        self.batcher.enqueue(req);
+    /// Submit a request. Validation failures (empty/over-bucket prompt,
+    /// over-capacity generation, uninstalled adapter) surface as a
+    /// terminal [`RequestEvent::Rejected`] on the returned handle.
+    pub fn submit(&mut self, req: ServeRequest) -> RequestHandle {
+        let id = self.next_id;
+        self.next_id += 1;
+        let (handle, channel) = RequestHandle::new(id);
+        if let Err(reason) = self.validate(&req) {
+            channel.lock().unwrap().push(RequestEvent::Rejected(reason));
+            return handle;
+        }
+        self.metrics.arrived(id, req.slo);
+        channel.lock().unwrap().push(RequestEvent::Admitted);
+        self.handles.insert(id, channel);
+        self.batcher.enqueue(ActiveRequest::from_submit(id, req));
+        handle
+    }
+
+    fn validate(&self, req: &ServeRequest) -> std::result::Result<(), String> {
+        super::api::validate_shape(req, self.max_prompt, self.cache_m)?;
+        if self.repo.get(req.adapter).is_none() {
+            return Err(format!("adapter {} not installed", req.adapter));
+        }
         Ok(())
     }
 
-    /// Completed outputs so far.
-    pub fn outputs(&self) -> &[RequestOutput] {
-        &self.outputs
+    /// Request cancellation of `id`. Returns true if the request was
+    /// live; the terminal `Cancelled` event lands at the next iteration
+    /// boundary.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        match self.handles.get(&id) {
+            Some(chan) => chan.lock().unwrap().try_request_cancel(),
+            None => false,
+        }
     }
 
     /// Metrics recorder.
@@ -191,8 +214,39 @@ impl InferenceServer {
         self.batcher.load() > 0
     }
 
-    /// Run one iteration (Fig 2). Returns false when idle.
+    /// The scheduler's `GetStats` view: running/queued adapter ranks and
+    /// the tightest per-token SLO among live requests.
+    pub fn stats(&self) -> ServerStats {
+        let rank = |adapter: u64| self.repo.get(adapter).map_or(0, |s| s.rank);
+        let tpot_slo = super::api::tightest_tpot_slo(
+            self.batcher
+                .running
+                .iter()
+                .map(|r| &r.slo)
+                .chain(self.batcher.queue.iter().map(|q| &q.req.slo)),
+        );
+        ServerStats {
+            running_ranks: self
+                .batcher
+                .running
+                .iter()
+                .map(|r| rank(r.adapter))
+                .collect(),
+            queued_ranks: self
+                .batcher
+                .queue
+                .iter()
+                .map(|q| rank(q.req.adapter))
+                .collect(),
+            eligible: true,
+            tpot_slo,
+        }
+    }
+
+    /// Run one iteration (Fig 2). Returns false when idle. Cancellation
+    /// requests are honored at this boundary, before prefill/decode.
     pub fn step(&mut self) -> Result<bool> {
+        self.reap_cancelled()?;
         let kv = &self.kv;
         let action = self.batcher.next_action(|tokens| kv.can_admit(tokens));
         match action {
@@ -214,6 +268,85 @@ impl InferenceServer {
         Ok(())
     }
 
+    fn emit_to(handles: &HashMap<u64, Arc<Mutex<EventChannel>>>, id: u64, event: RequestEvent) {
+        if let Some(chan) = handles.get(&id) {
+            chan.lock().unwrap().push(event);
+        }
+    }
+
+    /// Remove requests whose handles requested cancellation: queued ones
+    /// simply leave the queue; running ones free their KV pages and
+    /// device slot. Each gets exactly one terminal `Cancelled` event.
+    fn reap_cancelled(&mut self) -> Result<()> {
+        let cancelled: Vec<u64> = self
+            .handles
+            .iter()
+            .filter(|(_, chan)| {
+                let c = chan.lock().unwrap();
+                c.cancel_requested() && !c.is_terminal()
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        for id in cancelled {
+            if self.batcher.remove_queued(id).is_none() {
+                if self.batcher.remove_running(id).is_some() {
+                    self.kv.free_request(id)?;
+                    self.slots.remove(&id);
+                } else {
+                    continue; // neither queued nor running: already terminating
+                }
+            }
+            self.metrics.cancelled(id);
+            Self::emit_to(&self.handles, id, RequestEvent::Cancelled);
+            self.handles.remove(&id);
+        }
+        Ok(())
+    }
+
+    /// Pick the next token for one logits row: greedy argmax, or seeded
+    /// top-k sampling when the request asks for it. Sampling is seeded
+    /// per (request seed, id, position) so results are independent of
+    /// batch composition.
+    fn pick_token(
+        &self,
+        logits: &[f32],
+        row: usize,
+        sampling: &SamplingParams,
+        id: u64,
+        position: usize,
+    ) -> i32 {
+        if sampling.top_k <= 1 {
+            return self.runtime.argmax_row(logits, row);
+        }
+        let vocab = self.runtime.vocab;
+        let slice = &logits[row * vocab..(row + 1) * vocab];
+        let k = sampling.top_k.min(vocab);
+        // k-sized partial scan, descending: avoids a vocab-sized
+        // allocation per sampled token on the decode hot path.
+        let mut top: Vec<(f32, usize)> = Vec::with_capacity(k + 1);
+        for (i, &v) in slice.iter().enumerate() {
+            if top.len() < k || v > top.last().unwrap().0 {
+                let pos = top.partition_point(|&(t, _)| t >= v);
+                top.insert(pos, (v, i));
+                if top.len() > k {
+                    top.pop();
+                }
+            }
+        }
+        let max = top[0].0;
+        let weights: Vec<f64> = top
+            .iter()
+            .map(|&(v, _)| f64::from(v - max).exp())
+            .collect();
+        let mut rng = Rng::new(
+            sampling
+                .seed
+                .wrapping_add(id.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                .wrapping_add((position as u64).wrapping_mul(0xD1B5_4A32_D192_ED03)),
+        );
+        top[rng.discrete(&weights)].1 as i32
+    }
+
     fn run_prefill(&mut self, admit: usize) -> Result<()> {
         let admits = self.batcher.take_admits(admit);
 
@@ -227,12 +360,12 @@ impl InferenceServer {
             let acq = self.slot_cache.acquire_fixed(q.req.adapter);
             slot_of.push(acq.slot);
             if acq.cold && self.config.cold_start != ColdStartMode::Cached {
-                let spec = self
-                    .repo
-                    .get(q.req.adapter)
-                    .cloned()
-                    .unwrap_or_else(|| LoraSpec::standard(q.req.adapter, 8, "tiny"));
-                total_load += self.loader.load_time(&spec);
+                // submit() validated installation, so a missing spec is
+                // an engine invariant breach — never fabricate one.
+                let spec = self.repo.get(q.req.adapter).ok_or_else(|| {
+                    anyhow!("adapter {} missing from repository", q.req.adapter)
+                })?;
+                total_load += self.loader.load_time(spec);
             }
         }
 
@@ -262,11 +395,12 @@ impl InferenceServer {
             }
         };
 
-        // Apply results per admitted request.
+        // Apply results per admitted request: first token, KV admission,
+        // FirstToken event, stop-token check.
         let (bb, bs) = out.bucket;
         for (row, q) in admits.iter().enumerate() {
             let id = q.req.id;
-            let first = self.runtime.argmax_row(&out.logits, row);
+            let first = self.pick_token(&out.logits, row, &q.req.sampling, id, 0);
             self.kv.admit_from_prefill(
                 id,
                 &out.k_cache,
@@ -277,15 +411,17 @@ impl InferenceServer {
                 q.req.prompt.len(),
             )?;
             self.metrics.token(id);
-            self.generating.insert(id, vec![first]);
+            Self::emit_to(&self.handles, id, RequestEvent::FirstToken(first));
             self.slots.insert(id, slot_of[row]);
             let running = RunningReq {
                 id,
                 adapter: q.req.adapter,
                 ctx: q.req.prompt.len(),
                 generated: 1,
-                max_new_tokens: q.req.max_new_tokens,
+                sampling: q.req.sampling.clone(),
+                slo: q.req.slo,
                 last_token: first,
+                stopped: q.req.sampling.stop_tokens.contains(&first),
             };
             if running.finished() {
                 self.finish(running)?;
@@ -322,14 +458,20 @@ impl InferenceServer {
         self.k_scratch = k;
         self.v_scratch = v;
         for (row, id) in ids.iter().enumerate() {
-            let tok = self.runtime.argmax_row(&out.logits, row);
+            let tok = {
+                let r = &self.batcher.running[row];
+                self.pick_token(&out.logits, row, &r.sampling, *id, r.generated)
+            };
             self.kv.append_token(*id, &out.k_new, &out.v_new, bb, row)?;
             self.metrics.token(*id);
-            self.generating.get_mut(id).unwrap().push(tok);
+            Self::emit_to(&self.handles, *id, RequestEvent::Token(tok));
             let r = &mut self.batcher.running[row];
             r.generated += 1;
             r.ctx += 1;
             r.last_token = tok;
+            if r.sampling.stop_tokens.contains(&tok) {
+                r.stopped = true;
+            }
         }
         for done in self.batcher.reap_finished() {
             self.finish(done)?;
@@ -340,10 +482,33 @@ impl InferenceServer {
     fn finish(&mut self, r: RunningReq) -> Result<()> {
         self.kv.free_request(r.id)?;
         self.slots.remove(&r.id);
-        let tokens = self.generating.remove(&r.id).unwrap_or_default();
         self.metrics.finished(r.id);
-        self.outputs.push(RequestOutput { id: r.id, tokens });
+        let reason = if r.stopped {
+            FinishReason::Stop
+        } else {
+            FinishReason::Length
+        };
+        Self::emit_to(&self.handles, r.id, RequestEvent::Finished(reason));
+        self.handles.remove(&r.id);
         Ok(())
+    }
+}
+
+impl ServingFront for InferenceServer {
+    fn submit(&mut self, req: ServeRequest) -> RequestHandle {
+        InferenceServer::submit(self, req)
+    }
+
+    fn poll(&mut self) -> Result<bool> {
+        self.step()
+    }
+
+    fn cancel(&mut self, id: u64) -> bool {
+        InferenceServer::cancel(self, id)
+    }
+
+    fn stats(&self) -> ServerStats {
+        InferenceServer::stats(self)
     }
 }
 
@@ -363,4 +528,4 @@ fn spin_sleep(d: Duration) {
 }
 
 // Engine integration tests (require built artifacts) live in
-// rust/tests/integration_engine.rs.
+// rust/tests/integration_engine.rs and rust/tests/integration_front.rs.

@@ -13,15 +13,28 @@
 use std::collections::HashMap;
 
 /// Errors from the KV manager.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum KvError {
-    #[error("out of KV pages (need {need}, free {free})")]
     OutOfPages { need: usize, free: usize },
-    #[error("unknown request {0}")]
     UnknownRequest(u64),
-    #[error("request {0} exceeds cache capacity {1}")]
     TooLong(u64, usize),
 }
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::OutOfPages { need, free } => {
+                write!(f, "out of KV pages (need {need}, free {free})")
+            }
+            KvError::UnknownRequest(id) => write!(f, "unknown request {id}"),
+            KvError::TooLong(id, cap) => {
+                write!(f, "request {id} exceeds cache capacity {cap}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
 
 struct RequestKv {
     pages: Vec<usize>,

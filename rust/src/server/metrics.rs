@@ -1,25 +1,46 @@
 //! Per-request serving metrics (§7.1: time-to-first-token, time per
-//! token, request latency) and aggregation.
+//! token, request latency) and aggregation, including per-request TPOT
+//! (decode-only time per output token) and per-SLO attainment — the
+//! paper's §7 headline metrics.
 
 use std::collections::HashMap;
 use std::time::Instant;
 
+use super::api::SloSpec;
 use crate::util::stats::{Ecdf, Summary};
 
 /// One request's completed timing record.
 #[derive(Debug, Clone)]
 pub struct RequestRecord {
     pub id: u64,
+    /// Time to first token (s).
     pub ttft: f64,
+    /// Whole-request time per token: latency / output_len (s).
     pub time_per_token: f64,
+    /// Decode-only time per output token: (latency − ttft) / (n − 1),
+    /// zero for single-token outputs (s).
+    pub tpot: f64,
+    /// End-to-end latency (s).
     pub latency: f64,
     pub output_len: usize,
+    /// The SLO the request carried, if any.
+    pub slo: Option<SloSpec>,
+}
+
+impl RequestRecord {
+    /// Did this request meet its SLO? `None` if it carried none.
+    pub fn slo_met(&self) -> Option<bool> {
+        self.slo.map(|s| {
+            self.ttft * 1e3 <= s.ttft_ms && self.tpot * 1e3 <= s.tpot_ms
+        })
+    }
 }
 
 struct InFlight {
     arrival: Instant,
     first_token: Option<Instant>,
     tokens: usize,
+    slo: Option<SloSpec>,
 }
 
 /// Records request lifecycles and produces summaries.
@@ -27,6 +48,7 @@ struct InFlight {
 pub struct MetricsRecorder {
     inflight: HashMap<u64, InFlight>,
     done: Vec<RequestRecord>,
+    cancelled: usize,
 }
 
 impl MetricsRecorder {
@@ -35,14 +57,15 @@ impl MetricsRecorder {
         Self::default()
     }
 
-    /// A request arrived.
-    pub fn arrived(&mut self, id: u64) {
+    /// A request arrived (carrying an optional SLO).
+    pub fn arrived(&mut self, id: u64, slo: Option<SloSpec>) {
         self.inflight.insert(
             id,
             InFlight {
                 arrival: Instant::now(),
                 first_token: None,
                 tokens: 0,
+                slo,
             },
         );
     }
@@ -66,13 +89,28 @@ impl MetricsRecorder {
                 .first_token
                 .map(|t| t.duration_since(f.arrival).as_secs_f64())
                 .unwrap_or(latency);
+            let tpot = if f.tokens > 1 {
+                (latency - ttft).max(0.0) / (f.tokens - 1) as f64
+            } else {
+                0.0
+            };
             self.done.push(RequestRecord {
                 id,
                 ttft,
                 time_per_token: latency / f.tokens.max(1) as f64,
+                tpot,
                 latency,
                 output_len: f.tokens,
+                slo: f.slo,
             });
+        }
+    }
+
+    /// The request was cancelled before completion; drop its in-flight
+    /// record (cancelled requests don't pollute latency distributions).
+    pub fn cancelled(&mut self, id: u64) {
+        if self.inflight.remove(&id).is_some() {
+            self.cancelled += 1;
         }
     }
 
@@ -81,12 +119,28 @@ impl MetricsRecorder {
         &self.done
     }
 
+    /// Requests cancelled before completion.
+    pub fn cancelled_count(&self) -> usize {
+        self.cancelled
+    }
+
     /// Requests still in flight.
     pub fn inflight(&self) -> usize {
         self.inflight.len()
     }
 
-    /// Summary of one metric column ("ttft" | "tpt" | "latency").
+    /// Fraction of completed SLO-carrying requests that met both their
+    /// TTFT and TPOT targets; `None` if no completed request carried one.
+    pub fn slo_attainment(&self) -> Option<f64> {
+        let judged: Vec<bool> = self.done.iter().filter_map(|r| r.slo_met()).collect();
+        if judged.is_empty() {
+            return None;
+        }
+        let met = judged.iter().filter(|&&m| m).count();
+        Some(met as f64 / judged.len() as f64)
+    }
+
+    /// Summary of one metric column ("ttft" | "tpt" | "tpot" | "latency").
     pub fn summary(&self, metric: &str) -> Option<Summary> {
         Summary::of(&self.column(metric))
     }
@@ -102,6 +156,7 @@ impl MetricsRecorder {
             .map(|r| match metric {
                 "ttft" => r.ttft,
                 "tpt" => r.time_per_token,
+                "tpot" => r.tpot,
                 "latency" => r.latency,
                 other => panic!("unknown metric {other}"),
             })
@@ -124,7 +179,7 @@ mod tests {
     #[test]
     fn lifecycle_produces_record() {
         let mut m = MetricsRecorder::new();
-        m.arrived(1);
+        m.arrived(1, None);
         std::thread::sleep(std::time::Duration::from_millis(5));
         m.token(1);
         m.token(1);
@@ -135,20 +190,91 @@ mod tests {
         assert!(r.latency >= r.ttft);
         assert_eq!(r.output_len, 2);
         assert!(r.time_per_token > 0.0);
+        assert!(r.tpot >= 0.0);
+        assert!(r.slo_met().is_none());
         assert_eq!(m.inflight(), 0);
+    }
+
+    #[test]
+    fn tpot_measures_decode_only() {
+        let mut m = MetricsRecorder::new();
+        m.arrived(1, None);
+        m.token(1); // first token: ends TTFT window
+        std::thread::sleep(std::time::Duration::from_millis(6));
+        m.token(1);
+        m.token(1);
+        m.finished(1);
+        let r = &m.records()[0];
+        // 2 decode tokens over ≥6 ms → tpot ≥ 3 ms, and well above the
+        // (near-zero) ttft.
+        assert!(r.tpot >= 3e-3, "tpot {}", r.tpot);
+        assert!(r.tpot > r.ttft);
+    }
+
+    #[test]
+    fn slo_attainment_judges_only_slo_requests() {
+        let mut m = MetricsRecorder::new();
+        // Generous SLO: met.
+        m.arrived(
+            1,
+            Some(SloSpec {
+                ttft_ms: 1e6,
+                tpot_ms: 1e6,
+            }),
+        );
+        m.token(1);
+        m.finished(1);
+        // Impossible SLO: missed.
+        m.arrived(
+            2,
+            Some(SloSpec {
+                ttft_ms: 0.0,
+                tpot_ms: 0.0,
+            }),
+        );
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        m.token(2);
+        m.finished(2);
+        // No SLO: not judged.
+        m.arrived(3, None);
+        m.token(3);
+        m.finished(3);
+        assert_eq!(m.slo_attainment(), Some(0.5));
+    }
+
+    #[test]
+    fn no_slo_requests_means_no_attainment() {
+        let mut m = MetricsRecorder::new();
+        m.arrived(1, None);
+        m.token(1);
+        m.finished(1);
+        assert_eq!(m.slo_attainment(), None);
+    }
+
+    #[test]
+    fn cancelled_requests_drop_from_inflight() {
+        let mut m = MetricsRecorder::new();
+        m.arrived(1, None);
+        m.token(1);
+        m.cancelled(1);
+        m.cancelled(99); // unknown: ignored
+        assert_eq!(m.cancelled_count(), 1);
+        assert_eq!(m.inflight(), 0);
+        assert!(m.records().is_empty());
     }
 
     #[test]
     fn summary_and_ecdf() {
         let mut m = MetricsRecorder::new();
         for id in 0..10 {
-            m.arrived(id);
+            m.arrived(id, None);
             m.token(id);
             m.finished(id);
         }
         let s = m.summary("latency").unwrap();
         assert_eq!(s.count, 10);
         assert_eq!(m.ecdf("ttft").len(), 10);
+        assert!(m.summary("tpot").is_some());
     }
 
     #[test]
@@ -163,7 +289,7 @@ mod tests {
     fn throughput_math() {
         let mut m = MetricsRecorder::new();
         for id in 0..4 {
-            m.arrived(id);
+            m.arrived(id, None);
             m.token(id);
             m.token(id);
             m.finished(id);

@@ -1,17 +1,22 @@
 //! The LLM inference server (the paper's per-server component, §3):
-//! request queue + continuous batcher + paged KV-cache manager + the
-//! PJRT model runtime + cold-start handling.
+//! streaming request-lifecycle API + continuous batcher + paged
+//! KV-cache manager + the PJRT model runtime + cold-start handling.
 //!
-//! - [`api`] — request/response types and per-request lifecycle state.
+//! - [`api`] — the request-lifecycle API: [`ServeRequest`] builder,
+//!   [`RequestHandle`] event streams with cancellation, and the
+//!   [`ServingFront`] trait both the engine and the simulator
+//!   ([`crate::sim::front::SimFront`]) implement.
 //! - [`kvcache`] — paged KV-cache manager (block-granular alloc/free,
 //!   batch assembly for the decode bucket inputs).
 //! - [`batcher`] — iteration-level continuous-batching policy (Fig 2):
-//!   arrivals preempt decode; completed requests leave every iteration.
+//!   arrivals preempt decode; completed requests leave every iteration;
+//!   priority classes order admission.
 //! - [`engine`] — [`InferenceServer`]: drives the runtime, streams
-//!   tokens, records TTFT / time-per-token / request latency, and
-//!   applies the serving mode's cold-start behaviour (Cached / OnDemand
-//!   / CaraServe overlap).
-//! - [`metrics`] — per-request metric recording and summaries.
+//!   per-token [`RequestEvent`]s, honors cancellation and stop tokens
+//!   mid-flight, and applies the serving mode's cold-start behaviour
+//!   (Cached / OnDemand / CaraServe overlap).
+//! - [`metrics`] — per-request TTFT / TPOT / latency recording, SLO
+//!   attainment, and summaries.
 
 pub mod api;
 pub mod batcher;
@@ -19,7 +24,10 @@ pub mod engine;
 pub mod kvcache;
 pub mod metrics;
 
-pub use api::{InferenceRequest, RequestOutput};
+pub use api::{
+    FinishReason, LifecycleState, Priority, RequestEvent, RequestHandle, SamplingParams,
+    ServeRequest, ServingFront, SloSpec,
+};
 pub use batcher::{Batcher, NextAction};
 pub use engine::{ColdStartMode, EngineConfig, InferenceServer};
 pub use kvcache::KvCacheManager;

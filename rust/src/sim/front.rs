@@ -1,0 +1,424 @@
+//! [`SimFront`]: the discrete-event simulator behind the streaming
+//! [`ServingFront`] surface.
+//!
+//! Wraps one [`SimInstance`] with the same request-lifecycle API the
+//! PJRT engine exposes: `submit` returns a [`RequestHandle`], `poll`
+//! advances one simulated iteration and translates its
+//! [`IterOutcome`] into per-request events, cancellation and stop
+//! tokens are honored at iteration boundaries, and `stats` produces the
+//! scheduler's [`ServerStats`] view. This lets schedulers, drivers, and
+//! the lifecycle test-suite run identical code against the simulator
+//! and the real engine.
+//!
+//! The simulator models latency, not content, so the token *values* are
+//! synthesized deterministically: request `r`'s `n`-th output token is
+//! `n` (0, 1, 2, …). A stop token `k` therefore terminates a stream
+//! after `k + 1` tokens — enough to exercise the stop-token lifecycle
+//! path end to end.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::instance::{IterOutcome, SimInstance, SimReq};
+use super::workload::WorkloadRequest;
+use crate::scheduler::registry::{AdapterMeta, GlobalRegistry};
+use crate::scheduler::ServerStats;
+use crate::server::api::{
+    EventChannel, FinishReason, Priority, RequestEvent, RequestHandle, SamplingParams,
+    ServeRequest, ServingFront, SloSpec,
+};
+
+/// Book-keeping for one live simulated request.
+struct LiveReq {
+    channel: Arc<Mutex<EventChannel>>,
+    sampling: SamplingParams,
+    priority: Priority,
+    slo: Option<SloSpec>,
+    /// Tokens emitted so far (also the value of the next token).
+    emitted: usize,
+}
+
+/// A simulated inference server exposing the [`ServingFront`] API.
+pub struct SimFront {
+    inst: SimInstance,
+    /// Adapter metadata (rank) — requests against unregistered adapters
+    /// are rejected, mirroring the engine's installed-adapter check.
+    registry: GlobalRegistry,
+    /// Simulated clock (seconds).
+    clock: f64,
+    next_id: u64,
+    live: HashMap<u64, LiveReq>,
+    /// Largest prompt accepted (mirrors the engine's bucket bound).
+    max_prompt: usize,
+    /// Per-request token capacity (mirrors the engine's KV bound
+    /// `prompt + output ≤ capacity + 1`); unbounded by default.
+    kv_capacity: usize,
+}
+
+impl SimFront {
+    /// Wrap an instance. `max_prompt` bounds accepted prompt lengths.
+    pub fn new(inst: SimInstance, max_prompt: usize) -> SimFront {
+        SimFront {
+            inst,
+            registry: GlobalRegistry::new(),
+            clock: 0.0,
+            next_id: 0,
+            live: HashMap::new(),
+            max_prompt,
+            kv_capacity: usize::MAX,
+        }
+    }
+
+    /// Mirror the engine's per-request KV bound: requests with
+    /// `prompt + max_new_tokens > capacity + 1` are rejected, so drivers
+    /// tuned against the simulator see the engine's admission behavior.
+    pub fn with_kv_capacity(mut self, capacity: usize) -> SimFront {
+        self.kv_capacity = capacity;
+        self
+    }
+
+    /// Register an adapter (id + rank) so requests against it are
+    /// admitted.
+    pub fn install_adapter(&mut self, id: u64, rank: usize) {
+        self.registry.register(AdapterMeta {
+            id,
+            rank,
+            base_model: self.inst.model.cfg.name.clone(),
+            weights_path: String::new(),
+        });
+    }
+
+    /// The simulated clock (seconds since construction).
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// The wrapped instance (completed `SimReq`s, iteration log, …).
+    pub fn instance(&self) -> &SimInstance {
+        &self.inst
+    }
+
+    fn validate(&self, req: &ServeRequest) -> Result<usize, String> {
+        crate::server::api::validate_shape(req, self.max_prompt, self.kv_capacity)?;
+        self.registry
+            .rank_of(req.adapter)
+            .ok_or_else(|| format!("adapter {} not installed", req.adapter))
+    }
+
+    fn emit(&self, id: u64, event: RequestEvent) {
+        if let Some(req) = self.live.get(&id) {
+            req.channel.lock().unwrap().push(event);
+        }
+    }
+
+    /// Honor pending cancellations at the iteration boundary: remove the
+    /// request from the instance's queue or running batch and emit the
+    /// terminal `Cancelled` event.
+    fn reap_cancelled(&mut self) {
+        let cancelled: Vec<u64> = self
+            .live
+            .iter()
+            .filter(|(_, r)| {
+                let c = r.channel.lock().unwrap();
+                c.cancel_requested() && !c.is_terminal()
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        for id in cancelled {
+            let in_queue = self.inst.queue.iter().position(|r| r.req.id == id);
+            if let Some(pos) = in_queue {
+                let _ = self.inst.queue.remove(pos);
+            } else if let Some(pos) = self.inst.running.iter().position(|r| r.req.id == id) {
+                self.inst.running.remove(pos);
+            } else {
+                continue; // mid-iteration; retry at the next boundary
+            }
+            self.emit(id, RequestEvent::Cancelled);
+            self.live.remove(&id);
+        }
+    }
+
+    /// Translate one iteration's outcome into request events, applying
+    /// stop tokens.
+    fn apply_outcome(&mut self, outcome: IterOutcome) {
+        let now = self.clock;
+        for &id in &outcome.emitted {
+            let Some(req) = self.live.get_mut(&id) else {
+                continue;
+            };
+            let token = req.emitted as i32;
+            req.emitted += 1;
+            let first = outcome.first_tokens.contains(&id);
+            let stop = req.sampling.stop_tokens.contains(&token);
+            let budget_done = outcome.finished.contains(&id);
+            {
+                let mut chan = req.channel.lock().unwrap();
+                chan.push(if first {
+                    RequestEvent::FirstToken(token)
+                } else {
+                    RequestEvent::Token(token)
+                });
+                if stop || budget_done {
+                    chan.push(RequestEvent::Finished(if stop {
+                        FinishReason::Stop
+                    } else {
+                        FinishReason::Length
+                    }));
+                }
+            }
+            if stop && !budget_done {
+                // Terminated ahead of budget: retire from the running
+                // batch and stamp completion for the instance's records.
+                if let Some(pos) = self.inst.running.iter().position(|r| r.req.id == id) {
+                    let mut sr = self.inst.running.remove(pos);
+                    sr.finish = Some(now);
+                    self.inst.done.push(sr);
+                }
+            }
+            if stop || budget_done {
+                self.live.remove(&id);
+            }
+        }
+    }
+}
+
+impl ServingFront for SimFront {
+    fn submit(&mut self, req: ServeRequest) -> RequestHandle {
+        let id = self.next_id;
+        self.next_id += 1;
+        let (handle, channel) = RequestHandle::new(id);
+        let rank = match self.validate(&req) {
+            Ok(rank) => rank,
+            Err(reason) => {
+                channel.lock().unwrap().push(RequestEvent::Rejected(reason));
+                return handle;
+            }
+        };
+        channel.lock().unwrap().push(RequestEvent::Admitted);
+        // Priority insertion via the same helper as the engine's batcher
+        // (unknown ids — never live here — rank highest, i.e. stay put).
+        let pos = crate::server::api::priority_insert_pos(
+            self.inst.queue.iter().map(|q| {
+                self.live
+                    .get(&q.req.id)
+                    .map_or(Priority::Interactive, |l| l.priority)
+            }),
+            req.priority,
+        );
+        self.inst.queue.insert(
+            pos,
+            SimReq::new(WorkloadRequest {
+                id,
+                arrival: self.clock,
+                adapter: req.adapter,
+                rank,
+                prompt_len: req.prompt.len(),
+                output_len: req.sampling.max_new_tokens,
+            }),
+        );
+        self.live.insert(
+            id,
+            LiveReq {
+                channel,
+                sampling: req.sampling,
+                priority: req.priority,
+                slo: req.slo,
+                emitted: 0,
+            },
+        );
+        handle
+    }
+
+    fn poll(&mut self) -> anyhow::Result<bool> {
+        self.reap_cancelled();
+        if !self.inst.has_work() {
+            return Ok(false);
+        }
+        let duration = self.inst.start_iteration(self.clock);
+        self.clock += duration;
+        let outcome = self.inst.finish_iteration(self.clock);
+        self.apply_outcome(outcome);
+        Ok(true)
+    }
+
+    fn cancel(&mut self, id: u64) -> bool {
+        match self.live.get(&id) {
+            Some(req) => req.channel.lock().unwrap().try_request_cancel(),
+            None => false,
+        }
+    }
+
+    fn stats(&self) -> ServerStats {
+        ServerStats {
+            running_ranks: self.inst.running_ranks(),
+            queued_ranks: self.inst.queued_ranks(),
+            eligible: true,
+            tpot_slo: crate::server::api::tightest_tpot_slo(
+                self.live.values().map(|r| &r.slo),
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+    use crate::model::LlamaConfig;
+    use crate::server::api::{LifecycleState, Priority};
+    use crate::sim::{GpuModel, ServingMode};
+
+    fn front() -> SimFront {
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let inst = SimInstance::new(0, model, ServingMode::CaraServe, 32, 8, 64);
+        let mut front = SimFront::new(inst, 512);
+        for id in 0..8 {
+            front.install_adapter(id, 64);
+        }
+        front
+    }
+
+    fn request(adapter: u64, prompt: usize, max_new: usize) -> ServeRequest {
+        ServeRequest::new(adapter, vec![1; prompt]).max_new_tokens(max_new)
+    }
+
+    #[test]
+    fn full_lifecycle_event_ordering() {
+        let mut f = front();
+        let h = f.submit(request(1, 32, 4));
+        f.run_until_idle().unwrap();
+        let events = h.drain_events();
+        assert_eq!(events[0], RequestEvent::Admitted);
+        assert_eq!(events[1], RequestEvent::FirstToken(0));
+        assert_eq!(events[2], RequestEvent::Token(1));
+        assert_eq!(events[3], RequestEvent::Token(2));
+        assert_eq!(events[4], RequestEvent::Token(3));
+        assert_eq!(events[5], RequestEvent::Finished(FinishReason::Length));
+        assert_eq!(events.len(), 6);
+        assert_eq!(h.tokens(), vec![0, 1, 2, 3]);
+        assert_eq!(h.state(), LifecycleState::Finished);
+    }
+
+    #[test]
+    fn unregistered_adapter_rejected() {
+        let mut f = front();
+        let h = f.submit(request(999, 16, 2));
+        assert_eq!(h.state(), LifecycleState::Rejected);
+        // No work admitted; polling stays idle.
+        assert!(!f.poll().unwrap());
+    }
+
+    #[test]
+    fn oversized_prompt_rejected() {
+        let mut f = front();
+        let h = f.submit(request(1, 513, 2));
+        assert_eq!(h.state(), LifecycleState::Rejected);
+        let h2 = f.submit(ServeRequest::new(1, vec![]));
+        assert_eq!(h2.state(), LifecycleState::Rejected);
+    }
+
+    #[test]
+    fn kv_capacity_bound_mirrors_engine() {
+        let mut f = front().with_kv_capacity(128);
+        // 32 + 97 = 129 > 128 + 1 → rejected, like the engine's bound.
+        let h = f.submit(request(1, 32, 98));
+        assert_eq!(h.state(), LifecycleState::Rejected);
+        let h2 = f.submit(request(1, 32, 97));
+        assert_eq!(h2.state(), LifecycleState::Queued);
+        f.run_until_idle().unwrap();
+        assert_eq!(h2.state(), LifecycleState::Finished);
+    }
+
+    #[test]
+    fn cancel_while_queued_never_runs() {
+        let mut f = front();
+        let h = f.submit(request(1, 32, 8));
+        assert!(f.cancel(h.id()));
+        f.run_until_idle().unwrap();
+        assert_eq!(h.state(), LifecycleState::Cancelled);
+        assert!(h.tokens().is_empty());
+        // Cancelling again (or an unknown id) reports dead.
+        assert!(!f.cancel(h.id()));
+        assert!(!f.cancel(12345));
+    }
+
+    #[test]
+    fn cancel_mid_decode_stops_stream() {
+        let mut f = front();
+        let h = f.submit(request(1, 32, 50));
+        // Prefill + a couple of decode steps.
+        for _ in 0..3 {
+            assert!(f.poll().unwrap());
+        }
+        assert_eq!(h.state(), LifecycleState::Running);
+        assert!(f.cancel(h.id()));
+        f.run_until_idle().unwrap();
+        assert_eq!(h.state(), LifecycleState::Cancelled);
+        let n = h.tokens().len();
+        assert!((1..50).contains(&n), "tokens after cancel: {n}");
+        let events = h.drain_events();
+        assert_eq!(events.last(), Some(&RequestEvent::Cancelled));
+        assert_eq!(
+            events.iter().filter(|e| e.is_terminal()).count(),
+            1,
+            "exactly one terminal event"
+        );
+    }
+
+    #[test]
+    fn stop_token_terminates_early_with_stop_reason() {
+        let mut f = front();
+        // Synthesized stream is 0, 1, 2, …; stop at 2 → 3 tokens.
+        let h = f.submit(request(1, 32, 50).stop_token(2));
+        f.run_until_idle().unwrap();
+        assert_eq!(h.tokens(), vec![0, 1, 2]);
+        let events = h.drain_events();
+        assert_eq!(
+            events.last(),
+            Some(&RequestEvent::Finished(FinishReason::Stop))
+        );
+    }
+
+    #[test]
+    fn stop_on_first_token_finishes_at_prefill() {
+        let mut f = front();
+        let h = f.submit(request(1, 32, 50).stop_token(0));
+        f.run_until_idle().unwrap();
+        assert_eq!(h.tokens(), vec![0]);
+        assert_eq!(h.state(), LifecycleState::Finished);
+    }
+
+    #[test]
+    fn stats_reports_ranks_and_tightest_slo() {
+        let mut f = front();
+        f.install_adapter(7, 16);
+        let _h1 = f.submit(request(1, 32, 8).slo(500.0, 80.0));
+        let _h2 = f.submit(
+            ServeRequest::new(7, vec![1; 16])
+                .max_new_tokens(8)
+                .priority(Priority::Interactive)
+                .slo(200.0, 40.0),
+        );
+        let s = f.stats();
+        assert_eq!(s.queued_ranks.len(), 2);
+        assert!(s.queued_ranks.contains(&64) && s.queued_ranks.contains(&16));
+        assert!(s.eligible);
+        assert!((s.tpot_slo.unwrap() - 0.040).abs() < 1e-12);
+        // After prefill both are running.
+        f.poll().unwrap();
+        let s = f.stats();
+        assert_eq!(s.running_ranks.len(), 2);
+        assert!(s.queued_ranks.is_empty());
+    }
+
+    #[test]
+    fn simulated_clock_advances_only_with_work() {
+        let mut f = front();
+        assert_eq!(f.clock(), 0.0);
+        assert!(!f.poll().unwrap());
+        assert_eq!(f.clock(), 0.0);
+        let _h = f.submit(request(1, 64, 3));
+        f.run_until_idle().unwrap();
+        assert!(f.clock() > 0.0);
+    }
+}

@@ -63,7 +63,7 @@ pub struct SimReq {
 }
 
 impl SimReq {
-    fn new(req: WorkloadRequest) -> SimReq {
+    pub(crate) fn new(req: WorkloadRequest) -> SimReq {
         SimReq {
             req,
             ctx: 0,
@@ -149,6 +149,19 @@ impl AdapterCache {
 pub struct IterRecord {
     pub is_prefill: bool,
     pub duration: f64,
+}
+
+/// Per-request outcomes of one completed iteration — what streaming
+/// front-ends ([`crate::sim::front::SimFront`]) translate into
+/// [`crate::server::RequestEvent`]s.
+#[derive(Debug, Clone, Default)]
+pub struct IterOutcome {
+    /// Requests that emitted their *first* token this iteration.
+    pub first_tokens: Vec<u64>,
+    /// Requests that emitted a token this iteration (includes firsts).
+    pub emitted: Vec<u64>,
+    /// Requests that exhausted their output budget and completed.
+    pub finished: Vec<u64>,
 }
 
 /// A simulated inference server.
@@ -329,10 +342,13 @@ impl SimInstance {
     }
 
     /// Complete the in-flight iteration at time `now` (= start + the
-    /// duration returned by [`Self::start_iteration`]).
-    pub fn finish_iteration(&mut self, now: f64) {
+    /// duration returned by [`Self::start_iteration`]). Returns the
+    /// per-request outcomes so streaming front-ends can emit events;
+    /// batch drivers are free to ignore them.
+    pub fn finish_iteration(&mut self, now: f64) -> IterOutcome {
         assert!(self.busy, "no iteration in flight");
         self.busy = false;
+        let mut outcome = IterOutcome::default();
         if !self.pending_prefill.is_empty() {
             // The blocked in-flight requests absorbed this iteration's
             // cold-start time too (Fig 2's cumulative delay).
@@ -346,7 +362,10 @@ impl SimInstance {
                 sr.token_times.push(now);
                 sr.ctx = sr.req.prompt_len;
                 sr.generated = 1;
+                outcome.first_tokens.push(sr.req.id);
+                outcome.emitted.push(sr.req.id);
                 if sr.generated >= sr.req.output_len {
+                    outcome.finished.push(sr.req.id);
                     sr.finish = Some(now);
                     self.done.push(sr);
                 } else {
@@ -360,7 +379,9 @@ impl SimInstance {
                 sr.generated += 1;
                 sr.ctx += 1;
                 sr.token_times.push(now);
+                outcome.emitted.push(sr.req.id);
                 if sr.generated >= sr.req.output_len {
+                    outcome.finished.push(sr.req.id);
                     sr.finish = Some(now);
                     self.done.push(sr);
                 } else {
@@ -369,6 +390,7 @@ impl SimInstance {
             }
             self.running = still_running;
         }
+        outcome
     }
 
     /// Duration of the iteration currently in flight.
@@ -505,6 +527,27 @@ mod tests {
     fn slora_uses_mbgmv_kernel() {
         assert_eq!(ServingMode::SLora.kernel(), KernelKind::Mbgmv);
         assert_eq!(ServingMode::CaraServe.kernel(), KernelKind::Bgmv);
+    }
+
+    #[test]
+    fn iter_outcome_reports_token_emissions() {
+        let mut inst = instance(ServingMode::Cached);
+        inst.enqueue(req(1, 1, 64, 3));
+        let d = inst.start_iteration(0.0);
+        let out = inst.finish_iteration(d);
+        assert_eq!(out.first_tokens, vec![1]);
+        assert_eq!(out.emitted, vec![1]);
+        assert!(out.finished.is_empty());
+        let mut t = d;
+        let mut finished = Vec::new();
+        while inst.has_work() {
+            let d = inst.start_iteration(t);
+            t += d;
+            let out = inst.finish_iteration(t);
+            assert!(out.first_tokens.is_empty());
+            finished.extend(out.finished);
+        }
+        assert_eq!(finished, vec![1]);
     }
 
     #[test]

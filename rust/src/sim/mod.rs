@@ -4,7 +4,11 @@
 //! 20) by simulating continuous-batching inference servers with the
 //! calibrated [`gpu::GpuModel`] latencies, fed by [`workload`]
 //! generators, optionally routed by a [`crate::scheduler::Policy`].
+//! [`front::SimFront`] additionally exposes a single instance behind the
+//! streaming [`crate::server::ServingFront`] API, so lifecycle-level
+//! code runs unchanged against simulator or real engine.
 
+pub mod front;
 pub mod gpu;
 pub mod instance;
 pub mod workload;
@@ -12,8 +16,9 @@ pub mod workload;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+pub use front::SimFront;
 pub use gpu::GpuModel;
-pub use instance::{AdapterCache, ServingMode, SimInstance, SimReq};
+pub use instance::{AdapterCache, IterOutcome, ServingMode, SimInstance, SimReq};
 pub use workload::{AlpacaLengths, MafTrace, WorkloadRequest};
 
 use crate::scheduler::{Policy, SchedRequest, ServerStats};
@@ -178,6 +183,7 @@ impl Simulation {
                 running_ranks: Vec::new(),
                 queued_ranks: Vec::new(),
                 eligible: true,
+                tpot_slo: None,
             })
             .collect();
 

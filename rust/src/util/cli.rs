@@ -13,19 +13,30 @@ pub struct Args {
 }
 
 /// CLI parse error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing value for --{0}")]
     MissingValue(String),
-    #[error("invalid value for --{key}: {value} ({reason})")]
     Invalid {
         key: String,
         value: String,
         reason: String,
     },
-    #[error("unknown option --{0}")]
     Unknown(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(k) => write!(f, "missing value for --{k}"),
+            CliError::Invalid { key, value, reason } => {
+                write!(f, "invalid value for --{key}: {value} ({reason})")
+            }
+            CliError::Unknown(k) => write!(f, "unknown option --{k}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse from an iterator of raw arguments (excluding argv[0]).

@@ -21,15 +21,24 @@ pub enum Json {
 }
 
 /// Parse or access error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("parse error at byte {0}: {1}")]
     Parse(usize, String),
-    #[error("missing key: {0}")]
     MissingKey(String),
-    #[error("type mismatch for {0}")]
     Type(String),
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Parse(at, what) => write!(f, "parse error at byte {at}: {what}"),
+            JsonError::MissingKey(k) => write!(f, "missing key: {k}"),
+            JsonError::Type(k) => write!(f, "type mismatch for {k}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     /// Parse a JSON document from text.

@@ -1,12 +1,16 @@
 //! Integration: the full serving engine over the real PJRT runtime —
 //! continuous batching + paged KV + device slot cache + cold-start
-//! modes, end to end. Skips cleanly when artifacts aren't built.
+//! modes, driven through the streaming lifecycle API. Skips cleanly
+//! when artifacts aren't built.
 
 use std::path::PathBuf;
 
 use caraserve::model::LoraSpec;
 use caraserve::runtime::ModelRuntime;
-use caraserve::server::{ColdStartMode, EngineConfig, InferenceRequest, InferenceServer};
+use caraserve::server::{
+    ColdStartMode, EngineConfig, InferenceServer, LifecycleState, RequestEvent, RequestHandle,
+    ServeRequest,
+};
 use caraserve::util::rng::Rng;
 
 fn make_server(mode: ColdStartMode) -> Option<InferenceServer> {
@@ -33,14 +37,15 @@ fn make_server(mode: ColdStartMode) -> Option<InferenceServer> {
     Some(server)
 }
 
-fn requests(n: usize, seed: u64) -> Vec<InferenceRequest> {
+fn requests(n: usize, seed: u64) -> Vec<ServeRequest> {
     let mut rng = Rng::new(seed);
-    (0..n as u64)
-        .map(|id| InferenceRequest {
-            id,
-            adapter: rng.range(0, 32) as u64,
-            prompt: (0..rng.range(8, 30)).map(|_| rng.range(0, 1024) as i32).collect(),
-            max_new_tokens: rng.range(2, 8),
+    (0..n)
+        .map(|_| {
+            let adapter = rng.range(0, 32) as u64;
+            let prompt: Vec<i32> = (0..rng.range(8, 30))
+                .map(|_| rng.range(0, 1024) as i32)
+                .collect();
+            ServeRequest::new(adapter, prompt).max_new_tokens(rng.range(2, 8))
         })
         .collect()
 }
@@ -51,22 +56,21 @@ fn serves_batch_to_completion_with_correct_outputs() {
         return;
     };
     let reqs = requests(12, 7);
-    let expect: Vec<(u64, usize)> =
-        reqs.iter().map(|r| (r.id, r.max_new_tokens)).collect();
-    for r in reqs {
-        server.submit(r).unwrap();
-    }
+    let expect: Vec<usize> = reqs.iter().map(|r| r.sampling.max_new_tokens).collect();
+    let handles: Vec<RequestHandle> = reqs.into_iter().map(|r| server.submit(r)).collect();
     server.run_until_idle().unwrap();
 
-    assert_eq!(server.outputs().len(), 12);
-    for (id, want_len) in expect {
-        let out = server
-            .outputs()
-            .iter()
-            .find(|o| o.id == id)
-            .unwrap_or_else(|| panic!("missing output {id}"));
-        assert_eq!(out.tokens.len(), want_len, "request {id}");
-        assert!(out.tokens.iter().all(|&t| (0..1024).contains(&t)));
+    for (handle, want_len) in handles.iter().zip(expect) {
+        assert_eq!(handle.state(), LifecycleState::Finished, "request {}", handle.id());
+        let tokens = handle.tokens();
+        assert_eq!(tokens.len(), want_len, "request {}", handle.id());
+        assert!(tokens.iter().all(|&t| (0..1024).contains(&t)));
+        // Event stream shape: Admitted, FirstToken, Token*, Finished.
+        let events = handle.drain_events();
+        assert_eq!(events[0], RequestEvent::Admitted);
+        assert!(matches!(events[1], RequestEvent::FirstToken(_)));
+        assert!(events.last().unwrap().is_terminal());
+        assert_eq!(events.iter().filter(|e| e.is_terminal()).count(), 1);
     }
     // Metrics recorded for all.
     assert_eq!(server.metrics().records().len(), 12);
@@ -81,66 +85,112 @@ fn greedy_output_independent_of_batching_and_mode() {
     let Some(mut solo) = make_server(ColdStartMode::Cached) else {
         return;
     };
-    let probe = InferenceRequest {
-        id: 1000,
-        adapter: 3,
-        prompt: (0..20).map(|i| (i * 31 + 5) % 1024).collect(),
-        max_new_tokens: 6,
+    let probe = || {
+        ServeRequest::new(3, (0..20).map(|i| (i * 31 + 5) % 1024).collect())
+            .max_new_tokens(6)
     };
-    solo.submit(probe.clone()).unwrap();
+    let h = solo.submit(probe());
     solo.run_until_idle().unwrap();
-    let want = solo.outputs()[0].tokens.clone();
+    let want = h.tokens();
 
     let Some(mut busy) = make_server(ColdStartMode::CaraServe) else {
         return;
     };
     for r in requests(6, 9) {
-        busy.submit(r).unwrap();
+        busy.submit(r);
     }
-    busy.submit(probe).unwrap();
+    let h = busy.submit(probe());
     busy.run_until_idle().unwrap();
-    let got = busy
-        .outputs()
-        .iter()
-        .find(|o| o.id == 1000)
-        .expect("probe output")
-        .tokens
-        .clone();
-    assert_eq!(got, want, "batching changed greedy output");
+    assert_eq!(h.tokens(), want, "batching changed greedy output");
 }
 
 #[test]
-fn rejects_invalid_requests() {
+fn invalid_requests_surface_as_rejected_events() {
     let Some(mut server) = make_server(ColdStartMode::Cached) else {
         return;
     };
     // Empty prompt.
-    assert!(server
-        .submit(InferenceRequest {
-            id: 1,
-            adapter: 0,
-            prompt: vec![],
-            max_new_tokens: 4
-        })
-        .is_err());
+    let h = server.submit(ServeRequest::new(0, vec![]).max_new_tokens(4));
+    assert_eq!(h.state(), LifecycleState::Rejected);
     // Prompt over the largest bucket.
-    assert!(server
-        .submit(InferenceRequest {
-            id: 2,
-            adapter: 0,
-            prompt: vec![1; 65],
-            max_new_tokens: 4
-        })
-        .is_err());
+    let h = server.submit(ServeRequest::new(0, vec![1; 65]).max_new_tokens(4));
+    assert_eq!(h.state(), LifecycleState::Rejected);
     // Zero generation budget.
-    assert!(server
-        .submit(InferenceRequest {
-            id: 3,
-            adapter: 0,
-            prompt: vec![1; 8],
-            max_new_tokens: 0
-        })
-        .is_err());
+    let h = server.submit(ServeRequest::new(0, vec![1; 8]).max_new_tokens(0));
+    assert_eq!(h.state(), LifecycleState::Rejected);
+    // Uninstalled adapter: no fabricated rank-8 spec, a Rejected event.
+    let h = server.submit(ServeRequest::new(999, vec![1; 8]).max_new_tokens(4));
+    match h.drain_events().as_slice() {
+        [RequestEvent::Rejected(reason)] => {
+            assert!(reason.contains("adapter 999"), "{reason}");
+        }
+        other => panic!("expected lone Rejected event, got {other:?}"),
+    }
+    // Rejected requests never enter the queue.
+    assert!(!server.has_work());
+    server.run_until_idle().unwrap();
+    assert!(server.metrics().records().is_empty());
+}
+
+#[test]
+fn cancellation_queued_and_mid_decode() {
+    let Some(mut server) = make_server(ColdStartMode::CaraServe) else {
+        return;
+    };
+    // Cancel while queued: terminal Cancelled, no tokens.
+    let queued = server.submit(ServeRequest::new(1, vec![1; 10]).max_new_tokens(8));
+    assert!(server.cancel(queued.id()));
+    // Cancel mid-decode: submit a long request, run a few steps.
+    let long = server.submit(ServeRequest::new(2, vec![2; 10]).max_new_tokens(40));
+    for _ in 0..3 {
+        assert!(server.step().unwrap());
+    }
+    assert_eq!(queued.state(), LifecycleState::Cancelled);
+    assert!(queued.tokens().is_empty());
+    assert_eq!(long.state(), LifecycleState::Running);
+    long.cancel(); // handle-side cancel
+    server.run_until_idle().unwrap();
+    assert_eq!(long.state(), LifecycleState::Cancelled);
+    let n = long.tokens().len();
+    assert!((1..40).contains(&n), "tokens after cancel: {n}");
+    assert_eq!(server.metrics().cancelled_count(), 2);
+
+    // The engine stays serviceable: a fresh request completes.
+    let after = server.submit(ServeRequest::new(3, vec![3; 10]).max_new_tokens(4));
+    server.run_until_idle().unwrap();
+    assert_eq!(after.state(), LifecycleState::Finished);
+    assert_eq!(after.tokens().len(), 4);
+}
+
+#[test]
+fn stop_tokens_terminate_generation_early() {
+    let Some(mut server) = make_server(ColdStartMode::Cached) else {
+        return;
+    };
+    // Learn the greedy stream first, then stop on its third token.
+    let probe = server.submit(ServeRequest::new(5, vec![7; 12]).max_new_tokens(8));
+    server.run_until_idle().unwrap();
+    let stream = probe.tokens();
+    assert_eq!(stream.len(), 8);
+    let stop = stream[2];
+    let cut = stream.iter().position(|&t| t == stop).unwrap() + 1;
+
+    let Some(mut server) = make_server(ColdStartMode::Cached) else {
+        return;
+    };
+    let h = server.submit(
+        ServeRequest::new(5, vec![7; 12])
+            .max_new_tokens(8)
+            .stop_token(stop),
+    );
+    server.run_until_idle().unwrap();
+    assert_eq!(h.tokens(), stream[..cut].to_vec());
+    assert_eq!(
+        h.drain_events().last(),
+        Some(&RequestEvent::Finished(
+            caraserve::server::FinishReason::Stop
+        ))
+    );
 }
 
 #[test]
@@ -149,13 +199,42 @@ fn kv_pages_are_reclaimed_across_waves() {
         return;
     };
     // Three waves of requests; page leaks would exhaust the pool.
+    let mut finished = 0;
     for wave in 0..3 {
-        for r in requests(8, 100 + wave) {
-            let mut r = r;
-            r.id += wave * 1000;
-            server.submit(r).unwrap();
-        }
+        let handles: Vec<_> = requests(8, 100 + wave)
+            .into_iter()
+            .map(|r| server.submit(r))
+            .collect();
         server.run_until_idle().unwrap();
+        finished += handles
+            .iter()
+            .filter(|h| h.state() == LifecycleState::Finished)
+            .count();
     }
-    assert_eq!(server.outputs().len(), 24);
+    assert_eq!(finished, 24);
+}
+
+#[test]
+fn stats_track_live_requests_and_slo() {
+    let Some(mut server) = make_server(ColdStartMode::Cached) else {
+        return;
+    };
+    let s = server.stats();
+    assert!(s.running_ranks.is_empty() && s.queued_ranks.is_empty());
+    assert!(s.tpot_slo.is_none());
+    let _h1 = server.submit(
+        ServeRequest::new(1, vec![1; 8])
+            .max_new_tokens(6)
+            .slo(200.0, 50.0),
+    );
+    let _h2 = server.submit(ServeRequest::new(2, vec![2; 8]).max_new_tokens(6));
+    let s = server.stats();
+    assert_eq!(s.queued_ranks, vec![8, 8]);
+    assert!((s.tpot_slo.unwrap() - 0.050).abs() < 1e-12);
+    server.step().unwrap(); // prefill
+    let s = server.stats();
+    assert_eq!(s.running_ranks.len(), 2);
+    assert!(s.queued_ranks.is_empty());
+    server.run_until_idle().unwrap();
+    assert!(server.stats().tpot_slo.is_none());
 }

@@ -1,0 +1,209 @@
+//! One contract, two backends: identical request-lifecycle assertions
+//! driven through the [`ServingFront`] trait against (a) the simulator
+//! front — always — and (b) the real PJRT engine — when artifacts are
+//! built. Covers first-token event ordering, cancellation (queued and
+//! mid-decode), stop tokens, and the exactly-one-terminal-event
+//! guarantee.
+
+use std::path::PathBuf;
+
+use caraserve::config::GpuSpec;
+use caraserve::model::{LlamaConfig, LoraSpec};
+use caraserve::runtime::ModelRuntime;
+use caraserve::server::{
+    ColdStartMode, EngineConfig, FinishReason, InferenceServer, LifecycleState, RequestEvent,
+    ServeRequest, ServingFront,
+};
+use caraserve::sim::{GpuModel, ServingMode, SimFront, SimInstance};
+
+/// Adapters every backend has installed before the contract runs.
+const ADAPTERS: u64 = 8;
+
+fn sim_front_with_batch(max_batch: usize) -> SimFront {
+    let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+    let inst = SimInstance::new(0, model, ServingMode::CaraServe, max_batch, 8, 64);
+    let mut front = SimFront::new(inst, 64);
+    for id in 0..ADAPTERS {
+        front.install_adapter(id, 64);
+    }
+    front
+}
+
+fn sim_front() -> SimFront {
+    sim_front_with_batch(32)
+}
+
+fn engine_front() -> Option<InferenceServer> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping engine backend: artifacts not built");
+        return None;
+    }
+    let runtime = ModelRuntime::load(&dir).expect("runtime");
+    let mut server = InferenceServer::new(
+        runtime,
+        EngineConfig {
+            cold_start: ColdStartMode::CaraServe,
+            load_scale: 0.2,
+            ..Default::default()
+        },
+    )
+    .expect("server");
+    for id in 0..ADAPTERS {
+        server.install_adapter(LoraSpec::standard(id, 8, "tiny"));
+    }
+    Some(server)
+}
+
+/// Assert the canonical event shape of a completed request:
+/// `Admitted, FirstToken, Token*, <terminal>` with exactly one terminal.
+fn assert_stream_shape(events: &[RequestEvent], expect_tokens: usize) {
+    assert!(events.len() >= 2, "{events:?}");
+    assert_eq!(events[0], RequestEvent::Admitted);
+    let mut tokens = 0;
+    for (i, ev) in events[1..].iter().enumerate() {
+        match ev {
+            RequestEvent::FirstToken(_) => {
+                assert_eq!(i, 0, "FirstToken must follow Admitted: {events:?}");
+                tokens += 1;
+            }
+            RequestEvent::Token(_) => {
+                assert!(tokens >= 1, "Token before FirstToken: {events:?}");
+                tokens += 1;
+            }
+            ev if ev.is_terminal() => {
+                assert_eq!(
+                    i,
+                    events.len() - 2,
+                    "terminal event not last: {events:?}"
+                );
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    assert_eq!(tokens, expect_tokens, "{events:?}");
+    assert_eq!(
+        events.iter().filter(|e| e.is_terminal()).count(),
+        1,
+        "exactly one terminal event: {events:?}"
+    );
+}
+
+/// The shared lifecycle contract, driven purely through `ServingFront`.
+fn drive_contract<F: ServingFront>(front: &mut F) {
+    // 1. Plain completion: ordered event stream, all tokens delivered.
+    let h = front.submit(ServeRequest::new(1, vec![1; 12]).max_new_tokens(5));
+    front.run_until_idle().unwrap();
+    assert_eq!(h.state(), LifecycleState::Finished);
+    assert_eq!(h.tokens().len(), 5);
+    assert_stream_shape(&h.drain_events(), 5);
+
+    // 2. Rejection: unknown adapter → lone terminal Rejected event.
+    let h = front.submit(ServeRequest::new(ADAPTERS + 50, vec![1; 8]).max_new_tokens(2));
+    assert_eq!(h.state(), LifecycleState::Rejected);
+    match h.drain_events().as_slice() {
+        [RequestEvent::Rejected(_)] => {}
+        other => panic!("expected lone Rejected, got {other:?}"),
+    }
+
+    // 3. Cancel while queued: never runs, one Cancelled terminal.
+    let victim = front.submit(ServeRequest::new(2, vec![1; 12]).max_new_tokens(30));
+    assert!(front.cancel(victim.id()));
+    front.run_until_idle().unwrap();
+    assert_eq!(victim.state(), LifecycleState::Cancelled);
+    assert!(victim.tokens().is_empty());
+    let events = victim.drain_events();
+    assert_eq!(events, vec![RequestEvent::Admitted, RequestEvent::Cancelled]);
+    // Dead ids report false.
+    assert!(!front.cancel(victim.id()));
+
+    // 4. Cancel mid-decode: stream truncates with a Cancelled terminal.
+    let h = front.submit(ServeRequest::new(3, vec![1; 12]).max_new_tokens(30));
+    for _ in 0..3 {
+        assert!(front.poll().unwrap());
+    }
+    assert_eq!(h.state(), LifecycleState::Running);
+    assert!(front.cancel(h.id()));
+    front.run_until_idle().unwrap();
+    assert_eq!(h.state(), LifecycleState::Cancelled);
+    let n = h.tokens().len();
+    assert!((1..30).contains(&n), "tokens after cancel: {n}");
+    let events = h.drain_events();
+    assert_eq!(events.last(), Some(&RequestEvent::Cancelled));
+    assert_eq!(events.iter().filter(|e| e.is_terminal()).count(), 1);
+
+    // 5. Stop token: learn the stream, then stop on its third token.
+    let probe = front.submit(ServeRequest::new(4, vec![2; 12]).max_new_tokens(6));
+    front.run_until_idle().unwrap();
+    let stream = probe.tokens();
+    assert_eq!(stream.len(), 6);
+    let stop = stream[2];
+    let cut = stream.iter().position(|&t| t == stop).unwrap() + 1;
+    let h = front.submit(
+        ServeRequest::new(4, vec![2; 12])
+            .max_new_tokens(6)
+            .stop_token(stop),
+    );
+    front.run_until_idle().unwrap();
+    assert_eq!(h.state(), LifecycleState::Finished);
+    assert_eq!(h.tokens(), stream[..cut].to_vec());
+    let events = h.drain_events();
+    assert_eq!(
+        events.last(),
+        Some(&RequestEvent::Finished(FinishReason::Stop))
+    );
+    assert_stream_shape(&events, cut);
+
+    // 6. Stats through the trait: queued before poll, empty after drain.
+    let _a = front.submit(
+        ServeRequest::new(5, vec![3; 10])
+            .max_new_tokens(4)
+            .slo(300.0, 60.0),
+    );
+    let _b = front.submit(ServeRequest::new(6, vec![3; 10]).max_new_tokens(4));
+    let stats = front.stats();
+    assert_eq!(stats.total_requests(), 2);
+    assert_eq!(stats.queued_ranks.len(), 2);
+    assert!((stats.tpot_slo.unwrap() - 0.060).abs() < 1e-12);
+    front.run_until_idle().unwrap();
+    let stats = front.stats();
+    assert_eq!(stats.total_requests(), 0);
+    assert!(stats.tpot_slo.is_none());
+}
+
+#[test]
+fn lifecycle_contract_holds_on_simulator_front() {
+    drive_contract(&mut sim_front());
+}
+
+#[test]
+fn lifecycle_contract_holds_on_engine_front() {
+    let Some(mut server) = engine_front() else {
+        return;
+    };
+    drive_contract(&mut server);
+}
+
+#[test]
+fn priority_orders_admission_on_simulator_front() {
+    // A batch-capacity-1 instance serializes admission: the Interactive
+    // request submitted *after* a Batch one still runs first.
+    use caraserve::server::Priority;
+    let mut front = sim_front_with_batch(1);
+    let slow = front.submit(
+        ServeRequest::new(1, vec![1; 12])
+            .max_new_tokens(3)
+            .priority(Priority::Batch),
+    );
+    let fast = front.submit(
+        ServeRequest::new(2, vec![1; 12])
+            .max_new_tokens(3)
+            .priority(Priority::Interactive),
+    );
+    front.poll().unwrap(); // first prefill admits the queue head only
+    assert_eq!(fast.state(), LifecycleState::Running);
+    assert_eq!(slow.state(), LifecycleState::Queued);
+    front.run_until_idle().unwrap();
+    assert_eq!(slow.state(), LifecycleState::Finished);
+    assert_eq!(fast.state(), LifecycleState::Finished);
+}

@@ -60,6 +60,7 @@ fn prop_rank_aware_always_picks_an_eligible_server() {
                 running_ranks: vec![32; e / 2],
                 queued_ranks: vec![],
                 eligible: e % 2 == 1,
+                tpot_slo: None,
             })
             .collect();
         let mut sched = RankAwareScheduler::new(
@@ -190,8 +191,8 @@ fn prop_simulation_conserves_requests_and_orders_tokens() {
 
 #[test]
 fn prop_batcher_never_exceeds_max_batch() {
+    use caraserve::server::api::{ActiveRequest, Priority, SamplingParams};
     use caraserve::server::batcher::{Batcher, NextAction, RunningReq};
-    use caraserve::server::InferenceRequest;
     let cfg = Config {
         cases: 128,
         ..Default::default()
@@ -200,11 +201,20 @@ fn prop_batcher_never_exceeds_max_batch() {
     prop::forall(&cfg, &gen, |prompts| {
         let mut b = Batcher::new(4, 2);
         for (i, &p) in prompts.iter().enumerate() {
-            b.enqueue(InferenceRequest {
+            b.enqueue(ActiveRequest {
                 id: i as u64,
                 adapter: i as u64,
                 prompt: vec![1; p],
-                max_new_tokens: 2,
+                sampling: SamplingParams {
+                    max_new_tokens: 2,
+                    ..Default::default()
+                },
+                priority: match p % 3 {
+                    0 => Priority::Batch,
+                    1 => Priority::Standard,
+                    _ => Priority::Interactive,
+                },
+                slo: None,
             });
         }
         // Drain: alternate admissions and reaps.
@@ -224,8 +234,10 @@ fn prop_batcher_never_exceeds_max_batch() {
                             adapter: q.req.adapter,
                             ctx: q.req.prompt.len(),
                             generated: 1,
-                            max_new_tokens: q.req.max_new_tokens,
+                            sampling: q.req.sampling,
+                            slo: q.req.slo,
                             last_token: 0,
+                            stopped: false,
                         });
                     }
                     if b.running.len() > 4 {
@@ -242,6 +254,113 @@ fn prop_batcher_never_exceeds_max_batch() {
         }
         if !b.running.is_empty() || !b.queue.is_empty() {
             return Err("work left after drain".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_every_submitted_request_terminates_in_exactly_one_terminal_event() {
+    // The lifecycle API's core guarantee, under random workloads with
+    // random priorities, stop tokens, rejections, and cancellations:
+    // every handle ends in exactly one terminal event, token streams
+    // respect stop tokens and budgets, and the backend drains clean.
+    use caraserve::server::api::Priority;
+    use caraserve::server::{LifecycleState, RequestEvent, ServeRequest, ServingFront};
+    use caraserve::sim::{SimFront, SimInstance};
+
+    let cfg = Config {
+        cases: 48,
+        ..Default::default()
+    };
+    let gen = prop::usize_in(0, 100_000);
+    prop::forall(&cfg, &gen, |&seed| {
+        let mut rng = Rng::new(seed as u64);
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let max_batch = rng.range(1, 9);
+        let inst =
+            SimInstance::new(0, model, ServingMode::CaraServe, max_batch, 8, 16);
+        let mut front = SimFront::new(inst, 64);
+        for id in 0..7 {
+            front.install_adapter(id, *rng.choose(&[8, 16, 32, 64]));
+        }
+
+        let n = rng.range(1, 20);
+        let mut handles = Vec::with_capacity(n);
+        let mut cancels = Vec::new();
+        for _ in 0..n {
+            // ~1 in 8 requests targets an unregistered adapter → Rejected.
+            let adapter = rng.range(0, 8) as u64;
+            let mut req = ServeRequest::new(adapter, vec![1; rng.range(1, 64)])
+                .max_new_tokens(rng.range(1, 12))
+                .priority(*rng.choose(&[
+                    Priority::Batch,
+                    Priority::Standard,
+                    Priority::Interactive,
+                ]));
+            if rng.chance(0.3) {
+                // Stop token somewhere in (or beyond) the synthetic stream.
+                req = req.stop_token(rng.range(0, 14) as i32);
+            }
+            let handle = front.submit(req);
+            if rng.chance(0.25) {
+                cancels.push(handle.clone());
+            }
+            handles.push(handle);
+            // Interleave some progress so cancels hit queued *and*
+            // running requests.
+            if rng.chance(0.5) {
+                let _ = front.poll().map_err(|e| e.to_string())?;
+            }
+            for h in &cancels {
+                if rng.chance(0.5) {
+                    h.cancel();
+                }
+            }
+        }
+        for h in &cancels {
+            h.cancel();
+        }
+        front.run_until_idle().map_err(|e| e.to_string())?;
+
+        for h in &handles {
+            let state = h.state();
+            if !state.is_terminal() {
+                return Err(format!("request {} ended in {state:?}", h.id()));
+            }
+            let events = h.drain_events();
+            let terminals = events.iter().filter(|e| e.is_terminal()).count();
+            if terminals != 1 {
+                return Err(format!(
+                    "request {}: {terminals} terminal events in {events:?}",
+                    h.id()
+                ));
+            }
+            if !events.last().unwrap().is_terminal() {
+                return Err(format!("request {}: events after terminal", h.id()));
+            }
+            // Token stream consistency with the terminal reason.
+            let tokens = h.tokens();
+            match events.last().unwrap() {
+                RequestEvent::Rejected(_) => {
+                    if !tokens.is_empty() || events.len() != 1 {
+                        return Err("rejected request saw activity".into());
+                    }
+                }
+                RequestEvent::Finished(_) => {
+                    if tokens.is_empty() {
+                        return Err("finished without tokens".into());
+                    }
+                }
+                RequestEvent::Cancelled => {}
+                other => return Err(format!("non-terminal last event {other:?}")),
+            }
+            if state == LifecycleState::Finished && tokens.is_empty() {
+                return Err("finished with empty stream".into());
+            }
+        }
+        if front.instance().queue.len() + front.instance().running.len() != 0 {
+            return Err("backend left work behind".into());
         }
         Ok(())
     });

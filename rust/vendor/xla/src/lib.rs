@@ -1,0 +1,154 @@
+//! Offline API stub of the `xla-rs` PJRT bindings.
+//!
+//! The real crate links the native XLA/PJRT C library, which is not
+//! present in this offline build environment. This stub mirrors the API
+//! surface `caraserve::runtime` uses so the workspace compiles anywhere;
+//! every entry point returns an "unavailable" error at runtime. The
+//! serving stack already degrades cleanly: integration tests and
+//! examples check for built artifacts before touching PJRT, and the
+//! simulator backend (`caraserve::sim::front::SimFront`) never needs it.
+//!
+//! Swap this path dependency for the real `xla` crate to run the
+//! functional PJRT path.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` (Display-able, std error).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT unavailable: built with the vendored xla stub (no native XLA \
+         runtime); use the real xla crate to execute compiled artifacts"
+            .to_string(),
+    )
+}
+
+/// Host-side tensor literal.
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    /// Copy out as a typed vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable())
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Deserialization of literals from on-disk formats (`.npz` here).
+pub trait FromRawBytes: Sized {
+    /// Read every named array from an `.npz` archive.
+    fn read_npz<P: AsRef<Path>>(path: P, ctx: &()) -> Result<Vec<(String, Self)>, Error>;
+}
+
+impl FromRawBytes for Literal {
+    fn read_npz<P: AsRef<Path>>(_path: P, _ctx: &()) -> Result<Vec<(String, Literal)>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// A device-resident buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Copy device → host.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute over borrowed input buffers.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// The PJRT client.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Create a CPU client. Always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable())
+    }
+
+    /// Upload a literal to the device.
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(unavailable())
+    }
+
+    /// Upload a typed host slice to the device.
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(unavailable())
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation ready to compile.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a parsed proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().unwrap_err().to_string().contains("PJRT unavailable"));
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        assert!(Literal::read_npz("w.npz", &()).is_err());
+    }
+}
