@@ -1,0 +1,120 @@
+//! Cold-start TTFT benchmark on the *real engine* (native runtime):
+//! per-`ColdStartMode` TTFT p50/p99 with the CPU-assisted path live —
+//! the serving-path counterpart of the simulator-based Fig 3 bench.
+//!
+//! Emits `BENCH_coldstart.json` in the working directory (plus the
+//! standard `target/bench-reports/coldstart.json` report) so successive
+//! PRs can track the cold-start trajectory.
+
+use caraserve::bench::{f, Report};
+use caraserve::model::LoraSpec;
+use caraserve::runtime::{NativeConfig, NativeRuntime};
+use caraserve::server::{
+    ColdStartMode, EngineConfig, InferenceServer, LifecycleState, ServeRequest,
+};
+use caraserve::util::json::{self, Json};
+use caraserve::util::rng::Rng;
+use caraserve::util::stats::Summary;
+
+const N_REQUESTS: usize = 24;
+const N_ADAPTERS: u64 = 16;
+const CPU_WORKERS: usize = 2;
+/// Scale the modeled load window to ~10 ms so cold-start behaviour
+/// dominates scheduler noise but the bench stays quick.
+const LOAD_SCALE: f64 = 2.0;
+
+fn mode_name(mode: ColdStartMode) -> &'static str {
+    match mode {
+        ColdStartMode::Cached => "cached",
+        ColdStartMode::OnDemand => "ondemand",
+        ColdStartMode::CaraServe => "caraserve",
+    }
+}
+
+fn run(mode: ColdStartMode, assist: bool) -> (Summary, Summary, usize) {
+    let mut server = InferenceServer::new(
+        NativeRuntime::new(NativeConfig::test_tiny()),
+        EngineConfig {
+            cold_start: mode,
+            load_scale: LOAD_SCALE,
+            ..Default::default()
+        },
+    )
+    .expect("server");
+    for id in 0..N_ADAPTERS {
+        server.install_adapter(LoraSpec::standard(id, 4, "tiny"));
+    }
+    if assist {
+        server.enable_cpu_assist(CPU_WORKERS).expect("cpu assist");
+    }
+
+    // Waves of requests over 16 adapters and 4 device slots: plenty of
+    // cold starts and re-colds, identical across modes (seeded).
+    let mut rng = Rng::new(7);
+    let mut handles = Vec::new();
+    for _ in 0..N_REQUESTS {
+        let adapter = rng.range(0, N_ADAPTERS as usize) as u64;
+        let prompt: Vec<i32> = (0..rng.range(4, 12)).map(|_| rng.range(0, 64) as i32).collect();
+        let req = ServeRequest::new(adapter, prompt).max_new_tokens(rng.range(2, 6));
+        handles.push(server.submit(req));
+        server.run_until_idle().expect("serve");
+    }
+    assert!(handles.iter().all(|h| h.state() == LifecycleState::Finished));
+
+    let m = server.metrics();
+    let ttft = m.summary("ttft").expect("ttft");
+    let load = m.summary("ttft_load").expect("ttft_load");
+    (ttft, load, m.cold_start().cold_admits)
+}
+
+fn main() {
+    let mut report = Report::new(
+        "Cold-start TTFT per mode (native engine, real CPU-assist path)",
+        &["mode", "ttft p50 (ms)", "ttft p99 (ms)", "mean load window (ms)", "cold admits"],
+    );
+    let mut modes_json: Vec<(String, Json)> = Vec::new();
+    for (mode, assist) in [
+        (ColdStartMode::Cached, false),
+        (ColdStartMode::OnDemand, false),
+        (ColdStartMode::CaraServe, true),
+    ] {
+        let (ttft, load, cold) = run(mode, assist);
+        report.row(vec![
+            mode_name(mode).to_string(),
+            f(ttft.p50 * 1e3, 2),
+            f(ttft.p99 * 1e3, 2),
+            f(load.mean * 1e3, 2),
+            cold.to_string(),
+        ]);
+        modes_json.push((
+            mode_name(mode).to_string(),
+            json::obj(vec![
+                ("ttft_p50_ms", json::num(ttft.p50 * 1e3)),
+                ("ttft_p99_ms", json::num(ttft.p99 * 1e3)),
+                ("ttft_mean_ms", json::num(ttft.mean * 1e3)),
+                ("load_window_mean_ms", json::num(load.mean * 1e3)),
+                ("cold_admits", json::num(cold as f64)),
+            ]),
+        ));
+    }
+    report.note(
+        "expected: caraserve p99 ≈ cached p99 ≪ ondemand p99 (CPU assist hides the load window)",
+    );
+    report.print();
+    report.save("coldstart").ok();
+
+    let top = json::obj(vec![
+        ("bench", json::s("coldstart")),
+        ("requests", json::num(N_REQUESTS as f64)),
+        ("adapters", json::num(N_ADAPTERS as f64)),
+        ("cpu_workers", json::num(CPU_WORKERS as f64)),
+        ("load_scale", json::num(LOAD_SCALE)),
+        (
+            "modes",
+            Json::Obj(modes_json),
+        ),
+    ]);
+    std::fs::write("BENCH_coldstart.json", top.to_string_pretty())
+        .expect("write BENCH_coldstart.json");
+    println!("\nwrote BENCH_coldstart.json");
+}

@@ -1,17 +1,40 @@
 //! Adapter management on one inference server (paper §3): the host-memory
 //! repository (every adapter's weights + metadata), the bounded device
-//! slot cache (which adapters are GPU-resident), and the cold-start
-//! loader model.
+//! slot cache (which adapters are GPU-resident), the cold-start loader
+//! model, and the [`AsyncLoader`] that tracks in-flight host→device load
+//! windows for the CPU-assisted path (§4.3: requests keep decoding via
+//! CPU LoRA until their adapter's load deadline passes, then hand off to
+//! the resident GPU path).
 //!
 //! The functional PJRT path bakes `LORA_SLOTS` adapter stacks into the
-//! artifacts, so "loading adapter X" maps X onto a device slot with LRU
-//! eviction; the host→device transfer itself is modeled latency (this
+//! artifacts, so "loading adapter X" maps X onto a device slot; the
+//! native runtime installs real weight stacks per slot at load
+//! completion. The host→device transfer itself is modeled latency (this
 //! testbed has no discrete device — see DESIGN.md §4 substitutions).
 
 use std::collections::HashMap;
+use std::time::{Duration, Instant};
 
 use crate::config::GpuSpec;
 use crate::model::{LlamaConfig, LoraSpec};
+
+/// Errors from adapter/slot management.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdapterError {
+    /// A [`DeviceSlotCache`] cannot be built with zero slots: `acquire`
+    /// would index an empty LRU and `acquire_fixed` would divide by zero.
+    NoSlots,
+}
+
+impl std::fmt::Display for AdapterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdapterError::NoSlots => write!(f, "device slot cache needs ≥ 1 slot"),
+        }
+    }
+}
+
+impl std::error::Error for AdapterError {}
 
 /// Host-memory adapter repository: id → spec (weights stay in the
 /// cpu_lora [`crate::cpu_lora::AdapterTable`] for compute).
@@ -58,23 +81,33 @@ pub struct SlotAcquire {
 
 /// Bounded device slot cache with LRU eviction: which adapters are
 /// resident in the GPU-side LoRA stacks.
+///
+/// Stamp-based LRU: `touch` is O(1) (bump a per-slot use stamp); the
+/// O(n) victim scan runs only on a cold `acquire` — the previous
+/// `Vec::position + remove` implementation paid O(n) on every hit.
 pub struct DeviceSlotCache {
     /// slot → adapter id.
     slots: Vec<Option<u64>>,
     /// adapter id → slot.
     index: HashMap<u64, usize>,
-    /// LRU order: least recent first.
-    lru: Vec<usize>,
+    /// slot → last-use stamp (smaller = older).
+    stamps: Vec<u64>,
+    clock: u64,
 }
 
 impl DeviceSlotCache {
-    /// A cache with `n_slots` device slots.
-    pub fn new(n_slots: usize) -> DeviceSlotCache {
-        DeviceSlotCache {
+    /// A cache with `n_slots` device slots. Zero slots is a construction
+    /// error: every acquire on such a cache would be unanswerable.
+    pub fn new(n_slots: usize) -> Result<DeviceSlotCache, AdapterError> {
+        if n_slots == 0 {
+            return Err(AdapterError::NoSlots);
+        }
+        Ok(DeviceSlotCache {
             slots: vec![None; n_slots],
             index: HashMap::new(),
-            lru: (0..n_slots).collect(),
-        }
+            stamps: vec![0; n_slots],
+            clock: 0,
+        })
     }
 
     /// Number of slots.
@@ -92,11 +125,21 @@ impl DeviceSlotCache {
         self.index.contains_key(&adapter)
     }
 
+    /// The slot an adapter occupies, if resident.
+    pub fn slot_of(&self, adapter: u64) -> Option<usize> {
+        self.index.get(&adapter).copied()
+    }
+
+    /// The slot `acquire_fixed` would map this adapter to (without
+    /// acquiring) — lets admission control detect slot collisions before
+    /// committing a batch.
+    pub fn fixed_slot(&self, adapter: u64) -> usize {
+        (adapter % self.slots.len() as u64) as usize
+    }
+
     fn touch(&mut self, slot: usize) {
-        if let Some(pos) = self.lru.iter().position(|&s| s == slot) {
-            self.lru.remove(pos);
-        }
-        self.lru.push(slot);
+        self.clock += 1;
+        self.stamps[slot] = self.clock;
     }
 
     /// Acquire a slot for `adapter`: hit if resident, otherwise evict the
@@ -106,7 +149,11 @@ impl DeviceSlotCache {
             self.touch(slot);
             return SlotAcquire { slot, cold: false };
         }
-        let slot = self.lru[0];
+        // Victim: the least-recently-stamped slot (empty slots have stamp
+        // 0 and are taken first).
+        let slot = (0..self.stamps.len())
+            .min_by_key(|&s| self.stamps[s])
+            .expect("≥ 1 slot by construction");
         if let Some(old) = self.slots[slot] {
             self.index.remove(&old);
         }
@@ -122,7 +169,7 @@ impl DeviceSlotCache {
     /// Returns `cold = true` when the slot's occupant changes — the
     /// moment a real system would pay the host→device transfer.
     pub fn acquire_fixed(&mut self, adapter: u64) -> SlotAcquire {
-        let slot = (adapter % self.slots.len() as u64) as usize;
+        let slot = self.fixed_slot(adapter);
         let cold = self.slots[slot] != Some(adapter);
         if cold {
             if let Some(old) = self.slots[slot] {
@@ -133,6 +180,82 @@ impl DeviceSlotCache {
         }
         self.touch(slot);
         SlotAcquire { slot, cold }
+    }
+}
+
+/// Tracks per-adapter in-flight host→device load windows with completion
+/// deadlines (§4.3). The engine `begin`s a load on a cold CaraServe
+/// admit, keeps serving the adapter through the CPU-LoRA path while
+/// [`AsyncLoader::loading`] holds, and `poll`s each iteration to learn
+/// which adapters finished and may hand off to the resident GPU path.
+#[derive(Debug, Default)]
+pub struct AsyncLoader {
+    deadlines: HashMap<u64, Instant>,
+}
+
+impl AsyncLoader {
+    /// No loads in flight.
+    pub fn new() -> AsyncLoader {
+        AsyncLoader::default()
+    }
+
+    /// Begin (or observe an already-running) load of `adapter` taking
+    /// `window` from now. Returns the completion deadline. A second
+    /// `begin` for an adapter already in flight keeps the *earlier*
+    /// deadline — the transfer started then.
+    pub fn begin(&mut self, adapter: u64, window: Duration) -> Instant {
+        let candidate = Instant::now() + window;
+        let deadline = self.deadlines.entry(adapter).or_insert(candidate);
+        if *deadline > candidate {
+            *deadline = candidate;
+        }
+        *deadline
+    }
+
+    /// Is this adapter's load still in flight?
+    pub fn loading(&self, adapter: u64) -> bool {
+        self.deadlines.contains_key(&adapter)
+    }
+
+    /// Time remaining on an in-flight load (zero if past deadline).
+    pub fn remaining(&self, adapter: u64, now: Instant) -> Option<Duration> {
+        self.deadlines
+            .get(&adapter)
+            .map(|&d| d.saturating_duration_since(now))
+    }
+
+    /// The nearest completion deadline among in-flight loads.
+    pub fn earliest_deadline(&self) -> Option<Instant> {
+        self.deadlines.values().min().copied()
+    }
+
+    /// Remove and return every adapter whose deadline has passed.
+    pub fn poll(&mut self, now: Instant) -> Vec<u64> {
+        let done: Vec<u64> = self
+            .deadlines
+            .iter()
+            .filter(|(_, &d)| d <= now)
+            .map(|(&a, _)| a)
+            .collect();
+        for a in &done {
+            self.deadlines.remove(a);
+        }
+        done
+    }
+
+    /// Adapters currently loading.
+    pub fn adapters(&self) -> impl Iterator<Item = u64> + '_ {
+        self.deadlines.keys().copied()
+    }
+
+    /// Number of in-flight loads.
+    pub fn len(&self) -> usize {
+        self.deadlines.len()
+    }
+
+    /// True when nothing is loading.
+    pub fn is_empty(&self) -> bool {
+        self.deadlines.is_empty()
     }
 }
 
@@ -179,17 +302,25 @@ mod tests {
 
     #[test]
     fn slot_cache_hit_and_miss() {
-        let mut c = DeviceSlotCache::new(2);
+        let mut c = DeviceSlotCache::new(2).unwrap();
         let a = c.acquire(10);
         assert!(a.cold);
         let b = c.acquire(10);
         assert!(!b.cold);
         assert_eq!(a.slot, b.slot);
+        assert_eq!(c.slot_of(10), Some(a.slot));
+        assert_eq!(c.slot_of(99), None);
+    }
+
+    #[test]
+    fn zero_slot_cache_is_a_typed_error() {
+        assert_eq!(DeviceSlotCache::new(0).unwrap_err(), AdapterError::NoSlots);
+        assert!(AdapterError::NoSlots.to_string().contains("slot"));
     }
 
     #[test]
     fn lru_eviction_order() {
-        let mut c = DeviceSlotCache::new(2);
+        let mut c = DeviceSlotCache::new(2).unwrap();
         let s1 = c.acquire(1).slot;
         let _s2 = c.acquire(2).slot;
         c.acquire(1); // 1 now MRU; 2 is LRU
@@ -203,7 +334,7 @@ mod tests {
 
     #[test]
     fn distinct_adapters_get_distinct_slots_until_full() {
-        let mut c = DeviceSlotCache::new(4);
+        let mut c = DeviceSlotCache::new(4).unwrap();
         let slots: Vec<usize> = (0..4).map(|i| c.acquire(i).slot).collect();
         let mut sorted = slots.clone();
         sorted.sort_unstable();
@@ -213,7 +344,7 @@ mod tests {
 
     #[test]
     fn acquire_fixed_is_deterministic_and_tracks_residency() {
-        let mut c = DeviceSlotCache::new(8);
+        let mut c = DeviceSlotCache::new(8).unwrap();
         let a = c.acquire_fixed(3);
         assert!(a.cold);
         assert_eq!(a.slot, 3);
@@ -223,6 +354,29 @@ mod tests {
         assert!(b.cold);
         assert_eq!(b.slot, 3);
         assert!(c.acquire_fixed(3).cold); // 3 was evicted
+        assert_eq!(c.fixed_slot(11), 3); // non-mutating mapping
+    }
+
+    #[test]
+    fn async_loader_deadlines_and_poll() {
+        let mut l = AsyncLoader::new();
+        assert!(l.is_empty());
+        let d1 = l.begin(7, Duration::from_millis(50));
+        assert!(l.loading(7));
+        assert!(!l.loading(8));
+        assert_eq!(l.len(), 1);
+        // Re-begin keeps the earlier deadline.
+        let d2 = l.begin(7, Duration::from_secs(10));
+        assert_eq!(d1, d2);
+        // Not yet due.
+        assert!(l.poll(Instant::now()).is_empty());
+        assert!(l.remaining(7, Instant::now()).unwrap() <= Duration::from_millis(50));
+        assert_eq!(l.earliest_deadline(), Some(d1));
+        // Past the deadline it completes exactly once.
+        let later = Instant::now() + Duration::from_millis(60);
+        assert_eq!(l.poll(later), vec![7]);
+        assert!(l.poll(later).is_empty());
+        assert!(!l.loading(7));
     }
 
     #[test]

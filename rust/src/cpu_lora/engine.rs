@@ -16,6 +16,7 @@ pub struct CpuLoraEngine {
     pool: WorkerPool,
     profile: CoreProfile,
     hidden: usize,
+    max_tokens: usize,
 }
 
 impl CpuLoraEngine {
@@ -34,6 +35,7 @@ impl CpuLoraEngine {
             pool,
             profile,
             hidden,
+            max_tokens,
         })
     }
 
@@ -93,6 +95,11 @@ impl CpuLoraEngine {
         out
     }
 
+    /// Largest token count a single worker slot can hold.
+    pub fn max_tokens(&self) -> usize {
+        self.max_tokens
+    }
+
     /// Apply all three standard targets (Q, K, V) for a prefill slice,
     /// returning the three deltas. This is the per-attention-layer call
     /// the base inference process makes during CPU-assisted prefill.
@@ -107,6 +114,22 @@ impl CpuLoraEngine {
             self.apply(adapter_id, TargetMatrix::K, n_tok, x),
             self.apply(adapter_id, TargetMatrix::V, n_tok, x),
         ]
+    }
+}
+
+/// The CPU-assisted path of the serving engine: during a cold start the
+/// native runtime sources each layer's Q/K/V deltas from this engine,
+/// which shards the tokens across the shm worker pool (§4.2) — one
+/// `delta` call per (layer, target).
+impl crate::runtime::ExternalLora for CpuLoraEngine {
+    fn delta(
+        &self,
+        adapter: u64,
+        target: TargetMatrix,
+        n_tok: usize,
+        x: &[f32],
+    ) -> Vec<f32> {
+        self.apply(adapter, target, n_tok, x)
     }
 }
 

@@ -1,8 +1,13 @@
 //! CPU-assisted LoRA serving (paper §4).
 //!
 //! While an adapter's weights stream host→device (the cold-start window),
-//! the prefill-phase LoRA computation `xAB` runs on host cores. The
-//! pieces:
+//! the prefill-phase LoRA computation `xAB` runs on host cores. This is
+//! the live serving path, not a model: [`crate::server::InferenceServer`]
+//! with CPU assist enabled sources every cold request's per-layer Q/K/V
+//! deltas from [`CpuLoraEngine`] (via [`crate::runtime::ExternalLora`]),
+//! keeps the request on this path through decode while the load window
+//! runs ([`crate::adapters::AsyncLoader`]), and hands off to the resident
+//! `bgmv` path once the adapter's transfer completes (§4.3). The pieces:
 //!
 //! - [`profiles`] — profiling-guided parallelization (§4.2): measure
 //!   single-core token throughput, derive the per-core token budget `c`,

@@ -68,6 +68,14 @@ impl CoreProfile {
         Self::from_rate(hidden, rank, best_rate, target_ms)
     }
 
+    /// The profile [`crate::server::InferenceServer`] uses when the
+    /// caller doesn't supply one: a real measurement pass on this host
+    /// at the serving engine's hidden size, budgeted for a 5 ms prefill
+    /// slice (the paper's per-core token budget derivation, §4.2).
+    pub fn default_for(hidden: usize, rank: usize) -> CoreProfile {
+        Self::measure(hidden.max(1), rank.max(1), 5.0)
+    }
+
     /// Build a profile from an externally known rate (used by the
     /// simulator with the paper's A10-host numbers).
     pub fn from_rate(

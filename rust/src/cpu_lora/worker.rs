@@ -7,7 +7,7 @@
 //! the shm payload — nothing is serialized.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 
@@ -17,8 +17,17 @@ use crate::kernels::AdapterWeights;
 use crate::model::TargetMatrix;
 
 /// Header floats prepended to each request payload:
-/// `[adapter_id, target_idx, n_tok, hidden]`.
-pub const HEADER_F32S: usize = 4;
+/// `[adapter_lo, adapter_hi, target_idx, n_tok, hidden]`.
+///
+/// The adapter id travels as two 24-bit words (each exactly
+/// representable in f32): a single f32 word silently rounds ids above
+/// 2^24, making the worker compute against the wrong adapter. Ids up to
+/// 2^48 − 1 round-trip exactly; [`WorkerPool::submit`] asserts the
+/// bound.
+pub const HEADER_F32S: usize = 5;
+
+/// Adapter ids must fit the two 24-bit shm header words.
+pub const MAX_ADAPTER_ID: u64 = (1 << 48) - 1;
 
 fn target_idx(t: TargetMatrix) -> usize {
     match t {
@@ -75,6 +84,9 @@ pub struct WorkerPool {
     handles: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
     table: Arc<AdapterTable>,
+    /// Requests submitted per slot; compared against the slot's response
+    /// doorbell so `Drop` can drain in-flight jobs before poisoning.
+    submitted: Vec<AtomicU32>,
 }
 
 impl WorkerPool {
@@ -102,12 +114,14 @@ impl WorkerPool {
                 worker_loop(&slot, &stop, &table);
             }));
         }
+        let submitted = (0..slots.len()).map(|_| AtomicU32::new(0)).collect();
         Ok(WorkerPool {
             _region: region,
             slots,
             handles,
             stop,
             table,
+            submitted,
         })
     }
 
@@ -138,12 +152,18 @@ impl WorkerPool {
         x: &[f32],
     ) -> u32 {
         assert_eq!(x.len(), n_tok * hidden);
+        assert!(
+            adapter_id <= MAX_ADAPTER_ID,
+            "adapter id {adapter_id} exceeds the shm header encoding (2^48 − 1)"
+        );
         let mut payload = Vec::with_capacity(HEADER_F32S + x.len());
-        payload.push(adapter_id as f32);
+        payload.push((adapter_id & 0xFF_FFFF) as f32);
+        payload.push((adapter_id >> 24) as f32);
         payload.push(target_idx(target) as f32);
         payload.push(n_tok as f32);
         payload.push(hidden as f32);
         payload.extend_from_slice(x);
+        self.submitted[w].fetch_add(1, Ordering::AcqRel);
         self.slots[w].send_request(&payload)
     }
 
@@ -156,10 +176,23 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
+        // Drain in-flight jobs first: a poison request racing a worker's
+        // in-progress job used to interleave with its response publication
+        // (and, under the old shared-`len` header, clobber its length).
+        // A slot is quiescent once its response doorbell has caught up
+        // with everything submitted. Bounded wait so a leaked (never-
+        // collected) token cannot hang teardown.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_millis(200);
+        for (w, slot) in self.slots.iter().enumerate() {
+            let want = self.submitted[w].load(Ordering::Acquire);
+            while slot.response_seq() < want && std::time::Instant::now() < deadline {
+                std::thread::yield_now();
+            }
+        }
         self.stop.store(true, Ordering::Release);
-        // Wake each worker with an empty poison request.
+        // Wake each worker with a poison request.
         for slot in &self.slots {
-            slot.send_request(&[f32::NAN, 0.0, 0.0, 0.0]);
+            slot.send_request(&[f32::NAN, 0.0, 0.0, 0.0, 0.0]);
         }
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -182,15 +215,49 @@ fn worker_loop(slot: &SlotChannel, stop: &AtomicBool, table: &AdapterTable) {
             return;
         }
         if buf.len() < HEADER_F32S || buf[0].is_nan() {
+            // Only the NaN shutdown poison goes unanswered (its sender is
+            // tearing the pool down). Any other short/corrupt message
+            // still gets a best-effort empty response so a producer
+            // blocked in collect() never hangs.
+            if !buf.first().is_some_and(|v| v.is_nan()) {
+                slot.send_response(&[]);
+            }
             continue;
         }
-        let adapter_id = buf[0] as u64;
-        let t_idx = buf[1] as usize;
-        let n_tok = buf[2] as usize;
-        let hidden = buf[3] as usize;
+        // Validate the header before trusting it: the payload travels
+        // over shared memory, and a truncated or corrupted message used
+        // to panic this thread on an out-of-bounds slice — permanently
+        // deadlocking every future `collect()` on the slot. Malformed
+        // jobs get a best-effort zero response instead (the base process
+        // treats it as "no adaptation") and the worker stays alive.
+        let header_ok = buf[..HEADER_F32S].iter().all(|v| v.is_finite() && *v >= 0.0);
+        let n_tok = buf[3].max(0.0) as usize;
+        let hidden = buf[4].max(0.0) as usize;
+        let expect = n_tok.checked_mul(hidden);
+        let payload_ok = header_ok
+            && expect.is_some_and(|e| {
+                e <= slot.capacity().saturating_sub(HEADER_F32S)
+                    && buf.len() >= HEADER_F32S + e
+            });
+        if !payload_ok {
+            let e = expect
+                .unwrap_or(0)
+                .min(slot.capacity().saturating_sub(HEADER_F32S));
+            y.clear();
+            y.resize(e, 0.0);
+            slot.send_response(&y);
+            continue;
+        }
+        let adapter_id = (buf[0] as u64) | ((buf[1] as u64) << 24);
+        let t_idx = buf[2] as usize;
         let x = &buf[HEADER_F32S..HEADER_F32S + n_tok * hidden];
         match table.get(adapter_id) {
-            Some(weights) => {
+            // The adapter's shapes must match the header's `hidden`, or
+            // lora_apply's shape asserts would panic the worker (same
+            // permanent-deadlock failure as a truncated payload).
+            Some(weights) if weights[t_idx.min(3)].h1 == hidden
+                && weights[t_idx.min(3)].h2 == hidden =>
+            {
                 let ad = &weights[t_idx.min(3)];
                 y.clear();
                 y.resize(n_tok * hidden, 0.0);
@@ -202,9 +269,10 @@ fn worker_loop(slot: &SlotChannel, stop: &AtomicBool, table: &AdapterTable) {
                 );
                 slot.send_response(&y);
             }
-            None => {
-                // Unknown adapter: respond with zeros so the base process
-                // never deadlocks; it treats this as "no adaptation".
+            // Unknown adapter or shape mismatch: respond with zeros so
+            // the base process never deadlocks; it treats this as "no
+            // adaptation".
+            _ => {
                 y.clear();
                 y.resize(n_tok * hidden, 0.0);
                 slot.send_response(&y);
@@ -262,6 +330,94 @@ mod tests {
         let pool = WorkerPool::spawn(4, 8, 4, table).unwrap();
         assert_eq!(pool.len(), 4);
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn malformed_header_gets_zero_response_and_worker_survives() {
+        let hidden = 8;
+        let table = Arc::new(AdapterTable::new());
+        table.install_synthetic(1, hidden, 2);
+        let pool = WorkerPool::spawn(1, hidden, 16, table).unwrap();
+
+        // Shorter than the header itself (non-poison): empty response,
+        // not a silent skip that would hang collect() forever.
+        let resp_seen = pool.slots[0].send_request(&[1.0, 2.0]);
+        let mut short = Vec::new();
+        pool.slots[0].recv_response(resp_seen, &mut short);
+        assert!(short.is_empty());
+
+        // Truncated payload: header claims 4×8 = 32 floats, sends none.
+        let resp_seen =
+            pool.slots[0].send_request(&[1.0, 0.0, 0.0, 4.0, hidden as f32]);
+        let mut got = Vec::new();
+        pool.slots[0].recv_response(resp_seen, &mut got);
+        assert_eq!(got, vec![0.0; 4 * hidden], "zeros for truncated payload");
+
+        // Absurd token count (would overflow the slot): still answered.
+        let resp_seen =
+            pool.slots[0].send_request(&[1.0, 0.0, 0.0, 1e9, hidden as f32]);
+        pool.slots[0].recv_response(resp_seen, &mut got);
+        assert!(got.iter().all(|&v| v == 0.0));
+
+        // Non-finite header field: answered, not panicked.
+        let resp_seen =
+            pool.slots[0].send_request(&[1.0, 0.0, f32::INFINITY, 1.0, hidden as f32]);
+        pool.slots[0].recv_response(resp_seen, &mut got);
+        assert!(got.iter().all(|&v| v == 0.0));
+
+        // Corrupted `hidden` word (valid lengths, wrong adapter shape):
+        // zeros, not a shape-assert panic inside lora_apply.
+        let mut bad = vec![1.0, 0.0, 0.0, 2.0, (hidden / 2) as f32];
+        bad.extend(vec![1.0f32; hidden]); // 2 × (hidden/2) payload floats
+        let resp_seen = pool.slots[0].send_request(&bad);
+        pool.slots[0].recv_response(resp_seen, &mut got);
+        assert_eq!(got, vec![0.0; hidden]);
+
+        // The worker is still alive and serves a well-formed job.
+        let x = vec![1.0f32; hidden];
+        let token = pool.submit(0, 1, TargetMatrix::Q, 1, hidden, &x);
+        pool.collect(0, token, &mut got);
+        assert_eq!(got.len(), hidden);
+        assert!(got.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn adapter_ids_beyond_f32_precision_round_trip() {
+        // A single-f32 id word rounds 2^24 + 1 to 2^24; the two-word
+        // encoding must address the right adapter.
+        let hidden = 8;
+        let id = (1u64 << 24) + 1;
+        let table = Arc::new(AdapterTable::new());
+        table.install_synthetic(id, hidden, 2);
+        table.install_synthetic(1 << 24, hidden, 2); // the collision victim
+        let pool = WorkerPool::spawn(1, hidden, 8, table.clone()).unwrap();
+        let x = vec![1.0f32; hidden];
+        let token = pool.submit(0, id, TargetMatrix::Q, 1, hidden, &x);
+        let mut got = Vec::new();
+        pool.collect(0, token, &mut got);
+        // Reference against the *correct* adapter's weights.
+        let weights = table.get(id).unwrap();
+        let ad = &weights[0];
+        let mut want = vec![0.0f32; hidden];
+        let mut scratch = vec![0.0f32; ad.rank];
+        lora_apply(1, hidden, hidden, ad.rank, &x, &ad.a, &ad.b, &mut want, &mut scratch);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn drop_drains_in_flight_jobs() {
+        let hidden = 16;
+        let table = Arc::new(AdapterTable::new());
+        table.install_synthetic(3, hidden, 4);
+        let pool = WorkerPool::spawn(2, hidden, 64, table).unwrap();
+        // Submit work and drop without collecting: Drop must wait for the
+        // workers' responses before poisoning, and must not hang.
+        let x = vec![0.5f32; 32 * hidden];
+        let _t0 = pool.submit(0, 3, TargetMatrix::Q, 32, hidden, &x);
+        let _t1 = pool.submit(1, 3, TargetMatrix::V, 32, hidden, &x);
+        drop(pool); // must terminate promptly with clean joins
     }
 
     #[test]

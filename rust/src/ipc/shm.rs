@@ -94,10 +94,17 @@ impl Drop for ShmRegion {
 }
 
 /// Header of one SPSC slot, laid out at the front of its shm segment.
+///
+/// Each direction owns its own length word: a request published while
+/// the previous response is still being read (or a shutdown poison
+/// message racing an in-flight job) must not clobber the other
+/// direction's length. A single shared `len` did exactly that.
 #[repr(C)]
 struct SlotHeader {
-    /// Payload length (number of f32s) of the current message.
-    len: AtomicU32,
+    /// Payload length (f32s) of the current *request* message.
+    req_len: AtomicU32,
+    /// Payload length (f32s) of the current *response* message.
+    resp_len: AtomicU32,
     /// Producer→consumer doorbell.
     req: Doorbell,
     /// Consumer→producer doorbell.
@@ -172,7 +179,7 @@ impl SlotChannel {
             std::ptr::copy_nonoverlapping(payload.as_ptr(), self.req_buf, payload.len());
         }
         self.header()
-            .len
+            .req_len
             .store(payload.len() as u32, Ordering::Release);
         let resp_seen = self.header().resp.load();
         self.header().req.ring();
@@ -180,10 +187,13 @@ impl SlotChannel {
     }
 
     /// Consumer: wait for a request past `seen`, copy it out.
-    /// Returns (payload, new_seen).
+    /// Returns the new doorbell sequence.
     pub fn recv_request(&self, seen: u32, out: &mut Vec<f32>) -> u32 {
         let new_seen = self.header().req.wait_past(seen);
-        let len = self.header().len.load(Ordering::Acquire) as usize;
+        // Clamp defensively: a corrupted length must never read past the
+        // slot (the consumer validates semantics on top of this).
+        let len =
+            (self.header().req_len.load(Ordering::Acquire) as usize).min(self.capacity);
         out.clear();
         out.reserve(len);
         unsafe {
@@ -204,7 +214,7 @@ impl SlotChannel {
             );
         }
         self.header()
-            .len
+            .resp_len
             .store(payload.len() as u32, Ordering::Release);
         self.header().resp.ring();
     }
@@ -213,7 +223,8 @@ impl SlotChannel {
     /// into `out` (resized to the message length).
     pub fn recv_response(&self, resp_seen: u32, out: &mut Vec<f32>) {
         self.header().resp.wait_past(resp_seen);
-        let len = self.header().len.load(Ordering::Acquire) as usize;
+        let len =
+            (self.header().resp_len.load(Ordering::Acquire) as usize).min(self.capacity);
         out.clear();
         unsafe {
             let src = std::slice::from_raw_parts(self.resp_buf, len);
@@ -224,6 +235,14 @@ impl SlotChannel {
     /// Current request doorbell sequence (consumer bootstrap).
     pub fn request_seq(&self) -> u32 {
         self.header().req.load()
+    }
+
+    /// Current response doorbell sequence — how many responses the
+    /// consumer has published. Lets a pool owner drain in-flight work
+    /// (wait until responses catch up with submissions) before tearing
+    /// a slot down.
+    pub fn response_seq(&self) -> u32 {
+        self.header().resp.load()
     }
 }
 
@@ -329,5 +348,67 @@ mod tests {
     fn too_small_region_rejected() {
         let r = ShmRegion::new(16).unwrap();
         assert!(SlotChannel::at(&r, 0, 1024).is_err());
+    }
+
+    /// Regression for the shared-`len` race: requests and responses of
+    /// *different* lengths must never clobber each other's length word.
+    /// Each round sends a request of one length and expects a response of
+    /// an unrelated length, over many threads' worth of rounds.
+    #[test]
+    fn asymmetric_lengths_survive_sustained_ping_pong() {
+        let capacity = 128usize;
+        let (region, mut slots) = slot_channels(1, capacity).unwrap();
+        let region = Arc::new(region);
+        let ch = Arc::new(slots.remove(0));
+        let (ch2, keep) = (ch.clone(), region.clone());
+        let rounds = 3_000usize;
+        let worker = std::thread::spawn(move || {
+            let _k = keep;
+            let mut seen = 0u32;
+            let mut buf = Vec::new();
+            for _ in 0..rounds {
+                seen = ch2.recv_request(seen, &mut buf);
+                // Respond with a *different* length: the request length
+                // encoded as a run of its own value.
+                let n = buf.len();
+                let resp_len = (n * 7 + 3) % 128 + 1;
+                let resp: Vec<f32> = vec![n as f32; resp_len];
+                ch2.send_response(&resp);
+            }
+        });
+        let mut resp = Vec::new();
+        let mut rng = crate::util::rng::Rng::new(42);
+        for i in 0..rounds {
+            let n = rng.range(1, capacity + 1);
+            let payload: Vec<f32> = vec![0.25; n];
+            let token = ch.send_request(&payload);
+            ch.recv_response(token, &mut resp);
+            let want_len = (n * 7 + 3) % 128 + 1;
+            assert_eq!(resp.len(), want_len, "round {i}: resp length clobbered");
+            assert!(
+                resp.iter().all(|&v| v == n as f32),
+                "round {i}: resp content clobbered"
+            );
+        }
+        worker.join().unwrap();
+    }
+
+    /// The two length words are genuinely independent: publishing a new
+    /// request must leave a still-unread response intact.
+    #[test]
+    fn request_publish_does_not_clobber_pending_response() {
+        let (_region, slots) = slot_channels(1, 64).unwrap();
+        let ch = &slots[0];
+        // Round 1: request → response (left unread for now).
+        let token = ch.send_request(&[1.0, 2.0]);
+        let mut got = Vec::new();
+        ch.recv_request(0, &mut got);
+        ch.send_response(&[7.0, 8.0, 9.0]);
+        // Producer publishes the *next* request before reading the
+        // response (the overlap the old shared `len` corrupted).
+        ch.send_request(&[5.0; 17]);
+        let mut resp = Vec::new();
+        ch.recv_response(token, &mut resp);
+        assert_eq!(resp, vec![7.0, 8.0, 9.0]);
     }
 }

@@ -118,13 +118,29 @@ pub fn mbgmv(
     x: &[f32],
     y: &mut [f32],
 ) {
+    let refs: Vec<&AdapterWeights> = adapters.iter().collect();
+    mbgmv_ref(&refs, indices, h1, h2, x, y);
+}
+
+/// [`mbgmv`] over *borrowed* adapter stacks — the device-resident path of
+/// the serving engine gathers each slot's stack without cloning weights
+/// (the stacks live behind `Arc`s shared with the CPU-LoRA workers, which
+/// is what makes the CPU-assisted and resident outputs bit-compatible).
+pub fn mbgmv_ref(
+    adapters: &[&AdapterWeights],
+    indices: &[usize],
+    h1: usize,
+    h2: usize,
+    x: &[f32],
+    y: &mut [f32],
+) {
     let n = indices.len();
     assert_eq!(x.len(), n * h1);
     assert_eq!(y.len(), n * h2);
     let max_rank = adapters.iter().map(|a| a.rank).max().unwrap_or(0);
     let mut scratch = vec![0.0f32; max_rank.max(1)];
     for (i, &idx) in indices.iter().enumerate() {
-        let ad = &adapters[idx];
+        let ad = adapters[idx];
         assert_eq!(ad.h1, h1);
         assert_eq!(ad.h2, h2);
         lora_apply(

@@ -45,7 +45,12 @@
 //!   (submit / poll / cancel / stats), implemented by both backends
 //!   below so schedulers and drivers route against one interface.
 //! - [`server::InferenceServer`] — the real single-server engine
-//!   (base model + local LoRA repository + continuous batcher + PJRT).
+//!   (base model + local LoRA repository + continuous batcher) over a
+//!   [`runtime::Runtime`] backend: the PJRT executor for AOT artifacts,
+//!   or the pure-Rust [`runtime::NativeRuntime`] on which CaraServe's
+//!   CPU-assisted cold start runs for real (shm worker pool computing
+//!   per-layer `xAB` while the adapter load window elapses, then the
+//!   §4.3 handoff to the resident `bgmv` path).
 //! - [`sim::SimFront`] — the discrete-event simulator behind the same
 //!   API; [`sim::Simulation`] runs calibrated cluster experiments.
 //! - [`scheduler::RankAwareScheduler`] — Algorithm 1 over a cluster,

@@ -2,8 +2,11 @@
 //!
 //! Subcommands:
 //!
-//! - `serve`     — load the AOT artifacts and serve a synthetic batch of
-//!   requests through the real PJRT runtime, printing metrics.
+//! - `serve`     — serve a synthetic batch of requests through a real
+//!   runtime (native pure-Rust backend by default, PJRT artifacts when
+//!   built), with the CPU-assisted cold-start path live when
+//!   `--cpu-workers > 0`, printing metrics incl. the TTFT cold-start
+//!   breakdown.
 //! - `simulate`  — run a single-instance simulation of one §7.2 workload.
 //! - `schedule`  — run the §7.5 cluster scheduling simulation.
 //! - `profile`   — fit the §5 performance models and print (α, β, R²).
@@ -23,8 +26,9 @@ const USAGE: &str = "\
 caraserve <subcommand> [options]
 
 subcommands:
-  serve     --artifacts DIR --requests N --mode cached|ondemand|caraserve
-            --slo-ttft-ms F --slo-tpot-ms F
+  serve     --runtime auto|native|pjrt --artifacts DIR --requests N
+            --mode cached|ondemand|caraserve --cpu-workers N
+            --load-scale F --slo-ttft-ms F --slo-tpot-ms F
   simulate  --mode cached|ondmd|s-lora|caraserve --rps F --rank N --secs F
   schedule  --policy rank-aware|most-idle|first-fit|random --instances N
             --kernel bgmv|mbgmv --rps F --secs F
@@ -44,6 +48,9 @@ fn run() -> anyhow::Result<()> {
         "artifacts",
         "requests",
         "mode",
+        "runtime",
+        "cpu-workers",
+        "load-scale",
         "rps",
         "rank",
         "secs",
@@ -71,6 +78,7 @@ fn run() -> anyhow::Result<()> {
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     use caraserve::model::LoraSpec;
+    use caraserve::runtime::{NativeConfig, NativeRuntime, Runtime};
     use caraserve::server::{
         ColdStartMode, EngineConfig, InferenceServer, LifecycleState, ServeRequest,
     };
@@ -82,6 +90,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         _ => ColdStartMode::CaraServe,
     };
     let seed: u64 = args.opt_parse_or("seed", 1).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let workers: usize = args
+        .opt_parse_or("cpu-workers", 4)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let load_scale: f64 = args
+        .opt_parse_or("load-scale", 1.0)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
     let slo_ttft: f64 = args
         .opt_parse_or("slo-ttft-ms", 200.0)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -89,17 +103,54 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         .opt_parse_or("slo-tpot-ms", 50.0)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
 
-    println!("loading artifacts from {dir} ...");
-    let runtime = caraserve::runtime::ModelRuntime::load(std::path::Path::new(&dir))?;
+    // Pick the backend: PJRT when artifacts are built (or demanded),
+    // otherwise the native pure-Rust runtime — which also carries the
+    // real CPU-assisted cold-start path.
+    let manifest = std::path::Path::new(&dir).join("manifest.json");
+    let runtime: Runtime = match args.opt_or("runtime", "auto").as_str() {
+        "pjrt" => {
+            println!("loading artifacts from {dir} ...");
+            caraserve::runtime::ModelRuntime::load(std::path::Path::new(&dir))?.into()
+        }
+        "native" => NativeRuntime::new(NativeConfig::tiny()).into(),
+        "auto" if manifest.exists() => {
+            println!("loading artifacts from {dir} ...");
+            caraserve::runtime::ModelRuntime::load(std::path::Path::new(&dir))?.into()
+        }
+        "auto" => {
+            println!("no artifacts at {dir}; using the native runtime");
+            NativeRuntime::new(NativeConfig::tiny()).into()
+        }
+        other => anyhow::bail!("unknown --runtime {other} (use auto|native|pjrt)"),
+    };
     let mut server = InferenceServer::new(
         runtime,
         EngineConfig {
             cold_start: mode,
+            load_scale,
             ..Default::default()
         },
     )?;
     for id in 0..64u64 {
         server.install_adapter(LoraSpec::standard(id, 8, "tiny"));
+    }
+    // Only CaraServe on a backend with the per-layer seam ever plans an
+    // assist row — don't spawn worker threads the run can't use.
+    if workers > 0
+        && mode == ColdStartMode::CaraServe
+        && server.runtime.supports_cpu_assist()
+    {
+        server.enable_cpu_assist(workers)?;
+    }
+    if mode == ColdStartMode::CaraServe {
+        println!(
+            "CaraServe cold starts: {}",
+            if server.cpu_assist_active() {
+                "real CPU-assisted path (shm worker pool)"
+            } else {
+                "modeled overlap (no per-layer seam on this backend)"
+            }
+        );
     }
 
     let mut rng = caraserve::util::rng::Rng::new(seed);
@@ -135,6 +186,28 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             );
         }
     }
+    // TTFT cold-start decomposition (§4): what the load window, prefill
+    // compute, and CPU-assist time each contributed.
+    for metric in ["ttft_load", "ttft_prefill", "ttft_assist"] {
+        if let Some(s) = m.summary(metric) {
+            println!(
+                "{metric:>12}: mean {:.2} ms  p99 {:.2} ms",
+                s.mean * 1e3,
+                s.p99 * 1e3
+            );
+        }
+    }
+    let cs = m.cold_start();
+    println!(
+        "cold starts: {} cold / {} warm admits, {} CPU-assisted, {} handoffs, \
+         {} deferred collisions, {:.2} ms decode-assist",
+        cs.cold_admits,
+        cs.warm_admits,
+        cs.cpu_assisted,
+        cs.handoffs,
+        cs.deferred_collisions,
+        cs.assist_decode_s * 1e3
+    );
     if let Some(att) = m.slo_attainment() {
         println!(
             "SLO (ttft ≤ {slo_ttft} ms, tpot ≤ {slo_tpot} ms): attainment {:.1}%",

@@ -1,17 +1,187 @@
-//! The PJRT runtime: loads the AOT artifacts produced by
-//! `python/compile/aot.py` and executes them from the Rust request path.
+//! Model runtimes: the PJRT executor for AOT artifacts and the native
+//! pure-Rust backend, behind one [`Runtime`] facade.
 //!
 //! - [`manifest`] — parses `artifacts/manifest.json` (model config,
 //!   bucket table, per-artifact input ordering).
 //! - [`executor`] — wraps `xla::PjRtClient`: compiles each
 //!   `*.hlo.txt` once, uploads the weight arrays once as device
 //!   buffers, and serves `prefill`/`decode` calls with bucket routing.
+//!   Its LoRA stacks are baked into the artifacts, so per-request LoRA
+//!   routing travels in the slot-index input.
+//! - [`native`] — [`NativeRuntime`]: a pure-Rust backend with an open
+//!   layer loop, per-slot installable LoRA stacks, and per-request
+//!   [`RowLora`] sourcing (resident `bgmv` path vs. externally computed
+//!   CPU-assist deltas). This is the backend on which the paper's §4
+//!   CPU-assisted cold-start mechanism actually executes.
 //!
-//! Python never runs here; the artifacts directory is the only contract
-//! between the layers.
+//! Python never runs here; for the PJRT path the artifacts directory is
+//! the only contract between the layers.
 
 pub mod executor;
 pub mod manifest;
+pub mod native;
 
 pub use executor::{DecodeOut, ModelRuntime, PrefillOut};
 pub use manifest::{ArtifactMeta, Manifest};
+pub use native::{ExternalLora, NativeConfig, NativeRuntime, RowLora};
+
+use anyhow::Result;
+use std::sync::Arc;
+
+use crate::kernels::AdapterWeights;
+
+/// A serving backend: either the PJRT executor or the native model.
+/// [`crate::server::InferenceServer`] drives this facade so the whole
+/// engine (batching, paged KV, cold-start handling, metrics) is backend-
+/// agnostic.
+pub enum Runtime {
+    /// AOT artifacts through PJRT (baked LoRA stacks).
+    Pjrt(ModelRuntime),
+    /// Pure-Rust native model (installable stacks + CPU-assist seam).
+    Native(NativeRuntime),
+}
+
+impl From<ModelRuntime> for Runtime {
+    fn from(rt: ModelRuntime) -> Runtime {
+        Runtime::Pjrt(rt)
+    }
+}
+
+impl From<NativeRuntime> for Runtime {
+    fn from(rt: NativeRuntime) -> Runtime {
+        Runtime::Native(rt)
+    }
+}
+
+impl Runtime {
+    /// Hidden dimension H.
+    pub fn hidden(&self) -> usize {
+        match self {
+            Runtime::Pjrt(rt) => rt.hidden,
+            Runtime::Native(rt) => rt.cfg.hidden,
+        }
+    }
+
+    /// Transformer layer count.
+    pub fn layers(&self) -> usize {
+        match self {
+            Runtime::Pjrt(rt) => rt.layers,
+            Runtime::Native(rt) => rt.cfg.layers,
+        }
+    }
+
+    /// Vocabulary size.
+    pub fn vocab(&self) -> usize {
+        match self {
+            Runtime::Pjrt(rt) => rt.vocab,
+            Runtime::Native(rt) => rt.cfg.vocab,
+        }
+    }
+
+    /// Device adapter slots.
+    pub fn lora_slots(&self) -> usize {
+        match self {
+            Runtime::Pjrt(rt) => rt.manifest.lora_slots,
+            Runtime::Native(rt) => rt.cfg.lora_slots,
+        }
+    }
+
+    /// Largest prompt any prefill bucket accepts.
+    pub fn max_prompt(&self) -> Option<usize> {
+        match self {
+            Runtime::Pjrt(rt) => {
+                rt.manifest.prefill_buckets().iter().map(|&(_, s)| s).max()
+            }
+            Runtime::Native(rt) => Some(rt.cfg.max_prompt),
+        }
+    }
+
+    /// Decode cache capacity M.
+    pub fn cache_m(&self) -> Option<usize> {
+        match self {
+            Runtime::Pjrt(rt) => rt.manifest.decode_buckets().first().map(|&(_, m)| m),
+            Runtime::Native(rt) => Some(rt.cfg.cache_m),
+        }
+    }
+
+    /// Largest decode batch.
+    pub fn max_decode_batch(&self) -> usize {
+        match self {
+            Runtime::Pjrt(rt) => rt
+                .manifest
+                .decode_buckets()
+                .iter()
+                .map(|&(b, _)| b)
+                .max()
+                .unwrap_or(1),
+            Runtime::Native(rt) => rt.cfg.max_decode_batch,
+        }
+    }
+
+    /// The decode bucket serving `batch` requests: (bucket batch, M).
+    pub fn pick_decode_bucket(&self, batch: usize) -> Option<(usize, usize)> {
+        match self {
+            Runtime::Pjrt(rt) => rt.manifest.pick_decode_bucket(batch),
+            Runtime::Native(rt) => {
+                (batch <= rt.cfg.max_decode_batch).then_some((batch, rt.cfg.cache_m))
+            }
+        }
+    }
+
+    /// Does this backend support externally supplied per-layer LoRA
+    /// deltas (the real CPU-assisted path)? The PJRT artifacts bake their
+    /// stacks in, so there the cold-start overlap stays a modeled window.
+    pub fn supports_cpu_assist(&self) -> bool {
+        matches!(self, Runtime::Native(_))
+    }
+
+    /// Make `weights` resident in `slot` — the completion of a modeled
+    /// host→device transfer. No-op on the PJRT backend (baked stacks).
+    pub fn install_slot(&mut self, slot: usize, weights: Option<Arc<[AdapterWeights; 4]>>) {
+        match self {
+            Runtime::Pjrt(_) => {}
+            Runtime::Native(rt) => rt.install_slot(slot, weights),
+        }
+    }
+
+    /// Prefill a batch. `idx[b]` is each request's device slot; `rows[b]`
+    /// its LoRA sourcing (the native backend consumes `rows`, PJRT
+    /// consumes `idx`).
+    pub fn prefill(
+        &self,
+        idx: &[i32],
+        tokens: &[Vec<i32>],
+        lens: &[i32],
+        rows: &[RowLora<'_>],
+    ) -> Result<PrefillOut> {
+        match self {
+            Runtime::Pjrt(rt) => rt.prefill(idx, tokens, lens),
+            Runtime::Native(rt) => rt.prefill(idx, tokens, lens, rows),
+        }
+    }
+
+    /// One decode step over assembled KV (`[layers, bucket_batch, M,
+    /// hidden]`).
+    pub fn decode(
+        &self,
+        idx: &[i32],
+        tokens: &[i32],
+        pos: &[i32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        rows: &[RowLora<'_>],
+    ) -> Result<DecodeOut> {
+        match self {
+            Runtime::Pjrt(rt) => rt.decode(idx, tokens, pos, k_cache, v_cache),
+            Runtime::Native(rt) => rt.decode(idx, tokens, pos, k_cache, v_cache, rows),
+        }
+    }
+
+    /// Greedy argmax over one logits row.
+    pub fn argmax_row(&self, logits: &[f32], row: usize) -> i32 {
+        match self {
+            Runtime::Pjrt(rt) => rt.argmax_row(logits, row),
+            Runtime::Native(rt) => rt.argmax_row(logits, row),
+        }
+    }
+}

@@ -1,22 +1,34 @@
 //! [`InferenceServer`]: the complete single-server serving engine.
 //!
 //! Wires the continuous batcher, the paged KV manager, the device slot
-//! cache, and the PJRT [`ModelRuntime`] into the iteration loop of
-//! Fig 2, behind the streaming lifecycle API ([`super::api`]): `submit`
-//! returns a [`RequestHandle`] whose event stream the prefill/decode
+//! cache, the CPU-LoRA worker pool, and a [`Runtime`] backend (PJRT or
+//! native) into the iteration loop of Fig 2, behind the streaming
+//! lifecycle API ([`super::api`]): `submit` returns a
+//! [`super::api::RequestHandle`] whose event stream the prefill/decode
 //! loop feeds token by token, honoring cancellation and stop tokens
 //! mid-flight. Cold starts follow the configured [`ColdStartMode`]:
 //!
-//! - `Cached` — oracle: every adapter pre-resident, no load delay.
+//! - `Cached` — oracle: every adapter becomes resident at admit with no
+//!   load delay.
 //! - `OnDemand` — the load window *serializes* with prefill (Punica/
 //!   S-LoRA behaviour).
-//! - `CaraServe` — the load window runs **concurrently** with prefill
-//!   compute. On this CPU-PJRT testbed the "GPU" prefill literally runs
-//!   on host cores, so overlapping it with the load window reproduces
-//!   the paper's CPU-assisted mechanism: compute proceeds while the
-//!   (modeled) PCIe transfer completes, and TTFT absorbs only
-//!   `max(load, prefill)` instead of `load + prefill`.
+//! - `CaraServe` — the paper's §4 mechanism, run for real when the
+//!   backend is the native runtime and a CPU worker pool is attached
+//!   ([`InferenceServer::enable_cpu_assist`]): the adapter load becomes
+//!   an asynchronous window tracked by [`AsyncLoader`] while prefill
+//!   starts immediately, with every layer's `xAB` delta computed by the
+//!   shared-memory CPU workers (sharded across workers by token range)
+//!   and merged into the Q/K/V projections. Requests keep decoding
+//!   through the CPU path until their adapter's load deadline passes,
+//!   then hand off to the device-resident `bgmv` path (§4.3) — both
+//!   paths read the same `Arc`-shared weights, so the handoff never
+//!   changes token values. TTFT absorbs only the prefill compute
+//!   (≤ `max(load, prefill)`), not `load + prefill`. On the PJRT
+//!   backend (baked LoRA stacks, no mid-layer seam) or without a worker
+//!   pool, the mode falls back to the modeled overlap: the iteration
+//!   spans `max(load, prefill)`.
 
+use std::cell::Cell;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -29,10 +41,11 @@ use super::api::{
 };
 use super::batcher::{Batcher, NextAction, RunningReq};
 use super::kvcache::KvCacheManager;
-use super::metrics::MetricsRecorder;
-use crate::adapters::{DeviceSlotCache, HostRepository, LoaderModel};
-use crate::model::LoraSpec;
-use crate::runtime::ModelRuntime;
+use super::metrics::{MetricsRecorder, TtftBreakdown};
+use crate::adapters::{AsyncLoader, DeviceSlotCache, HostRepository, LoaderModel};
+use crate::cpu_lora::{AdapterTable, CoreProfile, CpuLoraEngine};
+use crate::model::{LoraSpec, TargetMatrix};
+use crate::runtime::{ExternalLora, RowLora, Runtime};
 use crate::scheduler::ServerStats;
 use crate::util::rng::Rng;
 
@@ -75,9 +88,41 @@ impl Default for EngineConfig {
     }
 }
 
+/// Wraps the CPU-LoRA engine so the runtime's per-layer `delta` calls
+/// are wall-clock accounted (the `assist` component of the TTFT
+/// breakdown / the decode-assist counter).
+struct TimedAssist<'a> {
+    engine: &'a CpuLoraEngine,
+    spent: Cell<f64>,
+}
+
+impl ExternalLora for TimedAssist<'_> {
+    fn delta(
+        &self,
+        adapter: u64,
+        target: TargetMatrix,
+        n_tok: usize,
+        x: &[f32],
+    ) -> Vec<f32> {
+        let t0 = Instant::now();
+        let y = self.engine.delta(adapter, target, n_tok, x);
+        self.spent.set(self.spent.get() + t0.elapsed().as_secs_f64());
+        y
+    }
+}
+
+/// How one admitted request's LoRA is sourced this iteration.
+#[derive(Clone, Copy, PartialEq)]
+enum RowPlan {
+    /// Device-resident slot stack.
+    Resident,
+    /// CPU-assisted deltas (adapter still loading).
+    Assist,
+}
+
 /// The serving engine for one base model on one (virtual) device.
 pub struct InferenceServer {
-    pub runtime: ModelRuntime,
+    pub runtime: Runtime,
     pub config: EngineConfig,
     batcher: Batcher,
     kv: KvCacheManager,
@@ -85,13 +130,24 @@ pub struct InferenceServer {
     repo: HostRepository,
     loader: LoaderModel,
     metrics: MetricsRecorder,
+    /// Host-memory adapter weights, shared with the CPU workers and the
+    /// native runtime's slot stacks (one copy, `Arc`ed everywhere).
+    table: Arc<AdapterTable>,
+    /// CPU-LoRA worker pool (None ⇒ CaraServe falls back to the modeled
+    /// overlap).
+    cpu: Option<CpuLoraEngine>,
+    /// In-flight adapter load windows (real CaraServe path).
+    loads: AsyncLoader,
+    /// Requests already counted in the deferred-collision metric (each
+    /// blocked request counts once, not once per iteration it waits).
+    deferred_ids: std::collections::HashSet<u64>,
     /// Event channels of live (non-terminal) requests.
     handles: HashMap<u64, Arc<Mutex<EventChannel>>>,
     /// Next engine-assigned request id.
     next_id: u64,
     /// Per-request device slot.
     slots: HashMap<u64, usize>,
-    /// Largest prompt the compiled buckets accept.
+    /// Largest prompt the backend accepts.
     max_prompt: usize,
     /// Decode cache capacity M.
     cache_m: usize,
@@ -101,28 +157,17 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
-    /// Build a server over a loaded runtime.
-    pub fn new(runtime: ModelRuntime, config: EngineConfig) -> Result<InferenceServer> {
+    /// Build a server over a backend (PJRT [`crate::runtime::ModelRuntime`]
+    /// or [`crate::runtime::NativeRuntime`], via `Into<Runtime>`).
+    pub fn new(runtime: impl Into<Runtime>, config: EngineConfig) -> Result<InferenceServer> {
+        let runtime: Runtime = runtime.into();
         let max_prompt = runtime
-            .manifest
-            .prefill_buckets()
-            .iter()
-            .map(|&(_, s)| s)
-            .max()
+            .max_prompt()
             .ok_or_else(|| anyhow!("no prefill buckets"))?;
         let cache_m = runtime
-            .manifest
-            .decode_buckets()
-            .first()
-            .map(|&(_, m)| m)
+            .cache_m()
             .ok_or_else(|| anyhow!("no decode buckets"))?;
-        let max_decode_batch = runtime
-            .manifest
-            .decode_buckets()
-            .iter()
-            .map(|&(b, _)| b)
-            .max()
-            .unwrap_or(1);
+        let max_decode_batch = runtime.max_decode_batch();
         anyhow::ensure!(
             config.max_batch <= max_decode_batch,
             "max_batch {} exceeds decode bucket {}",
@@ -130,13 +175,14 @@ impl InferenceServer {
             max_decode_batch
         );
         let kv = KvCacheManager::new(
-            runtime.layers,
-            runtime.hidden,
+            runtime.layers(),
+            runtime.hidden(),
             config.page_size,
             config.kv_pages,
             cache_m,
         );
-        let slot_cache = DeviceSlotCache::new(runtime.manifest.lora_slots);
+        let slot_cache =
+            DeviceSlotCache::new(runtime.lora_slots()).map_err(|e| anyhow!("{e}"))?;
         let model_cfg = crate::model::LlamaConfig::tiny();
         let loader = LoaderModel {
             cfg: model_cfg,
@@ -150,6 +196,10 @@ impl InferenceServer {
             repo: HostRepository::new(),
             loader,
             metrics: MetricsRecorder::new(),
+            table: Arc::new(AdapterTable::new()),
+            cpu: None,
+            loads: AsyncLoader::new(),
+            deferred_ids: std::collections::HashSet::new(),
             handles: HashMap::new(),
             next_id: 0,
             slots: HashMap::new(),
@@ -162,9 +212,39 @@ impl InferenceServer {
         })
     }
 
-    /// Register an adapter in the host repository. Requests against
-    /// uninstalled adapters are rejected at submission.
+    /// Attach a CPU-LoRA worker pool of `workers` shared-memory workers.
+    /// With the native backend this turns `ColdStartMode::CaraServe` into
+    /// the real §4 mechanism (see module docs); the pool shares this
+    /// engine's [`AdapterTable`], which is what makes CPU-assisted and
+    /// resident outputs agree.
+    pub fn enable_cpu_assist(&mut self, workers: usize) -> Result<()> {
+        anyhow::ensure!(workers > 0, "need ≥ 1 CPU worker");
+        let hidden = self.runtime.hidden();
+        let profile = CoreProfile::default_for(hidden, 8);
+        let engine = CpuLoraEngine::new(
+            workers,
+            hidden,
+            self.max_prompt,
+            self.table.clone(),
+            profile,
+        )
+        .map_err(|e| anyhow!("cpu worker pool: {e}"))?;
+        self.cpu = Some(engine);
+        Ok(())
+    }
+
+    /// Is the real CPU-assisted path active (pool attached + backend with
+    /// a per-layer LoRA seam)?
+    pub fn cpu_assist_active(&self) -> bool {
+        self.cpu.is_some() && self.runtime.supports_cpu_assist()
+    }
+
+    /// Register an adapter in the host repository and install its
+    /// (synthetic, seeded) weights in the shared host-memory table.
+    /// Requests against uninstalled adapters are rejected at submission.
     pub fn install_adapter(&mut self, spec: LoraSpec) {
+        self.table
+            .install_synthetic(spec.id, self.runtime.hidden(), spec.rank);
         self.repo.install(spec);
     }
 
@@ -244,15 +324,33 @@ impl InferenceServer {
     }
 
     /// Run one iteration (Fig 2). Returns false when idle. Cancellation
-    /// requests are honored at this boundary, before prefill/decode.
+    /// requests are honored at this boundary, before prefill/decode, and
+    /// completed adapter loads are installed (the §4.3 handoff point).
     pub fn step(&mut self) -> Result<bool> {
         self.reap_cancelled()?;
+        self.finish_loads();
         let kv = &self.kv;
         let action = self.batcher.next_action(|tokens| kv.can_admit(tokens));
         match action {
             NextAction::Idle => Ok(false),
             NextAction::Prefill { admit } => {
-                self.run_prefill(admit)?;
+                let admit = self.collision_free_admit(admit);
+                if admit > 0 {
+                    self.run_prefill(admit)?;
+                } else if !self.batcher.running.is_empty() {
+                    // The whole admissible prefix collides with busy
+                    // slots: decode this iteration, admit later.
+                    self.run_decode()?;
+                } else {
+                    // Colliding with an in-flight load and nothing to
+                    // decode: wait the load out, then retry.
+                    let deadline = self
+                        .loads
+                        .earliest_deadline()
+                        .ok_or_else(|| anyhow!("slot collision with no live owner"))?;
+                    spin_sleep(deadline.saturating_duration_since(Instant::now()));
+                    self.finish_loads();
+                }
                 Ok(true)
             }
             NextAction::Decode => {
@@ -297,10 +395,87 @@ impl InferenceServer {
                 }
             }
             self.metrics.cancelled(id);
+            self.deferred_ids.remove(&id);
             Self::emit_to(&self.handles, id, RequestEvent::Cancelled);
             self.handles.remove(&id);
         }
         Ok(())
+    }
+
+    /// Poll the async loader: adapters whose modeled transfer completed
+    /// become device-resident, and running requests on them hand off from
+    /// the CPU path to the resident path at this boundary (§4.3).
+    fn finish_loads(&mut self) {
+        let done = self.loads.poll(Instant::now());
+        for adapter in done {
+            if let Some(slot) = self.slot_cache.slot_of(adapter) {
+                if self.slot_cache.occupant(slot) == Some(adapter) {
+                    self.runtime.install_slot(slot, self.table.get(adapter));
+                }
+            }
+            let running = self
+                .batcher
+                .running
+                .iter()
+                .filter(|r| r.adapter == adapter)
+                .count();
+            if running > 0 {
+                self.metrics.handoffs(running);
+            }
+        }
+    }
+
+    /// Shrink a proposed admit count to the longest collision-free
+    /// prefix: an admit whose fixed device slot is held by a *different*
+    /// adapter — by a running request, an in-flight load, or an earlier
+    /// admit in this very batch — must wait, otherwise its `acquire_fixed`
+    /// would silently evict live weights before they execute. FIFO order
+    /// is preserved (we stop at the first collider rather than skipping
+    /// it).
+    fn collision_free_admit(&mut self, admit: usize) -> usize {
+        let mut busy: HashMap<usize, u64> = HashMap::new();
+        for r in &self.batcher.running {
+            if let Some(&slot) = self.slots.get(&r.id) {
+                busy.insert(slot, r.adapter);
+            }
+        }
+        for adapter in self.loads.adapters() {
+            if let Some(slot) = self.slot_cache.slot_of(adapter) {
+                busy.insert(slot, adapter);
+            }
+        }
+        let mut granted = 0;
+        for q in self.batcher.queue.iter().take(admit) {
+            let adapter = q.req.adapter;
+            let slot = self.slot_cache.fixed_slot(adapter);
+            match busy.get(&slot) {
+                Some(&other) if other != adapter => break,
+                _ => {
+                    busy.insert(slot, adapter);
+                    granted += 1;
+                }
+            }
+        }
+        if granted < admit {
+            // The scan stopped at a collider; count that request once
+            // across however many iterations it stays blocked.
+            let blocked = self.batcher.queue[granted].req.id;
+            if self.deferred_ids.insert(blocked) {
+                self.metrics.deferred_collisions(1);
+            }
+        }
+        granted
+    }
+
+    /// Modeled host→device load window for an adapter (seconds).
+    fn load_window(&self, adapter: u64) -> Result<f64> {
+        // submit() validated installation, so a missing spec is an
+        // engine invariant breach — never fabricate one.
+        let spec = self
+            .repo
+            .get(adapter)
+            .ok_or_else(|| anyhow!("adapter {adapter} missing from repository"))?;
+        Ok(self.loader.load_time(spec))
     }
 
     /// Pick the next token for one logits row: greedy argmax, or seeded
@@ -318,7 +493,7 @@ impl InferenceServer {
         if sampling.top_k <= 1 {
             return self.runtime.argmax_row(logits, row);
         }
-        let vocab = self.runtime.vocab;
+        let vocab = self.runtime.vocab();
         let slice = &logits[row * vocab..(row + 1) * vocab];
         let k = sampling.top_k.min(vocab);
         // k-sized partial scan, descending: avoids a vocab-sized
@@ -349,23 +524,84 @@ impl InferenceServer {
 
     fn run_prefill(&mut self, admit: usize) -> Result<()> {
         let admits = self.batcher.take_admits(admit);
+        let real_assist = self.cpu_assist_active();
+        let now = Instant::now();
 
-        // Acquire device slots; compute the cold-start window.
-        let mut total_load = 0.0f64;
+        // Acquire device slots and plan each row's LoRA sourcing.
+        let mut modeled_load = 0.0f64; // serialized / modeled-overlap window
         let mut slot_of: Vec<usize> = Vec::with_capacity(admits.len());
+        let mut plans: Vec<RowPlan> = Vec::with_capacity(admits.len());
+        let mut windows: Vec<(f64, bool)> = Vec::with_capacity(admits.len());
         for q in &admits {
+            let adapter = q.req.adapter;
+            // Once admitted, a previously deferred request may be counted
+            // again if it ever re-collides (it can't, but keep the set
+            // bounded by currently blocked requests either way).
+            self.deferred_ids.remove(&q.req.id);
             // Fixed adapter→slot mapping: the baked LoRA stacks make the
             // slot index part of the adapter's identity (see
-            // DeviceSlotCache::acquire_fixed).
-            let acq = self.slot_cache.acquire_fixed(q.req.adapter);
+            // DeviceSlotCache::acquire_fixed). collision_free_admit
+            // guaranteed no live occupant is evicted here.
+            let acq = self.slot_cache.acquire_fixed(adapter);
             slot_of.push(acq.slot);
-            if acq.cold && self.config.cold_start != ColdStartMode::Cached {
-                // submit() validated installation, so a missing spec is
-                // an engine invariant breach — never fabricate one.
-                let spec = self.repo.get(q.req.adapter).ok_or_else(|| {
-                    anyhow!("adapter {} missing from repository", q.req.adapter)
-                })?;
-                total_load += self.loader.load_time(spec);
+            let loading = self.loads.loading(adapter);
+            match self.config.cold_start {
+                ColdStartMode::Cached => {
+                    // Oracle: instant residency, no load window.
+                    if acq.cold {
+                        self.runtime.install_slot(acq.slot, self.table.get(adapter));
+                    }
+                    self.metrics.warm_admit();
+                    plans.push(RowPlan::Resident);
+                    windows.push((0.0, false));
+                }
+                ColdStartMode::OnDemand => {
+                    if acq.cold {
+                        let w = self.load_window(adapter)?;
+                        modeled_load += w;
+                        self.runtime.install_slot(acq.slot, self.table.get(adapter));
+                        self.metrics.cold_admit(false);
+                        windows.push((w, true));
+                    } else {
+                        self.metrics.warm_admit();
+                        windows.push((0.0, false));
+                    }
+                    plans.push(RowPlan::Resident);
+                }
+                ColdStartMode::CaraServe => {
+                    if acq.cold || loading {
+                        let w = if loading {
+                            // Mid-load admit: only the remaining window.
+                            self.loads
+                                .remaining(adapter, now)
+                                .map_or(0.0, |d| d.as_secs_f64())
+                        } else {
+                            self.load_window(adapter)?
+                        };
+                        if real_assist {
+                            // The real mechanism: start the async load,
+                            // prefill immediately via CPU-side xAB.
+                            if !loading {
+                                self.loads.begin(adapter, Duration::from_secs_f64(w));
+                            }
+                            self.metrics.cold_admit(true);
+                            plans.push(RowPlan::Assist);
+                        } else {
+                            // Modeled fallback: overlap the window with
+                            // this iteration's compute.
+                            modeled_load += w;
+                            self.runtime
+                                .install_slot(acq.slot, self.table.get(adapter));
+                            self.metrics.cold_admit(false);
+                            plans.push(RowPlan::Resident);
+                        }
+                        windows.push((w, true));
+                    } else {
+                        self.metrics.warm_admit();
+                        plans.push(RowPlan::Resident);
+                        windows.push((0.0, false));
+                    }
+                }
             }
         }
 
@@ -375,25 +611,55 @@ impl InferenceServer {
         let lens: Vec<i32> = admits.iter().map(|q| q.req.prompt.len() as i32).collect();
 
         // Execute with the configured cold-start semantics.
-        let load_window = Duration::from_secs_f64(total_load);
-        let out = match self.config.cold_start {
-            ColdStartMode::Cached => self.runtime.prefill(&idx, &tokens, &lens)?,
-            ColdStartMode::OnDemand => {
-                // Load serializes with prefill.
-                spin_sleep(load_window);
-                self.runtime.prefill(&idx, &tokens, &lens)?
+        let load_window = Duration::from_secs_f64(modeled_load);
+        if self.config.cold_start == ColdStartMode::OnDemand {
+            // Load serializes with prefill.
+            spin_sleep(load_window);
+        }
+        // One timer per assisted row, so the TTFT breakdown attributes
+        // each request its own xAB wall time (not the batch total).
+        let assists: Vec<Option<TimedAssist<'_>>> = plans
+            .iter()
+            .map(|plan| match plan {
+                RowPlan::Resident => None,
+                // Assist rows are only planned when the pool is attached.
+                RowPlan::Assist => Some(TimedAssist {
+                    engine: self.cpu.as_ref().expect("Assist planned without a pool"),
+                    spent: Cell::new(0.0),
+                }),
+            })
+            .collect();
+        let rows: Vec<RowLora<'_>> = plans
+            .iter()
+            .enumerate()
+            .map(|(i, plan)| match plan {
+                RowPlan::Resident => RowLora::Slot(slot_of[i]),
+                RowPlan::Assist => RowLora::Assist {
+                    lora: assists[i].as_ref().expect("Assist planned without a pool"),
+                    adapter: admits[i].req.adapter,
+                },
+            })
+            .collect();
+        let t0 = Instant::now();
+        let out = self.runtime.prefill(&idx, &tokens, &lens, &rows)?;
+        let prefill_dt = t0.elapsed().as_secs_f64();
+        drop(rows);
+        // Materialize the timings so `assists` (which borrows the pool)
+        // is dead before the bookkeeping loop below re-borrows self.
+        let assist_times: Vec<f64> = assists
+            .iter()
+            .map(|a| a.as_ref().map_or(0.0, |t| t.spent.get()))
+            .collect();
+        drop(assists);
+        let modeled_overlap =
+            self.config.cold_start == ColdStartMode::CaraServe && !self.cpu_assist_active();
+        if modeled_overlap {
+            // Modeled overlap: the iteration ends when both the compute
+            // and the load window finish — max(load, prefill).
+            if let Some(rem) = load_window.checked_sub(t0.elapsed()) {
+                spin_sleep(rem);
             }
-            ColdStartMode::CaraServe => {
-                // Load overlaps prefill compute (the paper's mechanism;
-                // see module docs). The iteration ends when both finish.
-                let t0 = Instant::now();
-                let result = self.runtime.prefill(&idx, &tokens, &lens)?;
-                if let Some(rem) = load_window.checked_sub(t0.elapsed()) {
-                    spin_sleep(rem);
-                }
-                result
-            }
-        };
+        }
 
         // Apply results per admitted request: first token, KV admission,
         // FirstToken event, stop-token check.
@@ -410,6 +676,16 @@ impl InferenceServer {
                 row,
                 q.req.prompt.len(),
             )?;
+            let (load, cold) = windows[row];
+            self.metrics.prefill_breakdown(
+                id,
+                TtftBreakdown {
+                    load,
+                    prefill: prefill_dt,
+                    assist: assist_times[row],
+                    cold,
+                },
+            );
             self.metrics.token(id);
             Self::emit_to(&self.handles, id, RequestEvent::FirstToken(first));
             self.slots.insert(id, slot_of[row]);
@@ -436,7 +712,6 @@ impl InferenceServer {
         let batch = self.batcher.running.len();
         let bucket = self
             .runtime
-            .manifest
             .pick_decode_bucket(batch)
             .ok_or_else(|| anyhow!("no decode bucket for batch {batch}"))?;
         let (bb, m) = bucket;
@@ -454,9 +729,47 @@ impl InferenceServer {
             (std::mem::take(&mut self.k_scratch), std::mem::take(&mut self.v_scratch));
         self.kv.assemble_into(&ids, bb, m, &mut k, &mut v)?;
 
-        let out = self.runtime.decode(&idx, &tokens, &pos, &k, &v)?;
+        // Requests whose adapter is still loading keep decoding through
+        // the CPU-assisted path; the rest use the resident bgmv path.
+        let real_assist = self.cpu_assist_active();
+        let assist: Option<TimedAssist<'_>> = self.cpu.as_ref().map(|engine| TimedAssist {
+            engine,
+            spent: Cell::new(0.0),
+        });
+        let rows: Vec<RowLora<'_>> = self
+            .batcher
+            .running
+            .iter()
+            .zip(&idx)
+            .map(|(r, &slot)| {
+                if real_assist && self.loads.loading(r.adapter) {
+                    RowLora::Assist {
+                        lora: assist.as_ref().expect("assist active without a pool"),
+                        adapter: r.adapter,
+                    }
+                } else {
+                    RowLora::Slot(slot as usize)
+                }
+            })
+            .collect();
+        let out = self.runtime.decode(&idx, &tokens, &pos, &k, &v, &rows)?;
+        drop(rows);
+        let assist_dt = assist.as_ref().map_or(0.0, |a| a.spent.get());
+        if assist_dt > 0.0 {
+            self.metrics.assist_decode(assist_dt);
+        }
         self.k_scratch = k;
         self.v_scratch = v;
+        self.apply_decode_out(&ids, &out, bb)
+    }
+
+    /// Shared post-decode bookkeeping: sampling, KV append, events.
+    fn apply_decode_out(
+        &mut self,
+        ids: &[u64],
+        out: &crate::runtime::DecodeOut,
+        bb: usize,
+    ) -> Result<()> {
         for (row, id) in ids.iter().enumerate() {
             let tok = {
                 let r = &self.batcher.running[row];
@@ -527,5 +840,7 @@ fn spin_sleep(d: Duration) {
     }
 }
 
-// Engine integration tests (require built artifacts) live in
-// rust/tests/integration_engine.rs and rust/tests/integration_front.rs.
+// Engine integration tests live in rust/tests/integration_engine.rs
+// (PJRT backend; skip without artifacts), rust/tests/integration_front.rs,
+// and rust/tests/integration_coldstart.rs (native backend + CPU assist;
+// always runs).

@@ -1,13 +1,52 @@
 //! Per-request serving metrics (§7.1: time-to-first-token, time per
 //! token, request latency) and aggregation, including per-request TPOT
-//! (decode-only time per output token) and per-SLO attainment — the
-//! paper's §7 headline metrics.
+//! (decode-only time per output token), per-SLO attainment, and the
+//! cold-start decomposition of TTFT (load window vs. prefill compute vs.
+//! CPU-assist time) — the paper's §7 headline metrics plus the §4
+//! mechanism counters.
 
 use std::collections::HashMap;
 use std::time::Instant;
 
 use super::api::SloSpec;
 use crate::util::stats::{Ecdf, Summary};
+
+/// How one request's admitting prefill iteration spent its time — the
+/// decomposition that distinguishes `load + prefill` (OnDemand) from
+/// `max(load, prefill)` / prefill-only (CaraServe) cold starts.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TtftBreakdown {
+    /// Modeled host→device load window for this request's adapter (s);
+    /// zero on a warm admit.
+    pub load: f64,
+    /// Prefill compute of the admitting iteration (s).
+    pub prefill: f64,
+    /// CPU-LoRA `xAB` wall time inside that prefill (s); zero when the
+    /// request wasn't CPU-assisted.
+    pub assist: f64,
+    /// Was the adapter cold (load in flight or required) at admit?
+    pub cold: bool,
+}
+
+/// Per-mode cold-start counters for one engine lifetime.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ColdStartStats {
+    /// Admits that found their adapter cold (load required/in flight).
+    pub cold_admits: usize,
+    /// Admits that found their adapter device-resident.
+    pub warm_admits: usize,
+    /// Cold admits served through the real CPU-assisted path.
+    pub cpu_assisted: usize,
+    /// Mid-load CPU→resident decode handoffs (§4.3): running requests
+    /// whose adapter finished loading while they decoded.
+    pub handoffs: usize,
+    /// Requests whose admission was deferred (counted once per request)
+    /// because their fixed device slot collided with a different live
+    /// adapter (intra-batch or vs. running/loading).
+    pub deferred_collisions: usize,
+    /// Wall time spent computing CPU-LoRA deltas during decode (s).
+    pub assist_decode_s: f64,
+}
 
 /// One request's completed timing record.
 #[derive(Debug, Clone)]
@@ -25,6 +64,9 @@ pub struct RequestRecord {
     pub output_len: usize,
     /// The SLO the request carried, if any.
     pub slo: Option<SloSpec>,
+    /// Cold-start decomposition of the admitting prefill, when the
+    /// engine recorded one.
+    pub breakdown: Option<TtftBreakdown>,
 }
 
 impl RequestRecord {
@@ -41,6 +83,7 @@ struct InFlight {
     first_token: Option<Instant>,
     tokens: usize,
     slo: Option<SloSpec>,
+    breakdown: Option<TtftBreakdown>,
 }
 
 /// Records request lifecycles and produces summaries.
@@ -49,6 +92,7 @@ pub struct MetricsRecorder {
     inflight: HashMap<u64, InFlight>,
     done: Vec<RequestRecord>,
     cancelled: usize,
+    cold: ColdStartStats,
 }
 
 impl MetricsRecorder {
@@ -66,8 +110,51 @@ impl MetricsRecorder {
                 first_token: None,
                 tokens: 0,
                 slo,
+                breakdown: None,
             },
         );
+    }
+
+    /// Attach the cold-start decomposition of a request's admitting
+    /// prefill iteration.
+    pub fn prefill_breakdown(&mut self, id: u64, breakdown: TtftBreakdown) {
+        if let Some(f) = self.inflight.get_mut(&id) {
+            f.breakdown = Some(breakdown);
+        }
+    }
+
+    /// Count a cold admit (`assisted` when served through the real
+    /// CPU-assisted path).
+    pub fn cold_admit(&mut self, assisted: bool) {
+        self.cold.cold_admits += 1;
+        if assisted {
+            self.cold.cpu_assisted += 1;
+        }
+    }
+
+    /// Count a warm (device-resident) admit.
+    pub fn warm_admit(&mut self) {
+        self.cold.warm_admits += 1;
+    }
+
+    /// Count mid-load CPU→resident decode handoffs.
+    pub fn handoffs(&mut self, n: usize) {
+        self.cold.handoffs += n;
+    }
+
+    /// Count admits deferred by a device-slot collision.
+    pub fn deferred_collisions(&mut self, n: usize) {
+        self.cold.deferred_collisions += n;
+    }
+
+    /// Accumulate CPU-LoRA wall time spent during decode iterations.
+    pub fn assist_decode(&mut self, seconds: f64) {
+        self.cold.assist_decode_s += seconds;
+    }
+
+    /// The engine's cold-start counters.
+    pub fn cold_start(&self) -> &ColdStartStats {
+        &self.cold
     }
 
     /// A token was emitted for a request.
@@ -102,6 +189,7 @@ impl MetricsRecorder {
                 latency,
                 output_len: f.tokens,
                 slo: f.slo,
+                breakdown: f.breakdown,
             });
         }
     }
@@ -140,7 +228,8 @@ impl MetricsRecorder {
         Some(met as f64 / judged.len() as f64)
     }
 
-    /// Summary of one metric column ("ttft" | "tpt" | "tpot" | "latency").
+    /// Summary of one metric column ("ttft" | "tpt" | "tpot" | "latency"
+    /// | "ttft_load" | "ttft_prefill" | "ttft_assist").
     pub fn summary(&self, metric: &str) -> Option<Summary> {
         Summary::of(&self.column(metric))
     }
@@ -158,6 +247,9 @@ impl MetricsRecorder {
                 "tpt" => r.time_per_token,
                 "tpot" => r.tpot,
                 "latency" => r.latency,
+                "ttft_load" => r.breakdown.map_or(0.0, |b| b.load),
+                "ttft_prefill" => r.breakdown.map_or(0.0, |b| b.prefill),
+                "ttft_assist" => r.breakdown.map_or(0.0, |b| b.assist),
                 other => panic!("unknown metric {other}"),
             })
             .collect()
@@ -283,6 +375,50 @@ mod tests {
         m.token(99);
         m.finished(99);
         assert!(m.records().is_empty());
+    }
+
+    #[test]
+    fn breakdown_rides_along_to_the_record() {
+        let mut m = MetricsRecorder::new();
+        m.arrived(1, None);
+        m.prefill_breakdown(
+            1,
+            TtftBreakdown {
+                load: 0.05,
+                prefill: 0.01,
+                assist: 0.002,
+                cold: true,
+            },
+        );
+        m.token(1);
+        m.finished(1);
+        let b = m.records()[0].breakdown.unwrap();
+        assert!(b.cold);
+        assert_eq!(b.load, 0.05);
+        let s = m.summary("ttft_load").unwrap();
+        assert!((s.mean - 0.05).abs() < 1e-12);
+        assert!(m.summary("ttft_prefill").is_some());
+        assert!(m.summary("ttft_assist").is_some());
+        // Unknown ids ignored.
+        m.prefill_breakdown(99, TtftBreakdown::default());
+    }
+
+    #[test]
+    fn cold_start_counters_accumulate() {
+        let mut m = MetricsRecorder::new();
+        m.cold_admit(true);
+        m.cold_admit(false);
+        m.warm_admit();
+        m.handoffs(2);
+        m.deferred_collisions(1);
+        m.assist_decode(0.25);
+        let c = m.cold_start();
+        assert_eq!(c.cold_admits, 2);
+        assert_eq!(c.cpu_assisted, 1);
+        assert_eq!(c.warm_admits, 1);
+        assert_eq!(c.handoffs, 2);
+        assert_eq!(c.deferred_collisions, 1);
+        assert!((c.assist_decode_s - 0.25).abs() < 1e-12);
     }
 
     #[test]

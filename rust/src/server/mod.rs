@@ -11,12 +11,15 @@
 //! - [`batcher`] — iteration-level continuous-batching policy (Fig 2):
 //!   arrivals preempt decode; completed requests leave every iteration;
 //!   priority classes order admission.
-//! - [`engine`] — [`InferenceServer`]: drives the runtime, streams
-//!   per-token [`RequestEvent`]s, honors cancellation and stop tokens
-//!   mid-flight, and applies the serving mode's cold-start behaviour
-//!   (Cached / OnDemand / CaraServe overlap).
+//! - [`engine`] — [`InferenceServer`]: drives a [`crate::runtime::Runtime`]
+//!   backend (PJRT or native), streams per-token [`RequestEvent`]s,
+//!   honors cancellation and stop tokens mid-flight, and applies the
+//!   serving mode's cold-start behaviour — including the real §4
+//!   CPU-assisted path (shm worker pool + async load windows + §4.3
+//!   decode handoff) when a pool is attached.
 //! - [`metrics`] — per-request TTFT / TPOT / latency recording, SLO
-//!   attainment, and summaries.
+//!   attainment, the cold-start TTFT decomposition, and per-mode
+//!   cold-start counters.
 
 pub mod api;
 pub mod batcher;
@@ -31,4 +34,4 @@ pub use api::{
 pub use batcher::{Batcher, NextAction};
 pub use engine::{ColdStartMode, EngineConfig, InferenceServer};
 pub use kvcache::KvCacheManager;
-pub use metrics::{MetricsRecorder, RequestRecord};
+pub use metrics::{ColdStartStats, MetricsRecorder, RequestRecord, TtftBreakdown};

@@ -98,6 +98,34 @@ impl SimFront {
         &self.inst
     }
 
+    /// Cold-start counters in the engine's
+    /// [`crate::server::metrics::ColdStartStats`] shape, so drivers read
+    /// the same surface from simulator and engine (contract
+    /// compatibility). A request counts cold when its serving exposed
+    /// any cold-start time; under `ServingMode::CaraServe` cold admits
+    /// are CPU-assisted by construction (the simulator's
+    /// `overlapped_prefill` models exactly that path). Handoffs and
+    /// collision deferrals are engine-side mechanics the event simulator
+    /// doesn't model; they stay zero here.
+    pub fn cold_start_stats(&self) -> crate::server::metrics::ColdStartStats {
+        let assisted = self.inst.mode == crate::sim::ServingMode::CaraServe;
+        let mut stats = crate::server::metrics::ColdStartStats::default();
+        for r in self.inst.done.iter().chain(self.inst.running.iter()) {
+            if r.first_token.is_none() {
+                continue; // not admitted yet
+            }
+            if r.cold_start > 0.0 {
+                stats.cold_admits += 1;
+                if assisted {
+                    stats.cpu_assisted += 1;
+                }
+            } else {
+                stats.warm_admits += 1;
+            }
+        }
+        stats
+    }
+
     fn validate(&self, req: &ServeRequest) -> Result<usize, String> {
         crate::server::api::validate_shape(req, self.max_prompt, self.kv_capacity)?;
         self.registry
@@ -409,6 +437,36 @@ mod tests {
         let s = f.stats();
         assert_eq!(s.running_ranks.len(), 2);
         assert!(s.queued_ranks.is_empty());
+    }
+
+    #[test]
+    fn cold_start_stats_mirror_engine_semantics() {
+        // CaraServe mode: a fresh adapter's first request is a cold,
+        // CPU-assisted admit; a repeat on the (now resident) adapter is
+        // warm.
+        let mut f = front();
+        let h1 = f.submit(request(1, 32, 2));
+        f.run_until_idle().unwrap();
+        let h2 = f.submit(request(1, 32, 2));
+        f.run_until_idle().unwrap();
+        assert_eq!(h1.state(), LifecycleState::Finished);
+        assert_eq!(h2.state(), LifecycleState::Finished);
+        let s = f.cold_start_stats();
+        assert_eq!(s.cold_admits, 1);
+        assert_eq!(s.cpu_assisted, 1);
+        assert_eq!(s.warm_admits, 1);
+
+        // Cached oracle: never cold, never assisted.
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let inst = SimInstance::new(0, model, ServingMode::Cached, 32, 8, 64);
+        let mut oracle = SimFront::new(inst, 512);
+        oracle.install_adapter(1, 64);
+        oracle.submit(request(1, 32, 2));
+        oracle.run_until_idle().unwrap();
+        let s = oracle.cold_start_stats();
+        assert_eq!(s.cold_admits, 0);
+        assert_eq!(s.cpu_assisted, 0);
+        assert_eq!(s.warm_admits, 1);
     }
 
     #[test]
