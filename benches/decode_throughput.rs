@@ -1,0 +1,245 @@
+//! Steady-state decode throughput: paged-vs-dense KV × 1-vs-N threads.
+//!
+//! The tentpole measurement for the zero-copy paged decode path. For
+//! each (batch, context) point the same token-generation loop runs
+//! under three regimes:
+//!
+//! - `dense/1t`  — the pre-paged contract: every step re-materializes
+//!   the whole KV history densely (`assemble_into`) and decodes it
+//!   serially. This is the baseline the speedup is quoted against.
+//! - `paged/1t`  — zero-copy block-table reads, still serial: isolates
+//!   the assembly cost.
+//! - `paged/Nt`  — zero-copy plus the forward pool fanning batch rows
+//!   across cores: the shipped configuration.
+//!
+//! All three regimes produce bitwise-identical logits (asserted on the
+//! first step of every point — the equivalence the integration suite
+//! pins in depth). Emits `BENCH_decode.json` in the working directory
+//! (plus the standard `target/bench-reports/decode_throughput.json`)
+//! so successive PRs can track the decode trajectory; CI runs the
+//! `--smoke` mode (tiny contexts, few steps) to keep the file fresh.
+
+use std::time::Instant;
+
+use caraserve::bench::{f, Report};
+use caraserve::kernels::AdapterWeights;
+use caraserve::runtime::{DenseKv, KvWrite, NativeConfig, NativeRuntime, RowLora};
+use caraserve::server::KvCacheManager;
+use caraserve::util::json::{self, Json};
+use caraserve::util::rng::Rng;
+
+const PAGE_SIZE: usize = 16;
+
+fn bench_config(threads: usize, cache_m: usize) -> NativeConfig {
+    NativeConfig {
+        hidden: 256,
+        layers: 4,
+        heads: 8,
+        vocab: 1024,
+        intermediate: 688,
+        max_seq: cache_m + 64,
+        lora_slots: 8,
+        max_prompt: 64,
+        max_prefill_batch: 4,
+        max_decode_batch: 8,
+        cache_m,
+        seed: 0xCA7A_5E27,
+        threads,
+    }
+}
+
+fn make_runtime(threads: usize, cache_m: usize) -> NativeRuntime {
+    let mut rt = NativeRuntime::new(bench_config(threads, cache_m));
+    // A resident rank-8 adapter so decode exercises the rank-grouped
+    // LoRA kernel, as in real serving.
+    let mk = |t: u64| AdapterWeights::synthetic(31 + t, 256, 256, 8);
+    rt.install_slot(0, Some(std::sync::Arc::new([mk(0), mk(1), mk(2), mk(3)])));
+    rt
+}
+
+/// Fabricate `ctx` tokens of deterministic history KV for `batch`
+/// requests straight into a fresh paged pool (prompt content is
+/// irrelevant to throughput; values are kept small so softmax stays
+/// tame).
+fn seeded_kv(batch: usize, ctx: usize, steps: usize, layers: usize, hidden: usize) -> KvCacheManager {
+    let pages_per_req = (ctx + steps).div_ceil(PAGE_SIZE) + 1;
+    let mut kv = KvCacheManager::new(
+        layers,
+        hidden,
+        PAGE_SIZE,
+        batch * pages_per_req,
+        ctx + steps + 8,
+    );
+    let mut rng = Rng::new(0xBEEF);
+    let mut krow = vec![0.0f32; hidden];
+    let mut vrow = vec![0.0f32; hidden];
+    for b in 0..batch {
+        kv.reserve(b as u64, ctx).unwrap();
+    }
+    let ids: Vec<u64> = (0..batch as u64).collect();
+    let mut writers = kv.writers(&ids).unwrap();
+    for w in writers.iter_mut() {
+        for layer in 0..layers {
+            for t in 0..ctx {
+                for d in 0..hidden {
+                    krow[d] = (rng.f32() - 0.5) * 0.2;
+                    vrow[d] = (rng.f32() - 0.5) * 0.2;
+                }
+                w.write_kv(layer, t, &krow, &vrow);
+            }
+        }
+    }
+    drop(writers);
+    kv
+}
+
+struct RunOut {
+    tokens_per_s: f64,
+    us_per_step: f64,
+    first_logits: Vec<f32>,
+}
+
+/// Decode `steps` tokens for the whole batch, feeding argmax tokens
+/// back, and time the loop. `dense` selects the pre-paged assembly
+/// contract.
+fn run(rt: &NativeRuntime, batch: usize, ctx: usize, steps: usize, dense: bool) -> RunOut {
+    let cfg = &rt.cfg;
+    let (layers, hidden, m) = (cfg.layers, cfg.hidden, cfg.cache_m);
+    let mut kv = seeded_kv(batch, ctx, steps, layers, hidden);
+    let ids: Vec<u64> = (0..batch as u64).collect();
+    let idx: Vec<i32> = vec![0; batch];
+    let rows = vec![RowLora::Slot(0); batch];
+    let mut last: Vec<i32> = (0..batch as i32).map(|b| (b * 97 + 13) % 1024).collect();
+    let mut pos: Vec<i32> = vec![ctx as i32; batch];
+    let (mut ks, mut vs) = (Vec::new(), Vec::new());
+    let mut first_logits = Vec::new();
+
+    let t0 = Instant::now();
+    for step in 0..steps {
+        let out = if dense {
+            kv.assemble_into(&ids, batch, m, &mut ks, &mut vs).unwrap();
+            let view = DenseKv::new(&ks, &vs, layers, batch, m, hidden);
+            rt.decode(&idx, &last, &pos, &view, &rows).unwrap()
+        } else {
+            // The view drops with this block, before the appends below.
+            let view = kv.paged_view(&ids).unwrap();
+            rt.decode(&idx, &last, &pos, &view, &rows).unwrap()
+        };
+        for (b, id) in ids.iter().enumerate() {
+            kv.append_token(*id, &out.k_new, &out.v_new, batch, b).unwrap();
+            last[b] = rt.argmax_row(&out.logits, b);
+            pos[b] += 1;
+        }
+        if step == 0 {
+            first_logits = out.logits;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    RunOut {
+        tokens_per_s: (batch * steps) as f64 / dt,
+        us_per_step: dt / steps as f64 * 1e6,
+        first_logits,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("CARA_BENCH_FAST").is_ok();
+    let (batches, ctxs, steps): (Vec<usize>, Vec<usize>, usize) = if smoke {
+        (vec![4], vec![64], 4)
+    } else {
+        (vec![1, 4, 8], vec![128, 512], 32)
+    };
+    let max_ctx = *ctxs.iter().max().unwrap();
+    let cache_m = max_ctx + steps + 16;
+    let threads = caraserve::runtime::native::default_threads().max(2);
+
+    let serial = make_runtime(1, cache_m);
+    let parallel = make_runtime(threads, cache_m);
+
+    let mut report = Report::new(
+        "Steady-state decode: paged-vs-dense KV × 1-vs-N threads (native runtime)",
+        &["batch", "ctx", "mode", "tokens/s", "µs/step", "× vs dense/1t"],
+    );
+    let mut runs_json: Vec<Json> = Vec::new();
+    let mut headline: Option<f64> = None;
+
+    for &batch in &batches {
+        for &ctx in &ctxs {
+            let dense1 = run(&serial, batch, ctx, steps, true);
+            let paged1 = run(&serial, batch, ctx, steps, false);
+            let pagedn = run(&parallel, batch, ctx, steps, false);
+            // The three regimes must agree bitwise — the whole point of
+            // the refactor is that layout and threading are invisible.
+            assert_eq!(
+                dense1.first_logits, paged1.first_logits,
+                "paged decode diverged from dense at batch {batch} ctx {ctx}"
+            );
+            assert_eq!(
+                dense1.first_logits, pagedn.first_logits,
+                "parallel decode diverged from serial at batch {batch} ctx {ctx}"
+            );
+            let mode_n = format!("paged/{threads}t");
+            for (mode, threads_used, out) in [
+                ("dense/1t", 1usize, &dense1),
+                ("paged/1t", 1, &paged1),
+                (mode_n.as_str(), threads, &pagedn),
+            ] {
+                let speedup = out.tokens_per_s / dense1.tokens_per_s;
+                report.row(vec![
+                    batch.to_string(),
+                    ctx.to_string(),
+                    mode.to_string(),
+                    f(out.tokens_per_s, 1),
+                    f(out.us_per_step, 1),
+                    f(speedup, 2),
+                ]);
+                runs_json.push(json::obj(vec![
+                    ("batch", json::num(batch as f64)),
+                    ("ctx", json::num(ctx as f64)),
+                    ("mode", json::s(mode)),
+                    ("threads", json::num(threads_used as f64)),
+                    ("steps", json::num(steps as f64)),
+                    ("tokens_per_s", json::num(out.tokens_per_s)),
+                    ("us_per_step", json::num(out.us_per_step)),
+                    ("speedup_vs_dense_serial", json::num(speedup)),
+                ]));
+            }
+            if batch == 8 && ctx == max_ctx {
+                headline = Some(pagedn.tokens_per_s / dense1.tokens_per_s);
+            }
+        }
+    }
+    report.note(
+        "dense/1t is the pre-paged contract (assemble_into per step, serial rows); \
+         acceptance: paged/Nt ≥ 2× dense/1t at batch 8, ctx ≥ 512",
+    );
+    if let Some(hx) = headline {
+        report.note(format!("headline speedup (batch 8, ctx {max_ctx}): {hx:.2}×"));
+    }
+    report.print();
+    report.save("decode_throughput").ok();
+
+    let top = json::obj(vec![
+        ("bench", json::s("decode_throughput")),
+        ("smoke", json::s(if smoke { "true" } else { "false" })),
+        (
+            "model",
+            json::obj(vec![
+                ("hidden", json::num(256.0)),
+                ("layers", json::num(4.0)),
+                ("vocab", json::num(1024.0)),
+            ]),
+        ),
+        ("page_size", json::num(PAGE_SIZE as f64)),
+        ("threads", json::num(threads as f64)),
+        (
+            "headline_speedup_paged_parallel_vs_dense_serial",
+            headline.map_or(Json::Null, json::num),
+        ),
+        ("runs", Json::Arr(runs_json)),
+    ]);
+    std::fs::write("BENCH_decode.json", top.to_string_pretty())
+        .expect("write BENCH_decode.json");
+    println!("\nwrote BENCH_decode.json");
+}

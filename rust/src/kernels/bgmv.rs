@@ -122,6 +122,63 @@ pub fn mbgmv(
     mbgmv_ref(&refs, indices, h1, h2, x, y);
 }
 
+/// Rank-grouped SGMV (S-LoRA §5 / CaraServe §4.3 decode path): tokens
+/// that share an adapter — same weights, same rank — are batched through
+/// **one** [`lora_apply`] call per consecutive run, instead of one
+/// gather + kernel launch per token. A decode batch routed to a handful
+/// of adapters collapses from `n` rank-r matvecs into a few rank-r
+/// GEMMs over contiguous token blocks; a prefill (all tokens one
+/// adapter) becomes a single call.
+///
+/// Bitwise-identical to [`mbgmv_ref`]: `lora_apply` computes each token
+/// row independently (`gemm` iterates rows), so grouping changes the
+/// call count, never the per-row arithmetic — the property that lets
+/// the resident decode path adopt this kernel without perturbing token
+/// streams (pinned by `sgmv_grouped_is_bitwise_mbgmv`).
+///
+/// `scratch` is resized to the largest group's `n_tok·rank` floats and
+/// reused across groups — no per-token allocation.
+pub fn sgmv_grouped(
+    adapters: &[&AdapterWeights],
+    indices: &[usize],
+    h1: usize,
+    h2: usize,
+    x: &[f32],
+    y: &mut [f32],
+    scratch: &mut Vec<f32>,
+) {
+    let n = indices.len();
+    assert_eq!(x.len(), n * h1);
+    assert_eq!(y.len(), n * h2);
+    let mut start = 0usize;
+    while start < n {
+        let idx = indices[start];
+        let mut end = start + 1;
+        while end < n && indices[end] == idx {
+            end += 1;
+        }
+        let ad = adapters[idx];
+        assert_eq!(ad.h1, h1);
+        assert_eq!(ad.h2, h2);
+        let group = end - start;
+        if scratch.len() < group * ad.rank {
+            scratch.resize(group * ad.rank, 0.0);
+        }
+        lora_apply(
+            group,
+            h1,
+            h2,
+            ad.rank,
+            &x[start * h1..end * h1],
+            &ad.a,
+            &ad.b,
+            &mut y[start * h2..end * h2],
+            scratch,
+        );
+        start = end;
+    }
+}
+
 /// [`mbgmv`] over *borrowed* adapter stacks — the device-resident path of
 /// the serving engine gathers each slot's stack without cloning weights
 /// (the stacks live behind `Arc`s shared with the CPU-LoRA workers, which
@@ -219,6 +276,50 @@ mod tests {
         mbgmv(&[a0, a1], &[0, 1], h, h, &x, &mut y);
         assert!(y[..h].iter().all(|&v| (v - 8.0).abs() < 1e-5));
         assert!(y[h..].iter().all(|&v| (v + 8.0).abs() < 1e-5));
+    }
+
+    #[test]
+    fn sgmv_grouped_is_bitwise_mbgmv() {
+        // Grouping same-adapter runs must not change a single bit: the
+        // resident decode path swaps mbgmv_ref for sgmv_grouped on the
+        // strength of this equivalence.
+        let h = 32;
+        let adapters: Vec<AdapterWeights> = [2usize, 4, 8, 4]
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| AdapterWeights::synthetic(i as u64, h, h, r))
+            .collect();
+        let refs: Vec<&AdapterWeights> = adapters.iter().collect();
+        // Mixed runs: single tokens, long same-adapter stretches, and a
+        // same-rank-different-adapter boundary (2 vs 3).
+        let indices = [0usize, 1, 1, 1, 2, 2, 3, 1, 0, 0, 0, 0];
+        let mut rng = Rng::new(11);
+        let x = rand_vec(&mut rng, indices.len() * h);
+        let mut y_ref = vec![0.25f32; indices.len() * h];
+        let mut y_grp = y_ref.clone();
+        mbgmv_ref(&refs, &indices, h, h, &x, &mut y_ref);
+        let mut scratch = Vec::new();
+        sgmv_grouped(&refs, &indices, h, h, &x, &mut y_grp, &mut scratch);
+        assert_eq!(y_ref, y_grp, "grouped kernel diverged bitwise");
+    }
+
+    #[test]
+    fn sgmv_grouped_single_adapter_is_one_group() {
+        // All-one-adapter (the prefill shape): one lora_apply over the
+        // whole block still matches the per-token reference.
+        let h = 16;
+        let ad = AdapterWeights::synthetic(5, h, h, 4);
+        let n = 9;
+        let indices = vec![0usize; n];
+        let mut rng = Rng::new(3);
+        let x = rand_vec(&mut rng, n * h);
+        let mut y_ref = vec![0.0f32; n * h];
+        let mut y_grp = vec![0.0f32; n * h];
+        mbgmv_ref(&[&ad], &indices, h, h, &x, &mut y_ref);
+        let mut scratch = Vec::new();
+        sgmv_grouped(&[&ad], &indices, h, h, &x, &mut y_grp, &mut scratch);
+        assert_eq!(y_ref, y_grp);
+        assert!(scratch.len() >= n * 4, "scratch sized for the full group");
     }
 
     #[test]

@@ -8,5 +8,5 @@
 pub mod bgmv;
 pub mod gemm;
 
-pub use bgmv::{bgmv_padded, mbgmv, mbgmv_ref, AdapterWeights};
+pub use bgmv::{bgmv_padded, mbgmv, mbgmv_ref, sgmv_grouped, AdapterWeights};
 pub use gemm::{gemm, gemv, lora_apply};

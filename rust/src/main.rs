@@ -28,7 +28,7 @@ caraserve <subcommand> [options]
 subcommands:
   serve     --runtime auto|native|pjrt --artifacts DIR --requests N
             --mode cached|ondemand|caraserve --cpu-workers N
-            --load-scale F --slo-ttft-ms F --slo-tpot-ms F
+            --threads N --load-scale F --slo-ttft-ms F --slo-tpot-ms F
   simulate  --mode cached|ondmd|s-lora|caraserve --rps F --rank N --secs F
   schedule  --policy rank-aware|most-idle|first-fit|random --instances N
             --kernel bgmv|mbgmv --rps F --secs F
@@ -50,6 +50,7 @@ fn run() -> anyhow::Result<()> {
         "mode",
         "runtime",
         "cpu-workers",
+        "threads",
         "load-scale",
         "rps",
         "rank",
@@ -96,6 +97,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let load_scale: f64 = args
         .opt_parse_or("load-scale", 1.0)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
+    // Forward-pass worker threads for the native backend (batch rows
+    // fan across these; output is bitwise independent of the width).
+    let threads: usize = args
+        .opt_parse_or("threads", caraserve::runtime::native::default_threads())
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let native_cfg = || NativeConfig {
+        threads,
+        ..NativeConfig::tiny()
+    };
     let slo_ttft: f64 = args
         .opt_parse_or("slo-ttft-ms", 200.0)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -112,14 +122,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             println!("loading artifacts from {dir} ...");
             caraserve::runtime::ModelRuntime::load(std::path::Path::new(&dir))?.into()
         }
-        "native" => NativeRuntime::new(NativeConfig::tiny()).into(),
+        "native" => NativeRuntime::new(native_cfg()).into(),
         "auto" if manifest.exists() => {
             println!("loading artifacts from {dir} ...");
             caraserve::runtime::ModelRuntime::load(std::path::Path::new(&dir))?.into()
         }
         "auto" => {
             println!("no artifacts at {dir}; using the native runtime");
-            NativeRuntime::new(NativeConfig::tiny()).into()
+            NativeRuntime::new(native_cfg()).into()
         }
         other => anyhow::bail!("unknown --runtime {other} (use auto|native|pjrt)"),
     };

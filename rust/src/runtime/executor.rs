@@ -16,11 +16,17 @@ use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 use super::manifest::Manifest;
 
 /// Prefill call result.
+///
+/// The executor fills `k_cache`/`v_cache` densely (its artifacts only
+/// produce dense tensors); the [`super::Runtime`] facade scatters them
+/// into the caller's paged [`super::KvWrite`] handles and returns them
+/// empty — the native backend never materializes them at all.
 #[derive(Debug, Clone)]
 pub struct PrefillOut {
     /// [batch, vocab] last-token logits (row-major, bucket batch rows).
     pub logits: Vec<f32>,
-    /// [layers, batch, seq, hidden] KV rows for the prompt positions.
+    /// [layers, batch, seq, hidden] KV rows for the prompt positions
+    /// (dense backends only; empty on the facade's writer path).
     pub k_cache: Vec<f32>,
     pub v_cache: Vec<f32>,
     /// Bucket used: (batch, seq).

@@ -13,6 +13,28 @@
 //!   [`RowLora`] sourcing (resident `bgmv` path vs. externally computed
 //!   CPU-assist deltas). This is the backend on which the paper's §4
 //!   CPU-assisted cold-start mechanism actually executes.
+//! - [`pool`] — the scoped-thread [`ThreadPool`] the native backend
+//!   fans batch rows across.
+//!
+//! ## The paged KV contract
+//!
+//! The engine's KV cache is paged ([`crate::server::KvCacheManager`]);
+//! runtimes reach it through two one-method traits instead of dense
+//! `[layers, batch, M, hidden]` tensors:
+//!
+//! - [`KvView`] — read access to a request's cached K/V rows in place
+//!   (decode attention iterates pages directly; no per-step assembly).
+//! - [`KvWrite`] — write access for freshly computed rows (prefill
+//!   streams each position straight into its page; no dense
+//!   double-buffer).
+//!
+//! The native backend is zero-copy on both sides. The PJRT executor
+//! only speaks dense tensors, so the facade keeps a dense fallback
+//! behind the same traits: prefill scatters the executor's dense
+//! output into the caller's writers, and decode accepts a
+//! caller-assembled dense cache ([`Runtime::decode_dense`], fed by
+//! `KvCacheManager::assemble_into`). [`DenseKv`] / [`DenseKvBuffer`]
+//! adapt dense storage to the traits for that fallback and for tests.
 //!
 //! Python never runs here; for the PJRT path the artifacts directory is
 //! the only contract between the layers.
@@ -20,15 +42,165 @@
 pub mod executor;
 pub mod manifest;
 pub mod native;
+pub mod pool;
 
 pub use executor::{DecodeOut, ModelRuntime, PrefillOut};
 pub use manifest::{ArtifactMeta, Manifest};
 pub use native::{ExternalLora, NativeConfig, NativeRuntime, RowLora};
+pub use pool::ThreadPool;
 
 use anyhow::Result;
 use std::sync::Arc;
 
 use crate::kernels::AdapterWeights;
+
+/// Read access to cached K/V rows, however they are laid out. The
+/// decode hot path calls this once per (row, layer, position, K|V) —
+/// implementations must return a borrowed `hidden`-sized slice with no
+/// copying. `Sync` because batch rows are read concurrently by the
+/// native backend's thread pool.
+pub trait KvView: Sync {
+    /// The cached K (`want_v == false`) or V row for request `row` at
+    /// token position `pos` in `layer`.
+    fn kv_row(&self, row: usize, layer: usize, pos: usize, want_v: bool) -> &[f32];
+}
+
+/// Write access for one request's freshly computed K/V rows. Prefill
+/// calls this once per (layer, position); decode appends go through
+/// [`crate::server::KvCacheManager::append_token`] instead (the
+/// per-step rows are tiny). `Send` because each row's writer moves to
+/// whichever pool thread computes that row.
+pub trait KvWrite: Send {
+    /// Store the `hidden`-sized K and V rows for token `pos` of `layer`.
+    fn write_kv(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]);
+}
+
+/// [`KvView`] over dense row-major `[layers, batch, M, hidden]` slices —
+/// the PJRT fallback layout and the dense reference in the
+/// paged-vs-dense equivalence tests.
+pub struct DenseKv<'a> {
+    k: &'a [f32],
+    v: &'a [f32],
+    batch: usize,
+    m: usize,
+    hidden: usize,
+}
+
+impl<'a> DenseKv<'a> {
+    /// Wrap dense caches of shape `[layers, batch, m, hidden]`.
+    pub fn new(
+        k: &'a [f32],
+        v: &'a [f32],
+        layers: usize,
+        batch: usize,
+        m: usize,
+        hidden: usize,
+    ) -> DenseKv<'a> {
+        assert_eq!(k.len(), layers * batch * m * hidden, "K shape");
+        assert_eq!(v.len(), layers * batch * m * hidden, "V shape");
+        DenseKv {
+            k,
+            v,
+            batch,
+            m,
+            hidden,
+        }
+    }
+}
+
+impl KvView for DenseKv<'_> {
+    fn kv_row(&self, row: usize, layer: usize, pos: usize, want_v: bool) -> &[f32] {
+        let at = ((layer * self.batch + row) * self.m + pos) * self.hidden;
+        let src = if want_v { self.v } else { self.k };
+        &src[at..at + self.hidden]
+    }
+}
+
+/// An owned dense K/V buffer exposing per-row [`KvWrite`] handles and a
+/// whole-buffer [`KvView`] — the bridge for code that still wants a
+/// dense cache (tests, the PJRT assembly fallback).
+///
+/// Internal layout is `[batch, layers, seq, hidden]` (row-major), i.e.
+/// per-*request* contiguous, so the batch can be written by concurrent
+/// row writers via disjoint `&mut` chunks. [`DenseKvBuffer::to_lbsh`]
+/// transposes to the executor's `[layers, batch, seq, hidden]` order.
+pub struct DenseKvBuffer {
+    layers: usize,
+    batch: usize,
+    seq: usize,
+    hidden: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl DenseKvBuffer {
+    /// A zeroed buffer for `batch` requests of up to `seq` tokens.
+    pub fn new(layers: usize, batch: usize, seq: usize, hidden: usize) -> DenseKvBuffer {
+        let n = layers * batch * seq * hidden;
+        DenseKvBuffer {
+            layers,
+            batch,
+            seq,
+            hidden,
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+        }
+    }
+
+    /// One [`KvWrite`] handle per batch row (disjoint `&mut` chunks).
+    pub fn row_writers(&mut self) -> Vec<DenseRowWriter<'_>> {
+        let (seq, hidden) = (self.seq, self.hidden);
+        let per_row = self.layers * seq * hidden;
+        self.k
+            .chunks_mut(per_row)
+            .zip(self.v.chunks_mut(per_row))
+            .map(|(k, v)| DenseRowWriter { seq, hidden, k, v })
+            .collect()
+    }
+
+    /// Copy out as `[layers, batch, seq, hidden]` dense (K, V) tensors —
+    /// the PJRT executor's order.
+    pub fn to_lbsh(&self) -> (Vec<f32>, Vec<f32>) {
+        let (l, b, s, h) = (self.layers, self.batch, self.seq, self.hidden);
+        let mut k = vec![0.0f32; l * b * s * h];
+        let mut v = vec![0.0f32; l * b * s * h];
+        for layer in 0..l {
+            for row in 0..b {
+                for t in 0..s {
+                    let dst = ((layer * b + row) * s + t) * h;
+                    let src = ((row * l + layer) * s + t) * h;
+                    k[dst..dst + h].copy_from_slice(&self.k[src..src + h]);
+                    v[dst..dst + h].copy_from_slice(&self.v[src..src + h]);
+                }
+            }
+        }
+        (k, v)
+    }
+}
+
+impl KvView for DenseKvBuffer {
+    fn kv_row(&self, row: usize, layer: usize, pos: usize, want_v: bool) -> &[f32] {
+        let at = ((row * self.layers + layer) * self.seq + pos) * self.hidden;
+        let src = if want_v { &self.v } else { &self.k };
+        &src[at..at + self.hidden]
+    }
+}
+
+/// Per-row writer into a [`DenseKvBuffer`].
+pub struct DenseRowWriter<'a> {
+    seq: usize,
+    hidden: usize,
+    k: &'a mut [f32],
+    v: &'a mut [f32],
+}
+
+impl KvWrite for DenseRowWriter<'_> {
+    fn write_kv(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        let at = (layer * self.seq + pos) * self.hidden;
+        self.k[at..at + self.hidden].copy_from_slice(k_row);
+        self.v[at..at + self.hidden].copy_from_slice(v_row);
+    }
+}
 
 /// A serving backend: either the PJRT executor or the native model.
 /// [`crate::server::InferenceServer`] drives this facade so the whole
@@ -135,6 +307,14 @@ impl Runtime {
         matches!(self, Runtime::Native(_))
     }
 
+    /// Does this backend need a caller-assembled dense decode cache?
+    /// True only for PJRT (its compiled artifacts take dense `[layers,
+    /// batch, M, hidden]` inputs); the native backend reads the paged
+    /// pool in place through [`KvView`].
+    pub fn needs_dense_kv(&self) -> bool {
+        matches!(self, Runtime::Pjrt(_))
+    }
+
     /// Make `weights` resident in `slot` — the completion of a modeled
     /// host→device transfer. No-op on the PJRT backend (baked stacks).
     pub fn install_slot(&mut self, slot: usize, weights: Option<Arc<[AdapterWeights; 4]>>) {
@@ -146,23 +326,109 @@ impl Runtime {
 
     /// Prefill a batch. `idx[b]` is each request's device slot; `rows[b]`
     /// its LoRA sourcing (the native backend consumes `rows`, PJRT
-    /// consumes `idx`).
+    /// consumes `idx`). Each row's K/V rows stream into `writers[b]` —
+    /// zero-copy into the paged pool on the native backend; the PJRT arm
+    /// scatters its dense bucket output through the same writers (one
+    /// copy). The returned [`PrefillOut`] carries logits only; its
+    /// `k_cache`/`v_cache` are empty.
     pub fn prefill(
         &self,
         idx: &[i32],
         tokens: &[Vec<i32>],
         lens: &[i32],
         rows: &[RowLora<'_>],
+        writers: &mut [&mut dyn KvWrite],
     ) -> Result<PrefillOut> {
         match self {
-            Runtime::Pjrt(rt) => rt.prefill(idx, tokens, lens),
-            Runtime::Native(rt) => rt.prefill(idx, tokens, lens, rows),
+            Runtime::Pjrt(rt) => {
+                let out = rt.prefill(idx, tokens, lens)?;
+                let (bb, bs) = out.bucket;
+                let h = rt.hidden;
+                anyhow::ensure!(
+                    writers.len() == tokens.len(),
+                    "writer count {} != batch {}",
+                    writers.len(),
+                    tokens.len()
+                );
+                for (b, w) in writers.iter_mut().enumerate() {
+                    let len = (lens[b].max(1) as usize).min(tokens[b].len());
+                    for layer in 0..rt.layers {
+                        for t in 0..len {
+                            let src = ((layer * bb + b) * bs + t) * h;
+                            w.write_kv(
+                                layer,
+                                t,
+                                &out.k_cache[src..src + h],
+                                &out.v_cache[src..src + h],
+                            );
+                        }
+                    }
+                }
+                Ok(PrefillOut {
+                    logits: out.logits,
+                    k_cache: Vec::new(),
+                    v_cache: Vec::new(),
+                    bucket: out.bucket,
+                })
+            }
+            Runtime::Native(rt) => rt.prefill(idx, tokens, lens, rows, writers),
         }
     }
 
-    /// One decode step over assembled KV (`[layers, bucket_batch, M,
-    /// hidden]`).
-    pub fn decode(
+    /// One decode step over the paged cache — the zero-copy hot path.
+    /// The native backend reads history rows in place through `kv`; the
+    /// PJRT arm materializes a dense cache from the view first (prefer
+    /// [`Runtime::decode_dense`] with a reused scratch buffer there —
+    /// see [`Runtime::needs_dense_kv`]).
+    pub fn decode_paged(
+        &self,
+        idx: &[i32],
+        tokens: &[i32],
+        pos: &[i32],
+        kv: &dyn KvView,
+        rows: &[RowLora<'_>],
+    ) -> Result<DecodeOut> {
+        match self {
+            Runtime::Pjrt(rt) => {
+                let (bb, m) = rt
+                    .manifest
+                    .pick_decode_bucket(tokens.len())
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("no decode bucket for b={}", tokens.len())
+                    })?;
+                let h = rt.hidden;
+                let n = rt.layers * bb * m * h;
+                let mut k = vec![0.0f32; n];
+                let mut v = vec![0.0f32; n];
+                for (b, &p) in pos.iter().enumerate() {
+                    // Same typed error the native arm returns — not a
+                    // slice panic mid-copy.
+                    anyhow::ensure!(
+                        p.max(0) as usize <= m,
+                        "row {b}: pos {p} exceeds cache capacity {m}"
+                    );
+                    for layer in 0..rt.layers {
+                        for t in 0..(p.max(0) as usize) {
+                            let dst = ((layer * bb + b) * m + t) * h;
+                            k[dst..dst + h]
+                                .copy_from_slice(kv.kv_row(b, layer, t, false));
+                            v[dst..dst + h]
+                                .copy_from_slice(kv.kv_row(b, layer, t, true));
+                        }
+                    }
+                }
+                rt.decode(idx, tokens, pos, &k, &v)
+            }
+            Runtime::Native(rt) => rt.decode(idx, tokens, pos, kv, rows),
+        }
+    }
+
+    /// One decode step over caller-assembled dense caches (`[layers,
+    /// bucket_batch, M, hidden]`) — the PJRT input layout, kept for
+    /// backends without paged access and for dense-reference tests. The
+    /// native arm wraps the slices in a [`DenseKv`] view and runs the
+    /// same code path as [`Runtime::decode_paged`].
+    pub fn decode_dense(
         &self,
         idx: &[i32],
         tokens: &[i32],
@@ -173,7 +439,18 @@ impl Runtime {
     ) -> Result<DecodeOut> {
         match self {
             Runtime::Pjrt(rt) => rt.decode(idx, tokens, pos, k_cache, v_cache),
-            Runtime::Native(rt) => rt.decode(idx, tokens, pos, k_cache, v_cache, rows),
+            Runtime::Native(rt) => {
+                let (bb, m) = (tokens.len(), rt.cfg.cache_m);
+                let expect = rt.cfg.layers * bb * m * rt.cfg.hidden;
+                anyhow::ensure!(
+                    k_cache.len() == expect && v_cache.len() == expect,
+                    "KV cache len {} != {expect}",
+                    k_cache.len()
+                );
+                let view =
+                    DenseKv::new(k_cache, v_cache, rt.cfg.layers, bb, m, rt.cfg.hidden);
+                rt.decode(idx, tokens, pos, &view, rows)
+            }
         }
     }
 

@@ -12,10 +12,10 @@
 //!   [`DecodeOut`], bucketed shapes, last-token logits), so
 //!   [`crate::server::InferenceServer`] drives either interchangeably;
 //! - per-request [`RowLora`] modes: `Base` (no adaptation), `Slot`
-//!   (device-resident stack, applied through the batched-gather
-//!   [`crate::kernels::bgmv`] kernel — the GPU decode path), or
-//!   `Assist` (delta supplied by an [`ExternalLora`] — the shared-memory
-//!   CPU worker pool during a cold start);
+//!   (device-resident stack, applied through the rank-grouped
+//!   [`crate::kernels::bgmv::sgmv_grouped`] kernel — the GPU decode
+//!   path), or `Assist` (delta supplied by an [`ExternalLora`] — the
+//!   shared-memory CPU worker pool during a cold start);
 //! - [`NativeRuntime::install_slot`]: the moment a modeled host→device
 //!   transfer completes, the adapter's weight stack becomes resident and
 //!   subsequent iterations may switch from `Assist` to `Slot` (§4.3
@@ -29,13 +29,49 @@
 //! seeded weights: content is not the point, faithful serving dataflow
 //! is. Rows are computed independently, so batch composition never
 //! changes a request's values (continuous batching invariant).
+//!
+//! # §Perf — paged KV layout and the threading contract
+//!
+//! **Paged KV.** Decode never sees a dense `[layers, batch, M, hidden]`
+//! cache: [`NativeRuntime::decode`] takes a [`KvView`] and attention
+//! iterates each request's cached rows *in place* — for the engine's
+//! paged pool that means block-table lookups into fixed-size token
+//! pages, zero per-step assembly (the pre-paged path re-materialized
+//! the entire KV history of every running request every token).
+//! Prefill is symmetric: [`NativeRuntime::prefill`] streams each
+//! freshly computed K/V row into a per-request [`KvWrite`] handle, so
+//! prompt KV lands in its pages exactly once instead of dense-then-
+//! recopy. The S-LoRA-style unified paging (arXiv 2311.03285) this
+//! reproduces is what keeps per-token cost flat in context length.
+//!
+//! **Threading.** Batch rows are independent, so prefill and decode fan
+//! rows across a shared scoped [`ThreadPool`] (`NativeConfig::threads`
+//! workers); a lone large prefill additionally fans its attention
+//! *positions* across the pool. Two invariants make this safe and
+//! bitwise-deterministic:
+//!
+//! 1. every worker writes only its own row's outputs (disjoint `&mut`
+//!    chunks behind per-row `Mutex`es) and reads only shared immutable
+//!    state, and
+//! 2. parallelism never changes the arithmetic — each row/position runs
+//!    the identical serial code — so an N-thread run equals the
+//!    1-thread run bit for bit (pinned by
+//!    `parallel_forward_is_bitwise_deterministic`).
+//!
+//! `Assist` rows are the one exception to fan-out: [`ExternalLora`]
+//! providers front a single-submitter shm worker pool, so those rows
+//! all execute on the calling thread — overlapped with the pooled
+//! rows via [`ThreadPool::run_overlapping`], not serialized before
+//! them (order among rows is irrelevant — they share no state).
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use super::executor::{DecodeOut, PrefillOut};
-use crate::kernels::bgmv::mbgmv_ref;
+use super::pool::ThreadPool;
+use super::{KvView, KvWrite};
+use crate::kernels::bgmv::sgmv_grouped;
 use crate::kernels::gemm::gemm;
 use crate::kernels::AdapterWeights;
 use crate::model::TargetMatrix;
@@ -44,7 +80,12 @@ use crate::util::rng::Rng;
 /// Provider of externally computed LoRA deltas (the CPU-assisted path).
 /// Implemented by [`crate::cpu_lora::CpuLoraEngine`] over the
 /// shared-memory worker pool.
-pub trait ExternalLora {
+///
+/// `Sync` so a `RowLora::Assist` row may sit in a batch that is fanned
+/// across threads; the runtime still *calls* `delta` from one thread at
+/// a time (the shm pool is single-submitter), it just needs to share
+/// the reference.
+pub trait ExternalLora: Sync {
     /// The `n_tok × hidden` delta `xAB` for `adapter` at `target`, given
     /// the (normalized) layer input `x` (`n_tok × hidden`, row-major).
     fn delta(&self, adapter: u64, target: TargetMatrix, n_tok: usize, x: &[f32])
@@ -89,6 +130,9 @@ pub struct NativeConfig {
     pub cache_m: usize,
     /// Weight seed (same seed ⇒ same model).
     pub seed: u64,
+    /// Forward-pass worker threads (batch rows fan across these; 0/1 =
+    /// serial). N-thread output is bitwise identical to 1-thread (§Perf).
+    pub threads: usize,
 }
 
 impl NativeConfig {
@@ -107,10 +151,12 @@ impl NativeConfig {
             max_decode_batch: 8,
             cache_m: 128,
             seed: 0xCA7A_5E27,
+            threads: default_threads(),
         }
     }
 
-    /// A minimal config for fast tests.
+    /// A minimal config for fast tests (serial: determinism tests opt
+    /// into threads explicitly).
     pub fn test_tiny() -> NativeConfig {
         NativeConfig {
             hidden: 32,
@@ -125,8 +171,24 @@ impl NativeConfig {
             max_decode_batch: 8,
             cache_m: 48,
             seed: 0xCA7A_5E27,
+            threads: 1,
         }
     }
+
+    /// This config with `threads` forward workers.
+    pub fn with_threads(mut self, threads: usize) -> NativeConfig {
+        self.threads = threads;
+        self
+    }
+}
+
+/// Default forward-pass width: the machine's parallelism, capped so the
+/// runtime leaves cores for the CPU-LoRA workers and the caller.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
 }
 
 struct LayerWeights {
@@ -147,10 +209,38 @@ pub struct NativeRuntime {
     lm_head: Vec<f32>,
     /// Device-resident LoRA stacks, one per slot ([`Self::install_slot`]).
     slot_stacks: Vec<Option<Arc<[AdapterWeights; 4]>>>,
+    /// Scoped row fan-out shared by prefill and decode (§Perf).
+    pool: ThreadPool,
 }
 
 fn synth(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect()
+}
+
+/// Per-row decode outputs handed to whichever pool thread runs the row.
+struct DecodeRowTask<'t> {
+    /// This row's `vocab`-sized logits chunk (zeroed).
+    logits: &'t mut [f32],
+    /// The new token's K rows, `[layers, hidden]` row-major.
+    k: &'t mut [f32],
+    /// The new token's V rows, `[layers, hidden]` row-major.
+    v: &'t mut [f32],
+}
+
+/// Per-row prefill outputs: logits chunk + the KV page writer.
+struct PrefillRowTask<'t> {
+    logits: &'t mut [f32],
+    writer: &'t mut (dyn KvWrite + 't),
+}
+
+/// Reusable buffers for the rank-grouped LoRA kernel, one set per row
+/// forward — `delta`/`indices` are cleared and refilled per projection,
+/// `t` grows to the largest group's `n_tok·rank` and stays.
+#[derive(Default)]
+struct LoraScratch {
+    indices: Vec<usize>,
+    delta: Vec<f32>,
+    t: Vec<f32>,
 }
 
 impl NativeRuntime {
@@ -175,6 +265,7 @@ impl NativeRuntime {
             .collect();
         let lm_head = synth(&mut rng, h * cfg.vocab, s);
         let slot_stacks = vec![None; cfg.lora_slots];
+        let pool = ThreadPool::new(cfg.threads);
         NativeRuntime {
             cfg,
             embed,
@@ -182,6 +273,7 @@ impl NativeRuntime {
             layer_w,
             lm_head,
             slot_stacks,
+            pool,
         }
     }
 
@@ -207,6 +299,9 @@ impl NativeRuntime {
 
     /// Add the LoRA delta for `target` onto `proj` (`n × hidden`), with
     /// `x` the normalized layer input the projection was computed from.
+    /// `ls` is the row's reusable kernel scratch — one set of buffers
+    /// serves every (layer, target) of the row's forward, so the
+    /// resident decode path allocates nothing per projection (§Perf).
     fn apply_lora(
         &self,
         lora: &RowLora<'_>,
@@ -214,6 +309,7 @@ impl NativeRuntime {
         n: usize,
         x: &[f32],
         proj: &mut [f32],
+        ls: &mut LoraScratch,
     ) {
         let h = self.cfg.hidden;
         match lora {
@@ -221,17 +317,20 @@ impl NativeRuntime {
             RowLora::Slot(slot) => {
                 if let Some(stack) = self.slot_stacks.get(*slot).and_then(|s| s.as_ref())
                 {
-                    // The resident path goes through the batched-gather
-                    // kernel (the CPU twin of the GPU BGMV decode path).
-                    // The delta is materialized into zeros and then added,
-                    // mirroring the CPU workers' accumulation order so
-                    // the two paths agree bitwise (§4.3 handoff must not
-                    // perturb the token stream).
+                    // The resident path goes through the rank-grouped
+                    // kernel: all n rows share this adapter, so the
+                    // whole block is ONE lora_apply instead of n
+                    // per-token gathers. The delta is materialized into
+                    // zeros and then added, mirroring the CPU workers'
+                    // accumulation order so the two paths agree bitwise
+                    // (§4.3 handoff must not perturb the token stream).
                     let ad = &stack[Self::target_index(target)];
-                    let indices = vec![0usize; n];
-                    let mut delta = vec![0.0f32; n * h];
-                    mbgmv_ref(&[ad], &indices, h, h, x, &mut delta);
-                    for (p, d) in proj.iter_mut().zip(&delta) {
+                    ls.indices.clear();
+                    ls.indices.resize(n, 0);
+                    ls.delta.clear();
+                    ls.delta.resize(n * h, 0.0);
+                    sgmv_grouped(&[ad], &ls.indices, h, h, x, &mut ls.delta, &mut ls.t);
+                    for (p, d) in proj.iter_mut().zip(&ls.delta) {
                         *p += d;
                     }
                 }
@@ -257,12 +356,75 @@ impl NativeRuntime {
         }
     }
 
+    /// Attention output for one query position `i` of one row: softmax
+    /// over `history_len` cached rows plus in-flight rows `0..=i`, value-
+    /// weighted into `out` (`hidden`-sized, zeroed). Factored out so the
+    /// serial and position-parallel paths run literally the same code.
+    #[allow(clippy::too_many_arguments)]
+    fn attend_position(
+        &self,
+        i: usize,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        hist_k: &[&[f32]],
+        hist_v: &[&[f32]],
+        scores: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        let h = self.cfg.hidden;
+        let hd = h / self.cfg.heads;
+        let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
+        let history_len = hist_k.len();
+        for head in 0..self.cfg.heads {
+            let off = head * hd;
+            let qi = &q[i * h + off..i * h + off + hd];
+            scores.clear();
+            // Cached history rows.
+            for kj in hist_k {
+                let s: f32 = qi.iter().zip(&kj[off..off + hd]).map(|(a, b)| a * b).sum();
+                scores.push(s * inv_sqrt_hd);
+            }
+            // In-flight rows (causal).
+            for j in 0..=i {
+                let kj = &k[j * h + off..j * h + off + hd];
+                let s: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum();
+                scores.push(s * inv_sqrt_hd);
+            }
+            // Stable softmax.
+            let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - max).exp();
+                denom += *s;
+            }
+            let inv = 1.0 / denom;
+            // Weighted value sum.
+            let out_h = &mut out[off..off + hd];
+            for (j, &p) in scores.iter().enumerate() {
+                let w = p * inv;
+                let vj: &[f32] = if j < history_len {
+                    &hist_v[j][off..off + hd]
+                } else {
+                    let jj = j - history_len;
+                    &v[jj * h + off..jj * h + off + hd]
+                };
+                for (ov, vv) in out_h.iter_mut().zip(vj) {
+                    *ov += w * vv;
+                }
+            }
+        }
+    }
+
     /// One request's forward pass over `tokens`, writing per-layer K/V
     /// rows through `store(layer, position, k_row, v_row)`. For decode,
     /// `history(layer, position, want_v)` yields previously cached K/V
     /// rows as borrowed slices (no per-token copies on the decode hot
-    /// path); the base position of `tokens[0]` is `start_pos`. Returns
-    /// the final hidden states (`n × hidden`).
+    /// path); the base position of `tokens[0]` is `start_pos`. When
+    /// `inner` carries a pool, attention positions of a large prompt fan
+    /// across it (only the row's owning thread passes one — see §Perf).
+    /// Returns the final hidden states (`n × hidden`).
+    #[allow(clippy::too_many_arguments)]
     fn forward<'h>(
         &self,
         tokens: &[i32],
@@ -270,11 +432,10 @@ impl NativeRuntime {
         lora: &RowLora<'_>,
         history: &dyn Fn(usize, usize, bool) -> &'h [f32],
         history_len: usize,
+        inner: Option<&ThreadPool>,
         mut store: impl FnMut(usize, usize, &[f32], &[f32]),
     ) -> Vec<f32> {
         let h = self.cfg.hidden;
-        let hd = h / self.cfg.heads;
-        let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
         let n = tokens.len();
 
         // Token + position embeddings.
@@ -290,6 +451,7 @@ impl NativeRuntime {
         }
 
         let mut hbuf: Vec<f32> = Vec::new();
+        let mut ls = LoraScratch::default();
         for (l, lw) in self.layer_w.iter().enumerate() {
             Self::rmsnorm(&x, h, &mut hbuf);
 
@@ -300,9 +462,9 @@ impl NativeRuntime {
             gemm(n, h, h, &hbuf, &lw.wq, &mut q);
             gemm(n, h, h, &hbuf, &lw.wk, &mut k);
             gemm(n, h, h, &hbuf, &lw.wv, &mut v);
-            self.apply_lora(lora, TargetMatrix::Q, n, &hbuf, &mut q);
-            self.apply_lora(lora, TargetMatrix::K, n, &hbuf, &mut k);
-            self.apply_lora(lora, TargetMatrix::V, n, &hbuf, &mut v);
+            self.apply_lora(lora, TargetMatrix::Q, n, &hbuf, &mut q, &mut ls);
+            self.apply_lora(lora, TargetMatrix::K, n, &hbuf, &mut k, &mut ls);
+            self.apply_lora(lora, TargetMatrix::V, n, &hbuf, &mut v, &mut ls);
 
             for t in 0..n {
                 store(l, start_pos + t, &k[t * h..(t + 1) * h], &v[t * h..(t + 1) * h]);
@@ -314,50 +476,29 @@ impl NativeRuntime {
             let hist_v: Vec<&[f32]> =
                 (0..history_len).map(|j| history(l, j, true)).collect();
 
-            // Causal multi-head attention: position `start_pos + i`
-            // attends to `history_len` cached rows plus the in-flight
-            // rows 0..=i.
+            // Causal multi-head attention. Positions are independent, so
+            // a lone large prefill fans them across the pool; the
+            // arithmetic per position is identical either way (§Perf).
             let mut attn = vec![0.0f32; n * h];
-            let mut scores: Vec<f32> = Vec::new();
-            for i in 0..n {
-                for head in 0..self.cfg.heads {
-                    let off = head * hd;
-                    let qi = &q[i * h + off..i * h + off + hd];
-                    scores.clear();
-                    // Cached history rows.
-                    for kj in &hist_k {
-                        let s: f32 =
-                            qi.iter().zip(&kj[off..off + hd]).map(|(a, b)| a * b).sum();
-                        scores.push(s * inv_sqrt_hd);
+            match inner.filter(|p| p.threads() > 1 && n >= 16) {
+                None => {
+                    let mut scores: Vec<f32> = Vec::new();
+                    for (i, out) in attn.chunks_mut(h).enumerate() {
+                        self.attend_position(
+                            i, &q, &k, &v, &hist_k, &hist_v, &mut scores, out,
+                        );
                     }
-                    // In-flight rows (causal).
-                    for j in 0..=i {
-                        let kj = &k[j * h + off..j * h + off + hd];
-                        let s: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum();
-                        scores.push(s * inv_sqrt_hd);
-                    }
-                    // Stable softmax.
-                    let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                    let mut denom = 0.0f32;
-                    for s in scores.iter_mut() {
-                        *s = (*s - max).exp();
-                        denom += *s;
-                    }
-                    let inv = 1.0 / denom;
-                    // Weighted value sum.
-                    let out = &mut attn[i * h + off..i * h + off + hd];
-                    for (j, &p) in scores.iter().enumerate() {
-                        let w = p * inv;
-                        let vj: &[f32] = if j < history_len {
-                            &hist_v[j][off..off + hd]
-                        } else {
-                            let jj = j - history_len;
-                            &v[jj * h + off..jj * h + off + hd]
-                        };
-                        for (ov, vv) in out.iter_mut().zip(vj) {
-                            *ov += w * vv;
-                        }
-                    }
+                }
+                Some(pool) => {
+                    let rows: Vec<Mutex<&mut [f32]>> =
+                        attn.chunks_mut(h).map(Mutex::new).collect();
+                    pool.run(n, &|i| {
+                        let mut out = rows[i].lock().unwrap();
+                        let mut scores: Vec<f32> = Vec::new();
+                        self.attend_position(
+                            i, &q, &k, &v, &hist_k, &hist_v, &mut scores, &mut out,
+                        );
+                    });
                 }
             }
 
@@ -387,27 +528,32 @@ impl NativeRuntime {
         x
     }
 
-    /// Final-norm + LM head over one hidden-state row.
-    fn logits_of(&self, x_row: &[f32]) -> Vec<f32> {
+    /// Final-norm + LM head over one hidden-state row, written into the
+    /// caller's (zeroed) `vocab`-sized slice — the decode hot path hands
+    /// each row its chunk of the step's logits buffer instead of
+    /// allocating a vocab-sized `Vec` per row per step (§Perf).
+    fn logits_into(&self, x_row: &[f32], out: &mut [f32]) {
         let h = self.cfg.hidden;
+        debug_assert_eq!(out.len(), self.cfg.vocab);
         let mut normed = Vec::new();
         Self::rmsnorm(x_row, h, &mut normed);
-        let mut logits = vec![0.0f32; self.cfg.vocab];
-        gemm(1, h, self.cfg.vocab, &normed, &self.lm_head, &mut logits);
-        logits
+        gemm(1, h, self.cfg.vocab, &normed, &self.lm_head, out);
     }
 
     /// Prefill a batch. `rows[b]` selects each request's LoRA source;
     /// `idx` is accepted for PJRT interface parity (slot routing travels
-    /// in `rows` here). Output shapes match the PJRT executor: logits
-    /// `[batch, vocab]`, K/V caches `[layers, batch, seq, hidden]` with
-    /// positions beyond each request's length zeroed.
+    /// in `rows` here). Each row's K/V rows stream into `writers[b]`
+    /// (`write_kv(layer, pos, k, v)` for every prompt position) — for
+    /// the engine that is a zero-copy page writer. The returned
+    /// [`PrefillOut`] carries `[batch, vocab]` last-token logits; its
+    /// dense `k_cache`/`v_cache` are empty.
     pub fn prefill(
         &self,
         idx: &[i32],
         tokens: &[Vec<i32>],
         lens: &[i32],
         rows: &[RowLora<'_>],
+        writers: &mut [&mut dyn KvWrite],
     ) -> Result<PrefillOut> {
         let batch = tokens.len();
         anyhow::ensure!(batch > 0, "empty prefill batch");
@@ -417,60 +563,105 @@ impl NativeRuntime {
             self.cfg.max_prefill_batch
         );
         anyhow::ensure!(idx.len() == batch && lens.len() == batch && rows.len() == batch);
+        anyhow::ensure!(
+            writers.len() == batch,
+            "writer count {} != batch {batch}",
+            writers.len()
+        );
         let max_len = tokens.iter().map(Vec::len).max().unwrap_or(1).max(1);
         anyhow::ensure!(
             max_len <= self.cfg.max_prompt,
             "prompt {max_len} exceeds bucket {}",
             self.cfg.max_prompt
         );
+        for (b, toks) in tokens.iter().enumerate() {
+            anyhow::ensure!(!toks.is_empty(), "empty prompt in row {b}");
+        }
         let (bb, bs) = (batch, max_len);
         let h = self.cfg.hidden;
-        let layers = self.cfg.layers;
 
         let mut logits = vec![0.0f32; bb * self.cfg.vocab];
-        let mut k_cache = vec![0.0f32; layers * bb * bs * h];
-        let mut v_cache = vec![0.0f32; layers * bb * bs * h];
-
-        for (b, toks) in tokens.iter().enumerate() {
-            let len = (lens[b].max(1) as usize).min(toks.len());
-            anyhow::ensure!(len > 0, "empty prompt in row {b}");
-            // Never invoked: prefill passes history_len = 0.
-            let no_history = |_: usize, _: usize, _: bool| -> &'static [f32] { &[] };
-            let (kc, vc) = (&mut k_cache, &mut v_cache);
-            let x = self.forward(
-                &toks[..len],
-                0,
-                &rows[b],
-                &no_history,
-                0,
-                |l, pos, krow, vrow| {
-                    let at = ((l * bb + b) * bs + pos) * h;
-                    kc[at..at + h].copy_from_slice(krow);
-                    vc[at..at + h].copy_from_slice(vrow);
-                },
-            );
-            let row_logits = self.logits_of(&x[(len - 1) * h..len * h]);
-            logits[b * self.cfg.vocab..(b + 1) * self.cfg.vocab]
-                .copy_from_slice(&row_logits);
+        {
+            let tasks: Vec<Mutex<PrefillRowTask<'_>>> = logits
+                .chunks_mut(self.cfg.vocab)
+                .zip(writers.iter_mut())
+                .map(|(lg, w)| {
+                    Mutex::new(PrefillRowTask {
+                        logits: lg,
+                        writer: &mut **w,
+                    })
+                })
+                .collect();
+            let run_row = |b: usize, inner: Option<&ThreadPool>| {
+                let mut guard = tasks[b].lock().unwrap();
+                let task = &mut *guard;
+                let writer = &mut *task.writer;
+                let len = (lens[b].max(1) as usize).min(tokens[b].len());
+                let no_history = |_: usize, _: usize, _: bool| -> &'static [f32] { &[] };
+                let x = self.forward(
+                    &tokens[b][..len],
+                    0,
+                    &rows[b],
+                    &no_history,
+                    0,
+                    inner,
+                    |l, pos, krow, vrow| writer.write_kv(l, pos, krow, vrow),
+                );
+                self.logits_into(&x[(len - 1) * h..len * h], task.logits);
+            };
+            // Assist rows stay on the calling thread (single-submitter
+            // shm pool) but overlap with the plain rows fanning across
+            // the pool. A lone row with the pool otherwise idle fans its
+            // attention positions instead.
+            let mut plain: Vec<usize> = Vec::with_capacity(batch);
+            let mut assist: Vec<usize> = Vec::new();
+            for b in 0..batch {
+                if matches!(rows[b], RowLora::Assist { .. }) {
+                    assist.push(b);
+                } else {
+                    plain.push(b);
+                }
+            }
+            if assist.is_empty() && plain.len() == 1 {
+                run_row(plain[0], Some(&self.pool));
+            } else {
+                let assist_inner = if plain.is_empty() {
+                    Some(&self.pool)
+                } else {
+                    None
+                };
+                self.pool.run_overlapping(
+                    plain.len(),
+                    &|i| run_row(plain[i], None),
+                    || {
+                        for &b in &assist {
+                            run_row(b, assist_inner);
+                        }
+                    },
+                );
+            }
         }
         Ok(PrefillOut {
             logits,
-            k_cache,
-            v_cache,
+            k_cache: Vec::new(),
+            v_cache: Vec::new(),
             bucket: (bb, bs),
         })
     }
 
-    /// One decode step. `k_cache`/`v_cache` are `[layers, batch, M,
-    /// hidden]` (caller-assembled, zero-padded); `pos[b]` is each
-    /// request's current context length.
+    /// One decode step over the paged cache: `kv` yields each request's
+    /// cached K/V rows in place (`pos[b]` rows per request — the
+    /// engine's block tables over the page pool), attention iterates
+    /// them with zero assembly, and batch rows fan across the shared
+    /// pool. Output contract is unchanged: `[batch, vocab]` logits plus
+    /// the new token's `[layers, batch, hidden]` K/V rows for the caller
+    /// to append.
     pub fn decode(
         &self,
         idx: &[i32],
         tokens: &[i32],
         pos: &[i32],
-        k_cache: &[f32],
-        v_cache: &[f32],
+        kv: &dyn KvView,
         rows: &[RowLora<'_>],
     ) -> Result<DecodeOut> {
         let batch = tokens.len();
@@ -484,41 +675,83 @@ impl NativeRuntime {
         let (bb, m) = (batch, self.cfg.cache_m);
         let h = self.cfg.hidden;
         let layers = self.cfg.layers;
-        let expect = layers * bb * m * h;
-        anyhow::ensure!(
-            k_cache.len() == expect && v_cache.len() == expect,
-            "KV cache len {} != {expect}",
-            k_cache.len()
-        );
+        for (b, &p) in pos.iter().enumerate() {
+            let ctx = p.max(0) as usize;
+            anyhow::ensure!(ctx <= m, "row {b}: pos {ctx} exceeds cache capacity {m}");
+        }
 
         let mut logits = vec![0.0f32; bb * self.cfg.vocab];
-        let mut k_new = vec![0.0f32; layers * bb * h];
-        let mut v_new = vec![0.0f32; layers * bb * h];
-
-        for b in 0..batch {
-            let ctx = pos[b].max(0) as usize;
-            anyhow::ensure!(ctx <= m, "pos {ctx} exceeds cache capacity {m}");
-            let history = move |l: usize, j: usize, want_v: bool| {
-                let at = ((l * bb + b) * m + j) * h;
-                let src: &[f32] = if want_v { v_cache } else { k_cache };
-                &src[at..at + h]
+        // Per-row contiguous [batch][layers][hidden] buffers so rows can
+        // be written in parallel; transposed to the [layers, batch,
+        // hidden] output contract after the join.
+        let mut k_rows = vec![0.0f32; bb * layers * h];
+        let mut v_rows = vec![0.0f32; bb * layers * h];
+        {
+            let tasks: Vec<Mutex<DecodeRowTask<'_>>> = logits
+                .chunks_mut(self.cfg.vocab)
+                .zip(k_rows.chunks_mut(layers * h))
+                .zip(v_rows.chunks_mut(layers * h))
+                .map(|((lg, kr), vr)| {
+                    Mutex::new(DecodeRowTask {
+                        logits: lg,
+                        k: kr,
+                        v: vr,
+                    })
+                })
+                .collect();
+            let run_row = |b: usize| {
+                let mut guard = tasks[b].lock().unwrap();
+                let task = &mut *guard;
+                let (kr, vr) = (&mut *task.k, &mut *task.v);
+                let ctx = pos[b].max(0) as usize;
+                let history =
+                    |l: usize, j: usize, want_v: bool| kv.kv_row(b, l, j, want_v);
+                let x = self.forward(
+                    &tokens[b..b + 1],
+                    ctx,
+                    &rows[b],
+                    &history,
+                    ctx,
+                    None,
+                    |l, _pos, krow, vrow| {
+                        kr[l * h..(l + 1) * h].copy_from_slice(krow);
+                        vr[l * h..(l + 1) * h].copy_from_slice(vrow);
+                    },
+                );
+                self.logits_into(&x[..h], task.logits);
             };
-            let (kn, vn) = (&mut k_new, &mut v_new);
-            let x = self.forward(
-                &tokens[b..b + 1],
-                ctx,
-                &rows[b],
-                &history,
-                ctx,
-                |l, _pos, krow, vrow| {
-                    let at = (l * bb + b) * h;
-                    kn[at..at + h].copy_from_slice(krow);
-                    vn[at..at + h].copy_from_slice(vrow);
+            // Assist rows on the calling thread, overlapped with the
+            // pooled resident/base rows (see prefill).
+            let mut plain: Vec<usize> = Vec::with_capacity(batch);
+            let mut assist: Vec<usize> = Vec::new();
+            for b in 0..batch {
+                if matches!(rows[b], RowLora::Assist { .. }) {
+                    assist.push(b);
+                } else {
+                    plain.push(b);
+                }
+            }
+            self.pool.run_overlapping(
+                plain.len(),
+                &|i| run_row(plain[i]),
+                || {
+                    for &b in &assist {
+                        run_row(b);
+                    }
                 },
             );
-            let row_logits = self.logits_of(&x[..h]);
-            logits[b * self.cfg.vocab..(b + 1) * self.cfg.vocab]
-                .copy_from_slice(&row_logits);
+        }
+
+        // Transpose to the executor's [layers, batch, hidden] order.
+        let mut k_new = vec![0.0f32; layers * bb * h];
+        let mut v_new = vec![0.0f32; layers * bb * h];
+        for b in 0..bb {
+            for l in 0..layers {
+                let src = (b * layers + l) * h;
+                let dst = (l * bb + b) * h;
+                k_new[dst..dst + h].copy_from_slice(&k_rows[src..src + h]);
+                v_new[dst..dst + h].copy_from_slice(&v_rows[src..src + h]);
+            }
         }
         Ok(DecodeOut {
             logits,
@@ -544,6 +777,7 @@ impl NativeRuntime {
 
 #[cfg(test)]
 mod tests {
+    use super::super::{DenseKv, DenseKvBuffer, Runtime};
     use super::*;
     use crate::kernels::gemm::lora_apply;
 
@@ -578,37 +812,61 @@ mod tests {
         NativeRuntime::new(NativeConfig::test_tiny())
     }
 
+    /// Prefill into a fresh dense buffer (the test-side stand-in for the
+    /// engine's page writers); returns (out, buffer).
+    fn dense_prefill(
+        rt: &NativeRuntime,
+        idx: &[i32],
+        toks: &[Vec<i32>],
+        lens: &[i32],
+        rows: &[RowLora<'_>],
+    ) -> (PrefillOut, DenseKvBuffer) {
+        let bs = toks.iter().map(Vec::len).max().unwrap_or(1).max(1);
+        let mut buf = DenseKvBuffer::new(rt.cfg.layers, toks.len(), bs, rt.cfg.hidden);
+        let out = {
+            let mut row_writers = buf.row_writers();
+            let mut writers: Vec<&mut dyn KvWrite> = row_writers
+                .iter_mut()
+                .map(|w| w as &mut dyn KvWrite)
+                .collect();
+            rt.prefill(idx, toks, lens, rows, &mut writers).unwrap()
+        };
+        (out, buf)
+    }
+
     #[test]
     fn deterministic_given_seed() {
         let a = runtime();
         let b = runtime();
         let toks = vec![vec![1, 5, 9, 2]];
-        let o1 = a.prefill(&[0], &toks, &[4], &[RowLora::Base]).unwrap();
-        let o2 = b.prefill(&[0], &toks, &[4], &[RowLora::Base]).unwrap();
+        let (o1, kv1) = dense_prefill(&a, &[0], &toks, &[4], &[RowLora::Base]);
+        let (o2, kv2) = dense_prefill(&b, &[0], &toks, &[4], &[RowLora::Base]);
         assert_eq!(o1.logits, o2.logits);
-        assert_eq!(o1.k_cache, o2.k_cache);
+        assert_eq!(kv1.to_lbsh().0, kv2.to_lbsh().0);
     }
 
     #[test]
     fn shapes_match_pjrt_contract() {
         let rt = runtime();
-        let cfg = &rt.cfg;
+        let cfg = rt.cfg.clone();
         let toks = vec![vec![1, 2, 3], vec![4, 5, 6, 7, 8]];
         let rows = [RowLora::Base, RowLora::Base];
-        let out = rt.prefill(&[0, 1], &toks, &[3, 5], &rows).unwrap();
+        let (out, kv) = dense_prefill(&rt, &[0, 1], &toks, &[3, 5], &rows);
         assert_eq!(out.bucket, (2, 5));
         assert_eq!(out.logits.len(), 2 * cfg.vocab);
-        assert_eq!(out.k_cache.len(), cfg.layers * 2 * 5 * cfg.hidden);
-        // Padding beyond each row's length is zeroed.
+        // KV travels through the writers now; the dense fields are empty.
+        assert!(out.k_cache.is_empty() && out.v_cache.is_empty());
+        let (k_dense, _) = kv.to_lbsh();
+        assert_eq!(k_dense.len(), cfg.layers * 2 * 5 * cfg.hidden);
+        // Positions beyond each row's length were never written.
         let h = cfg.hidden;
         let at = 4 * h; // layer 0, row 0, pos 4 (row 0 has len 3)
-        assert!(out.k_cache[at..at + h].iter().all(|&v| v == 0.0));
+        assert!(k_dense[at..at + h].iter().all(|&v| v == 0.0));
 
         let m = cfg.cache_m;
-        let kv = vec![0.0f32; cfg.layers * 2 * m * h];
-        let dec = rt
-            .decode(&[0, 1], &[1, 2], &[3, 5], &kv, &kv, &rows)
-            .unwrap();
+        let zeros = vec![0.0f32; cfg.layers * 2 * m * h];
+        let view = DenseKv::new(&zeros, &zeros, cfg.layers, 2, m, h);
+        let dec = rt.decode(&[0, 1], &[1, 2], &[3, 5], &view, &rows).unwrap();
         assert_eq!(dec.bucket, (2, m));
         assert_eq!(dec.k_new.len(), cfg.layers * 2 * h);
     }
@@ -617,48 +875,44 @@ mod tests {
     fn rows_are_independent_of_batch_composition() {
         let rt = runtime();
         let probe = vec![3, 1, 4, 1, 5];
-        let solo = rt
-            .prefill(&[0], &[probe.clone()], &[5], &[RowLora::Base])
-            .unwrap();
-        let batched = rt
-            .prefill(
-                &[0, 0],
-                &[vec![9, 9, 9, 9, 9, 9, 9], probe.clone()],
-                &[7, 5],
-                &[RowLora::Base, RowLora::Base],
-            )
-            .unwrap();
+        let (solo, _) = dense_prefill(&rt, &[0], &[probe.clone()], &[5], &[RowLora::Base]);
+        let (batched, _) = dense_prefill(
+            &rt,
+            &[0, 0],
+            &[vec![9, 9, 9, 9, 9, 9, 9], probe.clone()],
+            &[7, 5],
+            &[RowLora::Base, RowLora::Base],
+        );
         let v = rt.cfg.vocab;
         assert_eq!(solo.logits[..v], batched.logits[v..2 * v]);
     }
 
     #[test]
     fn resident_slot_equals_external_delta() {
-        // The §4.3 handoff invariant: resident (bgmv) and CPU-assisted
-        // (external delta) paths produce the same outputs given the same
-        // adapter weights.
+        // The §4.3 handoff invariant: resident (rank-grouped sgmv) and
+        // CPU-assisted (external delta) paths produce the same outputs
+        // given the same adapter weights.
         let mut rt = runtime();
         let st = stack(7, rt.cfg.hidden, 4);
         rt.install_slot(2, Some(st.clone()));
         let direct = Direct(st);
         let toks = vec![vec![10, 20, 30, 40]];
 
-        let resident = rt.prefill(&[2], &toks, &[4], &[RowLora::Slot(2)]).unwrap();
-        let assisted = rt
-            .prefill(
-                &[2],
-                &toks,
-                &[4],
-                &[RowLora::Assist {
-                    lora: &direct,
-                    adapter: 99,
-                }],
-            )
-            .unwrap();
+        let (resident, kv_r) = dense_prefill(&rt, &[2], &toks, &[4], &[RowLora::Slot(2)]);
+        let (assisted, kv_a) = dense_prefill(
+            &rt,
+            &[2],
+            &toks,
+            &[4],
+            &[RowLora::Assist {
+                lora: &direct,
+                adapter: 99,
+            }],
+        );
         for (a, b) in resident.logits.iter().zip(&assisted.logits) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
-        for (a, b) in resident.k_cache.iter().zip(&assisted.k_cache) {
+        for (a, b) in kv_r.to_lbsh().0.iter().zip(&kv_a.to_lbsh().0) {
             assert!((a - b).abs() < 1e-4);
         }
     }
@@ -668,39 +922,27 @@ mod tests {
         let mut rt = runtime();
         rt.install_slot(1, Some(stack(3, rt.cfg.hidden, 4)));
         let toks = vec![vec![2, 4, 6]];
-        let base = rt.prefill(&[1], &toks, &[3], &[RowLora::Base]).unwrap();
-        let adapted = rt.prefill(&[1], &toks, &[3], &[RowLora::Slot(1)]).unwrap();
+        let (base, _) = dense_prefill(&rt, &[1], &toks, &[3], &[RowLora::Base]);
+        let (adapted, _) = dense_prefill(&rt, &[1], &toks, &[3], &[RowLora::Slot(1)]);
         assert_ne!(base.logits, adapted.logits);
         // Empty slot behaves as base.
-        let empty = rt.prefill(&[3], &toks, &[3], &[RowLora::Slot(3)]).unwrap();
+        let (empty, _) = dense_prefill(&rt, &[3], &toks, &[3], &[RowLora::Slot(3)]);
         assert_eq!(base.logits, empty.logits);
     }
 
     #[test]
     fn decode_continues_from_prefill_cache() {
         let rt = runtime();
-        let cfg = &rt.cfg;
-        let (h, m) = (cfg.hidden, cfg.cache_m);
+        let cfg = rt.cfg.clone();
         let prompt = vec![1, 2, 3, 4];
-        let out = rt
-            .prefill(&[0], &[prompt.clone()], &[4], &[RowLora::Base])
-            .unwrap();
+        let (out, kv) =
+            dense_prefill(&rt, &[0], &[prompt.clone()], &[4], &[RowLora::Base]);
         let first = rt.argmax_row(&out.logits, 0);
 
-        // Assemble a decode cache from the prefill output.
-        let (bb, bs) = out.bucket;
-        let mut k = vec![0.0f32; cfg.layers * m * h];
-        let mut v = vec![0.0f32; cfg.layers * m * h];
-        for l in 0..cfg.layers {
-            for t in 0..4 {
-                let src = ((l * bb) * bs + t) * h;
-                let dst = (l * m + t) * h;
-                k[dst..dst + h].copy_from_slice(&out.k_cache[src..src + h]);
-                v[dst..dst + h].copy_from_slice(&out.v_cache[src..src + h]);
-            }
-        }
+        // Decode straight over the prefill buffer: DenseKvBuffer is a
+        // KvView, so no assembly step exists anymore.
         let dec = rt
-            .decode(&[0], &[first], &[4], &k, &v, &[RowLora::Base])
+            .decode(&[0], &[first], &[4], &kv, &[RowLora::Base])
             .unwrap();
         // Sanity: it produces a valid next token and fresh KV rows.
         let next = rt.argmax_row(&dec.logits, 0);
@@ -709,29 +951,112 @@ mod tests {
     }
 
     #[test]
+    fn parallel_forward_is_bitwise_deterministic() {
+        // N-thread prefill and decode must equal the 1-thread run bit
+        // for bit — the threading contract of §Perf.
+        let serial = NativeRuntime::new(NativeConfig::test_tiny());
+        let threaded = NativeRuntime::new(NativeConfig::test_tiny().with_threads(4));
+        assert_eq!(threaded.pool.threads(), 4);
+
+        let toks: Vec<Vec<i32>> = (0..4)
+            .map(|r| (0..(6 + r)).map(|i| (i * 13 + r * 7) % 64).collect())
+            .collect();
+        let lens: Vec<i32> = toks.iter().map(|t| t.len() as i32).collect();
+        let rows = vec![RowLora::Base; 4];
+        let idx = [0i32, 1, 2, 3];
+        let (o_s, kv_s) = dense_prefill(&serial, &idx, &toks, &lens, &rows);
+        let (o_t, kv_t) = dense_prefill(&threaded, &idx, &toks, &lens, &rows);
+        assert_eq!(o_s.logits, o_t.logits, "prefill logits diverged");
+        assert_eq!(kv_s.to_lbsh(), kv_t.to_lbsh(), "prefill KV diverged");
+
+        // A long single-row prefill exercises the position fan-out.
+        let long: Vec<i32> = (0..16).map(|i| i * 5 % 64).collect();
+        let (l_s, lkv_s) =
+            dense_prefill(&serial, &[0], &[long.clone()], &[16], &[RowLora::Base]);
+        let (l_t, lkv_t) = dense_prefill(&threaded, &[0], &[long], &[16], &[RowLora::Base]);
+        assert_eq!(l_s.logits, l_t.logits, "position fan-out diverged");
+        assert_eq!(lkv_s.to_lbsh(), lkv_t.to_lbsh());
+
+        // Decode over the batch: same view, both widths.
+        let pos: Vec<i32> = lens.clone();
+        let next: Vec<i32> = (0..4).map(|b| serial.argmax_row(&o_s.logits, b)).collect();
+        let d_s = serial
+            .decode(&idx, &next, &pos, &kv_s, &rows)
+            .unwrap();
+        let d_t = threaded
+            .decode(&idx, &next, &pos, &kv_t, &rows)
+            .unwrap();
+        assert_eq!(d_s.logits, d_t.logits, "decode logits diverged");
+        assert_eq!(d_s.k_new, d_t.k_new);
+        assert_eq!(d_s.v_new, d_t.v_new);
+    }
+
+    #[test]
+    fn dense_facade_rejects_wrong_kv_len() {
+        // The pre-paged contract returned a typed Err for mis-sized
+        // dense caches; the facade's dense arm must keep doing so (not
+        // panic in DenseKv::new).
+        let rt = Runtime::Native(runtime());
+        let err = rt.decode_dense(&[0], &[1], &[1], &[0.0; 8], &[0.0; 8], &[RowLora::Base]);
+        assert!(err.is_err(), "wrong KV length must be a recoverable error");
+    }
+
+    #[test]
     fn shape_violations_are_errors() {
         let rt = runtime();
         // Over-bucket prompt.
         let long = vec![vec![1; rt.cfg.max_prompt + 1]];
-        assert!(rt
-            .prefill(&[0], &long, &[rt.cfg.max_prompt as i32 + 1], &[RowLora::Base])
-            .is_err());
-        // Wrong KV length.
-        assert!(rt
-            .decode(&[0], &[1], &[1], &[0.0; 8], &[0.0; 8], &[RowLora::Base])
-            .is_err());
+        let mut buf = DenseKvBuffer::new(
+            rt.cfg.layers,
+            1,
+            rt.cfg.max_prompt + 1,
+            rt.cfg.hidden,
+        );
+        {
+            let mut row_writers = buf.row_writers();
+            let mut writers: Vec<&mut dyn KvWrite> = row_writers
+                .iter_mut()
+                .map(|w| w as &mut dyn KvWrite)
+                .collect();
+            assert!(rt
+                .prefill(
+                    &[0],
+                    &long,
+                    &[rt.cfg.max_prompt as i32 + 1],
+                    &[RowLora::Base],
+                    &mut writers
+                )
+                .is_err());
+            // Writer-count mismatch.
+            let toks = vec![vec![1, 2], vec![3, 4]];
+            assert!(rt
+                .prefill(
+                    &[0, 1],
+                    &toks,
+                    &[2, 2],
+                    &[RowLora::Base, RowLora::Base],
+                    &mut writers
+                )
+                .is_err());
+        }
         // Over decode batch.
         let nb = rt.cfg.max_decode_batch + 1;
-        let kv = vec![0.0f32; rt.cfg.layers * nb * rt.cfg.cache_m * rt.cfg.hidden];
+        let zeros = vec![0.0f32; rt.cfg.layers * nb * rt.cfg.cache_m * rt.cfg.hidden];
+        let view = DenseKv::new(&zeros, &zeros, rt.cfg.layers, nb, rt.cfg.cache_m, rt.cfg.hidden);
         let rows = vec![RowLora::Base; nb];
         assert!(rt
+            .decode(&vec![0; nb], &vec![1; nb], &vec![1; nb], &view, &rows)
+            .is_err());
+        // Context beyond capacity.
+        let m1 = vec![0.0f32; rt.cfg.layers * rt.cfg.cache_m * rt.cfg.hidden];
+        let v1 = DenseKv::new(&m1, &m1, rt.cfg.layers, 1, rt.cfg.cache_m, rt.cfg.hidden);
+        assert!(rt
             .decode(
-                &vec![0; nb],
-                &vec![1; nb],
-                &vec![1; nb],
-                &kv,
-                &kv,
-                &rows
+                &[0],
+                &[1],
+                &[rt.cfg.cache_m as i32 + 1],
+                &v1,
+                &[RowLora::Base]
             )
             .is_err());
     }

@@ -1,0 +1,182 @@
+//! [`ThreadPool`]: a scoped parallel-for over independent batch rows.
+//!
+//! The native runtime computes each batch row's forward pass
+//! independently (the continuous-batching invariant), so prefill and
+//! decode fan rows across cores with no synchronization beyond the
+//! join. Scoped threads keep the borrow story simple — workers borrow
+//! the runtime, the KV view, and per-row output slices directly, no
+//! `'static` bounds, no channels — and the join guarantees every row's
+//! writes are visible before the caller reads the outputs.
+//!
+//! Determinism contract: the pool only changes *where* a row is
+//! computed, never *what* it computes. Each row reads shared immutable
+//! state and writes its own disjoint outputs, so an N-thread run is
+//! bitwise identical to the 1-thread run (pinned by the
+//! `parallel_forward_is_bitwise_deterministic` test in
+//! [`super::native`]).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A fixed-width scoped parallel-for executor. Holds no threads between
+/// calls: each [`ThreadPool::run`] spawns up to `threads − 1` scoped
+/// workers (the calling thread participates) that pull row indices from
+/// a shared atomic counter, then joins them.
+#[derive(Debug, Clone)]
+pub struct ThreadPool {
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// A pool of `threads` workers; 0 is treated as 1 (serial).
+    pub fn new(threads: usize) -> ThreadPool {
+        ThreadPool {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Worker width.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Invoke `f(i)` for every `i` in `0..n`, fanning across up to
+    /// `threads` workers. `f` must only write state that is disjoint
+    /// per index (enforce with per-index `Mutex`es or disjoint `&mut`
+    /// chunks). Serial (`threads == 1` or `n <= 1`) runs inline with no
+    /// spawn at all.
+    pub fn run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if self.threads == 1 || n <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        let work = || loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            f(i);
+        };
+        std::thread::scope(|s| {
+            for _ in 1..self.threads.min(n) {
+                s.spawn(work);
+            }
+            work();
+        });
+    }
+
+    /// Run `f(0..n)` on spawned workers while the calling thread
+    /// executes `foreground` concurrently; returns once both are done
+    /// (the caller joins the fan-out after its foreground work). Used
+    /// to overlap single-submitter work (CPU-assist rows) with the
+    /// pooled rows instead of serializing the two. Total width stays
+    /// within `threads`: `threads − 1` spawned workers plus the caller
+    /// (on foreground, then draining rows). Serial pools run
+    /// `foreground` first, then `f` — outputs are disjoint per the
+    /// [`ThreadPool::run`] contract, so ordering is unobservable.
+    pub fn run_overlapping(
+        &self,
+        n: usize,
+        f: &(dyn Fn(usize) + Sync),
+        foreground: impl FnOnce(),
+    ) {
+        if self.threads == 1 || n == 0 {
+            foreground();
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        let work = || loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            f(i);
+        };
+        std::thread::scope(|s| {
+            for _ in 0..(self.threads - 1).min(n) {
+                s.spawn(work);
+            }
+            foreground();
+            // Help drain whatever the workers haven't claimed yet.
+            work();
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        for threads in [1, 2, 4, 9] {
+            let pool = ThreadPool::new(threads);
+            let hits: Vec<Mutex<u32>> = (0..23).map(|_| Mutex::new(0)).collect();
+            pool.run(hits.len(), &|i| *hits[i].lock().unwrap() += 1);
+            assert!(hits.iter().all(|h| *h.lock().unwrap() == 1));
+        }
+    }
+
+    #[test]
+    fn zero_threads_is_serial() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        let mut out = vec![0usize; 5];
+        let cells: Vec<Mutex<&mut usize>> = out.iter_mut().map(Mutex::new).collect();
+        pool.run(5, &|i| **cells[i].lock().unwrap() = i);
+        drop(cells);
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_range_is_noop() {
+        ThreadPool::new(4).run(0, &|_| panic!("must not be called"));
+    }
+
+    #[test]
+    fn overlapping_runs_foreground_and_pool() {
+        for threads in [1usize, 4] {
+            let pool = ThreadPool::new(threads);
+            let hits: Vec<Mutex<u32>> = (0..9).map(|_| Mutex::new(0)).collect();
+            let fg = Mutex::new(false);
+            pool.run_overlapping(
+                hits.len(),
+                &|i| *hits[i].lock().unwrap() += 1,
+                || *fg.lock().unwrap() = true,
+            );
+            assert!(*fg.lock().unwrap(), "foreground must run (threads={threads})");
+            assert!(hits.iter().all(|h| *h.lock().unwrap() == 1));
+        }
+        // Empty fan-out still runs the foreground.
+        let fg = Mutex::new(0u32);
+        ThreadPool::new(4).run_overlapping(0, &|_| panic!("no items"), || {
+            *fg.lock().unwrap() += 1
+        });
+        assert_eq!(*fg.lock().unwrap(), 1);
+    }
+
+    #[test]
+    fn disjoint_chunk_writes_survive_parallelism() {
+        let pool = ThreadPool::new(4);
+        let mut buf = vec![0.0f32; 16 * 8];
+        {
+            let tasks: Vec<Mutex<&mut [f32]>> =
+                buf.chunks_mut(8).map(Mutex::new).collect();
+            pool.run(tasks.len(), &|i| {
+                let mut chunk = tasks[i].lock().unwrap();
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (i * 8 + j) as f32;
+                }
+            });
+        }
+        for (at, v) in buf.iter().enumerate() {
+            assert_eq!(*v, at as f32);
+        }
+    }
+}

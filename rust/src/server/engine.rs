@@ -28,7 +28,6 @@
 //!   pool, the mode falls back to the modeled overlap: the iteration
 //!   spans `max(load, prefill)`.
 
-use std::cell::Cell;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -45,7 +44,7 @@ use super::metrics::{MetricsRecorder, TtftBreakdown};
 use crate::adapters::{AsyncLoader, DeviceSlotCache, HostRepository, LoaderModel};
 use crate::cpu_lora::{AdapterTable, CoreProfile, CpuLoraEngine};
 use crate::model::{LoraSpec, TargetMatrix};
-use crate::runtime::{ExternalLora, RowLora, Runtime};
+use crate::runtime::{ExternalLora, KvWrite, RowLora, Runtime};
 use crate::scheduler::ServerStats;
 use crate::util::rng::Rng;
 
@@ -90,10 +89,26 @@ impl Default for EngineConfig {
 
 /// Wraps the CPU-LoRA engine so the runtime's per-layer `delta` calls
 /// are wall-clock accounted (the `assist` component of the TTFT
-/// breakdown / the decode-assist counter).
+/// breakdown / the decode-assist counter). The accumulator is a
+/// `Mutex` (not a `Cell`) because `ExternalLora: Sync` — assist rows
+/// may sit in a batch shared with the runtime's forward threads, even
+/// though the runtime only *calls* `delta` from one thread at a time.
 struct TimedAssist<'a> {
     engine: &'a CpuLoraEngine,
-    spent: Cell<f64>,
+    spent: Mutex<f64>,
+}
+
+impl<'a> TimedAssist<'a> {
+    fn new(engine: &'a CpuLoraEngine) -> TimedAssist<'a> {
+        TimedAssist {
+            engine,
+            spent: Mutex::new(0.0),
+        }
+    }
+
+    fn spent(&self) -> f64 {
+        *self.spent.lock().unwrap()
+    }
 }
 
 impl ExternalLora for TimedAssist<'_> {
@@ -106,7 +121,7 @@ impl ExternalLora for TimedAssist<'_> {
     ) -> Vec<f32> {
         let t0 = Instant::now();
         let y = self.engine.delta(adapter, target, n_tok, x);
-        self.spent.set(self.spent.get() + t0.elapsed().as_secs_f64());
+        *self.spent.lock().unwrap() += t0.elapsed().as_secs_f64();
         y
     }
 }
@@ -151,7 +166,8 @@ pub struct InferenceServer {
     max_prompt: usize,
     /// Decode cache capacity M.
     cache_m: usize,
-    /// Reused KV assembly buffers (decode hot path; §Perf).
+    /// Reused KV assembly buffers — PJRT fallback only; the native
+    /// decode path reads the paged pool in place (§Perf).
     k_scratch: Vec<f32>,
     v_scratch: Vec<f32>,
 }
@@ -330,7 +346,20 @@ impl InferenceServer {
         self.reap_cancelled()?;
         self.finish_loads();
         let kv = &self.kv;
-        let action = self.batcher.next_action(|tokens| kv.can_admit(tokens));
+        // Cumulative admission accounting: each provisional admit
+        // debits its page need from a running free count, so a batch of
+        // requests that individually fit but jointly exhaust the pool
+        // is trimmed here — run_prefill's reservations then cannot fail
+        // under ordinary load (its rollback stays as a backstop).
+        let free = std::cell::Cell::new(kv.free_pages());
+        let action = self.batcher.next_action(|tokens| {
+            let need = kv.pages_for(tokens.max(1));
+            if need > free.get() {
+                return false;
+            }
+            free.set(free.get() - need);
+            true
+        });
         match action {
             NextAction::Idle => Ok(false),
             NextAction::Prefill { admit } => {
@@ -607,8 +636,23 @@ impl InferenceServer {
 
         // Build bucket inputs.
         let idx: Vec<i32> = slot_of.iter().map(|&s| s as i32).collect();
+        let ids: Vec<u64> = admits.iter().map(|q| q.req.id).collect();
         let tokens: Vec<Vec<i32>> = admits.iter().map(|q| q.req.prompt.clone()).collect();
         let lens: Vec<i32> = admits.iter().map(|q| q.req.prompt.len() as i32).collect();
+
+        // Reserve KV pages up front: prefill streams each row's K/V
+        // straight into its pages through a writer handle (zero-copy on
+        // the native backend; the PJRT arm scatters its dense output
+        // through the same writers). A mid-batch reservation failure
+        // rolls the whole batch back before any compute runs.
+        for (row, q) in admits.iter().enumerate() {
+            if let Err(e) = self.kv.reserve(q.req.id, q.req.prompt.len()) {
+                for done in &ids[..row] {
+                    let _ = self.kv.free_request(*done);
+                }
+                return Err(anyhow!("kv reserve for request {}: {e}", q.req.id));
+            }
+        }
 
         // Execute with the configured cold-start semantics.
         let load_window = Duration::from_secs_f64(modeled_load);
@@ -623,10 +667,9 @@ impl InferenceServer {
             .map(|plan| match plan {
                 RowPlan::Resident => None,
                 // Assist rows are only planned when the pool is attached.
-                RowPlan::Assist => Some(TimedAssist {
-                    engine: self.cpu.as_ref().expect("Assist planned without a pool"),
-                    spent: Cell::new(0.0),
-                }),
+                RowPlan::Assist => Some(TimedAssist::new(
+                    self.cpu.as_ref().expect("Assist planned without a pool"),
+                )),
             })
             .collect();
         let rows: Vec<RowLora<'_>> = plans
@@ -641,16 +684,44 @@ impl InferenceServer {
             })
             .collect();
         let t0 = Instant::now();
-        let out = self.runtime.prefill(&idx, &tokens, &lens, &rows)?;
+        let out = {
+            let mut writers = match self.kv.writers(&ids) {
+                Ok(w) => w,
+                Err(e) => {
+                    drop(rows);
+                    drop(assists);
+                    for id in &ids {
+                        let _ = self.kv.free_request(*id);
+                    }
+                    return Err(anyhow!("kv writers: {e}"));
+                }
+            };
+            let mut writer_refs: Vec<&mut dyn KvWrite> = writers
+                .iter_mut()
+                .map(|w| w as &mut dyn KvWrite)
+                .collect();
+            self.runtime
+                .prefill(&idx, &tokens, &lens, &rows, &mut writer_refs)
+        };
         let prefill_dt = t0.elapsed().as_secs_f64();
         drop(rows);
         // Materialize the timings so `assists` (which borrows the pool)
         // is dead before the bookkeeping loop below re-borrows self.
         let assist_times: Vec<f64> = assists
             .iter()
-            .map(|a| a.as_ref().map_or(0.0, |t| t.spent.get()))
+            .map(|a| a.as_ref().map_or(0.0, |t| t.spent()))
             .collect();
         drop(assists);
+        let out = match out {
+            Ok(o) => o,
+            Err(e) => {
+                // Roll the reservations back so the pool cannot leak.
+                for id in &ids {
+                    let _ = self.kv.free_request(*id);
+                }
+                return Err(e);
+            }
+        };
         let modeled_overlap =
             self.config.cold_start == ColdStartMode::CaraServe && !self.cpu_assist_active();
         if modeled_overlap {
@@ -661,21 +732,12 @@ impl InferenceServer {
             }
         }
 
-        // Apply results per admitted request: first token, KV admission,
-        // FirstToken event, stop-token check.
-        let (bb, bs) = out.bucket;
+        // Apply results per admitted request: first token (the KV rows
+        // already landed in their pages), FirstToken event, stop-token
+        // check.
         for (row, q) in admits.iter().enumerate() {
             let id = q.req.id;
             let first = self.pick_token(&out.logits, row, &q.req.sampling, id, 0);
-            self.kv.admit_from_prefill(
-                id,
-                &out.k_cache,
-                &out.v_cache,
-                bb,
-                bs,
-                row,
-                q.req.prompt.len(),
-            )?;
             let (load, cold) = windows[row];
             self.metrics.prefill_breakdown(
                 id,
@@ -725,17 +787,11 @@ impl InferenceServer {
             .collect();
         let tokens: Vec<i32> = self.batcher.running.iter().map(|r| r.last_token).collect();
         let pos: Vec<i32> = self.batcher.running.iter().map(|r| r.ctx as i32).collect();
-        let (mut k, mut v) =
-            (std::mem::take(&mut self.k_scratch), std::mem::take(&mut self.v_scratch));
-        self.kv.assemble_into(&ids, bb, m, &mut k, &mut v)?;
 
         // Requests whose adapter is still loading keep decoding through
         // the CPU-assisted path; the rest use the resident bgmv path.
         let real_assist = self.cpu_assist_active();
-        let assist: Option<TimedAssist<'_>> = self.cpu.as_ref().map(|engine| TimedAssist {
-            engine,
-            spent: Cell::new(0.0),
-        });
+        let assist: Option<TimedAssist<'_>> = self.cpu.as_ref().map(TimedAssist::new);
         let rows: Vec<RowLora<'_>> = self
             .batcher
             .running
@@ -752,14 +808,35 @@ impl InferenceServer {
                 }
             })
             .collect();
-        let out = self.runtime.decode(&idx, &tokens, &pos, &k, &v, &rows)?;
+        let out = if self.runtime.needs_dense_kv() {
+            // PJRT fallback: its compiled artifacts take dense [layers,
+            // batch, M, hidden] inputs, so assemble into the reused
+            // scratch buffers (the pre-paged contract).
+            let (mut k, mut v) = (
+                std::mem::take(&mut self.k_scratch),
+                std::mem::take(&mut self.v_scratch),
+            );
+            self.kv.assemble_into(&ids, bb, m, &mut k, &mut v)?;
+            let out = self.runtime.decode_dense(&idx, &tokens, &pos, &k, &v, &rows);
+            self.k_scratch = k;
+            self.v_scratch = v;
+            out?
+        } else {
+            // Zero-copy hot path: hand the runtime per-request block
+            // tables over the page pool; attention reads rows in place
+            // — no per-step KV materialization at all (§Perf).
+            let view = self.kv.paged_view(&ids).map_err(|e| anyhow!("{e}"))?;
+            self.runtime.decode_paged(&idx, &tokens, &pos, &view, &rows)?
+        };
         drop(rows);
-        let assist_dt = assist.as_ref().map_or(0.0, |a| a.spent.get());
+        let assist_dt = assist.as_ref().map_or(0.0, |a| a.spent());
+        // Explicit drop: the timer's Mutex gives it drop glue, which
+        // would otherwise pin the `self.cpu` borrow across the `&mut
+        // self` bookkeeping below.
+        drop(assist);
         if assist_dt > 0.0 {
             self.metrics.assist_decode(assist_dt);
         }
-        self.k_scratch = k;
-        self.v_scratch = v;
         self.apply_decode_out(&ids, &out, bb)
     }
 
@@ -826,14 +903,19 @@ impl ServingFront for InferenceServer {
 }
 
 /// Sleep that is accurate at sub-millisecond scale (std sleep can
-/// overshoot badly; load windows here are single-digit ms).
+/// overshoot badly; load windows here are single-digit ms). The OS
+/// sleep covers everything but the last ~200 µs; only that tail is
+/// spun — the previous version busy-spun entire sub-2 ms windows and a
+/// full trailing millisecond of larger ones, burning a core inside
+/// every modeled load window.
 fn spin_sleep(d: Duration) {
+    const SPIN_TAIL: Duration = Duration::from_micros(200);
     if d.is_zero() {
         return;
     }
     let t0 = Instant::now();
-    if d > Duration::from_millis(2) {
-        std::thread::sleep(d - Duration::from_millis(1));
+    if d > SPIN_TAIL {
+        std::thread::sleep(d - SPIN_TAIL);
     }
     while t0.elapsed() < d {
         std::hint::spin_loop();

@@ -6,11 +6,29 @@
 //! paper credits this mechanism; LightLLM/vLLM both use it).
 //!
 //! Layout: one page holds `page_size` token rows for **all** layers,
-//! K and V, i.e. `2 · layers · page_size · hidden` f32s. The decode
-//! input tensors ([L, B, M, H]) are assembled by gathering each
-//! request's pages.
+//! K and V, i.e. `2 · layers · page_size · hidden` f32s.
+//!
+//! The runtime reaches the pool **in place** (§Perf):
+//!
+//! - [`KvCacheManager::paged_view`] builds a [`PagedKv`] — per-request
+//!   block tables (page ids + length) over a shared borrow of the pool
+//!   — implementing [`crate::runtime::KvView`], so decode attention
+//!   reads cached rows directly from their pages with zero per-step
+//!   assembly.
+//! - [`KvCacheManager::reserve`] + [`KvCacheManager::writers`] hand out
+//!   per-request [`PageWriter`]s (disjoint `&mut` borrows of each
+//!   request's pages), implementing [`crate::runtime::KvWrite`], so
+//!   prefill streams K/V rows straight into pages — no dense-then-
+//!   recopy double buffer, and rows can be written from concurrent
+//!   forward threads.
+//!
+//! The dense assembly path ([`KvCacheManager::assemble_into`]) remains
+//! for the PJRT backend (dense tensor inputs) and as the reference in
+//! paged-vs-dense equivalence tests.
 
 use std::collections::HashMap;
+
+use crate::runtime::KvWrite;
 
 /// Errors from the KV manager.
 #[derive(Debug, PartialEq)]
@@ -18,6 +36,7 @@ pub enum KvError {
     OutOfPages { need: usize, free: usize },
     UnknownRequest(u64),
     TooLong(u64, usize),
+    AlreadyAdmitted(u64),
 }
 
 impl std::fmt::Display for KvError {
@@ -30,6 +49,9 @@ impl std::fmt::Display for KvError {
             KvError::TooLong(id, cap) => {
                 write!(f, "request {id} exceeds cache capacity {cap}")
             }
+            KvError::AlreadyAdmitted(id) => {
+                write!(f, "request {id} already holds KV pages")
+            }
         }
     }
 }
@@ -39,6 +61,21 @@ impl std::error::Error for KvError {}
 struct RequestKv {
     pages: Vec<usize>,
     len: usize,
+}
+
+/// Element offset of (layer, slot, K|V) inside a page of the layout
+/// `[K/V][layer][slot][hidden]`.
+#[inline]
+fn page_offset(
+    layers: usize,
+    page_size: usize,
+    hidden: usize,
+    layer: usize,
+    slot: usize,
+    is_v: bool,
+) -> usize {
+    let half = layers * page_size * hidden;
+    (if is_v { half } else { 0 }) + layer * page_size * hidden + slot * hidden
 }
 
 /// The paged KV-cache manager.
@@ -101,19 +138,105 @@ impl KvCacheManager {
         self.pages_for(tokens) <= self.free.len()
     }
 
-    fn offsets(&self, layer: usize, slot: usize, is_v: bool) -> usize {
-        // Page layout: [K/V][layer][slot][hidden].
-        let half = self.layers * self.page_size * self.hidden;
-        (if is_v { half } else { 0 })
-            + layer * self.page_size * self.hidden
-            + slot * self.hidden
+    /// Admit `req` by reserving pages for a `len`-token prompt whose
+    /// K/V rows will be written through a [`PageWriter`] (see
+    /// [`Self::writers`]). The request is live from this point:
+    /// `len_of` reports `len`, and `free_request` releases the pages —
+    /// callers that fail between reserve and write must free.
+    pub fn reserve(&mut self, req: u64, len: usize) -> Result<(), KvError> {
+        if len > self.max_tokens {
+            return Err(KvError::TooLong(req, self.max_tokens));
+        }
+        if self.requests.contains_key(&req) {
+            return Err(KvError::AlreadyAdmitted(req));
+        }
+        let need = self.pages_for(len.max(1));
+        if need > self.free.len() {
+            return Err(KvError::OutOfPages {
+                need,
+                free: self.free.len(),
+            });
+        }
+        let pages: Vec<usize> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.requests.insert(req, RequestKv { pages, len });
+        Ok(())
     }
 
-    /// Admit a request with the prompt KV produced by a prefill call.
+    /// One [`PageWriter`] per request in `reqs`, each holding disjoint
+    /// `&mut` borrows of exactly that request's pages — safe to move to
+    /// concurrent forward threads. `reqs` must not repeat an id.
+    pub fn writers(&mut self, reqs: &[u64]) -> Result<Vec<PageWriter<'_>>, KvError> {
+        // page id → (position in reqs, ordinal within the request).
+        let mut owner: HashMap<usize, (usize, usize)> = HashMap::new();
+        let mut lens: Vec<usize> = Vec::with_capacity(reqs.len());
+        for (ri, id) in reqs.iter().enumerate() {
+            let r = self
+                .requests
+                .get(id)
+                .ok_or(KvError::UnknownRequest(*id))?;
+            for (ord, &p) in r.pages.iter().enumerate() {
+                if owner.insert(p, (ri, ord)).is_some() {
+                    // A repeated id would leave the earlier occurrence's
+                    // writer with missing pages (the owner map can hold
+                    // each page once) — reject instead of handing out a
+                    // writer that panics mid-prefill.
+                    return Err(KvError::AlreadyAdmitted(*id));
+                }
+            }
+            lens.push(r.len);
+        }
+        // Distribute the pool's &mut pages to their owners.
+        let mut parts: Vec<Vec<(usize, &mut [f32])>> =
+            reqs.iter().map(|_| Vec::new()).collect();
+        for (pid, page) in self.pool.iter_mut().enumerate() {
+            if let Some(&(ri, ord)) = owner.get(&pid) {
+                parts[ri].push((ord, page.as_mut_slice()));
+            }
+        }
+        let mut out = Vec::with_capacity(reqs.len());
+        for (ri, mut part) in parts.into_iter().enumerate() {
+            part.sort_by_key(|&(ord, _)| ord);
+            out.push(PageWriter {
+                layers: self.layers,
+                hidden: self.hidden,
+                page_size: self.page_size,
+                len: lens[ri],
+                pages: part.into_iter().map(|(_, s)| s).collect(),
+            });
+        }
+        Ok(out)
+    }
+
+    /// A zero-copy read view over the pool for a decode batch: row `i`
+    /// of the view is request `reqs[i]`. Implements
+    /// [`crate::runtime::KvView`], so the native runtime's attention
+    /// iterates pages in place.
+    pub fn paged_view(&self, reqs: &[u64]) -> Result<PagedKv<'_>, KvError> {
+        let mut tables = Vec::with_capacity(reqs.len());
+        for id in reqs {
+            let r = self
+                .requests
+                .get(id)
+                .ok_or(KvError::UnknownRequest(*id))?;
+            tables.push((r.pages.as_slice(), r.len));
+        }
+        Ok(PagedKv {
+            pool: &self.pool,
+            tables,
+            layers: self.layers,
+            hidden: self.hidden,
+            page_size: self.page_size,
+        })
+    }
+
+    /// Admit a request with the prompt KV produced by a *dense* prefill
+    /// output (the PJRT fallback layout).
     ///
     /// `k`/`v` are the full bucket outputs, row-major
     /// [layers, bucket_batch, bucket_seq, hidden]; `row` selects this
-    /// request's row; `len` its true prompt length.
+    /// request's row; `len` its true prompt length. Implemented over
+    /// [`Self::reserve`] + [`Self::writers`] — the zero-copy path minus
+    /// the zero-copy.
     pub fn admit_from_prefill(
         &mut self,
         req: u64,
@@ -124,32 +247,16 @@ impl KvCacheManager {
         row: usize,
         len: usize,
     ) -> Result<(), KvError> {
-        if len > self.max_tokens {
-            return Err(KvError::TooLong(req, self.max_tokens));
-        }
-        let need = self.pages_for(len.max(1));
-        if need > self.free.len() {
-            return Err(KvError::OutOfPages {
-                need,
-                free: self.free.len(),
-            });
-        }
-        let pages: Vec<usize> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        let (layers, hidden) = (self.layers, self.hidden);
+        self.reserve(req, len)?;
+        let mut writers = self.writers(&[req])?;
+        let w = &mut writers[0];
         for t in 0..len {
-            let page = pages[t / self.page_size];
-            let slot = t % self.page_size;
-            for layer in 0..self.layers {
-                let src =
-                    ((layer * bucket_batch + row) * bucket_seq + t) * self.hidden;
-                let kd = self.offsets(layer, slot, false);
-                self.pool[page][kd..kd + self.hidden]
-                    .copy_from_slice(&k[src..src + self.hidden]);
-                let vd = self.offsets(layer, slot, true);
-                self.pool[page][vd..vd + self.hidden]
-                    .copy_from_slice(&v[src..src + self.hidden]);
+            for layer in 0..layers {
+                let src = ((layer * bucket_batch + row) * bucket_seq + t) * hidden;
+                w.write_kv(layer, t, &k[src..src + hidden], &v[src..src + hidden]);
             }
         }
-        self.requests.insert(req, RequestKv { pages, len });
         Ok(())
     }
 
@@ -193,10 +300,10 @@ impl KvCacheManager {
         let slot = len % page_size;
         for layer in 0..layers {
             let src = (layer * bucket_batch + row) * hidden;
-            let kd = self.offsets(layer, slot, false);
+            let kd = page_offset(layers, page_size, hidden, layer, slot, false);
             self.pool[page][kd..kd + hidden]
                 .copy_from_slice(&k_new[src..src + hidden]);
-            let vd = self.offsets(layer, slot, true);
+            let vd = page_offset(layers, page_size, hidden, layer, slot, true);
             self.pool[page][vd..vd + hidden]
                 .copy_from_slice(&v_new[src..src + hidden]);
         }
@@ -220,9 +327,10 @@ impl KvCacheManager {
         Ok((k, v))
     }
 
-    /// [`Self::assemble`] into caller-owned buffers — the decode hot
-    /// path reuses these across iterations instead of allocating two
-    /// multi-MB vectors per step (§Perf).
+    /// [`Self::assemble`] into caller-owned buffers reused across
+    /// iterations. Only the PJRT backend pays this cost now — the
+    /// native path reads pages in place via [`Self::paged_view`]
+    /// (§Perf).
     pub fn assemble_into(
         &self,
         reqs: &[u64],
@@ -247,10 +355,24 @@ impl KvCacheManager {
                 let slot = t % self.page_size;
                 for layer in 0..self.layers {
                     let dst = ((layer * bucket_batch + row) * m + t) * self.hidden;
-                    let ks = self.offsets(layer, slot, false);
+                    let ks = page_offset(
+                        self.layers,
+                        self.page_size,
+                        self.hidden,
+                        layer,
+                        slot,
+                        false,
+                    );
                     k[dst..dst + self.hidden]
                         .copy_from_slice(&self.pool[page][ks..ks + self.hidden]);
-                    let vs = self.offsets(layer, slot, true);
+                    let vs = page_offset(
+                        self.layers,
+                        self.page_size,
+                        self.hidden,
+                        layer,
+                        slot,
+                        true,
+                    );
                     v[dst..dst + self.hidden]
                         .copy_from_slice(&self.pool[page][vs..vs + self.hidden]);
                 }
@@ -275,9 +397,80 @@ impl KvCacheManager {
     }
 }
 
+/// Write handle over one request's reserved pages ([`KvCacheManager::
+/// writers`]): prefill streams each freshly computed K/V row straight
+/// into its page slot. Writers for different requests borrow disjoint
+/// pages, so a batch of them moves to concurrent forward threads.
+pub struct PageWriter<'a> {
+    layers: usize,
+    hidden: usize,
+    page_size: usize,
+    /// Reserved token capacity (the request's prompt length).
+    len: usize,
+    /// This request's pages, in block-table order.
+    pages: Vec<&'a mut [f32]>,
+}
+
+impl PageWriter<'_> {
+    /// Reserved token capacity.
+    pub fn capacity(&self) -> usize {
+        self.len
+    }
+}
+
+impl crate::runtime::KvWrite for PageWriter<'_> {
+    fn write_kv(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert!(pos < self.len.max(1), "write beyond reservation");
+        let slot = pos % self.page_size;
+        let page = &mut *self.pages[pos / self.page_size];
+        let kd = page_offset(self.layers, self.page_size, self.hidden, layer, slot, false);
+        page[kd..kd + self.hidden].copy_from_slice(k_row);
+        let vd = page_offset(self.layers, self.page_size, self.hidden, layer, slot, true);
+        page[vd..vd + self.hidden].copy_from_slice(v_row);
+    }
+}
+
+/// Zero-copy read view for a decode batch ([`KvCacheManager::
+/// paged_view`]): per-request block tables over a shared borrow of the
+/// page pool. Row order matches the `reqs` slice the view was built
+/// from.
+pub struct PagedKv<'a> {
+    pool: &'a [Vec<f32>],
+    /// (block table, cached length) per batch row.
+    tables: Vec<(&'a [usize], usize)>,
+    layers: usize,
+    hidden: usize,
+    page_size: usize,
+}
+
+impl PagedKv<'_> {
+    /// Cached tokens for batch row `row`.
+    pub fn len_of_row(&self, row: usize) -> usize {
+        self.tables[row].1
+    }
+}
+
+impl crate::runtime::KvView for PagedKv<'_> {
+    fn kv_row(&self, row: usize, layer: usize, pos: usize, want_v: bool) -> &[f32] {
+        let (pages, len) = self.tables[row];
+        debug_assert!(pos < len, "read beyond cached length");
+        let page = &self.pool[pages[pos / self.page_size]];
+        let at = page_offset(
+            self.layers,
+            self.page_size,
+            self.hidden,
+            layer,
+            pos % self.page_size,
+            want_v,
+        );
+        &page[at..at + self.hidden]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::{KvView, KvWrite};
 
     fn mgr() -> KvCacheManager {
         KvCacheManager::new(2, 4, 4, 8, 32)
@@ -320,6 +513,131 @@ mod tests {
     }
 
     #[test]
+    fn paged_view_matches_assembly() {
+        // The zero-copy view must read exactly what dense assembly
+        // copies out — including across page boundaries (page_size 4,
+        // len 7 spans two pages).
+        let mut m = mgr();
+        let (l, b, s, h) = (2, 2, 8, 4);
+        let k = fake_prefill(l, b, s, h);
+        let v: Vec<f32> = k.iter().map(|x| x + 0.5).collect();
+        m.admit_from_prefill(1, &k, &v, b, s, 0, 7).unwrap();
+        m.admit_from_prefill(2, &k, &v, b, s, 1, 3).unwrap();
+
+        let reqs = [2u64, 1];
+        let (ka, va) = m.assemble(&reqs, 2, 8).unwrap();
+        let view = m.paged_view(&reqs).unwrap();
+        assert_eq!(view.len_of_row(0), 3);
+        assert_eq!(view.len_of_row(1), 7);
+        for (row, len) in [(0usize, 3usize), (1, 7)] {
+            for layer in 0..l {
+                for t in 0..len {
+                    let at = ((layer * 2 + row) * 8 + t) * h;
+                    assert_eq!(
+                        view.kv_row(row, layer, t, false),
+                        &ka[at..at + h],
+                        "K row={row} layer={layer} t={t}"
+                    );
+                    assert_eq!(view.kv_row(row, layer, t, true), &va[at..at + h]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn writers_are_disjoint_and_ordered() {
+        // Two requests written through simultaneous writers land in
+        // their own pages, in block-table order.
+        let mut m = mgr();
+        m.reserve(7, 6).unwrap(); // 2 pages
+        m.reserve(8, 2).unwrap(); // 1 page
+        let (l, h) = (2usize, 4usize);
+        {
+            let mut ws = m.writers(&[7, 8]).unwrap();
+            assert_eq!(ws.len(), 2);
+            assert_eq!(ws[0].capacity(), 6);
+            let (w7, w8) = ws.split_at_mut(1);
+            for layer in 0..l {
+                for t in 0..6 {
+                    let row: Vec<f32> =
+                        (0..h).map(|d| (100 + layer * 10 + t) as f32 + d as f32).collect();
+                    w7[0].write_kv(layer, t, &row, &row);
+                }
+                for t in 0..2 {
+                    let row = vec![-((layer * 10 + t) as f32); h];
+                    w8[0].write_kv(layer, t, &row, &row);
+                }
+            }
+        }
+        let view = m.paged_view(&[7, 8]).unwrap();
+        // Request 7, layer 1, token 5 (second page, slot 1).
+        assert_eq!(view.kv_row(0, 1, 5, false)[0], 115.0);
+        // Request 8 unclobbered.
+        assert_eq!(view.kv_row(1, 1, 1, true)[0], -11.0);
+    }
+
+    #[test]
+    fn writers_reject_duplicate_ids() {
+        // A repeated id would hand the first occurrence a writer with
+        // missing pages — must be a typed error, not a later panic.
+        let mut m = mgr();
+        m.reserve(5, 3).unwrap();
+        assert!(matches!(
+            m.writers(&[5, 5]),
+            Err(KvError::AlreadyAdmitted(5))
+        ));
+    }
+
+    #[test]
+    fn reserve_guards() {
+        let mut m = KvCacheManager::new(2, 4, 4, 2, 32);
+        m.reserve(1, 8).unwrap(); // both pages
+        assert_eq!(
+            m.reserve(2, 1),
+            Err(KvError::OutOfPages { need: 1, free: 0 })
+        );
+        assert_eq!(m.reserve(1, 1), Err(KvError::AlreadyAdmitted(1)));
+        assert_eq!(m.reserve(3, 33), Err(KvError::TooLong(3, 32)));
+        m.free_request(1).unwrap();
+        assert_eq!(m.free_pages(), 2);
+    }
+
+    #[test]
+    fn eviction_and_readmission_reuse_pages_cleanly() {
+        // Free a request, readmit another over the same pages: the view
+        // must serve only the new request's rows (stale data beyond the
+        // new length is never addressed: reads are bounded by len).
+        let mut m = mgr();
+        let (l, b, s, h) = (2, 1, 8, 4);
+        let k = fake_prefill(l, b, s, h);
+        m.admit_from_prefill(1, &k, &k, b, s, 0, 8).unwrap();
+        let stale = m.assemble(&[1], 1, 8).unwrap().0;
+        m.free_request(1).unwrap();
+
+        let fresh: Vec<f32> = k.iter().map(|x| x * -3.0).collect();
+        m.admit_from_prefill(2, &fresh, &fresh, b, s, 0, 5).unwrap();
+        let view = m.paged_view(&[2]).unwrap();
+        assert_eq!(view.len_of_row(0), 5);
+        for layer in 0..l {
+            for t in 0..5 {
+                let at = ((layer * b) * s + t) * h;
+                assert_eq!(view.kv_row(0, layer, t, false), &fresh[at..at + h]);
+            }
+        }
+        // And dense assembly agrees (zero-pads beyond len even though
+        // the reused pages still hold request 1's stale rows).
+        let (ka, _) = m.assemble(&[2], 1, 8).unwrap();
+        assert_ne!(ka, stale);
+        let tail = (5usize..8).all(|t| {
+            (0..l).all(|layer| {
+                let at = ((layer * 1) * 8 + t) * h;
+                ka[at..at + h].iter().all(|&x| x == 0.0)
+            })
+        });
+        assert!(tail, "assembly must zero-pad beyond the new length");
+    }
+
+    #[test]
     fn append_grows_and_allocates_pages() {
         let mut m = mgr();
         let (l, b, s, h) = (2, 1, 4, 4);
@@ -335,6 +653,9 @@ mod tests {
         // Token 4 (0-based) must hold 7.0 at layer 0.
         let dst = ((0) * 8 + 4) * h;
         assert_eq!(ka[dst], 7.0);
+        // The paged view sees the appended token without assembly.
+        let view = m.paged_view(&[1]).unwrap();
+        assert_eq!(view.kv_row(0, 0, 4, false), &k_new[..h]);
     }
 
     #[test]

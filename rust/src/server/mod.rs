@@ -6,8 +6,9 @@
 //!   [`RequestHandle`] event streams with cancellation, and the
 //!   [`ServingFront`] trait both the engine and the simulator
 //!   ([`crate::sim::front::SimFront`]) implement.
-//! - [`kvcache`] — paged KV-cache manager (block-granular alloc/free,
-//!   batch assembly for the decode bucket inputs).
+//! - [`kvcache`] — paged KV-cache manager: block-granular alloc/free,
+//!   zero-copy [`PagedKv`] views + [`PageWriter`] handles for the
+//!   native runtime, dense batch assembly for the PJRT fallback.
 //! - [`batcher`] — iteration-level continuous-batching policy (Fig 2):
 //!   arrivals preempt decode; completed requests leave every iteration;
 //!   priority classes order admission.
@@ -33,5 +34,5 @@ pub use api::{
 };
 pub use batcher::{Batcher, NextAction};
 pub use engine::{ColdStartMode, EngineConfig, InferenceServer};
-pub use kvcache::KvCacheManager;
+pub use kvcache::{KvCacheManager, KvError, PageWriter, PagedKv};
 pub use metrics::{ColdStartStats, MetricsRecorder, RequestRecord, TtftBreakdown};

@@ -20,7 +20,12 @@ use caraserve::server::{
 const N_ADAPTERS: u64 = 8;
 
 fn server(mode: ColdStartMode, cpu_workers: usize, load_scale: f64) -> InferenceServer {
-    let runtime = NativeRuntime::new(NativeConfig::test_tiny());
+    // CPU-assisted servers run a multi-threaded forward pool while the
+    // oracle stays serial: every token-equality assertion below then
+    // also pins the §Perf threading contract (N-thread forward ==
+    // 1-thread forward, bitwise).
+    let threads = if cpu_workers > 0 { 3 } else { 1 };
+    let runtime = NativeRuntime::new(NativeConfig::test_tiny().with_threads(threads));
     let mut s = InferenceServer::new(
         runtime,
         EngineConfig {

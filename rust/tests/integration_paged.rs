@@ -1,0 +1,237 @@
+//! Integration: the zero-copy paged-KV decode path.
+//!
+//! Pins the tentpole equivalences of the paged refactor:
+//!
+//! 1. decoding over [`PagedKv`] block tables is **bitwise** identical to
+//!    the old dense-assembly path (`assemble_into` + dense view),
+//!    including after page-boundary crossings and request
+//!    eviction/readmission;
+//! 2. engine token streams are invariant to the page size (the paged
+//!    layout is invisible to the model);
+//! 3. engine token streams are invariant to the forward-pool width
+//!    (1-thread == N-thread, the §Perf threading contract).
+
+use caraserve::model::LoraSpec;
+use caraserve::runtime::{DenseKv, KvWrite, NativeConfig, NativeRuntime, RowLora};
+use caraserve::server::{
+    ColdStartMode, EngineConfig, InferenceServer, KvCacheManager, LifecycleState,
+    ServeRequest,
+};
+
+fn runtime() -> NativeRuntime {
+    NativeRuntime::new(NativeConfig::test_tiny())
+}
+
+#[test]
+fn paged_decode_is_bitwise_identical_to_dense_assembly() {
+    let rt = runtime();
+    let cfg = rt.cfg.clone();
+    let (l, h, m) = (cfg.layers, cfg.hidden, cfg.cache_m);
+    // page_size 4: a 7-token prompt already spans two pages and the
+    // decode loop below crosses several more boundaries.
+    let mut kv = KvCacheManager::new(l, h, 4, 64, m);
+
+    let prompts: Vec<Vec<i32>> = vec![
+        (0..7).map(|i| i * 3 + 1).collect(),
+        (0..5).map(|i| i * 11 + 2).collect(),
+    ];
+    let ids = [101u64, 202];
+    for (i, p) in prompts.iter().enumerate() {
+        kv.reserve(ids[i], p.len()).unwrap();
+    }
+    let lens: Vec<i32> = prompts.iter().map(|p| p.len() as i32).collect();
+    let rows = vec![RowLora::Base; 2];
+    let out = {
+        let mut writers = kv.writers(&ids).unwrap();
+        let mut writer_refs: Vec<&mut dyn KvWrite> = writers
+            .iter_mut()
+            .map(|w| w as &mut dyn KvWrite)
+            .collect();
+        rt.prefill(&[0, 1], &prompts, &lens, &rows, &mut writer_refs)
+            .unwrap()
+    };
+
+    let mut last: Vec<i32> = (0..2).map(|b| rt.argmax_row(&out.logits, b)).collect();
+    let mut ctx: Vec<i32> = lens.clone();
+    let idx = [0i32, 1];
+    let (mut ks, mut vs) = (Vec::new(), Vec::new());
+    for step in 0..12 {
+        // The pre-paged contract: materialize the whole history densely…
+        kv.assemble_into(&ids, 2, m, &mut ks, &mut vs).unwrap();
+        let dense_view = DenseKv::new(&ks, &vs, l, 2, m, h);
+        let dense = rt.decode(&idx, &last, &ctx, &dense_view, &rows).unwrap();
+        // …versus reading the pages in place.
+        let paged = {
+            let view = kv.paged_view(&ids).unwrap();
+            rt.decode(&idx, &last, &ctx, &view, &rows).unwrap()
+        };
+        assert_eq!(dense.logits, paged.logits, "logits diverged at step {step}");
+        assert_eq!(dense.k_new, paged.k_new, "k_new diverged at step {step}");
+        assert_eq!(dense.v_new, paged.v_new, "v_new diverged at step {step}");
+        for (b, id) in ids.iter().enumerate() {
+            kv.append_token(*id, &paged.k_new, &paged.v_new, 2, b).unwrap();
+            last[b] = rt.argmax_row(&paged.logits, b);
+            ctx[b] += 1;
+        }
+    }
+    // 12 appends from a 7-token prompt crossed the 8-, 12- and 16-token
+    // page boundaries.
+    assert_eq!(kv.len_of(101), Some(19));
+}
+
+#[test]
+fn paged_decode_survives_eviction_and_readmission() {
+    // Free one request mid-flight and admit a new one over the recycled
+    // pages: the survivor's stream and the newcomer's stream must still
+    // match the dense reference exactly (stale page contents are never
+    // addressed).
+    let rt = runtime();
+    let cfg = rt.cfg.clone();
+    let (l, h, m) = (cfg.layers, cfg.hidden, cfg.cache_m);
+    let mut kv = KvCacheManager::new(l, h, 4, 16, m);
+
+    let prefill_one = |kv: &mut KvCacheManager, id: u64, prompt: &Vec<i32>| -> i32 {
+        kv.reserve(id, prompt.len()).unwrap();
+        let mut writers = kv.writers(&[id]).unwrap();
+        let mut writer_refs: Vec<&mut dyn KvWrite> = writers
+            .iter_mut()
+            .map(|w| w as &mut dyn KvWrite)
+            .collect();
+        let out = rt
+            .prefill(
+                &[0],
+                std::slice::from_ref(prompt),
+                &[prompt.len() as i32],
+                &[RowLora::Base],
+                &mut writer_refs,
+            )
+            .unwrap();
+        rt.argmax_row(&out.logits, 0)
+    };
+
+    let p_a: Vec<i32> = (0..8).map(|i| i * 5 + 3).collect();
+    let p_b: Vec<i32> = (0..6).map(|i| i * 9 + 1).collect();
+    let first_a = prefill_one(&mut kv, 1, &p_a);
+    let free_before = kv.free_pages();
+    kv.free_request(1).unwrap();
+    assert!(kv.free_pages() > free_before, "pages must return to the pool");
+
+    // Readmit over the recycled pages and decode both ways.
+    let first_b = prefill_one(&mut kv, 2, &p_b);
+    let rows = [RowLora::Base];
+    let (mut last, mut ctx) = (first_b, p_b.len() as i32);
+    let (mut ks, mut vs) = (Vec::new(), Vec::new());
+    for _ in 0..6 {
+        kv.assemble_into(&[2], 1, m, &mut ks, &mut vs).unwrap();
+        let dense_view = DenseKv::new(&ks, &vs, l, 1, m, h);
+        let dense = rt.decode(&[0], &[last], &[ctx], &dense_view, &rows).unwrap();
+        let paged = {
+            let view = kv.paged_view(&[2]).unwrap();
+            rt.decode(&[0], &[last], &[ctx], &view, &rows).unwrap()
+        };
+        assert_eq!(dense.logits, paged.logits, "recycled pages leaked state");
+        kv.append_token(2, &paged.k_new, &paged.v_new, 1, 0).unwrap();
+        last = rt.argmax_row(&paged.logits, 0);
+        ctx += 1;
+    }
+    // The evicted request's first token is reproducible on a fresh pool
+    // (nothing about eviction depended on the survivor).
+    let mut fresh = KvCacheManager::new(l, h, 4, 16, m);
+    assert_eq!(prefill_one(&mut fresh, 9, &p_a), first_a);
+}
+
+const N_ADAPTERS: u64 = 6;
+
+fn engine(page_size: usize, threads: usize) -> InferenceServer {
+    let runtime = NativeRuntime::new(NativeConfig::test_tiny().with_threads(threads));
+    let mut s = InferenceServer::new(
+        runtime,
+        EngineConfig {
+            cold_start: ColdStartMode::Cached,
+            page_size,
+            ..Default::default()
+        },
+    )
+    .expect("server");
+    for id in 0..N_ADAPTERS {
+        s.install_adapter(LoraSpec::standard(id, 4, "tiny"));
+    }
+    s
+}
+
+/// Run a deterministic mixed workload and collect every token stream.
+fn workload_tokens(s: &mut InferenceServer) -> Vec<Vec<i32>> {
+    let mut handles = Vec::new();
+    for i in 0..8u64 {
+        let prompt: Vec<i32> = (0..(5 + i as i32 % 7))
+            .map(|j| (j * 13 + i as i32 * 3) % 64)
+            .collect();
+        let req = ServeRequest::new(i % N_ADAPTERS, prompt)
+            .max_new_tokens(4 + (i as usize % 9));
+        handles.push(s.submit(req));
+        if i % 3 == 2 {
+            // Interleave admits with decode so batches overlap.
+            s.run_until_idle().expect("serve");
+        }
+    }
+    s.run_until_idle().expect("serve");
+    handles
+        .iter()
+        .map(|h| {
+            assert_eq!(h.state(), LifecycleState::Finished);
+            h.tokens()
+        })
+        .collect()
+}
+
+#[test]
+fn admission_trims_to_available_pages() {
+    // Two prompts that individually pass the page check but jointly
+    // exhaust the pool: the engine must admit them one at a time (the
+    // cumulative accounting in step()), not abort the serving loop with
+    // a mid-batch reservation failure that orphans both handles.
+    let runtime = NativeRuntime::new(NativeConfig::test_tiny());
+    let mut s = InferenceServer::new(
+        runtime,
+        EngineConfig {
+            cold_start: ColdStartMode::Cached,
+            page_size: 4,
+            kv_pages: 3, // each 8-token prompt needs 2 pages
+            ..Default::default()
+        },
+    )
+    .expect("server");
+    for id in 0..2u64 {
+        s.install_adapter(LoraSpec::standard(id, 4, "tiny"));
+    }
+    let h1 = s.submit(
+        ServeRequest::new(0, (0..8).map(|i| i % 64).collect()).max_new_tokens(2),
+    );
+    let h2 = s.submit(
+        ServeRequest::new(1, (0..8).map(|i| (i * 3) % 64).collect()).max_new_tokens(2),
+    );
+    s.run_until_idle()
+        .expect("joint over-admission must not abort the engine");
+    assert_eq!(h1.state(), LifecycleState::Finished);
+    assert_eq!(h2.state(), LifecycleState::Finished);
+    assert_eq!(h1.tokens().len(), 2);
+    assert_eq!(h2.tokens().len(), 2);
+}
+
+#[test]
+fn engine_streams_are_invariant_to_page_size() {
+    let baseline = workload_tokens(&mut engine(16, 1));
+    for page_size in [2usize, 5, 64] {
+        let got = workload_tokens(&mut engine(page_size, 1));
+        assert_eq!(got, baseline, "page_size {page_size} changed token streams");
+    }
+}
+
+#[test]
+fn engine_streams_are_invariant_to_thread_count() {
+    let baseline = workload_tokens(&mut engine(16, 1));
+    for threads in [2usize, 4] {
+        let got = workload_tokens(&mut engine(16, threads));
+        assert_eq!(got, baseline, "threads {threads} changed token streams");
+    }
+}
