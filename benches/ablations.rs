@@ -104,7 +104,8 @@ fn ablation_slo_penalty() {
                 ..Default::default()
             },
             42,
-        );
+        )
+        .expect("known policy");
         let mut sim = Simulation::new(instances);
         let out = sim.run(&reqs, policy.as_mut());
         rep.row(vec![

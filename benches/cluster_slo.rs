@@ -1,0 +1,185 @@
+//! Cluster SLO attainment: the §5 scheduler in front of real engines.
+//!
+//! Drives the shared synthetic heterogeneous-rank workload
+//! (`server::cluster::synthetic`) through a `ClusterFront` over N
+//! native-runtime `InferenceServer`s, once per routing policy, and
+//! reports the §7.5 headline comparison measured on live engines
+//! instead of the discrete-event simulator: SLO attainment, TTFT/TPOT
+//! percentiles, per-server load balance, cold-start counts, and
+//! decode-growth preemptions.
+//!
+//! Emits `BENCH_cluster.json` in the working directory (plus the
+//! standard `target/bench-reports/cluster_slo.json`); CI runs `--smoke`
+//! (2 engines, small workload, rank-aware + random only) to keep the
+//! file fresh. The acceptance shape is rank-aware ≥ random on SLO
+//! attainment.
+
+use caraserve::server::cluster::synthetic::{self, SyntheticConfig};
+use caraserve::server::ColdStartMode;
+use caraserve::util::json::{self, Json};
+use caraserve::util::stats::Summary;
+
+fn ms(s: &Option<Summary>, f: fn(&Summary) -> f64) -> String {
+    s.as_ref()
+        .map_or("-".to_string(), |s| format!("{:.1}", f(s) * 1e3))
+}
+
+fn summary_json(s: &Option<Summary>) -> Json {
+    match s {
+        None => Json::Null,
+        Some(s) => json::obj(vec![
+            ("mean_ms", json::num(s.mean * 1e3)),
+            ("p50_ms", json::num(s.p50 * 1e3)),
+            ("p99_ms", json::num(s.p99 * 1e3)),
+        ]),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("CARA_BENCH_FAST").is_ok();
+    let cfg = if smoke {
+        SyntheticConfig {
+            instances: 2,
+            requests: 16,
+            adapters: 16,
+            seed: 1,
+            threads: 1,
+            cpu_workers: 2,
+            cold_start: ColdStartMode::CaraServe,
+            kv_pages: 256,
+            polls_per_arrival: 2,
+        }
+    } else {
+        SyntheticConfig {
+            instances: 4,
+            requests: 96,
+            adapters: 24,
+            seed: 1,
+            threads: 2,
+            cpu_workers: 2,
+            cold_start: ColdStartMode::CaraServe,
+            kv_pages: 256,
+            polls_per_arrival: 2,
+        }
+    };
+    let policies: Vec<&str> = if smoke {
+        vec!["rank-aware", "random"]
+    } else {
+        vec!["rank-aware", "most-idle", "first-fit", "random"]
+    };
+
+    let mut report = caraserve::bench::Report::new(
+        "Cluster SLO attainment: rank-aware routing over live native engines",
+        &[
+            "policy",
+            "done",
+            "SLO %",
+            "ttft p50",
+            "ttft p99",
+            "tpot p50",
+            "tpot p99",
+            "cold",
+            "preempt",
+            "rank balance",
+        ],
+    );
+    let mut runs_json: Vec<Json> = Vec::new();
+    let mut attainment: Vec<(String, f64)> = Vec::new();
+
+    for name in &policies {
+        // run() itself reconciles finished + rejected == submitted.
+        let rep = synthetic::run(name, &cfg)?;
+        let att = rep.slo_attainment.unwrap_or(1.0);
+        attainment.push((rep.policy.clone(), att));
+        let balance = format!(
+            "{}..{}",
+            rep.routed_rank_sum.iter().min().unwrap(),
+            rep.routed_rank_sum.iter().max().unwrap()
+        );
+        report.row(vec![
+            rep.policy.clone(),
+            rep.finished.to_string(),
+            format!("{:.1}", att * 100.0),
+            ms(&rep.ttft, |s| s.p50),
+            ms(&rep.ttft, |s| s.p99),
+            ms(&rep.tpot, |s| s.p50),
+            ms(&rep.tpot, |s| s.p99),
+            rep.cold.cold_admits.to_string(),
+            rep.preemptions.to_string(),
+            balance,
+        ]);
+        runs_json.push(json::obj(vec![
+            ("policy", json::s(&rep.policy)),
+            ("requests", json::num(rep.requests as f64)),
+            ("finished", json::num(rep.finished as f64)),
+            ("rejected", json::num(rep.rejected as f64)),
+            ("slo_attainment", json::num(att)),
+            ("ttft", summary_json(&rep.ttft)),
+            ("tpot", summary_json(&rep.tpot)),
+            (
+                "routed",
+                Json::Arr(rep.routed.iter().map(|&n| json::num(n as f64)).collect()),
+            ),
+            (
+                "routed_rank_sum",
+                Json::Arr(
+                    rep.routed_rank_sum
+                        .iter()
+                        .map(|&n| json::num(n as f64))
+                        .collect(),
+                ),
+            ),
+            ("cold_admits", json::num(rep.cold.cold_admits as f64)),
+            ("cpu_assisted", json::num(rep.cold.cpu_assisted as f64)),
+            ("preemptions", json::num(rep.preemptions as f64)),
+            ("wall_s", json::num(rep.wall_s)),
+        ]));
+    }
+
+    let find = |n: &str| attainment.iter().find(|(p, _)| p == n).map(|&(_, a)| a);
+    let headline = match (find("rank-aware"), find("random")) {
+        (Some(ra), Some(rnd)) => {
+            report.note(format!(
+                "rank-aware {:.1}% vs random {:.1}% SLO attainment \
+                 (acceptance: rank-aware ≥ random)",
+                ra * 100.0,
+                rnd * 100.0
+            ));
+            Some((ra, rnd))
+        }
+        _ => None,
+    };
+    report.print();
+    report.save("cluster_slo").ok();
+
+    let top = json::obj(vec![
+        ("bench", json::s("cluster_slo")),
+        ("smoke", json::s(if smoke { "true" } else { "false" })),
+        ("instances", json::num(cfg.instances as f64)),
+        ("requests", json::num(cfg.requests as f64)),
+        ("adapters", json::num(cfg.adapters as f64)),
+        (
+            "ranks",
+            Json::Arr(
+                synthetic::RANKS
+                    .iter()
+                    .map(|&r| json::num(r as f64))
+                    .collect(),
+            ),
+        ),
+        (
+            "slo_attainment_rank_aware",
+            headline.map_or(Json::Null, |(ra, _)| json::num(ra)),
+        ),
+        (
+            "slo_attainment_random",
+            headline.map_or(Json::Null, |(_, rnd)| json::num(rnd)),
+        ),
+        ("runs", Json::Arr(runs_json)),
+    ]);
+    std::fs::write("BENCH_cluster.json", top.to_string_pretty())
+        .expect("write BENCH_cluster.json");
+    println!("\nwrote BENCH_cluster.json");
+    Ok(())
+}

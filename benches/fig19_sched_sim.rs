@@ -67,7 +67,8 @@ fn main() {
                     ..Default::default()
                 },
                 42,
-            );
+            )
+            .expect("known policy");
             let mut sim = Simulation::new(instances);
             let out = sim.run(&reqs, policy.as_mut());
             let tpt = out.column("tpt");

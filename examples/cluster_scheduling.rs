@@ -68,7 +68,8 @@ fn main() {
                     ..Default::default()
                 },
                 42,
-            );
+            )
+            .expect("known policy");
             let mut sim = Simulation::new(instances);
             let out = sim.run(&reqs, policy.as_mut());
             let tpt = out.column("tpt");
@@ -81,5 +82,30 @@ fn main() {
             );
         }
         println!();
+    }
+
+    // The same policies also route *real* engines: ClusterFront puts the
+    // scheduler in front of live native-runtime InferenceServers behind
+    // the identical ServingFront surface (`caraserve cluster` is the
+    // full driver; benches/cluster_slo.rs the measured comparison).
+    use caraserve::server::cluster::synthetic::{self, SyntheticConfig};
+    let cfg = SyntheticConfig {
+        instances: 2,
+        requests: 12,
+        adapters: 16,
+        ..Default::default()
+    };
+    println!("live-engine cluster (2 native runtimes, 12 requests):");
+    for policy in ["rank-aware", "random"] {
+        let rep = synthetic::run(policy, &cfg).expect("cluster run");
+        println!(
+            "  {:<12} finished {:>2}/{:<2}  SLO {:>5.1}%  routed {:?} (rank sums {:?})",
+            rep.policy,
+            rep.finished,
+            rep.requests,
+            rep.slo_attainment.unwrap_or(1.0) * 100.0,
+            rep.routed,
+            rep.routed_rank_sum
+        );
     }
 }

@@ -59,6 +59,12 @@ impl HostRepository {
         self.specs.get(&id)
     }
 
+    /// All installed adapter ids (unsorted — callers needing order sort,
+    /// e.g. `AdapterSet::only` does).
+    pub fn ids(&self) -> Vec<u64> {
+        self.specs.keys().copied().collect()
+    }
+
     /// Count.
     pub fn len(&self) -> usize {
         self.specs.len()

@@ -41,9 +41,9 @@
 //! while let Some(event) = handle.poll_event() { /* stream tokens */ }
 //! ```
 //!
-//! - [`server::ServingFront`] — the uniform backend surface
-//!   (submit / poll / cancel / stats), implemented by both backends
-//!   below so schedulers and drivers route against one interface.
+//! - [`server::ServingFront`] — the uniform, object-safe backend
+//!   surface (submit / poll / cancel / stats), implemented by every
+//!   front below so schedulers and drivers route against one interface.
 //! - [`server::InferenceServer`] — the real single-server engine
 //!   (base model + local LoRA repository + continuous batcher) over a
 //!   [`runtime::Runtime`] backend: the PJRT executor for AOT artifacts,
@@ -51,10 +51,18 @@
 //!   CPU-assisted cold start runs for real (shm worker pool computing
 //!   per-layer `xAB` while the adapter load window elapses, then the
 //!   §4.3 handoff to the resident `bgmv` path).
+//! - [`server::ClusterFront`] — the §5 rank-aware scheduler in front of
+//!   N boxed `ServingFront` backends (real engines, simulators, or a
+//!   mix): routes each request from registry rank + prompt length via a
+//!   [`scheduler::Policy`], re-routes on backend refusal, fans out
+//!   cancellation, and — being a `ServingFront` itself — drops into any
+//!   driver written for one engine (`caraserve cluster` runs it live).
 //! - [`sim::SimFront`] — the discrete-event simulator behind the same
 //!   API; [`sim::Simulation`] runs calibrated cluster experiments.
 //! - [`scheduler::RankAwareScheduler`] — Algorithm 1 over a cluster,
-//!   consuming the [`scheduler::ServerStats`] every front produces.
+//!   consuming the [`scheduler::ServerStats`] every front produces:
+//!   real eligibility data (local adapter set, prompt capacity, KV
+//!   headroom, preemptions) plus the running/queued rank lists.
 //! - [`cpu_lora::CpuLoraEngine`] — the CPU-assisted prefill engine.
 //!
 //! See `examples/quickstart.rs` for a compact end-to-end run.

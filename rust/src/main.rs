@@ -7,6 +7,13 @@
 //!   built), with the CPU-assisted cold-start path live when
 //!   `--cpu-workers > 0`, printing metrics incl. the TTFT cold-start
 //!   breakdown.
+//! - `cluster`   — the §5 scheduler in front of *real* engines: route a
+//!   heterogeneous-rank synthetic workload (mixed ranks, mixed SLOs,
+//!   cold and warm adapters) across N native-runtime `InferenceServer`s
+//!   through a `ClusterFront`, per `--policy` (or several,
+//!   comma-separated, or `all`), printing per-policy TTFT/TPOT
+//!   percentiles, SLO attainment, per-server load balance, cold-start
+//!   counts, and preemptions. `--smoke` is the small CI configuration.
 //! - `simulate`  — run a single-instance simulation of one §7.2 workload.
 //! - `schedule`  — run the §7.5 cluster scheduling simulation.
 //! - `profile`   — fit the §5 performance models and print (α, β, R²).
@@ -29,6 +36,10 @@ subcommands:
   serve     --runtime auto|native|pjrt --artifacts DIR --requests N
             --mode cached|ondemand|caraserve --cpu-workers N
             --threads N --load-scale F --slo-ttft-ms F --slo-tpot-ms F
+  cluster   --instances N --policy rank-aware|most-idle|first-fit|random
+            (comma-separate or `all` for several) --requests N
+            --adapters N --mode cached|ondemand|caraserve --cpu-workers N
+            --threads N --kv-pages N --pace N --seed N --smoke
   simulate  --mode cached|ondmd|s-lora|caraserve --rps F --rank N --secs F
   schedule  --policy rank-aware|most-idle|first-fit|random --instances N
             --kernel bgmv|mbgmv --rps F --secs F
@@ -57,6 +68,9 @@ fn run() -> anyhow::Result<()> {
         "secs",
         "policy",
         "instances",
+        "adapters",
+        "kv-pages",
+        "pace",
         "kernel",
         "seed",
         "slo-ttft-ms",
@@ -66,6 +80,7 @@ fn run() -> anyhow::Result<()> {
 
     match args.subcommand() {
         Some("serve") => cmd_serve(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("schedule") => cmd_schedule(&args),
         Some("profile") => cmd_profile(&args),
@@ -229,6 +244,110 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
+    use caraserve::server::cluster::synthetic::{self, SyntheticConfig};
+    use caraserve::server::ColdStartMode;
+
+    let smoke = args.flag("smoke");
+    let mode = match args.opt_or("mode", "caraserve").as_str() {
+        "cached" => ColdStartMode::Cached,
+        "ondemand" | "ondmd" => ColdStartMode::OnDemand,
+        _ => ColdStartMode::CaraServe,
+    };
+    let cfg = SyntheticConfig {
+        instances: args
+            .opt_parse_or("instances", 2)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        requests: args
+            .opt_parse_or("requests", if smoke { 16 } else { 48 })
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        adapters: args
+            .opt_parse_or("adapters", 24)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        seed: args.opt_parse_or("seed", 1).map_err(|e| anyhow::anyhow!("{e}"))?,
+        threads: args
+            .opt_parse_or("threads", 1)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        cpu_workers: args
+            .opt_parse_or("cpu-workers", if smoke { 0 } else { 2 })
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        cold_start: mode,
+        kv_pages: args
+            .opt_parse_or("kv-pages", 256)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        polls_per_arrival: args
+            .opt_parse_or("pace", 2)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+    };
+    let policy_arg = args.opt_or("policy", if smoke { "rank-aware,random" } else { "all" });
+    let policies: Vec<&str> = match policy_arg.as_str() {
+        "all" => vec!["rank-aware", "most-idle", "first-fit", "random"],
+        list => list.split(',').map(str::trim).collect(),
+    };
+
+    println!(
+        "cluster: {} native engines, {} requests, {} adapters (ranks {:?}), \
+         mode {mode:?}, seed {}",
+        cfg.instances,
+        cfg.requests,
+        cfg.adapters,
+        synthetic::RANKS,
+        cfg.seed
+    );
+    println!(
+        "{:<12} {:>6} {:>9} {:>10} {:>10} {:>10} {:>10} {:>6} {:>8}  {}",
+        "policy",
+        "done",
+        "SLO %",
+        "ttft p50",
+        "ttft p99",
+        "tpot p50",
+        "tpot p99",
+        "cold",
+        "preempt",
+        "routed per server"
+    );
+    let ms = |s: &Option<Summary>, f: fn(&Summary) -> f64| {
+        s.as_ref().map_or("-".to_string(), |s| format!("{:.1}", f(s) * 1e3))
+    };
+    let mut attainment: Vec<(String, f64)> = Vec::new();
+    for name in &policies {
+        // run() itself reconciles finished + rejected == submitted.
+        let rep = synthetic::run(name, &cfg)?;
+        let att = rep.slo_attainment.unwrap_or(1.0);
+        attainment.push((rep.policy.clone(), att));
+        let routed: Vec<String> = rep
+            .routed
+            .iter()
+            .zip(&rep.routed_rank_sum)
+            .map(|(n, r)| format!("{n}(Σr{r})"))
+            .collect();
+        println!(
+            "{:<12} {:>6} {:>8.1}% {:>10} {:>10} {:>10} {:>10} {:>6} {:>8}  {}",
+            rep.policy,
+            rep.finished,
+            att * 100.0,
+            ms(&rep.ttft, |s| s.p50),
+            ms(&rep.ttft, |s| s.p99),
+            ms(&rep.tpot, |s| s.p50),
+            ms(&rep.tpot, |s| s.p99),
+            rep.cold.cold_admits,
+            rep.preemptions,
+            routed.join(" ")
+        );
+    }
+    let find = |n: &str| attainment.iter().find(|(p, _)| p == n).map(|&(_, a)| a);
+    if let (Some(ra), Some(rnd)) = (find("rank-aware"), find("random")) {
+        println!(
+            "\nrank-aware {:.1}% vs random {:.1}% SLO attainment ({})",
+            ra * 100.0,
+            rnd * 100.0,
+            if ra >= rnd { "rank-aware ≥ random ✓" } else { "rank-aware fell behind" }
+        );
+    }
+    Ok(())
+}
+
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let mode = match args.opt_or("mode", "caraserve").as_str() {
         "cached" => ServingMode::Cached,
@@ -310,7 +429,7 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
             ..Default::default()
         },
         seed,
-    );
+    )?;
     let mut sim = Simulation::new(instances);
     let out = sim.run(&reqs, policy.as_mut());
     let tpt = out.column("tpt");

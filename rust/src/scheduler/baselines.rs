@@ -1,19 +1,20 @@
 //! Baseline scheduling policies (paper §7.5): MostIdle, FirstFit
-//! (Punica's strategy), and Random.
+//! (Punica's strategy), and Random. All judge per-request eligibility
+//! through [`ServerStats::eligible_for`] (adapter hosted + KV headroom).
 
 use super::{Policy, SchedRequest, ServerStats};
 use crate::perfmodel::PerfModel;
 use crate::util::rng::Rng;
 
-/// Route to the server with the least total requests.
+/// Route to the eligible server with the least total requests.
 pub struct MostIdle;
 
 impl Policy for MostIdle {
-    fn pick(&mut self, _req: &SchedRequest, stats: &[ServerStats]) -> Option<usize> {
+    fn pick(&mut self, req: &SchedRequest, stats: &[ServerStats]) -> Option<usize> {
         stats
             .iter()
             .enumerate()
-            .filter(|(_, s)| s.eligible)
+            .filter(|(_, s)| s.eligible_for(req))
             .min_by_key(|(_, s)| s.total_requests())
             .map(|(i, _)| i)
     }
@@ -42,7 +43,7 @@ impl Policy for FirstFit {
     fn pick(&mut self, req: &SchedRequest, stats: &[ServerStats]) -> Option<usize> {
         let mut last_eligible = None;
         for (i, s) in stats.iter().enumerate() {
-            if !s.eligible {
+            if !s.eligible_for(req) {
                 continue;
             }
             last_eligible = Some(i);
@@ -74,11 +75,11 @@ impl RandomPick {
 }
 
 impl Policy for RandomPick {
-    fn pick(&mut self, _req: &SchedRequest, stats: &[ServerStats]) -> Option<usize> {
+    fn pick(&mut self, req: &SchedRequest, stats: &[ServerStats]) -> Option<usize> {
         let eligible: Vec<usize> = stats
             .iter()
             .enumerate()
-            .filter(|(_, s)| s.eligible)
+            .filter(|(_, s)| s.eligible_for(req))
             .map(|(i, _)| i)
             .collect();
         if eligible.is_empty() {
@@ -97,15 +98,14 @@ impl Policy for RandomPick {
 mod tests {
     use super::*;
     use crate::perfmodel::KernelKind;
+    use crate::scheduler::AdapterSet;
 
     fn stats(loads: &[usize]) -> Vec<ServerStats> {
         loads
             .iter()
             .map(|&n| ServerStats {
                 running_ranks: vec![32; n],
-                queued_ranks: vec![],
-                eligible: true,
-                tpot_slo: None,
+                ..Default::default()
             })
             .collect()
     }
@@ -126,10 +126,18 @@ mod tests {
     }
 
     #[test]
-    fn most_idle_skips_ineligible() {
+    fn most_idle_skips_servers_without_the_adapter() {
         let mut p = MostIdle;
         let mut s = stats(&[5, 2, 9]);
-        s[1].eligible = false;
+        s[1].adapters = AdapterSet::only(vec![7]);
+        assert_eq!(p.pick(&req(), &s), Some(0));
+    }
+
+    #[test]
+    fn most_idle_skips_servers_that_cannot_hold_the_prompt() {
+        let mut p = MostIdle;
+        let mut s = stats(&[5, 2, 9]);
+        s[1].max_prompt_tokens = 8; // prompt is 16
         assert_eq!(p.pick(&req(), &s), Some(0));
     }
 
@@ -155,7 +163,7 @@ mod tests {
     fn random_is_uniform_ish_and_respects_eligibility() {
         let mut p = RandomPick::new(Rng::new(7));
         let mut s = stats(&[1, 1, 1]);
-        s[2].eligible = false;
+        s[2].adapters = AdapterSet::only(vec![]);
         let mut counts = [0usize; 3];
         for _ in 0..1000 {
             counts[p.pick(&req(), &s).unwrap()] += 1;

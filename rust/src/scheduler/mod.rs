@@ -6,6 +6,15 @@
 //! models, adds an SLO-violation penalty, and routes to the minimum-cost
 //! server. Baselines from §7.5 (MostIdle, FirstFit, Random) live in
 //! [`baselines`]; the global adapter-metadata store in [`registry`].
+//!
+//! Eligibility is judged per request, not per server: every
+//! [`ServerStats`] snapshot carries the server's loadable adapter set
+//! ([`AdapterSet`]) and its free KV headroom, and policies call
+//! [`ServerStats::eligible_for`] — a server that does not host the
+//! request's adapter, or cannot hold its prompt, is skipped. Both real
+//! engines ([`crate::server::InferenceServer`]) and the simulator
+//! produce these fields for real; the cluster front
+//! ([`crate::server::ClusterFront`]) routes against them.
 
 pub mod baselines;
 pub mod registry;
@@ -25,25 +34,96 @@ pub struct SchedRequest {
     pub prompt_len: usize,
 }
 
+/// The set of adapters a server can serve — resident or loadable from
+/// its local repository. Replaces the old hardcoded `eligible: bool`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub enum AdapterSet {
+    /// Any registered adapter (simulated instances model no repository).
+    #[default]
+    Any,
+    /// Exactly these adapter ids (sorted, deduplicated — build with
+    /// [`AdapterSet::only`]). An empty set means the server serves
+    /// nothing, e.g. a drained or routing-excluded backend.
+    Only(Vec<u64>),
+}
+
+impl AdapterSet {
+    /// A set of exactly `ids` (sorted + deduplicated here so
+    /// [`AdapterSet::contains`] can binary-search).
+    pub fn only(mut ids: Vec<u64>) -> AdapterSet {
+        ids.sort_unstable();
+        ids.dedup();
+        AdapterSet::Only(ids)
+    }
+
+    /// Can this set serve `adapter`?
+    pub fn contains(&self, adapter: u64) -> bool {
+        match self {
+            AdapterSet::Any => true,
+            AdapterSet::Only(ids) => ids.binary_search(&adapter).is_ok(),
+        }
+    }
+
+    /// The union of two sets (the cluster front's aggregate view).
+    pub fn union(&self, other: &AdapterSet) -> AdapterSet {
+        match (self, other) {
+            (AdapterSet::Any, _) | (_, AdapterSet::Any) => AdapterSet::Any,
+            (AdapterSet::Only(a), AdapterSet::Only(b)) => {
+                let mut ids = a.clone();
+                ids.extend(b);
+                AdapterSet::only(ids)
+            }
+        }
+    }
+}
+
 /// A snapshot of one inference server's load (what `GetStats` returns in
 /// Algorithm 1). Produced uniformly by every [`ServingFront`] backend
 /// (`ServingFront::stats`), real engine and simulator alike.
 ///
 /// [`ServingFront`]: crate::server::ServingFront
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServerStats {
     /// Ranks of requests currently in the running (decoding) batch.
     pub running_ranks: Vec<usize>,
     /// Ranks of requests queued for prefill.
     pub queued_ranks: Vec<usize>,
-    /// True if the server hosts this request's base model + adapter and
-    /// has GPU memory headroom.
-    pub eligible: bool,
+    /// Adapters this server hosts in its local repository (resident or
+    /// loadable). Policies must not route a request whose adapter is
+    /// outside this set.
+    pub adapters: AdapterSet,
+    /// Hard admission bound: the longest prompt this server can ever
+    /// accept (prefill bucket bound, capped by total KV pool capacity);
+    /// `usize::MAX` when unmodeled. Gates [`ServerStats::eligible_for`].
+    pub max_prompt_tokens: usize,
+    /// Instantaneous free KV headroom in tokens (free pages × page size
+    /// on the engine); `usize::MAX` when the backend does not model a
+    /// bounded pool. A soft pressure signal — pages free again as
+    /// requests complete, so this does not gate eligibility.
+    pub kv_free_tokens: usize,
     /// Tightest per-output-token SLO (seconds) among the server's live
     /// requests, if any carries one. The scheduler compares its
     /// predicted decode latency against this instead of the global
     /// default, so routing respects the thinnest headroom on board.
     pub tpot_slo: Option<f64>,
+    /// Decode-growth preemptions this server has performed (requests
+    /// evicted mid-decode because the KV pool ran dry). A load-shedding
+    /// signal: the rank-aware policy penalizes servers that preempt.
+    pub preemptions: usize,
+}
+
+impl Default for ServerStats {
+    fn default() -> Self {
+        ServerStats {
+            running_ranks: Vec::new(),
+            queued_ranks: Vec::new(),
+            adapters: AdapterSet::Any,
+            max_prompt_tokens: usize::MAX,
+            kv_free_tokens: usize::MAX,
+            tpot_slo: None,
+            preemptions: 0,
+        }
+    }
 }
 
 impl ServerStats {
@@ -51,12 +131,23 @@ impl ServerStats {
     pub fn total_requests(&self) -> usize {
         self.running_ranks.len() + self.queued_ranks.len()
     }
+
+    /// Does this server host `adapter` (resident or loadable)?
+    pub fn can_serve(&self, adapter: u64) -> bool {
+        self.adapters.contains(adapter)
+    }
+
+    /// Algorithm 1's eligibility check, computed for real: the server
+    /// hosts the request's adapter *and* can ever hold its prompt.
+    pub fn eligible_for(&self, req: &SchedRequest) -> bool {
+        self.can_serve(req.adapter) && self.max_prompt_tokens >= req.prompt_len
+    }
 }
 
 /// A scheduling policy: choose a server index for a request.
 pub trait Policy {
     /// Pick among `stats` (one entry per server); `None` if no server is
-    /// eligible.
+    /// eligible for this request ([`ServerStats::eligible_for`]).
     fn pick(&mut self, req: &SchedRequest, stats: &[ServerStats]) -> Option<usize>;
 
     /// Policy name for reports.
@@ -135,6 +226,15 @@ impl RankAwareScheduler {
         if dec_plus > slo {
             cost += self.cfg.penalty;
         }
+        // Load-shedding steering: a server that has preempted running
+        // requests (KV pool ran dry mid-decode) is memory-pressured in a
+        // way running_ranks alone doesn't show — bias routing away. The
+        // bias is in marginal-cost units (each past preemption counts
+        // like one extra resident request), not penalty units: the
+        // counter never decays, so a penalty-scale term would let one
+        // historical preemption dominate the score forever and herd all
+        // traffic onto the other servers.
+        cost += d_decode.max(0.0) * stats.preemptions as f64;
         cost
     }
 }
@@ -143,7 +243,7 @@ impl Policy for RankAwareScheduler {
     fn pick(&mut self, req: &SchedRequest, stats: &[ServerStats]) -> Option<usize> {
         let mut best: Option<(usize, f64)> = None;
         for (i, s) in stats.iter().enumerate() {
-            if !s.eligible {
+            if !s.eligible_for(req) {
                 continue;
             }
             // total_cost = cost · requests (Algorithm 1 line 8 weights the
@@ -165,20 +265,23 @@ impl Policy for RankAwareScheduler {
 }
 
 /// Construct a policy by name ("rank-aware", "most-idle", "first-fit",
-/// "random") with the given models/config/seed.
+/// "random") with the given models/config/seed. Unknown names are an
+/// error, not a panic — CLI surfaces report them to the user.
 pub fn policy_by_name(
     name: &str,
     pre: PerfModel,
     dec: PerfModel,
     cfg: RankAwareConfig,
     seed: u64,
-) -> Box<dyn Policy> {
+) -> anyhow::Result<Box<dyn Policy>> {
     match name {
-        "rank-aware" => Box::new(RankAwareScheduler::new(pre, dec, cfg)),
-        "most-idle" => Box::new(baselines::MostIdle),
-        "first-fit" => Box::new(baselines::FirstFit::new(dec, cfg.slo)),
-        "random" => Box::new(baselines::RandomPick::new(Rng::new(seed))),
-        other => panic!("unknown policy {other}"),
+        "rank-aware" => Ok(Box::new(RankAwareScheduler::new(pre, dec, cfg))),
+        "most-idle" => Ok(Box::new(baselines::MostIdle)),
+        "first-fit" => Ok(Box::new(baselines::FirstFit::new(dec, cfg.slo))),
+        "random" => Ok(Box::new(baselines::RandomPick::new(Rng::new(seed)))),
+        other => anyhow::bail!(
+            "unknown policy {other} (expected rank-aware|most-idle|first-fit|random)"
+        ),
     }
 }
 
@@ -204,15 +307,11 @@ mod tests {
         vec![
             ServerStats {
                 running_ranks: vec![32; 24],
-                queued_ranks: vec![],
-                eligible: true,
-                tpot_slo: None,
+                ..Default::default()
             },
             ServerStats {
                 running_ranks: vec![64; 16],
-                queued_ranks: vec![],
-                eligible: true,
-                tpot_slo: None,
+                ..Default::default()
             },
         ]
     }
@@ -262,7 +361,7 @@ mod tests {
     }
 
     #[test]
-    fn ineligible_servers_skipped() {
+    fn adapter_set_eligibility_skips_servers() {
         let (pre, dec) = models_bgmv();
         let mut sched = RankAwareScheduler::new(pre, dec, RankAwareConfig::default());
         let req = SchedRequest {
@@ -272,9 +371,30 @@ mod tests {
             prompt_len: 16,
         };
         let mut stats = fig5_stats();
-        stats[1].eligible = false;
+        // Server 1 hosts other adapters only — ineligible for adapter 1.
+        stats[1].adapters = AdapterSet::only(vec![7, 9]);
         assert_eq!(sched.pick(&req, &stats), Some(0));
-        stats[0].eligible = false;
+        // Server 0 drained (empty set): no eligible server remains.
+        stats[0].adapters = AdapterSet::only(vec![]);
+        assert_eq!(sched.pick(&req, &stats), None);
+    }
+
+    #[test]
+    fn kv_headroom_gates_eligibility() {
+        let (pre, dec) = models_bgmv();
+        let mut sched = RankAwareScheduler::new(pre, dec, RankAwareConfig::default());
+        let req = SchedRequest {
+            id: 1,
+            adapter: 1,
+            rank: 8,
+            prompt_len: 64,
+        };
+        let mut stats = fig5_stats();
+        // The otherwise-cheaper server can never hold the prompt.
+        stats[1].max_prompt_tokens = 32;
+        assert!(!stats[1].eligible_for(&req));
+        assert_eq!(sched.pick(&req, &stats), Some(0));
+        stats[0].max_prompt_tokens = 63;
         assert_eq!(sched.pick(&req, &stats), None);
     }
 
@@ -299,16 +419,9 @@ mod tests {
         // 24×r32 + new r64 violates (25·64 feature → ~45.6ms > 36ms).
         let crowded = ServerStats {
             running_ranks: vec![32; 24],
-            queued_ranks: vec![],
-            eligible: true,
-            tpot_slo: None,
+            ..Default::default()
         };
-        let idle = ServerStats {
-            running_ranks: vec![],
-            queued_ranks: vec![],
-            eligible: true,
-            tpot_slo: None,
-        };
+        let idle = ServerStats::default();
         assert!(sched.calc_cost(&req, &crowded) > 100.0);
         assert!(sched.calc_cost(&req, &idle) < 1.0);
     }
@@ -334,14 +447,44 @@ mod tests {
         // A lightly loaded server: within the 36 ms default SLO…
         let mut stats = ServerStats {
             running_ranks: vec![32; 8],
-            queued_ranks: vec![],
-            eligible: true,
-            tpot_slo: None,
+            ..Default::default()
         };
         assert!(sched.calc_cost(&req, &stats) < 1.0);
         // …but a resident request carrying a 25 ms SLO flips the penalty.
         stats.tpot_slo = Some(25e-3);
         assert!(sched.calc_cost(&req, &stats) > 100.0);
+    }
+
+    #[test]
+    fn preemptions_steer_routing_away() {
+        let (pre, dec) = models_bgmv();
+        let mut sched = RankAwareScheduler::new(
+            pre,
+            dec,
+            RankAwareConfig {
+                penalty: 10.0,
+                ..Default::default()
+            },
+        );
+        let req = SchedRequest {
+            id: 1,
+            adapter: 1,
+            rank: 32,
+            prompt_len: 16,
+        };
+        // Server 1 is emptier but has shed load by preempting: avoid it.
+        let stats = vec![
+            ServerStats {
+                running_ranks: vec![32; 4],
+                ..Default::default()
+            },
+            ServerStats {
+                running_ranks: vec![32; 2],
+                preemptions: 3,
+                ..Default::default()
+            },
+        ];
+        assert_eq!(sched.pick(&req, &stats), Some(0));
     }
 
     #[test]
@@ -370,17 +513,37 @@ mod tests {
         let stats = vec![
             ServerStats {
                 running_ranks: vec![32; 10],
-                queued_ranks: vec![],
-                eligible: true,
-                tpot_slo: None,
+                ..Default::default()
             },
             ServerStats {
                 running_ranks: vec![32; 2],
-                queued_ranks: vec![],
-                eligible: true,
-                tpot_slo: None,
+                ..Default::default()
             },
         ];
         assert_eq!(sched.pick(&req, &stats), Some(1));
+    }
+
+    #[test]
+    fn adapter_set_contains_and_union() {
+        let a = AdapterSet::only(vec![3, 1, 3]);
+        assert!(a.contains(1) && a.contains(3) && !a.contains(2));
+        assert!(AdapterSet::Any.contains(42));
+        assert_eq!(a.union(&AdapterSet::Any), AdapterSet::Any);
+        let b = AdapterSet::only(vec![2, 3]);
+        assert_eq!(a.union(&b), AdapterSet::only(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn policy_by_name_errors_on_unknown() {
+        let (pre, dec) = models_bgmv();
+        let err = policy_by_name("banana", pre.clone(), dec.clone(), RankAwareConfig::default(), 1)
+            .err()
+            .expect("unknown policy must error");
+        assert!(err.to_string().contains("banana"), "{err}");
+        for name in ["rank-aware", "most-idle", "first-fit", "random"] {
+            let p = policy_by_name(name, pre.clone(), dec.clone(), RankAwareConfig::default(), 1)
+                .expect("known policy");
+            assert_eq!(p.name(), name);
+        }
     }
 }

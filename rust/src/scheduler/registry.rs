@@ -83,6 +83,12 @@ impl GlobalRegistry {
             .unwrap_or_default()
     }
 
+    /// All registered adapter ids (sorted — `BTreeMap` order), e.g. for
+    /// building an [`crate::scheduler::AdapterSet`].
+    pub fn ids(&self) -> Vec<u64> {
+        self.inner.read().unwrap().adapters.keys().copied().collect()
+    }
+
     /// Number of registered adapters.
     pub fn len(&self) -> usize {
         self.inner.read().unwrap().adapters.len()
@@ -189,6 +195,7 @@ mod tests {
         reg.register(meta(1, 64));
         reg.register(meta(2, 8));
         assert_eq!(reg.len(), 2);
+        assert_eq!(reg.ids(), vec![1, 2]);
         assert_eq!(reg.get(1).unwrap().rank, 64);
         assert_eq!(reg.rank_of(1), Some(64));
         assert!(reg.get(99).is_none());

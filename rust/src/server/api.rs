@@ -157,6 +157,14 @@ pub enum FinishReason {
 pub enum RequestEvent {
     /// Validated and accepted into the serving queue.
     Admitted,
+    /// Placed on backend `server` by a routing front
+    /// ([`crate::server::ClusterFront`]) — non-terminal, emitted between
+    /// `Admitted` and `FirstToken` so clients observe placement.
+    /// Single-backend fronts never emit it.
+    Routed {
+        /// Index of the chosen backend within the routing front.
+        server: usize,
+    },
     /// Prefill completed; the first output token.
     FirstToken(i32),
     /// One decode-step output token.
@@ -231,6 +239,13 @@ impl EventChannel {
         );
         match &event {
             RequestEvent::Admitted => self.state = Some(LifecycleState::Queued),
+            RequestEvent::Routed { .. } => {
+                // Placement is metadata: record Queued only if nothing
+                // has run yet (re-routing must not regress a stream).
+                if self.state.is_none() {
+                    self.state = Some(LifecycleState::Queued);
+                }
+            }
             RequestEvent::FirstToken(t) | RequestEvent::Token(t) => {
                 self.tokens.push(*t);
                 self.state = Some(LifecycleState::Running);
@@ -408,16 +423,35 @@ where
     out
 }
 
+/// Carried by a re-queued (preempted) request: the tokens it had already
+/// generated and emitted when its KV pages were reclaimed. Re-admission
+/// re-prefills over `prompt + tokens[..n-1]` to rebuild exactly the KV
+/// state it held, emits nothing for the rebuilt prefix, and resumes
+/// decoding with `tokens[n-1]` as the next input — so the client-visible
+/// stream is bitwise unaffected by the preemption.
+#[derive(Debug, Clone)]
+pub struct ResumeState {
+    /// All tokens generated before preemption (never empty: a request
+    /// only becomes preemptible after its first token).
+    pub tokens: Vec<i32>,
+}
+
 /// A validated request as backends carry it internally: the wire fields
-/// of [`ServeRequest`] plus the backend-assigned id.
+/// of [`ServeRequest`] plus the backend-assigned id, and — for requests
+/// re-queued after a decode-growth preemption — the [`ResumeState`]
+/// needed to rebuild their KV without replaying the token stream.
 #[derive(Debug, Clone)]
 pub struct ActiveRequest {
     pub id: u64,
     pub adapter: u64,
+    /// The original user prompt (never includes generated tokens; resume
+    /// context is derived via [`ActiveRequest::context`]).
     pub prompt: Vec<i32>,
     pub sampling: SamplingParams,
     pub priority: Priority,
     pub slo: Option<SloSpec>,
+    /// `Some` when this entry re-admits a preempted request.
+    pub resume: Option<ResumeState>,
 }
 
 impl ActiveRequest {
@@ -430,13 +464,42 @@ impl ActiveRequest {
             sampling: req.sampling,
             priority: req.priority,
             slo: req.slo,
+            resume: None,
         }
+    }
+
+    /// The token sequence prefill must run over: the prompt, plus — when
+    /// resuming — every generated token except the last (the last is the
+    /// next decode input, exactly as it was at preemption time).
+    pub fn context(&self) -> Vec<i32> {
+        match &self.resume {
+            None => self.prompt.clone(),
+            Some(rs) => {
+                let mut ctx = Vec::with_capacity(self.context_len());
+                ctx.extend_from_slice(&self.prompt);
+                ctx.extend_from_slice(&rs.tokens[..rs.tokens.len() - 1]);
+                ctx
+            }
+        }
+    }
+
+    /// Length of [`ActiveRequest::context`] without materializing it —
+    /// what admission control sizes KV reservations by.
+    pub fn context_len(&self) -> usize {
+        self.prompt.len() + self.resume.as_ref().map_or(0, |rs| rs.tokens.len() - 1)
     }
 }
 
-/// The uniform serving surface every backend exposes — the PJRT engine
-/// and the simulator implement this trait, so `scheduler::Policy` and
-/// cluster drivers route against one interface.
+/// The uniform serving surface every backend exposes — the real engine
+/// ([`crate::server::InferenceServer`]), the simulator
+/// ([`crate::sim::front::SimFront`]), and the routing cluster front
+/// ([`crate::server::ClusterFront`]) all implement this trait, so
+/// `scheduler::Policy` and drivers route against one interface.
+///
+/// The trait is **object-safe**: cluster composition works over
+/// `Box<dyn ServingFront>` backends, and a `ClusterFront` is itself a
+/// `ServingFront`, so drivers, tests, and the CLI run unchanged against
+/// one engine or a whole routed cluster.
 pub trait ServingFront {
     /// Submit a request. Rejection surfaces as a terminal
     /// [`RequestEvent::Rejected`] on the returned handle, never as a
@@ -452,6 +515,12 @@ pub trait ServingFront {
 
     /// The scheduler's `GetStats` view of this backend's load.
     fn stats(&self) -> ServerStats;
+
+    /// Cold-start counters, for backends that track them (`None`
+    /// otherwise). Cluster fronts aggregate their backends' counters.
+    fn cold_start_stats(&self) -> Option<crate::server::metrics::ColdStartStats> {
+        None
+    }
 
     /// Drive iterations until idle.
     fn run_until_idle(&mut self) -> anyhow::Result<()> {
@@ -585,6 +654,37 @@ mod tests {
         let (_h2, chan2) = RequestHandle::new(2);
         chan2.lock().unwrap().push(RequestEvent::Cancelled);
         assert!(!chan2.lock().unwrap().try_request_cancel());
+    }
+
+    #[test]
+    fn routed_is_non_terminal_and_preserves_running_state() {
+        let (handle, chan) = RequestHandle::new(4);
+        assert!(!RequestEvent::Routed { server: 1 }.is_terminal());
+        {
+            let mut c = chan.lock().unwrap();
+            c.push(RequestEvent::Admitted);
+            c.push(RequestEvent::Routed { server: 1 });
+        }
+        assert_eq!(handle.state(), LifecycleState::Queued);
+        chan.lock().unwrap().push(RequestEvent::FirstToken(9));
+        // A (hypothetical) late placement note must not regress Running.
+        chan.lock().unwrap().push(RequestEvent::Routed { server: 0 });
+        assert_eq!(handle.state(), LifecycleState::Running);
+        assert_eq!(handle.tokens(), vec![9]);
+    }
+
+    #[test]
+    fn resume_context_rebuilds_prefix_without_last_token() {
+        let mut r = ActiveRequest::from_submit(1, ServeRequest::new(7, vec![10, 11, 12]));
+        assert_eq!(r.context(), vec![10, 11, 12]);
+        assert_eq!(r.context_len(), 3);
+        r.resume = Some(ResumeState {
+            tokens: vec![20, 21, 22],
+        });
+        // KV held prompt + first two generated tokens; 22 is the next
+        // decode input and stays out of the rebuilt prefix.
+        assert_eq!(r.context(), vec![10, 11, 12, 20, 21]);
+        assert_eq!(r.context_len(), 5);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use std::collections::VecDeque;
 
-use super::api::{ActiveRequest, SamplingParams, SloSpec};
+use super::api::{ActiveRequest, Priority, SamplingParams, SloSpec};
 
 /// A queued request with arrival metadata.
 #[derive(Debug, Clone)]
@@ -23,12 +23,17 @@ pub struct QueuedReq {
 pub struct RunningReq {
     pub id: u64,
     pub adapter: u64,
+    /// The original user prompt — kept so a decode-growth preemption can
+    /// re-queue the request with a rebuildable context.
+    pub prompt: Vec<i32>,
     /// Context length (prompt + generated so far).
     pub ctx: usize,
     /// Tokens generated so far.
     pub generated: usize,
     /// Sampling configuration (budget, stop tokens, top-k seed).
     pub sampling: SamplingParams,
+    /// Priority class (preserved across preemption/re-queue).
+    pub priority: Priority,
     /// Latency SLO, if the request carries one.
     pub slo: Option<SloSpec>,
     /// Last emitted token (input to the next decode step).
@@ -107,14 +112,16 @@ impl Batcher {
     }
 
     /// Decide the next iteration (Fig 2: arrivals preempt decode).
-    /// `can_admit(prompt_len)` is the KV manager's admission check.
+    /// `can_admit(context_len)` is the KV manager's admission check —
+    /// sized by the full prefill context, which for a re-queued
+    /// (preempted) request includes its already-generated tokens.
     pub fn next_action(&self, can_admit: impl Fn(usize) -> bool) -> NextAction {
         if !self.queue.is_empty() && self.running.len() < self.max_batch {
             // Admit from the front while capacity and KV pages allow.
             let room = (self.max_batch - self.running.len()).min(self.max_prefill_batch);
             let mut admit = 0;
             for q in self.queue.iter().take(room) {
-                if can_admit(q.req.prompt.len()) {
+                if can_admit(q.req.context_len()) {
                     admit += 1;
                 } else {
                     break; // FIFO: don't starve the head of the queue
@@ -177,6 +184,7 @@ mod tests {
             },
             priority: Priority::Standard,
             slo: None,
+            resume: None,
         }
     }
 
@@ -184,12 +192,14 @@ mod tests {
         RunningReq {
             id,
             adapter: id,
+            prompt: vec![1; ctx.saturating_sub(generated.saturating_sub(1))],
             ctx,
             generated,
             sampling: SamplingParams {
                 max_new_tokens: max,
                 ..Default::default()
             },
+            priority: Priority::Standard,
             slo: None,
             last_token: 0,
             stopped: false,
@@ -246,6 +256,21 @@ mod tests {
         // With a running batch it decodes instead of idling.
         b.start_running(running(9, 4, 0, 4));
         assert_eq!(b.next_action(|p| p <= 50), NextAction::Decode);
+    }
+
+    #[test]
+    fn admission_sizes_by_resume_context() {
+        use crate::server::api::ResumeState;
+        let mut b = Batcher::new(8, 4);
+        let mut r = req(1, 40);
+        // 21 generated tokens → context = 40 + 20 = 60 (last token is the
+        // next decode input, not part of the rebuilt prefix).
+        r.resume = Some(ResumeState {
+            tokens: vec![7; 21],
+        });
+        b.enqueue(r);
+        assert_eq!(b.next_action(|c| c <= 50), NextAction::Idle);
+        assert_eq!(b.next_action(|c| c <= 60), NextAction::Prefill { admit: 1 });
     }
 
     #[test]

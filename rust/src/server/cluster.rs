@@ -1,0 +1,782 @@
+//! [`ClusterFront`]: the rank-aware scheduler in front of real engines.
+//!
+//! The paper's §5 scheduler (Algorithm 1) routed only *simulated*
+//! instances; this module closes the loop for the distributed
+//! north-star: a `ClusterFront` owns N boxed [`ServingFront`] backends
+//! (real [`InferenceServer`]s, [`crate::sim::SimFront`]s, or a mix), a
+//! [`scheduler::Policy`], and the [`GlobalRegistry`] — and **itself
+//! implements `ServingFront`**, so drivers, tests, and the CLI run
+//! unchanged against one engine or a whole routed cluster.
+//!
+//! Request path:
+//!
+//! 1. `submit` validates the adapter against the registry, builds a
+//!    [`SchedRequest`] from the registered rank + prompt length, gathers
+//!    every backend's [`ServerStats`] (real eligibility data: local
+//!    adapter set, prompt capacity, KV headroom, preemptions), and asks
+//!    the policy to pick.
+//! 2. The chosen backend's own admission runs. If it rejects (KV bound,
+//!    missing adapter, shape), the front marks that backend ineligible
+//!    and **re-routes to the next-cheapest eligible server** instead of
+//!    surfacing a terminal `Rejected`; only when every candidate has
+//!    refused does the client see `Rejected`.
+//! 3. On placement the client's handle receives `Admitted` followed by
+//!    the non-terminal [`RequestEvent::Routed`]`{ server }`, then the
+//!    backend's token stream is relayed verbatim (the backend's own
+//!    `Admitted` is elided — the cluster already emitted one).
+//!
+//! `poll` advances every backend one iteration and relays events;
+//! `cancel` — and client-side [`RequestHandle::cancel`] — fan out to the
+//! owning backend; `stats` aggregates the per-server snapshots into one
+//! cluster-level view (rank lists concatenated, adapter sets unioned,
+//! preemptions summed) so a `ClusterFront` can itself sit behind
+//! another router.
+//!
+//! The [`synthetic`] submodule is the shared driver for the `cluster`
+//! CLI subcommand, `benches/cluster_slo.rs`, and the multi-engine
+//! integration tests: it builds N native-runtime engines with a
+//! heterogeneous-rank adapter population (mixed ranks, mixed SLOs, cold
+//! and warm adapters, partial placement) and measures per-policy TTFT /
+//! TPOT / SLO attainment / load balance.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::api::{
+    EventChannel, LifecycleState, RequestEvent, RequestHandle, ServeRequest, ServingFront,
+};
+use super::metrics::{ColdStartStats, MetricsRecorder};
+use crate::scheduler::registry::GlobalRegistry;
+use crate::scheduler::{AdapterSet, Policy, SchedRequest, ServerStats};
+
+/// Book-keeping for one routed, still-live request.
+struct LiveRoute {
+    /// Index of the owning backend.
+    server: usize,
+    /// The backend's handle for this request (its id is backend-local).
+    backend: RequestHandle,
+    /// The client-facing channel (cluster id space).
+    chan: Arc<Mutex<EventChannel>>,
+}
+
+/// A routed cluster of [`ServingFront`] backends behind the same trait.
+pub struct ClusterFront {
+    backends: Vec<Box<dyn ServingFront>>,
+    policy: Box<dyn Policy>,
+    registry: Arc<GlobalRegistry>,
+    metrics: MetricsRecorder,
+    next_id: u64,
+    live: BTreeMap<u64, LiveRoute>,
+    /// Requests routed to each backend (load-balance view).
+    routed: Vec<usize>,
+    /// Sum of routed adapter ranks per backend (rank-balance view).
+    routed_rank_sum: Vec<usize>,
+}
+
+impl ClusterFront {
+    /// A cluster over `backends`, routing with `policy` against adapter
+    /// metadata in `registry`. Backends must already have their local
+    /// adapters installed; the registry holds every adapter's rank (the
+    /// scheduler's `SchedRequest` input) and, optionally, placements.
+    pub fn new(
+        backends: Vec<Box<dyn ServingFront>>,
+        policy: Box<dyn Policy>,
+        registry: Arc<GlobalRegistry>,
+    ) -> ClusterFront {
+        let n = backends.len();
+        ClusterFront {
+            backends,
+            policy,
+            registry,
+            metrics: MetricsRecorder::new(),
+            next_id: 0,
+            live: BTreeMap::new(),
+            routed: vec![0; n],
+            routed_rank_sum: vec![0; n],
+        }
+    }
+
+    /// Number of backends.
+    pub fn len(&self) -> usize {
+        self.backends.len()
+    }
+
+    /// True when the cluster has no backends.
+    pub fn is_empty(&self) -> bool {
+        self.backends.is_empty()
+    }
+
+    /// The routing policy's name.
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// The shared adapter registry.
+    pub fn registry(&self) -> &Arc<GlobalRegistry> {
+        &self.registry
+    }
+
+    /// Cluster-level request metrics (TTFT/TPOT/SLO attainment), fed by
+    /// the relayed event stream.
+    pub fn metrics(&self) -> &MetricsRecorder {
+        &self.metrics
+    }
+
+    /// Requests routed to each backend so far.
+    pub fn routed(&self) -> &[usize] {
+        &self.routed
+    }
+
+    /// Sum of routed adapter ranks per backend — the balance the
+    /// rank-aware policy optimizes.
+    pub fn routed_rank_sum(&self) -> &[usize] {
+        &self.routed_rank_sum
+    }
+
+    /// One [`ServerStats`] snapshot per backend, in backend order.
+    pub fn per_server_stats(&self) -> Vec<ServerStats> {
+        self.backends.iter().map(|b| b.stats()).collect()
+    }
+
+    /// Relay pending backend events into the client-facing channels and
+    /// forward client-side cancellations (`handle.cancel()`) to the
+    /// owning backends. Terminal events retire the route.
+    fn pump(&mut self) {
+        let mut done: Vec<u64> = Vec::new();
+        for (&id, route) in self.live.iter_mut() {
+            {
+                let chan = route.chan.lock().unwrap();
+                if chan.cancel_requested() && !chan.is_terminal() {
+                    self.backends[route.server].cancel(route.backend.id());
+                }
+            }
+            while let Some(ev) = route.backend.poll_event() {
+                match &ev {
+                    // The cluster emitted its own Admitted at placement.
+                    RequestEvent::Admitted => continue,
+                    RequestEvent::FirstToken(_) | RequestEvent::Token(_) => {
+                        self.metrics.token(id);
+                    }
+                    RequestEvent::Finished(_) => {
+                        self.metrics.finished(id);
+                        done.push(id);
+                    }
+                    RequestEvent::Cancelled => {
+                        self.metrics.cancelled(id);
+                        done.push(id);
+                    }
+                    RequestEvent::Rejected(_) => {
+                        // Post-admission rejections don't exist today
+                        // (backends reject synchronously at submit), but
+                        // relay defensively rather than dropping one —
+                        // and book it as a rejection, not a cancel.
+                        self.metrics.rejected(id);
+                        done.push(id);
+                    }
+                    RequestEvent::Routed { .. } => {}
+                }
+                route.chan.lock().unwrap().push(ev);
+            }
+        }
+        for id in done {
+            self.live.remove(&id);
+        }
+    }
+}
+
+impl ServingFront for ClusterFront {
+    /// Route and submit. See the module docs for the re-routing
+    /// semantics; every request still terminates in exactly one terminal
+    /// event on the returned handle.
+    fn submit(&mut self, req: ServeRequest) -> RequestHandle {
+        let id = self.next_id;
+        self.next_id += 1;
+        let (handle, chan) = RequestHandle::new(id);
+        let Some(rank) = self.registry.rank_of(req.adapter) else {
+            chan.lock().unwrap().push(RequestEvent::Rejected(format!(
+                "adapter {} not registered",
+                req.adapter
+            )));
+            return handle;
+        };
+        let sreq = SchedRequest {
+            id,
+            adapter: req.adapter,
+            rank,
+            prompt_len: req.prompt.len(),
+        };
+        let mut stats: Vec<ServerStats> =
+            self.backends.iter().map(|b| b.stats()).collect();
+        let mut attempted = vec![false; self.backends.len()];
+        let mut last_reason: Option<String> = None;
+        loop {
+            let Some(target) = self.policy.pick(&sreq, &stats) else {
+                let reason = match last_reason {
+                    Some(r) => format!("no eligible server (last refusal: {r})"),
+                    None => "no eligible server".to_string(),
+                };
+                chan.lock().unwrap().push(RequestEvent::Rejected(reason));
+                return handle;
+            };
+            if std::mem::replace(&mut attempted[target], true) {
+                // A policy ignoring eligibility could loop forever on a
+                // refusing server — treat a re-pick as exhaustion.
+                chan.lock().unwrap().push(RequestEvent::Rejected(format!(
+                    "policy re-picked refusing server {target}"
+                )));
+                return handle;
+            }
+            let backend = self.backends[target].submit(req.clone());
+            if backend.state() == LifecycleState::Rejected {
+                // Backend admission refused (synchronously): remember
+                // the reason, exclude the server, re-route.
+                for ev in backend.drain_events() {
+                    if let RequestEvent::Rejected(r) = ev {
+                        last_reason = Some(format!("server {target}: {r}"));
+                    }
+                }
+                stats[target].adapters = AdapterSet::only(vec![]);
+                continue;
+            }
+            self.metrics.arrived(id, req.slo);
+            self.routed[target] += 1;
+            self.routed_rank_sum[target] += rank;
+            {
+                let mut c = chan.lock().unwrap();
+                c.push(RequestEvent::Admitted);
+                c.push(RequestEvent::Routed { server: target });
+            }
+            self.live.insert(
+                id,
+                LiveRoute {
+                    server: target,
+                    backend,
+                    chan,
+                },
+            );
+            return handle;
+        }
+    }
+
+    /// Advance every backend one iteration and relay events. Returns
+    /// `false` only when the whole cluster is idle.
+    fn poll(&mut self) -> Result<bool> {
+        // Forward pending client cancellations first so backends reap
+        // them at this iteration boundary.
+        self.pump();
+        let mut any = false;
+        for b in self.backends.iter_mut() {
+            any |= b.poll()?;
+        }
+        self.pump();
+        Ok(any)
+    }
+
+    /// Fan a cancellation out to the owning backend. The terminal
+    /// `Cancelled` is relayed at the next poll boundary.
+    fn cancel(&mut self, id: u64) -> bool {
+        let Some(route) = self.live.get(&id) else {
+            return false;
+        };
+        if route.chan.lock().unwrap().is_terminal() {
+            return false;
+        }
+        self.backends[route.server].cancel(route.backend.id())
+    }
+
+    /// The cluster as one server: rank lists concatenated, adapter sets
+    /// unioned, prompt capacity and KV headroom at the per-backend
+    /// maximum (a request needs *one* server that fits it), the
+    /// tightest onboard SLO, preemptions summed.
+    fn stats(&self) -> ServerStats {
+        let mut agg = ServerStats {
+            adapters: AdapterSet::only(vec![]),
+            max_prompt_tokens: 0,
+            kv_free_tokens: 0,
+            ..Default::default()
+        };
+        for s in self.per_server_stats() {
+            agg.running_ranks.extend(&s.running_ranks);
+            agg.queued_ranks.extend(&s.queued_ranks);
+            agg.adapters = agg.adapters.union(&s.adapters);
+            agg.max_prompt_tokens = agg.max_prompt_tokens.max(s.max_prompt_tokens);
+            agg.kv_free_tokens = agg.kv_free_tokens.max(s.kv_free_tokens);
+            agg.tpot_slo = match (agg.tpot_slo, s.tpot_slo) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+            agg.preemptions += s.preemptions;
+        }
+        agg
+    }
+
+    /// Aggregate cold-start counters across backends that report them.
+    fn cold_start_stats(&self) -> Option<ColdStartStats> {
+        let mut total = ColdStartStats::default();
+        let mut any = false;
+        for b in &self.backends {
+            if let Some(s) = b.cold_start_stats() {
+                any = true;
+                total.cold_admits += s.cold_admits;
+                total.warm_admits += s.warm_admits;
+                total.cpu_assisted += s.cpu_assisted;
+                total.handoffs += s.handoffs;
+                total.deferred_collisions += s.deferred_collisions;
+                total.assist_decode_s += s.assist_decode_s;
+            }
+        }
+        any.then_some(total)
+    }
+}
+
+/// Shared synthetic-workload driver: N native-runtime engines with a
+/// heterogeneous-rank adapter population under one routing policy. Used
+/// by `caraserve cluster`, `benches/cluster_slo.rs`, and the
+/// multi-engine integration tests.
+pub mod synthetic {
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    use anyhow::Result;
+
+    use super::{ClusterFront, ServingFront};
+    use crate::config::GpuSpec;
+    use crate::model::{LlamaConfig, LoraSpec};
+    use crate::perfmodel::{profiler, KernelKind};
+    use crate::runtime::{NativeConfig, NativeRuntime};
+    use crate::scheduler::registry::{AdapterMeta, GlobalRegistry};
+    use crate::scheduler::{policy_by_name, Policy, RankAwareConfig};
+    use crate::server::api::{LifecycleState, Priority, ServeRequest};
+    use crate::server::engine::{ColdStartMode, EngineConfig, InferenceServer};
+    use crate::server::metrics::ColdStartStats;
+    use crate::sim::GpuModel;
+    use crate::util::rng::Rng;
+    use crate::util::stats::Summary;
+
+    /// The heterogeneous rank population (Fig 5 / §7.5 style).
+    pub const RANKS: [usize; 4] = [8, 16, 32, 64];
+
+    /// Rank of adapter `a` in the synthetic population.
+    pub fn rank_of(adapter: u64) -> usize {
+        RANKS[(adapter % RANKS.len() as u64) as usize]
+    }
+
+    /// Is adapter `a` hosted on server `s`? Each adapter lives on two of
+    /// the N servers (all of them when N ≤ 2), so `can_serve` routing is
+    /// exercised for real on larger clusters.
+    pub fn hosts(instances: usize, adapter: u64, server: usize) -> bool {
+        instances <= 2
+            || server == (adapter % instances as u64) as usize
+            || server == ((adapter + 1) % instances as u64) as usize
+    }
+
+    /// Knobs for one synthetic cluster run.
+    #[derive(Debug, Clone)]
+    pub struct SyntheticConfig {
+        /// Native engines in the cluster.
+        pub instances: usize,
+        /// Requests to submit.
+        pub requests: usize,
+        /// Adapter population (8 device slots per engine ⇒ more adapters
+        /// than slots keeps cold starts live).
+        pub adapters: usize,
+        /// Workload seed (adapter choice, lengths, SLO tiers).
+        pub seed: u64,
+        /// Forward-pass threads per engine.
+        pub threads: usize,
+        /// Shared-memory CPU-LoRA workers per engine (0 = none).
+        pub cpu_workers: usize,
+        /// Cold-start mode for every engine.
+        pub cold_start: ColdStartMode,
+        /// KV pool pages per engine.
+        pub kv_pages: usize,
+        /// Cluster iterations driven between arrivals (open-loop-ish
+        /// pacing: smaller ⇒ deeper queues ⇒ more routing pressure).
+        pub polls_per_arrival: usize,
+    }
+
+    impl Default for SyntheticConfig {
+        fn default() -> Self {
+            SyntheticConfig {
+                instances: 2,
+                requests: 48,
+                adapters: 24,
+                seed: 1,
+                threads: 1,
+                cpu_workers: 0,
+                cold_start: ColdStartMode::CaraServe,
+                kv_pages: 256,
+                polls_per_arrival: 2,
+            }
+        }
+    }
+
+    /// Per-policy results of one synthetic run.
+    #[derive(Debug, Clone)]
+    pub struct RunReport {
+        pub policy: String,
+        pub requests: usize,
+        pub finished: usize,
+        pub rejected: usize,
+        /// TTFT summary (seconds).
+        pub ttft: Option<Summary>,
+        /// Decode-only TPOT summary (seconds).
+        pub tpot: Option<Summary>,
+        /// Fraction of SLO-carrying requests meeting both targets.
+        pub slo_attainment: Option<f64>,
+        /// Requests routed per server.
+        pub routed: Vec<usize>,
+        /// Routed rank-sum per server (the rank balance).
+        pub routed_rank_sum: Vec<usize>,
+        /// Aggregated cold-start counters.
+        pub cold: ColdStartStats,
+        /// Total decode-growth preemptions across servers.
+        pub preemptions: usize,
+        /// Wall-clock of the whole run (seconds).
+        pub wall_s: f64,
+    }
+
+    /// Fit §5 performance models (BGMV, Llama2-7B/A10 profile) and build
+    /// the named policy. The absolute latency scale is the profiled GPU
+    /// model's, not the tiny native runtime's — only the *relative*
+    /// cross-server cost ordering steers routing, and that is
+    /// rank-faithful on both.
+    pub fn policy(name: &str, seed: u64) -> Result<Box<dyn Policy>> {
+        let gm = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let plan = profiler::ProfilePlan::default();
+        let dec = profiler::calibrate(KernelKind::Bgmv, &plan, |ranks| {
+            gm.decode_iter(&vec![160; ranks.len()])
+                + gm.lora_decode_overhead(KernelKind::Bgmv, ranks)
+        })
+        .expect("decode perf-model calibration");
+        let pre = profiler::calibrate(KernelKind::Bgmv, &plan, |ranks| {
+            gm.prefill(ranks.len() * 28)
+        })
+        .expect("prefill perf-model calibration");
+        let slo = 1.5 * gm.decode_iter(&[160]);
+        policy_by_name(
+            name,
+            pre,
+            dec,
+            RankAwareConfig {
+                slo,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    /// Build the cluster: N native engines with partial adapter
+    /// placement, a shared registry carrying every adapter's rank, and
+    /// the given policy in front.
+    pub fn build(cfg: &SyntheticConfig, policy: Box<dyn Policy>) -> Result<ClusterFront> {
+        let registry = Arc::new(GlobalRegistry::new());
+        let mut backends: Vec<Box<dyn ServingFront>> = Vec::with_capacity(cfg.instances);
+        for s in 0..cfg.instances {
+            let native = NativeRuntime::new(NativeConfig {
+                threads: cfg.threads.max(1),
+                ..NativeConfig::tiny()
+            });
+            let mut server = InferenceServer::new(
+                native,
+                EngineConfig {
+                    cold_start: cfg.cold_start,
+                    kv_pages: cfg.kv_pages,
+                    ..Default::default()
+                },
+            )?;
+            for a in 0..cfg.adapters as u64 {
+                if hosts(cfg.instances, a, s) {
+                    server.install_adapter(LoraSpec::standard(a, rank_of(a), "tiny"));
+                }
+            }
+            if cfg.cpu_workers > 0
+                && cfg.cold_start == ColdStartMode::CaraServe
+                && server.runtime.supports_cpu_assist()
+            {
+                server.enable_cpu_assist(cfg.cpu_workers)?;
+            }
+            backends.push(Box::new(server));
+        }
+        for a in 0..cfg.adapters as u64 {
+            registry.register(AdapterMeta {
+                id: a,
+                rank: rank_of(a),
+                base_model: "tiny".into(),
+                weights_path: String::new(),
+            });
+            for s in 0..cfg.instances {
+                if hosts(cfg.instances, a, s) {
+                    registry.place(a, s);
+                }
+            }
+        }
+        Ok(ClusterFront::new(backends, policy, registry))
+    }
+
+    /// The heterogeneous workload: skewed adapter popularity (60% of
+    /// traffic on the hottest quarter keeps warm hits and cold starts
+    /// both live), mixed prompt/output lengths, and three SLO tiers
+    /// spanning interactive to batch.
+    pub fn workload(cfg: &SyntheticConfig) -> Vec<ServeRequest> {
+        let mut rng = Rng::new(cfg.seed);
+        let hot = (cfg.adapters / 4).max(1);
+        (0..cfg.requests)
+            .map(|_| {
+                let adapter = if rng.chance(0.6) {
+                    rng.range(0, hot) as u64
+                } else {
+                    rng.range(0, cfg.adapters) as u64
+                };
+                let prompt: Vec<i32> = (0..rng.range(8, 32))
+                    .map(|_| rng.range(0, 1024) as i32)
+                    .collect();
+                let req = ServeRequest::new(adapter, prompt)
+                    .max_new_tokens(rng.range(8, 24));
+                match rng.range(0, 3) {
+                    0 => req.slo(150.0, 40.0).priority(Priority::Interactive),
+                    1 => req.slo(300.0, 80.0),
+                    _ => req.slo(600.0, 160.0).priority(Priority::Batch),
+                }
+            })
+            .collect()
+    }
+
+    /// Drive one policy over the synthetic workload end to end and
+    /// report cluster metrics.
+    pub fn run(policy_name: &str, cfg: &SyntheticConfig) -> Result<RunReport> {
+        let mut cluster = build(cfg, policy(policy_name, cfg.seed)?)?;
+        let reqs = workload(cfg);
+        let total = reqs.len();
+        let t0 = Instant::now();
+        let mut handles = Vec::with_capacity(total);
+        for req in reqs {
+            handles.push(cluster.submit(req));
+            for _ in 0..cfg.polls_per_arrival {
+                cluster.poll()?;
+            }
+        }
+        cluster.run_until_idle()?;
+        let wall_s = t0.elapsed().as_secs_f64();
+
+        let finished = handles
+            .iter()
+            .filter(|h| h.state() == LifecycleState::Finished)
+            .count();
+        let rejected = handles
+            .iter()
+            .filter(|h| h.state() == LifecycleState::Rejected)
+            .count();
+        // One reconciliation for every caller (CLI, bench, tests): the
+        // harness never cancels, so each submission must end Finished or
+        // Rejected — anything else is request loss.
+        anyhow::ensure!(
+            finished + rejected == total,
+            "request loss: {finished} finished + {rejected} rejected != {total} submitted"
+        );
+        let per_server = cluster.per_server_stats();
+        Ok(RunReport {
+            policy: policy_name.to_string(),
+            requests: total,
+            finished,
+            rejected,
+            ttft: cluster.metrics().summary("ttft"),
+            tpot: cluster.metrics().summary("tpot"),
+            slo_attainment: cluster.metrics().slo_attainment(),
+            routed: cluster.routed().to_vec(),
+            routed_rank_sum: cluster.routed_rank_sum().to_vec(),
+            cold: cluster.cold_start_stats().unwrap_or_default(),
+            preemptions: per_server.iter().map(|s| s.preemptions).sum(),
+            wall_s,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+    use crate::model::LlamaConfig;
+    use crate::scheduler::baselines::MostIdle;
+    use crate::scheduler::registry::AdapterMeta;
+    use crate::server::api::{FinishReason, LifecycleState};
+    use crate::sim::{GpuModel, ServingMode, SimFront, SimInstance};
+
+    fn sim_backend(max_prompt: usize, adapters: &[(u64, usize)]) -> SimFront {
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let inst = SimInstance::new(0, model, ServingMode::CaraServe, 32, 8, 64);
+        let mut front = SimFront::new(inst, max_prompt);
+        for &(id, rank) in adapters {
+            front.install_adapter(id, rank);
+        }
+        front
+    }
+
+    fn registry_of(adapters: &[(u64, usize)]) -> Arc<GlobalRegistry> {
+        let reg = GlobalRegistry::new();
+        for &(id, rank) in adapters {
+            reg.register(AdapterMeta {
+                id,
+                rank,
+                base_model: "sim".into(),
+                weights_path: String::new(),
+            });
+        }
+        Arc::new(reg)
+    }
+
+    fn cluster_of(backends: Vec<Box<dyn ServingFront>>, adapters: &[(u64, usize)]) -> ClusterFront {
+        ClusterFront::new(backends, Box::new(MostIdle), registry_of(adapters))
+    }
+
+    #[test]
+    fn cluster_of_one_matches_bare_backend() {
+        let adapters: Vec<(u64, usize)> = (0..4).map(|id| (id, 64)).collect();
+        let reqs = || {
+            (0..6).map(|i| {
+                ServeRequest::new(i % 4, vec![1; 8 + i as usize]).max_new_tokens(3 + i as usize)
+            })
+        };
+        let mut bare = sim_backend(64, &adapters);
+        let bare_handles: Vec<_> = reqs().map(|r| bare.submit(r)).collect();
+        bare.run_until_idle().unwrap();
+
+        let mut cluster = cluster_of(
+            vec![Box::new(sim_backend(64, &adapters))],
+            &adapters,
+        );
+        let cluster_handles: Vec<_> = reqs().map(|r| cluster.submit(r)).collect();
+        cluster.run_until_idle().unwrap();
+
+        for (b, c) in bare_handles.iter().zip(&cluster_handles) {
+            assert_eq!(c.state(), LifecycleState::Finished);
+            assert_eq!(b.tokens(), c.tokens(), "cluster-of-1 changed the stream");
+            let events = c.drain_events();
+            assert_eq!(events[0], RequestEvent::Admitted);
+            assert_eq!(events[1], RequestEvent::Routed { server: 0 });
+            assert!(matches!(events[2], RequestEvent::FirstToken(_)));
+            assert_eq!(events.iter().filter(|e| e.is_terminal()).count(), 1);
+            assert_eq!(
+                events.last(),
+                Some(&RequestEvent::Finished(FinishReason::Length))
+            );
+        }
+        assert_eq!(cluster.metrics().records().len(), 6);
+    }
+
+    #[test]
+    fn routes_by_adapter_placement() {
+        // Adapter 7 lives only on backend 1; eligibility must steer there
+        // even though backend 0 is equally idle.
+        let a0: Vec<(u64, usize)> = vec![(1, 8)];
+        let a1: Vec<(u64, usize)> = vec![(1, 8), (7, 64)];
+        let all: Vec<(u64, usize)> = vec![(1, 8), (7, 64)];
+        let mut cluster = cluster_of(
+            vec![Box::new(sim_backend(64, &a0)), Box::new(sim_backend(64, &a1))],
+            &all,
+        );
+        let h = cluster.submit(ServeRequest::new(7, vec![1; 8]).max_new_tokens(2));
+        cluster.run_until_idle().unwrap();
+        assert_eq!(h.state(), LifecycleState::Finished);
+        assert!(h
+            .drain_events()
+            .contains(&RequestEvent::Routed { server: 1 }));
+        assert_eq!(cluster.routed(), &[0, 1]);
+        assert_eq!(cluster.routed_rank_sum(), &[0, 64]);
+    }
+
+    #[test]
+    fn reroutes_on_backend_rejection() {
+        // Backend 0 claims eligibility but its KV bound refuses the
+        // request at submit; the front must re-route to backend 1, not
+        // surface Rejected.
+        let adapters: Vec<(u64, usize)> = vec![(1, 8)];
+        let tight = sim_backend(64, &adapters).with_kv_capacity(16);
+        let roomy = sim_backend(64, &adapters).with_kv_capacity(60);
+        let mut cluster =
+            cluster_of(vec![Box::new(tight), Box::new(roomy)], &adapters);
+        // 8 prompt + 40 output > 16 + 1 on backend 0; fits on backend 1.
+        let h = cluster.submit(ServeRequest::new(1, vec![1; 8]).max_new_tokens(40));
+        cluster.run_until_idle().unwrap();
+        assert_eq!(h.state(), LifecycleState::Finished);
+        assert_eq!(h.tokens().len(), 40);
+        let events = h.drain_events();
+        assert!(events.contains(&RequestEvent::Routed { server: 1 }));
+        assert_eq!(events.iter().filter(|e| e.is_terminal()).count(), 1);
+
+        // When every backend refuses, the client sees one terminal
+        // Rejected carrying the last refusal.
+        let h = cluster.submit(ServeRequest::new(1, vec![1; 8]).max_new_tokens(100));
+        assert_eq!(h.state(), LifecycleState::Rejected);
+        match h.drain_events().as_slice() {
+            [RequestEvent::Rejected(reason)] => {
+                assert!(reason.contains("no eligible server"), "{reason}");
+                assert!(reason.contains("last refusal"), "{reason}");
+            }
+            other => panic!("expected lone Rejected, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unregistered_adapter_rejected_at_the_front() {
+        let adapters: Vec<(u64, usize)> = vec![(1, 8)];
+        let mut cluster =
+            cluster_of(vec![Box::new(sim_backend(64, &adapters))], &adapters);
+        let h = cluster.submit(ServeRequest::new(99, vec![1; 8]));
+        assert_eq!(h.state(), LifecycleState::Rejected);
+        assert!(!cluster.poll().unwrap());
+    }
+
+    #[test]
+    fn cancel_fans_out_to_the_owning_backend() {
+        let adapters: Vec<(u64, usize)> = (0..2).map(|id| (id, 32)).collect();
+        let mut cluster = cluster_of(
+            vec![
+                Box::new(sim_backend(64, &adapters)),
+                Box::new(sim_backend(64, &adapters)),
+            ],
+            &adapters,
+        );
+        // Queued cancel through the front.
+        let queued = cluster.submit(ServeRequest::new(0, vec![1; 8]).max_new_tokens(30));
+        assert!(cluster.cancel(queued.id()));
+        // Mid-decode cancel through the client handle.
+        let running = cluster.submit(ServeRequest::new(1, vec![1; 8]).max_new_tokens(30));
+        for _ in 0..3 {
+            cluster.poll().unwrap();
+        }
+        running.cancel();
+        cluster.run_until_idle().unwrap();
+        assert_eq!(queued.state(), LifecycleState::Cancelled);
+        assert_eq!(running.state(), LifecycleState::Cancelled);
+        assert!(running.tokens().len() < 30);
+        assert!(!cluster.cancel(queued.id()), "dead ids report false");
+        assert!(!cluster.cancel(12345));
+    }
+
+    #[test]
+    fn stats_aggregate_across_backends() {
+        let a0: Vec<(u64, usize)> = vec![(1, 8)];
+        let a1: Vec<(u64, usize)> = vec![(2, 64)];
+        let all: Vec<(u64, usize)> = vec![(1, 8), (2, 64)];
+        let mut cluster = cluster_of(
+            vec![Box::new(sim_backend(32, &a0)), Box::new(sim_backend(64, &a1))],
+            &all,
+        );
+        let _h1 = cluster.submit(ServeRequest::new(1, vec![1; 8]).max_new_tokens(4).slo(200.0, 50.0));
+        let _h2 = cluster.submit(ServeRequest::new(2, vec![1; 8]).max_new_tokens(4).slo(200.0, 30.0));
+        let s = cluster.stats();
+        assert_eq!(s.total_requests(), 2);
+        assert!(s.can_serve(1) && s.can_serve(2) && !s.can_serve(3));
+        assert_eq!(s.max_prompt_tokens, 64);
+        assert!((s.tpot_slo.unwrap() - 0.030).abs() < 1e-12);
+        cluster.run_until_idle().unwrap();
+        assert_eq!(cluster.stats().total_requests(), 0);
+        // Both sim backends report cold-start counters; the aggregate
+        // sees both cold admits.
+        let cs = cluster.cold_start_stats().unwrap();
+        assert_eq!(cs.cold_admits, 2);
+    }
+}

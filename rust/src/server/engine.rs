@@ -35,17 +35,17 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::api::{
-    ActiveRequest, EventChannel, FinishReason, RequestEvent, RequestHandle, SamplingParams,
-    ServeRequest, ServingFront,
+    ActiveRequest, EventChannel, FinishReason, RequestEvent, RequestHandle, ResumeState,
+    SamplingParams, ServeRequest, ServingFront,
 };
 use super::batcher::{Batcher, NextAction, RunningReq};
-use super::kvcache::KvCacheManager;
-use super::metrics::{MetricsRecorder, TtftBreakdown};
+use super::kvcache::{KvCacheManager, KvError};
+use super::metrics::{ColdStartStats, MetricsRecorder, TtftBreakdown};
 use crate::adapters::{AsyncLoader, DeviceSlotCache, HostRepository, LoaderModel};
 use crate::cpu_lora::{AdapterTable, CoreProfile, CpuLoraEngine};
 use crate::model::{LoraSpec, TargetMatrix};
 use crate::runtime::{ExternalLora, KvWrite, RowLora, Runtime};
-use crate::scheduler::ServerStats;
+use crate::scheduler::{AdapterSet, ServerStats};
 use crate::util::rng::Rng;
 
 /// Cold-start handling mode (§7.1 baselines).
@@ -310,8 +310,10 @@ impl InferenceServer {
         self.batcher.load() > 0
     }
 
-    /// The scheduler's `GetStats` view: running/queued adapter ranks and
-    /// the tightest per-token SLO among live requests.
+    /// The scheduler's `GetStats` view: running/queued adapter ranks,
+    /// the real eligibility data (locally installed adapter set, prompt
+    /// capacity, free KV headroom, preemption count), and the tightest
+    /// per-token SLO among live requests.
     pub fn stats(&self) -> ServerStats {
         let rank = |adapter: u64| self.repo.get(adapter).map_or(0, |s| s.rank);
         let tpot_slo = super::api::tightest_tpot_slo(
@@ -334,8 +336,13 @@ impl InferenceServer {
                 .iter()
                 .map(|q| rank(q.req.adapter))
                 .collect(),
-            eligible: true,
+            adapters: AdapterSet::only(self.repo.ids()),
+            max_prompt_tokens: self
+                .max_prompt
+                .min(self.kv.total_pages() * self.config.page_size),
+            kv_free_tokens: self.kv.free_pages() * self.config.page_size,
             tpot_slo,
+            preemptions: self.metrics.preemptions(),
         }
     }
 
@@ -563,6 +570,10 @@ impl InferenceServer {
         let mut windows: Vec<(f64, bool)> = Vec::with_capacity(admits.len());
         for q in &admits {
             let adapter = q.req.adapter;
+            // A re-admitted (preempted) request goes through the same
+            // slot/load mechanics but was already counted cold or warm at
+            // its first admission — don't count it twice.
+            let resumed = q.req.resume.is_some();
             // Once admitted, a previously deferred request may be counted
             // again if it ever re-collides (it can't, but keep the set
             // bounded by currently blocked requests either way).
@@ -580,7 +591,9 @@ impl InferenceServer {
                     if acq.cold {
                         self.runtime.install_slot(acq.slot, self.table.get(adapter));
                     }
-                    self.metrics.warm_admit();
+                    if !resumed {
+                        self.metrics.warm_admit();
+                    }
                     plans.push(RowPlan::Resident);
                     windows.push((0.0, false));
                 }
@@ -589,10 +602,14 @@ impl InferenceServer {
                         let w = self.load_window(adapter)?;
                         modeled_load += w;
                         self.runtime.install_slot(acq.slot, self.table.get(adapter));
-                        self.metrics.cold_admit(false);
+                        if !resumed {
+                            self.metrics.cold_admit(false);
+                        }
                         windows.push((w, true));
                     } else {
-                        self.metrics.warm_admit();
+                        if !resumed {
+                            self.metrics.warm_admit();
+                        }
                         windows.push((0.0, false));
                     }
                     plans.push(RowPlan::Resident);
@@ -613,7 +630,9 @@ impl InferenceServer {
                             if !loading {
                                 self.loads.begin(adapter, Duration::from_secs_f64(w));
                             }
-                            self.metrics.cold_admit(true);
+                            if !resumed {
+                                self.metrics.cold_admit(true);
+                            }
                             plans.push(RowPlan::Assist);
                         } else {
                             // Modeled fallback: overlap the window with
@@ -621,12 +640,16 @@ impl InferenceServer {
                             modeled_load += w;
                             self.runtime
                                 .install_slot(acq.slot, self.table.get(adapter));
-                            self.metrics.cold_admit(false);
+                            if !resumed {
+                                self.metrics.cold_admit(false);
+                            }
                             plans.push(RowPlan::Resident);
                         }
                         windows.push((w, true));
                     } else {
-                        self.metrics.warm_admit();
+                        if !resumed {
+                            self.metrics.warm_admit();
+                        }
                         plans.push(RowPlan::Resident);
                         windows.push((0.0, false));
                     }
@@ -634,11 +657,13 @@ impl InferenceServer {
             }
         }
 
-        // Build bucket inputs.
+        // Build bucket inputs. The prefill context is the prompt for a
+        // fresh admit and prompt + replayed tokens for a resumed one
+        // (decode-growth preemption rebuilds KV here, silently).
         let idx: Vec<i32> = slot_of.iter().map(|&s| s as i32).collect();
         let ids: Vec<u64> = admits.iter().map(|q| q.req.id).collect();
-        let tokens: Vec<Vec<i32>> = admits.iter().map(|q| q.req.prompt.clone()).collect();
-        let lens: Vec<i32> = admits.iter().map(|q| q.req.prompt.len() as i32).collect();
+        let tokens: Vec<Vec<i32>> = admits.iter().map(|q| q.req.context()).collect();
+        let lens: Vec<i32> = tokens.iter().map(|t| t.len() as i32).collect();
 
         // Reserve KV pages up front: prefill streams each row's K/V
         // straight into its pages through a writer handle (zero-copy on
@@ -646,7 +671,7 @@ impl InferenceServer {
         // through the same writers). A mid-batch reservation failure
         // rolls the whole batch back before any compute runs.
         for (row, q) in admits.iter().enumerate() {
-            if let Err(e) = self.kv.reserve(q.req.id, q.req.prompt.len()) {
+            if let Err(e) = self.kv.reserve(q.req.id, tokens[row].len()) {
                 for done in &ids[..row] {
                     let _ = self.kv.free_request(*done);
                 }
@@ -734,9 +759,28 @@ impl InferenceServer {
 
         // Apply results per admitted request: first token (the KV rows
         // already landed in their pages), FirstToken event, stop-token
-        // check.
+        // check. Resumed rows re-enter the running batch exactly where
+        // preemption stopped them — the rebuilt prefix was already
+        // streamed to the client, so nothing is emitted here.
         for (row, q) in admits.iter().enumerate() {
             let id = q.req.id;
+            self.slots.insert(id, slot_of[row]);
+            if let Some(rs) = &q.req.resume {
+                let running = RunningReq {
+                    id,
+                    adapter: q.req.adapter,
+                    prompt: q.req.prompt.clone(),
+                    ctx: tokens[row].len(),
+                    generated: rs.tokens.len(),
+                    sampling: q.req.sampling.clone(),
+                    priority: q.req.priority,
+                    slo: q.req.slo,
+                    last_token: *rs.tokens.last().expect("resume carries ≥ 1 token"),
+                    stopped: false,
+                };
+                self.batcher.start_running(running);
+                continue;
+            }
             let first = self.pick_token(&out.logits, row, &q.req.sampling, id, 0);
             let (load, cold) = windows[row];
             self.metrics.prefill_breakdown(
@@ -750,13 +794,14 @@ impl InferenceServer {
             );
             self.metrics.token(id);
             Self::emit_to(&self.handles, id, RequestEvent::FirstToken(first));
-            self.slots.insert(id, slot_of[row]);
             let running = RunningReq {
                 id,
                 adapter: q.req.adapter,
-                ctx: q.req.prompt.len(),
+                prompt: q.req.prompt.clone(),
+                ctx: tokens[row].len(),
                 generated: 1,
                 sampling: q.req.sampling.clone(),
+                priority: q.req.priority,
                 slo: q.req.slo,
                 last_token: first,
                 stopped: q.req.sampling.stop_tokens.contains(&first),
@@ -841,18 +886,56 @@ impl InferenceServer {
     }
 
     /// Shared post-decode bookkeeping: sampling, KV append, events.
+    ///
+    /// Decode-growth headroom: a request crossing a page boundary with
+    /// an empty pool used to surface `OutOfPages` as a fatal engine
+    /// error. Instead, the youngest preemptible running request is
+    /// evicted — its pages freed, itself re-queued with a
+    /// [`ResumeState`] — and the append retried, so the serving loop
+    /// keeps going and the preempted request resumes later with an
+    /// unchanged client-visible stream.
     fn apply_decode_out(
         &mut self,
         ids: &[u64],
         out: &crate::runtime::DecodeOut,
         bb: usize,
     ) -> Result<()> {
+        // Preemption order is recorded in a Vec (not a set) so re-queue
+        // order — and with it subsequent admission — is deterministic.
+        let mut preempted: Vec<u64> = Vec::new();
         for (row, id) in ids.iter().enumerate() {
+            if preempted.contains(id) {
+                continue;
+            }
+            loop {
+                match self.kv.append_token(*id, &out.k_new, &out.v_new, bb, row) {
+                    Ok(()) => break,
+                    Err(KvError::OutOfPages { need, free }) => {
+                        let victim =
+                            self.pick_preempt_victim(&preempted).ok_or_else(|| {
+                                anyhow!(
+                                    "out of KV pages (need {need}, free {free}) \
+                                     with no preemptible request"
+                                )
+                            })?;
+                        self.kv.free_request(victim)?;
+                        preempted.push(victim);
+                        if victim == *id {
+                            // This row yields its own step; it resumes
+                            // from the pre-step state after re-admission.
+                            break;
+                        }
+                    }
+                    Err(e) => return Err(anyhow!("kv append for request {id}: {e}")),
+                }
+            }
+            if preempted.contains(id) {
+                continue;
+            }
             let tok = {
                 let r = &self.batcher.running[row];
                 self.pick_token(&out.logits, row, &r.sampling, *id, r.generated)
             };
-            self.kv.append_token(*id, &out.k_new, &out.v_new, bb, row)?;
             self.metrics.token(*id);
             Self::emit_to(&self.handles, *id, RequestEvent::Token(tok));
             let r = &mut self.batcher.running[row];
@@ -863,10 +946,70 @@ impl InferenceServer {
                 r.stopped = true;
             }
         }
+        self.requeue_preempted(&preempted);
         for done in self.batcher.reap_finished() {
             self.finish(done)?;
         }
         Ok(())
+    }
+
+    /// The youngest (most recently admitted, i.e. highest id) running
+    /// request that can be preempted: not already preempted, not
+    /// finished (a finished row's pages free at reap anyway), and
+    /// resumable — its rebuilt context must fit a prefill bucket. `None`
+    /// when fewer than two live requests remain: self-preempting the
+    /// lone page holder would re-admit into the same exhausted pool and
+    /// livelock, so that case stays a hard error.
+    fn pick_preempt_victim(&self, preempted: &[u64]) -> Option<u64> {
+        let live: Vec<&RunningReq> = self
+            .batcher
+            .running
+            .iter()
+            .filter(|r| !preempted.contains(&r.id) && !r.finished())
+            .collect();
+        if live.len() < 2 {
+            return None;
+        }
+        live.iter()
+            .filter(|r| {
+                // Resumable: the rebuilt context must fit a prefill
+                // bucket and be re-admittable into the pool at all.
+                r.ctx <= self.max_prompt
+                    && self.kv.pages_for(r.ctx) <= self.kv.total_pages()
+            })
+            .max_by_key(|r| r.id)
+            .map(|r| r.id)
+    }
+
+    /// Move preempted requests out of the running batch and back into
+    /// the admission queue as resume entries (priority preserved; FIFO
+    /// within their class puts them behind newer arrivals — "re-admit
+    /// later"). Their KV pages were already freed at preemption time.
+    fn requeue_preempted(&mut self, preempted: &[u64]) {
+        for &id in preempted {
+            let Some(r) = self.batcher.remove_running(id) else {
+                continue;
+            };
+            self.slots.remove(&id);
+            let tokens = self
+                .handles
+                .get(&id)
+                .expect("preempted request has a live handle")
+                .lock()
+                .unwrap()
+                .tokens()
+                .to_vec();
+            self.metrics.preemption();
+            self.batcher.enqueue(ActiveRequest {
+                id,
+                adapter: r.adapter,
+                prompt: r.prompt,
+                sampling: r.sampling,
+                priority: r.priority,
+                slo: r.slo,
+                resume: Some(ResumeState { tokens }),
+            });
+        }
     }
 
     fn finish(&mut self, r: RunningReq) -> Result<()> {
@@ -899,6 +1042,10 @@ impl ServingFront for InferenceServer {
 
     fn stats(&self) -> ServerStats {
         InferenceServer::stats(self)
+    }
+
+    fn cold_start_stats(&self) -> Option<ColdStartStats> {
+        Some(self.metrics.cold_start().clone())
     }
 }
 

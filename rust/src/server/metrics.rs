@@ -93,6 +93,7 @@ pub struct MetricsRecorder {
     done: Vec<RequestRecord>,
     cancelled: usize,
     cold: ColdStartStats,
+    preempted: usize,
 }
 
 impl MetricsRecorder {
@@ -157,6 +158,19 @@ impl MetricsRecorder {
         &self.cold
     }
 
+    /// Count a decode-growth preemption (a running request whose KV
+    /// pages were reclaimed and that was re-queued for later re-admit).
+    pub fn preemption(&mut self) {
+        self.preempted += 1;
+    }
+
+    /// Decode-growth preemptions so far — surfaced through
+    /// `ServerStats::preemptions` so the cluster router steers away from
+    /// memory-pressured servers.
+    pub fn preemptions(&self) -> usize {
+        self.preempted
+    }
+
     /// A token was emitted for a request.
     pub fn token(&mut self, id: u64) {
         if let Some(f) = self.inflight.get_mut(&id) {
@@ -200,6 +214,13 @@ impl MetricsRecorder {
         if self.inflight.remove(&id).is_some() {
             self.cancelled += 1;
         }
+    }
+
+    /// The request was rejected after being recorded (e.g. a routing
+    /// front relaying a backend's refusal): drop the in-flight record
+    /// without counting it as a cancellation.
+    pub fn rejected(&mut self, id: u64) {
+        self.inflight.remove(&id);
     }
 
     /// Completed records.
@@ -353,6 +374,12 @@ mod tests {
         assert_eq!(m.cancelled_count(), 1);
         assert_eq!(m.inflight(), 0);
         assert!(m.records().is_empty());
+        // A relayed rejection drops the in-flight record without
+        // inflating the cancelled count.
+        m.arrived(2, None);
+        m.rejected(2);
+        assert_eq!(m.cancelled_count(), 1);
+        assert_eq!(m.inflight(), 0);
     }
 
     #[test]
@@ -412,6 +439,8 @@ mod tests {
         m.handoffs(2);
         m.deferred_collisions(1);
         m.assist_decode(0.25);
+        m.preemption();
+        assert_eq!(m.preemptions(), 1);
         let c = m.cold_start();
         assert_eq!(c.cold_admits, 2);
         assert_eq!(c.cpu_assisted, 1);

@@ -17,13 +17,19 @@
 //!   honors cancellation and stop tokens mid-flight, and applies the
 //!   serving mode's cold-start behaviour — including the real §4
 //!   CPU-assisted path (shm worker pool + async load windows + §4.3
-//!   decode handoff) when a pool is attached.
+//!   decode handoff) when a pool is attached. Decode-growth KV pressure
+//!   preempts/re-queues the youngest request instead of erroring.
+//! - [`cluster`] — [`ClusterFront`]: the §5 rank-aware scheduler in
+//!   front of N boxed backends (real engines, simulators, or a mix),
+//!   itself a [`ServingFront`] — routing, re-routing on backend
+//!   refusal, and fan-out cancellation behind the same trait.
 //! - [`metrics`] — per-request TTFT / TPOT / latency recording, SLO
 //!   attainment, the cold-start TTFT decomposition, and per-mode
 //!   cold-start counters.
 
 pub mod api;
 pub mod batcher;
+pub mod cluster;
 pub mod engine;
 pub mod kvcache;
 pub mod metrics;
@@ -33,6 +39,7 @@ pub use api::{
     ServeRequest, ServingFront, SloSpec,
 };
 pub use batcher::{Batcher, NextAction};
+pub use cluster::ClusterFront;
 pub use engine::{ColdStartMode, EngineConfig, InferenceServer};
 pub use kvcache::{KvCacheManager, KvError, PageWriter, PagedKv};
 pub use metrics::{ColdStartStats, MetricsRecorder, RequestRecord, TtftBreakdown};

@@ -98,34 +98,6 @@ impl SimFront {
         &self.inst
     }
 
-    /// Cold-start counters in the engine's
-    /// [`crate::server::metrics::ColdStartStats`] shape, so drivers read
-    /// the same surface from simulator and engine (contract
-    /// compatibility). A request counts cold when its serving exposed
-    /// any cold-start time; under `ServingMode::CaraServe` cold admits
-    /// are CPU-assisted by construction (the simulator's
-    /// `overlapped_prefill` models exactly that path). Handoffs and
-    /// collision deferrals are engine-side mechanics the event simulator
-    /// doesn't model; they stay zero here.
-    pub fn cold_start_stats(&self) -> crate::server::metrics::ColdStartStats {
-        let assisted = self.inst.mode == crate::sim::ServingMode::CaraServe;
-        let mut stats = crate::server::metrics::ColdStartStats::default();
-        for r in self.inst.done.iter().chain(self.inst.running.iter()) {
-            if r.first_token.is_none() {
-                continue; // not admitted yet
-            }
-            if r.cold_start > 0.0 {
-                stats.cold_admits += 1;
-                if assisted {
-                    stats.cpu_assisted += 1;
-                }
-            } else {
-                stats.warm_admits += 1;
-            }
-        }
-        stats
-    }
-
     fn validate(&self, req: &ServeRequest) -> Result<usize, String> {
         crate::server::api::validate_shape(req, self.max_prompt, self.kv_capacity)?;
         self.registry
@@ -280,11 +252,43 @@ impl ServingFront for SimFront {
         ServerStats {
             running_ranks: self.inst.running_ranks(),
             queued_ranks: self.inst.queued_ranks(),
-            eligible: true,
+            // Real eligibility data: the registered adapter set and the
+            // prompt bound this front actually enforces at submit.
+            adapters: crate::scheduler::AdapterSet::only(self.registry.ids()),
+            max_prompt_tokens: self.max_prompt,
             tpot_slo: crate::server::api::tightest_tpot_slo(
                 self.live.values().map(|r| &r.slo),
             ),
+            ..Default::default()
         }
+    }
+
+    /// Cold-start counters in the engine's
+    /// [`crate::server::metrics::ColdStartStats`] shape, so drivers read
+    /// the same surface from simulator and engine (contract
+    /// compatibility). A request counts cold when its serving exposed
+    /// any cold-start time; under `ServingMode::CaraServe` cold admits
+    /// are CPU-assisted by construction (the simulator's
+    /// `overlapped_prefill` models exactly that path). Handoffs and
+    /// collision deferrals are engine-side mechanics the event simulator
+    /// doesn't model; they stay zero here.
+    fn cold_start_stats(&self) -> Option<crate::server::metrics::ColdStartStats> {
+        let assisted = self.inst.mode == crate::sim::ServingMode::CaraServe;
+        let mut stats = crate::server::metrics::ColdStartStats::default();
+        for r in self.inst.done.iter().chain(self.inst.running.iter()) {
+            if r.first_token.is_none() {
+                continue; // not admitted yet
+            }
+            if r.cold_start > 0.0 {
+                stats.cold_admits += 1;
+                if assisted {
+                    stats.cpu_assisted += 1;
+                }
+            } else {
+                stats.warm_admits += 1;
+            }
+        }
+        Some(stats)
     }
 }
 
@@ -430,7 +434,8 @@ mod tests {
         let s = f.stats();
         assert_eq!(s.queued_ranks.len(), 2);
         assert!(s.queued_ranks.contains(&64) && s.queued_ranks.contains(&16));
-        assert!(s.eligible);
+        assert!(s.can_serve(7) && !s.can_serve(999));
+        assert_eq!(s.max_prompt_tokens, 512);
         assert!((s.tpot_slo.unwrap() - 0.040).abs() < 1e-12);
         // After prefill both are running.
         f.poll().unwrap();
@@ -451,7 +456,7 @@ mod tests {
         f.run_until_idle().unwrap();
         assert_eq!(h1.state(), LifecycleState::Finished);
         assert_eq!(h2.state(), LifecycleState::Finished);
-        let s = f.cold_start_stats();
+        let s = f.cold_start_stats().unwrap();
         assert_eq!(s.cold_admits, 1);
         assert_eq!(s.cpu_assisted, 1);
         assert_eq!(s.warm_admits, 1);
@@ -463,7 +468,7 @@ mod tests {
         oracle.install_adapter(1, 64);
         oracle.submit(request(1, 32, 2));
         oracle.run_until_idle().unwrap();
-        let s = oracle.cold_start_stats();
+        let s = oracle.cold_start_stats().unwrap();
         assert_eq!(s.cold_admits, 0);
         assert_eq!(s.cpu_assisted, 0);
         assert_eq!(s.warm_admits, 1);

@@ -176,16 +176,11 @@ impl Simulation {
         let mut routed_server: Vec<usize> = vec![usize::MAX; requests.len()];
         // Reused stats buffers: refilled in place per arrival instead of
         // reallocating (hot at 60 instances × 40k arrivals; §Perf).
-        let mut stats: Vec<ServerStats> = self
-            .instances
-            .iter()
-            .map(|_| ServerStats {
-                running_ranks: Vec::new(),
-                queued_ranks: Vec::new(),
-                eligible: true,
-                tpot_slo: None,
-            })
-            .collect();
+        // Simulated instances host any adapter and model no bounded KV
+        // pool, so the eligibility fields stay at their defaults
+        // (`AdapterSet::Any`, unbounded headroom).
+        let mut stats: Vec<ServerStats> =
+            self.instances.iter().map(|_| ServerStats::default()).collect();
 
         while let Some(ev) = heap.pop() {
             match ev.kind {
@@ -197,7 +192,6 @@ impl Simulation {
                             .extend(inst.running.iter().map(|r| r.req.rank));
                         s.queued_ranks.clear();
                         s.queued_ranks.extend(inst.queue.iter().map(|r| r.req.rank));
-                        s.eligible = true;
                     }
                     let sreq = SchedRequest {
                         id: r.id,

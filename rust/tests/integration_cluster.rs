@@ -1,0 +1,153 @@
+//! Integration: the rank-aware scheduler in front of *real* engines —
+//! `ClusterFront` over native-runtime `InferenceServer`s (always runs;
+//! no artifacts needed), plus the decode-growth preemption path the
+//! cluster router steers on.
+
+use caraserve::model::LoraSpec;
+use caraserve::runtime::{NativeConfig, NativeRuntime};
+use caraserve::server::cluster::synthetic::{self, SyntheticConfig};
+use caraserve::server::{
+    ColdStartMode, EngineConfig, InferenceServer, LifecycleState, ServeRequest,
+};
+
+/// A native engine with a deliberately small KV pool (or a roomy one).
+fn engine_with_pool(kv_pages: usize, page_size: usize) -> InferenceServer {
+    let runtime = NativeRuntime::new(NativeConfig::tiny());
+    let mut s = InferenceServer::new(
+        runtime,
+        EngineConfig {
+            cold_start: ColdStartMode::Cached,
+            kv_pages,
+            page_size,
+            ..Default::default()
+        },
+    )
+    .expect("server");
+    for id in 0..4u64 {
+        s.install_adapter(LoraSpec::standard(id, 8, "tiny"));
+    }
+    s
+}
+
+#[test]
+fn decode_growth_preempts_instead_of_erroring() {
+    // Two requests that jointly outgrow a 10-page pool mid-decode: the
+    // old engine surfaced OutOfPages as a fatal error; now the youngest
+    // is preempted, re-queued, and resumed — with a client-visible
+    // stream bitwise identical to a run with a roomy pool.
+    let reqs = || {
+        vec![
+            ServeRequest::new(0, (0..8).map(|i| i * 3 + 1).collect()).max_new_tokens(24),
+            ServeRequest::new(1, (0..8).map(|i| i * 5 + 2).collect()).max_new_tokens(24),
+        ]
+    };
+
+    let mut roomy = engine_with_pool(64, 4);
+    let want: Vec<_> = reqs().into_iter().map(|r| roomy.submit(r)).collect();
+    roomy.run_until_idle().unwrap();
+    assert_eq!(roomy.metrics().preemptions(), 0);
+
+    let mut tight = engine_with_pool(10, 4);
+    let got: Vec<_> = reqs().into_iter().map(|r| tight.submit(r)).collect();
+    tight.run_until_idle().unwrap();
+
+    for (w, g) in want.iter().zip(&got) {
+        assert_eq!(g.state(), LifecycleState::Finished);
+        assert_eq!(g.tokens().len(), 24);
+        assert_eq!(w.tokens(), g.tokens(), "preemption changed the stream");
+        let events = g.drain_events();
+        assert_eq!(
+            events.iter().filter(|e| e.is_terminal()).count(),
+            1,
+            "exactly one terminal event: {events:?}"
+        );
+    }
+    assert!(
+        tight.metrics().preemptions() >= 1,
+        "pool of 10 pages must have preempted"
+    );
+    // The preemption is visible to the cluster router via ServerStats.
+    assert!(tight.stats().preemptions >= 1);
+    assert_eq!(tight.metrics().inflight(), 0);
+}
+
+#[test]
+fn rank_aware_matches_or_beats_random_on_heterogeneous_ranks() {
+    // Fig 5-style heterogeneous-rank workload over three real engines
+    // with partial adapter placement. Cached cold starts keep the run
+    // free of wall-clock-dependent load windows, so routing decisions
+    // are deterministic; only the measured latencies carry timing noise.
+    let cfg = SyntheticConfig {
+        instances: 3,
+        requests: 36,
+        adapters: 12,
+        seed: 5,
+        threads: 1,
+        cpu_workers: 0,
+        cold_start: ColdStartMode::Cached,
+        kv_pages: 256,
+        polls_per_arrival: 1,
+    };
+    let ra = synthetic::run("rank-aware", &cfg).expect("rank-aware run");
+    let rnd = synthetic::run("random", &cfg).expect("random run");
+
+    for rep in [&ra, &rnd] {
+        assert_eq!(rep.finished, rep.requests, "{}: request loss", rep.policy);
+        assert_eq!(rep.rejected, 0, "{}: spurious rejection", rep.policy);
+        assert_eq!(rep.routed.iter().sum::<usize>(), rep.requests);
+    }
+
+    // Rank balance is deterministic (routing doesn't depend on wall
+    // clock in Cached mode): the rank-aware policy must spread rank-sum
+    // at least as evenly as random, within one max-rank adapter.
+    let spread = |sums: &[usize]| {
+        sums.iter().max().unwrap() - sums.iter().min().unwrap()
+    };
+    let ra_spread = spread(&ra.routed_rank_sum);
+    let rnd_spread = spread(&rnd.routed_rank_sum);
+    assert!(
+        ra_spread <= rnd_spread + *synthetic::RANKS.iter().max().unwrap(),
+        "rank-aware spread {ra_spread} ≫ random spread {rnd_spread} \
+         (rank sums {:?} vs {:?})",
+        ra.routed_rank_sum,
+        rnd.routed_rank_sum
+    );
+
+    // SLO attainment: rank-aware must not lose to random beyond
+    // wall-clock measurement noise.
+    let ra_att = ra.slo_attainment.expect("slo-carrying workload");
+    let rnd_att = rnd.slo_attainment.expect("slo-carrying workload");
+    assert!(
+        ra_att >= rnd_att - 0.15,
+        "rank-aware attainment {ra_att} ≪ random {rnd_att}"
+    );
+    assert!(ra_att > 0.2, "attainment collapsed: {ra_att}");
+}
+
+#[test]
+fn cluster_smoke_with_cold_starts_and_cpu_assist() {
+    // The CaraServe cold-start machinery (async loads, CPU-assisted
+    // prefill, handoffs) running behind the cluster front: everything
+    // terminates and cold admits are observed through the aggregated
+    // counters.
+    let cfg = SyntheticConfig {
+        instances: 2,
+        requests: 12,
+        adapters: 16,
+        seed: 3,
+        threads: 1,
+        cpu_workers: 2,
+        cold_start: ColdStartMode::CaraServe,
+        kv_pages: 256,
+        polls_per_arrival: 2,
+    };
+    let rep = synthetic::run("most-idle", &cfg).expect("cluster run");
+    assert_eq!(rep.finished, rep.requests);
+    assert_eq!(rep.rejected, 0);
+    assert!(
+        rep.cold.cold_admits > 0,
+        "16 adapters over 8 slots must cold-start: {:?}",
+        rep.cold
+    );
+    assert!(rep.cold.cpu_assisted > 0, "{:?}", rep.cold);
+}

@@ -1,18 +1,24 @@
-//! One contract, two backends: identical request-lifecycle assertions
+//! One contract, many fronts: identical request-lifecycle assertions
 //! driven through the [`ServingFront`] trait against (a) the simulator
-//! front — always — and (b) the real PJRT engine — when artifacts are
-//! built. Covers first-token event ordering, cancellation (queued and
-//! mid-decode), stop tokens, and the exactly-one-terminal-event
-//! guarantee.
+//! front — always, (b) the native-runtime engine — always, (c) the real
+//! PJRT engine — when artifacts are built, and (d) `ClusterFront`
+//! compositions of the above (cluster-of-1 must behave identically to
+//! the bare backend; multi-backend clusters add routing). Covers
+//! first-token event ordering (with the cluster's non-terminal `Routed`
+//! placement event), cancellation (queued and mid-decode), stop tokens,
+//! and the exactly-one-terminal-event guarantee.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use caraserve::config::GpuSpec;
 use caraserve::model::{LlamaConfig, LoraSpec};
-use caraserve::runtime::ModelRuntime;
+use caraserve::runtime::{ModelRuntime, NativeConfig, NativeRuntime};
+use caraserve::scheduler::registry::{AdapterMeta, GlobalRegistry};
+use caraserve::server::cluster::synthetic;
 use caraserve::server::{
-    ColdStartMode, EngineConfig, FinishReason, InferenceServer, LifecycleState, RequestEvent,
-    ServeRequest, ServingFront,
+    ClusterFront, ColdStartMode, EngineConfig, FinishReason, InferenceServer,
+    LifecycleState, RequestEvent, ServeRequest, ServingFront,
 };
 use caraserve::sim::{GpuModel, ServingMode, SimFront, SimInstance};
 
@@ -31,6 +37,43 @@ fn sim_front_with_batch(max_batch: usize) -> SimFront {
 
 fn sim_front() -> SimFront {
     sim_front_with_batch(32)
+}
+
+/// A native-runtime engine with the contract adapters — always runs.
+fn native_front() -> InferenceServer {
+    let runtime = NativeRuntime::new(NativeConfig::test_tiny());
+    let mut server = InferenceServer::new(
+        runtime,
+        EngineConfig {
+            cold_start: ColdStartMode::CaraServe,
+            load_scale: 0.2,
+            ..Default::default()
+        },
+    )
+    .expect("native server");
+    for id in 0..ADAPTERS {
+        server.install_adapter(LoraSpec::standard(id, 4, "tiny"));
+    }
+    server
+}
+
+/// The contract registry: every adapter, rank as installed.
+fn registry(rank: usize) -> Arc<GlobalRegistry> {
+    let reg = GlobalRegistry::new();
+    for id in 0..ADAPTERS {
+        reg.register(AdapterMeta {
+            id,
+            rank,
+            base_model: "contract".into(),
+            weights_path: String::new(),
+        });
+    }
+    Arc::new(reg)
+}
+
+fn cluster_over(backends: Vec<Box<dyn ServingFront>>, rank: usize) -> ClusterFront {
+    let policy = synthetic::policy("rank-aware", 7).expect("policy");
+    ClusterFront::new(backends, policy, registry(rank))
 }
 
 fn engine_front() -> Option<InferenceServer> {
@@ -56,37 +99,51 @@ fn engine_front() -> Option<InferenceServer> {
 }
 
 /// Assert the canonical event shape of a completed request:
-/// `Admitted, FirstToken, Token*, <terminal>` with exactly one terminal.
+/// `Admitted, Routed*, FirstToken, Token*, <terminal>` with exactly one
+/// terminal (bare backends emit no `Routed`; routing fronts emit it
+/// between `Admitted` and `FirstToken`).
 fn assert_stream_shape(events: &[RequestEvent], expect_tokens: usize) {
     assert!(events.len() >= 2, "{events:?}");
     assert_eq!(events[0], RequestEvent::Admitted);
     let mut tokens = 0;
+    let mut terminal_at = None;
     for (i, ev) in events[1..].iter().enumerate() {
         match ev {
+            RequestEvent::Routed { .. } => {
+                assert_eq!(tokens, 0, "Routed after tokens began: {events:?}");
+            }
             RequestEvent::FirstToken(_) => {
-                assert_eq!(i, 0, "FirstToken must follow Admitted: {events:?}");
+                assert_eq!(tokens, 0, "duplicate FirstToken: {events:?}");
                 tokens += 1;
             }
             RequestEvent::Token(_) => {
                 assert!(tokens >= 1, "Token before FirstToken: {events:?}");
                 tokens += 1;
             }
-            ev if ev.is_terminal() => {
-                assert_eq!(
-                    i,
-                    events.len() - 2,
-                    "terminal event not last: {events:?}"
-                );
-            }
+            ev if ev.is_terminal() => terminal_at = Some(i),
             other => panic!("unexpected event {other:?}"),
         }
     }
+    assert_eq!(
+        terminal_at,
+        Some(events.len() - 2),
+        "terminal event not last: {events:?}"
+    );
     assert_eq!(tokens, expect_tokens, "{events:?}");
     assert_eq!(
         events.iter().filter(|e| e.is_terminal()).count(),
         1,
         "exactly one terminal event: {events:?}"
     );
+}
+
+/// Events with routing placement stripped — what a client comparing a
+/// bare backend against a cluster-of-1 should see identically.
+fn without_routing(events: Vec<RequestEvent>) -> Vec<RequestEvent> {
+    events
+        .into_iter()
+        .filter(|e| !matches!(e, RequestEvent::Routed { .. }))
+        .collect()
 }
 
 /// The shared lifecycle contract, driven purely through `ServingFront`.
@@ -112,7 +169,7 @@ fn drive_contract<F: ServingFront>(front: &mut F) {
     front.run_until_idle().unwrap();
     assert_eq!(victim.state(), LifecycleState::Cancelled);
     assert!(victim.tokens().is_empty());
-    let events = victim.drain_events();
+    let events = without_routing(victim.drain_events());
     assert_eq!(events, vec![RequestEvent::Admitted, RequestEvent::Cancelled]);
     // Dead ids report false.
     assert!(!front.cancel(victim.id()));
@@ -165,6 +222,8 @@ fn drive_contract<F: ServingFront>(front: &mut F) {
     assert_eq!(stats.total_requests(), 2);
     assert_eq!(stats.queued_ranks.len(), 2);
     assert!((stats.tpot_slo.unwrap() - 0.060).abs() < 1e-12);
+    assert!(stats.can_serve(5), "installed adapter must be servable");
+    assert!(!stats.can_serve(ADAPTERS + 50));
     front.run_until_idle().unwrap();
     let stats = front.stats();
     assert_eq!(stats.total_requests(), 0);
@@ -177,11 +236,60 @@ fn lifecycle_contract_holds_on_simulator_front() {
 }
 
 #[test]
+fn lifecycle_contract_holds_on_native_engine_front() {
+    drive_contract(&mut native_front());
+}
+
+#[test]
 fn lifecycle_contract_holds_on_engine_front() {
     let Some(mut server) = engine_front() else {
         return;
     };
     drive_contract(&mut server);
+}
+
+#[test]
+fn lifecycle_contract_holds_on_cluster_of_one_sim() {
+    drive_contract(&mut cluster_over(vec![Box::new(sim_front())], 64));
+}
+
+#[test]
+fn lifecycle_contract_holds_on_cluster_of_native_engines() {
+    drive_contract(&mut cluster_over(
+        vec![Box::new(native_front()), Box::new(native_front())],
+        4,
+    ));
+}
+
+#[test]
+fn cluster_of_one_matches_bare_native_backend() {
+    // The same submissions through a bare engine and a cluster-of-1 over
+    // an identically configured engine must yield identical token
+    // streams and identical terminal events — routing is invisible.
+    let reqs = || {
+        (0..6u64).map(|i| {
+            ServeRequest::new(i % ADAPTERS, vec![(i as i32 % 5) + 1; 10])
+                .max_new_tokens(4 + i as usize % 3)
+        })
+    };
+    let mut bare = native_front();
+    let bare_handles: Vec<_> = reqs().map(|r| bare.submit(r)).collect();
+    bare.run_until_idle().unwrap();
+
+    let mut cluster = cluster_over(vec![Box::new(native_front())], 4);
+    let cluster_handles: Vec<_> = reqs().map(|r| cluster.submit(r)).collect();
+    cluster.run_until_idle().unwrap();
+
+    for (b, c) in bare_handles.iter().zip(&cluster_handles) {
+        assert_eq!(b.state(), LifecycleState::Finished);
+        assert_eq!(c.state(), LifecycleState::Finished);
+        assert_eq!(b.tokens(), c.tokens(), "cluster-of-1 changed the stream");
+        assert_eq!(
+            without_routing(b.drain_events()),
+            without_routing(c.drain_events()),
+            "cluster-of-1 changed the event stream"
+        );
+    }
 }
 
 #[test]

@@ -48,7 +48,8 @@ fn run_policy(s: &Setup, policy_name: &str, kernel: KernelKind, seed: u64) -> (f
             ..Default::default()
         },
         seed,
-    );
+    )
+    .expect("known policy");
     let mut sim = Simulation::new(instances);
     let out = sim.run(&reqs, policy.as_mut());
     (

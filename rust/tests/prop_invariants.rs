@@ -5,7 +5,9 @@
 use caraserve::config::GpuSpec;
 use caraserve::model::LlamaConfig;
 use caraserve::perfmodel::{KernelKind, PerfModel};
-use caraserve::scheduler::{Policy, RankAwareConfig, RankAwareScheduler, SchedRequest, ServerStats};
+use caraserve::scheduler::{
+    AdapterSet, Policy, RankAwareConfig, RankAwareScheduler, SchedRequest, ServerStats,
+};
 use caraserve::server::kvcache::KvCacheManager;
 use caraserve::sim::{
     GpuModel, ServingMode, SimInstance, Simulation, SingleServer, WorkloadRequest,
@@ -51,16 +53,20 @@ fn prop_rank_aware_always_picks_an_eligible_server() {
         ..Default::default()
     };
     // Generate clusters: vec of (load, eligible) pairs encoded as usize
-    // (load*2 + eligible).
+    // (load*2 + eligible); ineligible servers host a disjoint adapter
+    // set, the real mechanism the old boolean stood in for.
     let gen = prop::vec_of(prop::usize_in(0, 80), 1, 12);
     prop::forall(&cfg, &gen, |encoded| {
         let stats: Vec<ServerStats> = encoded
             .iter()
             .map(|&e| ServerStats {
                 running_ranks: vec![32; e / 2],
-                queued_ranks: vec![],
-                eligible: e % 2 == 1,
-                tpot_slo: None,
+                adapters: if e % 2 == 1 {
+                    AdapterSet::Any
+                } else {
+                    AdapterSet::only(vec![99])
+                },
+                ..Default::default()
             })
             .collect();
         let mut sched = RankAwareScheduler::new(
@@ -75,9 +81,11 @@ fn prop_rank_aware_always_picks_an_eligible_server() {
             prompt_len: 16,
         };
         let pick = sched.pick(&req, &stats);
-        let any_eligible = stats.iter().any(|s| s.eligible);
+        let any_eligible = stats.iter().any(|s| s.eligible_for(&req));
         match pick {
-            Some(i) if !stats[i].eligible => Err(format!("picked ineligible {i}")),
+            Some(i) if !stats[i].eligible_for(&req) => {
+                Err(format!("picked ineligible {i}"))
+            }
             Some(_) if !any_eligible => Err("picked from empty".into()),
             None if any_eligible => Err("missed eligible server".into()),
             _ => Ok(()),
@@ -215,6 +223,7 @@ fn prop_batcher_never_exceeds_max_batch() {
                     _ => Priority::Interactive,
                 },
                 slo: None,
+                resume: None,
             });
         }
         // Drain: alternate admissions and reaps.
@@ -233,8 +242,10 @@ fn prop_batcher_never_exceeds_max_batch() {
                             id: q.req.id,
                             adapter: q.req.adapter,
                             ctx: q.req.prompt.len(),
+                            prompt: q.req.prompt,
                             generated: 1,
                             sampling: q.req.sampling,
+                            priority: q.req.priority,
                             slo: q.req.slo,
                             last_token: 0,
                             stopped: false,
