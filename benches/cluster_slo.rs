@@ -17,12 +17,7 @@
 use caraserve::server::cluster::synthetic::{self, SyntheticConfig};
 use caraserve::server::ColdStartMode;
 use caraserve::util::json::{self, Json};
-use caraserve::util::stats::Summary;
-
-fn ms(s: &Option<Summary>, f: fn(&Summary) -> f64) -> String {
-    s.as_ref()
-        .map_or("-".to_string(), |s| format!("{:.1}", f(s) * 1e3))
-}
+use caraserve::util::stats::{ms_or_dash as ms, Summary};
 
 fn summary_json(s: &Option<Summary>) -> Json {
     match s {
@@ -49,6 +44,7 @@ fn main() -> anyhow::Result<()> {
             cold_start: ColdStartMode::CaraServe,
             kv_pages: 256,
             polls_per_arrival: 2,
+            skew: 0.0,
         }
     } else {
         SyntheticConfig {
@@ -61,6 +57,7 @@ fn main() -> anyhow::Result<()> {
             cold_start: ColdStartMode::CaraServe,
             kv_pages: 256,
             polls_per_arrival: 2,
+            skew: 0.0,
         }
     };
     let policies: Vec<&str> = if smoke {

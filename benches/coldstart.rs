@@ -11,6 +11,7 @@ use caraserve::model::LoraSpec;
 use caraserve::runtime::{NativeConfig, NativeRuntime};
 use caraserve::server::{
     ColdStartMode, EngineConfig, InferenceServer, LifecycleState, ServeRequest,
+    ServingFront,
 };
 use caraserve::util::json::{self, Json};
 use caraserve::util::rng::Rng;
@@ -42,7 +43,9 @@ fn run(mode: ColdStartMode, assist: bool) -> (Summary, Summary, usize) {
     )
     .expect("server");
     for id in 0..N_ADAPTERS {
-        server.install_adapter(LoraSpec::standard(id, 4, "tiny"));
+        server
+            .install_adapter(&LoraSpec::standard(id, 4, "tiny"))
+            .expect("install");
     }
     if assist {
         server.enable_cpu_assist(CPU_WORKERS).expect("cpu assist");

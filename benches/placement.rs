@@ -1,0 +1,182 @@
+//! Static vs coordinator placement on a skewed workload: the §3
+//! global-coordinator payoff measured on live native engines.
+//!
+//! Runs the shared synthetic harness twice per seed — once with the
+//! static id-hash placement baseline (`synthetic::build`), once with
+//! registry-driven placement + pre-warming + live migration
+//! (`synthetic::build_coordinated`) — and reports SLO attainment, TTFT
+//! percentiles, cold starts, rank-balance spread, and the coordinator's
+//! placement/migration counters.
+//!
+//! Emits `BENCH_placement.json` in the working directory (plus the
+//! standard `target/bench-reports/placement.json`); CI runs `--smoke`
+//! to keep the file fresh. The acceptance shape is coordinator ≥ static
+//! on SLO attainment with fewer cold starts on the skewed head.
+
+use caraserve::coordinator::CoordinatorConfig;
+use caraserve::server::cluster::synthetic::{self, SyntheticConfig};
+use caraserve::server::ColdStartMode;
+use caraserve::util::json::{self, Json};
+use caraserve::util::stats::{ms_or_dash as ms, Summary};
+
+fn summary_json(s: &Option<Summary>) -> Json {
+    match s {
+        None => Json::Null,
+        Some(s) => json::obj(vec![
+            ("mean_ms", json::num(s.mean * 1e3)),
+            ("p50_ms", json::num(s.p50 * 1e3)),
+            ("p99_ms", json::num(s.p99 * 1e3)),
+        ]),
+    }
+}
+
+fn spread(sums: &[usize]) -> usize {
+    match (sums.iter().max(), sums.iter().min()) {
+        (Some(hi), Some(lo)) => hi - lo,
+        _ => 0,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("CARA_BENCH_FAST").is_ok();
+    let cfg = SyntheticConfig {
+        instances: if smoke { 2 } else { 3 },
+        requests: if smoke { 20 } else { 64 },
+        adapters: if smoke { 12 } else { 24 },
+        seed: 7,
+        threads: 1,
+        cpu_workers: 0,
+        // CaraServe cold starts: pre-warming's cold-admit savings are
+        // visible, and migration decisions still steer on real load.
+        cold_start: ColdStartMode::CaraServe,
+        kv_pages: 256,
+        polls_per_arrival: 1,
+        skew: 1.2,
+    };
+    let ccfg = CoordinatorConfig {
+        migrate_interval: 2,
+        prewarm: if smoke { 3 } else { 6 },
+        // Match the static baseline's replication factor (`hosts`
+        // places each adapter on two servers, or all of them when
+        // instances <= 2) so the headline isolates placement quality.
+        replicas: 2,
+        min_imbalance: 1,
+        ..Default::default()
+    };
+    let policy = "rank-aware";
+
+    let mut report = caraserve::bench::Report::new(
+        "Placement: static id-hash vs coordinator (registry-driven + migration)",
+        &[
+            "placement",
+            "done",
+            "SLO %",
+            "ttft p50",
+            "ttft p99",
+            "cold",
+            "rank spread",
+            "migrations",
+        ],
+    );
+
+    let static_rep = synthetic::run(policy, &cfg)?;
+    let (coord_rep, coord) = synthetic::run_coordinated(policy, &cfg, ccfg)?;
+    let cs = coord.coordinator_stats().clone();
+
+    for (label, rep, migrations) in [
+        ("static", &static_rep, 0),
+        ("coordinator", &coord_rep, cs.migrations),
+    ] {
+        report.row(vec![
+            label.to_string(),
+            rep.finished.to_string(),
+            format!("{:.1}", rep.slo_attainment.unwrap_or(1.0) * 100.0),
+            ms(&rep.ttft, |s| s.p50),
+            ms(&rep.ttft, |s| s.p99),
+            rep.cold.cold_admits.to_string(),
+            spread(&rep.routed_rank_sum).to_string(),
+            migrations.to_string(),
+        ]);
+    }
+    let (sa, ca) = (
+        static_rep.slo_attainment.unwrap_or(1.0),
+        coord_rep.slo_attainment.unwrap_or(1.0),
+    );
+    report.note(format!(
+        "coordinator {:.1}% vs static {:.1}% SLO attainment; cold admits {} vs {}; \
+         {} migrations, {} retirements, {} prewarmed \
+         (acceptance: coordinator ≥ static)",
+        ca * 100.0,
+        sa * 100.0,
+        coord_rep.cold.cold_admits,
+        static_rep.cold.cold_admits,
+        cs.migrations,
+        cs.retirements,
+        cs.prewarmed
+    ));
+    report.print();
+    report.save("placement").ok();
+
+    let run_json = |label: &str, rep: &synthetic::RunReport| {
+        json::obj(vec![
+            ("placement", json::s(label)),
+            ("requests", json::num(rep.requests as f64)),
+            ("finished", json::num(rep.finished as f64)),
+            ("rejected", json::num(rep.rejected as f64)),
+            (
+                "slo_attainment",
+                rep.slo_attainment.map_or(Json::Null, json::num),
+            ),
+            ("ttft", summary_json(&rep.ttft)),
+            ("tpot", summary_json(&rep.tpot)),
+            ("cold_admits", json::num(rep.cold.cold_admits as f64)),
+            (
+                "routed",
+                Json::Arr(rep.routed.iter().map(|&n| json::num(n as f64)).collect()),
+            ),
+            (
+                "rank_spread",
+                json::num(spread(&rep.routed_rank_sum) as f64),
+            ),
+            ("preemptions", json::num(rep.preemptions as f64)),
+            ("wall_s", json::num(rep.wall_s)),
+        ])
+    };
+    let top = json::obj(vec![
+        ("bench", json::s("placement")),
+        ("smoke", json::s(if smoke { "true" } else { "false" })),
+        ("instances", json::num(cfg.instances as f64)),
+        ("requests", json::num(cfg.requests as f64)),
+        ("adapters", json::num(cfg.adapters as f64)),
+        ("skew", json::num(cfg.skew)),
+        ("policy", json::s(policy)),
+        ("slo_attainment_static", json::num(sa)),
+        ("slo_attainment_coordinator", json::num(ca)),
+        (
+            "coordinator",
+            json::obj(vec![
+                ("initial_placements", json::num(cs.initial_placements as f64)),
+                ("prewarmed", json::num(cs.prewarmed as f64)),
+                ("rebalance_ticks", json::num(cs.rebalance_ticks as f64)),
+                ("migrations", json::num(cs.migrations as f64)),
+                ("retirements", json::num(cs.retirements as f64)),
+                (
+                    "deferred_retirements",
+                    json::num(cs.deferred_retirements as f64),
+                ),
+            ]),
+        ),
+        (
+            "runs",
+            Json::Arr(vec![
+                run_json("static", &static_rep),
+                run_json("coordinator", &coord_rep),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_placement.json", top.to_string_pretty())
+        .expect("write BENCH_placement.json");
+    println!("\nwrote BENCH_placement.json");
+    Ok(())
+}

@@ -22,6 +22,7 @@ use caraserve::model::LoraSpec;
 use caraserve::runtime::{ModelRuntime, NativeConfig, NativeRuntime, Runtime};
 use caraserve::server::{
     ColdStartMode, EngineConfig, InferenceServer, LifecycleState, ServeRequest,
+    ServingFront,
 };
 use caraserve::util::rng::Rng;
 
@@ -61,7 +62,7 @@ fn run_mode(mode: ColdStartMode) -> anyhow::Result<()> {
         },
     )?;
     for id in 0..N_ADAPTERS {
-        server.install_adapter(LoraSpec::standard(id, 8, "tiny"));
+        server.install_adapter(&LoraSpec::standard(id, 8, "tiny"))?;
     }
     // 4 shm CPU-LoRA workers: on the native backend this makes CaraServe
     // cold starts the real §4 mechanism rather than a modeled window.

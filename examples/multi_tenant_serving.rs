@@ -77,7 +77,7 @@ fn main() {
     let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
     let inst = SimInstance::new(0, model, ServingMode::CaraServe, 64, 32, 128);
     let mut front = SimFront::new(inst, 512);
-    front.install_adapter(1, 64);
+    front.register_adapter(1, 64);
     let handle = front.submit(
         ServeRequest::new(1, vec![1; 32])
             .max_new_tokens(6)

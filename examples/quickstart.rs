@@ -14,6 +14,7 @@ use caraserve::model::LoraSpec;
 use caraserve::runtime::ModelRuntime;
 use caraserve::server::{
     ColdStartMode, EngineConfig, InferenceServer, Priority, RequestEvent, ServeRequest,
+    ServingFront,
 };
 
 fn main() -> anyhow::Result<()> {
@@ -41,7 +42,7 @@ fn main() -> anyhow::Result<()> {
         },
     )?;
     for id in 0..3 {
-        server.install_adapter(LoraSpec::standard(id, 8, "tiny"));
+        server.install_adapter(&LoraSpec::standard(id, 8, "tiny"))?;
     }
 
     // 3. Submit three requests against three different LoRA adapters.

@@ -59,6 +59,12 @@ impl HostRepository {
         self.specs.get(&id)
     }
 
+    /// Remove an adapter spec (runtime uninstall), returning it if it
+    /// was installed.
+    pub fn remove(&mut self, id: u64) -> Option<LoraSpec> {
+        self.specs.remove(&id)
+    }
+
     /// All installed adapter ids (unsorted — callers needing order sort,
     /// e.g. `AdapterSet::only` does).
     pub fn ids(&self) -> Vec<u64> {
@@ -169,6 +175,16 @@ impl DeviceSlotCache {
         SlotAcquire { slot, cold: true }
     }
 
+    /// Evict `adapter` from its slot (runtime uninstall), returning the
+    /// freed slot. The slot's stamp resets to 0 so it is the first LRU
+    /// victim. No-op (`None`) when the adapter is not resident.
+    pub fn evict(&mut self, adapter: u64) -> Option<usize> {
+        let slot = self.index.remove(&adapter)?;
+        self.slots[slot] = None;
+        self.stamps[slot] = 0;
+        Some(slot)
+    }
+
     /// Acquire a *fixed* slot for `adapter` (the functional PJRT path:
     /// the artifacts bake one weight stack per slot, so an adapter must
     /// always land in the same slot for its outputs to be deterministic).
@@ -233,6 +249,12 @@ impl AsyncLoader {
     /// The nearest completion deadline among in-flight loads.
     pub fn earliest_deadline(&self) -> Option<Instant> {
         self.deadlines.values().min().copied()
+    }
+
+    /// Abort an in-flight load (runtime uninstall of a still-loading
+    /// adapter). Returns true if a load was actually in flight.
+    pub fn cancel(&mut self, adapter: u64) -> bool {
+        self.deadlines.remove(&adapter).is_some()
     }
 
     /// Remove and return every adapter whose deadline has passed.
@@ -346,6 +368,39 @@ mod tests {
         sorted.sort_unstable();
         sorted.dedup();
         assert_eq!(sorted.len(), 4);
+    }
+
+    #[test]
+    fn evict_frees_the_slot_for_immediate_reuse() {
+        let mut c = DeviceSlotCache::new(2).unwrap();
+        let s = c.acquire(10).slot;
+        c.acquire(20);
+        assert_eq!(c.evict(10), Some(s));
+        assert!(!c.resident(10));
+        assert_eq!(c.occupant(s), None);
+        assert_eq!(c.evict(10), None); // already gone
+        // The freed slot (stamp 0) is the next LRU victim.
+        assert_eq!(c.acquire(30).slot, s);
+    }
+
+    #[test]
+    fn loader_cancel_aborts_in_flight_loads() {
+        let mut l = AsyncLoader::new();
+        l.begin(7, Duration::from_secs(10));
+        assert!(l.loading(7));
+        assert!(l.cancel(7));
+        assert!(!l.loading(7));
+        assert!(!l.cancel(7));
+        assert!(l.is_empty());
+    }
+
+    #[test]
+    fn repository_remove() {
+        let mut repo = HostRepository::new();
+        repo.install(LoraSpec::standard(1, 64, "llama2-7b"));
+        assert_eq!(repo.remove(1).unwrap().rank, 64);
+        assert!(repo.remove(1).is_none());
+        assert!(repo.is_empty());
     }
 
     #[test]

@@ -1,0 +1,538 @@
+//! The global coordinator (paper §3): the control-plane tier above the
+//! per-server engines.
+//!
+//! CaraServe's architecture splits serving into per-server data planes
+//! (the [`crate::server::InferenceServer`]s behind a
+//! [`crate::server::ClusterFront`]) and one cluster-wide control plane
+//! that owns the adapter registry, decides which servers host which
+//! adapters, and pre-warms the hot ones. This module reproduces that
+//! role on top of the routed cluster:
+//!
+//! - **Registry-driven placement** ([`placement`]): instead of a static
+//!   id-hash assignment, initial placements are computed from the
+//!   [`GlobalRegistry`]'s metadata — demand (popularity counter) ×
+//!   rank × per-server slot pressure — and installed through
+//!   [`ClusterFront::install_on`], which updates backend and registry
+//!   together. The top-K hot adapters are **pre-warmed** into their
+//!   device slots before the first request, so the skewed head admits
+//!   warm.
+//! - **Live migration**: every `migrate_interval` polls the coordinator
+//!   inspects the per-server [`ServerStats`] (queue depth, running
+//!   batch, KV headroom, decode-growth preemptions) and, when one
+//!   server runs hot while another idles, **replicates the most popular
+//!   adapter** unique to the saturated server onto the idle one — then
+//!   (in `Move` mode) retires the source copy once its in-flight
+//!   requests drain. Uninstall refuses while requests on the adapter
+//!   are live, so a migrated adapter's token streams are bitwise
+//!   unaffected; refusals are retried on later ticks and counted in
+//!   [`CoordinatorStats::deferred_retirements`].
+//!
+//! The [`Coordinator`] itself implements [`ServingFront`], so any
+//! driver written for one engine (or a bare cluster) runs unchanged
+//! with the control plane active; `caraserve coordinator` drives it
+//! against live native engines and `benches/placement.rs` measures
+//! static vs coordinated placement on a skewed workload.
+
+pub mod placement;
+
+use anyhow::Result;
+
+use crate::model::LoraSpec;
+use crate::scheduler::registry::GlobalRegistry;
+use crate::scheduler::ServerStats;
+use crate::server::api::{RequestHandle, ServeRequest, ServingFront};
+use crate::server::metrics::ColdStartStats;
+use crate::server::ClusterFront;
+use self::placement::{PlacementConfig, PlacementInput};
+
+/// What to do with the source copy after a migration replicates an
+/// adapter onto a relief server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigrationMode {
+    /// Keep both copies (pure replication — more capacity for the hot
+    /// adapter, more slot pressure on the source).
+    Replicate,
+    /// Retire the source copy once its in-flight requests drain (a true
+    /// move; the default).
+    Move,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Cluster polls between rebalance ticks (0 disables migration).
+    pub migrate_interval: usize,
+    /// Pre-warm the K hottest adapters at placement time.
+    pub prewarm: usize,
+    /// Initial replicas per adapter (clamped to the server count).
+    pub replicas: usize,
+    /// Device LoRA slots per server (the slot-pressure denominator).
+    pub slots_per_server: usize,
+    /// Minimum load gap (see [`Coordinator::load_of`]) between the
+    /// busiest and idlest server before a migration fires.
+    pub min_imbalance: usize,
+    /// Replicate or move (see [`MigrationMode`]).
+    pub mode: MigrationMode,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            migrate_interval: 8,
+            prewarm: 4,
+            replicas: 1,
+            slots_per_server: 8,
+            min_imbalance: 2,
+            mode: MigrationMode::Move,
+        }
+    }
+}
+
+/// One recorded migration decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MigrationEvent {
+    /// The migrated adapter.
+    pub adapter: u64,
+    /// Saturated source server.
+    pub from: usize,
+    /// Relief target server.
+    pub to: usize,
+}
+
+/// Control-plane counters — the coordinator-side analogue of
+/// [`ColdStartStats`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CoordinatorStats {
+    /// Adapter→server installs performed at initial placement.
+    pub initial_placements: usize,
+    /// Adapters made device-resident ahead of traffic.
+    pub prewarmed: usize,
+    /// Rebalance inspections run.
+    pub rebalance_ticks: usize,
+    /// Runtime migrations: hot-adapter installs onto relief servers.
+    pub migrations: usize,
+    /// Source copies retired after a `Move` migration.
+    pub retirements: usize,
+    /// Retire attempts refused because requests were still in flight on
+    /// the source (each refusal counts; the retire retries next tick).
+    pub deferred_retirements: usize,
+}
+
+/// The global coordinator: a [`ClusterFront`] plus the §3 control
+/// plane. See the module docs.
+pub struct Coordinator {
+    cluster: ClusterFront,
+    cfg: CoordinatorConfig,
+    stats: CoordinatorStats,
+    /// Poll counter driving the rebalance cadence.
+    polls: usize,
+    /// Per-server preemption counts at the previous rebalance tick —
+    /// `ServerStats::preemptions` is a lifetime counter, so the load
+    /// score uses the delta since last tick, not the monotone total
+    /// (one historical preemption must not bias migration forever).
+    last_preemptions: Vec<usize>,
+    /// `Move`-mode source copies awaiting a drain (adapter, server).
+    pending_retire: Vec<(u64, usize)>,
+    /// Migration decisions, oldest first.
+    log: Vec<MigrationEvent>,
+}
+
+impl Coordinator {
+    /// Put the control plane in front of a routed cluster. Call
+    /// [`Coordinator::place_and_prewarm`] before traffic when the
+    /// cluster was built without static placements.
+    pub fn new(cluster: ClusterFront, cfg: CoordinatorConfig) -> Coordinator {
+        Coordinator {
+            cluster,
+            cfg,
+            stats: CoordinatorStats::default(),
+            polls: 0,
+            last_preemptions: Vec::new(),
+            pending_retire: Vec::new(),
+            log: Vec::new(),
+        }
+    }
+
+    /// The routed cluster behind the control plane.
+    pub fn cluster(&self) -> &ClusterFront {
+        &self.cluster
+    }
+
+    /// Mutable access to the routed cluster (tests, targeted ops).
+    pub fn cluster_mut(&mut self) -> &mut ClusterFront {
+        &mut self.cluster
+    }
+
+    /// Control-plane counters.
+    pub fn coordinator_stats(&self) -> &CoordinatorStats {
+        &self.stats
+    }
+
+    /// Migration decisions so far, oldest first.
+    pub fn migration_log(&self) -> &[MigrationEvent] {
+        &self.log
+    }
+
+    /// The registry's current view as placement-policy inputs.
+    fn placement_inputs(registry: &GlobalRegistry) -> Vec<PlacementInput> {
+        registry
+            .popularity_table()
+            .into_iter()
+            .filter_map(|(id, popularity)| {
+                registry.get(id).map(|m| PlacementInput {
+                    id,
+                    rank: m.rank,
+                    popularity,
+                })
+            })
+            .collect()
+    }
+
+    /// Compute initial placements from the registry (popularity × rank
+    /// × slot pressure), install them on the backends, and pre-warm the
+    /// `cfg.prewarm` hottest adapters so their first requests admit
+    /// warm. Idempotent per adapter (installs overwrite in place), but
+    /// intended to run once, before traffic.
+    pub fn place_and_prewarm(&mut self) -> Result<()> {
+        let inputs = Self::placement_inputs(self.cluster.registry());
+        let placements = placement::compute(
+            &inputs,
+            &PlacementConfig {
+                servers: self.cluster.len(),
+                replicas: self.cfg.replicas,
+                slots_per_server: self.cfg.slots_per_server,
+            },
+        );
+        for (server, ids) in placements.iter().enumerate() {
+            for &id in ids {
+                let spec = self.spec_of(id)?;
+                self.cluster.install_on(server, &spec)?;
+                self.stats.initial_placements += 1;
+            }
+        }
+        for id in placement::top_hot(&inputs, self.cfg.prewarm) {
+            for server in self.cluster.registry().servers_for(id) {
+                if self.cluster.prewarm_on(server, id)? {
+                    self.stats.prewarmed += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Rebuild an installable spec from the registry's metadata.
+    fn spec_of(&self, id: u64) -> Result<LoraSpec> {
+        let meta = self
+            .cluster
+            .registry()
+            .get(id)
+            .ok_or_else(|| anyhow::anyhow!("adapter {id} not registered"))?;
+        Ok(LoraSpec::standard(id, meta.rank, &meta.base_model))
+    }
+
+    /// Load score of one server: queued requests weigh double (they
+    /// are pure wait), running ones single, plus decode-growth
+    /// preemptions *since the previous tick* (a server shedding load
+    /// right now is saturated even when its queue momentarily clears).
+    fn load_of(stats: &ServerStats, preempt_delta: usize) -> usize {
+        stats.queued_ranks.len() * 2 + stats.running_ranks.len() + preempt_delta
+    }
+
+    /// One rebalance pass: retry pending retirements, then — when the
+    /// busiest/idlest load gap reaches `min_imbalance` — replicate the
+    /// hottest adapter unique to the busiest server onto the idlest,
+    /// queueing the source copy for retirement in `Move` mode.
+    pub fn tick(&mut self) -> Result<()> {
+        self.stats.rebalance_ticks += 1;
+        self.try_retire();
+        if self.cluster.len() < 2 {
+            return Ok(());
+        }
+        let per_server = self.cluster.per_server_stats();
+        self.last_preemptions.resize(per_server.len(), 0);
+        let loads: Vec<usize> = per_server
+            .iter()
+            .zip(&self.last_preemptions)
+            .map(|(s, &prev)| Self::load_of(s, s.preemptions.saturating_sub(prev)))
+            .collect();
+        for (prev, s) in self.last_preemptions.iter_mut().zip(&per_server) {
+            *prev = s.preemptions;
+        }
+        let src = (0..loads.len()).max_by_key(|&s| loads[s]).expect("≥ 2 servers");
+        let dst = (0..loads.len()).min_by_key(|&s| loads[s]).expect("≥ 2 servers");
+        if src == dst || loads[src] - loads[dst] < self.cfg.min_imbalance {
+            return Ok(());
+        }
+        // The hottest adapter the saturated server hosts that the relief
+        // server doesn't — and that isn't already queued to leave `src`.
+        let registry = self.cluster.registry();
+        let candidate = registry
+            .popularity_table()
+            .into_iter()
+            .filter(|&(_, pop)| pop > 0)
+            .map(|(id, _)| id)
+            .find(|&id| {
+                let servers = registry.servers_for(id);
+                servers.contains(&src)
+                    && !servers.contains(&dst)
+                    && !self.pending_retire.contains(&(id, src))
+            });
+        let Some(adapter) = candidate else {
+            return Ok(());
+        };
+        let spec = self.spec_of(adapter)?;
+        self.cluster.install_on(dst, &spec)?;
+        self.stats.migrations += 1;
+        self.log.push(MigrationEvent {
+            adapter,
+            from: src,
+            to: dst,
+        });
+        if self.cfg.mode == MigrationMode::Move {
+            self.pending_retire.push((adapter, src));
+            self.try_retire();
+        }
+        Ok(())
+    }
+
+    /// Attempt every pending source-copy retirement; copies still
+    /// serving in-flight requests stay queued for the next tick.
+    fn try_retire(&mut self) {
+        let pending = std::mem::take(&mut self.pending_retire);
+        for (adapter, server) in pending {
+            match self.cluster.uninstall_on(server, adapter) {
+                Ok(()) => self.stats.retirements += 1,
+                Err(_) => {
+                    self.stats.deferred_retirements += 1;
+                    self.pending_retire.push((adapter, server));
+                }
+            }
+        }
+    }
+}
+
+impl ServingFront for Coordinator {
+    fn submit(&mut self, req: ServeRequest) -> RequestHandle {
+        self.cluster.submit(req)
+    }
+
+    /// Advance the cluster one iteration; every `migrate_interval`
+    /// polls, run a rebalance tick first — while requests are in
+    /// flight, which is exactly when migration matters.
+    fn poll(&mut self) -> Result<bool> {
+        self.polls += 1;
+        if self.cfg.migrate_interval > 0 && self.polls % self.cfg.migrate_interval == 0 {
+            self.tick()?;
+        }
+        self.cluster.poll()
+    }
+
+    fn cancel(&mut self, id: u64) -> bool {
+        self.cluster.cancel(id)
+    }
+
+    fn stats(&self) -> ServerStats {
+        self.cluster.stats()
+    }
+
+    fn install_adapter(&mut self, spec: &LoraSpec) -> Result<()> {
+        self.cluster.install_adapter(spec)
+    }
+
+    fn uninstall_adapter(&mut self, adapter: u64) -> Result<()> {
+        self.cluster.uninstall_adapter(adapter)
+    }
+
+    fn prewarm_adapter(&mut self, adapter: u64) -> Result<bool> {
+        self.cluster.prewarm_adapter(adapter)
+    }
+
+    fn cold_start_stats(&self) -> Option<ColdStartStats> {
+        self.cluster.cold_start_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    use crate::config::GpuSpec;
+    use crate::model::LlamaConfig;
+    use crate::scheduler::baselines::MostIdle;
+    use crate::scheduler::registry::AdapterMeta;
+    use crate::server::api::LifecycleState;
+    use crate::sim::{GpuModel, ServingMode, SimFront, SimInstance};
+
+    fn sim_backend() -> SimFront {
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let inst = SimInstance::new(0, model, ServingMode::CaraServe, 32, 8, 64);
+        SimFront::new(inst, 512)
+    }
+
+    /// A coordinator over `n` empty sim backends with `adapters`
+    /// registered (rank 8) and demand seeded hottest-first (adapter 0
+    /// hottest).
+    fn coordinator(n: usize, adapters: u64, cfg: CoordinatorConfig) -> Coordinator {
+        let registry = Arc::new(GlobalRegistry::new());
+        for id in 0..adapters {
+            registry.register(AdapterMeta {
+                id,
+                rank: 8,
+                base_model: "sim".into(),
+                weights_path: String::new(),
+            });
+            registry.record_requests(id, (adapters - id) * 4);
+        }
+        let mut backends: Vec<Box<dyn ServingFront>> = Vec::new();
+        for _ in 0..n {
+            backends.push(Box::new(sim_backend()));
+        }
+        Coordinator::new(ClusterFront::new(backends, Box::new(MostIdle), registry), cfg)
+    }
+
+    #[test]
+    fn place_and_prewarm_installs_and_warms() {
+        let mut coord = coordinator(
+            2,
+            6,
+            CoordinatorConfig {
+                prewarm: 2,
+                ..Default::default()
+            },
+        );
+        coord.place_and_prewarm().unwrap();
+        let stats = coord.coordinator_stats().clone();
+        assert_eq!(stats.initial_placements, 6);
+        assert_eq!(stats.prewarmed, 2);
+        // Every adapter is placed exactly once (replicas = 1) and the
+        // cluster can serve all of them.
+        let registry = coord.cluster().registry().clone();
+        for id in 0..6 {
+            assert_eq!(registry.servers_for(id).len(), 1, "adapter {id}");
+            assert!(coord.stats().can_serve(id));
+        }
+        // The hottest adapter admits warm (pre-warmed into the sim
+        // cache); a cold-tail adapter pays a cold admit.
+        let h = coord.submit(ServeRequest::new(0, vec![1; 16]).max_new_tokens(2));
+        coord.run_until_idle().unwrap();
+        assert_eq!(h.state(), LifecycleState::Finished);
+        let cs = coord.cold_start_stats().unwrap();
+        assert_eq!(cs.cold_admits, 0, "prewarmed adapter cold-started");
+        assert_eq!(cs.warm_admits, 1);
+    }
+
+    #[test]
+    fn migration_replicates_then_retires_after_drain() {
+        let mut coord = coordinator(
+            2,
+            4,
+            CoordinatorConfig {
+                min_imbalance: 2,
+                mode: MigrationMode::Move,
+                ..Default::default()
+            },
+        );
+        coord.place_and_prewarm().unwrap();
+        let hot = 0u64;
+        let src = coord.cluster().registry().servers_for(hot)[0];
+        // Pile requests onto the hot adapter without polling: its host
+        // saturates while the other server idles.
+        let handles: Vec<_> = (0..6)
+            .map(|_| coord.submit(ServeRequest::new(hot, vec![1; 16]).max_new_tokens(3)))
+            .collect();
+        coord.tick().unwrap();
+        let stats = coord.coordinator_stats().clone();
+        assert_eq!(stats.migrations, 1);
+        let ev = coord.migration_log()[0];
+        assert_eq!(ev.adapter, hot);
+        assert_eq!(ev.from, src);
+        // Replicated: both servers host the hot adapter; the source
+        // retirement is deferred while its requests are in flight.
+        let placed = coord.cluster().registry().servers_for(hot);
+        assert_eq!(placed, vec![0, 1]);
+        assert!(stats.deferred_retirements >= 1);
+        assert_eq!(stats.retirements, 0);
+        // Drain, then the next tick completes the move: the source copy
+        // retires and the registry placement follows (pruned, no empty
+        // tombstone).
+        coord.run_until_idle().unwrap();
+        coord.tick().unwrap();
+        let stats = coord.coordinator_stats().clone();
+        assert_eq!(stats.retirements, 1);
+        assert_eq!(coord.cluster().registry().servers_for(hot), vec![ev.to]);
+        // The in-flight streams were untouched by the migration: the
+        // simulator's deterministic 0,1,2 streams arrived complete.
+        for h in &handles {
+            assert_eq!(h.state(), LifecycleState::Finished);
+            assert_eq!(h.tokens(), vec![0, 1, 2]);
+        }
+    }
+
+    #[test]
+    fn balanced_cluster_never_migrates() {
+        let mut coord = coordinator(2, 4, CoordinatorConfig::default());
+        coord.place_and_prewarm().unwrap();
+        for _ in 0..5 {
+            coord.tick().unwrap();
+        }
+        let stats = coord.coordinator_stats();
+        assert_eq!(stats.migrations, 0);
+        assert_eq!(stats.rebalance_ticks, 5);
+    }
+
+    #[test]
+    fn replicate_mode_keeps_both_copies() {
+        let mut coord = coordinator(
+            2,
+            4,
+            CoordinatorConfig {
+                mode: MigrationMode::Replicate,
+                min_imbalance: 2,
+                ..Default::default()
+            },
+        );
+        coord.place_and_prewarm().unwrap();
+        for _ in 0..6 {
+            coord.submit(ServeRequest::new(0, vec![1; 16]).max_new_tokens(2));
+        }
+        coord.tick().unwrap();
+        coord.run_until_idle().unwrap();
+        coord.tick().unwrap();
+        let stats = coord.coordinator_stats();
+        assert_eq!(stats.migrations, 1);
+        assert_eq!(stats.retirements, 0);
+        assert_eq!(coord.cluster().registry().servers_for(0), vec![0, 1]);
+    }
+
+    #[test]
+    fn poll_ticks_on_the_configured_interval() {
+        let mut coord = coordinator(
+            2,
+            4,
+            CoordinatorConfig {
+                migrate_interval: 3,
+                ..Default::default()
+            },
+        );
+        coord.place_and_prewarm().unwrap();
+        for _ in 0..9 {
+            coord.poll().unwrap();
+        }
+        assert_eq!(coord.coordinator_stats().rebalance_ticks, 3);
+        // Interval 0 disables the migration engine entirely.
+        let mut frozen = coordinator(
+            2,
+            4,
+            CoordinatorConfig {
+                migrate_interval: 0,
+                ..Default::default()
+            },
+        );
+        frozen.place_and_prewarm().unwrap();
+        for _ in 0..9 {
+            frozen.poll().unwrap();
+        }
+        assert_eq!(frozen.coordinator_stats().rebalance_ticks, 0);
+    }
+}

@@ -1,0 +1,227 @@
+//! Registry-driven adapter placement (paper §3): decide which servers
+//! host which adapters *before* traffic arrives, from the metadata the
+//! [`crate::scheduler::registry::GlobalRegistry`] already tracks.
+//!
+//! The policy is a deterministic greedy pack over a demand-weighted
+//! score. Each adapter carries a weight
+//!
+//! ```text
+//! weight = (popularity + 1) × rank
+//! ```
+//!
+//! — popularity because a hot adapter's host absorbs its traffic, rank
+//! because a high-rank adapter inflates every batch it decodes in (the
+//! BGMV cost the §5 performance models fit) *and* costs more slot
+//! memory. Adapters are placed hottest-first; each replica goes to the
+//! server minimizing
+//!
+//! ```text
+//! score(s) = load(s) + weight × count(s) / slots_per_server
+//! ```
+//!
+//! where `load(s)` is the demand weight already packed onto `s` and the
+//! second term is the **slot pressure** penalty: once a server's
+//! adapter count approaches its device-slot capacity, further adapters
+//! there cold-start (slot eviction churn), so the policy pays
+//! proportionally more to co-locate. Ties break on the lower server
+//! index, so placements are reproducible run to run.
+//!
+//! The output is a per-server adapter list; the
+//! [`crate::coordinator::Coordinator`] installs it through
+//! [`crate::server::ClusterFront::install_on`] and pre-warms the
+//! hottest adapters ([`top_hot`]) so first requests admit warm.
+
+/// One adapter as the placement policy sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlacementInput {
+    /// Adapter id.
+    pub id: u64,
+    /// LoRA rank (slot memory + batch-cost proxy).
+    pub rank: usize,
+    /// Observed or seeded demand (requests).
+    pub popularity: u64,
+}
+
+/// Knobs for one placement computation.
+#[derive(Debug, Clone, Copy)]
+pub struct PlacementConfig {
+    /// Number of servers to place onto.
+    pub servers: usize,
+    /// Replicas per adapter (clamped to the server count).
+    pub replicas: usize,
+    /// Device LoRA slots per server — the denominator of the
+    /// slot-pressure penalty.
+    pub slots_per_server: usize,
+}
+
+impl Default for PlacementConfig {
+    fn default() -> Self {
+        PlacementConfig {
+            servers: 1,
+            replicas: 1,
+            slots_per_server: 8,
+        }
+    }
+}
+
+/// Demand weight of one adapter: `(popularity + 1) × rank`. The `+ 1`
+/// keeps zero-demand adapters orderable by rank instead of collapsing
+/// to a single zero bucket.
+pub fn weight(a: &PlacementInput) -> f64 {
+    (a.popularity as f64 + 1.0) * a.rank.max(1) as f64
+}
+
+/// Compute placements: `out[s]` lists the adapter ids server `s` hosts.
+/// Every adapter lands on exactly `min(replicas, servers)` distinct
+/// servers; the assignment greedily balances demand weight under the
+/// slot-pressure penalty (see module docs). Deterministic.
+pub fn compute(adapters: &[PlacementInput], cfg: &PlacementConfig) -> Vec<Vec<u64>> {
+    assert!(cfg.servers > 0, "placement over zero servers");
+    let replicas = cfg.replicas.clamp(1, cfg.servers);
+    let slots = cfg.slots_per_server.max(1) as f64;
+
+    // Hottest (heaviest) first, ties by ascending id for determinism.
+    let mut order: Vec<&PlacementInput> = adapters.iter().collect();
+    order.sort_by(|a, b| {
+        weight(b)
+            .partial_cmp(&weight(a))
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.id.cmp(&b.id))
+    });
+
+    let mut out: Vec<Vec<u64>> = vec![Vec::new(); cfg.servers];
+    let mut load = vec![0.0f64; cfg.servers];
+    for a in order {
+        let w = weight(a);
+        let mut chosen: Vec<usize> = Vec::with_capacity(replicas);
+        for _ in 0..replicas {
+            let s = (0..cfg.servers)
+                .filter(|s| !chosen.contains(s))
+                .min_by(|&x, &y| {
+                    let sx = load[x] + w * out[x].len() as f64 / slots;
+                    let sy = load[y] + w * out[y].len() as f64 / slots;
+                    sx.partial_cmp(&sy).unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .expect("replicas clamped to server count");
+            chosen.push(s);
+            load[s] += w;
+            out[s].push(a.id);
+        }
+    }
+    out
+}
+
+/// The `k` hottest adapters (strictly by descending weight, ties by
+/// ascending id) — the pre-warm set.
+pub fn top_hot(adapters: &[PlacementInput], k: usize) -> Vec<u64> {
+    let mut order: Vec<&PlacementInput> = adapters.iter().collect();
+    order.sort_by(|a, b| {
+        weight(b)
+            .partial_cmp(&weight(a))
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.id.cmp(&b.id))
+    });
+    order.into_iter().take(k).map(|a| a.id).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn input(id: u64, rank: usize, popularity: u64) -> PlacementInput {
+        PlacementInput {
+            id,
+            rank,
+            popularity,
+        }
+    }
+
+    #[test]
+    fn every_adapter_placed_with_distinct_replicas() {
+        let adapters: Vec<PlacementInput> =
+            (0..10).map(|id| input(id, 8 << (id % 4), id)).collect();
+        let cfg = PlacementConfig {
+            servers: 3,
+            replicas: 2,
+            slots_per_server: 8,
+        };
+        let placements = compute(&adapters, &cfg);
+        assert_eq!(placements.len(), 3);
+        for a in &adapters {
+            let hosts: Vec<usize> = (0..3)
+                .filter(|&s| placements[s].contains(&a.id))
+                .collect();
+            assert_eq!(hosts.len(), 2, "adapter {} on {hosts:?}", a.id);
+        }
+    }
+
+    #[test]
+    fn replicas_clamped_to_server_count() {
+        let adapters = vec![input(0, 8, 5)];
+        let cfg = PlacementConfig {
+            servers: 2,
+            replicas: 9,
+            slots_per_server: 8,
+        };
+        let placements = compute(&adapters, &cfg);
+        assert!(placements[0].contains(&0) && placements[1].contains(&0));
+    }
+
+    #[test]
+    fn hot_adapters_spread_across_servers() {
+        // Two very hot adapters must not share a server while cold ones
+        // pack wherever: the demand load dominates the score.
+        let mut adapters = vec![input(0, 64, 1000), input(1, 64, 900)];
+        adapters.extend((2..8).map(|id| input(id, 8, 1)));
+        let cfg = PlacementConfig {
+            servers: 2,
+            replicas: 1,
+            slots_per_server: 8,
+        };
+        let placements = compute(&adapters, &cfg);
+        let host_of = |id: u64| (0..2).find(|&s| placements[s].contains(&id)).unwrap();
+        assert_ne!(host_of(0), host_of(1), "{placements:?}");
+    }
+
+    #[test]
+    fn slot_pressure_spills_before_overpacking() {
+        // Nine equal-demand adapters over three servers with three slots
+        // each: the pressure penalty forces a 3/3/3 split rather than
+        // piling onto one server.
+        let adapters: Vec<PlacementInput> = (0..9).map(|id| input(id, 8, 10)).collect();
+        let cfg = PlacementConfig {
+            servers: 3,
+            replicas: 1,
+            slots_per_server: 3,
+        };
+        let placements = compute(&adapters, &cfg);
+        for s in 0..3 {
+            assert_eq!(placements[s].len(), 3, "{placements:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_same_inputs() {
+        let adapters: Vec<PlacementInput> =
+            (0..12).map(|id| input(id, 8 << (id % 4), 12 - id)).collect();
+        let cfg = PlacementConfig {
+            servers: 4,
+            replicas: 2,
+            slots_per_server: 8,
+        };
+        assert_eq!(compute(&adapters, &cfg), compute(&adapters, &cfg));
+    }
+
+    #[test]
+    fn top_hot_orders_by_weight_then_id() {
+        let adapters = vec![
+            input(3, 8, 100),  // weight 808
+            input(1, 64, 10),  // weight 704
+            input(2, 64, 10),  // weight 704 (tie with 1 → id order)
+            input(0, 8, 0),    // weight 8
+        ];
+        assert_eq!(top_hot(&adapters, 3), vec![3, 1, 2]);
+        assert_eq!(top_hot(&adapters, 0), Vec::<u64>::new());
+        assert_eq!(top_hot(&adapters, 99).len(), 4);
+    }
+}

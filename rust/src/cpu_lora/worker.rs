@@ -65,6 +65,13 @@ impl AdapterTable {
         self.inner.read().unwrap().get(&id).cloned()
     }
 
+    /// Drop an adapter's weights (runtime uninstall). In-flight holders
+    /// of the `Arc` keep computing against the old weights until they
+    /// release it; new lookups miss. Returns true if it was installed.
+    pub fn remove(&self, id: u64) -> bool {
+        self.inner.write().unwrap().remove(&id).is_some()
+    }
+
     /// Number of installed adapters.
     pub fn len(&self) -> usize {
         self.inner.read().unwrap().len()

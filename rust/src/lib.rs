@@ -57,6 +57,15 @@
 //!   [`scheduler::Policy`], re-routes on backend refusal, fans out
 //!   cancellation, and — being a `ServingFront` itself — drops into any
 //!   driver written for one engine (`caraserve cluster` runs it live).
+//! - [`coordinator::Coordinator`] — the §3 global coordinator over a
+//!   `ClusterFront`: computes registry-driven placements (popularity ×
+//!   rank × slot pressure), pre-warms the hot head before traffic, and
+//!   migrates hot adapters off saturated servers at runtime through the
+//!   `ServingFront` management surface
+//!   (`install_adapter` / `uninstall_adapter` / `prewarm_adapter`) —
+//!   uninstall refuses while requests are in flight, so migrations
+//!   never perturb a live token stream (`caraserve coordinator`
+//!   compares static vs coordinated placement live).
 //! - [`sim::SimFront`] — the discrete-event simulator behind the same
 //!   API; [`sim::Simulation`] runs calibrated cluster experiments.
 //! - [`scheduler::RankAwareScheduler`] — Algorithm 1 over a cluster,
@@ -70,6 +79,7 @@
 pub mod adapters;
 pub mod bench;
 pub mod config;
+pub mod coordinator;
 pub mod cpu_lora;
 pub mod ipc;
 pub mod kernels;

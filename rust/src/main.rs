@@ -9,11 +9,19 @@
 //!   breakdown.
 //! - `cluster`   — the §5 scheduler in front of *real* engines: route a
 //!   heterogeneous-rank synthetic workload (mixed ranks, mixed SLOs,
-//!   cold and warm adapters) across N native-runtime `InferenceServer`s
-//!   through a `ClusterFront`, per `--policy` (or several,
-//!   comma-separated, or `all`), printing per-policy TTFT/TPOT
-//!   percentiles, SLO attainment, per-server load balance, cold-start
-//!   counts, and preemptions. `--smoke` is the small CI configuration.
+//!   cold and warm adapters; `--skew` for a Zipf popularity head)
+//!   across N native-runtime `InferenceServer`s through a
+//!   `ClusterFront`, per `--policy` (or several, comma-separated, or
+//!   `all`), printing per-policy TTFT/TPOT percentiles, SLO attainment,
+//!   per-server load balance, cold-start counts, and preemptions.
+//!   `--smoke` is the small CI configuration.
+//! - `coordinator` — the §3 global coordinator over the same live
+//!   cluster: registry-driven placement (popularity × rank × slot
+//!   pressure), pre-warming of the `--prewarm` hottest adapters, and
+//!   runtime migration every `--migrate-interval` polls — compared
+//!   head-to-head against the static placement baseline on a skewed
+//!   (`--skew`) workload, printing both rows plus the coordinator's
+//!   placement/migration counters. `--smoke` is the CI configuration.
 //! - `simulate`  — run a single-instance simulation of one §7.2 workload.
 //! - `schedule`  — run the §7.5 cluster scheduling simulation.
 //! - `profile`   — fit the §5 performance models and print (α, β, R²).
@@ -39,7 +47,11 @@ subcommands:
   cluster   --instances N --policy rank-aware|most-idle|first-fit|random
             (comma-separate or `all` for several) --requests N
             --adapters N --mode cached|ondemand|caraserve --cpu-workers N
-            --threads N --kv-pages N --pace N --seed N --smoke
+            --threads N --kv-pages N --pace N --seed N --skew F --smoke
+  coordinator --instances N --policy NAME --requests N --adapters N
+            --skew F --migrate-interval N --prewarm K --replicas N
+            --mode cached|ondemand|caraserve --cpu-workers N --threads N
+            --kv-pages N --pace N --seed N --smoke
   simulate  --mode cached|ondmd|s-lora|caraserve --rps F --rank N --secs F
   schedule  --policy rank-aware|most-idle|first-fit|random --instances N
             --kernel bgmv|mbgmv --rps F --secs F
@@ -75,12 +87,17 @@ fn run() -> anyhow::Result<()> {
         "seed",
         "slo-ttft-ms",
         "slo-tpot-ms",
+        "skew",
+        "migrate-interval",
+        "prewarm",
+        "replicas",
     ])
     .map_err(|e| anyhow::anyhow!("{e}"))?;
 
     match args.subcommand() {
         Some("serve") => cmd_serve(&args),
         Some("cluster") => cmd_cluster(&args),
+        Some("coordinator") => cmd_coordinator(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("schedule") => cmd_schedule(&args),
         Some("profile") => cmd_profile(&args),
@@ -97,6 +114,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     use caraserve::runtime::{NativeConfig, NativeRuntime, Runtime};
     use caraserve::server::{
         ColdStartMode, EngineConfig, InferenceServer, LifecycleState, ServeRequest,
+        ServingFront,
     };
     let dir = args.opt_or("artifacts", "artifacts");
     let n: usize = args.opt_parse_or("requests", 16).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -157,7 +175,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         },
     )?;
     for id in 0..64u64 {
-        server.install_adapter(LoraSpec::standard(id, 8, "tiny"));
+        server.install_adapter(&LoraSpec::standard(id, 8, "tiny"))?;
     }
     // Only CaraServe on a backend with the per-layer seam ever plans an
     // assist row — don't spawn worker threads the run can't use.
@@ -278,6 +296,9 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         polls_per_arrival: args
             .opt_parse_or("pace", 2)
             .map_err(|e| anyhow::anyhow!("{e}"))?,
+        skew: args
+            .opt_parse_or("skew", 0.0)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
     };
     let policy_arg = args.opt_or("policy", if smoke { "rank-aware,random" } else { "all" });
     let policies: Vec<&str> = match policy_arg.as_str() {
@@ -307,9 +328,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         "preempt",
         "routed per server"
     );
-    let ms = |s: &Option<Summary>, f: fn(&Summary) -> f64| {
-        s.as_ref().map_or("-".to_string(), |s| format!("{:.1}", f(s) * 1e3))
-    };
+    let ms = caraserve::util::stats::ms_or_dash;
     let mut attainment: Vec<(String, f64)> = Vec::new();
     for name in &policies {
         // run() itself reconciles finished + rejected == submitted.
@@ -345,6 +364,149 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             if ra >= rnd { "rank-aware ≥ random ✓" } else { "rank-aware fell behind" }
         );
     }
+    Ok(())
+}
+
+fn cmd_coordinator(args: &Args) -> anyhow::Result<()> {
+    use caraserve::coordinator::CoordinatorConfig;
+    use caraserve::server::cluster::synthetic::{self, SyntheticConfig};
+    use caraserve::server::ColdStartMode;
+
+    let smoke = args.flag("smoke");
+    let mode = match args.opt_or("mode", "caraserve").as_str() {
+        "cached" => ColdStartMode::Cached,
+        "ondemand" | "ondmd" => ColdStartMode::OnDemand,
+        _ => ColdStartMode::CaraServe,
+    };
+    let cfg = SyntheticConfig {
+        instances: args
+            .opt_parse_or("instances", if smoke { 2 } else { 3 })
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        requests: args
+            .opt_parse_or("requests", if smoke { 16 } else { 48 })
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        adapters: args
+            .opt_parse_or("adapters", 16)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        seed: args.opt_parse_or("seed", 1).map_err(|e| anyhow::anyhow!("{e}"))?,
+        threads: args
+            .opt_parse_or("threads", 1)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        cpu_workers: args
+            .opt_parse_or("cpu-workers", if smoke { 0 } else { 2 })
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        cold_start: mode,
+        kv_pages: args
+            .opt_parse_or("kv-pages", 256)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        polls_per_arrival: args
+            .opt_parse_or("pace", 1)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        // The coordinator exists for skewed demand: default to a real
+        // Zipf head rather than the legacy mix.
+        skew: args
+            .opt_parse_or("skew", 1.2)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+    };
+    let ccfg = CoordinatorConfig {
+        migrate_interval: args
+            .opt_parse_or("migrate-interval", 4)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        prewarm: args
+            .opt_parse_or("prewarm", 4)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        // Two replicas per adapter by default — the same replication
+        // factor as the static `hosts` baseline, so the comparison is
+        // about *where* adapters live, not how many copies exist.
+        replicas: args
+            .opt_parse_or("replicas", 2)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        ..Default::default()
+    };
+    let policy = args.opt_or("policy", "rank-aware");
+
+    println!(
+        "coordinator: {} native engines, {} requests, {} adapters, skew {}, \
+         mode {mode:?}, policy {policy}, migrate every {} polls, prewarm top-{}",
+        cfg.instances,
+        cfg.requests,
+        cfg.adapters,
+        cfg.skew,
+        ccfg.migrate_interval,
+        ccfg.prewarm
+    );
+    println!(
+        "{:<12} {:>6} {:>9} {:>10} {:>10} {:>10} {:>10} {:>6} {:>8}  {}",
+        "placement",
+        "done",
+        "SLO %",
+        "ttft p50",
+        "ttft p99",
+        "tpot p50",
+        "tpot p99",
+        "cold",
+        "preempt",
+        "routed per server"
+    );
+    let ms = caraserve::util::stats::ms_or_dash;
+    let print_row = |label: &str, rep: &synthetic::RunReport| {
+        let routed: Vec<String> = rep
+            .routed
+            .iter()
+            .zip(&rep.routed_rank_sum)
+            .map(|(n, r)| format!("{n}(Σr{r})"))
+            .collect();
+        println!(
+            "{:<12} {:>6} {:>8.1}% {:>10} {:>10} {:>10} {:>10} {:>6} {:>8}  {}",
+            label,
+            rep.finished,
+            rep.slo_attainment.unwrap_or(1.0) * 100.0,
+            ms(&rep.ttft, |s| s.p50),
+            ms(&rep.ttft, |s| s.p99),
+            ms(&rep.tpot, |s| s.p50),
+            ms(&rep.tpot, |s| s.p99),
+            rep.cold.cold_admits,
+            rep.preemptions,
+            routed.join(" ")
+        );
+    };
+
+    let static_rep = synthetic::run(&policy, &cfg)?;
+    print_row("static", &static_rep);
+    let (coord_rep, coord) = synthetic::run_coordinated(&policy, &cfg, ccfg)?;
+    print_row("coordinator", &coord_rep);
+
+    let cs = coord.coordinator_stats();
+    println!(
+        "\ncoordinator: {} initial placements, {} prewarmed, {} rebalance ticks, \
+         {} migrations, {} retirements ({} deferred)",
+        cs.initial_placements,
+        cs.prewarmed,
+        cs.rebalance_ticks,
+        cs.migrations,
+        cs.retirements,
+        cs.deferred_retirements
+    );
+    for ev in coord.migration_log() {
+        println!(
+            "  migrated adapter {} from server {} to server {}",
+            ev.adapter, ev.from, ev.to
+        );
+    }
+    let (sa, ca) = (
+        static_rep.slo_attainment.unwrap_or(1.0),
+        coord_rep.slo_attainment.unwrap_or(1.0),
+    );
+    println!(
+        "coordinator {:.1}% vs static {:.1}% SLO attainment ({})",
+        ca * 100.0,
+        sa * 100.0,
+        if ca >= sa {
+            "coordinator ≥ static ✓"
+        } else {
+            "coordinator fell behind"
+        }
+    );
     Ok(())
 }
 

@@ -1,7 +1,9 @@
 //! Global LoRA registry (paper §3): metadata for every adapter in the
 //! cluster — rank, base model, weights location — plus which servers
-//! currently host it. The paper prototypes this with SQLite; here it is
-//! an in-memory store with optional JSON persistence.
+//! currently host it and how much demand each adapter has seen (the
+//! popularity counter the [`crate::coordinator`] placement policy and
+//! migration engine score by). The paper prototypes this with SQLite;
+//! here it is an in-memory store with optional JSON persistence.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
@@ -28,8 +30,12 @@ pub struct GlobalRegistry {
 #[derive(Default)]
 struct Inner {
     adapters: BTreeMap<u64, AdapterMeta>,
-    /// adapter id → servers hosting it in their local repository.
+    /// adapter id → servers hosting it in their local repository. No
+    /// entry ever holds an empty set ([`GlobalRegistry::unplace`] prunes).
     placements: BTreeMap<u64, BTreeSet<usize>>,
+    /// adapter id → requests observed (routing fronts record each
+    /// submission; coordinators may seed historical priors).
+    popularity: BTreeMap<u64, u64>,
 }
 
 impl GlobalRegistry {
@@ -65,11 +71,67 @@ impl GlobalRegistry {
             .insert(server);
     }
 
-    /// Remove a placement.
+    /// Remove a placement. An adapter whose last placement is removed
+    /// disappears from the placement table entirely (no empty-set
+    /// tombstones accumulate over migration churn).
     pub fn unplace(&self, id: u64, server: usize) {
-        if let Some(set) = self.inner.write().unwrap().placements.get_mut(&id) {
+        let mut inner = self.inner.write().unwrap();
+        if let Some(set) = inner.placements.get_mut(&id) {
             set.remove(&server);
+            if set.is_empty() {
+                inner.placements.remove(&id);
+            }
         }
+    }
+
+    /// Remove an adapter entirely: metadata, placements, popularity.
+    pub fn unregister(&self, id: u64) -> bool {
+        let mut inner = self.inner.write().unwrap();
+        inner.placements.remove(&id);
+        inner.popularity.remove(&id);
+        inner.adapters.remove(&id).is_some()
+    }
+
+    /// Record one observed request against `id` (routing fronts call
+    /// this per submission; the coordinator reads it back as demand).
+    pub fn record_request(&self, id: u64) {
+        self.record_requests(id, 1);
+    }
+
+    /// Record `n` observed requests against `id` — bulk form for seeding
+    /// a historical demand prior before traffic starts.
+    pub fn record_requests(&self, id: u64, n: u64) {
+        let mut inner = self.inner.write().unwrap();
+        *inner.popularity.entry(id).or_insert(0) += n;
+    }
+
+    /// Requests observed against `id` so far.
+    pub fn popularity(&self, id: u64) -> u64 {
+        self.inner
+            .read()
+            .unwrap()
+            .popularity
+            .get(&id)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// `(id, popularity)` for every registered adapter, hottest first
+    /// (ties broken by ascending id, so the order is deterministic).
+    pub fn popularity_table(&self) -> Vec<(u64, u64)> {
+        let inner = self.inner.read().unwrap();
+        let mut table: Vec<(u64, u64)> = inner
+            .adapters
+            .keys()
+            .map(|&id| (id, inner.popularity.get(&id).copied().unwrap_or(0)))
+            .collect();
+        table.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        table
+    }
+
+    /// Number of adapters with at least one recorded placement.
+    pub fn placed_len(&self) -> usize {
+        self.inner.read().unwrap().placements.len()
     }
 
     /// Servers hosting adapter `id`.
@@ -106,11 +168,13 @@ impl GlobalRegistry {
             .adapters
             .values()
             .map(|m| {
+                let pop = inner.popularity.get(&m.id).copied().unwrap_or(0);
                 json::obj(vec![
                     ("id", json::num(m.id as f64)),
                     ("rank", json::num(m.rank as f64)),
                     ("base_model", json::s(&m.base_model)),
                     ("weights_path", json::s(&m.weights_path)),
+                    ("popularity", json::num(pop as f64)),
                     (
                         "servers",
                         Json::Arr(
@@ -171,6 +235,12 @@ impl GlobalRegistry {
                     }
                 }
             }
+            // Popularity is optional (older files predate the counter).
+            if let Some(pop) = item.get("popularity").and_then(Json::as_f64) {
+                if pop > 0.0 {
+                    reg.record_requests(id, pop as u64);
+                }
+            }
         }
         Ok(reg)
     }
@@ -216,6 +286,54 @@ mod tests {
     }
 
     #[test]
+    fn unplace_prunes_empty_entries() {
+        let reg = GlobalRegistry::new();
+        reg.register(meta(1, 64));
+        reg.register(meta(2, 8));
+        reg.place(1, 0);
+        reg.place(2, 1);
+        assert_eq!(reg.placed_len(), 2);
+        reg.unplace(1, 0);
+        // The emptied entry is gone, not an empty-set tombstone.
+        assert_eq!(reg.placed_len(), 1);
+        assert!(reg.servers_for(1).is_empty());
+        // Unplacing a never-placed or already-empty id is a no-op.
+        reg.unplace(1, 5);
+        reg.unplace(99, 0);
+        assert_eq!(reg.placed_len(), 1);
+    }
+
+    #[test]
+    fn popularity_accumulates_and_orders() {
+        let reg = GlobalRegistry::new();
+        reg.register(meta(1, 64));
+        reg.register(meta(2, 8));
+        reg.register(meta(3, 16));
+        assert_eq!(reg.popularity(1), 0);
+        reg.record_request(2);
+        reg.record_request(2);
+        reg.record_requests(3, 5);
+        assert_eq!(reg.popularity(2), 2);
+        assert_eq!(reg.popularity(3), 5);
+        // Hottest first, ties (zero-demand adapters) by ascending id.
+        assert_eq!(reg.popularity_table(), vec![(3, 5), (2, 2), (1, 0)]);
+    }
+
+    #[test]
+    fn unregister_drops_all_state() {
+        let reg = GlobalRegistry::new();
+        reg.register(meta(1, 64));
+        reg.place(1, 0);
+        reg.record_request(1);
+        assert!(reg.unregister(1));
+        assert!(!reg.unregister(1));
+        assert!(reg.get(1).is_none());
+        assert!(reg.servers_for(1).is_empty());
+        assert_eq!(reg.popularity(1), 0);
+        assert_eq!(reg.placed_len(), 0);
+    }
+
+    #[test]
     fn save_load_roundtrip() {
         let reg = GlobalRegistry::new();
         reg.register(meta(1, 64));
@@ -230,6 +348,44 @@ mod tests {
         assert_eq!(back.get(7).unwrap().rank, 16);
         assert_eq!(back.servers_for(7), vec![2]);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn save_load_roundtrip_covers_placements_and_popularity() {
+        let reg = GlobalRegistry::new();
+        reg.register(meta(1, 64));
+        reg.register(meta(2, 8));
+        reg.register(meta(3, 32));
+        reg.place(1, 0);
+        reg.place(1, 4);
+        reg.place(2, 1);
+        reg.place(3, 2);
+        reg.unplace(3, 2); // pruned: must not resurrect on load
+        reg.record_requests(1, 12);
+        reg.record_request(2);
+        let dir = std::env::temp_dir().join("caraserve-registry-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("registry_placements.json");
+        reg.save(&path).unwrap();
+        let back = GlobalRegistry::load(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.servers_for(1), vec![0, 4]);
+        assert_eq!(back.servers_for(2), vec![1]);
+        assert!(back.servers_for(3).is_empty());
+        assert_eq!(back.placed_len(), 2);
+        assert_eq!(back.popularity(1), 12);
+        assert_eq!(back.popularity(2), 1);
+        assert_eq!(back.popularity(3), 0);
+        assert_eq!(back.popularity_table(), reg.popularity_table());
+        // A second hop is byte-stable (BTreeMap ordering everywhere).
+        let path2 = dir.join("registry_placements2.json");
+        back.save(&path2).unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap(),
+            std::fs::read_to_string(&path2).unwrap()
+        );
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&path2).ok();
     }
 
     #[test]

@@ -22,6 +22,7 @@
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 
+use crate::model::LoraSpec;
 use crate::scheduler::ServerStats;
 
 /// Request priority class (admission order within a backend's queue).
@@ -496,6 +497,15 @@ impl ActiveRequest {
 /// ([`crate::server::ClusterFront`]) all implement this trait, so
 /// `scheduler::Policy` and drivers route against one interface.
 ///
+/// Besides the request path (submit / poll / cancel / stats), the trait
+/// carries the **adapter-management surface** the global coordinator
+/// drives at runtime: [`ServingFront::install_adapter`] /
+/// [`ServingFront::uninstall_adapter`] are callable after construction
+/// (uninstall refuses while requests on the adapter are in flight, so a
+/// migration can never corrupt a live token stream), and
+/// [`ServingFront::prewarm_adapter`] makes an installed adapter
+/// device-resident ahead of first traffic.
+///
 /// The trait is **object-safe**: cluster composition works over
 /// `Box<dyn ServingFront>` backends, and a `ClusterFront` is itself a
 /// `ServingFront`, so drivers, tests, and the CLI run unchanged against
@@ -515,6 +525,28 @@ pub trait ServingFront {
 
     /// The scheduler's `GetStats` view of this backend's load.
     fn stats(&self) -> ServerStats;
+
+    /// Install an adapter at runtime: after `Ok`, requests against
+    /// `spec.id` are admissible. Idempotent — re-installing an adapter
+    /// updates its metadata/weights in place.
+    fn install_adapter(&mut self, spec: &LoraSpec) -> anyhow::Result<()>;
+
+    /// Remove an adapter at runtime. Refuses (`Err`) while requests on
+    /// the adapter are queued or running — callers (the migration
+    /// engine) retry after the in-flight work drains, so an evicted
+    /// adapter's live token streams are never perturbed. After `Ok`,
+    /// new submissions against the adapter are rejected.
+    fn uninstall_adapter(&mut self, adapter: u64) -> anyhow::Result<()>;
+
+    /// Make an installed adapter device-resident ahead of first traffic
+    /// (the coordinator's pre-warming of hot adapters), so its first
+    /// request admits warm. Returns `Ok(false)` when the backend cannot
+    /// warm it right now (e.g. the target slot is pinned by a live
+    /// adapter); `Err` when the adapter is not installed at all.
+    fn prewarm_adapter(&mut self, adapter: u64) -> anyhow::Result<bool> {
+        let _ = adapter;
+        Ok(false)
+    }
 
     /// Cold-start counters, for backends that track them (`None`
     /// otherwise). Cluster fronts aggregate their backends' counters.

@@ -48,7 +48,8 @@ use super::api::{
     EventChannel, LifecycleState, RequestEvent, RequestHandle, ServeRequest, ServingFront,
 };
 use super::metrics::{ColdStartStats, MetricsRecorder};
-use crate::scheduler::registry::GlobalRegistry;
+use crate::model::LoraSpec;
+use crate::scheduler::registry::{AdapterMeta, GlobalRegistry};
 use crate::scheduler::{AdapterSet, Policy, SchedRequest, ServerStats};
 
 /// Book-keeping for one routed, still-live request.
@@ -140,6 +141,67 @@ impl ClusterFront {
         self.backends.iter().map(|b| b.stats()).collect()
     }
 
+    /// Install an adapter on one specific backend and record the
+    /// placement — the coordinator's targeted placement/migration
+    /// primitive. The backend install lands *before* the registry
+    /// placement, and both happen under this one `&mut self` call, so
+    /// no interleaved submission can ever observe a placement whose
+    /// server cannot actually serve the adapter.
+    pub fn install_on(&mut self, server: usize, spec: &LoraSpec) -> Result<()> {
+        anyhow::ensure!(
+            server < self.backends.len(),
+            "server {server} out of range ({} backends)",
+            self.backends.len()
+        );
+        self.backends[server].install_adapter(spec)?;
+        // Register (or refresh) the metadata only after the backend
+        // accepted, so the registry's rank — what the scheduler's
+        // SchedRequest is built from — can never drift from the weights
+        // the backends actually serve. A known weights_path survives
+        // the refresh.
+        let weights_path = self
+            .registry
+            .get(spec.id)
+            .map(|m| m.weights_path)
+            .unwrap_or_default();
+        self.registry.register(AdapterMeta {
+            id: spec.id,
+            rank: spec.rank,
+            base_model: spec.base_model.clone(),
+            weights_path,
+        });
+        self.registry.place(spec.id, server);
+        Ok(())
+    }
+
+    /// Remove an adapter from one specific backend and retire the
+    /// placement. The backend refuses while requests on the adapter are
+    /// in flight there — in that case nothing changes (the placement
+    /// stays, the router keeps routing) and the caller retries later,
+    /// so the registry and the backend's real adapter set never
+    /// disagree mid-uninstall.
+    pub fn uninstall_on(&mut self, server: usize, adapter: u64) -> Result<()> {
+        anyhow::ensure!(
+            server < self.backends.len(),
+            "server {server} out of range ({} backends)",
+            self.backends.len()
+        );
+        self.backends[server].uninstall_adapter(adapter)?;
+        self.registry.unplace(adapter, server);
+        Ok(())
+    }
+
+    /// Pre-warm an adapter on one specific backend (see
+    /// [`ServingFront::prewarm_adapter`]).
+    pub fn prewarm_on(&mut self, server: usize, adapter: u64) -> Result<bool> {
+        anyhow::ensure!(
+            server < self.backends.len(),
+            "server {server} out of range ({} backends)",
+            self.backends.len()
+        );
+        self.backends[server].prewarm_adapter(adapter)
+    }
+
     /// Relay pending backend events into the client-facing channels and
     /// forward client-side cancellations (`handle.cancel()`) to the
     /// owning backends. Terminal events retire the route.
@@ -201,6 +263,10 @@ impl ServingFront for ClusterFront {
             )));
             return handle;
         };
+        // Demand signal for the coordinator's placement/migration
+        // scoring: every routed submission bumps the adapter's
+        // popularity counter.
+        self.registry.record_request(req.adapter);
         let sreq = SchedRequest {
             id,
             adapter: req.adapter,
@@ -312,6 +378,65 @@ impl ServingFront for ClusterFront {
         agg
     }
 
+    /// Cluster-level install: place the adapter on the backend with the
+    /// smallest local adapter set (the least slot pressure) — ties go to
+    /// the lowest index, `AdapterSet::Any` backends (which serve
+    /// everything already) last. Use [`ClusterFront::install_on`] to
+    /// target a specific backend.
+    fn install_adapter(&mut self, spec: &LoraSpec) -> Result<()> {
+        anyhow::ensure!(!self.backends.is_empty(), "cluster has no backends");
+        let target = self
+            .backends
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, b)| match b.stats().adapters {
+                AdapterSet::Only(ids) => ids.len(),
+                AdapterSet::Any => usize::MAX,
+            })
+            .map(|(i, _)| i)
+            .expect("≥ 1 backend");
+        self.install_on(target, spec)
+    }
+
+    /// Cluster-level uninstall: retire the adapter from every backend
+    /// hosting it. Retirement is per-server atomic — each server either
+    /// uninstalls (and loses its placement) or refuses because requests
+    /// are in flight there; on any refusal the call errs and the caller
+    /// retries, with already-retired servers staying retired.
+    fn uninstall_adapter(&mut self, adapter: u64) -> Result<()> {
+        let hosts: Vec<usize> = (0..self.backends.len())
+            .filter(|&s| self.backends[s].stats().can_serve(adapter))
+            .collect();
+        anyhow::ensure!(!hosts.is_empty(), "adapter {adapter} not installed");
+        let mut refused = Vec::new();
+        for s in hosts {
+            if let Err(e) = self.uninstall_on(s, adapter) {
+                refused.push(format!("server {s}: {e}"));
+            }
+        }
+        anyhow::ensure!(
+            refused.is_empty(),
+            "adapter {adapter} still hosted: {}",
+            refused.join("; ")
+        );
+        Ok(())
+    }
+
+    /// Pre-warm the adapter on every backend hosting it; true when at
+    /// least one backend warmed it.
+    fn prewarm_adapter(&mut self, adapter: u64) -> Result<bool> {
+        let mut any = false;
+        let mut hosted = false;
+        for backend in self.backends.iter_mut() {
+            if backend.stats().can_serve(adapter) {
+                hosted = true;
+                any |= backend.prewarm_adapter(adapter)?;
+            }
+        }
+        anyhow::ensure!(hosted, "adapter {adapter} not installed");
+        Ok(any)
+    }
+
     /// Aggregate cold-start counters across backends that report them.
     fn cold_start_stats(&self) -> Option<ColdStartStats> {
         let mut total = ColdStartStats::default();
@@ -343,16 +468,17 @@ pub mod synthetic {
 
     use super::{ClusterFront, ServingFront};
     use crate::config::GpuSpec;
+    use crate::coordinator::{Coordinator, CoordinatorConfig};
     use crate::model::{LlamaConfig, LoraSpec};
     use crate::perfmodel::{profiler, KernelKind};
     use crate::runtime::{NativeConfig, NativeRuntime};
     use crate::scheduler::registry::{AdapterMeta, GlobalRegistry};
     use crate::scheduler::{policy_by_name, Policy, RankAwareConfig};
-    use crate::server::api::{LifecycleState, Priority, ServeRequest};
+    use crate::server::api::{LifecycleState, Priority, RequestHandle, ServeRequest};
     use crate::server::engine::{ColdStartMode, EngineConfig, InferenceServer};
     use crate::server::metrics::ColdStartStats;
     use crate::sim::GpuModel;
-    use crate::util::rng::Rng;
+    use crate::util::rng::{Rng, Zipf};
     use crate::util::stats::Summary;
 
     /// The heterogeneous rank population (Fig 5 / §7.5 style).
@@ -395,6 +521,12 @@ pub mod synthetic {
         /// Cluster iterations driven between arrivals (open-loop-ish
         /// pacing: smaller ⇒ deeper queues ⇒ more routing pressure).
         pub polls_per_arrival: usize,
+        /// Adapter-popularity skew. `0.0` keeps the legacy mix (60% of
+        /// traffic on the hottest quarter); any positive value draws
+        /// adapters from a Zipf distribution with this exponent
+        /// (`--skew 1.0` ≈ classic power law; larger ⇒ hotter head),
+        /// the regime where coordinator placement + migration pays off.
+        pub skew: f64,
     }
 
     impl Default for SyntheticConfig {
@@ -409,6 +541,7 @@ pub mod synthetic {
                 cold_start: ColdStartMode::CaraServe,
                 kv_pages: 256,
                 polls_per_arrival: 2,
+                skew: 0.0,
             }
         }
     }
@@ -436,6 +569,10 @@ pub mod synthetic {
         pub preemptions: usize,
         /// Wall-clock of the whole run (seconds).
         pub wall_s: f64,
+        /// Per-request token streams in submission order (empty for
+        /// rejected requests) — what bitwise-equivalence tests compare
+        /// across placements and migrations.
+        pub streams: Vec<Vec<i32>>,
     }
 
     /// Fit §5 performance models (BGMV, Llama2-7B/A10 profile) and build
@@ -468,35 +605,43 @@ pub mod synthetic {
         )
     }
 
-    /// Build the cluster: N native engines with partial adapter
-    /// placement, a shared registry carrying every adapter's rank, and
-    /// the given policy in front.
+    /// One bare native engine per the config's knobs, with no adapters
+    /// installed yet.
+    fn engine(cfg: &SyntheticConfig) -> Result<InferenceServer> {
+        let native = NativeRuntime::new(NativeConfig {
+            threads: cfg.threads.max(1),
+            ..NativeConfig::tiny()
+        });
+        let mut server = InferenceServer::new(
+            native,
+            EngineConfig {
+                cold_start: cfg.cold_start,
+                kv_pages: cfg.kv_pages,
+                ..Default::default()
+            },
+        )?;
+        if cfg.cpu_workers > 0
+            && cfg.cold_start == ColdStartMode::CaraServe
+            && server.runtime.supports_cpu_assist()
+        {
+            server.enable_cpu_assist(cfg.cpu_workers)?;
+        }
+        Ok(server)
+    }
+
+    /// Build the cluster: N native engines with *static* partial adapter
+    /// placement (the pre-coordinator baseline: `hosts` assigns each
+    /// adapter to servers by id, blind to demand), a shared registry
+    /// carrying every adapter's rank, and the given policy in front.
     pub fn build(cfg: &SyntheticConfig, policy: Box<dyn Policy>) -> Result<ClusterFront> {
         let registry = Arc::new(GlobalRegistry::new());
         let mut backends: Vec<Box<dyn ServingFront>> = Vec::with_capacity(cfg.instances);
         for s in 0..cfg.instances {
-            let native = NativeRuntime::new(NativeConfig {
-                threads: cfg.threads.max(1),
-                ..NativeConfig::tiny()
-            });
-            let mut server = InferenceServer::new(
-                native,
-                EngineConfig {
-                    cold_start: cfg.cold_start,
-                    kv_pages: cfg.kv_pages,
-                    ..Default::default()
-                },
-            )?;
+            let mut server = engine(cfg)?;
             for a in 0..cfg.adapters as u64 {
                 if hosts(cfg.instances, a, s) {
-                    server.install_adapter(LoraSpec::standard(a, rank_of(a), "tiny"));
+                    server.install_adapter(&LoraSpec::standard(a, rank_of(a), "tiny"))?;
                 }
-            }
-            if cfg.cpu_workers > 0
-                && cfg.cold_start == ColdStartMode::CaraServe
-                && server.runtime.supports_cpu_assist()
-            {
-                server.enable_cpu_assist(cfg.cpu_workers)?;
             }
             backends.push(Box::new(server));
         }
@@ -516,19 +661,58 @@ pub mod synthetic {
         Ok(ClusterFront::new(backends, policy, registry))
     }
 
-    /// The heterogeneous workload: skewed adapter popularity (60% of
-    /// traffic on the hottest quarter keeps warm hits and cold starts
-    /// both live), mixed prompt/output lengths, and three SLO tiers
-    /// spanning interactive to batch.
+    /// Build the coordinated cluster: the same N native engines, but
+    /// with **no** static placement — every adapter is registered in the
+    /// shared registry with a historical demand prior (the workload's
+    /// own adapter histogram, what the §3 coordinator would have
+    /// observed), and the [`Coordinator`] computes placements from
+    /// popularity × rank × slot pressure, installs them, and pre-warms
+    /// the hot head before the first request arrives.
+    pub fn build_coordinated(
+        cfg: &SyntheticConfig,
+        policy: Box<dyn Policy>,
+        ccfg: CoordinatorConfig,
+    ) -> Result<Coordinator> {
+        let registry = Arc::new(GlobalRegistry::new());
+        let mut backends: Vec<Box<dyn ServingFront>> = Vec::with_capacity(cfg.instances);
+        for _ in 0..cfg.instances {
+            backends.push(Box::new(engine(cfg)?));
+        }
+        for a in 0..cfg.adapters as u64 {
+            registry.register(AdapterMeta {
+                id: a,
+                rank: rank_of(a),
+                base_model: "tiny".into(),
+                weights_path: String::new(),
+            });
+        }
+        // Demand prior: the workload generator is deterministic, so its
+        // adapter histogram doubles as the coordinator's request log.
+        for req in workload(cfg) {
+            registry.record_request(req.adapter);
+        }
+        let mut coord =
+            Coordinator::new(ClusterFront::new(backends, policy, registry), ccfg);
+        coord.place_and_prewarm()?;
+        Ok(coord)
+    }
+
+    /// The heterogeneous workload: skewed adapter popularity (Zipf with
+    /// exponent `cfg.skew` when positive; otherwise the legacy mix of
+    /// 60% of traffic on the hottest quarter — both keep warm hits and
+    /// cold starts live), mixed prompt/output lengths, and three SLO
+    /// tiers spanning interactive to batch. Deterministic per seed, so
+    /// the same config always yields the same request list.
     pub fn workload(cfg: &SyntheticConfig) -> Vec<ServeRequest> {
         let mut rng = Rng::new(cfg.seed);
         let hot = (cfg.adapters / 4).max(1);
+        let zipf = (cfg.skew > 0.0).then(|| Zipf::new(cfg.adapters, cfg.skew));
         (0..cfg.requests)
             .map(|_| {
-                let adapter = if rng.chance(0.6) {
-                    rng.range(0, hot) as u64
-                } else {
-                    rng.range(0, cfg.adapters) as u64
+                let adapter = match &zipf {
+                    Some(z) => z.sample(&mut rng) as u64,
+                    None if rng.chance(0.6) => rng.range(0, hot) as u64,
+                    None => rng.range(0, cfg.adapters) as u64,
                 };
                 let prompt: Vec<i32> = (0..rng.range(8, 32))
                     .map(|_| rng.range(0, 1024) as i32)
@@ -544,23 +728,34 @@ pub mod synthetic {
             .collect()
     }
 
-    /// Drive one policy over the synthetic workload end to end and
-    /// report cluster metrics.
-    pub fn run(policy_name: &str, cfg: &SyntheticConfig) -> Result<RunReport> {
-        let mut cluster = build(cfg, policy(policy_name, cfg.seed)?)?;
-        let reqs = workload(cfg);
-        let total = reqs.len();
+    /// Submit the workload with the config's pacing and drive the front
+    /// to idle; returns the handles (submission order) and wall time.
+    fn drive<F: ServingFront>(
+        front: &mut F,
+        reqs: Vec<ServeRequest>,
+        polls_per_arrival: usize,
+    ) -> Result<(Vec<RequestHandle>, f64)> {
         let t0 = Instant::now();
-        let mut handles = Vec::with_capacity(total);
+        let mut handles = Vec::with_capacity(reqs.len());
         for req in reqs {
-            handles.push(cluster.submit(req));
-            for _ in 0..cfg.polls_per_arrival {
-                cluster.poll()?;
+            handles.push(front.submit(req));
+            for _ in 0..polls_per_arrival {
+                front.poll()?;
             }
         }
-        cluster.run_until_idle()?;
-        let wall_s = t0.elapsed().as_secs_f64();
+        front.run_until_idle()?;
+        Ok((handles, t0.elapsed().as_secs_f64()))
+    }
 
+    /// Reconcile the handles and assemble the per-policy report from
+    /// the cluster's metrics.
+    fn report(
+        policy_name: &str,
+        cluster: &ClusterFront,
+        handles: &[RequestHandle],
+        wall_s: f64,
+    ) -> Result<RunReport> {
+        let total = handles.len();
         let finished = handles
             .iter()
             .filter(|h| h.state() == LifecycleState::Finished)
@@ -590,7 +785,32 @@ pub mod synthetic {
             cold: cluster.cold_start_stats().unwrap_or_default(),
             preemptions: per_server.iter().map(|s| s.preemptions).sum(),
             wall_s,
+            streams: handles.iter().map(|h| h.tokens()).collect(),
         })
+    }
+
+    /// Drive one policy over the synthetic workload end to end with the
+    /// static placement baseline and report cluster metrics.
+    pub fn run(policy_name: &str, cfg: &SyntheticConfig) -> Result<RunReport> {
+        let mut cluster = build(cfg, policy(policy_name, cfg.seed)?)?;
+        let (handles, wall_s) = drive(&mut cluster, workload(cfg), cfg.polls_per_arrival)?;
+        report(policy_name, &cluster, &handles, wall_s)
+    }
+
+    /// Drive one policy over the same workload with the coordinator in
+    /// front: registry-driven placement, pre-warming, and live
+    /// migration. Returns the report plus the coordinator itself so
+    /// callers can inspect [`crate::coordinator::CoordinatorStats`] and
+    /// the final registry placements.
+    pub fn run_coordinated(
+        policy_name: &str,
+        cfg: &SyntheticConfig,
+        ccfg: CoordinatorConfig,
+    ) -> Result<(RunReport, Coordinator)> {
+        let mut coord = build_coordinated(cfg, policy(policy_name, cfg.seed)?, ccfg)?;
+        let (handles, wall_s) = drive(&mut coord, workload(cfg), cfg.polls_per_arrival)?;
+        let rep = report(policy_name, coord.cluster(), &handles, wall_s)?;
+        Ok((rep, coord))
     }
 }
 
@@ -609,7 +829,7 @@ mod tests {
         let inst = SimInstance::new(0, model, ServingMode::CaraServe, 32, 8, 64);
         let mut front = SimFront::new(inst, max_prompt);
         for &(id, rank) in adapters {
-            front.install_adapter(id, rank);
+            front.register_adapter(id, rank);
         }
         front
     }
@@ -754,6 +974,82 @@ mod tests {
         assert!(running.tokens().len() < 30);
         assert!(!cluster.cancel(queued.id()), "dead ids report false");
         assert!(!cluster.cancel(12345));
+    }
+
+    #[test]
+    fn install_on_updates_backend_and_registry_together() {
+        let adapters: Vec<(u64, usize)> = vec![(1, 8)];
+        let mut cluster = cluster_of(
+            vec![Box::new(sim_backend(64, &adapters)), Box::new(sim_backend(64, &adapters))],
+            &adapters,
+        );
+        // Adapter 9 is unknown everywhere: a submit rejects at the front.
+        assert_eq!(
+            cluster.submit(ServeRequest::new(9, vec![1; 4])).state(),
+            LifecycleState::Rejected
+        );
+        cluster.install_on(1, &LoraSpec::standard(9, 16, "sim")).unwrap();
+        assert_eq!(cluster.registry().servers_for(9), vec![1]);
+        assert_eq!(cluster.registry().rank_of(9), Some(16));
+        // Routing now steers to the only hosting backend.
+        let h = cluster.submit(ServeRequest::new(9, vec![1; 4]).max_new_tokens(2));
+        cluster.run_until_idle().unwrap();
+        assert_eq!(h.state(), LifecycleState::Finished);
+        assert!(h.drain_events().contains(&RequestEvent::Routed { server: 1 }));
+        // Out-of-range targets are an error, not a panic.
+        assert!(cluster.install_on(5, &LoraSpec::standard(9, 16, "sim")).is_err());
+        assert!(cluster.prewarm_on(5, 9).is_err());
+        assert!(cluster.uninstall_on(5, 9).is_err());
+    }
+
+    #[test]
+    fn uninstall_refuses_while_requests_are_in_flight() {
+        let adapters: Vec<(u64, usize)> = vec![(1, 8), (2, 8)];
+        let mut cluster = cluster_of(
+            vec![Box::new(sim_backend(64, &adapters))],
+            &adapters,
+        );
+        cluster.registry().place(1, 0);
+        cluster.registry().place(2, 0);
+        let h = cluster.submit(ServeRequest::new(1, vec![1; 8]).max_new_tokens(6));
+        // Queued on adapter 1: the per-server retire must refuse and
+        // leave both the placement and the backend untouched.
+        let err = cluster.uninstall_on(0, 1).unwrap_err();
+        assert!(err.to_string().contains("busy"), "{err}");
+        assert_eq!(cluster.registry().servers_for(1), vec![0]);
+        assert!(cluster.stats().can_serve(1));
+        // Adapter 2 is idle: retire succeeds and prunes its placement.
+        cluster.uninstall_on(0, 2).unwrap();
+        assert!(cluster.registry().servers_for(2).is_empty());
+        assert!(!cluster.stats().can_serve(2));
+        // After draining, the refused retire goes through; the stream
+        // completed untouched.
+        cluster.run_until_idle().unwrap();
+        assert_eq!(h.state(), LifecycleState::Finished);
+        assert_eq!(h.tokens(), vec![0, 1, 2, 3, 4, 5]);
+        ServingFront::uninstall_adapter(&mut cluster, 1).unwrap();
+        assert!(cluster.registry().servers_for(1).is_empty());
+        assert_eq!(
+            cluster.submit(ServeRequest::new(1, vec![1; 4])).state(),
+            LifecycleState::Rejected
+        );
+    }
+
+    #[test]
+    fn cluster_level_install_picks_least_loaded_backend() {
+        // Backend 0 hosts two adapters, backend 1 one: a cluster-level
+        // install lands on backend 1.
+        let a0: Vec<(u64, usize)> = vec![(1, 8), (2, 8)];
+        let a1: Vec<(u64, usize)> = vec![(1, 8)];
+        let all: Vec<(u64, usize)> = vec![(1, 8), (2, 8)];
+        let mut cluster = cluster_of(
+            vec![Box::new(sim_backend(64, &a0)), Box::new(sim_backend(64, &a1))],
+            &all,
+        );
+        ServingFront::install_adapter(&mut cluster, &LoraSpec::standard(7, 32, "sim")).unwrap();
+        assert_eq!(cluster.registry().servers_for(7), vec![1]);
+        assert!(cluster.per_server_stats()[1].can_serve(7));
+        assert!(!cluster.per_server_stats()[0].can_serve(7));
     }
 
     #[test]

@@ -255,13 +255,12 @@ impl InferenceServer {
         self.cpu.is_some() && self.runtime.supports_cpu_assist()
     }
 
-    /// Register an adapter in the host repository and install its
-    /// (synthetic, seeded) weights in the shared host-memory table.
-    /// Requests against uninstalled adapters are rejected at submission.
-    pub fn install_adapter(&mut self, spec: LoraSpec) {
-        self.table
-            .install_synthetic(spec.id, self.runtime.hidden(), spec.rank);
-        self.repo.install(spec);
+    /// Requests (queued or running) currently bound to `adapter` — what
+    /// gates a runtime uninstall.
+    fn inflight_on(&self, adapter: u64) -> usize {
+        let queued = self.batcher.queue.iter().filter(|q| q.req.adapter == adapter);
+        let running = self.batcher.running.iter().filter(|r| r.adapter == adapter);
+        queued.count() + running.count()
     }
 
     /// Submit a request. Validation failures (empty/over-bucket prompt,
@@ -1042,6 +1041,85 @@ impl ServingFront for InferenceServer {
 
     fn stats(&self) -> ServerStats {
         InferenceServer::stats(self)
+    }
+
+    /// Register the adapter in the host repository and install its
+    /// (synthetic, seeded) weights in the shared host-memory table.
+    /// Requests against uninstalled adapters are rejected at submission.
+    /// Callable at any point in the server's lifetime — the coordinator
+    /// installs adapters on live servers during migration. Re-installing
+    /// the identical spec is a no-op; a re-install that *changes* the
+    /// spec refreshes both the host table and any device-resident slot,
+    /// and refuses while requests on the adapter are in flight (swapping
+    /// weights under a live request would corrupt its token stream).
+    fn install_adapter(&mut self, spec: &LoraSpec) -> Result<()> {
+        match self.repo.get(spec.id) {
+            Some(existing) if existing == spec => return Ok(()),
+            Some(_) => {
+                let busy = self.inflight_on(spec.id);
+                anyhow::ensure!(
+                    busy == 0,
+                    "adapter {} busy: {busy} in-flight requests block a weight swap",
+                    spec.id
+                );
+            }
+            None => {}
+        }
+        self.table
+            .install_synthetic(spec.id, self.runtime.hidden(), spec.rank);
+        self.repo.install(spec.clone());
+        if let Some(slot) = self.slot_cache.slot_of(spec.id) {
+            // Device-resident already: refresh the baked slot stack so
+            // warm admits serve the new weights.
+            self.runtime.install_slot(slot, self.table.get(spec.id));
+        }
+        Ok(())
+    }
+
+    /// Remove the adapter from this server: abort any in-flight load,
+    /// clear its device slot and runtime weight stack, and drop it from
+    /// the repository and host-memory table. Refuses while requests on
+    /// the adapter are queued or running — in-flight token streams stay
+    /// bitwise untouched; the caller retries after they drain.
+    fn uninstall_adapter(&mut self, adapter: u64) -> Result<()> {
+        anyhow::ensure!(
+            self.repo.get(adapter).is_some(),
+            "adapter {adapter} not installed"
+        );
+        let busy = self.inflight_on(adapter);
+        anyhow::ensure!(busy == 0, "adapter {adapter} busy: {busy} in-flight requests");
+        self.loads.cancel(adapter);
+        if let Some(slot) = self.slot_cache.evict(adapter) {
+            self.runtime.install_slot(slot, None);
+        }
+        self.repo.remove(adapter);
+        self.table.remove(adapter);
+        Ok(())
+    }
+
+    /// Load the adapter into its fixed device slot ahead of traffic, so
+    /// its first request admits warm instead of paying the cold-start
+    /// window. Refuses (`Ok(false)`) when the slot is pinned by a
+    /// *different* adapter with live requests or an in-flight load —
+    /// pre-warming must never evict weights a running request reads.
+    fn prewarm_adapter(&mut self, adapter: u64) -> Result<bool> {
+        anyhow::ensure!(
+            self.repo.get(adapter).is_some(),
+            "adapter {adapter} not installed"
+        );
+        let slot = self.slot_cache.fixed_slot(adapter);
+        if self.slot_cache.occupant(slot) == Some(adapter) {
+            return Ok(true); // already resident
+        }
+        if let Some(other) = self.slot_cache.occupant(slot) {
+            if self.inflight_on(other) > 0 || self.loads.loading(other) {
+                return Ok(false);
+            }
+        }
+        let acq = self.slot_cache.acquire_fixed(adapter);
+        debug_assert!(acq.cold);
+        self.runtime.install_slot(acq.slot, self.table.get(adapter));
+        Ok(true)
     }
 
     fn cold_start_stats(&self) -> Option<ColdStartStats> {

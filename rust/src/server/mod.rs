@@ -5,7 +5,10 @@
 //! - [`api`] — the request-lifecycle API: [`ServeRequest`] builder,
 //!   [`RequestHandle`] event streams with cancellation, and the
 //!   [`ServingFront`] trait both the engine and the simulator
-//!   ([`crate::sim::front::SimFront`]) implement.
+//!   ([`crate::sim::front::SimFront`]) implement — including the
+//!   runtime adapter-management surface (`install_adapter` /
+//!   `uninstall_adapter` / `prewarm_adapter`) the
+//!   [`crate::coordinator`] drives for placement and live migration.
 //! - [`kvcache`] — paged KV-cache manager: block-granular alloc/free,
 //!   zero-copy [`PagedKv`] views + [`PageWriter`] handles for the
 //!   native runtime, dense batch assembly for the PJRT fallback.

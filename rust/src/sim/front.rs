@@ -78,8 +78,9 @@ impl SimFront {
     }
 
     /// Register an adapter (id + rank) so requests against it are
-    /// admitted.
-    pub fn install_adapter(&mut self, id: u64, rank: usize) {
+    /// admitted — the simulator's convenience form of the trait-level
+    /// [`ServingFront::install_adapter`] (no weights to install).
+    pub fn register_adapter(&mut self, id: u64, rank: usize) {
         self.registry.register(AdapterMeta {
             id,
             rank,
@@ -248,6 +249,43 @@ impl ServingFront for SimFront {
         }
     }
 
+    /// Register the adapter's metadata (the simulator models latency,
+    /// not weights) so requests against it are admitted.
+    fn install_adapter(&mut self, spec: &crate::model::LoraSpec) -> anyhow::Result<()> {
+        self.register_adapter(spec.id, spec.rank);
+        Ok(())
+    }
+
+    /// Drop the adapter's registration. Refuses while simulated requests
+    /// on it are queued or running, mirroring the engine's uninstall
+    /// guard so coordinator logic tested on the simulator transfers.
+    fn uninstall_adapter(&mut self, adapter: u64) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.registry.rank_of(adapter).is_some(),
+            "adapter {adapter} not installed"
+        );
+        let queued = self.inst.queue.iter();
+        let running = self.inst.running.iter();
+        let busy = queued.chain(running).filter(|r| r.req.adapter == adapter).count();
+        anyhow::ensure!(busy == 0, "adapter {adapter} busy: {busy} in-flight requests");
+        self.registry.unregister(adapter);
+        // Mirror the engine's slot eviction: a later re-install must
+        // cold-start again, not inherit stale residency.
+        self.inst.cache.remove(adapter);
+        Ok(())
+    }
+
+    /// Insert the adapter into the simulated device cache so its first
+    /// request admits warm (zero modeled cold-start exposure).
+    fn prewarm_adapter(&mut self, adapter: u64) -> anyhow::Result<bool> {
+        anyhow::ensure!(
+            self.registry.rank_of(adapter).is_some(),
+            "adapter {adapter} not installed"
+        );
+        self.inst.cache.insert(adapter);
+        Ok(true)
+    }
+
     fn stats(&self) -> ServerStats {
         ServerStats {
             running_ranks: self.inst.running_ranks(),
@@ -305,7 +343,7 @@ mod tests {
         let inst = SimInstance::new(0, model, ServingMode::CaraServe, 32, 8, 64);
         let mut front = SimFront::new(inst, 512);
         for id in 0..8 {
-            front.install_adapter(id, 64);
+            front.register_adapter(id, 64);
         }
         front
     }
@@ -423,7 +461,7 @@ mod tests {
     #[test]
     fn stats_reports_ranks_and_tightest_slo() {
         let mut f = front();
-        f.install_adapter(7, 16);
+        f.register_adapter(7, 16);
         let _h1 = f.submit(request(1, 32, 8).slo(500.0, 80.0));
         let _h2 = f.submit(
             ServeRequest::new(7, vec![1; 16])
@@ -465,12 +503,46 @@ mod tests {
         let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
         let inst = SimInstance::new(0, model, ServingMode::Cached, 32, 8, 64);
         let mut oracle = SimFront::new(inst, 512);
-        oracle.install_adapter(1, 64);
+        oracle.register_adapter(1, 64);
         oracle.submit(request(1, 32, 2));
         oracle.run_until_idle().unwrap();
         let s = oracle.cold_start_stats().unwrap();
         assert_eq!(s.cold_admits, 0);
         assert_eq!(s.cpu_assisted, 0);
+        assert_eq!(s.warm_admits, 1);
+    }
+
+    #[test]
+    fn runtime_install_uninstall_and_prewarm() {
+        let mut f = front();
+        // Trait-level install mirrors register_adapter.
+        f.install_adapter(&crate::model::LoraSpec::standard(40, 16, "sim"))
+            .unwrap();
+        let h = f.submit(request(40, 16, 30));
+        // Busy: uninstall refuses while the request is queued/running.
+        assert!(f.uninstall_adapter(40).unwrap_err().to_string().contains("busy"));
+        f.run_until_idle().unwrap();
+        assert_eq!(h.state(), LifecycleState::Finished);
+        f.uninstall_adapter(40).unwrap();
+        assert_eq!(f.submit(request(40, 16, 2)).state(), LifecycleState::Rejected);
+        assert!(f.uninstall_adapter(40).is_err());
+        assert!(f.prewarm_adapter(40).is_err());
+        // Uninstall evicted the device cache: a re-installed adapter
+        // cold-starts again instead of inheriting stale residency.
+        f.install_adapter(&crate::model::LoraSpec::standard(40, 16, "sim"))
+            .unwrap();
+        f.submit(request(40, 16, 2));
+        f.run_until_idle().unwrap();
+        assert_eq!(f.cold_start_stats().unwrap().cold_admits, 2);
+
+        // Prewarm: the first request on a warmed adapter admits warm
+        // (fresh front so the counter only sees this request).
+        let mut w = front();
+        assert!(w.prewarm_adapter(1).unwrap());
+        w.submit(request(1, 16, 2));
+        w.run_until_idle().unwrap();
+        let s = w.cold_start_stats().unwrap();
+        assert_eq!(s.cold_admits, 0, "{s:?}");
         assert_eq!(s.warm_admits, 1);
     }
 

@@ -133,6 +133,12 @@ impl AdapterCache {
         self.stamps.insert(id, self.clock);
     }
 
+    /// Evict an adapter (runtime uninstall). Returns true if it was
+    /// resident.
+    pub fn remove(&mut self, id: u64) -> bool {
+        self.stamps.remove(&id).is_some()
+    }
+
     /// Number of resident adapters.
     pub fn len(&self) -> usize {
         self.stamps.len()

@@ -44,6 +44,15 @@ impl Summary {
     }
 }
 
+/// One summary statistic formatted in milliseconds with one decimal
+/// ("-" when the sample was empty) — the cell format shared by the
+/// `cluster`/`coordinator` CLI tables and the cluster/placement
+/// benches, so their report columns cannot drift apart.
+pub fn ms_or_dash(s: &Option<Summary>, f: fn(&Summary) -> f64) -> String {
+    s.as_ref()
+        .map_or("-".to_string(), |s| format!("{:.1}", f(s) * 1e3))
+}
+
 /// Percentile (0..=100) of an already-sorted sample, with linear
 /// interpolation between closest ranks.
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {

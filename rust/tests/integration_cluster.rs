@@ -8,6 +8,7 @@ use caraserve::runtime::{NativeConfig, NativeRuntime};
 use caraserve::server::cluster::synthetic::{self, SyntheticConfig};
 use caraserve::server::{
     ColdStartMode, EngineConfig, InferenceServer, LifecycleState, ServeRequest,
+    ServingFront,
 };
 
 /// A native engine with a deliberately small KV pool (or a roomy one).
@@ -24,7 +25,8 @@ fn engine_with_pool(kv_pages: usize, page_size: usize) -> InferenceServer {
     )
     .expect("server");
     for id in 0..4u64 {
-        s.install_adapter(LoraSpec::standard(id, 8, "tiny"));
+        s.install_adapter(&LoraSpec::standard(id, 8, "tiny"))
+            .expect("install");
     }
     s
 }
@@ -87,6 +89,7 @@ fn rank_aware_matches_or_beats_random_on_heterogeneous_ranks() {
         cold_start: ColdStartMode::Cached,
         kv_pages: 256,
         polls_per_arrival: 1,
+        skew: 0.0,
     };
     let ra = synthetic::run("rank-aware", &cfg).expect("rank-aware run");
     let rnd = synthetic::run("random", &cfg).expect("random run");
@@ -125,6 +128,87 @@ fn rank_aware_matches_or_beats_random_on_heterogeneous_ranks() {
 }
 
 #[test]
+fn nested_cluster_tree_matches_flat_cluster() {
+    // "Cluster front as a server": a two-level tree — an outer
+    // ClusterFront routing over { inner ClusterFront over 2 engines,
+    // 1 bare engine } — must serve the same workload as a flat
+    // 3-engine cluster with bitwise-identical token streams (every
+    // engine holds identical per-adapter weights, so placement cannot
+    // change content) and aggregate stats coherently across levels.
+    use caraserve::scheduler::baselines::MostIdle;
+    use caraserve::scheduler::registry::{AdapterMeta, GlobalRegistry};
+    use caraserve::server::ClusterFront;
+    use std::sync::Arc;
+
+    let registry = || {
+        let reg = GlobalRegistry::new();
+        for id in 0..4u64 {
+            reg.register(AdapterMeta {
+                id,
+                rank: 8,
+                base_model: "tiny".into(),
+                weights_path: String::new(),
+            });
+        }
+        Arc::new(reg)
+    };
+    let engines = || -> Vec<Box<dyn ServingFront>> {
+        (0..3)
+            .map(|_| Box::new(engine_with_pool(64, 4)) as Box<dyn ServingFront>)
+            .collect()
+    };
+    let reqs = || {
+        (0..9u64).map(|i| {
+            ServeRequest::new(i % 4, (0..8).map(|t| (t * 7 + i as i32) % 999).collect())
+                .max_new_tokens(4 + (i as usize % 3))
+        })
+    };
+
+    let mut flat = ClusterFront::new(engines(), Box::new(MostIdle), registry());
+    let flat_handles: Vec<_> = reqs().map(|r| flat.submit(r)).collect();
+    flat.run_until_idle().unwrap();
+
+    let mut backends = engines();
+    let rack_b = backends.pop().unwrap();
+    let inner = ClusterFront::new(backends, Box::new(MostIdle), registry());
+    let mut outer = ClusterFront::new(
+        vec![Box::new(inner), rack_b],
+        Box::new(MostIdle),
+        registry(),
+    );
+    let nested_handles: Vec<_> = reqs().map(|r| outer.submit(r)).collect();
+    // Mid-flight, the tree aggregates its levels into one stats view.
+    let s = outer.stats();
+    assert_eq!(s.total_requests(), 9);
+    for id in 0..4 {
+        assert!(s.can_serve(id));
+    }
+    assert!(!s.can_serve(99));
+    outer.run_until_idle().unwrap();
+
+    for (i, (f, n)) in flat_handles.iter().zip(&nested_handles).enumerate() {
+        assert_eq!(f.state(), LifecycleState::Finished, "flat request {i}");
+        assert_eq!(n.state(), LifecycleState::Finished, "nested request {i}");
+        assert_eq!(
+            f.tokens(),
+            n.tokens(),
+            "request {i}: nesting changed the stream"
+        );
+        // The outer level relays the inner level's Routed events, so a
+        // request through the tree observes ≥ 1 placement event and
+        // still exactly one terminal.
+        let events = n.drain_events();
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, caraserve::server::RequestEvent::Routed { .. })));
+        assert_eq!(events.iter().filter(|e| e.is_terminal()).count(), 1);
+    }
+    // All three engines drained; the tree reports idle at every level.
+    assert_eq!(outer.stats().total_requests(), 0);
+    assert_eq!(outer.metrics().records().len(), 9);
+}
+
+#[test]
 fn cluster_smoke_with_cold_starts_and_cpu_assist() {
     // The CaraServe cold-start machinery (async loads, CPU-assisted
     // prefill, handoffs) running behind the cluster front: everything
@@ -140,6 +224,7 @@ fn cluster_smoke_with_cold_starts_and_cpu_assist() {
         cold_start: ColdStartMode::CaraServe,
         kv_pages: 256,
         polls_per_arrival: 2,
+        skew: 0.0,
     };
     let rep = synthetic::run("most-idle", &cfg).expect("cluster run");
     assert_eq!(rep.finished, rep.requests);

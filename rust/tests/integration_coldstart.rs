@@ -14,7 +14,7 @@ use caraserve::model::LoraSpec;
 use caraserve::runtime::{NativeConfig, NativeRuntime};
 use caraserve::server::{
     ColdStartMode, EngineConfig, InferenceServer, LifecycleState, RequestEvent,
-    ServeRequest,
+    ServeRequest, ServingFront,
 };
 
 const N_ADAPTERS: u64 = 8;
@@ -36,7 +36,8 @@ fn server(mode: ColdStartMode, cpu_workers: usize, load_scale: f64) -> Inference
     )
     .expect("server");
     for id in 0..N_ADAPTERS {
-        s.install_adapter(LoraSpec::standard(id, 4, "tiny"));
+        s.install_adapter(&LoraSpec::standard(id, 4, "tiny"))
+            .expect("install");
     }
     if cpu_workers > 0 {
         s.enable_cpu_assist(cpu_workers).expect("cpu assist");

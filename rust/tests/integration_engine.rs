@@ -9,7 +9,7 @@ use caraserve::model::LoraSpec;
 use caraserve::runtime::ModelRuntime;
 use caraserve::server::{
     ColdStartMode, EngineConfig, InferenceServer, LifecycleState, RequestEvent, RequestHandle,
-    ServeRequest,
+    ServeRequest, ServingFront,
 };
 use caraserve::util::rng::Rng;
 
@@ -32,7 +32,9 @@ fn make_server(mode: ColdStartMode) -> Option<InferenceServer> {
     )
     .expect("server");
     for id in 0..32u64 {
-        server.install_adapter(LoraSpec::standard(id, 8, "tiny"));
+        server
+            .install_adapter(&LoraSpec::standard(id, 8, "tiny"))
+            .expect("install");
     }
     Some(server)
 }

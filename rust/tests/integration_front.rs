@@ -30,7 +30,7 @@ fn sim_front_with_batch(max_batch: usize) -> SimFront {
     let inst = SimInstance::new(0, model, ServingMode::CaraServe, max_batch, 8, 64);
     let mut front = SimFront::new(inst, 64);
     for id in 0..ADAPTERS {
-        front.install_adapter(id, 64);
+        front.register_adapter(id, 64);
     }
     front
 }
@@ -52,7 +52,9 @@ fn native_front() -> InferenceServer {
     )
     .expect("native server");
     for id in 0..ADAPTERS {
-        server.install_adapter(LoraSpec::standard(id, 4, "tiny"));
+        server
+            .install_adapter(&LoraSpec::standard(id, 4, "tiny"))
+            .expect("install");
     }
     server
 }
@@ -93,7 +95,9 @@ fn engine_front() -> Option<InferenceServer> {
     )
     .expect("server");
     for id in 0..ADAPTERS {
-        server.install_adapter(LoraSpec::standard(id, 8, "tiny"));
+        server
+            .install_adapter(&LoraSpec::standard(id, 8, "tiny"))
+            .expect("install");
     }
     Some(server)
 }

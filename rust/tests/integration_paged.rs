@@ -15,7 +15,7 @@ use caraserve::model::LoraSpec;
 use caraserve::runtime::{DenseKv, KvWrite, NativeConfig, NativeRuntime, RowLora};
 use caraserve::server::{
     ColdStartMode, EngineConfig, InferenceServer, KvCacheManager, LifecycleState,
-    ServeRequest,
+    ServeRequest, ServingFront,
 };
 
 fn runtime() -> NativeRuntime {
@@ -154,7 +154,8 @@ fn engine(page_size: usize, threads: usize) -> InferenceServer {
     )
     .expect("server");
     for id in 0..N_ADAPTERS {
-        s.install_adapter(LoraSpec::standard(id, 4, "tiny"));
+        s.install_adapter(&LoraSpec::standard(id, 4, "tiny"))
+            .expect("install");
     }
     s
 }
@@ -202,7 +203,8 @@ fn admission_trims_to_available_pages() {
     )
     .expect("server");
     for id in 0..2u64 {
-        s.install_adapter(LoraSpec::standard(id, 4, "tiny"));
+        s.install_adapter(&LoraSpec::standard(id, 4, "tiny"))
+            .expect("install");
     }
     let h1 = s.submit(
         ServeRequest::new(0, (0..8).map(|i| i % 64).collect()).max_new_tokens(2),

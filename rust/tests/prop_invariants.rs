@@ -293,7 +293,7 @@ fn prop_every_submitted_request_terminates_in_exactly_one_terminal_event() {
             SimInstance::new(0, model, ServingMode::CaraServe, max_batch, 8, 16);
         let mut front = SimFront::new(inst, 64);
         for id in 0..7 {
-            front.install_adapter(id, *rng.choose(&[8, 16, 32, 64]));
+            front.register_adapter(id, *rng.choose(&[8, 16, 32, 64]));
         }
 
         let n = rng.range(1, 20);
