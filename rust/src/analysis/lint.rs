@@ -1,0 +1,637 @@
+//! Repo-specific source lints over `rust/src` (`caraserve lint`).
+//!
+//! Six rules, all motivated by the concurrency-heavy subsystems this
+//! tree grew in PRs 2–5:
+//!
+//! - **safety-comment** — every line containing the `unsafe` keyword
+//!   must have a `// SAFETY:` comment on the same line or in the
+//!   contiguous block of comment-only lines directly above it.
+//! - **ordering-comment** — every `Ordering::Relaxed` outside test
+//!   code must carry a nearby `// ORDERING:` justification (Relaxed on
+//!   a data-carrying atomic is exactly the PR 2 class of bug).
+//! - **hot-unwrap** — no `.unwrap()` / `.expect(` in non-test code of
+//!   the hot-path modules (`ipc/`, `runtime/`, `cpu_lora/`, and the
+//!   engine/kvcache/batcher files). The mutex-poisoning idiom
+//!   `.lock().unwrap()` (and `.read()`/`.write()`) is tolerated;
+//!   other survivors go in `rust/lint-allow.txt` with justification.
+//! - **decode-sleep** — no `std::thread::sleep` or `spin_loop` in the
+//!   decode-path modules outside tests (a stray sleep there is a
+//!   latency bug, not a style issue).
+//! - **unsafe-op-deny** — the crate root must enforce
+//!   `#![deny(unsafe_op_in_unsafe_fn)]`.
+//! - **undeclared-crate** — every snake-case `root::…` path must
+//!   resolve to a declared dependency, a module in the tree, or a
+//!   `use`-imported name (this rule is what catches an extern crate
+//!   referenced without a manifest entry — a build break the linter
+//!   can flag without running cargo).
+//!
+//! Rules scan the masked per-line view from [`super::scan`], so
+//! keywords inside strings or doc comments never fire. The allowlist
+//! file `rust/lint-allow.txt` holds `rule :: path-suffix :: needle`
+//! entries matched against the violation's file and source text —
+//! line-number-free so entries survive unrelated edits.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+use super::scan;
+
+/// All rule names, in reporting order.
+pub const RULES: &[&str] = &[
+    "safety-comment",
+    "ordering-comment",
+    "hot-unwrap",
+    "decode-sleep",
+    "unsafe-op-deny",
+    "undeclared-crate",
+];
+
+/// One lint finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Rule name (one of [`RULES`]).
+    pub rule: &'static str,
+    /// Path relative to `rust/src`, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Trimmed source text of the offending line.
+    pub text: String,
+}
+
+/// Cross-file context the per-file rules need: which path roots are
+/// legal (declared crates, modules in the tree).
+#[derive(Debug, Clone, Default)]
+pub struct LintContext {
+    /// Module names under `rust/src`: directory names, file stems, and
+    /// inline `mod` declarations.
+    pub modules: BTreeSet<String>,
+    /// Declared dependency crates + the crate's own name + tool
+    /// attribute namespaces (`clippy`, `rustfmt`).
+    pub crates: BTreeSet<String>,
+}
+
+const KEYWORD_ROOTS: &[&str] = &["std", "core", "alloc", "crate", "self", "super"];
+const PRIMITIVE_ROOTS: &[&str] = &[
+    "f32", "f64", "u8", "u16", "u32", "u64", "u128", "i8", "i16", "i32", "i64",
+    "i128", "usize", "isize", "bool", "char", "str",
+];
+
+/// Hot-path modules for the unwrap rule.
+fn is_hot_path(rel: &str) -> bool {
+    rel.starts_with("ipc/")
+        || rel.starts_with("runtime/")
+        || rel.starts_with("cpu_lora/")
+        || matches!(
+            rel,
+            "server/engine.rs" | "server/kvcache.rs" | "server/batcher.rs"
+        )
+}
+
+/// Decode-path modules for the sleep/busy-spin rule.
+fn is_decode_path(rel: &str) -> bool {
+    rel.starts_with("kernels/")
+        || rel.starts_with("runtime/")
+        || matches!(
+            rel,
+            "server/engine.rs" | "server/batcher.rs" | "server/kvcache.rs"
+        )
+}
+
+/// Snake-case identifiers appearing in `line` (used to harvest `use`
+/// imports and `mod` declarations).
+fn snake_idents(line: &str) -> Vec<String> {
+    let spaced: String = line
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { ' ' })
+        .collect();
+    spaced
+        .split_whitespace()
+        .filter(|t| {
+            t.starts_with(|c: char| c.is_ascii_lowercase() || c == '_')
+                && t.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+        })
+        .map(str::to_string)
+        .collect()
+}
+
+/// `mod NAME` declarations on a masked code line.
+fn mod_decls(code: &str) -> Vec<String> {
+    let toks = snake_idents(code);
+    toks.windows(2)
+        .filter(|w| w[0] == "mod")
+        .map(|w| w[1].clone())
+        .collect()
+}
+
+/// Lint one file's source. `rel` is the path relative to `rust/src`
+/// with `/` separators; it selects the hot/decode path rules.
+pub fn lint_source(rel: &str, src: &str, ctx: &LintContext) -> Vec<Violation> {
+    let lines = scan::mask_lines(src);
+    let raw: Vec<&str> = src.lines().collect();
+    let raw_at = |i: usize| raw.get(i).copied().unwrap_or("").trim();
+    let test_start = raw
+        .iter()
+        .position(|l| l.contains("#[cfg(test)]"))
+        .unwrap_or(usize::MAX);
+    let mut imports: BTreeSet<String> = BTreeSet::new();
+    for l in &raw {
+        let t = l.trim_start();
+        if t.starts_with("use ") || t.starts_with("pub use ") {
+            imports.extend(snake_idents(t));
+        }
+    }
+    let hot = is_hot_path(rel);
+    let decode = is_decode_path(rel);
+    let mut out = Vec::new();
+    let mut push = |rule: &'static str, line: usize, text: String| {
+        out.push(Violation {
+            rule,
+            file: rel.to_string(),
+            line,
+            text,
+        });
+    };
+    for (i, ml) in lines.iter().enumerate() {
+        let intest = i >= test_start;
+        // A justification tag counts if it is on the same line or in the
+        // contiguous run of comment-only lines directly above (a code or
+        // blank line breaks the run, so stale far-away tags don't count).
+        let near = |tag: &str| {
+            if lines[i].comment.contains(tag) {
+                return true;
+            }
+            let mut j = i;
+            while j > 0 {
+                j -= 1;
+                let above = &lines[j];
+                if !above.code.trim().is_empty() || above.comment.trim().is_empty() {
+                    return false;
+                }
+                if above.comment.contains(tag) {
+                    return true;
+                }
+            }
+            false
+        };
+        if scan::contains_word(&ml.code, "unsafe") && !near("SAFETY:") {
+            push("safety-comment", i + 1, raw_at(i).to_string());
+        }
+        if !intest && ml.code.contains("Ordering::Relaxed") && !near("ORDERING:") {
+            push("ordering-comment", i + 1, raw_at(i).to_string());
+        }
+        if hot && !intest {
+            let stripped = scan::strip_ws(&ml.code);
+            let prev = if i > 0 {
+                scan::strip_ws(&lines[i - 1].code)
+            } else {
+                String::new()
+            };
+            for pat in [".unwrap()", ".expect("] {
+                let mut from = 0;
+                while let Some(p) = stripped[from..].find(pat) {
+                    let at = from + p;
+                    // The poisoning idiom: unwrapping a lock guard is
+                    // the accepted way to propagate panics, even when
+                    // the call spans a line break.
+                    let before = format!("{prev}{}", &stripped[..at]);
+                    let lock_idiom = [".lock()", ".read()", ".write()"]
+                        .iter()
+                        .any(|suf| before.ends_with(suf));
+                    if !lock_idiom {
+                        push("hot-unwrap", i + 1, raw_at(i).to_string());
+                    }
+                    from = at + 1;
+                }
+            }
+        }
+        if decode
+            && !intest
+            && (ml.code.contains("thread::sleep") || ml.code.contains("spin_loop"))
+        {
+            push("decode-sleep", i + 1, raw_at(i).to_string());
+        }
+        if !intest {
+            for root in scan::path_roots(&ml.code) {
+                let allowed = KEYWORD_ROOTS.contains(&root.as_str())
+                    || PRIMITIVE_ROOTS.contains(&root.as_str())
+                    || ctx.crates.contains(&root)
+                    || ctx.modules.contains(&root)
+                    || imports.contains(&root);
+                if !allowed {
+                    let shown: String = raw_at(i).chars().take(70).collect();
+                    push("undeclared-crate", i + 1, format!("{root} :: {shown}"));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One allowlist entry: `rule :: path-suffix :: needle`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub path: String,
+    pub needle: String,
+}
+
+impl AllowEntry {
+    fn matches(&self, v: &Violation) -> bool {
+        v.rule == self.rule && v.file.ends_with(&self.path) && v.text.contains(&self.needle)
+    }
+}
+
+/// Parse an allowlist file: one `rule :: path-suffix :: needle` entry
+/// per line; `#` comments and blank lines skipped. Malformed lines are
+/// returned as errors so a typo can't silently allow everything.
+pub fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = t.split(" :: ").collect();
+        if parts.len() != 3 {
+            return Err(format!(
+                "lint-allow.txt:{}: expected `rule :: path-suffix :: needle`, got {t:?}",
+                i + 1
+            ));
+        }
+        out.push(AllowEntry {
+            rule: parts[0].trim().to_string(),
+            path: parts[1].trim().to_string(),
+            needle: parts[2].trim().to_string(),
+        });
+    }
+    Ok(out)
+}
+
+/// Result of a full-tree lint run.
+#[derive(Debug)]
+pub struct LintReport {
+    /// The `rust/src` root that was scanned.
+    pub root: String,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Surviving (non-allowlisted) violations.
+    pub violations: Vec<Violation>,
+    /// Number of findings suppressed by the allowlist.
+    pub allowed: usize,
+    /// Allowlist entries that matched nothing (candidates for removal).
+    pub unused_allow: Vec<String>,
+}
+
+impl LintReport {
+    /// True when no violations survived the allowlist.
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Machine-readable report (stable key order).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("root".into(), Json::Str(self.root.clone())),
+            ("files_scanned".into(), Json::Num(self.files_scanned as f64)),
+            (
+                "rules".into(),
+                Json::Arr(RULES.iter().map(|r| Json::Str((*r).into())).collect()),
+            ),
+            (
+                "violation_count".into(),
+                Json::Num(self.violations.len() as f64),
+            ),
+            ("allowed".into(), Json::Num(self.allowed as f64)),
+            ("clean".into(), Json::Bool(self.is_clean())),
+            (
+                "violations".into(),
+                Json::Arr(
+                    self.violations
+                        .iter()
+                        .map(|v| {
+                            Json::Obj(vec![
+                                ("rule".into(), Json::Str(v.rule.into())),
+                                ("file".into(), Json::Str(v.file.clone())),
+                                ("line".into(), Json::Num(v.line as f64)),
+                                ("text".into(), Json::Str(v.text.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "unused_allowlist".into(),
+                Json::Arr(
+                    self.unused_allow
+                        .iter()
+                        .map(|s| Json::Str(s.clone()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Human-readable table.
+    pub fn render_table(&self) -> String {
+        let mut s = String::new();
+        if !self.violations.is_empty() {
+            let rule_w = self
+                .violations
+                .iter()
+                .map(|v| v.rule.len())
+                .max()
+                .unwrap_or(4);
+            let loc_w = self
+                .violations
+                .iter()
+                .map(|v| v.file.len() + 1 + v.line.to_string().len())
+                .max()
+                .unwrap_or(8);
+            for v in &self.violations {
+                let loc = format!("{}:{}", v.file, v.line);
+                s.push_str(&format!(
+                    "{:<rule_w$}  {:<loc_w$}  {}\n",
+                    v.rule, loc, v.text
+                ));
+            }
+        }
+        for u in &self.unused_allow {
+            s.push_str(&format!("warning: unused allowlist entry: {u}\n"));
+        }
+        s.push_str(&format!(
+            "{} file(s) scanned, {} violation(s), {} allowlisted — {}\n",
+            self.files_scanned,
+            self.violations.len(),
+            self.allowed,
+            if self.is_clean() { "clean" } else { "FAIL" }
+        ));
+        s
+    }
+}
+
+fn collect_rs_files(root: &Path) -> anyhow::Result<Vec<(String, PathBuf)>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let p = entry?.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                let rel = p
+                    .strip_prefix(root)
+                    .unwrap_or(&p)
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                out.push((rel, p));
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Declared dependency names (plus the package's own name) from the
+/// workspace `Cargo.toml`, and the tool attribute namespaces.
+fn declared_crates(manifest: &str) -> BTreeSet<String> {
+    let mut crates: BTreeSet<String> =
+        ["clippy", "rustfmt"].iter().map(|s| s.to_string()).collect();
+    let mut section = String::new();
+    for line in manifest.lines() {
+        let t = line.trim();
+        if t.starts_with('[') {
+            section = t.trim_matches(|c| c == '[' || c == ']').to_string();
+            continue;
+        }
+        if section == "dependencies" || section == "dev-dependencies" {
+            if let Some((k, _)) = t.split_once('=') {
+                let k = k.trim();
+                if !k.is_empty() && !k.starts_with('#') {
+                    crates.insert(k.replace('-', "_"));
+                }
+            }
+        } else if section == "package" && t.starts_with("name") {
+            if let Some((_, v)) = t.split_once('=') {
+                crates.insert(v.trim().trim_matches('"').replace('-', "_"));
+            }
+        }
+    }
+    crates
+}
+
+/// Lint the whole tree under `repo_root` (the directory holding
+/// `Cargo.toml`, `rust/src`, and optionally `rust/lint-allow.txt`).
+pub fn lint_tree(repo_root: &Path) -> anyhow::Result<LintReport> {
+    let src_root = repo_root.join("rust").join("src");
+    anyhow::ensure!(
+        src_root.is_dir(),
+        "no rust/src directory under {}",
+        repo_root.display()
+    );
+    let files = collect_rs_files(&src_root)?;
+    let mut sources = Vec::with_capacity(files.len());
+    for (rel, path) in &files {
+        sources.push((rel.clone(), std::fs::read_to_string(path)?));
+    }
+
+    let mut ctx = LintContext::default();
+    let manifest_path = repo_root.join("Cargo.toml");
+    if manifest_path.is_file() {
+        ctx.crates = declared_crates(&std::fs::read_to_string(&manifest_path)?);
+    }
+    for (rel, src) in &sources {
+        for seg in rel.split('/') {
+            if let Some(stem) = seg.strip_suffix(".rs") {
+                ctx.modules.insert(stem.to_string());
+            } else {
+                ctx.modules.insert(seg.to_string());
+            }
+        }
+        for ml in scan::mask_lines(src) {
+            for m in mod_decls(&ml.code) {
+                ctx.modules.insert(m);
+            }
+        }
+    }
+
+    let mut violations = Vec::new();
+    for (rel, src) in &sources {
+        violations.extend(lint_source(rel, src, &ctx));
+    }
+    // Crate-root policy: unsafe blocks inside unsafe fns must be
+    // explicit everywhere, enforced from lib.rs.
+    match sources.iter().find(|(rel, _)| rel == "lib.rs") {
+        Some((_, lib)) if lib.contains("#![deny(unsafe_op_in_unsafe_fn)]") => {}
+        _ => violations.push(Violation {
+            rule: "unsafe-op-deny",
+            file: "lib.rs".into(),
+            line: 1,
+            text: "missing #![deny(unsafe_op_in_unsafe_fn)] at crate root".into(),
+        }),
+    }
+
+    let allow_path = repo_root.join("rust").join("lint-allow.txt");
+    let entries = if allow_path.is_file() {
+        parse_allowlist(&std::fs::read_to_string(&allow_path)?)
+            .map_err(|e| anyhow::anyhow!(e))?
+    } else {
+        Vec::new()
+    };
+    let mut used = vec![false; entries.len()];
+    let mut survivors = Vec::new();
+    let mut allowed = 0usize;
+    for v in violations {
+        match entries.iter().position(|e| e.matches(&v)) {
+            Some(k) => {
+                used[k] = true;
+                allowed += 1;
+            }
+            None => survivors.push(v),
+        }
+    }
+    let unused_allow = entries
+        .iter()
+        .zip(&used)
+        .filter(|(_, &u)| !u)
+        .map(|(e, _)| format!("{} :: {} :: {}", e.rule, e.path, e.needle))
+        .collect();
+
+    Ok(LintReport {
+        root: src_root.display().to_string(),
+        files_scanned: sources.len(),
+        violations: survivors,
+        allowed,
+        unused_allow,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> LintContext {
+        let mut c = LintContext::default();
+        c.crates.extend(["anyhow", "libc"].map(String::from));
+        c.modules.extend(["util", "ipc"].map(String::from));
+        c
+    }
+
+    #[test]
+    fn unsafe_without_safety_comment_fires() {
+        let src = "fn f() {\n    unsafe { g() }\n}\n";
+        let v = lint_source("ipc/x.rs", src, &ctx());
+        assert!(v.iter().any(|v| v.rule == "safety-comment" && v.line == 2));
+    }
+
+    #[test]
+    fn safety_comment_in_contiguous_block_above_passes() {
+        // A multi-line comment block with the tag on its first line is
+        // fine no matter how long it runs.
+        let src = "// SAFETY: checked above,\n// with several lines\n// of explanation\n// before the block.\nunsafe { g() }\n";
+        let v = lint_source("ipc/x.rs", src, &ctx());
+        assert!(!v.iter().any(|v| v.rule == "safety-comment"));
+        // A code line between the tag and the unsafe breaks the run.
+        let src = "// SAFETY: stale, belongs to f.\nfn f() {}\nunsafe { g() }\n";
+        let v = lint_source("ipc/x.rs", src, &ctx());
+        assert!(v.iter().any(|v| v.rule == "safety-comment"));
+        // Same-line trailing comments count too.
+        let src = "unsafe { g() } // SAFETY: g has no preconditions.\n";
+        let v = lint_source("ipc/x.rs", src, &ctx());
+        assert!(!v.iter().any(|v| v.rule == "safety-comment"));
+    }
+
+    #[test]
+    fn relaxed_needs_ordering_comment_outside_tests() {
+        let src = "let x = a.load(Ordering::Relaxed);\n";
+        assert!(lint_source("server/api.rs", src, &ctx())
+            .iter()
+            .any(|v| v.rule == "ordering-comment"));
+        let ok = "// ORDERING: counter only; no data published.\nlet x = a.load(Ordering::Relaxed);\n";
+        assert!(!lint_source("server/api.rs", ok, &ctx())
+            .iter()
+            .any(|v| v.rule == "ordering-comment"));
+        let in_test = "#[cfg(test)]\nmod t {\n    fn f() { a.load(Ordering::Relaxed); }\n}\n";
+        assert!(!lint_source("server/api.rs", in_test, &ctx())
+            .iter()
+            .any(|v| v.rule == "ordering-comment"));
+    }
+
+    #[test]
+    fn hot_unwrap_scoped_to_hot_paths_and_lock_idiom() {
+        let src = "let v = x.unwrap();\nlet w = y.expect(\"w\");\n";
+        let v = lint_source("ipc/x.rs", src, &ctx());
+        assert_eq!(v.iter().filter(|v| v.rule == "hot-unwrap").count(), 2);
+        // Same code outside a hot path is fine.
+        assert!(lint_source("sim/x.rs", src, &ctx()).is_empty());
+        // Lock poisoning idiom tolerated, even across a line break.
+        let lock = "let g = m.lock().unwrap();\nlet h = m\n    .read()\n    .unwrap();\n";
+        assert!(!lint_source("runtime/x.rs", lock, &ctx())
+            .iter()
+            .any(|v| v.rule == "hot-unwrap"));
+    }
+
+    #[test]
+    fn decode_sleep_fires_in_decode_modules() {
+        let src = "std::thread::sleep(d);\n";
+        assert!(lint_source("runtime/native.rs", src, &ctx())
+            .iter()
+            .any(|v| v.rule == "decode-sleep"));
+        assert!(!lint_source("sim/front.rs", src, &ctx())
+            .iter()
+            .any(|v| v.rule == "decode-sleep"));
+    }
+
+    #[test]
+    fn undeclared_crate_root_fires_and_known_roots_pass() {
+        let src = "let p = serde::to_string(&x);\n";
+        let v = lint_source("util/x.rs", src, &ctx());
+        assert!(v.iter().any(|v| v.rule == "undeclared-crate"));
+        let ok = "use std::fmt;\nfn f() { fmt::format(args); libc::mmap(); ipc::shm::go(); }\n";
+        assert!(lint_source("util/x.rs", ok, &ctx()).is_empty());
+        // Strings and comments never fire.
+        let masked = "let s = \"serde::json\"; // or toml::de\n";
+        assert!(lint_source("util/x.rs", masked, &ctx()).is_empty());
+    }
+
+    #[test]
+    fn allowlist_parses_and_matches() {
+        let text = "# comment\n\nhot-unwrap :: server/engine.rs :: expect(\"resume\n";
+        let entries = parse_allowlist(text).unwrap();
+        assert_eq!(entries.len(), 1);
+        let v = Violation {
+            rule: "hot-unwrap",
+            file: "server/engine.rs".into(),
+            line: 7,
+            text: "let t = r.expect(\"resume carries tokens\");".into(),
+        };
+        assert!(entries[0].matches(&v));
+        assert!(parse_allowlist("only two :: fields\n").is_err());
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let rep = LintReport {
+            root: "rust/src".into(),
+            files_scanned: 3,
+            violations: vec![Violation {
+                rule: "safety-comment",
+                file: "ipc/shm.rs".into(),
+                line: 9,
+                text: "unsafe {".into(),
+            }],
+            allowed: 2,
+            unused_allow: vec![],
+        };
+        let j = rep.to_json();
+        assert_eq!(j.get("violation_count").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(j.get("clean").and_then(|v| v.as_bool()), Some(false));
+        let first = &j.get("violations").unwrap().as_arr().unwrap()[0];
+        assert_eq!(first.get("file").and_then(|v| v.as_str()), Some("ipc/shm.rs"));
+        assert!(rep.render_table().contains("FAIL"));
+    }
+}

@@ -1,0 +1,24 @@
+//! Static analysis for the repo itself: `caraserve lint`.
+//!
+//! CaraServe's correctness rests on a handful of delicate concurrent
+//! protocols — the §4.2 shm slots and futex doorbells, the CPU→GPU
+//! handoff, the request lifecycle. This module is the standing gate
+//! that keeps their invariants *visible in the source*: every `unsafe`
+//! carries a `// SAFETY:` argument, every `Ordering::Relaxed` a
+//! `// ORDERING:` justification, hot paths stay panic-free, decode
+//! paths stay sleep-free, and every extern path root resolves to a
+//! declared crate (catching a missing manifest entry without running
+//! cargo — the exact failure the vendored-offline build can't afford).
+//!
+//! Zero dependencies, in the style of [`crate::testkit`]: a
+//! character-level masker ([`scan`]) feeds line/token rules ([`lint`]),
+//! with a machine-readable JSON report and a `rust/lint-allow.txt`
+//! allowlist for the justified survivors. Wired as a blocking CI job
+//! and exercised by seeded-violation fixtures in
+//! `rust/tests/lint_analysis.rs`.
+
+pub mod lint;
+pub mod scan;
+
+pub use lint::{lint_source, lint_tree, LintContext, LintReport, Violation, RULES};
+pub use scan::{mask_lines, MaskedLine};

@@ -1,0 +1,315 @@
+//! Line-oriented Rust source masking for the repo lints.
+//!
+//! [`mask_lines`] splits a source file into per-line `(code, comment)`
+//! pairs: `code` is the line with string/char-literal *contents* and
+//! all comments removed (delimiters kept, so token shapes survive), and
+//! `comment` is the concatenated comment text that appears on the line.
+//! Rules then scan `code` without tripping over `"unsafe"` inside a
+//! string or `Ordering::Relaxed` inside a doc comment, and look for
+//! their `// SAFETY:` / `// ORDERING:` tags in `comment`.
+//!
+//! The masker is a character-level state machine covering the token
+//! forms that actually occur in this tree: line comments, nested block
+//! comments, string literals (including `\"`-escapes and backslash
+//! line continuations), raw strings `r"…"` / `r#"…"#`, and char
+//! literals vs. lifetimes. It is deliberately *not* a full lexer —
+//! byte/ C-string literal prefixes and exotic raw-identifier cases fall
+//! through harmlessly as code.
+
+/// One masked source line: code with literals/comments blanked, plus
+/// the comment text found on the line.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MaskedLine {
+    /// Source code with string/char contents and comments removed.
+    pub code: String,
+    /// Concatenated comment text on this line (line + block comments).
+    pub comment: String,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Code,
+    LineComment,
+    BlockComment,
+    Str,
+    RawStr,
+}
+
+/// Mask `src` into per-line code/comment pairs. Always returns at
+/// least one line (an empty file yields one empty line), and returns
+/// exactly `src.lines().count().max(1)` entries for newline-terminated
+/// input plus the trailing fragment.
+pub fn mask_lines(src: &str) -> Vec<MaskedLine> {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut out = Vec::new();
+    let mut line = MaskedLine::default();
+    let mut mode = Mode::Code;
+    let mut block_depth = 0usize;
+    let mut raw_hashes = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            if mode == Mode::LineComment {
+                mode = Mode::Code;
+            }
+            out.push(std::mem::take(&mut line));
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    mode = Mode::BlockComment;
+                    block_depth = 1;
+                    i += 2;
+                } else if c == '"' {
+                    line.code.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if c == 'r' && i + 1 < n && (cs[i + 1] == '"' || cs[i + 1] == '#') {
+                    // Candidate raw string: r"…" or r#"…"# (any hash count).
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && cs[j] == '#' {
+                        h += 1;
+                        j += 1;
+                    }
+                    if j < n && cs[j] == '"' {
+                        raw_hashes = h;
+                        line.code.push_str("r\"");
+                        mode = Mode::RawStr;
+                        i = j + 1;
+                    } else {
+                        line.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs. lifetime.
+                    if i + 1 < n && cs[i + 1] == '\\' {
+                        // Escaped char literal: scan to the closing quote.
+                        let mut j = i + 2;
+                        while j < n && cs[j] != '\'' {
+                            j += 1;
+                        }
+                        line.code.push_str("' '");
+                        i = j + 1;
+                    } else if i + 2 < n && cs[i + 2] == '\'' {
+                        line.code.push_str("' '");
+                        i += 3;
+                    } else {
+                        // Lifetime (or dangling quote): keep as code.
+                        line.code.push(c);
+                        i += 1;
+                    }
+                } else {
+                    line.code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                line.comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment => {
+                if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    block_depth += 1;
+                    line.comment.push(' ');
+                    i += 2;
+                } else if c == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    block_depth -= 1;
+                    if block_depth == 0 {
+                        mode = Mode::Code;
+                    }
+                    i += 2;
+                } else {
+                    line.comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    if i + 1 < n && cs[i + 1] == '\n' {
+                        // Backslash line continuation: leave the newline
+                        // for the top-of-loop handler so line numbers
+                        // stay in sync.
+                        i += 1;
+                    } else {
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    line.code.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && cs[j] == '#' && h < raw_hashes {
+                        h += 1;
+                        j += 1;
+                    }
+                    if h == raw_hashes {
+                        line.code.push('"');
+                        mode = Mode::Code;
+                        i = j;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    out.push(line);
+    out
+}
+
+/// True if `code` contains `word` as a whole identifier (not as a
+/// substring of a longer identifier).
+pub fn contains_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let start = from + pos;
+        let end = start + word.len();
+        let pre_ok = start == 0 || !is_ident_byte(bytes[start - 1]);
+        let post_ok = end == bytes.len() || !is_ident_byte(bytes[end]);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// `code` with all ASCII whitespace removed — used by token-adjacency
+/// checks like the `.unwrap()` scanner.
+pub fn strip_ws(code: &str) -> String {
+    code.chars().filter(|c| !c.is_ascii_whitespace()).collect()
+}
+
+/// Root segments of any `root::…` paths in masked `code` whose root is
+/// a snake-case identifier at a path start (not preceded by an ident
+/// char or `::`, not a turbofish `ident::<…>`). These are the
+/// candidates for the undeclared-crate rule.
+pub fn path_roots(code: &str) -> Vec<String> {
+    let cs: Vec<char> = code.chars().collect();
+    let n = cs.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        let c = cs[i];
+        if !(c.is_ascii_lowercase() || c == '_') {
+            i += 1;
+            continue;
+        }
+        let boundary = i == 0 || {
+            let p = cs[i - 1];
+            !(p.is_ascii_alphanumeric() || p == '_' || p == ':')
+        };
+        let start = i;
+        while i < n && (cs[i].is_ascii_lowercase() || cs[i].is_ascii_digit() || cs[i] == '_') {
+            i += 1;
+        }
+        // A snake-case prefix of a mixed-case identifier (e.g. `aB`)
+        // is not a path root; skip the whole identifier chunk.
+        let clean_end = i >= n || !(cs[i].is_ascii_alphanumeric() || cs[i] == '_');
+        if !boundary || !clean_end {
+            while i < n && (cs[i].is_ascii_alphanumeric() || cs[i] == '_') {
+                i += 1;
+            }
+            continue;
+        }
+        let mut j = i;
+        while j < n && cs[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        if j + 1 < n && cs[j] == ':' && cs[j + 1] == ':' {
+            j += 2;
+            while j < n && cs[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            // `ident::<T>` is a turbofish on a local binding, not a path.
+            if j < n && cs[j] == '<' {
+                continue;
+            }
+            out.push(cs[start..i].iter().collect());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let src = "let x = \"unsafe // not code\"; // SAFETY: tag\nlet y = 2;\n";
+        let lines = mask_lines(src);
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0].code, "let x = \"\"; ");
+        assert!(lines[0].comment.contains("SAFETY: tag"));
+        assert_eq!(lines[1].code, "let y = 2;");
+        assert!(!contains_word(&lines[0].code, "unsafe"));
+    }
+
+    #[test]
+    fn nested_block_comments_and_line_sync() {
+        let src = "a /* one /* two */ still */ b\nc\n";
+        let lines = mask_lines(src);
+        assert_eq!(lines[0].code, "a  b");
+        assert!(lines[0].comment.contains("one"));
+        assert_eq!(lines[1].code, "c");
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals() {
+        let src = "let r = r#\"has \"quotes\" and // slashes\"#;\nlet c = '\\n'; let l: &'static str = \"\";\n";
+        let lines = mask_lines(src);
+        assert_eq!(lines[0].code, "let r = r\"\";");
+        assert!(lines[1].code.contains("' '"));
+        assert!(lines[1].code.contains("&'static"));
+    }
+
+    #[test]
+    fn backslash_continuation_keeps_line_numbers() {
+        let src = "const U: &str = \"a\\\nb\\\nc\";\nafter();\n";
+        let lines = mask_lines(src);
+        // 3 string lines + the `after()` line + trailing empty.
+        assert_eq!(lines.len(), 5);
+        assert_eq!(lines[3].code, "after();");
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(contains_word("unsafe {", "unsafe"));
+        assert!(!contains_word("unsafely(", "unsafe"));
+        assert!(!contains_word("an_unsafe_thing", "unsafe"));
+    }
+
+    #[test]
+    fn path_root_extraction() {
+        assert_eq!(path_roots("libc::mmap(std::ptr::null())"), vec!["libc", "std"]);
+        // Turbofish and mid-path segments are not roots.
+        assert!(path_roots("x.parse::<f64>()").is_empty());
+        assert!(path_roots("iter.sum::<f64>()").is_empty());
+        assert_eq!(path_roots("a::b::c"), vec!["a"]);
+        // Mixed-case identifiers are not snake-case roots.
+        assert!(path_roots("theType::new()").is_empty());
+    }
+}

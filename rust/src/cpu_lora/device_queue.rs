@@ -89,6 +89,8 @@ impl DeviceQueue {
                     }
                     Command::Stop => return,
                 }
+                // ORDERING: progress statistic only — nothing is read
+                // on the strength of this counter, so Relaxed suffices.
                 counter.fetch_add(1, Ordering::Relaxed);
             }
         });
@@ -132,6 +134,9 @@ impl DeviceQueue {
 
     /// Total commands executed (fences excluded).
     pub fn executed(&self) -> u64 {
+        // ORDERING: monitoring read of the statistic above; callers
+        // needing a precise count synchronize via `synchronize()`'s
+        // channel rendezvous first, not via this load.
         self.executed.load(Ordering::Relaxed)
     }
 

@@ -42,14 +42,20 @@ pub struct ShmRegion {
     len: usize,
 }
 
-// The region is plain memory; synchronization is the user's business
-// (SlotChannel provides it).
+// SAFETY: the region is plain `mmap`ed memory with no thread affinity;
+// synchronization of the *contents* is the user's business
+// (SlotChannel provides it via atomics with acquire/release pairs).
 unsafe impl Send for ShmRegion {}
+// SAFETY: `&ShmRegion` only exposes the base pointer and length;
+// concurrent readers of those immutable fields are safe.
 unsafe impl Sync for ShmRegion {}
 
 impl ShmRegion {
     /// Map `len` bytes of MAP_SHARED|MAP_ANONYMOUS memory, zeroed.
     pub fn new(len: usize) -> Result<ShmRegion, ShmError> {
+        // SAFETY: anonymous mapping (no fd, offset 0); the kernel picks
+        // the address (null hint) and zeroes the pages. The only error
+        // surface is the MAP_FAILED return, checked below.
         let ptr = unsafe {
             libc::mmap(
                 std::ptr::null_mut(),
@@ -87,6 +93,8 @@ impl ShmRegion {
 
 impl Drop for ShmRegion {
     fn drop(&mut self) {
+        // SAFETY: `ptr`/`len` are exactly the successful mmap's return
+        // and request; the mapping is unmapped once (Drop runs once).
         unsafe {
             libc::munmap(self.ptr as *mut libc::c_void, self.len);
         }
@@ -121,7 +129,14 @@ pub struct SlotChannel {
     capacity: usize,
 }
 
+// SAFETY: the raw pointers target the owning ShmRegion's mapping,
+// which outlives the channel by construction at every use site (the
+// pool keeps the region alive); moving the channel moves only the
+// pointers.
 unsafe impl Send for SlotChannel {}
+// SAFETY: shared access is the point — one producer and one consumer
+// thread. The header fields are atomics, and buffer reads/writes are
+// ordered by the doorbell acquire/release protocol (see send/recv).
 unsafe impl Sync for SlotChannel {}
 
 impl SlotChannel {
@@ -148,6 +163,10 @@ impl SlotChannel {
             });
         }
         assert_eq!(offset % 8, 0, "slot offset must be 8-byte aligned");
+        // SAFETY: the bounds check above guarantees header + both
+        // buffers lie inside the region; the page-aligned base plus the
+        // 8-byte-aligned offset keeps the AtomicU32 header fields and
+        // f32 buffers aligned.
         unsafe {
             let base = region.as_ptr().add(offset);
             let header = base as *mut SlotHeader;
@@ -168,6 +187,9 @@ impl SlotChannel {
     }
 
     fn header(&self) -> &SlotHeader {
+        // SAFETY: `header` points into the live region (see `at`), is
+        // properly aligned, and SlotHeader is all atomics — shared
+        // references from both sides are sound.
         unsafe { &*self.header }
     }
 
@@ -175,6 +197,10 @@ impl SlotChannel {
     /// Returns the doorbell sequence to pass to [`Self::recv_response`].
     pub fn send_request(&self, payload: &[f32]) -> u32 {
         assert!(payload.len() <= self.capacity, "payload exceeds slot");
+        // SAFETY: `payload.len() <= capacity` (asserted) keeps the copy
+        // inside the request buffer; SPSC discipline means no concurrent
+        // writer, and the consumer only reads after the release-store +
+        // ring below publish the bytes.
         unsafe {
             std::ptr::copy_nonoverlapping(payload.as_ptr(), self.req_buf, payload.len());
         }
@@ -196,6 +222,9 @@ impl SlotChannel {
             (self.header().req_len.load(Ordering::Acquire) as usize).min(self.capacity);
         out.clear();
         out.reserve(len);
+        // SAFETY: `len` is clamped to capacity, so the slice stays in
+        // the request buffer; the doorbell wait above acquire-pairs with
+        // the producer's release ring, making the payload bytes visible.
         unsafe {
             let src = std::slice::from_raw_parts(self.req_buf, len);
             out.extend_from_slice(src);
@@ -206,6 +235,9 @@ impl SlotChannel {
     /// Consumer: publish the response and ring the response bell.
     pub fn send_response(&self, payload: &[f32]) {
         assert!(payload.len() <= self.capacity, "payload exceeds slot");
+        // SAFETY: same argument as `send_request`, response direction:
+        // length-checked copy into the response buffer, published to the
+        // single reader by the release-store + ring below.
         unsafe {
             std::ptr::copy_nonoverlapping(
                 payload.as_ptr(),
@@ -226,6 +258,9 @@ impl SlotChannel {
         let len =
             (self.header().resp_len.load(Ordering::Acquire) as usize).min(self.capacity);
         out.clear();
+        // SAFETY: same argument as `recv_request`, response direction:
+        // clamped length, and the doorbell wait acquire-pairs with the
+        // consumer's release ring before the bytes are read.
         unsafe {
             let src = std::slice::from_raw_parts(self.resp_buf, len);
             out.extend_from_slice(src);
@@ -263,6 +298,7 @@ pub fn slot_channels(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use std::sync::Arc;
@@ -271,6 +307,7 @@ mod tests {
     fn region_maps_and_zeroes() {
         let r = ShmRegion::new(4096).unwrap();
         assert_eq!(r.len(), 4096);
+        // SAFETY: reading the freshly mapped region within its length.
         let s = unsafe { std::slice::from_raw_parts(r.as_ptr(), 4096) };
         assert!(s.iter().all(|&b| b == 0));
     }

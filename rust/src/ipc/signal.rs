@@ -37,6 +37,11 @@ impl Doorbell {
 
     /// Ring: bump the sequence (release) and wake all waiters.
     pub fn ring(&self) {
+        // ORDERING: the release RMW publishes every store the ringer
+        // made before ringing (payload bytes, length word) to the
+        // waiter's acquire load of `seq` — the slot protocol's only
+        // synchronization edge. Audit (PR 6): no Relaxed anywhere on
+        // the doorbell/slot-header path.
         self.seq.fetch_add(1, Ordering::Release);
         futex_wake_all(&self.seq);
     }
@@ -45,6 +50,9 @@ impl Doorbell {
     /// [`Doorbell::load`] before the caller started waiting). Spins
     /// briefly (the common sub-microsecond case), then parks on futex.
     pub fn wait_past(&self, seen: u32) -> u32 {
+        // ORDERING: acquire loads pair with `ring`'s release RMW, so a
+        // caller that observes the bumped sequence also observes the
+        // message written before the ring.
         // Short spin: LoRA layer sync is typically < 1 µs away.
         for _ in 0..1024 {
             let cur = self.seq.load(Ordering::Acquire);
@@ -65,6 +73,10 @@ impl Doorbell {
 
 #[cfg(target_os = "linux")]
 fn futex_wait(atom: &AtomicU32, expected: u32) {
+    // SAFETY: FUTEX_WAIT reads the aligned u32 behind `atom` (valid for
+    // the whole call) and compares it with `expected`; a null timeout
+    // means wait indefinitely. Spurious wakeups are fine — the caller
+    // re-checks in a loop.
     unsafe {
         libc::syscall(
             libc::SYS_futex,
@@ -78,6 +90,8 @@ fn futex_wait(atom: &AtomicU32, expected: u32) {
 
 #[cfg(target_os = "linux")]
 fn futex_wake_all(atom: &AtomicU32) {
+    // SAFETY: FUTEX_WAKE only takes the address as a key to find
+    // waiters; `atom` is a live aligned u32 for the whole call.
     unsafe {
         libc::syscall(libc::SYS_futex, atom.as_ptr(), libc::FUTEX_WAKE, i32::MAX);
     }
@@ -92,6 +106,7 @@ fn futex_wait(_atom: &AtomicU32, _expected: u32) {
 fn futex_wake_all(_atom: &AtomicU32) {}
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use std::sync::Arc;

@@ -46,6 +46,7 @@ impl SocketChannel {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

@@ -75,16 +75,36 @@
 //! - [`cpu_lora::CpuLoraEngine`] — the CPU-assisted prefill engine.
 //!
 //! See `examples/quickstart.rs` for a compact end-to-end run.
+//!
+//! The tree gates itself with `caraserve lint` ([`analysis`]): every
+//! `unsafe` carries a `// SAFETY:` argument, every `Ordering::Relaxed`
+//! an `// ORDERING:` justification, hot paths stay panic-free, and
+//! extern path roots must resolve to declared crates. The concurrent
+//! protocols are additionally model-checked by the bounded
+//! interleaving explorer in [`testkit::interleave`].
+
+// Crate-wide unsafe policy (mirrored by the `caraserve lint`
+// unsafe-op-deny rule and clippy's undocumented_unsafe_blocks):
+// unsafe operations inside `unsafe fn` need explicit blocks, and every
+// unsafe block needs a written safety argument.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(clippy::undocumented_unsafe_blocks)]
 
 pub mod adapters;
+pub mod analysis;
 pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod cpu_lora;
+// The IPC and runtime hot paths must not panic on request data: no
+// bare unwrap (the mutex-poisoning `.expect` idiom is the exception,
+// also tolerated by the in-repo hot-unwrap lint).
+#[warn(clippy::unwrap_used)]
 pub mod ipc;
 pub mod kernels;
 pub mod model;
 pub mod perfmodel;
+#[warn(clippy::unwrap_used)]
 pub mod runtime;
 pub mod scheduler;
 pub mod server;

@@ -26,6 +26,12 @@
 //! - `schedule`  — run the §7.5 cluster scheduling simulation.
 //! - `profile`   — fit the §5 performance models and print (α, β, R²).
 //! - `info`      — print model/GPU tables (paper Table 2).
+//! - `lint`      — run the repo-specific static analysis
+//!   ([`caraserve::analysis`]) over `rust/src`: SAFETY/ORDERING comment
+//!   coverage, hot-path unwraps, decode-path sleeps, crate-root policy,
+//!   and undeclared path roots. Exits non-zero on any violation that is
+//!   not allowlisted in `rust/lint-allow.txt`; `--json PATH` writes the
+//!   machine-readable report (CI gates on this subcommand).
 
 use caraserve::config::GpuSpec;
 use caraserve::model::LlamaConfig;
@@ -56,6 +62,7 @@ subcommands:
   schedule  --policy rank-aware|most-idle|first-fit|random --instances N
             --kernel bgmv|mbgmv --rps F --secs F
   profile   --kernel bgmv|mbgmv
+  lint      --root DIR --json PATH   (non-zero exit on violations)
   info
 ";
 
@@ -91,6 +98,8 @@ fn run() -> anyhow::Result<()> {
         "migrate-interval",
         "prewarm",
         "replicas",
+        "root",
+        "json",
     ])
     .map_err(|e| anyhow::anyhow!("{e}"))?;
 
@@ -101,6 +110,7 @@ fn run() -> anyhow::Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("schedule") => cmd_schedule(&args),
         Some("profile") => cmd_profile(&args),
+        Some("lint") => cmd_lint(&args),
         Some("info") => cmd_info(),
         _ => {
             print!("{USAGE}");
@@ -624,6 +634,22 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
         model.beta * 1e3,
         model.r2
     );
+    Ok(())
+}
+
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    let root = args.opt_or("root", ".");
+    let report = caraserve::analysis::lint_tree(std::path::Path::new(&root))?;
+    if let Some(path) = args.opt("json") {
+        std::fs::write(path, report.to_json().to_string_pretty())?;
+    }
+    print!("{}", report.render_table());
+    if !report.is_clean() {
+        anyhow::bail!(
+            "{} lint violation(s) — fix or allowlist in rust/lint-allow.txt",
+            report.violations.len()
+        );
+    }
     Ok(())
 }
 

@@ -493,7 +493,7 @@ impl NativeRuntime {
                     let rows: Vec<Mutex<&mut [f32]>> =
                         attn.chunks_mut(h).map(Mutex::new).collect();
                     pool.run(n, &|i| {
-                        let mut out = rows[i].lock().unwrap();
+                        let mut out = rows[i].lock().expect("attention row mutex poisoned");
                         let mut scores: Vec<f32> = Vec::new();
                         self.attend_position(
                             i, &q, &k, &v, &hist_k, &hist_v, &mut scores, &mut out,
@@ -593,7 +593,7 @@ impl NativeRuntime {
                 })
                 .collect();
             let run_row = |b: usize, inner: Option<&ThreadPool>| {
-                let mut guard = tasks[b].lock().unwrap();
+                let mut guard = tasks[b].lock().expect("row task mutex poisoned");
                 let task = &mut *guard;
                 let writer = &mut *task.writer;
                 let len = (lens[b].max(1) as usize).min(tokens[b].len());
@@ -700,7 +700,7 @@ impl NativeRuntime {
                 })
                 .collect();
             let run_row = |b: usize| {
-                let mut guard = tasks[b].lock().unwrap();
+                let mut guard = tasks[b].lock().expect("row task mutex poisoned");
                 let task = &mut *guard;
                 let (kr, vr) = (&mut *task.k, &mut *task.v);
                 let ctx = pos[b].max(0) as usize;
@@ -776,6 +776,7 @@ impl NativeRuntime {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::super::{DenseKv, DenseKvBuffer, Runtime};
     use super::*;

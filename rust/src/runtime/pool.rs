@@ -53,6 +53,10 @@ impl ThreadPool {
         }
         let next = AtomicUsize::new(0);
         let work = || loop {
+            // ORDERING: Relaxed is enough — the counter only distributes
+            // disjoint indices (RMW atomicity gives uniqueness); workers'
+            // writes are published to the caller by the scope join, not
+            // by this counter.
             let i = next.fetch_add(1, Ordering::Relaxed);
             if i >= n {
                 break;
@@ -91,6 +95,8 @@ impl ThreadPool {
         }
         let next = AtomicUsize::new(0);
         let work = || loop {
+            // ORDERING: Relaxed index distribution, as in `run` — the
+            // scope join is the publication edge for row outputs.
             let i = next.fetch_add(1, Ordering::Relaxed);
             if i >= n {
                 break;
@@ -109,6 +115,7 @@ impl ThreadPool {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use std::sync::Mutex;

@@ -535,7 +535,7 @@ impl InferenceServer {
         // allocation per sampled token on the decode hot path.
         let mut top: Vec<(f32, usize)> = Vec::with_capacity(k + 1);
         for (i, &v) in slice.iter().enumerate() {
-            if top.len() < k || v > top.last().unwrap().0 {
+            if top.len() < k || top.last().is_some_and(|&(worst, _)| v > worst) {
                 let pos = top.partition_point(|&(t, _)| t >= v);
                 top.insert(pos, (v, i));
                 if top.len() > k {

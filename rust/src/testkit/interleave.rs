@@ -1,0 +1,504 @@
+//! Bounded interleaving explorer (a mini-loom): systematic schedule
+//! exploration for small concurrent protocol models.
+//!
+//! A [`Model`] presents N logical "threads", each a fixed script of
+//! atomic steps over shared state. The explorer runs every step at the
+//! granularity the model chose — one step is one indivisible action, so
+//! the model's step boundaries define the memory model being checked —
+//! and explores thread interleavings:
+//!
+//! - [`explore`] — exhaustive DFS over all schedules up to a cap,
+//!   discovering enabled/blocked steps as it goes. Because models
+//!   need not be `Clone`, branching works by *replay*: a fresh model
+//!   from the factory re-executes the schedule prefix. Factories must
+//!   therefore be deterministic.
+//! - [`explore_random`] — seeded random schedules for state spaces too
+//!   large to exhaust (driving real components rather than models).
+//!
+//! Oracles: [`Model::invariant`] is checked after every step,
+//! [`Model::finally`] once all threads finish. A step may return
+//! [`StepOutcome::Blocked`] to model waiting (futex, full queue) —
+//! **a blocked step must not mutate state** (that contract is what
+//! lets the explorer probe blocked threads for free, and what
+//! [`when`] enforces by construction). If every unfinished thread is
+//! blocked, the schedule is reported as a deadlock.
+//!
+//! Used by `rust/tests/interleave_lifecycle.rs` to verify a faithful
+//! model of the `ipc` SlotChannel/Doorbell protocol exhaustively
+//! (including re-catching the PR 2 shared-length regression in a
+//! known-bad variant) and to drive randomized request-lifecycle
+//! schedules against the real `SimFront`/`ClusterFront`.
+
+use crate::util::rng::Rng;
+
+/// What a step attempt did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// The step executed; the thread's program counter advances.
+    Ran,
+    /// The step cannot run in the current state and did not mutate
+    /// anything; the thread stays at the same step.
+    Blocked,
+}
+
+/// A concurrent protocol model: fixed thread scripts over shared state.
+pub trait Model {
+    /// Number of logical threads.
+    fn threads(&self) -> usize;
+    /// Number of steps in `thread`'s script.
+    fn steps(&self, thread: usize) -> usize;
+    /// Attempt step `index` of `thread`. Returning
+    /// [`StepOutcome::Blocked`] promises no state was mutated.
+    fn step(&mut self, thread: usize, index: usize) -> StepOutcome;
+    /// Safety oracle, checked after every executed step.
+    fn invariant(&self) -> Result<(), String> {
+        Ok(())
+    }
+    /// End-of-schedule oracle, checked when every thread has finished.
+    fn finally(&self) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// A failing schedule: the executed thread sequence and the oracle's
+/// message (replayable against a fresh model from the same factory).
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Thread index of each executed step, in order.
+    pub schedule: Vec<usize>,
+    /// Oracle error (invariant, finally, or deadlock).
+    pub message: String,
+}
+
+/// Exploration outcome.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Complete schedules executed.
+    pub schedules: usize,
+    /// True if the full schedule space was covered (exhaustive mode
+    /// within the cap; random mode always reports `false`).
+    pub exhausted: bool,
+    /// First violation found, if any.
+    pub violation: Option<Violation>,
+}
+
+impl Report {
+    /// True when no violation was found.
+    pub fn ok(&self) -> bool {
+        self.violation.is_none()
+    }
+}
+
+impl std::fmt::Display for Report {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.violation {
+            None => write!(
+                f,
+                "{} schedule(s), no violation{}",
+                self.schedules,
+                if self.exhausted { " (exhaustive)" } else { "" }
+            ),
+            Some(v) => write!(
+                f,
+                "violation after {} schedule(s): {} [schedule {:?}]",
+                self.schedules, v.message, v.schedule
+            ),
+        }
+    }
+}
+
+fn replay<M: Model>(factory: &impl Fn() -> M, prefix: &[usize]) -> (M, Vec<usize>) {
+    let mut m = factory();
+    let mut pcs = vec![0usize; m.threads()];
+    for &t in prefix {
+        match m.step(t, pcs[t]) {
+            StepOutcome::Ran => pcs[t] += 1,
+            StepOutcome::Blocked => unreachable!(
+                "nondeterministic factory: step {t}:{} blocked on replay",
+                pcs[t]
+            ),
+        }
+    }
+    (m, pcs)
+}
+
+/// Exhaustively explore all schedules of `factory`'s model, up to
+/// `max_schedules` complete schedules. The factory must build an
+/// identical model each call (replay-based branching). Returns on the
+/// first violation.
+pub fn explore<M: Model>(factory: impl Fn() -> M, max_schedules: usize) -> Report {
+    let mut report = Report {
+        schedules: 0,
+        exhausted: true,
+        violation: None,
+    };
+    let mut prefix = Vec::new();
+    dfs(&factory, &mut prefix, &mut report, max_schedules);
+    report
+}
+
+fn dfs<M: Model>(
+    factory: &impl Fn() -> M,
+    prefix: &mut Vec<usize>,
+    report: &mut Report,
+    max_schedules: usize,
+) {
+    if report.violation.is_some() {
+        return;
+    }
+    if report.schedules >= max_schedules {
+        report.exhausted = false;
+        return;
+    }
+    let (m, pcs) = replay(factory, prefix);
+    let unfinished: Vec<usize> = (0..m.threads())
+        .filter(|&t| pcs[t] < m.steps(t))
+        .collect();
+    if unfinished.is_empty() {
+        report.schedules += 1;
+        if let Err(msg) = m.finally() {
+            report.violation = Some(Violation {
+                schedule: prefix.clone(),
+                message: format!("at end of schedule: {msg}"),
+            });
+        }
+        return;
+    }
+    drop(m);
+    let mut any_ran = false;
+    for &t in &unfinished {
+        if report.violation.is_some() {
+            return;
+        }
+        if report.schedules >= max_schedules {
+            report.exhausted = false;
+            return;
+        }
+        let (mut m, pcs) = replay(factory, prefix);
+        match m.step(t, pcs[t]) {
+            StepOutcome::Blocked => continue,
+            StepOutcome::Ran => {
+                any_ran = true;
+                prefix.push(t);
+                if let Err(msg) = m.invariant() {
+                    report.violation = Some(Violation {
+                        schedule: prefix.clone(),
+                        message: msg,
+                    });
+                    prefix.pop();
+                    return;
+                }
+                drop(m);
+                dfs(factory, prefix, report, max_schedules);
+                prefix.pop();
+            }
+        }
+    }
+    if !any_ran {
+        // Every unfinished thread is blocked: no schedule can proceed.
+        report.schedules += 1;
+        report.violation = Some(Violation {
+            schedule: prefix.clone(),
+            message: format!("deadlock: threads {unfinished:?} all blocked"),
+        });
+    }
+}
+
+/// Run `schedules` seeded-random schedules. At each point a runnable
+/// thread is picked uniformly among the non-blocked ones. The factory
+/// may vary the model between schedules (e.g. re-seed a workload) —
+/// random mode never replays. Returns on the first violation.
+pub fn explore_random<M: Model>(
+    factory: impl Fn() -> M,
+    schedules: usize,
+    seed: u64,
+) -> Report {
+    let mut rng = Rng::new(seed);
+    let mut report = Report {
+        schedules: 0,
+        exhausted: false,
+        violation: None,
+    };
+    for _ in 0..schedules {
+        let mut m = factory();
+        let mut pcs = vec![0usize; m.threads()];
+        let mut trace = Vec::new();
+        loop {
+            let mut candidates: Vec<usize> = (0..m.threads())
+                .filter(|&t| pcs[t] < m.steps(t))
+                .collect();
+            if candidates.is_empty() {
+                report.schedules += 1;
+                if let Err(msg) = m.finally() {
+                    report.violation = Some(Violation {
+                        schedule: trace,
+                        message: format!("at end of schedule: {msg}"),
+                    });
+                    return report;
+                }
+                break;
+            }
+            rng.shuffle(&mut candidates);
+            let mut ran = false;
+            for &t in &candidates {
+                match m.step(t, pcs[t]) {
+                    StepOutcome::Blocked => continue,
+                    StepOutcome::Ran => {
+                        pcs[t] += 1;
+                        trace.push(t);
+                        if let Err(msg) = m.invariant() {
+                            report.schedules += 1;
+                            report.violation = Some(Violation {
+                                schedule: trace,
+                                message: msg,
+                            });
+                            return report;
+                        }
+                        ran = true;
+                        break;
+                    }
+                }
+            }
+            if !ran {
+                report.schedules += 1;
+                report.violation = Some(Violation {
+                    schedule: trace,
+                    message: format!("deadlock: threads {candidates:?} all blocked"),
+                });
+                return report;
+            }
+        }
+    }
+    report
+}
+
+/// Boxed step closure over shared state `S`.
+pub type Step<S> = Box<dyn Fn(&mut S) -> StepOutcome>;
+
+/// An unconditional step: always runs.
+pub fn always<S>(f: impl Fn(&mut S) + 'static) -> Step<S> {
+    Box::new(move |s| {
+        f(s);
+        StepOutcome::Ran
+    })
+}
+
+/// A guarded step: blocks (without mutating — the guard only reads)
+/// until `guard` holds, then runs `f`.
+pub fn when<S>(guard: impl Fn(&S) -> bool + 'static, f: impl Fn(&mut S) + 'static) -> Step<S> {
+    Box::new(move |s| {
+        if guard(s) {
+            f(s);
+            StepOutcome::Ran
+        } else {
+            StepOutcome::Blocked
+        }
+    })
+}
+
+/// A [`Model`] assembled from closures: shared state plus per-thread
+/// step scripts, with optional invariant/finally oracles. The
+/// convenient way to write models in tests:
+///
+/// ```ignore
+/// let factory = || {
+///     ScriptModel::new(MyState::default())
+///         .thread(vec![always(|s| s.x += 1)])
+///         .thread(vec![when(|s| s.x > 0, |s| s.y = s.x)])
+///         .finally(|s| if s.y == 1 { Ok(()) } else { Err("lost".into()) })
+/// };
+/// assert!(explore(factory, 10_000).ok());
+/// ```
+pub struct ScriptModel<S> {
+    /// The shared state the step closures mutate.
+    pub state: S,
+    scripts: Vec<Vec<Step<S>>>,
+    invariant: Option<Box<dyn Fn(&S) -> Result<(), String>>>,
+    finally_: Option<Box<dyn Fn(&S) -> Result<(), String>>>,
+}
+
+impl<S> ScriptModel<S> {
+    /// A model over `state` with no threads yet.
+    pub fn new(state: S) -> Self {
+        ScriptModel {
+            state,
+            scripts: Vec::new(),
+            invariant: None,
+            finally_: None,
+        }
+    }
+
+    /// Append a thread with the given step script.
+    pub fn thread(mut self, steps: Vec<Step<S>>) -> Self {
+        self.scripts.push(steps);
+        self
+    }
+
+    /// Set the per-step invariant oracle.
+    pub fn invariant(mut self, f: impl Fn(&S) -> Result<(), String> + 'static) -> Self {
+        self.invariant = Some(Box::new(f));
+        self
+    }
+
+    /// Set the end-of-schedule oracle.
+    pub fn finally(mut self, f: impl Fn(&S) -> Result<(), String> + 'static) -> Self {
+        self.finally_ = Some(Box::new(f));
+        self
+    }
+}
+
+impl<S> Model for ScriptModel<S> {
+    fn threads(&self) -> usize {
+        self.scripts.len()
+    }
+
+    fn steps(&self, thread: usize) -> usize {
+        self.scripts[thread].len()
+    }
+
+    fn step(&mut self, thread: usize, index: usize) -> StepOutcome {
+        (self.scripts[thread][index])(&mut self.state)
+    }
+
+    fn invariant(&self) -> Result<(), String> {
+        match &self.invariant {
+            Some(f) => f(&self.state),
+            None => Ok(()),
+        }
+    }
+
+    fn finally(&self) -> Result<(), String> {
+        match &self.finally_ {
+            Some(f) => f(&self.state),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Default)]
+    struct Counter {
+        x: i64,
+        tmp: [i64; 2],
+    }
+
+    /// Two threads doing a non-atomic read-modify-write: the classic
+    /// lost update. The explorer must find it.
+    fn racy_counter() -> ScriptModel<Counter> {
+        ScriptModel::new(Counter::default())
+            .thread(vec![
+                always(|s: &mut Counter| s.tmp[0] = s.x),
+                always(|s: &mut Counter| s.x = s.tmp[0] + 1),
+            ])
+            .thread(vec![
+                always(|s: &mut Counter| s.tmp[1] = s.x),
+                always(|s: &mut Counter| s.x = s.tmp[1] + 1),
+            ])
+            .finally(|s| {
+                if s.x == 2 {
+                    Ok(())
+                } else {
+                    Err(format!("lost update: x = {}", s.x))
+                }
+            })
+    }
+
+    #[test]
+    fn exhaustive_catches_lost_update() {
+        let report = explore(racy_counter, 10_000);
+        let v = report.violation.expect("lost update not found");
+        assert!(v.message.contains("lost update"));
+        // The canonical bad schedule: both reads before both writes.
+        assert_eq!(v.schedule.len(), 4);
+    }
+
+    #[test]
+    fn exhaustive_passes_atomic_counter_and_counts_schedules() {
+        // Single-step increments are atomic at model granularity.
+        let factory = || {
+            ScriptModel::new(Counter::default())
+                .thread(vec![always(|s: &mut Counter| s.x += 1)])
+                .thread(vec![always(|s: &mut Counter| s.x += 1)])
+                .finally(|s| {
+                    if s.x == 2 {
+                        Ok(())
+                    } else {
+                        Err(format!("x = {}", s.x))
+                    }
+                })
+        };
+        let report = explore(factory, 10_000);
+        assert!(report.ok(), "{report}");
+        assert!(report.exhausted);
+        // Two threads, one step each: exactly 2 interleavings.
+        assert_eq!(report.schedules, 2);
+    }
+
+    #[test]
+    fn schedule_cap_is_respected() {
+        let report = explore(racy_counter, 1);
+        assert!(report.schedules <= 1);
+        assert!(!report.exhausted || report.violation.is_some());
+    }
+
+    #[test]
+    fn blocked_steps_wait_and_deadlock_is_reported() {
+        // Consumer blocks until the producer publishes; never deadlocks
+        // because the producer is always runnable.
+        let ok = || {
+            ScriptModel::new((0i64, 0i64))
+                .thread(vec![always(|s: &mut (i64, i64)| s.0 = 7)])
+                .thread(vec![when(|s: &(i64, i64)| s.0 != 0, |s| s.1 = s.0)])
+                .finally(|s| {
+                    if s.1 == 7 {
+                        Ok(())
+                    } else {
+                        Err(format!("consumer read {}", s.1))
+                    }
+                })
+        };
+        let report = explore(ok, 10_000);
+        assert!(report.ok(), "{report}");
+        assert!(report.exhausted);
+
+        // A guard that can never become true must be reported as
+        // deadlock, not silently skipped.
+        let stuck = || {
+            ScriptModel::new(0i64)
+                .thread(vec![when(|_: &i64| false, |_| {})])
+        };
+        let report = explore(stuck, 10_000);
+        let v = report.violation.expect("deadlock not reported");
+        assert!(v.message.contains("deadlock"), "{}", v.message);
+    }
+
+    #[test]
+    fn random_mode_catches_lost_update() {
+        let report = explore_random(racy_counter, 256, 0xCA7A);
+        assert!(report.violation.is_some(), "random missed the race");
+    }
+
+    #[test]
+    fn invariant_checked_after_every_step() {
+        // x must never exceed 1 mid-run — violated as soon as the
+        // second thread increments.
+        let factory = || {
+            ScriptModel::new(Counter::default())
+                .thread(vec![always(|s: &mut Counter| s.x += 1)])
+                .thread(vec![always(|s: &mut Counter| s.x += 1)])
+                .invariant(|s| {
+                    if s.x <= 1 {
+                        Ok(())
+                    } else {
+                        Err(format!("x hit {}", s.x))
+                    }
+                })
+        };
+        let report = explore(factory, 10_000);
+        let v = report.violation.expect("invariant breach not found");
+        assert_eq!(v.schedule.len(), 2);
+    }
+}

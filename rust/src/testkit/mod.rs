@@ -1,8 +1,17 @@
-//! Mini property-testing framework (the offline vendor set has no
-//! `proptest`): random-input generation with automatic shrinking on
-//! failure. Used by `rust/tests/prop_*.rs` to check coordinator
-//! invariants (routing, batching, KV-cache accounting).
+//! In-repo testing frameworks (the offline vendor set has no
+//! `proptest` or `loom`):
+//!
+//! - [`prop`] — mini property testing: random-input generation with
+//!   automatic shrinking on failure. Used by `rust/tests/prop_*.rs`
+//!   to check coordinator invariants (routing, batching, KV-cache
+//!   accounting, request lifecycle).
+//! - [`interleave`] — bounded interleaving explorer (mini-loom):
+//!   exhaustive or seeded-random schedule exploration of modeled
+//!   concurrent protocols with shadow-state oracles. Used by
+//!   `rust/tests/interleave_lifecycle.rs` on the shm SPSC/doorbell
+//!   protocol model and the request-lifecycle state machine.
 
+pub mod interleave;
 pub mod prop;
 
 pub use prop::{forall, Config, Gen};

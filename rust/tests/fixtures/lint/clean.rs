@@ -1,0 +1,18 @@
+//! Fixture: satisfies every lint rule even when scanned as a hot,
+//! decode-path module. Not compiled into any target — read by
+//! `rust/tests/lint_analysis.rs` and fed to `lint_source`.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Read a monitoring counter.
+pub fn peek(c: &AtomicU32) -> u32 {
+    // ORDERING: progress statistic only; no data is published on it.
+    c.load(Ordering::Relaxed)
+}
+
+/// Copy a value out of a reference via a raw read.
+pub fn read_through(p: &u32) -> u32 {
+    // SAFETY: `p` is a live shared reference, so the pointee is valid,
+    // aligned, and initialized for the duration of the read.
+    unsafe { core::ptr::read(p) }
+}

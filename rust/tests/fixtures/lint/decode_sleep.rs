@@ -1,0 +1,10 @@
+//! Fixture: sleeping and busy-spinning on the decode path — the
+//! `decode-sleep` rule must fire on both.
+
+pub fn nap() {
+    std::thread::sleep(std::time::Duration::from_millis(1));
+}
+
+pub fn spin() {
+    std::hint::spin_loop();
+}

@@ -1,0 +1,13 @@
+//! Fixture: `.unwrap()` on a hot path outside tests — the
+//! `hot-unwrap` rule must fire on `first` but tolerate the
+//! lock-poisoning idiom in `locked`.
+
+use std::sync::Mutex;
+
+pub fn first(v: &[u32]) -> u32 {
+    *v.first().unwrap()
+}
+
+pub fn locked(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}

@@ -1,0 +1,8 @@
+//! Fixture: `Ordering::Relaxed` without a nearby justification note —
+//! the `ordering-comment` rule must fire.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+pub fn peek(c: &AtomicU32) -> u32 {
+    c.load(Ordering::Relaxed)
+}

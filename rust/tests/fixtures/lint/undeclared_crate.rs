@@ -1,0 +1,8 @@
+//! Fixture: a path root that is neither a declared crate, a module of
+//! the tree, nor a `use` import — the `undeclared-crate` rule must
+//! fire. This is the class of break that ships `libc::` calls with no
+//! manifest entry and only surfaces at build time.
+
+pub fn encode(x: u64) -> String {
+    serde_json::to_string(&x)
+}

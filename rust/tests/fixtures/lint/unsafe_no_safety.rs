@@ -1,0 +1,6 @@
+//! Fixture: an `unsafe` block with no safety justification — the
+//! `safety-comment` rule must fire on the block's line.
+
+pub fn read_through(p: &u32) -> u32 {
+    unsafe { core::ptr::read(p) }
+}

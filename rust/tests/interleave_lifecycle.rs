@@ -1,0 +1,477 @@
+//! Interleaving tests built on [`caraserve::testkit::interleave`]:
+//!
+//! 1. A faithful shadow model of the `ipc::shm` SlotChannel/Doorbell
+//!    SPSC protocol, exhaustively verified (2 threads × 6 steps each),
+//!    plus a 3-thread overlap model that re-catches the PR 2
+//!    shared-length regression in a seeded known-bad variant while the
+//!    committed split-length protocol passes exhaustively.
+//! 2. The request-lifecycle state machine: the real `SimFront` and
+//!    `ClusterFront` driven through ≥1,200 seeded random schedules of
+//!    submit/cancel/poll/install/uninstall/prewarm, with oracles for
+//!    terminal-event uniqueness and registry-placement serveability.
+
+use std::cell::Cell;
+use std::sync::Arc;
+
+use caraserve::config::GpuSpec;
+use caraserve::model::{LlamaConfig, LoraSpec};
+use caraserve::perfmodel::{KernelKind, PerfModel};
+use caraserve::scheduler::registry::{AdapterMeta, GlobalRegistry};
+use caraserve::scheduler::{policy_by_name, RankAwareConfig};
+use caraserve::server::{ClusterFront, RequestEvent, RequestHandle, ServeRequest, ServingFront};
+use caraserve::sim::{GpuModel, ServingMode, SimFront, SimInstance};
+use caraserve::testkit::interleave::{always, explore, explore_random, when, ScriptModel, Step};
+use caraserve::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Part 1a: full request/response roundtrip, step-for-step with the real
+// SlotChannel protocol (send_request / recv_request / send_response /
+// recv_response), verified over every interleaving.
+// ---------------------------------------------------------------------------
+
+const CAP: usize = 8;
+
+/// Shadow of one slot's shared memory plus each side's locals. Fixed
+/// `CAP`-element buffers mirror the slot's fixed capacity; `*_seq`
+/// mirror the doorbells; `*_len` mirror the header length words.
+#[derive(Default)]
+struct Spsc {
+    req_buf: [f32; CAP],
+    req_len: usize,
+    req_seq: u32,
+    resp_buf: [f32; CAP],
+    resp_len: usize,
+    resp_seq: u32,
+    // Producer locals.
+    p_resp_seen: u32,
+    p_len: usize,
+    got: Vec<f32>,
+    // Consumer locals.
+    c_len: usize,
+    c_got: Vec<f32>,
+}
+
+/// One full exchange: producer sends [1,2,3], consumer echoes it
+/// doubled. Each step is one shared-memory access of the real
+/// protocol, so the interleaving granularity matches `ipc::shm`.
+fn spsc_roundtrip() -> ScriptModel<Spsc> {
+    ScriptModel::new(Spsc::default())
+        // Producer: send_request, then recv_response.
+        .thread(vec![
+            always(|s: &mut Spsc| s.req_buf[..3].copy_from_slice(&[1.0, 2.0, 3.0])),
+            always(|s: &mut Spsc| s.req_len = 3),
+            always(|s: &mut Spsc| {
+                // Capture the response sequence, then ring the request
+                // doorbell — send_request's return value.
+                s.p_resp_seen = s.resp_seq;
+                s.req_seq += 1;
+            }),
+            when(|s: &Spsc| s.resp_seq != s.p_resp_seen, |_| {}),
+            always(|s: &mut Spsc| s.p_len = s.resp_len.min(CAP)),
+            always(|s: &mut Spsc| s.got = s.resp_buf[..s.p_len].to_vec()),
+        ])
+        // Consumer: recv_request, then send_response.
+        .thread(vec![
+            when(|s: &Spsc| s.req_seq > 0, |_| {}),
+            always(|s: &mut Spsc| s.c_len = s.req_len.min(CAP)),
+            always(|s: &mut Spsc| s.c_got = s.req_buf[..s.c_len].to_vec()),
+            always(|s: &mut Spsc| {
+                for (i, v) in s.c_got.clone().iter().enumerate() {
+                    s.resp_buf[i] = v * 2.0;
+                }
+            }),
+            always(|s: &mut Spsc| s.resp_len = s.c_len),
+            always(|s: &mut Spsc| s.resp_seq += 1),
+        ])
+        .finally(|s| {
+            if s.c_got != vec![1.0, 2.0, 3.0] {
+                return Err(format!("consumer read {:?}", s.c_got));
+            }
+            if s.got != vec![2.0, 4.0, 6.0] {
+                return Err(format!("producer read {:?}", s.got));
+            }
+            Ok(())
+        })
+}
+
+#[test]
+fn spsc_roundtrip_verified_exhaustively() {
+    let report = explore(spsc_roundtrip, 100_000);
+    assert!(report.ok(), "{report}");
+    assert!(report.exhausted, "schedule space not covered: {report}");
+    assert!(report.schedules >= 1);
+}
+
+// ---------------------------------------------------------------------------
+// Part 1b: the PR 2 shared-length regression. A response is published
+// while the producer concurrently publishes its next request (the
+// overlap `ipc::shm`'s SlotHeader docs call out — e.g. a shutdown
+// poison message racing an in-flight job). With one shared length word
+// the request's length clobbers the response's; with the committed
+// split req_len/resp_len design it cannot.
+// ---------------------------------------------------------------------------
+
+struct Overlap {
+    /// Known-bad variant: both directions share one length word.
+    shared: bool,
+    req_buf: [f32; CAP],
+    resp_buf: [f32; CAP],
+    req_len: usize,
+    resp_len: usize,
+    /// The single length word of the known-bad variant.
+    len: usize,
+    resp_seq: u32,
+    r_len: usize,
+    out: Option<Vec<f32>>,
+}
+
+fn overlap_model(shared: bool) -> ScriptModel<Overlap> {
+    let state = Overlap {
+        shared,
+        req_buf: [0.0; CAP],
+        resp_buf: [0.0; CAP],
+        req_len: 0,
+        resp_len: 0,
+        len: 0,
+        resp_seq: 0,
+        r_len: 0,
+        out: None,
+    };
+    ScriptModel::new(state)
+        // Worker: publish the 3-element response [7,7,7] and ring.
+        .thread(vec![
+            always(|s: &mut Overlap| s.resp_buf[..3].copy_from_slice(&[7.0; 3])),
+            always(|s: &mut Overlap| {
+                if s.shared {
+                    s.len = 3;
+                } else {
+                    s.resp_len = 3;
+                }
+            }),
+            always(|s: &mut Overlap| s.resp_seq += 1),
+        ])
+        // Producer: concurrently publish the next 5-element request.
+        .thread(vec![
+            always(|s: &mut Overlap| s.req_buf[..5].copy_from_slice(&[9.0; 5])),
+            always(|s: &mut Overlap| {
+                if s.shared {
+                    s.len = 5;
+                } else {
+                    s.req_len = 5;
+                }
+            }),
+        ])
+        // Reader: wait for the response doorbell, then read length and
+        // payload exactly like recv_response (clamped to capacity).
+        .thread(vec![
+            when(
+                |s: &Overlap| s.resp_seq > 0,
+                |s| {
+                    let len = if s.shared { s.len } else { s.resp_len };
+                    s.r_len = len.min(CAP);
+                },
+            ),
+            always(|s: &mut Overlap| s.out = Some(s.resp_buf[..s.r_len].to_vec())),
+        ])
+        .finally(|s| match &s.out {
+            Some(v) if v == &vec![7.0; 3] => Ok(()),
+            other => Err(format!("response clobbered: read {other:?}")),
+        })
+}
+
+#[test]
+fn split_length_words_survive_overlap_exhaustively() {
+    let report = explore(|| overlap_model(false), 100_000);
+    assert!(report.ok(), "{report}");
+    assert!(report.exhausted);
+    // Three concurrent threads: genuinely many interleavings.
+    assert!(report.schedules > 10, "only {} schedules", report.schedules);
+}
+
+#[test]
+fn shared_length_word_regression_is_caught() {
+    let report = explore(|| overlap_model(true), 100_000);
+    let v = report.violation.expect("known-bad variant not caught");
+    assert!(v.message.contains("clobbered"), "{}", v.message);
+}
+
+// ---------------------------------------------------------------------------
+// Part 2: request-lifecycle schedules against the real fronts.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+enum Op {
+    Submit {
+        adapter: u64,
+        prompt: usize,
+        max_new: usize,
+        stop: Option<i32>,
+    },
+    Cancel(usize),
+    Poll,
+    Install(u64, usize),
+    Uninstall(u64),
+    Prewarm(u64),
+}
+
+fn random_op(rng: &mut Rng) -> Op {
+    match rng.range(0, 10) {
+        0..=3 => Op::Submit {
+            // Ids 4–5 start unregistered → Rejected unless installed
+            // by an earlier Install op in the same schedule.
+            adapter: rng.range(0, 6) as u64,
+            prompt: rng.range(1, 32),
+            max_new: rng.range(1, 8),
+            stop: if rng.chance(0.25) {
+                Some(rng.range(0, 10) as i32)
+            } else {
+                None
+            },
+        },
+        4 => Op::Cancel(rng.range(0, 16)),
+        5 | 6 => Op::Poll,
+        7 => Op::Install(rng.range(0, 6) as u64, *rng.choose(&[8usize, 16, 32, 64])),
+        8 => Op::Uninstall(rng.range(0, 6) as u64),
+        _ => Op::Prewarm(rng.range(0, 6) as u64),
+    }
+}
+
+/// Shared state of one lifecycle schedule: the front under test plus
+/// every handle it ever returned, and the progress/drain bookkeeping
+/// the drainer thread keys off.
+struct Lifecycle<F: ServingFront> {
+    front: F,
+    handles: Vec<RequestHandle>,
+    steps_done: usize,
+    drained: bool,
+}
+
+/// Apply one op to the front. Management-surface refusals must be the
+/// *documented* ones (busy / not installed) — anything else is a bug.
+fn apply_op<F: ServingFront>(s: &mut Lifecycle<F>, op: &Op) {
+    s.steps_done += 1;
+    match op {
+        Op::Submit {
+            adapter,
+            prompt,
+            max_new,
+            stop,
+        } => {
+            let mut req =
+                ServeRequest::new(*adapter, vec![1; *prompt]).max_new_tokens(*max_new);
+            if let Some(t) = stop {
+                req = req.stop_token(*t);
+            }
+            let h = s.front.submit(req);
+            s.handles.push(h);
+        }
+        Op::Cancel(i) => {
+            if !s.handles.is_empty() {
+                let id = s.handles[i % s.handles.len()].id();
+                let _ = s.front.cancel(id);
+            }
+        }
+        Op::Poll => {
+            s.front.poll().expect("poll must not fail");
+        }
+        Op::Install(id, rank) => {
+            s.front
+                .install_adapter(&LoraSpec::standard(*id, *rank, "sim"))
+                .expect("install must not fail");
+        }
+        Op::Uninstall(id) => {
+            if let Err(e) = s.front.uninstall_adapter(*id) {
+                let msg = e.to_string();
+                assert!(
+                    msg.contains("busy") || msg.contains("not installed"),
+                    "unexpected uninstall refusal: {msg}"
+                );
+            }
+        }
+        Op::Prewarm(id) => {
+            if let Err(e) = s.front.prewarm_adapter(*id) {
+                let msg = e.to_string();
+                assert!(
+                    msg.contains("not installed"),
+                    "unexpected prewarm refusal: {msg}"
+                );
+            }
+        }
+    }
+}
+
+/// The end-of-schedule oracle: every submitted request reached exactly
+/// one terminal event, with no events after it, and token streams are
+/// consistent with the terminal reason.
+fn lifecycle_oracle<F: ServingFront>(s: &Lifecycle<F>) -> Result<(), String> {
+    if !s.drained {
+        return Err("drainer thread never ran".into());
+    }
+    for h in &s.handles {
+        let state = h.state();
+        if !state.is_terminal() {
+            return Err(format!("request {} ended in {state:?}", h.id()));
+        }
+        let events = h.drain_events();
+        let terminals = events.iter().filter(|e| e.is_terminal()).count();
+        if terminals != 1 {
+            return Err(format!(
+                "request {}: {terminals} terminal events in {events:?}",
+                h.id()
+            ));
+        }
+        let last = events.last().expect("terminal implies ≥ 1 event");
+        if !last.is_terminal() {
+            return Err(format!("request {}: events after terminal", h.id()));
+        }
+        let tokens = h.tokens();
+        match last {
+            RequestEvent::Rejected(_) => {
+                if !tokens.is_empty() || events.len() != 1 {
+                    return Err(format!("request {}: rejected saw activity", h.id()));
+                }
+            }
+            RequestEvent::Finished(_) => {
+                if tokens.is_empty() {
+                    return Err(format!("request {}: finished without tokens", h.id()));
+                }
+            }
+            RequestEvent::Cancelled => {}
+            other => return Err(format!("non-terminal last event {other:?}")),
+        }
+    }
+    Ok(())
+}
+
+/// Assemble the client threads + drainer for a front. `ops` holds one
+/// script per client thread; the drainer waits until every client step
+/// has run, then drains the front so the oracle sees a quiesced system.
+fn lifecycle_model<F: ServingFront + 'static>(
+    front: F,
+    ops: Vec<Vec<Op>>,
+) -> ScriptModel<Lifecycle<F>> {
+    let total: usize = ops.iter().map(Vec::len).sum();
+    let mut m = ScriptModel::new(Lifecycle {
+        front,
+        handles: Vec::new(),
+        steps_done: 0,
+        drained: false,
+    });
+    for script in ops {
+        let steps: Vec<Step<Lifecycle<F>>> = script
+            .into_iter()
+            .map(|op| always(move |s: &mut Lifecycle<F>| apply_op(s, &op)))
+            .collect();
+        m = m.thread(steps);
+    }
+    m.thread(vec![when(
+        move |s: &Lifecycle<F>| s.steps_done == total,
+        |s| {
+            s.front.run_until_idle().expect("drain must not fail");
+            s.drained = true;
+        },
+    )])
+    .finally(|s| lifecycle_oracle(s))
+}
+
+fn random_scripts(rng: &mut Rng) -> Vec<Vec<Op>> {
+    (0..3)
+        .map(|_| (0..rng.range(3, 9)).map(|_| random_op(rng)).collect())
+        .collect()
+}
+
+fn sim_front(rng: &mut Rng) -> SimFront {
+    let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+    let inst = SimInstance::new(0, model, ServingMode::CaraServe, rng.range(1, 6), 8, 16);
+    let mut front = SimFront::new(inst, 64);
+    for id in 0..4 {
+        front.register_adapter(id, *rng.choose(&[8, 16, 32, 64]));
+    }
+    front
+}
+
+/// ≥600 seeded random schedules of mixed traffic + management ops
+/// against the single-instance `SimFront`.
+#[test]
+fn lifecycle_schedules_hold_on_sim_front() {
+    let next = Cell::new(0u64);
+    let report = explore_random(
+        || {
+            let seed = 0x51D0 + next.get();
+            next.set(next.get() + 1);
+            let mut rng = Rng::new(seed);
+            let front = sim_front(&mut rng);
+            lifecycle_model(front, random_scripts(&mut rng))
+        },
+        600,
+        0xCA7A_5EED,
+    );
+    assert!(report.ok(), "{report}");
+    assert_eq!(report.schedules, 600);
+}
+
+fn cluster_front(rng: &mut Rng) -> ClusterFront {
+    let n = rng.range(2, 4);
+    let rank_of = |id: u64| [8usize, 16, 32, 64][(id % 4) as usize];
+    let mut backends: Vec<Box<dyn ServingFront>> = Vec::new();
+    for s in 0..n {
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let inst = SimInstance::new(s, model, ServingMode::CaraServe, 4, 8, 16);
+        let mut f = SimFront::new(inst, 64);
+        for id in 0..4u64 {
+            // Each adapter starts on two of the backends.
+            if (id as usize) % n == s || (id as usize + 1) % n == s {
+                f.register_adapter(id, rank_of(id));
+            }
+        }
+        backends.push(Box::new(f));
+    }
+    let registry = Arc::new(GlobalRegistry::new());
+    for id in 0..4u64 {
+        registry.register(AdapterMeta {
+            id,
+            rank: rank_of(id),
+            base_model: "sim".into(),
+            weights_path: String::new(),
+        });
+    }
+    let pre = PerfModel::from_coefficients(KernelKind::Bgmv, 4e-5, 60e-3);
+    let dec = PerfModel::from_coefficients(KernelKind::Bgmv, 1.3e-5, 24.8e-3);
+    let name = *rng.choose(&["rank-aware", "most-idle", "first-fit", "random"]);
+    let policy = policy_by_name(name, pre, dec, RankAwareConfig::default(), 7).unwrap();
+    ClusterFront::new(backends, policy, registry)
+}
+
+/// ≥600 seeded random schedules against the routed `ClusterFront`,
+/// with a per-step invariant: every placement the registry records
+/// must point at a server that can actually serve the adapter (the
+/// PR 5 coordinator's core consistency guarantee).
+#[test]
+fn lifecycle_schedules_hold_on_cluster_front() {
+    let next = Cell::new(0u64);
+    let report = explore_random(
+        || {
+            let seed = 0xC1_0570 + next.get();
+            next.set(next.get() + 1);
+            let mut rng = Rng::new(seed);
+            let front = cluster_front(&mut rng);
+            lifecycle_model(front, random_scripts(&mut rng)).invariant(|s| {
+                let stats = s.front.per_server_stats();
+                for id in s.front.registry().ids() {
+                    for srv in s.front.registry().servers_for(id) {
+                        if srv >= stats.len() || !stats[srv].can_serve(id) {
+                            return Err(format!(
+                                "adapter {id} placed on server {srv} which cannot serve it"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            })
+        },
+        600,
+        0xD00D_FEED,
+    );
+    assert!(report.ok(), "{report}");
+    assert_eq!(report.schedules, 600);
+}

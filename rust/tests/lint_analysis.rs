@@ -1,0 +1,183 @@
+//! Integration tests for `caraserve::analysis` — the engine behind the
+//! `caraserve lint` subcommand. Seeded-violation fixtures check that
+//! every rule fires; the committed tree must scan clean (the same gate
+//! CI enforces); and a miniature on-disk repo exercises the end-to-end
+//! tree walk, allowlist handling, and JSON report shape.
+
+use std::path::{Path, PathBuf};
+
+use caraserve::analysis::{lint_source, lint_tree, LintContext, RULES};
+
+fn ctx() -> LintContext {
+    let mut c = LintContext::default();
+    c.crates.extend(["anyhow".to_string(), "libc".to_string()]);
+    c.modules.extend(["util".to_string(), "ipc".to_string()]);
+    c
+}
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/lint")
+        .join(name);
+    std::fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("read fixture {}: {e}", p.display()))
+}
+
+/// Each seeded fixture fires exactly its target rule. Scanned under
+/// `runtime/` so every path-scoped rule is armed (hot + decode path).
+#[test]
+fn seeded_fixtures_fire_their_rule() {
+    let cases = [
+        ("unsafe_no_safety.rs", "safety-comment"),
+        ("relaxed_no_ordering.rs", "ordering-comment"),
+        ("hot_unwrap.rs", "hot-unwrap"),
+        ("decode_sleep.rs", "decode-sleep"),
+        ("undeclared_crate.rs", "undeclared-crate"),
+    ];
+    for (file, rule) in cases {
+        assert!(RULES.contains(&rule), "{rule} missing from RULES");
+        let v = lint_source(&format!("runtime/{file}"), &fixture(file), &ctx());
+        assert!(
+            v.iter().any(|v| v.rule == rule),
+            "{file}: expected a {rule} violation, got {v:?}"
+        );
+        assert!(
+            v.iter().all(|v| v.rule == rule),
+            "{file}: unexpected extra rules in {v:?}"
+        );
+    }
+}
+
+#[test]
+fn clean_fixture_passes_every_rule() {
+    let v = lint_source("runtime/clean.rs", &fixture("clean.rs"), &ctx());
+    assert!(v.is_empty(), "clean fixture flagged: {v:?}");
+}
+
+/// Path scoping: identical hot-path/decode-path violations are ignored
+/// outside the modules the rules target.
+#[test]
+fn path_scoped_rules_ignore_cold_modules() {
+    for file in ["hot_unwrap.rs", "decode_sleep.rs"] {
+        let v = lint_source(&format!("sim/{file}"), &fixture(file), &ctx());
+        assert!(v.is_empty(), "{file} flagged outside hot paths: {v:?}");
+    }
+}
+
+/// The committed tree must be clean — the check `cargo run -- lint`
+/// gates CI on, run here so `cargo test` catches regressions first.
+#[test]
+fn committed_tree_is_clean() {
+    let report = lint_tree(Path::new(env!("CARGO_MANIFEST_DIR"))).unwrap();
+    assert!(
+        report.is_clean(),
+        "committed tree has lint violations:\n{}",
+        report.render_table()
+    );
+    assert!(
+        report.files_scanned >= 50,
+        "only {} files scanned — wrong root?",
+        report.files_scanned
+    );
+    assert!(report.allowed > 0, "allowlist not exercised");
+    assert!(
+        report.unused_allow.is_empty(),
+        "unused allowlist entries: {:?}",
+        report.unused_allow
+    );
+    assert!(report.render_table().trim_end().ends_with("clean"));
+}
+
+/// Build a throwaway one-file repo under `target/` (kept inside the
+/// workspace so scratch space is cleaned with it).
+fn mini_repo(name: &str, lib: &str, allow: Option<&str>) -> PathBuf {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("target")
+        .join("lint-test-scratch")
+        .join(name);
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(root.join("rust/src")).unwrap();
+    std::fs::write(
+        root.join("Cargo.toml"),
+        "[package]\nname = \"mini\"\n\n[dependencies]\nanyhow = \"1\"\n",
+    )
+    .unwrap();
+    std::fs::write(root.join("rust/src/lib.rs"), lib).unwrap();
+    if let Some(text) = allow {
+        std::fs::write(root.join("rust/lint-allow.txt"), text).unwrap();
+    }
+    root
+}
+
+const DENY: &str = "#![deny(unsafe_op_in_unsafe_fn)]\n";
+
+fn unsafe_lib() -> String {
+    format!("{DENY}pub fn f(p: &u32) -> u32 {{\n    unsafe {{ core::ptr::read(p) }}\n}}\n")
+}
+
+#[test]
+fn tree_scan_reports_violations_and_json_shape() {
+    let root = mini_repo("dirty", &unsafe_lib(), None);
+    let report = lint_tree(&root).unwrap();
+    assert!(!report.is_clean());
+    assert_eq!(report.files_scanned, 1);
+    assert_eq!(report.violations.len(), 1);
+    let v = &report.violations[0];
+    assert_eq!(v.rule, "safety-comment");
+    assert_eq!(v.file, "lib.rs");
+    assert_eq!(v.line, 3);
+
+    let json = report.to_json();
+    assert_eq!(json.get("clean").and_then(|j| j.as_bool()), Some(false));
+    assert_eq!(
+        json.get("violation_count").and_then(|j| j.as_usize()),
+        Some(1)
+    );
+    let rules = json.get("rules").unwrap().as_arr().unwrap();
+    assert_eq!(rules.len(), RULES.len());
+    let arr = json.get("violations").unwrap().as_arr().unwrap();
+    assert_eq!(
+        arr[0].get("rule").and_then(|j| j.as_str()),
+        Some("safety-comment")
+    );
+    assert_eq!(arr[0].get("line").and_then(|j| j.as_usize()), Some(3));
+    assert!(report.render_table().contains("FAIL"));
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn missing_crate_root_policy_is_reported() {
+    let root = mini_repo("nodeny", "pub fn f() {}\n", None);
+    let report = lint_tree(&root).unwrap();
+    assert_eq!(report.violations.len(), 1);
+    assert_eq!(report.violations[0].rule, "unsafe-op-deny");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn allowlist_suppresses_and_unused_entries_warn() {
+    let allow = "\
+# justified for the test
+safety-comment :: lib.rs :: core::ptr::read
+hot-unwrap :: nonexistent.rs :: .unwrap()
+";
+    let root = mini_repo("allow", &unsafe_lib(), Some(allow));
+    let report = lint_tree(&root).unwrap();
+    assert!(report.is_clean(), "{}", report.render_table());
+    assert_eq!(report.allowed, 1);
+    assert_eq!(report.unused_allow.len(), 1);
+    assert!(report.unused_allow[0].contains("nonexistent.rs"));
+    assert!(report.render_table().contains("unused allowlist entry"));
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn malformed_allowlist_is_an_error() {
+    let root = mini_repo(
+        "badallow",
+        &format!("{DENY}pub fn f() {{}}\n"),
+        Some("not a valid entry\n"),
+    );
+    assert!(lint_tree(&root).is_err());
+    std::fs::remove_dir_all(&root).unwrap();
+}

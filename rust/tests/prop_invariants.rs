@@ -376,3 +376,133 @@ fn prop_every_submitted_request_terminates_in_exactly_one_terminal_event() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_management_surface_interleaves_safely_with_traffic() {
+    // PR 5's management surface (install/uninstall/prewarm) interleaved
+    // with live traffic: uninstall refuses *exactly* when the adapter
+    // has in-flight requests, prewarm succeeds exactly when installed,
+    // and the lifecycle guarantee still holds for every handle.
+    use caraserve::model::LoraSpec;
+    use caraserve::server::{RequestHandle, ServeRequest, ServingFront};
+    use caraserve::sim::SimFront;
+
+    let cfg = Config {
+        cases: 32,
+        ..Default::default()
+    };
+    let gen = prop::usize_in(0, 100_000);
+    prop::forall(&cfg, &gen, |&seed| {
+        let mut rng = Rng::new(seed as u64);
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let inst =
+            SimInstance::new(0, model, ServingMode::CaraServe, rng.range(1, 6), 8, 16);
+        let mut front = SimFront::new(inst, 64);
+        for id in 0..4 {
+            front.register_adapter(id, *rng.choose(&[8, 16, 32, 64]));
+        }
+
+        let in_flight = |front: &SimFront, id: u64| {
+            let inst = front.instance();
+            inst.queue
+                .iter()
+                .chain(inst.running.iter())
+                .filter(|r| r.req.adapter == id)
+                .count()
+        };
+
+        let mut handles: Vec<RequestHandle> = Vec::new();
+        for _ in 0..rng.range(10, 40) {
+            match rng.range(0, 10) {
+                0..=3 => {
+                    let adapter = rng.range(0, 5) as u64;
+                    let req = ServeRequest::new(adapter, vec![1; rng.range(1, 32)])
+                        .max_new_tokens(rng.range(1, 8));
+                    handles.push(front.submit(req));
+                }
+                4 | 5 => {
+                    front.poll().map_err(|e| e.to_string())?;
+                }
+                6 => {
+                    // Install (or re-install with a possibly new rank).
+                    let id = rng.range(0, 5) as u64;
+                    let rank = *rng.choose(&[8usize, 16, 32, 64]);
+                    front
+                        .install_adapter(&LoraSpec::standard(id, rank, "sim"))
+                        .map_err(|e| format!("install: {e}"))?;
+                }
+                7 => {
+                    // Uninstall must refuse exactly when requests on the
+                    // adapter are queued or running.
+                    let id = rng.range(0, 5) as u64;
+                    let busy = in_flight(&front, id);
+                    match front.uninstall_adapter(id) {
+                        Ok(()) if busy != 0 => {
+                            return Err(format!(
+                                "uninstalled adapter {id} with {busy} in flight"
+                            ));
+                        }
+                        Ok(()) => {}
+                        Err(e) => {
+                            let msg = e.to_string();
+                            if msg.contains("busy") {
+                                if busy == 0 {
+                                    return Err(format!(
+                                        "spurious busy refusal for idle adapter {id}"
+                                    ));
+                                }
+                            } else if !msg.contains("not installed") {
+                                return Err(format!("unexpected refusal: {msg}"));
+                            }
+                        }
+                    }
+                }
+                8 => {
+                    // Prewarm succeeds (and warms) exactly when installed.
+                    let id = rng.range(0, 5) as u64;
+                    match front.prewarm_adapter(id) {
+                        Ok(warmed) => {
+                            if !warmed {
+                                return Err(format!("prewarm {id} warmed nothing"));
+                            }
+                        }
+                        Err(e) => {
+                            let msg = e.to_string();
+                            if !msg.contains("not installed") {
+                                return Err(format!("unexpected prewarm error: {msg}"));
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    if let Some(h) = handles.last() {
+                        h.cancel();
+                    }
+                }
+            }
+        }
+        front.run_until_idle().map_err(|e| e.to_string())?;
+
+        for h in &handles {
+            let state = h.state();
+            if !state.is_terminal() {
+                return Err(format!("request {} ended in {state:?}", h.id()));
+            }
+            let events = h.drain_events();
+            let terminals = events.iter().filter(|e| e.is_terminal()).count();
+            if terminals != 1 {
+                return Err(format!(
+                    "request {}: {terminals} terminal events in {events:?}",
+                    h.id()
+                ));
+            }
+            if !events.last().unwrap().is_terminal() {
+                return Err(format!("request {}: events after terminal", h.id()));
+            }
+        }
+        if front.instance().queue.len() + front.instance().running.len() != 0 {
+            return Err("backend left work behind".into());
+        }
+        Ok(())
+    });
+}

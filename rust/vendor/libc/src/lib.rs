@@ -1,0 +1,66 @@
+//! Vendored offline stand-in for the slice of the `libc` crate this
+//! repository actually uses (the build environment has no registry or
+//! network access, so the real crate cannot be fetched).
+//!
+//! Only the shared-memory data plane ([`mmap`]/[`munmap`], used by
+//! `ipc::shm`) and the futex doorbells (the variadic [`syscall`] entry
+//! plus its constants, used by `ipc::signal`) are declared. These bind
+//! the *real* symbols from the platform C library — this crate is a
+//! declaration subset, not a reimplementation — so the semantics are
+//! identical to the upstream `libc` crate for the covered surface.
+//!
+//! Constants are the Linux userspace ABI values (x86_64/aarch64 share
+//! them for everything here except the futex syscall number, which is
+//! per-architecture). Non-Linux targets only ever reach [`mmap`]/
+//! [`munmap`] — `ipc::signal` compiles its futex path under
+//! `cfg(target_os = "linux")` — and those two are POSIX-portable.
+
+#![no_std]
+#![allow(non_camel_case_types)]
+
+pub use core::ffi::c_void;
+
+pub type c_int = i32;
+pub type c_uint = u32;
+pub type c_long = i64;
+pub type size_t = usize;
+pub type off_t = i64;
+pub type time_t = i64;
+
+/// `struct timespec` as the kernel expects it on 64-bit Linux.
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct timespec {
+    pub tv_sec: time_t,
+    pub tv_nsec: c_long,
+}
+
+pub const PROT_READ: c_int = 0x1;
+pub const PROT_WRITE: c_int = 0x2;
+pub const MAP_SHARED: c_int = 0x0001;
+pub const MAP_ANONYMOUS: c_int = 0x0020;
+/// `mmap`'s error sentinel, `(void *)-1`.
+pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+/// `futex(2)` syscall number (per-architecture; 98 is the asm-generic
+/// table shared by aarch64, riscv64, and other modern ports).
+#[cfg(target_arch = "x86_64")]
+pub const SYS_futex: c_long = 202;
+#[cfg(not(target_arch = "x86_64"))]
+pub const SYS_futex: c_long = 98;
+
+pub const FUTEX_WAIT: c_int = 0;
+pub const FUTEX_WAKE: c_int = 1;
+
+extern "C" {
+    pub fn mmap(
+        addr: *mut c_void,
+        len: size_t,
+        prot: c_int,
+        flags: c_int,
+        fd: c_int,
+        offset: off_t,
+    ) -> *mut c_void;
+    pub fn munmap(addr: *mut c_void, len: size_t) -> c_int;
+    pub fn syscall(num: c_long, ...) -> c_long;
+}
