@@ -1,0 +1,145 @@
+//! Unified-pool memory pressure: adapter catalogs vs pool size on one
+//! live native engine (the ISSUE 7 tentpole measured end to end).
+//!
+//! Sweeps (catalog size × pool pages) over the shared synthetic
+//! harness — Zipf-skewed traffic, one engine, rank-aware admission —
+//! and reports completion, SLO attainment, TTFT percentiles, cold
+//! admits, decode preemptions, and unified-pool adapter evictions.
+//! The acceptance shape: tight pools finish the same workload with a
+//! nonzero eviction count and no request loss, because adapter weights
+//! page out under pressure instead of pinning the pool.
+//!
+//! Emits `BENCH_memory.json` in the working directory (plus the
+//! standard `target/bench-reports/memory.json`); CI runs `--smoke` to
+//! keep the file fresh.
+
+use caraserve::server::cluster::synthetic::{self, SyntheticConfig};
+use caraserve::server::ColdStartMode;
+use caraserve::util::json::{self, Json};
+use caraserve::util::stats::{ms_or_dash as ms, Summary};
+
+fn summary_json(s: &Option<Summary>) -> Json {
+    match s {
+        None => Json::Null,
+        Some(s) => json::obj(vec![
+            ("mean_ms", json::num(s.mean * 1e3)),
+            ("p50_ms", json::num(s.p50 * 1e3)),
+            ("p99_ms", json::num(s.p99 * 1e3)),
+        ]),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("CARA_BENCH_FAST").is_ok();
+    let policy = "rank-aware";
+    // Catalog sizes cross the 1,000-adapter line the tentpole targets;
+    // pool sizes span pressure (40 pages barely covers 8 resident
+    // adapters plus a running batch) to roomy (4096 never evicts for
+    // capacity).
+    let catalogs: &[usize] = if smoke { &[64, 256] } else { &[64, 1024] };
+    let pools: &[usize] = if smoke { &[40, 512] } else { &[40, 256, 4096] };
+    let requests = if smoke { 24 } else { 64 };
+
+    let mut report = caraserve::bench::Report::new(
+        "Memory pressure: adapter catalog × unified pool size (one native engine)",
+        &[
+            "adapters",
+            "pool pages",
+            "done",
+            "SLO %",
+            "ttft p50",
+            "ttft p99",
+            "cold",
+            "evictions",
+            "preempt",
+        ],
+    );
+
+    let mut runs = Vec::new();
+    // First pool size is the tight one; its eviction counts are the
+    // headline (roomy pools may legitimately report 0).
+    let mut tight_evictions = 0usize;
+    for &adapters in catalogs {
+        for &kv_pages in pools {
+            let cfg = SyntheticConfig {
+                instances: 1,
+                requests,
+                adapters,
+                seed: 11,
+                threads: 1,
+                cpu_workers: 0,
+                // CaraServe cold starts: evictions compete with real
+                // async load windows, the regime §6 measures.
+                cold_start: ColdStartMode::CaraServe,
+                kv_pages,
+                polls_per_arrival: 1,
+                skew: 1.2,
+            };
+            let rep = synthetic::run(policy, &cfg)?;
+            if kv_pages == pools[0] {
+                tight_evictions += rep.adapter_evictions;
+            }
+            report.row(vec![
+                adapters.to_string(),
+                kv_pages.to_string(),
+                rep.finished.to_string(),
+                format!("{:.1}", rep.slo_attainment.unwrap_or(1.0) * 100.0),
+                ms(&rep.ttft, |s| s.p50),
+                ms(&rep.ttft, |s| s.p99),
+                rep.cold.cold_admits.to_string(),
+                rep.adapter_evictions.to_string(),
+                rep.preemptions.to_string(),
+            ]);
+            runs.push(json::obj(vec![
+                ("adapters", json::num(adapters as f64)),
+                ("pool_pages", json::num(kv_pages as f64)),
+                ("requests", json::num(rep.requests as f64)),
+                ("finished", json::num(rep.finished as f64)),
+                ("rejected", json::num(rep.rejected as f64)),
+                (
+                    "slo_attainment",
+                    rep.slo_attainment.map_or(Json::Null, json::num),
+                ),
+                ("ttft", summary_json(&rep.ttft)),
+                ("tpot", summary_json(&rep.tpot)),
+                ("cold_admits", json::num(rep.cold.cold_admits as f64)),
+                ("adapter_evictions", json::num(rep.adapter_evictions as f64)),
+                ("preemptions", json::num(rep.preemptions as f64)),
+                ("wall_s", json::num(rep.wall_s)),
+            ]));
+        }
+    }
+
+    report.note(format!(
+        "{tight_evictions} adapter evictions across tight-pool ({}-page) runs \
+         (acceptance: ≥ 1 — weights page out under pressure, nothing is lost)",
+        pools[0]
+    ));
+    report.print();
+    report.save("memory").ok();
+
+    let top = json::obj(vec![
+        ("bench", json::s("memory")),
+        ("smoke", json::s(if smoke { "true" } else { "false" })),
+        ("policy", json::s(policy)),
+        ("requests", json::num(requests as f64)),
+        (
+            "catalogs",
+            Json::Arr(catalogs.iter().map(|&n| json::num(n as f64)).collect()),
+        ),
+        (
+            "pools",
+            Json::Arr(pools.iter().map(|&n| json::num(n as f64)).collect()),
+        ),
+        (
+            "tight_pool_evictions",
+            json::num(tight_evictions as f64),
+        ),
+        ("runs", Json::Arr(runs)),
+    ]);
+    std::fs::write("BENCH_memory.json", top.to_string_pretty())
+        .expect("write BENCH_memory.json");
+    println!("\nwrote BENCH_memory.json");
+    Ok(())
+}

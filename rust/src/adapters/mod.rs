@@ -11,11 +11,25 @@
 //! native runtime installs real weight stacks per slot at load
 //! completion. The host→device transfer itself is modeled latency (this
 //! testbed has no discrete device — see DESIGN.md §4 substitutions).
+//!
+//! Since the unified-paging refactor, the native engine replaces the
+//! fixed [`DeviceSlotCache`] with [`AdapterResidency`]: residency is
+//! backed by rank-proportional pages in the shared
+//! [`crate::server::kvcache::KvCacheManager`] pool (acquire = page-in,
+//! evict = page release, prewarm = pre-paging), and the slot array
+//! becomes just a bound on *simultaneously executing* adapters. Idle
+//! adapters are evicted by decayed-popularity LRU under KV pressure
+//! ([`AdapterResidency::victim`]); the PJRT path keeps the fixed
+//! [`DeviceSlotCache`] (its artifacts bake one stack per slot).
+//! [`flatten_stack`] / [`stack_from_flat`] are the lossless bridges
+//! between a `[AdapterWeights; 4]` Q/K/V/O stack and the flat f32 run
+//! the pool pages hold.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use crate::config::GpuSpec;
+use crate::kernels::bgmv::AdapterWeights;
 use crate::model::{LlamaConfig, LoraSpec};
 
 /// Errors from adapter/slot management.
@@ -203,6 +217,201 @@ impl DeviceSlotCache {
         self.touch(slot);
         SlotAcquire { slot, cold }
     }
+}
+
+/// Decay factor applied per residency-clock tick when aging an
+/// adapter's popularity score (see [`AdapterResidency::touch`]). Chosen
+/// so a once-hot adapter outlives a few intervening touches but loses to
+/// steadily-used ones within ~20 ticks.
+const RESIDENCY_DECAY: f64 = 0.9;
+
+/// Paged adapter residency: which adapters currently hold weight pages
+/// in the unified [`crate::server::kvcache::KvCacheManager`] pool.
+///
+/// Unlike [`DeviceSlotCache`], this layer owns no memory itself — the
+/// pool does. The slot array only bounds how many adapters can be
+/// resident at once (= the runtime's LoRA slot count, since each
+/// resident adapter still needs a runtime slot to execute from) and
+/// carries the eviction metadata: a logical clock for LRU stamps and a
+/// per-slot EWMA popularity score decayed by clock age, so
+/// [`AdapterResidency::victim`] picks the *coldest idle* adapter, not
+/// merely the least recent. The engine supplies the busy predicate
+/// (queued/running/loading adapters are never victims — PR 5 guards).
+pub struct AdapterResidency {
+    /// slot → adapter id.
+    slots: Vec<Option<u64>>,
+    /// adapter id → slot.
+    index: HashMap<u64, usize>,
+    /// slot → last-touch stamp (smaller = older; 0 = never/freed).
+    stamps: Vec<u64>,
+    /// slot → EWMA popularity as of its stamp (decays with clock age).
+    scores: Vec<f64>,
+    clock: u64,
+}
+
+impl AdapterResidency {
+    /// A residency tracker bounded to `n_slots` simultaneously-resident
+    /// adapters. Zero slots is a construction error, as for
+    /// [`DeviceSlotCache::new`].
+    pub fn new(n_slots: usize) -> Result<AdapterResidency, AdapterError> {
+        if n_slots == 0 {
+            return Err(AdapterError::NoSlots);
+        }
+        Ok(AdapterResidency {
+            slots: vec![None; n_slots],
+            index: HashMap::new(),
+            stamps: vec![0; n_slots],
+            scores: vec![0.0; n_slots],
+            clock: 0,
+        })
+    }
+
+    /// Maximum simultaneously-resident adapters.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Number of resident adapters.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    /// True when no adapter is resident.
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Adapter in a slot.
+    pub fn occupant(&self, slot: usize) -> Option<u64> {
+        self.slots[slot]
+    }
+
+    /// Is an adapter resident (holding pool pages)?
+    pub fn resident(&self, adapter: u64) -> bool {
+        self.index.contains_key(&adapter)
+    }
+
+    /// The slot a resident adapter executes from.
+    pub fn slot_of(&self, adapter: u64) -> Option<usize> {
+        self.index.get(&adapter).copied()
+    }
+
+    /// All resident adapter ids, ascending.
+    pub fn residents(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.index.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// True when `insert` would succeed without an eviction.
+    pub fn has_free_slot(&self) -> bool {
+        self.index.len() < self.slots.len()
+    }
+
+    /// A slot's popularity score decayed to the current clock.
+    fn decayed(&self, slot: usize) -> f64 {
+        let age = self.clock.saturating_sub(self.stamps[slot]);
+        // Exponent saturates: past ~7000 ticks of idleness the score is
+        // already denormal-zero, so clamping loses nothing.
+        self.scores[slot] * RESIDENCY_DECAY.powi(age.min(i32::MAX as u64) as i32)
+    }
+
+    /// Record a use of a resident adapter: bumps the logical clock, ages
+    /// the slot's score to now, and adds 1. No-op for non-residents.
+    pub fn touch(&mut self, adapter: u64) {
+        if let Some(&slot) = self.index.get(&adapter) {
+            self.clock += 1;
+            let aged = self.decayed(slot);
+            self.scores[slot] = aged + 1.0;
+            self.stamps[slot] = self.clock;
+        }
+    }
+
+    /// Make `adapter` resident in the lowest free slot (deterministic),
+    /// with an initial score of 1. Returns the slot, or the existing one
+    /// if already resident, or `None` when every slot is occupied — the
+    /// caller must `evict` a [`victim`](Self::victim) first.
+    pub fn insert(&mut self, adapter: u64) -> Option<usize> {
+        if let Some(&slot) = self.index.get(&adapter) {
+            return Some(slot);
+        }
+        let slot = self.slots.iter().position(|s| s.is_none())?;
+        self.slots[slot] = Some(adapter);
+        self.index.insert(adapter, slot);
+        self.clock += 1;
+        self.stamps[slot] = self.clock;
+        self.scores[slot] = 1.0;
+        Some(slot)
+    }
+
+    /// Drop an adapter's residency, returning its freed slot (the caller
+    /// releases the pool pages and clears the runtime slot). `None` when
+    /// not resident.
+    pub fn evict(&mut self, adapter: u64) -> Option<usize> {
+        let slot = self.index.remove(&adapter)?;
+        self.slots[slot] = None;
+        self.stamps[slot] = 0;
+        self.scores[slot] = 0.0;
+        Some(slot)
+    }
+
+    /// The eviction candidate: the non-busy resident with the lowest
+    /// decayed popularity (ties → older stamp, then smaller id, so the
+    /// choice is deterministic). `None` when every resident is busy.
+    pub fn victim(&self, busy: impl Fn(u64) -> bool) -> Option<u64> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, occ)| occ.map(|a| (slot, a)))
+            .filter(|&(_, a)| !busy(a))
+            .min_by(|&(s1, a1), &(s2, a2)| {
+                self.decayed(s1)
+                    .total_cmp(&self.decayed(s2))
+                    .then(self.stamps[s1].cmp(&self.stamps[s2]))
+                    .then(a1.cmp(&a2))
+            })
+            .map(|(_, a)| a)
+    }
+}
+
+/// Flatten a Q/K/V/O adapter stack into the single f32 run the unified
+/// pool pages hold: for each target in order, the A matrix
+/// (`hidden × rank`) then the B matrix (`rank × hidden`) — total
+/// `8 · hidden · rank` elements. Inverse of [`stack_from_flat`].
+pub fn flatten_stack(stack: &[AdapterWeights; 4]) -> Vec<f32> {
+    let total: usize = stack.iter().map(|w| w.a.len() + w.b.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    for w in stack {
+        out.extend_from_slice(&w.a);
+        out.extend_from_slice(&w.b);
+    }
+    out
+}
+
+/// Rebuild the Q/K/V/O stack from a flat pool run written by
+/// [`flatten_stack`]. The copies are value-identical, so token streams
+/// computed from a re-paged stack are bitwise-equal to the original's.
+///
+/// # Panics
+/// If `flat.len() != 8 * hidden * rank` (a corrupted residency record).
+pub fn stack_from_flat(flat: &[f32], hidden: usize, rank: usize) -> [AdapterWeights; 4] {
+    let a_len = hidden * rank;
+    let per = 2 * a_len;
+    assert_eq!(
+        flat.len(),
+        4 * per,
+        "flat adapter run must hold 4 (A,B) pairs of hidden={hidden} rank={rank}"
+    );
+    std::array::from_fn(|t| {
+        let base = t * per;
+        AdapterWeights {
+            rank,
+            a: flat[base..base + a_len].to_vec(),
+            b: flat[base + a_len..base + per].to_vec(),
+            h1: hidden,
+            h2: hidden,
+        }
+    })
 }
 
 /// Tracks per-adapter in-flight host→device load windows with completion
@@ -438,6 +647,80 @@ mod tests {
         assert_eq!(l.poll(later), vec![7]);
         assert!(l.poll(later).is_empty());
         assert!(!l.loading(7));
+    }
+
+    #[test]
+    fn residency_insert_lowest_free_slot_and_bounds() {
+        let mut r = AdapterResidency::new(2).unwrap();
+        assert!(r.is_empty());
+        assert!(r.has_free_slot());
+        assert_eq!(r.insert(10), Some(0));
+        assert_eq!(r.insert(20), Some(1));
+        assert_eq!(r.insert(10), Some(0)); // idempotent
+        assert_eq!(r.len(), 2);
+        assert!(!r.has_free_slot());
+        assert_eq!(r.insert(30), None); // full: caller must evict first
+        assert_eq!(r.slot_of(20), Some(1));
+        assert_eq!(r.occupant(0), Some(10));
+        assert_eq!(r.residents(), vec![10, 20]);
+        // Evict frees the lowest slot for the next insert.
+        assert_eq!(r.evict(10), Some(0));
+        assert_eq!(r.evict(10), None);
+        assert_eq!(r.insert(30), Some(0));
+        assert_eq!(AdapterResidency::new(0).unwrap_err(), AdapterError::NoSlots);
+    }
+
+    #[test]
+    fn residency_victim_prefers_cold_and_skips_busy() {
+        let mut r = AdapterResidency::new(3).unwrap();
+        r.insert(1);
+        r.insert(2);
+        r.insert(3);
+        // Heat 1 with repeated touches; touch 3 once more; 2 stays cold.
+        for _ in 0..5 {
+            r.touch(1);
+        }
+        r.touch(3);
+        assert_eq!(r.victim(|_| false), Some(2));
+        // Busy guard: with 2 busy the next-coldest (3) is the victim.
+        assert_eq!(r.victim(|a| a == 2), Some(3));
+        // All busy → no victim, never evict a working adapter.
+        assert_eq!(r.victim(|_| true), None);
+    }
+
+    #[test]
+    fn residency_decay_ages_out_past_popularity() {
+        let mut r = AdapterResidency::new(2).unwrap();
+        r.insert(1);
+        r.insert(2);
+        // 1 is hot early…
+        for _ in 0..10 {
+            r.touch(1);
+        }
+        // …then 2 keeps working while 1 goes idle. After enough ticks
+        // 1's decayed score drops below 2's steady score.
+        for _ in 0..40 {
+            r.touch(2);
+        }
+        assert_eq!(r.victim(|_| false), Some(1));
+    }
+
+    #[test]
+    fn flatten_stack_round_trips_bitwise() {
+        let (hidden, rank) = (16usize, 4usize);
+        let stack: [AdapterWeights; 4] =
+            std::array::from_fn(|t| AdapterWeights::synthetic(7 * 31 + t as u64, hidden, hidden, rank));
+        let flat = flatten_stack(&stack);
+        assert_eq!(flat.len(), 8 * hidden * rank);
+        let back = stack_from_flat(&flat, hidden, rank);
+        for (orig, re) in stack.iter().zip(back.iter()) {
+            assert_eq!(orig.rank, re.rank);
+            assert_eq!(orig.h1, re.h1);
+            assert_eq!(orig.h2, re.h2);
+            // Bitwise equality — the contract the stream oracle rests on.
+            assert!(orig.a.iter().zip(&re.a).all(|(x, y)| x.to_bits() == y.to_bits()));
+            assert!(orig.b.iter().zip(&re.b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
     }
 
     #[test]

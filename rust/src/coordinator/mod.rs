@@ -43,7 +43,7 @@ use crate::scheduler::ServerStats;
 use crate::server::api::{RequestHandle, ServeRequest, ServingFront};
 use crate::server::metrics::ColdStartStats;
 use crate::server::ClusterFront;
-use self::placement::{PlacementConfig, PlacementInput};
+use self::placement::{PagedPlacementInput, PlacementConfig, PlacementInput};
 
 /// What to do with the source copy after a migration replicates an
 /// adapter onto a relief server.
@@ -73,6 +73,13 @@ pub struct CoordinatorConfig {
     pub min_imbalance: usize,
     /// Replicate or move (see [`MigrationMode`]).
     pub mode: MigrationMode,
+    /// Per-server unified-pool size, in pages. `Some(p)` switches
+    /// initial placement to the memory-aware policy
+    /// ([`placement::compute_paged`]): demand comes from the registry's
+    /// EWMA-decayed popularity and the pressure penalty charges
+    /// rank-proportional page footprints against `p`. `None` (the
+    /// default) keeps the legacy slot-pressure-only policy.
+    pub pool_pages: Option<usize>,
 }
 
 impl Default for CoordinatorConfig {
@@ -84,6 +91,7 @@ impl Default for CoordinatorConfig {
             slots_per_server: 8,
             min_imbalance: 2,
             mode: MigrationMode::Move,
+            pool_pages: None,
         }
     }
 }
@@ -193,7 +201,14 @@ impl Coordinator {
     /// `cfg.prewarm` hottest adapters so their first requests admit
     /// warm. Idempotent per adapter (installs overwrite in place), but
     /// intended to run once, before traffic.
+    ///
+    /// With [`CoordinatorConfig::pool_pages`] set, placement and the
+    /// pre-warm set switch to the unified-pool-aware policy instead
+    /// (decayed demand, memory-pressure penalty).
     pub fn place_and_prewarm(&mut self) -> Result<()> {
+        if let Some(pool) = self.cfg.pool_pages {
+            return self.place_and_prewarm_paged(pool);
+        }
         let inputs = Self::placement_inputs(self.cluster.registry());
         let placements = placement::compute(
             &inputs,
@@ -211,6 +226,55 @@ impl Coordinator {
             }
         }
         for id in placement::top_hot(&inputs, self.cfg.prewarm) {
+            for server in self.cluster.registry().servers_for(id) {
+                if self.cluster.prewarm_on(server, id)? {
+                    self.stats.prewarmed += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The memory-aware variant of [`Self::place_and_prewarm`]: demand
+    /// is the registry's EWMA-decayed popularity (a once-hot adapter
+    /// that went quiet yields its residency claim), and the greedy
+    /// score charges each adapter's rank-proportional page footprint
+    /// against the per-server unified pool, so fat adapters spread
+    /// instead of starving one server's KV headroom.
+    fn place_and_prewarm_paged(&mut self, pool_pages: usize) -> Result<()> {
+        let registry = self.cluster.registry();
+        let inputs: Vec<PagedPlacementInput> = registry
+            .decayed_table()
+            .into_iter()
+            .filter_map(|(id, demand)| {
+                registry.get(id).map(|m| PagedPlacementInput {
+                    id,
+                    rank: m.rank,
+                    demand,
+                    // Exact page counts are runtime-dependent (hidden
+                    // size, page geometry); the score only needs the
+                    // relative footprint, which is rank-proportional.
+                    pages: m.rank.max(1),
+                })
+            })
+            .collect();
+        let placements = placement::compute_paged(
+            &inputs,
+            &PlacementConfig {
+                servers: self.cluster.len(),
+                replicas: self.cfg.replicas,
+                slots_per_server: self.cfg.slots_per_server,
+            },
+            pool_pages,
+        );
+        for (server, ids) in placements.iter().enumerate() {
+            for &id in ids {
+                let spec = self.spec_of(id)?;
+                self.cluster.install_on(server, &spec)?;
+                self.stats.initial_placements += 1;
+            }
+        }
+        for id in placement::top_hot_paged(&inputs, self.cfg.prewarm) {
             for server in self.cluster.registry().servers_for(id) {
                 if self.cluster.prewarm_on(server, id)? {
                     self.stats.prewarmed += 1;
@@ -419,6 +483,54 @@ mod tests {
         assert_eq!(h.state(), LifecycleState::Finished);
         let cs = coord.cold_start_stats().unwrap();
         assert_eq!(cs.cold_admits, 0, "prewarmed adapter cold-started");
+        assert_eq!(cs.warm_admits, 1);
+    }
+
+    #[test]
+    fn paged_placement_prewarms_by_decayed_demand() {
+        let registry = Arc::new(GlobalRegistry::new());
+        for id in 0..4 {
+            registry.register(AdapterMeta {
+                id,
+                rank: if id == 0 { 64 } else { 8 },
+                base_model: "sim".into(),
+                weights_path: String::new(),
+            });
+        }
+        // Adapter 0 was hot long ago; 80 events of adapter-2 traffic
+        // age it out; adapter 1 gets a modest recent burst. By raw
+        // weight, 0 leads ((10+1)×64 = 704 vs (80+1)×8 = 648); by
+        // decayed weight, 2 leads (≈ 69×8 = 553 vs ≈ 2.7×64 = 172).
+        registry.record_requests(0, 10);
+        registry.record_requests(2, 80);
+        registry.record_requests(1, 8);
+        let mut backends: Vec<Box<dyn ServingFront>> = Vec::new();
+        for _ in 0..2 {
+            backends.push(Box::new(sim_backend()));
+        }
+        let mut coord = Coordinator::new(
+            ClusterFront::new(backends, Box::new(MostIdle), registry),
+            CoordinatorConfig {
+                prewarm: 1,
+                pool_pages: Some(64),
+                ..Default::default()
+            },
+        );
+        coord.place_and_prewarm().unwrap();
+        let stats = coord.coordinator_stats().clone();
+        assert_eq!(stats.initial_placements, 4);
+        assert_eq!(stats.prewarmed, 1);
+        for id in 0..4 {
+            assert!(coord.stats().can_serve(id), "adapter {id}");
+        }
+        // The pre-warmed adapter is the decayed-hottest (2), so its
+        // first request admits warm — under the legacy raw-count policy
+        // the stale adapter 0 would have taken the prewarm slot.
+        let h = coord.submit(ServeRequest::new(2, vec![1; 16]).max_new_tokens(2));
+        coord.run_until_idle().unwrap();
+        assert_eq!(h.state(), LifecycleState::Finished);
+        let cs = coord.cold_start_stats().unwrap();
+        assert_eq!(cs.cold_admits, 0, "decayed-hottest adapter cold-started");
         assert_eq!(cs.warm_admits, 1);
     }
 

@@ -111,6 +111,101 @@ pub fn compute(adapters: &[PlacementInput], cfg: &PlacementConfig) -> Vec<Vec<u6
     out
 }
 
+/// One adapter as the **unified-pool-aware** placement policy sees it:
+/// demand is the recency-weighted score from
+/// [`crate::scheduler::registry::GlobalRegistry::decayed_popularity`]
+/// (EWMA-decayed, so once-hot-now-quiet adapters lose their claim)
+/// rather than the monotone counter, and the adapter carries its
+/// device-memory footprint in unified-pool pages.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PagedPlacementInput {
+    /// Adapter id.
+    pub id: u64,
+    /// LoRA rank (batch-cost proxy).
+    pub rank: usize,
+    /// Recency-weighted demand (decayed popularity score).
+    pub demand: f64,
+    /// Unified-pool pages the adapter's weights hold while resident.
+    /// Exact counts are runtime-dependent (hidden size, page geometry);
+    /// only the *relative* footprint steers the score, and that is
+    /// rank-proportional.
+    pub pages: usize,
+}
+
+/// Demand weight of one paged adapter: `(demand + 1) × rank` — the
+/// decayed analogue of [`weight`].
+pub fn paged_weight(a: &PagedPlacementInput) -> f64 {
+    (a.demand + 1.0) * a.rank.max(1) as f64
+}
+
+/// Unified-pool-aware placement: the same greedy pack as [`compute`],
+/// but the pressure penalty charges **memory**, not just slots —
+///
+/// ```text
+/// score(s) = load(s) + weight × (count(s)/slots + pages(s)/pool_pages)
+/// ```
+///
+/// A server whose resident adapters already hold a large share of its
+/// unified pool (pages that would otherwise back KV blocks) pays
+/// proportionally more for further co-location, so fat-footprint
+/// adapters spread instead of starving one server's KV headroom.
+/// Deterministic; ties break on the lower server index.
+pub fn compute_paged(
+    adapters: &[PagedPlacementInput],
+    cfg: &PlacementConfig,
+    pool_pages: usize,
+) -> Vec<Vec<u64>> {
+    assert!(cfg.servers > 0, "placement over zero servers");
+    let replicas = cfg.replicas.clamp(1, cfg.servers);
+    let slots = cfg.slots_per_server.max(1) as f64;
+    let pool = pool_pages.max(1) as f64;
+
+    // Hottest (heaviest) first, ties by ascending id for determinism.
+    let mut order: Vec<&PagedPlacementInput> = adapters.iter().collect();
+    order.sort_by(|a, b| {
+        paged_weight(b)
+            .total_cmp(&paged_weight(a))
+            .then(a.id.cmp(&b.id))
+    });
+
+    let mut out: Vec<Vec<u64>> = vec![Vec::new(); cfg.servers];
+    let mut load = vec![0.0f64; cfg.servers];
+    let mut pages = vec![0usize; cfg.servers];
+    for a in order {
+        let w = paged_weight(a);
+        let mut chosen: Vec<usize> = Vec::with_capacity(replicas);
+        for _ in 0..replicas {
+            let s = (0..cfg.servers)
+                .filter(|s| !chosen.contains(s))
+                .min_by(|&x, &y| {
+                    let px =
+                        load[x] + w * (out[x].len() as f64 / slots + pages[x] as f64 / pool);
+                    let py =
+                        load[y] + w * (out[y].len() as f64 / slots + pages[y] as f64 / pool);
+                    px.total_cmp(&py)
+                })
+                .expect("replicas clamped to server count");
+            chosen.push(s);
+            load[s] += w;
+            pages[s] += a.pages;
+            out[s].push(a.id);
+        }
+    }
+    out
+}
+
+/// The `k` hottest paged adapters by [`paged_weight`] — the pre-paging
+/// set under the unified pool.
+pub fn top_hot_paged(adapters: &[PagedPlacementInput], k: usize) -> Vec<u64> {
+    let mut order: Vec<&PagedPlacementInput> = adapters.iter().collect();
+    order.sort_by(|a, b| {
+        paged_weight(b)
+            .total_cmp(&paged_weight(a))
+            .then(a.id.cmp(&b.id))
+    });
+    order.into_iter().take(k).map(|a| a.id).collect()
+}
+
 /// The `k` hottest adapters (strictly by descending weight, ties by
 /// ascending id) — the pre-warm set.
 pub fn top_hot(adapters: &[PlacementInput], k: usize) -> Vec<u64> {
@@ -210,6 +305,67 @@ mod tests {
             slots_per_server: 8,
         };
         assert_eq!(compute(&adapters, &cfg), compute(&adapters, &cfg));
+    }
+
+    fn paged(id: u64, rank: usize, demand: f64, pages: usize) -> PagedPlacementInput {
+        PagedPlacementInput {
+            id,
+            rank,
+            demand,
+            pages,
+        }
+    }
+
+    #[test]
+    fn paged_pressure_spreads_fat_footprints() {
+        // Three zero-demand adapters, equal rank: one holds 6 of the 8
+        // pool pages, two hold 1 each. The slot-only policy would pack
+        // the third adapter back onto server 0 (counts tie); the paged
+        // score sees server 0's pool nearly full and spills to 1.
+        let adapters = vec![paged(0, 8, 0.0, 6), paged(1, 8, 0.0, 1), paged(2, 8, 0.0, 1)];
+        let cfg = PlacementConfig {
+            servers: 2,
+            replicas: 1,
+            slots_per_server: 8,
+        };
+        let placements = compute_paged(&adapters, &cfg, 8);
+        assert_eq!(placements, vec![vec![0], vec![1, 2]]);
+        // The slot-only policy on the same shape co-locates 0 and 2.
+        let legacy: Vec<PlacementInput> = adapters
+            .iter()
+            .map(|a| input(a.id, a.rank, a.demand as u64))
+            .collect();
+        assert_eq!(compute(&legacy, &cfg), vec![vec![0, 2], vec![1]]);
+    }
+
+    #[test]
+    fn paged_compute_deterministic_and_complete() {
+        let adapters: Vec<PagedPlacementInput> = (0..12)
+            .map(|id| paged(id, 8 << (id % 4), (12 - id) as f64, 1 + (id % 4) as usize))
+            .collect();
+        let cfg = PlacementConfig {
+            servers: 3,
+            replicas: 2,
+            slots_per_server: 8,
+        };
+        let placements = compute_paged(&adapters, &cfg, 64);
+        assert_eq!(placements, compute_paged(&adapters, &cfg, 64));
+        for a in &adapters {
+            let hosts = (0..3).filter(|&s| placements[s].contains(&a.id)).count();
+            assert_eq!(hosts, 2, "adapter {}", a.id);
+        }
+    }
+
+    #[test]
+    fn top_hot_paged_orders_by_decayed_weight() {
+        let adapters = vec![
+            paged(3, 8, 100.0, 1),  // weight 808
+            paged(1, 64, 10.0, 4),  // weight 704
+            paged(2, 64, 10.0, 4),  // weight 704 (tie → id order)
+            paged(0, 8, 0.0, 1),    // weight 8
+        ];
+        assert_eq!(top_hot_paged(&adapters, 3), vec![3, 1, 2]);
+        assert_eq!(top_hot_paged(&adapters, 0), Vec::<u64>::new());
     }
 
     #[test]

@@ -50,7 +50,14 @@
 //!   or the pure-Rust [`runtime::NativeRuntime`] on which CaraServe's
 //!   CPU-assisted cold start runs for real (shm worker pool computing
 //!   per-layer `xAB` while the adapter load window elapses, then the
-//!   §4.3 handoff to the resident `bgmv` path).
+//!   §4.3 handoff to the resident `bgmv` path). On the native runtime
+//!   the engine runs **unified paged memory**: adapter weight stacks
+//!   and request KV share one bounded page pool
+//!   ([`server::kvcache::KvCacheManager`] +
+//!   [`adapters::AdapterResidency`]), so idle adapters page out under
+//!   pressure instead of pinning device memory — which is what lets a
+//!   1,000+ adapter catalog serve from one engine (`--pool-pages`
+//!   sizes the pool on the CLI).
 //! - [`server::ClusterFront`] — the §5 rank-aware scheduler in front of
 //!   N boxed `ServingFront` backends (real engines, simulators, or a
 //!   mix): routes each request from registry rank + prompt length via a

@@ -53,17 +53,23 @@ subcommands:
   cluster   --instances N --policy rank-aware|most-idle|first-fit|random
             (comma-separate or `all` for several) --requests N
             --adapters N --mode cached|ondemand|caraserve --cpu-workers N
-            --threads N --kv-pages N --pace N --seed N --skew F --smoke
+            --threads N --kv-pages N --pool-pages N --pace N --seed N
+            --skew F --smoke
   coordinator --instances N --policy NAME --requests N --adapters N
             --skew F --migrate-interval N --prewarm K --replicas N
             --mode cached|ondemand|caraserve --cpu-workers N --threads N
-            --kv-pages N --pace N --seed N --smoke
+            --kv-pages N --pool-pages N --pace N --seed N --smoke
   simulate  --mode cached|ondmd|s-lora|caraserve --rps F --rank N --secs F
   schedule  --policy rank-aware|most-idle|first-fit|random --instances N
             --kernel bgmv|mbgmv --rps F --secs F
   profile   --kernel bgmv|mbgmv
   lint      --root DIR --json PATH   (non-zero exit on violations)
   info
+
+--pool-pages N sizes the unified device pool that adapter weights and
+KV pages share on the native runtime — it overrides --kv-pages, and
+under `coordinator` additionally switches placement to the memory-aware
+scorer that weighs adapter page footprints.
 ";
 
 fn main() {
@@ -89,6 +95,7 @@ fn run() -> anyhow::Result<()> {
         "instances",
         "adapters",
         "kv-pages",
+        "pool-pages",
         "pace",
         "kernel",
         "seed",
@@ -300,9 +307,18 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             .opt_parse_or("cpu-workers", if smoke { 0 } else { 2 })
             .map_err(|e| anyhow::anyhow!("{e}"))?,
         cold_start: mode,
-        kv_pages: args
-            .opt_parse_or("kv-pages", 256)
-            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        // `--pool-pages` names the same knob with unified-pool
+        // semantics (adapter weights and KV share it on the native
+        // runtime) and wins over the legacy `--kv-pages` spelling.
+        kv_pages: match args
+            .opt_parse("pool-pages")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+        {
+            Some(pages) => pages,
+            None => args
+                .opt_parse_or("kv-pages", 256)
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+        },
         polls_per_arrival: args
             .opt_parse_or("pace", 2)
             .map_err(|e| anyhow::anyhow!("{e}"))?,
@@ -406,9 +422,18 @@ fn cmd_coordinator(args: &Args) -> anyhow::Result<()> {
             .opt_parse_or("cpu-workers", if smoke { 0 } else { 2 })
             .map_err(|e| anyhow::anyhow!("{e}"))?,
         cold_start: mode,
-        kv_pages: args
-            .opt_parse_or("kv-pages", 256)
-            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        // `--pool-pages` sizes the unified pool (and wins over the
+        // legacy `--kv-pages`); it also flips the coordinator below to
+        // the memory-aware placement scorer.
+        kv_pages: match args
+            .opt_parse("pool-pages")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+        {
+            Some(pages) => pages,
+            None => args
+                .opt_parse_or("kv-pages", 256)
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+        },
         polls_per_arrival: args
             .opt_parse_or("pace", 1)
             .map_err(|e| anyhow::anyhow!("{e}"))?,
@@ -430,6 +455,12 @@ fn cmd_coordinator(args: &Args) -> anyhow::Result<()> {
         // about *where* adapters live, not how many copies exist.
         replicas: args
             .opt_parse_or("replicas", 2)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        // With an explicit pool size the coordinator scores placements
+        // by adapter page footprint against that budget (None keeps the
+        // legacy slot-only scorer).
+        pool_pages: args
+            .opt_parse("pool-pages")
             .map_err(|e| anyhow::anyhow!("{e}"))?,
         ..Default::default()
     };

@@ -13,8 +13,8 @@
 //!   [`RowLora`] sourcing (resident `bgmv` path vs. externally computed
 //!   CPU-assist deltas). This is the backend on which the paper's §4
 //!   CPU-assisted cold-start mechanism actually executes.
-//! - [`pool`] — the scoped-thread [`ThreadPool`] the native backend
-//!   fans batch rows across.
+//! - [`pool`] — the persistent parked-worker [`ThreadPool`] the native
+//!   backend fans batch rows across (spawned once, woken per step).
 //!
 //! ## The paged KV contract
 //!

@@ -45,8 +45,8 @@
 //! reproduces is what keeps per-token cost flat in context length.
 //!
 //! **Threading.** Batch rows are independent, so prefill and decode fan
-//! rows across a shared scoped [`ThreadPool`] (`NativeConfig::threads`
-//! workers); a lone large prefill additionally fans its attention
+//! rows across a shared persistent [`ThreadPool`] (`NativeConfig::threads`
+//! workers, parked between steps); a lone large prefill additionally fans its attention
 //! *positions* across the pool. Two invariants make this safe and
 //! bitwise-deterministic:
 //!

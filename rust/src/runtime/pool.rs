@@ -1,12 +1,16 @@
-//! [`ThreadPool`]: a scoped parallel-for over independent batch rows.
+//! [`ThreadPool`]: a persistent parallel-for over independent batch rows.
 //!
 //! The native runtime computes each batch row's forward pass
 //! independently (the continuous-batching invariant), so prefill and
 //! decode fan rows across cores with no synchronization beyond the
-//! join. Scoped threads keep the borrow story simple — workers borrow
-//! the runtime, the KV view, and per-row output slices directly, no
-//! `'static` bounds, no channels — and the join guarantees every row's
-//! writes are visible before the caller reads the outputs.
+//! join. Workers are spawned **once** at pool construction and parked
+//! on a condvar between jobs — per-step dispatch is a publish + wake,
+//! not a thread spawn, which matters when every decode iteration fans
+//! out (hundreds of microseconds of spawn/join per step otherwise).
+//! Callers still pass plain borrowed closures: a job is published to
+//! the parked workers as a type-erased pointer, and the dispatching
+//! call blocks until every worker has finished the job, so the borrow
+//! outlives every dereference (see the `SAFETY` notes inline).
 //!
 //! Determinism contract: the pool only changes *where* a row is
 //! computed, never *what* it computes. Each row reads shared immutable
@@ -15,22 +19,284 @@
 //! `parallel_forward_is_bitwise_deterministic` test in
 //! [`super::native`]).
 
+use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
 
-/// A fixed-width scoped parallel-for executor. Holds no threads between
-/// calls: each [`ThreadPool::run`] spawns up to `threads − 1` scoped
-/// workers (the calling thread participates) that pull row indices from
-/// a shared atomic counter, then joins them.
-#[derive(Debug, Clone)]
+/// Type-erased pointer to a caller's `&(dyn Fn(usize) + Sync)` job
+/// closure, smuggled to the persistent workers.
+///
+/// SAFETY: the pointer is only ever dereferenced by workers between a
+/// job's publication and the dispatching caller's done-barrier, and
+/// the caller blocks inside [`Inner::dispatch`] (holding the borrow of
+/// `f` live in its frame) for exactly that window. The closure is
+/// `Sync`, so concurrent calls from several workers are sound.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: see `JobPtr` — the pointee is `Sync` and outlives every
+// dereference, so moving the pointer across threads is sound.
+unsafe impl Send for JobPtr {}
+
+/// One published job: the row closure and the index range `0..n`.
+#[derive(Clone, Copy)]
+struct Job {
+    f: JobPtr,
+    n: usize,
+}
+
+/// Worker-visible pool state, guarded by [`Shared::state`].
+struct State {
+    /// Monotone job counter; a bump while parked means new work.
+    generation: u64,
+    /// The currently (or most recently) published job. Stale entries
+    /// are never dereferenced: workers only read `job` after observing
+    /// a generation they have not run yet.
+    job: Option<Job>,
+    /// Workers still executing the current job; the dispatching caller
+    /// returns only once this reaches zero (the join barrier).
+    active: usize,
+    /// Workers currently alive — the `active` quota per job. Drops
+    /// below the spawn count only if a row closure panics (that worker
+    /// dies after flagging `panicked`).
+    live: usize,
+    /// A worker's row closure panicked; the dispatching caller re-raises
+    /// after its join barrier, mirroring the old scoped-join behavior.
+    panicked: bool,
+    /// Set once, on pool drop — parked workers exit.
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Wakes parked workers on publish (and on shutdown).
+    work_cv: Condvar,
+    /// Wakes the dispatching caller when the last worker finishes.
+    done_cv: Condvar,
+    /// Next unclaimed row index of the current job.
+    next: AtomicUsize,
+}
+
+/// Condvar wait that shrugs off poisoning: pool state is a couple of
+/// counters whose invariants hold at every await point, so a panicked
+/// row closure on one worker must not wedge the rest of the pool.
+fn wait<'a>(cv: &Condvar, g: MutexGuard<'a, State>) -> MutexGuard<'a, State> {
+    match cv.wait(g) {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+fn lock(m: &Mutex<State>) -> MutexGuard<'_, State> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// The persistent half of the pool: parked workers plus the dispatch
+/// plumbing. Absent entirely on serial (`threads == 1`) pools.
+struct Inner {
+    shared: Arc<Shared>,
+    /// Serializes whole jobs: two concurrent `run` calls must not
+    /// interleave their index counters or done-barriers.
+    run_lock: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Inner {
+    fn new(workers: usize) -> Inner {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                generation: 0,
+                job: None,
+                active: 0,
+                live: workers,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            next: AtomicUsize::new(0),
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        Inner {
+            shared,
+            run_lock: Mutex::new(()),
+            handles,
+        }
+    }
+
+    /// Publish `f(0..n)` to the parked workers, run `foreground` on the
+    /// calling thread, help drain remaining rows, and block until every
+    /// worker is parked again. Returning only after the join barrier is
+    /// what makes handing workers a raw pointer to `f` sound.
+    fn dispatch(&self, n: usize, f: &(dyn Fn(usize) + Sync), foreground: impl FnOnce()) {
+        let _job_guard = match self.run_lock.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        {
+            let mut g = lock(&self.shared.state);
+            // ORDERING: Relaxed is enough — this store happens under the
+            // state mutex before the generation bump that workers
+            // observe under the same mutex, which orders it for them.
+            self.shared.next.store(0, Ordering::Relaxed);
+            g.job = Some(Job {
+                f: JobPtr(f as *const _),
+                n,
+            });
+            g.generation += 1;
+            // Quota by *live* workers: one that died panicking can no
+            // longer report done, and waiting on it would hang forever.
+            g.active = g.live;
+            drop(g);
+            self.shared.work_cv.notify_all();
+        }
+        // The join barrier is a drop guard: even when `foreground` or
+        // one of the caller's own rows panics, this frame must not
+        // unwind (ending the borrow of `f`) while workers still hold
+        // the raw pointer — the guard blocks until they are parked.
+        let barrier = BarrierGuard(&self.shared);
+        foreground();
+        loop {
+            // ORDERING: Relaxed — the counter only distributes disjoint
+            // indices (RMW atomicity gives uniqueness); workers' row
+            // writes are published to the caller by the done-barrier's
+            // mutex, not by this counter.
+            let i = self.shared.next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            f(i);
+        }
+        drop(barrier);
+        let mut g = lock(&self.shared.state);
+        if g.panicked {
+            g.panicked = false;
+            drop(g);
+            panic!("thread-pool worker panicked while running a job");
+        }
+    }
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        {
+            let mut g = lock(&self.shared.state);
+            g.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Blocks until every worker has reported done for the current job —
+/// on the normal path and during caller unwind alike (see
+/// [`Inner::dispatch`]).
+struct BarrierGuard<'a>(&'a Shared);
+
+impl Drop for BarrierGuard<'_> {
+    fn drop(&mut self) {
+        let mut g = lock(&self.0.state);
+        while g.active > 0 {
+            g = wait(&self.0.done_cv, g);
+        }
+    }
+}
+
+/// Reports one worker's share of the current job done — on the normal
+/// path *and* during unwind if the row closure panics, so the caller's
+/// join barrier always completes. A panicking worker also flags
+/// `panicked` (re-raised by the caller) and retires itself from `live`.
+struct DoneGuard<'a>(&'a Shared);
+
+impl Drop for DoneGuard<'_> {
+    fn drop(&mut self) {
+        let mut g = lock(&self.0.state);
+        if std::thread::panicking() {
+            g.panicked = true;
+            g.live -= 1;
+        }
+        g.active -= 1;
+        if g.active == 0 {
+            self.0.done_cv.notify_all();
+        }
+    }
+}
+
+/// Park until a job (or shutdown) is published, drain row indices,
+/// report done, repeat.
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut g = lock(&shared.state);
+            while !g.shutdown && g.generation == seen {
+                g = wait(&shared.work_cv, g);
+            }
+            if g.shutdown {
+                return;
+            }
+            seen = g.generation;
+            g.job
+        };
+        let done = DoneGuard(shared);
+        if let Some(Job { f, n }) = job {
+            loop {
+                // ORDERING: Relaxed index distribution, as in
+                // `dispatch` — the done-barrier is the publication edge
+                // for row outputs.
+                let i = shared.next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // SAFETY: the dispatching caller blocks until `active`
+                // reaches zero, so the closure behind this pointer is
+                // still borrowed (alive) in its frame; `Sync` makes the
+                // concurrent calls sound. See `JobPtr`.
+                unsafe { (*f.0)(i) };
+            }
+        }
+        drop(done);
+    }
+}
+
+/// A fixed-width parallel-for executor over persistent workers. `new`
+/// spawns `threads − 1` parked workers once; each [`ThreadPool::run`]
+/// wakes them, lets them pull row indices from a shared atomic counter
+/// (the calling thread participates), and parks them again at the join
+/// barrier. Serial pools (`threads == 1`) spawn nothing, ever.
+#[derive(Clone)]
 pub struct ThreadPool {
     threads: usize,
+    /// `None` iff `threads == 1` (pure serial — no worker threads).
+    inner: Option<Arc<Inner>>,
+}
+
+impl fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ThreadPool")
+            .field("threads", &self.threads)
+            .finish()
+    }
 }
 
 impl ThreadPool {
     /// A pool of `threads` workers; 0 is treated as 1 (serial).
     pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
         ThreadPool {
-            threads: threads.max(1),
+            threads,
+            inner: (threads > 1).then(|| Arc::new(Inner::new(threads - 1))),
         }
     }
 
@@ -42,75 +308,43 @@ impl ThreadPool {
     /// Invoke `f(i)` for every `i` in `0..n`, fanning across up to
     /// `threads` workers. `f` must only write state that is disjoint
     /// per index (enforce with per-index `Mutex`es or disjoint `&mut`
-    /// chunks). Serial (`threads == 1` or `n <= 1`) runs inline with no
-    /// spawn at all.
+    /// chunks). Serial (`threads == 1` or `n <= 1`) runs inline without
+    /// touching the workers at all.
     pub fn run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
-        if self.threads == 1 || n <= 1 {
-            for i in 0..n {
-                f(i);
+        match &self.inner {
+            Some(inner) if n > 1 => inner.dispatch(n, f, || ()),
+            _ => {
+                for i in 0..n {
+                    f(i);
+                }
             }
-            return;
         }
-        let next = AtomicUsize::new(0);
-        let work = || loop {
-            // ORDERING: Relaxed is enough — the counter only distributes
-            // disjoint indices (RMW atomicity gives uniqueness); workers'
-            // writes are published to the caller by the scope join, not
-            // by this counter.
-            let i = next.fetch_add(1, Ordering::Relaxed);
-            if i >= n {
-                break;
-            }
-            f(i);
-        };
-        std::thread::scope(|s| {
-            for _ in 1..self.threads.min(n) {
-                s.spawn(work);
-            }
-            work();
-        });
     }
 
-    /// Run `f(0..n)` on spawned workers while the calling thread
+    /// Run `f(0..n)` on the parked workers while the calling thread
     /// executes `foreground` concurrently; returns once both are done
-    /// (the caller joins the fan-out after its foreground work). Used
-    /// to overlap single-submitter work (CPU-assist rows) with the
-    /// pooled rows instead of serializing the two. Total width stays
-    /// within `threads`: `threads − 1` spawned workers plus the caller
-    /// (on foreground, then draining rows). Serial pools run
-    /// `foreground` first, then `f` — outputs are disjoint per the
-    /// [`ThreadPool::run`] contract, so ordering is unobservable.
+    /// (the caller helps drain rows after its foreground work, then
+    /// joins). Used to overlap single-submitter work (CPU-assist rows)
+    /// with the pooled rows instead of serializing the two. Total width
+    /// stays within `threads`: `threads − 1` workers plus the caller.
+    /// Serial pools run `foreground` first, then `f` — outputs are
+    /// disjoint per the [`ThreadPool::run`] contract, so ordering is
+    /// unobservable.
     pub fn run_overlapping(
         &self,
         n: usize,
         f: &(dyn Fn(usize) + Sync),
         foreground: impl FnOnce(),
     ) {
-        if self.threads == 1 || n == 0 {
-            foreground();
-            for i in 0..n {
-                f(i);
+        match &self.inner {
+            Some(inner) if n > 0 => inner.dispatch(n, f, foreground),
+            _ => {
+                foreground();
+                for i in 0..n {
+                    f(i);
+                }
             }
-            return;
         }
-        let next = AtomicUsize::new(0);
-        let work = || loop {
-            // ORDERING: Relaxed index distribution, as in `run` — the
-            // scope join is the publication edge for row outputs.
-            let i = next.fetch_add(1, Ordering::Relaxed);
-            if i >= n {
-                break;
-            }
-            f(i);
-        };
-        std::thread::scope(|s| {
-            for _ in 0..(self.threads - 1).min(n) {
-                s.spawn(work);
-            }
-            foreground();
-            // Help drain whatever the workers haven't claimed yet.
-            work();
-        });
     }
 }
 
@@ -118,7 +352,9 @@ impl ThreadPool {
 #[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
     use std::sync::Mutex;
+    use std::thread::ThreadId;
 
     #[test]
     fn covers_every_index_exactly_once() {
@@ -185,5 +421,79 @@ mod tests {
         for (at, v) in buf.iter().enumerate() {
             assert_eq!(*v, at as f32);
         }
+    }
+
+    #[test]
+    fn workers_persist_across_jobs() {
+        // The whole point of the parked pool: many dispatches, one
+        // fixed worker set. Every index across every job must land on
+        // one of at most `threads` distinct threads (the caller plus
+        // the `threads − 1` persistent workers) — the per-call scoped
+        // version would mint fresh thread ids per run.
+        let pool = ThreadPool::new(3);
+        let ids: Mutex<HashSet<ThreadId>> = Mutex::new(HashSet::new());
+        for _ in 0..8 {
+            pool.run(32, &|_| {
+                ids.lock().unwrap().insert(std::thread::current().id());
+            });
+            pool.run_overlapping(
+                32,
+                &|_| {
+                    ids.lock().unwrap().insert(std::thread::current().id());
+                },
+                || (),
+            );
+        }
+        assert!(
+            ids.lock().unwrap().len() <= 3,
+            "more distinct threads than the pool owns: {}",
+            ids.lock().unwrap().len()
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_panic_propagates_to_the_caller() {
+        // Whichever thread claims the poisoned row — a parked worker
+        // (flagged and re-raised at the join barrier) or the caller
+        // itself — the dispatch must end in a panic, never in a silent
+        // partial result.
+        let pool = ThreadPool::new(4);
+        pool.run(64, &|i| {
+            if i == 40 {
+                panic!("row failure");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_worker_panic() {
+        let pool = ThreadPool::new(3);
+        let poisoned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(32, &|i| {
+                if i == 20 {
+                    panic!("row failure");
+                }
+            });
+        }));
+        assert!(poisoned.is_err());
+        // Later jobs still cover every index with the surviving crew.
+        let hits: Vec<Mutex<u32>> = (0..23).map(|_| Mutex::new(0)).collect();
+        pool.run(hits.len(), &|i| *hits[i].lock().unwrap() += 1);
+        assert!(hits.iter().all(|h| *h.lock().unwrap() == 1));
+    }
+
+    #[test]
+    fn clones_share_the_worker_set() {
+        let pool = ThreadPool::new(4);
+        let twin = pool.clone();
+        let hits: Vec<Mutex<u32>> = (0..17).map(|_| Mutex::new(0)).collect();
+        pool.run(hits.len(), &|i| *hits[i].lock().unwrap() += 1);
+        twin.run(hits.len(), &|i| *hits[i].lock().unwrap() += 1);
+        assert!(hits.iter().all(|h| *h.lock().unwrap() == 2));
+        // Dropping one clone must not tear down the shared workers.
+        drop(twin);
+        pool.run(hits.len(), &|i| *hits[i].lock().unwrap() += 1);
+        assert!(hits.iter().all(|h| *h.lock().unwrap() == 3));
     }
 }

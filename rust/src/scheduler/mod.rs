@@ -110,6 +110,21 @@ pub struct ServerStats {
     /// evicted mid-decode because the KV pool ran dry). A load-shedding
     /// signal: the rank-aware policy penalizes servers that preempt.
     pub preemptions: usize,
+    /// Total pages in the unified device pool; 0 when the backend does
+    /// not model one (simulated instances). With the per-class counters
+    /// below this turns slot pressure into a real memory-pressure score
+    /// for `coordinator::placement`.
+    pub pool_pages: usize,
+    /// Unified-pool pages currently held by request KV.
+    pub kv_held_pages: usize,
+    /// Unified-pool pages currently held by resident adapter weights.
+    /// `kv_free_tokens` already nets these out — the two budgets compete
+    /// for the same free list.
+    pub adapter_held_pages: usize,
+    /// Idle-adapter pressure evictions this server has performed (weight
+    /// pages reclaimed to admit KV or a different adapter). Like
+    /// `preemptions`, a monotone churn signal.
+    pub adapter_evictions: usize,
 }
 
 impl Default for ServerStats {
@@ -122,6 +137,10 @@ impl Default for ServerStats {
             kv_free_tokens: usize::MAX,
             tpot_slo: None,
             preemptions: 0,
+            pool_pages: 0,
+            kv_held_pages: 0,
+            adapter_held_pages: 0,
+            adapter_evictions: 0,
         }
     }
 }

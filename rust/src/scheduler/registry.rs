@@ -11,6 +11,26 @@ use std::sync::RwLock;
 
 use crate::util::json::{self, Json};
 
+/// Per-event EWMA decay factor for the recency-weighted popularity
+/// score: every recorded request advances a global event clock, and an
+/// adapter's score is multiplied by `POP_DECAY^age` (age = events since
+/// its last update) before the new demand is added. The raw cumulative
+/// counter ([`GlobalRegistry::popularity`]) is untouched; the decayed
+/// score ([`GlobalRegistry::decayed_popularity`]) is what placement
+/// should prefer, because a once-hot adapter that went quiet should
+/// lose its device residency claim to currently-hot ones.
+const POP_DECAY: f64 = 0.98;
+
+/// Lazy EWMA decay over `age` events, in integer micro-units so the
+/// score is exactly representable in JSON and bit-stable across
+/// save/load hops.
+fn decayed_micro(micro: u64, age: u64) -> u64 {
+    if micro == 0 || age == 0 {
+        return micro;
+    }
+    (micro as f64 * POP_DECAY.powi(age.min(i32::MAX as u64) as i32)).round() as u64
+}
+
 /// Metadata for one registered adapter.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AdapterMeta {
@@ -36,6 +56,13 @@ struct Inner {
     /// adapter id → requests observed (routing fronts record each
     /// submission; coordinators may seed historical priors).
     popularity: BTreeMap<u64, u64>,
+    /// Global popularity-event clock: total requests ever recorded.
+    /// The time base for lazy EWMA decay of `pop_scores`.
+    pop_events: u64,
+    /// adapter id → (EWMA score in micro-units, event-clock stamp of
+    /// its last update). Decay is applied lazily on read/update, so
+    /// idle adapters cost nothing until someone looks at them.
+    pop_scores: BTreeMap<u64, (u64, u64)>,
 }
 
 impl GlobalRegistry {
@@ -89,6 +116,7 @@ impl GlobalRegistry {
         let mut inner = self.inner.write().unwrap();
         inner.placements.remove(&id);
         inner.popularity.remove(&id);
+        inner.pop_scores.remove(&id);
         inner.adapters.remove(&id).is_some()
     }
 
@@ -101,8 +129,16 @@ impl GlobalRegistry {
     /// Record `n` observed requests against `id` — bulk form for seeding
     /// a historical demand prior before traffic starts.
     pub fn record_requests(&self, id: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
         let mut inner = self.inner.write().unwrap();
         *inner.popularity.entry(id).or_insert(0) += n;
+        inner.pop_events += n;
+        let now = inner.pop_events;
+        let (micro, last) = inner.pop_scores.get(&id).copied().unwrap_or((0, 0));
+        let fresh = decayed_micro(micro, now - last).saturating_add(n.saturating_mul(1_000_000));
+        inner.pop_scores.insert(id, (fresh, now));
     }
 
     /// Requests observed against `id` so far.
@@ -126,6 +162,36 @@ impl GlobalRegistry {
             .map(|&id| (id, inner.popularity.get(&id).copied().unwrap_or(0)))
             .collect();
         table.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        table
+    }
+
+    /// Recency-weighted demand for `id`: the EWMA score decayed by
+    /// [`POP_DECAY`] per popularity event since its last request.
+    /// Unlike the monotone [`Self::popularity`] counter, this ages out
+    /// adapters that have gone quiet — the signal unified-pool-aware
+    /// placement should score with.
+    pub fn decayed_popularity(&self, id: u64) -> f64 {
+        let inner = self.inner.read().unwrap();
+        let now = inner.pop_events;
+        let (micro, last) = inner.pop_scores.get(&id).copied().unwrap_or((0, 0));
+        decayed_micro(micro, now - last) as f64 / 1e6
+    }
+
+    /// `(id, decayed score)` for every registered adapter, hottest
+    /// first (ties by ascending id — deterministic like
+    /// [`Self::popularity_table`], but recency-weighted).
+    pub fn decayed_table(&self) -> Vec<(u64, f64)> {
+        let inner = self.inner.read().unwrap();
+        let now = inner.pop_events;
+        let mut table: Vec<(u64, f64)> = inner
+            .adapters
+            .keys()
+            .map(|&id| {
+                let (micro, last) = inner.pop_scores.get(&id).copied().unwrap_or((0, 0));
+                (id, decayed_micro(micro, now - last) as f64 / 1e6)
+            })
+            .collect();
+        table.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
         table
     }
 
@@ -169,12 +235,15 @@ impl GlobalRegistry {
             .values()
             .map(|m| {
                 let pop = inner.popularity.get(&m.id).copied().unwrap_or(0);
+                let (micro, last) = inner.pop_scores.get(&m.id).copied().unwrap_or((0, 0));
                 json::obj(vec![
                     ("id", json::num(m.id as f64)),
                     ("rank", json::num(m.rank as f64)),
                     ("base_model", json::s(&m.base_model)),
                     ("weights_path", json::s(&m.weights_path)),
                     ("popularity", json::num(pop as f64)),
+                    ("pop_score_micro", json::num(micro as f64)),
+                    ("pop_last_event", json::num(last as f64)),
                     (
                         "servers",
                         Json::Arr(
@@ -190,7 +259,10 @@ impl GlobalRegistry {
                 ])
             })
             .collect();
-        json::obj(vec![("adapters", Json::Arr(adapters))])
+        json::obj(vec![
+            ("adapters", Json::Arr(adapters)),
+            ("pop_events", json::num(inner.pop_events as f64)),
+        ])
     }
 
     /// Persist to a JSON file.
@@ -203,6 +275,7 @@ impl GlobalRegistry {
         let text = std::fs::read_to_string(path)?;
         let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
         let reg = GlobalRegistry::new();
+        let mut scores: Vec<(u64, u64, u64)> = Vec::new();
         for item in j.req("adapters").map_err(|e| anyhow::anyhow!("{e}"))?.as_arr().unwrap_or(&[]) {
             let id = item
                 .get("id")
@@ -236,10 +309,29 @@ impl GlobalRegistry {
                 }
             }
             // Popularity is optional (older files predate the counter).
+            // Replaying it through `record_requests` doubles as the
+            // legacy backfill for the EWMA score; files carrying the
+            // explicit score fields overwrite that replay below.
             if let Some(pop) = item.get("popularity").and_then(Json::as_f64) {
                 if pop > 0.0 {
                     reg.record_requests(id, pop as u64);
                 }
+            }
+            if let (Some(micro), Some(last)) = (
+                item.get("pop_score_micro").and_then(Json::as_f64),
+                item.get("pop_last_event").and_then(Json::as_f64),
+            ) {
+                scores.push((id, micro as u64, last as u64));
+            }
+        }
+        // New-format files persist the decayed scores exactly; restore
+        // them verbatim so save → load → save is byte-stable and decay
+        // resumes from the saved event clock, not a replayed one.
+        if let Some(events) = j.get("pop_events").and_then(Json::as_f64) {
+            let mut inner = reg.inner.write().unwrap();
+            inner.pop_events = events as u64;
+            for (id, micro, last) in scores {
+                inner.pop_scores.insert(id, (micro, last));
             }
         }
         Ok(reg)
@@ -317,6 +409,62 @@ mod tests {
         assert_eq!(reg.popularity(3), 5);
         // Hottest first, ties (zero-demand adapters) by ascending id.
         assert_eq!(reg.popularity_table(), vec![(3, 5), (2, 2), (1, 0)]);
+    }
+
+    #[test]
+    fn decayed_popularity_ages_out_stale_demand() {
+        let reg = GlobalRegistry::new();
+        reg.register(meta(1, 64));
+        reg.register(meta(2, 8));
+        reg.register(meta(3, 16));
+        // Adapter 1 was hot early; 80 events of unrelated traffic pass;
+        // adapter 2 gets modest but *recent* demand.
+        reg.record_requests(1, 10);
+        reg.record_requests(3, 80);
+        reg.record_requests(2, 8);
+        // The raw counter still ranks 1 over 2 (10 > 8)…
+        assert_eq!(reg.popularity_table(), vec![(3, 80), (1, 10), (2, 8)]);
+        // …but the decayed score has aged 1 out: 10·0.98^88 ≈ 1.7 < 8.
+        assert!(reg.decayed_popularity(1) < reg.decayed_popularity(2));
+        assert!(reg.decayed_popularity(1) < 10.0);
+        let order: Vec<u64> = reg.decayed_table().iter().map(|&(id, _)| id).collect();
+        assert_eq!(order, vec![3, 2, 1]);
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_decayed_scores() {
+        let reg = GlobalRegistry::new();
+        reg.register(meta(1, 64));
+        reg.register(meta(2, 8));
+        reg.record_requests(1, 10);
+        reg.record_requests(2, 40);
+        let dir = std::env::temp_dir().join("caraserve-registry-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("registry_decay.json");
+        reg.save(&path).unwrap();
+        let back = GlobalRegistry::load(&path).unwrap();
+        // Raw counters and decayed scores both survive persistence
+        // exactly (scores live in integer micro-units for this).
+        assert_eq!(back.popularity(1), 10);
+        assert_eq!(back.popularity(2), 40);
+        assert_eq!(back.decayed_popularity(1), reg.decayed_popularity(1));
+        assert_eq!(back.decayed_popularity(2), reg.decayed_popularity(2));
+        assert_eq!(back.decayed_table(), reg.decayed_table());
+        // A second hop is byte-stable.
+        let path2 = dir.join("registry_decay2.json");
+        back.save(&path2).unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap(),
+            std::fs::read_to_string(&path2).unwrap()
+        );
+        // Decay resumes from the restored event clock: identical new
+        // demand leaves both registries in identical states.
+        reg.record_request(2);
+        back.record_request(2);
+        assert_eq!(back.decayed_popularity(1), reg.decayed_popularity(1));
+        assert_eq!(back.decayed_popularity(2), reg.decayed_popularity(2));
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&path2).ok();
     }
 
     #[test]

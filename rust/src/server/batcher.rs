@@ -116,12 +116,22 @@ impl Batcher {
     /// sized by the full prefill context, which for a re-queued
     /// (preempted) request includes its already-generated tokens.
     pub fn next_action(&self, can_admit: impl Fn(usize) -> bool) -> NextAction {
+        self.next_action_by(|q| can_admit(q.req.context_len()))
+    }
+
+    /// [`next_action`](Self::next_action) with the whole queued request
+    /// visible to the admission predicate. The unified-pool engine needs
+    /// this: admitting a request may also page in its adapter's weights,
+    /// so eligibility depends on `(adapter, context_len)` jointly, not on
+    /// context length alone. Same FIFO discipline — the scan stops at the
+    /// first inadmissible request so the head is never starved.
+    pub fn next_action_by(&self, can_admit: impl Fn(&QueuedReq) -> bool) -> NextAction {
         if !self.queue.is_empty() && self.running.len() < self.max_batch {
-            // Admit from the front while capacity and KV pages allow.
+            // Admit from the front while capacity and pool pages allow.
             let room = (self.max_batch - self.running.len()).min(self.max_prefill_batch);
             let mut admit = 0;
             for q in self.queue.iter().take(room) {
-                if can_admit(q.req.context_len()) {
+                if can_admit(q) {
                     admit += 1;
                 } else {
                     break; // FIFO: don't starve the head of the queue
@@ -271,6 +281,22 @@ mod tests {
         b.enqueue(r);
         assert_eq!(b.next_action(|c| c <= 50), NextAction::Idle);
         assert_eq!(b.next_action(|c| c <= 60), NextAction::Prefill { admit: 1 });
+    }
+
+    #[test]
+    fn next_action_by_sees_the_whole_request() {
+        let mut b = Batcher::new(8, 4);
+        b.enqueue(req(1, 8)); // adapter 1
+        b.enqueue(req(2, 8)); // adapter 2
+        // Adapter-aware predicate: only adapter 1 is admissible; FIFO
+        // still stops the scan at the first refusal.
+        assert_eq!(
+            b.next_action_by(|q| q.req.adapter == 1),
+            NextAction::Prefill { admit: 1 }
+        );
+        assert_eq!(b.next_action_by(|q| q.req.adapter == 2), NextAction::Idle);
+        // Delegation: next_action is next_action_by over context_len.
+        assert_eq!(b.next_action(|c| c >= 8), NextAction::Prefill { admit: 2 });
     }
 
     #[test]

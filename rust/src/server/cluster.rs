@@ -355,7 +355,8 @@ impl ServingFront for ClusterFront {
     /// The cluster as one server: rank lists concatenated, adapter sets
     /// unioned, prompt capacity and KV headroom at the per-backend
     /// maximum (a request needs *one* server that fits it), the
-    /// tightest onboard SLO, preemptions summed.
+    /// tightest onboard SLO, preemptions/evictions and the unified-pool
+    /// occupancy counters summed.
     fn stats(&self) -> ServerStats {
         let mut agg = ServerStats {
             adapters: AdapterSet::only(vec![]),
@@ -374,6 +375,10 @@ impl ServingFront for ClusterFront {
                 (a, b) => a.or(b),
             };
             agg.preemptions += s.preemptions;
+            agg.pool_pages += s.pool_pages;
+            agg.kv_held_pages += s.kv_held_pages;
+            agg.adapter_held_pages += s.adapter_held_pages;
+            agg.adapter_evictions += s.adapter_evictions;
         }
         agg
     }
@@ -567,6 +572,9 @@ pub mod synthetic {
         pub cold: ColdStartStats,
         /// Total decode-growth preemptions across servers.
         pub preemptions: usize,
+        /// Total unified-pool adapter evictions across servers (0 on
+        /// runtimes without paged adapter residency).
+        pub adapter_evictions: usize,
         /// Wall-clock of the whole run (seconds).
         pub wall_s: f64,
         /// Per-request token streams in submission order (empty for
@@ -784,6 +792,7 @@ pub mod synthetic {
             routed_rank_sum: cluster.routed_rank_sum().to_vec(),
             cold: cluster.cold_start_stats().unwrap_or_default(),
             preemptions: per_server.iter().map(|s| s.preemptions).sum(),
+            adapter_evictions: per_server.iter().map(|s| s.adapter_evictions).sum(),
             wall_s,
             streams: handles.iter().map(|h| h.tokens()).collect(),
         })

@@ -27,6 +27,16 @@
 //!   backend (baked LoRA stacks, no mid-layer seam) or without a worker
 //!   pool, the mode falls back to the modeled overlap: the iteration
 //!   spans `max(load, prefill)`.
+//!
+//! On the native backend the engine runs **unified paging** (S-LoRA
+//! style): adapter weights and KV cache compete for one bounded page
+//! pool ([`super::kvcache`]). Admission debits both budgets jointly,
+//! cold starts page weights in (evicting idle adapters by decayed-
+//! popularity LRU — never ones with queued/running requests), and
+//! decode growth reclaims idle adapter pages before resorting to
+//! request preemption. This removes the fixed-slot ceiling: catalogs of
+//! 1,000+ adapters serve through [`crate::adapters::AdapterResidency`]
+//! (`rust/tests/integration_unified_pool.rs` pins the behaviour).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -41,7 +51,10 @@ use super::api::{
 use super::batcher::{Batcher, NextAction, RunningReq};
 use super::kvcache::{KvCacheManager, KvError};
 use super::metrics::{ColdStartStats, MetricsRecorder, TtftBreakdown};
-use crate::adapters::{AsyncLoader, DeviceSlotCache, HostRepository, LoaderModel};
+use crate::adapters::{
+    flatten_stack, stack_from_flat, AdapterResidency, AsyncLoader, DeviceSlotCache,
+    HostRepository, LoaderModel,
+};
 use crate::cpu_lora::{AdapterTable, CoreProfile, CpuLoraEngine};
 use crate::model::{LoraSpec, TargetMatrix};
 use crate::runtime::{ExternalLora, KvWrite, RowLora, Runtime};
@@ -142,6 +155,14 @@ pub struct InferenceServer {
     batcher: Batcher,
     kv: KvCacheManager,
     slot_cache: DeviceSlotCache,
+    /// Paged adapter residency over the unified pool (native path);
+    /// `slot_cache` keeps serving the fixed-slot PJRT path.
+    residency: AdapterResidency,
+    /// Unified paging active: adapter weights share the page pool with
+    /// KV. True exactly when the backend reads paged KV in place (the
+    /// native runtime); the PJRT arm keeps fixed slots because its
+    /// compiled artifacts bake one weight stack per slot.
+    unified: bool,
     repo: HostRepository,
     loader: LoaderModel,
     metrics: MetricsRecorder,
@@ -199,6 +220,9 @@ impl InferenceServer {
         );
         let slot_cache =
             DeviceSlotCache::new(runtime.lora_slots()).map_err(|e| anyhow!("{e}"))?;
+        let residency =
+            AdapterResidency::new(runtime.lora_slots()).map_err(|e| anyhow!("{e}"))?;
+        let unified = !runtime.needs_dense_kv();
         let model_cfg = crate::model::LlamaConfig::tiny();
         let loader = LoaderModel {
             cfg: model_cfg,
@@ -209,6 +233,8 @@ impl InferenceServer {
             batcher: Batcher::new(config.max_batch, config.max_prefill_batch),
             kv,
             slot_cache,
+            residency,
+            unified,
             repo: HostRepository::new(),
             loader,
             metrics: MetricsRecorder::new(),
@@ -263,6 +289,182 @@ impl InferenceServer {
         queued.count() + running.count()
     }
 
+    /// Reconstruct an adapter's Q/K/V/O stack from its unified-pool
+    /// pages — the install source on the unified path, so the runtime
+    /// serves exactly what the pool holds. The gathered copy is
+    /// value-identical to the host table's, which is what keeps token
+    /// streams bitwise stable across evict/re-page cycles.
+    fn paged_stack(
+        &self,
+        adapter: u64,
+    ) -> Option<Arc<[crate::kernels::bgmv::AdapterWeights; 4]>> {
+        let flat = self.kv.adapter_weights(adapter)?;
+        let rank = self.repo.get(adapter)?.rank;
+        Some(Arc::new(stack_from_flat(
+            &flat,
+            self.runtime.hidden(),
+            rank,
+        )))
+    }
+
+    /// Evict the coldest *idle* resident adapter from the unified pool:
+    /// release its weight pages, clear its runtime slot, drop its
+    /// residency. Adapters with queued or running requests, in-flight
+    /// loads, or in `protect` (the current admit batch — mid-admission,
+    /// so `inflight_on` doesn't see them) are never victims, preserving
+    /// the PR 5 busy guards. Returns whether an eviction happened.
+    fn evict_idle_adapter(&mut self, protect: &[u64]) -> Result<bool> {
+        let victim = {
+            let batcher = &self.batcher;
+            let loads = &self.loads;
+            self.residency.victim(|a| {
+                protect.contains(&a)
+                    || loads.loading(a)
+                    || batcher.queue.iter().any(|q| q.req.adapter == a)
+                    || batcher.running.iter().any(|r| r.adapter == a)
+            })
+        };
+        let Some(victim) = victim else {
+            return Ok(false);
+        };
+        let slot = self
+            .residency
+            .evict(victim)
+            .ok_or_else(|| anyhow!("eviction victim {victim} not resident"))?;
+        self.kv
+            .free_adapter(victim)
+            .ok_or_else(|| anyhow!("eviction victim {victim} held no pool pages"))?;
+        self.runtime.install_slot(slot, None);
+        self.metrics.adapter_eviction();
+        Ok(true)
+    }
+
+    /// Unified path: make `adapter` weight-resident in the pool, evicting
+    /// idle residents as needed (acquire = page-in). Weights are
+    /// flattened from the host table into rank-proportional pages;
+    /// `install` controls whether the runtime slot is loaded now (false
+    /// on the real CPU-assist path, where §4.3's `finish_loads` installs
+    /// at the load deadline instead). Returns `(slot, cold)`.
+    fn ensure_resident(
+        &mut self,
+        adapter: u64,
+        protect: &[u64],
+        install: bool,
+    ) -> Result<(usize, bool)> {
+        if let Some(slot) = self.residency.slot_of(adapter) {
+            self.residency.touch(adapter);
+            return Ok((slot, false));
+        }
+        let stack = self
+            .table
+            .get(adapter)
+            .ok_or_else(|| anyhow!("adapter {adapter} has no host weights"))?;
+        let flat = flatten_stack(&stack);
+        let need = self.kv.pages_for_elems(flat.len());
+        while !self.residency.has_free_slot() || self.kv.free_pages() < need {
+            if !self.evict_idle_adapter(protect)? {
+                anyhow::bail!(
+                    "cannot page in adapter {adapter}: need {need} pages + a \
+                     residency slot ({} pages free, {} of {} slots held) and \
+                     every resident adapter is busy",
+                    self.kv.free_pages(),
+                    self.residency.len(),
+                    self.residency.capacity()
+                );
+            }
+        }
+        self.kv
+            .reserve_adapter(adapter, &flat)
+            .map_err(|e| anyhow!("page in adapter {adapter}: {e}"))?;
+        let slot = self
+            .residency
+            .insert(adapter)
+            .ok_or_else(|| anyhow!("no residency slot for adapter {adapter}"))?;
+        if install {
+            self.runtime.install_slot(slot, self.paged_stack(adapter));
+        }
+        Ok((slot, true))
+    }
+
+    /// Unified-pool admission: each provisional admit debits its KV
+    /// pages and — when its adapter is not yet resident — the adapter's
+    /// rank-proportional weight pages plus a residency slot, from a
+    /// running model of what `run_prefill`'s evictions can actually
+    /// free. Idle residents count as reclaimable (pages and slot);
+    /// adapters of already-provisioned admits are pinned. Conservative
+    /// by construction: any batch admitted here is satisfiable by
+    /// `ensure_resident`, so its hard-error path stays unreachable
+    /// under ordinary load.
+    fn unified_admission_action(&self) -> NextAction {
+        use std::cell::{Cell, RefCell};
+        let kv = &self.kv;
+        let residency = &self.residency;
+        let repo = &self.repo;
+        let hidden = self.runtime.hidden();
+        // Idle residents, by id: pages (and a slot) we could reclaim.
+        let reclaim: RefCell<std::collections::BTreeMap<u64, usize>> = RefCell::new(
+            residency
+                .residents()
+                .iter()
+                .filter(|&&a| self.inflight_on(a) == 0 && !self.loads.loading(a))
+                .filter_map(|&a| kv.adapter_pages(a).map(|p| (a, p)))
+                .collect(),
+        );
+        let free = Cell::new(kv.free_pages());
+        let free_slots = Cell::new(residency.capacity() - residency.len());
+        let pinned: RefCell<std::collections::HashSet<u64>> =
+            RefCell::new(std::collections::HashSet::new());
+        self.batcher.next_action_by(|q| {
+            let a = q.req.adapter;
+            let kv_need = kv.pages_for(q.req.context_len().max(1));
+            let mut rc = reclaim.borrow_mut();
+            // The candidate's own adapter is never an eviction victim.
+            let held = rc.remove(&a);
+            let resident = residency.resident(a) || pinned.borrow().contains(&a);
+            let w_need = if resident {
+                0
+            } else {
+                let rank = repo.get(a).map_or(1, |s| s.rank.max(1));
+                kv.pages_for_elems(8 * hidden * rank)
+            };
+            let reclaimable: usize = rc.values().sum();
+            let slot_ok = resident || free_slots.get() > 0 || !rc.is_empty();
+            if !slot_ok || kv_need + w_need > free.get() + reclaimable {
+                if let Some(p) = held {
+                    rc.insert(a, p); // restore: not admitted, still idle
+                }
+                return false;
+            }
+            // Commit. A residency slot first (an eviction frees one as a
+            // side effect, so only a slot-motivated eviction skips the
+            // slot credit)…
+            if !resident {
+                if free_slots.get() > 0 {
+                    free_slots.set(free_slots.get() - 1);
+                } else if let Some((&victim, _)) = rc.iter().next() {
+                    if let Some(p) = rc.remove(&victim) {
+                        free.set(free.get() + p);
+                    }
+                }
+            }
+            // …then pages, draining reclaimable idles (ascending id —
+            // deterministic) while short.
+            let need = kv_need + w_need;
+            while need > free.get() {
+                let Some((&victim, _)) = rc.iter().next() else {
+                    break;
+                };
+                if let Some(p) = rc.remove(&victim) {
+                    free.set(free.get() + p);
+                    free_slots.set(free_slots.get() + 1);
+                }
+            }
+            free.set(free.get().saturating_sub(need));
+            pinned.borrow_mut().insert(a);
+            true
+        })
+    }
+
     /// Submit a request. Validation failures (empty/over-bucket prompt,
     /// over-capacity generation, uninstalled adapter) surface as a
     /// terminal [`RequestEvent::Rejected`] on the returned handle.
@@ -283,8 +485,25 @@ impl InferenceServer {
 
     fn validate(&self, req: &ServeRequest) -> std::result::Result<(), String> {
         super::api::validate_shape(req, self.max_prompt, self.cache_m)?;
-        if self.repo.get(req.adapter).is_none() {
+        let Some(spec) = self.repo.get(req.adapter) else {
             return Err(format!("adapter {} not installed", req.adapter));
+        };
+        if self.unified {
+            // Joint bound: the request's adapter weights and its prompt
+            // KV must be able to coexist in the pool, or admission could
+            // never succeed (rejecting here prevents a permanent stall).
+            let w = self
+                .kv
+                .pages_for_elems(8 * self.runtime.hidden() * spec.rank.max(1));
+            let p = self.kv.pages_for(req.prompt.len().max(1));
+            if w + p > self.kv.total_pages() {
+                return Err(format!(
+                    "adapter {} weights ({w} pages) + prompt ({p} pages) can \
+                     never fit the {}-page unified pool",
+                    req.adapter,
+                    self.kv.total_pages()
+                ));
+            }
         }
         Ok(())
     }
@@ -311,8 +530,16 @@ impl InferenceServer {
 
     /// The scheduler's `GetStats` view: running/queued adapter ranks,
     /// the real eligibility data (locally installed adapter set, prompt
-    /// capacity, free KV headroom, preemption count), and the tightest
-    /// per-token SLO among live requests.
+    /// capacity, free-page headroom, preemption count), the tightest
+    /// per-token SLO among live requests, and the unified pool's
+    /// per-class occupancy counters.
+    ///
+    /// On the unified path `kv_free_tokens` counts *reclaimable*
+    /// headroom — free pages plus pages held by idle (evictable)
+    /// adapter residents — so the router neither overestimates (the
+    /// free list already nets out adapter-held pages, the two budgets
+    /// being one pool) nor writes off capacity a pressure eviction
+    /// would recover.
     pub fn stats(&self) -> ServerStats {
         let rank = |adapter: u64| self.repo.get(adapter).map_or(0, |s| s.rank);
         let tpot_slo = super::api::tightest_tpot_slo(
@@ -322,6 +549,16 @@ impl InferenceServer {
                 .map(|r| &r.slo)
                 .chain(self.batcher.queue.iter().map(|q| &q.req.slo)),
         );
+        let evictable_pages: usize = if self.unified {
+            self.residency
+                .residents()
+                .iter()
+                .filter(|&&a| self.inflight_on(a) == 0 && !self.loads.loading(a))
+                .filter_map(|&a| self.kv.adapter_pages(a))
+                .sum()
+        } else {
+            0
+        };
         ServerStats {
             running_ranks: self
                 .batcher
@@ -339,9 +576,13 @@ impl InferenceServer {
             max_prompt_tokens: self
                 .max_prompt
                 .min(self.kv.total_pages() * self.config.page_size),
-            kv_free_tokens: self.kv.free_pages() * self.config.page_size,
+            kv_free_tokens: (self.kv.free_pages() + evictable_pages) * self.config.page_size,
             tpot_slo,
             preemptions: self.metrics.preemptions(),
+            pool_pages: self.kv.total_pages(),
+            kv_held_pages: self.kv.kv_held_pages(),
+            adapter_held_pages: self.kv.adapter_held_pages(),
+            adapter_evictions: self.metrics.adapter_evictions(),
         }
     }
 
@@ -351,25 +592,36 @@ impl InferenceServer {
     pub fn step(&mut self) -> Result<bool> {
         self.reap_cancelled()?;
         self.finish_loads();
-        let kv = &self.kv;
-        // Cumulative admission accounting: each provisional admit
-        // debits its page need from a running free count, so a batch of
-        // requests that individually fit but jointly exhaust the pool
-        // is trimmed here — run_prefill's reservations then cannot fail
-        // under ordinary load (its rollback stays as a backstop).
-        let free = std::cell::Cell::new(kv.free_pages());
-        let action = self.batcher.next_action(|tokens| {
-            let need = kv.pages_for(tokens.max(1));
-            if need > free.get() {
-                return false;
-            }
-            free.set(free.get() - need);
-            true
-        });
+        let action = if self.unified {
+            self.unified_admission_action()
+        } else {
+            let kv = &self.kv;
+            // Cumulative admission accounting: each provisional admit
+            // debits its page need from a running free count, so a batch
+            // of requests that individually fit but jointly exhaust the
+            // pool is trimmed here — run_prefill's reservations then
+            // cannot fail under ordinary load (its rollback stays as a
+            // backstop).
+            let free = std::cell::Cell::new(kv.free_pages());
+            self.batcher.next_action(|tokens| {
+                let need = kv.pages_for(tokens.max(1));
+                if need > free.get() {
+                    return false;
+                }
+                free.set(free.get() - need);
+                true
+            })
+        };
         match action {
             NextAction::Idle => Ok(false),
             NextAction::Prefill { admit } => {
-                let admit = self.collision_free_admit(admit);
+                // Fixed-slot collisions only exist on the PJRT path;
+                // unified residency assigns slots dynamically.
+                let admit = if self.unified {
+                    admit
+                } else {
+                    self.collision_free_admit(admit)
+                };
                 if admit > 0 {
                     self.run_prefill(admit)?;
                 } else if !self.batcher.running.is_empty() {
@@ -443,7 +695,13 @@ impl InferenceServer {
     fn finish_loads(&mut self) {
         let done = self.loads.poll(Instant::now());
         for adapter in done {
-            if let Some(slot) = self.slot_cache.slot_of(adapter) {
+            if self.unified {
+                // The transfer destination was the pool pages reserved at
+                // admission; install the runtime slot from them now.
+                if let Some(slot) = self.residency.slot_of(adapter) {
+                    self.runtime.install_slot(slot, self.paged_stack(adapter));
+                }
+            } else if let Some(slot) = self.slot_cache.slot_of(adapter) {
                 if self.slot_cache.occupant(slot) == Some(adapter) {
                     self.runtime.install_slot(slot, self.table.get(adapter));
                 }
@@ -562,11 +820,16 @@ impl InferenceServer {
         let real_assist = self.cpu_assist_active();
         let now = Instant::now();
 
-        // Acquire device slots and plan each row's LoRA sourcing.
+        // Acquire adapter residency (or device slots) and plan each
+        // row's LoRA sourcing.
         let mut modeled_load = 0.0f64; // serialized / modeled-overlap window
         let mut slot_of: Vec<usize> = Vec::with_capacity(admits.len());
         let mut plans: Vec<RowPlan> = Vec::with_capacity(admits.len());
         let mut windows: Vec<(f64, bool)> = Vec::with_capacity(admits.len());
+        // Adapters of this batch are mid-admission (no longer queued, not
+        // yet running), so inflight_on can't see them — pin them against
+        // pressure eviction explicitly.
+        let protect: Vec<u64> = admits.iter().map(|q| q.req.adapter).collect();
         for q in &admits {
             let adapter = q.req.adapter;
             // A re-admitted (preempted) request goes through the same
@@ -577,18 +840,29 @@ impl InferenceServer {
             // again if it ever re-collides (it can't, but keep the set
             // bounded by currently blocked requests either way).
             self.deferred_ids.remove(&q.req.id);
-            // Fixed adapter→slot mapping: the baked LoRA stacks make the
-            // slot index part of the adapter's identity (see
-            // DeviceSlotCache::acquire_fixed). collision_free_admit
+            // Unified path: page the adapter's weights into the pool,
+            // evicting idle residents under pressure; the real CPU-assist
+            // arm defers the runtime install to finish_loads (§4.3),
+            // every other arm installs from the pool pages now. PJRT
+            // path: fixed adapter→slot mapping — the baked LoRA stacks
+            // make the slot index part of the adapter's identity (see
+            // DeviceSlotCache::acquire_fixed); collision_free_admit
             // guaranteed no live occupant is evicted here.
-            let acq = self.slot_cache.acquire_fixed(adapter);
-            slot_of.push(acq.slot);
+            let (slot, cold) = if self.unified {
+                let defer =
+                    self.config.cold_start == ColdStartMode::CaraServe && real_assist;
+                self.ensure_resident(adapter, &protect, !defer)?
+            } else {
+                let acq = self.slot_cache.acquire_fixed(adapter);
+                (acq.slot, acq.cold)
+            };
+            slot_of.push(slot);
             let loading = self.loads.loading(adapter);
             match self.config.cold_start {
                 ColdStartMode::Cached => {
                     // Oracle: instant residency, no load window.
-                    if acq.cold {
-                        self.runtime.install_slot(acq.slot, self.table.get(adapter));
+                    if cold && !self.unified {
+                        self.runtime.install_slot(slot, self.table.get(adapter));
                     }
                     if !resumed {
                         self.metrics.warm_admit();
@@ -597,10 +871,12 @@ impl InferenceServer {
                     windows.push((0.0, false));
                 }
                 ColdStartMode::OnDemand => {
-                    if acq.cold {
+                    if cold {
                         let w = self.load_window(adapter)?;
                         modeled_load += w;
-                        self.runtime.install_slot(acq.slot, self.table.get(adapter));
+                        if !self.unified {
+                            self.runtime.install_slot(slot, self.table.get(adapter));
+                        }
                         if !resumed {
                             self.metrics.cold_admit(false);
                         }
@@ -614,7 +890,7 @@ impl InferenceServer {
                     plans.push(RowPlan::Resident);
                 }
                 ColdStartMode::CaraServe => {
-                    if acq.cold || loading {
+                    if cold || loading {
                         let w = if loading {
                             // Mid-load admit: only the remaining window.
                             self.loads
@@ -637,8 +913,10 @@ impl InferenceServer {
                             // Modeled fallback: overlap the window with
                             // this iteration's compute.
                             modeled_load += w;
-                            self.runtime
-                                .install_slot(acq.slot, self.table.get(adapter));
+                            if !self.unified {
+                                self.runtime
+                                    .install_slot(slot, self.table.get(adapter));
+                            }
                             if !resumed {
                                 self.metrics.cold_admit(false);
                             }
@@ -888,11 +1166,12 @@ impl InferenceServer {
     ///
     /// Decode-growth headroom: a request crossing a page boundary with
     /// an empty pool used to surface `OutOfPages` as a fatal engine
-    /// error. Instead, the youngest preemptible running request is
-    /// evicted — its pages freed, itself re-queued with a
-    /// [`ResumeState`] — and the append retried, so the serving loop
-    /// keeps going and the preempted request resumes later with an
-    /// unchanged client-visible stream.
+    /// error. Instead, on the unified path idle adapters are paged out
+    /// first (weights are re-fetchable; KV is not), and only then is the
+    /// youngest preemptible running request evicted — its pages freed,
+    /// itself re-queued with a [`ResumeState`] — and the append retried,
+    /// so the serving loop keeps going and the preempted request resumes
+    /// later with an unchanged client-visible stream.
     fn apply_decode_out(
         &mut self,
         ids: &[u64],
@@ -910,6 +1189,13 @@ impl InferenceServer {
                 match self.kv.append_token(*id, &out.k_new, &out.v_new, bb, row) {
                     Ok(()) => break,
                     Err(KvError::OutOfPages { need, free }) => {
+                        // Unified pool: decode growth first reclaims an
+                        // idle adapter's weight pages; only when every
+                        // resident adapter is busy does it sacrifice a
+                        // running request.
+                        if self.unified && self.evict_idle_adapter(&[])? {
+                            continue;
+                        }
                         let victim =
                             self.pick_preempt_victim(&preempted).ok_or_else(|| {
                                 anyhow!(
@@ -1068,7 +1354,15 @@ impl ServingFront for InferenceServer {
         self.table
             .install_synthetic(spec.id, self.runtime.hidden(), spec.rank);
         self.repo.install(spec.clone());
-        if let Some(slot) = self.slot_cache.slot_of(spec.id) {
+        if self.unified {
+            // A spec change invalidates any paged residency (the rank —
+            // and with it the page footprint — may differ): release the
+            // stale pages; the next request pages the new weights in.
+            if let Some(slot) = self.residency.evict(spec.id) {
+                self.kv.free_adapter(spec.id);
+                self.runtime.install_slot(slot, None);
+            }
+        } else if let Some(slot) = self.slot_cache.slot_of(spec.id) {
             // Device-resident already: refresh the baked slot stack so
             // warm admits serve the new weights.
             self.runtime.install_slot(slot, self.table.get(spec.id));
@@ -1089,7 +1383,12 @@ impl ServingFront for InferenceServer {
         let busy = self.inflight_on(adapter);
         anyhow::ensure!(busy == 0, "adapter {adapter} busy: {busy} in-flight requests");
         self.loads.cancel(adapter);
-        if let Some(slot) = self.slot_cache.evict(adapter) {
+        if self.unified {
+            if let Some(slot) = self.residency.evict(adapter) {
+                self.kv.free_adapter(adapter);
+                self.runtime.install_slot(slot, None);
+            }
+        } else if let Some(slot) = self.slot_cache.evict(adapter) {
             self.runtime.install_slot(slot, None);
         }
         self.repo.remove(adapter);
@@ -1097,16 +1396,22 @@ impl ServingFront for InferenceServer {
         Ok(())
     }
 
-    /// Load the adapter into its fixed device slot ahead of traffic, so
-    /// its first request admits warm instead of paying the cold-start
-    /// window. Refuses (`Ok(false)`) when the slot is pinned by a
-    /// *different* adapter with live requests or an in-flight load —
-    /// pre-warming must never evict weights a running request reads.
+    /// Load the adapter's weights ahead of traffic, so its first request
+    /// admits warm instead of paying the cold-start window. On the
+    /// unified path this is pre-*paging*: weights go into pool pages,
+    /// evicting idle residents if needed; refuses (`Ok(false)`) when the
+    /// pool or every residency slot is pinned by busy adapters. On the
+    /// PJRT path, refuses when the fixed slot is pinned by a *different*
+    /// adapter with live requests or an in-flight load — pre-warming
+    /// must never evict weights a running request reads.
     fn prewarm_adapter(&mut self, adapter: u64) -> Result<bool> {
         anyhow::ensure!(
             self.repo.get(adapter).is_some(),
             "adapter {adapter} not installed"
         );
+        if self.unified {
+            return Ok(self.ensure_resident(adapter, &[], true).is_ok());
+        }
         let slot = self.slot_cache.fixed_slot(adapter);
         if self.slot_cache.occupant(slot) == Some(adapter) {
             return Ok(true); // already resident

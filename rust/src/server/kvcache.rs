@@ -1,12 +1,30 @@
-//! Paged KV-cache manager.
+//! Unified paged device-memory pool: KV cache **and** adapter weights.
 //!
 //! vLLM-style block allocation: each request's KV rows live in
 //! fixed-size token pages drawn from a bounded pool, so memory is
 //! reclaimed at request completion without fragmentation (§8 of the
 //! paper credits this mechanism; LightLLM/vLLM both use it).
 //!
+//! Since the unified-paging refactor (S-LoRA's key idea, see
+//! ROADMAP direction 2), the same bounded pool also holds **adapter
+//! weight residency**: every page is owned either by a request's KV
+//! ([`KvCacheManager::reserve`] / [`KvCacheManager::append_token`]) or
+//! by a resident adapter's flattened LoRA stack
+//! ([`KvCacheManager::reserve_adapter`], rank-proportional page
+//! counts). KV growth and adapter page-in compete for the one free
+//! list, which is what lets a 1,000+ adapter catalog share a device:
+//! idle adapters are evicted ([`KvCacheManager::free_adapter`]) to
+//! make room for KV under pressure, and re-paged on the next request.
+//! The accounting invariant `free + kv_held + adapter_held == total`
+//! holds at every step ([`KvCacheManager::accounting_balanced`]) and is
+//! property-checked in `tests/prop_invariants.rs`.
+//!
 //! Layout: one page holds `page_size` token rows for **all** layers,
-//! K and V, i.e. `2 · layers · page_size · hidden` f32s.
+//! K and V, i.e. `2 · layers · page_size · hidden` f32s. Adapter holds
+//! use the same page granularity: a rank-`r` stack needs
+//! `ceil(8·hidden·r / page_elems)` pages (A and B for each of the four
+//! Q/K/V/O targets), so footprints are rank-proportional exactly as
+//! the scheduler and coordinator assume.
 //!
 //! The runtime reaches the pool **in place** (§Perf):
 //!
@@ -30,13 +48,14 @@ use std::collections::HashMap;
 
 use crate::runtime::KvWrite;
 
-/// Errors from the KV manager.
+/// Errors from the unified pool manager.
 #[derive(Debug, PartialEq)]
 pub enum KvError {
     OutOfPages { need: usize, free: usize },
     UnknownRequest(u64),
     TooLong(u64, usize),
     AlreadyAdmitted(u64),
+    AlreadyResident(u64),
 }
 
 impl std::fmt::Display for KvError {
@@ -52,6 +71,9 @@ impl std::fmt::Display for KvError {
             KvError::AlreadyAdmitted(id) => {
                 write!(f, "request {id} already holds KV pages")
             }
+            KvError::AlreadyResident(id) => {
+                write!(f, "adapter {id} already holds weight pages")
+            }
         }
     }
 }
@@ -61,6 +83,14 @@ impl std::error::Error for KvError {}
 struct RequestKv {
     pages: Vec<usize>,
     len: usize,
+}
+
+/// One resident adapter's weight pages: the flattened LoRA stack is
+/// chunked page-elems at a time across `pages` (block-table order),
+/// with `elems` real f32s (the last page is zero-padded).
+struct AdapterHold {
+    pages: Vec<usize>,
+    elems: usize,
 }
 
 /// Element offset of (layer, slot, K|V) inside a page of the layout
@@ -78,7 +108,8 @@ fn page_offset(
     (if is_v { half } else { 0 }) + layer * page_size * hidden + slot * hidden
 }
 
-/// The paged KV-cache manager.
+/// The unified paged pool manager: request KV and adapter weight
+/// residency draw pages from one bounded free list (see module docs).
 pub struct KvCacheManager {
     layers: usize,
     hidden: usize,
@@ -90,6 +121,8 @@ pub struct KvCacheManager {
     pool: Vec<Vec<f32>>,
     free: Vec<usize>,
     requests: HashMap<u64, RequestKv>,
+    /// Resident adapters' weight pages (the other page-owner class).
+    adapter_holds: HashMap<u64, AdapterHold>,
 }
 
 impl KvCacheManager {
@@ -110,6 +143,7 @@ impl KvCacheManager {
             pool: (0..n_pages).map(|_| vec![0.0; page_elems]).collect(),
             free: (0..n_pages).rev().collect(),
             requests: HashMap::new(),
+            adapter_holds: HashMap::new(),
         }
     }
 
@@ -136,6 +170,117 @@ impl KvCacheManager {
     /// Can a request of `tokens` prompt tokens be admitted right now?
     pub fn can_admit(&self, tokens: usize) -> bool {
         self.pages_for(tokens) <= self.free.len()
+    }
+
+    /// f32 elements per page.
+    pub fn page_elems(&self) -> usize {
+        2 * self.layers * self.page_size * self.hidden
+    }
+
+    /// Pages needed to hold `elems` flattened f32s (≥ 1).
+    pub fn pages_for_elems(&self, elems: usize) -> usize {
+        elems.max(1).div_ceil(self.page_elems())
+    }
+
+    /// Page in an adapter's flattened weight stack: allocate
+    /// `pages_for_elems(weights.len())` pages from the shared free list
+    /// and copy the weights into them chunk by chunk. Returns the page
+    /// count charged to the adapter. Fails typed — `AlreadyResident`
+    /// for a double page-in, `OutOfPages` when KV holds too much of the
+    /// pool (the caller evicts an idle adapter or defers).
+    pub fn reserve_adapter(&mut self, adapter: u64, weights: &[f32]) -> Result<usize, KvError> {
+        if self.adapter_holds.contains_key(&adapter) {
+            return Err(KvError::AlreadyResident(adapter));
+        }
+        let need = self.pages_for_elems(weights.len());
+        if need > self.free.len() {
+            return Err(KvError::OutOfPages {
+                need,
+                free: self.free.len(),
+            });
+        }
+        let at = self.free.len() - need;
+        let pages: Vec<usize> = self.free.split_off(at);
+        let chunk = self.page_elems();
+        for (ord, &p) in pages.iter().enumerate() {
+            let lo = (ord * chunk).min(weights.len());
+            let hi = ((ord + 1) * chunk).min(weights.len());
+            let page = &mut self.pool[p];
+            page[..hi - lo].copy_from_slice(&weights[lo..hi]);
+            // Zero the tail so a later partial overwrite never leaks a
+            // previous owner's rows through `adapter_weights`.
+            for v in page[hi - lo..].iter_mut() {
+                *v = 0.0;
+            }
+        }
+        self.adapter_holds.insert(
+            adapter,
+            AdapterHold {
+                pages,
+                elems: weights.len(),
+            },
+        );
+        Ok(need)
+    }
+
+    /// Evict an adapter's weight residency, returning its pages to the
+    /// shared free list. Returns the page count released, `None` if the
+    /// adapter was not resident (idempotent for callers racing evict
+    /// against uninstall).
+    pub fn free_adapter(&mut self, adapter: u64) -> Option<usize> {
+        let hold = self.adapter_holds.remove(&adapter)?;
+        let n = hold.pages.len();
+        self.free.extend(hold.pages);
+        Some(n)
+    }
+
+    /// Is the adapter's weight stack paged in?
+    pub fn adapter_resident(&self, adapter: u64) -> bool {
+        self.adapter_holds.contains_key(&adapter)
+    }
+
+    /// Pages held by one resident adapter (`None` if not resident).
+    pub fn adapter_pages(&self, adapter: u64) -> Option<usize> {
+        self.adapter_holds.get(&adapter).map(|h| h.pages.len())
+    }
+
+    /// Total pages held by adapter weight residency.
+    pub fn adapter_held_pages(&self) -> usize {
+        self.adapter_holds.values().map(|h| h.pages.len()).sum()
+    }
+
+    /// Total pages held by request KV.
+    pub fn kv_held_pages(&self) -> usize {
+        self.requests.values().map(|r| r.pages.len()).sum()
+    }
+
+    /// Resident adapter ids (unordered).
+    pub fn resident_adapters(&self) -> Vec<u64> {
+        self.adapter_holds.keys().copied().collect()
+    }
+
+    /// Gather a resident adapter's flattened weights back out of its
+    /// pages — the exact f32s passed to [`Self::reserve_adapter`], so
+    /// stacks rebuilt from the pool are value-identical to the host
+    /// copy and token streams stay bitwise stable across evict/re-page
+    /// cycles.
+    pub fn adapter_weights(&self, adapter: u64) -> Option<Vec<f32>> {
+        let hold = self.adapter_holds.get(&adapter)?;
+        let chunk = self.page_elems();
+        let mut out = Vec::with_capacity(hold.elems);
+        for (ord, &p) in hold.pages.iter().enumerate() {
+            let lo = (ord * chunk).min(hold.elems);
+            let hi = ((ord + 1) * chunk).min(hold.elems);
+            out.extend_from_slice(&self.pool[p][..hi - lo]);
+        }
+        Some(out)
+    }
+
+    /// The unified-pool conservation law: every page is free, KV-held,
+    /// or adapter-held — never two at once, never lost.
+    pub fn accounting_balanced(&self) -> bool {
+        self.free.len() + self.kv_held_pages() + self.adapter_held_pages()
+            == self.pool.len()
     }
 
     /// Admit `req` by reserving pages for a `len`-token prompt whose
@@ -691,6 +836,68 @@ mod tests {
             m.admit_from_prefill(1, &k, &k, 1, 8, 0, 33),
             Err(KvError::TooLong(1, 32))
         ));
+    }
+
+    #[test]
+    fn adapter_pages_roundtrip_and_share_the_pool() {
+        // mgr(): 8 pages of 2·2·4·4 = 64 elems each.
+        let mut m = mgr();
+        assert_eq!(m.page_elems(), 64);
+        let w: Vec<f32> = (0..150).map(|i| i as f32 * 0.5).collect();
+        // 150 elems → 3 pages.
+        assert_eq!(m.pages_for_elems(150), 3);
+        assert_eq!(m.reserve_adapter(7, &w).unwrap(), 3);
+        assert!(m.adapter_resident(7));
+        assert_eq!(m.adapter_pages(7), Some(3));
+        assert_eq!(m.adapter_held_pages(), 3);
+        assert_eq!(m.free_pages(), 5);
+        assert!(m.accounting_balanced());
+        // Readback is the exact flattened weights.
+        assert_eq!(m.adapter_weights(7).unwrap(), w);
+        // Double page-in is a typed error, not silent re-alloc.
+        assert_eq!(m.reserve_adapter(7, &w), Err(KvError::AlreadyResident(7)));
+        // KV and adapters compete for the same free list: 5 pages left
+        // admit 20 tokens but not 24.
+        assert!(m.can_admit(20));
+        assert!(!m.can_admit(24));
+        // Eviction returns the pages; the id is gone.
+        assert_eq!(m.free_adapter(7), Some(3));
+        assert_eq!(m.free_adapter(7), None);
+        assert!(!m.adapter_resident(7));
+        assert_eq!(m.free_pages(), 8);
+        assert!(m.accounting_balanced());
+    }
+
+    #[test]
+    fn adapter_reserve_fails_typed_under_kv_pressure() {
+        let mut m = KvCacheManager::new(2, 4, 4, 2, 32);
+        m.reserve(1, 5).unwrap(); // 2 of 2 pages to KV
+        assert_eq!(
+            m.reserve_adapter(9, &[1.0; 10]),
+            Err(KvError::OutOfPages { need: 1, free: 0 })
+        );
+        m.free_request(1).unwrap();
+        assert_eq!(m.reserve_adapter(9, &[1.0; 10]).unwrap(), 1);
+        // Now the adapter squeezes KV admission: one page left.
+        assert_eq!(m.kv_held_pages(), 0);
+        assert_eq!(m.adapter_held_pages(), 1);
+        assert!(m.can_admit(4));
+        assert!(!m.can_admit(5));
+        assert!(m.accounting_balanced());
+    }
+
+    #[test]
+    fn adapter_pages_zero_stale_tails() {
+        // A page freed by a bigger owner then reused by a smaller one
+        // must not leak the old rows through the gather.
+        let mut m = mgr();
+        m.reserve_adapter(1, &[9.0f32; 64]).unwrap();
+        m.free_adapter(1).unwrap();
+        let small = vec![2.0f32; 10];
+        m.reserve_adapter(2, &small).unwrap();
+        assert_eq!(m.adapter_weights(2).unwrap(), small);
+        assert!(m.adapter_weights(99).is_none());
+        assert_eq!(m.resident_adapters(), vec![2]);
     }
 
     #[test]

@@ -94,6 +94,7 @@ pub struct MetricsRecorder {
     cancelled: usize,
     cold: ColdStartStats,
     preempted: usize,
+    adapter_evicted: usize,
 }
 
 impl MetricsRecorder {
@@ -169,6 +170,20 @@ impl MetricsRecorder {
     /// memory-pressured servers.
     pub fn preemptions(&self) -> usize {
         self.preempted
+    }
+
+    /// Count a pressure eviction: an idle adapter's weight pages were
+    /// reclaimed from the unified pool (to page in a different adapter
+    /// or to extend KV under decode growth).
+    pub fn adapter_eviction(&mut self) {
+        self.adapter_evicted += 1;
+    }
+
+    /// Adapter pressure evictions so far — surfaced through
+    /// `ServerStats::adapter_evictions` so placement can see real memory
+    /// churn, not just slot pressure.
+    pub fn adapter_evictions(&self) -> usize {
+        self.adapter_evicted
     }
 
     /// A token was emitted for a request.
@@ -441,6 +456,9 @@ mod tests {
         m.assist_decode(0.25);
         m.preemption();
         assert_eq!(m.preemptions(), 1);
+        m.adapter_eviction();
+        m.adapter_eviction();
+        assert_eq!(m.adapter_evictions(), 2);
         let c = m.cold_start();
         assert_eq!(c.cold_admits, 2);
         assert_eq!(c.cpu_assisted, 1);

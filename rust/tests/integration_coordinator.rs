@@ -90,6 +90,7 @@ fn coordinator_beats_or_matches_static_with_live_migration() {
         // migration path runs within the 36-request window.
         min_imbalance: 1,
         mode: MigrationMode::Move,
+        ..Default::default()
     };
     let static_rep = synthetic::run("rank-aware", &cfg).expect("static run");
     let (coord_rep, coord) =

@@ -1,0 +1,140 @@
+//! Integration: ISSUE 7's unified paged device memory (always runs; no
+//! artifacts needed).
+//!
+//! The acceptance run drives a 1,024-adapter Zipf catalog over **one**
+//! native engine with a deliberately tight page pool, so adapter
+//! weights and request KV genuinely compete: the 8 residency slots and
+//! the 40-page pool together force idle-adapter evictions under load.
+//! The same workload over a roomy pool is the content oracle — paging
+//! adapters in and out may change *when* requests run, never *what*
+//! they generate, so every token stream must match bitwise.
+//!
+//! A direct engine-level test below pins the mechanism itself:
+//! pre-warmed weights hold pool pages, a request on a third adapter
+//! evicts the coldest idle one, and the page accounting stays balanced
+//! throughout.
+
+use caraserve::model::LoraSpec;
+use caraserve::runtime::{NativeConfig, NativeRuntime};
+use caraserve::server::cluster::synthetic::{self, SyntheticConfig};
+use caraserve::server::{
+    ColdStartMode, EngineConfig, InferenceServer, LifecycleState, ServeRequest,
+    ServingFront,
+};
+
+/// The 1,000+ adapter catalog on one engine. `skew: 1.2` gives the
+/// classic hot-head/long-tail mix, so the run touches far more distinct
+/// adapters than the 8 residency slots (let alone the 40-page pool)
+/// can hold at once. Cached cold starts keep every admission decision
+/// wall-clock independent, hence deterministic.
+fn catalog_cfg(kv_pages: usize) -> SyntheticConfig {
+    SyntheticConfig {
+        instances: 1,
+        requests: 64,
+        adapters: 1024,
+        seed: 11,
+        threads: 1,
+        cpu_workers: 0,
+        cold_start: ColdStartMode::Cached,
+        kv_pages,
+        polls_per_arrival: 1,
+        skew: 1.2,
+    }
+}
+
+#[test]
+fn thousand_adapter_catalog_pages_under_pressure_without_changing_streams() {
+    // Tight: 40 pages shared by KV (≤ 4 pages/request) and adapter
+    // weights (1–4 pages each across ranks 8..64). Roomy: effectively
+    // unbounded, the oracle.
+    let tight = synthetic::run("rank-aware", &catalog_cfg(40)).expect("tight run");
+    let roomy = synthetic::run("rank-aware", &catalog_cfg(4096)).expect("roomy run");
+
+    for rep in [&tight, &roomy] {
+        assert_eq!(rep.finished, rep.requests, "{}: request loss", rep.policy);
+        assert_eq!(rep.rejected, 0, "{}: spurious rejection", rep.policy);
+    }
+
+    // Pressure actually materialised: the tight pool paged at least one
+    // idle adapter's weights back out to make room.
+    assert!(
+        tight.adapter_evictions >= 1,
+        "no adapter eviction under a 40-page pool: {tight:?}"
+    );
+
+    // Bitwise equivalence: memory pressure reorders work, never content.
+    assert_eq!(tight.streams.len(), roomy.streams.len());
+    for (i, (got, want)) in tight.streams.iter().zip(&roomy.streams).enumerate() {
+        assert!(!want.is_empty(), "oracle stream {i} empty");
+        assert_eq!(got, want, "request {i}: pool pressure changed the stream");
+    }
+}
+
+#[test]
+fn prewarmed_weights_hold_pages_and_yield_to_live_traffic() {
+    // 12-page pool; rank-64 adapters cost 4 pages each on the tiny
+    // geometry, so two pre-warmed adapters (8 pages) plus one live
+    // request's KV leave no room for a third adapter without eviction.
+    let mut server = InferenceServer::new(
+        NativeRuntime::new(NativeConfig::tiny()),
+        EngineConfig {
+            cold_start: ColdStartMode::Cached,
+            kv_pages: 12,
+            ..Default::default()
+        },
+    )
+    .expect("server");
+    for a in 0..3u64 {
+        server
+            .install_adapter(&LoraSpec::standard(a, 64, "tiny"))
+            .expect("install");
+    }
+    assert!(server.prewarm_adapter(0).expect("prewarm 0"));
+    assert!(server.prewarm_adapter(1).expect("prewarm 1"));
+    let before = server.stats();
+    assert_eq!(before.adapter_held_pages, 8, "{before:?}");
+    assert_eq!(before.adapter_evictions, 0, "{before:?}");
+
+    // A request on the un-warmed adapter 2 must evict an idle resident
+    // adapter to page its own weights in — and still finish.
+    let h = server.submit(ServeRequest::new(2, vec![3; 8]).max_new_tokens(4));
+    server.run_until_idle().expect("run");
+    assert_eq!(h.state(), LifecycleState::Finished);
+    assert_eq!(h.tokens().len(), 4);
+
+    let after = server.stats();
+    assert!(
+        after.adapter_evictions >= 1,
+        "no eviction despite 12-page pool: {after:?}"
+    );
+    // Accounting: everything held fits the pool, and the drained
+    // request returned its KV pages.
+    assert_eq!(after.kv_held_pages, 0, "{after:?}");
+    assert!(
+        after.adapter_held_pages <= after.pool_pages,
+        "{after:?}"
+    );
+
+    // The evicted adapter still serves — it pages back in on demand,
+    // with identical (seeded) weights, so a fresh roomy engine agrees
+    // on the stream.
+    let h0 = server.submit(ServeRequest::new(0, vec![3; 8]).max_new_tokens(4));
+    server.run_until_idle().expect("re-page run");
+    assert_eq!(h0.state(), LifecycleState::Finished);
+
+    let mut roomy = InferenceServer::new(
+        NativeRuntime::new(NativeConfig::tiny()),
+        EngineConfig {
+            cold_start: ColdStartMode::Cached,
+            kv_pages: 512,
+            ..Default::default()
+        },
+    )
+    .expect("roomy server");
+    roomy
+        .install_adapter(&LoraSpec::standard(0, 64, "tiny"))
+        .expect("install");
+    let hr = roomy.submit(ServeRequest::new(0, vec![3; 8]).max_new_tokens(4));
+    roomy.run_until_idle().expect("roomy run");
+    assert_eq!(h0.tokens(), hr.tokens(), "re-paging changed the weights");
+}

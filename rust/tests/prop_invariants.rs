@@ -155,6 +155,165 @@ fn prop_kv_manager_conserves_pages() {
 }
 
 #[test]
+fn prop_unified_pool_accounting_never_leaks() {
+    // ISSUE 7 tentpole invariant: with adapter weights paging through
+    // the same pool as KV blocks, every page is exactly one of free,
+    // KV-held, or adapter-held after *every* operation — under random
+    // interleavings of request admits/appends/frees with adapter
+    // page-ins/page-outs, including legitimately failing ops
+    // (out-of-pages, already-resident, unknown adapter).
+    let cfg = Config {
+        cases: 64,
+        ..Default::default()
+    };
+    let gen = prop::vec_of(prop::usize_in(0, 1000), 1, 80);
+    prop::forall(&cfg, &gen, |ops| {
+        let layers = 2;
+        let hidden = 8;
+        let mut kv = KvCacheManager::new(layers, hidden, 4, 16, 64);
+        let total = kv.total_pages();
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        let k = vec![0.5f32; layers * 1 * 8 * hidden];
+        for &op in ops {
+            match op % 5 {
+                0 => {
+                    let len = 1 + op / 13 % 8;
+                    if kv.can_admit(len) {
+                        kv.admit_from_prefill(next_id, &k, &k, 1, 8, 0, len)
+                            .map_err(|e| format!("admit: {e}"))?;
+                        live.push(next_id);
+                        next_id += 1;
+                    }
+                }
+                1 => {
+                    if let Some(&id) = live.first() {
+                        let row = vec![0.1f32; layers * hidden];
+                        let _ = kv.append_token(id, &row, &row, 1, 0);
+                    }
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let id = live.remove(0);
+                        kv.free_request(id).map_err(|e| format!("free: {e}"))?;
+                    }
+                }
+                3 => {
+                    // Page an adapter in: ranks 2/4/8 → 1/2/4 pages on
+                    // this geometry (page_elems = 128). AlreadyResident
+                    // and OutOfPages are legal outcomes; neither may
+                    // corrupt the accounting.
+                    let adapter = (op / 7 % 6) as u64;
+                    let rank = [2usize, 4, 8][op / 11 % 3];
+                    let w = vec![0.25f32; 8 * hidden * rank];
+                    let _ = kv.reserve_adapter(adapter, &w);
+                }
+                _ => {
+                    let adapter = (op / 7 % 6) as u64;
+                    let _ = kv.free_adapter(adapter);
+                }
+            }
+            if !kv.accounting_balanced() {
+                return Err(format!(
+                    "accounting unbalanced after op {op}: free={} kv={} adapter={} total={total}",
+                    kv.free_pages(),
+                    kv.kv_held_pages(),
+                    kv.adapter_held_pages()
+                ));
+            }
+            let held = kv.kv_held_pages() + kv.adapter_held_pages();
+            if kv.free_pages() + held != total {
+                return Err(format!(
+                    "pages leaked mid-stream: {} free + {held} held != {total}",
+                    kv.free_pages()
+                ));
+            }
+        }
+        // Drain both kinds of residency; the pool must come back whole.
+        for id in live {
+            kv.free_request(id).map_err(|e| format!("final free: {e}"))?;
+        }
+        for a in kv.resident_adapters() {
+            if kv.free_adapter(a).is_none() {
+                return Err(format!("resident adapter {a} refused to free"));
+            }
+        }
+        if kv.free_pages() != total {
+            return Err(format!(
+                "pages not conserved after drain: {} != {total}",
+                kv.free_pages()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn interleaved_request_and_adapter_paging_conserve_the_pool() {
+    // Exhaustive schedule exploration of one request thread (admit →
+    // append → free) against one adapter-paging thread (reserve →
+    // free): the unified-pool conservation law must hold after every
+    // atomic step, in every interleaving, and the pool must be whole
+    // at the end of every schedule.
+    use caraserve::testkit::interleave::{self, always, ScriptModel};
+    let factory = || {
+        let kv = KvCacheManager::new(2, 8, 4, 16, 16);
+        ScriptModel::new(kv)
+            .thread(vec![
+                always(|kv: &mut KvCacheManager| {
+                    let k = vec![0.5f32; 2 * 8 * 8];
+                    let _ = kv.admit_from_prefill(1, &k, &k, 1, 8, 0, 6);
+                }),
+                always(|kv: &mut KvCacheManager| {
+                    let row = vec![0.1f32; 2 * 8];
+                    let _ = kv.append_token(1, &row, &row, 1, 0);
+                }),
+                always(|kv: &mut KvCacheManager| {
+                    let _ = kv.free_request(1);
+                }),
+            ])
+            .thread(vec![
+                always(|kv: &mut KvCacheManager| {
+                    // rank-4 adapter: 2 pages on this geometry.
+                    let w = vec![0.25f32; 8 * 8 * 4];
+                    let _ = kv.reserve_adapter(7, &w);
+                }),
+                always(|kv: &mut KvCacheManager| {
+                    let _ = kv.free_adapter(7);
+                }),
+            ])
+            .invariant(|kv: &KvCacheManager| {
+                if !kv.accounting_balanced() {
+                    return Err("accounting unbalanced".into());
+                }
+                let held = kv.kv_held_pages() + kv.adapter_held_pages();
+                if kv.free_pages() + held != kv.total_pages() {
+                    return Err(format!(
+                        "leak: {} free + {held} held != {}",
+                        kv.free_pages(),
+                        kv.total_pages()
+                    ));
+                }
+                Ok(())
+            })
+            .finally(|kv: &KvCacheManager| {
+                if kv.free_pages() == kv.total_pages() {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "pool not whole at end: {} != {}",
+                        kv.free_pages(),
+                        kv.total_pages()
+                    ))
+                }
+            })
+    };
+    let report = interleave::explore(factory, 10_000);
+    assert!(report.ok(), "{report}");
+    assert!(report.exhausted, "schedule space unexpectedly large");
+}
+
+#[test]
 fn prop_simulation_conserves_requests_and_orders_tokens() {
     // Every generated request completes exactly once, with monotone
     // token times and ttft ≤ latency — under random workloads and modes.
