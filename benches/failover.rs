@@ -1,0 +1,170 @@
+//! Failover under injected faults: the ISSUE 8 tentpole measured end
+//! to end on live native engines.
+//!
+//! Each scenario drives the shared synthetic workload through a
+//! 3-engine cluster with a seeded fault plan wrapped around the victim
+//! backends, then reconciles every completed stream against a no-fault
+//! oracle run of the same config. The acceptance shape: **zero
+//! diverged streams** in every scenario — a backend death mid-decode
+//! either fails over bitwise-identically or terminates the request
+//! with a typed rejection — plus nonzero shedding when the whole
+//! cluster is down (graceful degradation, not queue collapse).
+//!
+//! Emits `BENCH_failover.json` in the working directory (plus the
+//! standard `target/bench-reports/failover.json`); CI runs `--smoke`
+//! to keep the file fresh.
+
+use caraserve::server::cluster::synthetic::{self, ChaosConfig, SyntheticConfig};
+use caraserve::server::{ColdStartMode, RetryPolicy};
+use caraserve::testkit::faults::FaultPlan;
+use caraserve::util::json::{self, Json};
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("CARA_BENCH_FAST").is_ok();
+    let policy = "rank-aware";
+    let requests = if smoke { 24 } else { 64 };
+    let cfg = SyntheticConfig {
+        instances: 3,
+        requests,
+        adapters: 12,
+        seed: 11,
+        threads: 1,
+        cpu_workers: 0,
+        // Cached admits keep the streams wall-clock-independent, which
+        // is what the bitwise oracle comparison measures.
+        cold_start: ColdStartMode::Cached,
+        kv_pages: 256,
+        polls_per_arrival: 2,
+        skew: 0.0,
+    };
+
+    let kill = FaultPlan::seeded_mid_decode_kill(cfg.seed, 2, 10);
+    let die = FaultPlan::parse("die@poll:1").map_err(|e| anyhow::anyhow!(e))?;
+    let scenarios: Vec<(&str, ChaosConfig)> = vec![
+        (
+            "kill 1/3 mid-decode",
+            ChaosConfig {
+                faults: vec![(0, kill.clone())],
+                retry: None,
+            },
+        ),
+        (
+            "transient poll errors",
+            ChaosConfig {
+                faults: vec![(
+                    0,
+                    FaultPlan::parse("error@poll:2,error@poll:4")
+                        .map_err(|e| anyhow::anyhow!(e))?,
+                )],
+                retry: None,
+            },
+        ),
+        (
+            "kill 2/3 mid-decode",
+            ChaosConfig {
+                faults: vec![(0, kill.clone()), (1, kill)],
+                retry: None,
+            },
+        ),
+        (
+            "all 3 dead at first poll",
+            ChaosConfig {
+                faults: vec![(0, die.clone()), (1, die.clone()), (2, die)],
+                retry: Some(RetryPolicy {
+                    down_after: 1,
+                    ..Default::default()
+                }),
+            },
+        ),
+    ];
+
+    let mut report = caraserve::bench::Report::new(
+        "Failover under injected faults (3 native engines, bitwise oracle check)",
+        &[
+            "scenario",
+            "done",
+            "stable",
+            "diverged",
+            "failed",
+            "failovers",
+            "shed",
+            "health",
+            "wall s",
+        ],
+    );
+
+    let mut runs = Vec::new();
+    let mut total_diverged = 0usize;
+    let mut dead_cluster_shed = 0usize;
+    for (name, chaos) in &scenarios {
+        let (rep, oracle) = synthetic::run_chaos(policy, &cfg, chaos)?;
+        total_diverged += rep.diverged;
+        if name.starts_with("all 3 dead") {
+            dead_cluster_shed += rep.shed;
+        }
+        let health: Vec<String> = rep.health.iter().map(|h| format!("{h:?}")).collect();
+        report.row(vec![
+            name.to_string(),
+            format!("{}/{}", rep.base.finished, rep.base.requests),
+            rep.stable.to_string(),
+            rep.diverged.to_string(),
+            rep.failed.to_string(),
+            rep.failovers.to_string(),
+            rep.shed.to_string(),
+            health.join("/"),
+            format!("{:.2}", rep.base.wall_s),
+        ]);
+        runs.push(json::obj(vec![
+            ("scenario", json::s(name)),
+            ("requests", json::num(rep.base.requests as f64)),
+            ("finished", json::num(rep.base.finished as f64)),
+            ("rejected", json::num(rep.base.rejected as f64)),
+            ("stable", json::num(rep.stable as f64)),
+            ("diverged", json::num(rep.diverged as f64)),
+            ("failed", json::num(rep.failed as f64)),
+            ("failovers", json::num(rep.failovers as f64)),
+            ("shed", json::num(rep.shed as f64)),
+            (
+                "health",
+                Json::Arr(health.iter().map(|h| json::s(h)).collect()),
+            ),
+            ("wall_s", json::num(rep.base.wall_s)),
+            ("oracle_finished", json::num(oracle.finished as f64)),
+            ("oracle_wall_s", json::num(oracle.wall_s)),
+        ]));
+    }
+
+    report.note(format!(
+        "{total_diverged} diverged streams across all scenarios (acceptance: 0 — \
+         every completed stream is bitwise-identical to its no-fault oracle); \
+         {dead_cluster_shed} requests shed by the dead-cluster degradation gate \
+         (acceptance: ≥ 1)"
+    ));
+    report.print();
+    report.save("failover").ok();
+
+    let top = json::obj(vec![
+        ("bench", json::s("failover")),
+        ("smoke", json::s(if smoke { "true" } else { "false" })),
+        ("policy", json::s(policy)),
+        ("requests", json::num(requests as f64)),
+        ("instances", json::num(cfg.instances as f64)),
+        ("total_diverged", json::num(total_diverged as f64)),
+        ("dead_cluster_shed", json::num(dead_cluster_shed as f64)),
+        ("runs", Json::Arr(runs)),
+    ]);
+    std::fs::write("BENCH_failover.json", top.to_string_pretty())
+        .expect("write BENCH_failover.json");
+    println!("\nwrote BENCH_failover.json");
+
+    anyhow::ensure!(
+        total_diverged == 0,
+        "failover is not bitwise-stable: {total_diverged} diverged streams"
+    );
+    anyhow::ensure!(
+        dead_cluster_shed >= 1,
+        "dead-cluster degradation gate never shed"
+    );
+    Ok(())
+}

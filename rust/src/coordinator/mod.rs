@@ -35,6 +35,8 @@
 
 pub mod placement;
 
+use std::path::Path;
+
 use anyhow::Result;
 
 use crate::model::LoraSpec;
@@ -179,6 +181,59 @@ impl Coordinator {
     /// Migration decisions so far, oldest first.
     pub fn migration_log(&self) -> &[MigrationEvent] {
         &self.log
+    }
+
+    /// Persist the control-plane state to `path`. The
+    /// [`GlobalRegistry`] snapshot (metadata, placements, demand
+    /// counters, decayed scores) is the coordinator's full durable
+    /// state: everything else — health, routing counters, the rebalance
+    /// clock — is soft state a restarted coordinator rebuilds from
+    /// traffic. Call on a cadence (or before shutdown) so a
+    /// crash-restart resumes from the last snapshot.
+    pub fn save_state(&self, path: &Path) -> std::io::Result<()> {
+        self.cluster.registry().save(path)
+    }
+
+    /// Rebuild a coordinator after a crash-restart: load the registry
+    /// snapshot from `path`, put the control plane over `backends`
+    /// (fresh, empty engines), and re-install every recorded placement
+    /// so the restarted cluster serves exactly the adapters — on
+    /// exactly the servers — the dead coordinator had placed.
+    pub fn load_state(
+        path: &Path,
+        backends: Vec<Box<dyn ServingFront>>,
+        policy: Box<dyn crate::scheduler::Policy>,
+        cfg: CoordinatorConfig,
+    ) -> Result<Coordinator> {
+        let registry = std::sync::Arc::new(GlobalRegistry::load(path)?);
+        let cluster = ClusterFront::new(backends, policy, registry);
+        let mut coord = Coordinator::new(cluster, cfg);
+        coord.restore_placements()?;
+        Ok(coord)
+    }
+
+    /// Re-install every placement recorded in the registry onto the
+    /// current backends. Used after a crash-restart, when the registry
+    /// remembers the placements but the (restarted) backends came up
+    /// empty. Idempotent: installing an already-hosted adapter
+    /// overwrites in place, and the registry's placement sets don't
+    /// grow duplicates.
+    pub fn restore_placements(&mut self) -> Result<usize> {
+        let registry = self.cluster.registry().clone();
+        let mut restored = 0;
+        for id in registry.ids() {
+            let servers = registry.servers_for(id);
+            if servers.is_empty() {
+                continue;
+            }
+            let spec = self.spec_of(id)?;
+            for server in servers {
+                self.cluster.install_on(server, &spec)?;
+                restored += 1;
+            }
+        }
+        self.stats.initial_placements += restored;
+        Ok(restored)
     }
 
     /// The registry's current view as placement-policy inputs.
@@ -615,6 +670,61 @@ mod tests {
         assert_eq!(stats.migrations, 1);
         assert_eq!(stats.retirements, 0);
         assert_eq!(coord.cluster().registry().servers_for(0), vec![0, 1]);
+    }
+
+    #[test]
+    fn crash_restart_restores_placements_and_keeps_migrating() {
+        let cfg = CoordinatorConfig {
+            min_imbalance: 2,
+            ..Default::default()
+        };
+        let mut coord = coordinator(2, 4, cfg.clone());
+        coord.place_and_prewarm().unwrap();
+        // Drive a full migration (replicate + drained retirement) so the
+        // saved state is not just the initial placement.
+        for _ in 0..6 {
+            coord.submit(ServeRequest::new(0, vec![1; 16]).max_new_tokens(2));
+        }
+        coord.tick().unwrap();
+        coord.run_until_idle().unwrap();
+        coord.tick().unwrap();
+        assert_eq!(coord.coordinator_stats().retirements, 1);
+        let registry = coord.cluster().registry();
+        let before: Vec<(u64, Vec<usize>)> = registry
+            .ids()
+            .into_iter()
+            .map(|id| (id, registry.servers_for(id)))
+            .collect();
+        let dir = std::env::temp_dir().join("caraserve-coordinator-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("restart_state.json");
+        coord.save_state(&path).unwrap();
+        drop(coord); // crash: every in-memory structure is gone
+
+        // Restart over fresh, empty backends from the snapshot alone.
+        let backends: Vec<Box<dyn ServingFront>> =
+            (0..2).map(|_| Box::new(sim_backend()) as Box<dyn ServingFront>).collect();
+        let mut coord =
+            Coordinator::load_state(&path, backends, Box::new(MostIdle), cfg).unwrap();
+        let registry = coord.cluster().registry();
+        let after: Vec<(u64, Vec<usize>)> = registry
+            .ids()
+            .into_iter()
+            .map(|id| (id, registry.servers_for(id)))
+            .collect();
+        assert_eq!(before, after, "restart changed placements");
+        // The restored cluster serves every adapter and the migration
+        // engine keeps working against the restored demand counters.
+        for id in 0..4 {
+            assert!(coord.stats().can_serve(id), "adapter {id}");
+        }
+        for _ in 0..6 {
+            coord.submit(ServeRequest::new(1, vec![1; 16]).max_new_tokens(2));
+        }
+        coord.tick().unwrap();
+        assert!(coord.coordinator_stats().migrations >= 1);
+        coord.run_until_idle().unwrap();
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

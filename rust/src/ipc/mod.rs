@@ -8,7 +8,9 @@
 //! - [`shm`] — a real `mmap(MAP_SHARED | MAP_ANONYMOUS)` region carved
 //!   into fixed slots, each with a seqlock-style state word; works
 //!   unchanged across `fork()`.
-//! - [`socket`] — the Unix-domain-socket baseline used by Fig 17.
+//! - [`socket`] — the Unix-domain-socket baseline used by Fig 17, with
+//!   caller-supplied receive deadlines and a typed
+//!   [`socket::SocketError::TimedOut`] for stalled-peer detection.
 //! - [`signal`] — futex-backed doorbells: the "asynchronous signaling"
 //!   half of the paper's fused memcpy+signal operator.
 

@@ -7,6 +7,47 @@
 
 use std::io::{Read, Write};
 use std::os::unix::net::UnixStream;
+use std::time::{Duration, Instant};
+
+/// Failure of a deadline-bounded receive ([`SocketChannel::recv_deadline`]).
+///
+/// `TimedOut` is a *typed* variant — callers (the engine's worker-pool
+/// supervisor, the failover machinery) branch on it to declare a peer
+/// stalled, which an opaque `io::Error` string would make fragile.
+#[derive(Debug)]
+pub enum SocketError {
+    /// The peer produced no complete frame within the deadline. A frame
+    /// half-received when the deadline expires also lands here: a peer
+    /// that wedges mid-payload is exactly as stalled as one that never
+    /// wrote, and the caller's recovery (declare it dead, fail over) is
+    /// the same.
+    TimedOut {
+        /// How long the receive actually waited.
+        waited: Duration,
+    },
+    /// Any other I/O failure (peer closed, kernel error).
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for SocketError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SocketError::TimedOut { waited } => {
+                write!(f, "socket receive timed out after {waited:?}")
+            }
+            SocketError::Io(e) => write!(f, "socket i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SocketError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SocketError::TimedOut { .. } => None,
+            SocketError::Io(e) => Some(e),
+        }
+    }
+}
 
 /// One end of a framed f32 message channel over a Unix socket pair.
 pub struct SocketChannel {
@@ -40,6 +81,90 @@ impl SocketChannel {
         out.reserve(len);
         for chunk in bytes.chunks_exact(4) {
             out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        Ok(())
+    }
+
+    /// Receive one framed message, giving up after `deadline` — the
+    /// caller supplies the budget (derived from its SLO or retry
+    /// policy), the channel enforces it. On [`SocketError::TimedOut`]
+    /// the channel stays usable: blocking mode is restored and a frame
+    /// the peer sends later is received normally (any half-read frame
+    /// bytes are consumed by the failed call, so only use the channel
+    /// again if the protocol re-synchronizes — in practice a stalled
+    /// worker is torn down, which is the point of the typed error).
+    pub fn recv_deadline(
+        &mut self,
+        out: &mut Vec<f32>,
+        deadline: Duration,
+    ) -> Result<(), SocketError> {
+        let start = Instant::now();
+        let res = self.recv_deadline_inner(out, start, deadline);
+        // Restore blocking mode whatever happened, so plain `recv` on
+        // this channel keeps its blocking contract.
+        let _ = self.stream.set_read_timeout(None);
+        res
+    }
+
+    fn recv_deadline_inner(
+        &mut self,
+        out: &mut Vec<f32>,
+        start: Instant,
+        deadline: Duration,
+    ) -> Result<(), SocketError> {
+        let mut len_buf = [0u8; 4];
+        self.read_exact_by(&mut len_buf, start, deadline)?;
+        let len = u32::from_le_bytes(len_buf) as usize;
+        let mut bytes = vec![0u8; len * 4];
+        self.read_exact_by(&mut bytes, start, deadline)?;
+        out.clear();
+        out.reserve(len);
+        for chunk in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        Ok(())
+    }
+
+    /// `read_exact` against an absolute deadline: each kernel wait gets
+    /// the *remaining* budget (a peer trickling bytes can't reset the
+    /// clock by staying barely alive), and short reads accumulate until
+    /// the buffer fills or time runs out.
+    fn read_exact_by(
+        &mut self,
+        buf: &mut [u8],
+        start: Instant,
+        deadline: Duration,
+    ) -> Result<(), SocketError> {
+        let mut filled = 0;
+        while filled < buf.len() {
+            let left = deadline
+                .checked_sub(start.elapsed())
+                .filter(|d| !d.is_zero())
+                .ok_or(SocketError::TimedOut {
+                    waited: start.elapsed(),
+                })?;
+            self.stream
+                .set_read_timeout(Some(left))
+                .map_err(SocketError::Io)?;
+            match self.stream.read(&mut buf[filled..]) {
+                Ok(0) => {
+                    return Err(SocketError::Io(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "peer closed mid-frame",
+                    )))
+                }
+                Ok(n) => filled += n,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Err(SocketError::TimedOut {
+                        waited: start.elapsed(),
+                    })
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(SocketError::Io(e)),
+            }
         }
         Ok(())
     }
@@ -86,5 +211,62 @@ mod tests {
         let mut got = vec![1.0];
         b.recv(&mut got).unwrap();
         assert!(got.is_empty());
+    }
+
+    #[test]
+    fn recv_deadline_times_out_on_a_stalled_peer() {
+        let (_a, mut b) = SocketChannel::pair().unwrap();
+        let mut got = Vec::new();
+        let start = std::time::Instant::now();
+        match b.recv_deadline(&mut got, Duration::from_millis(30)) {
+            Err(SocketError::TimedOut { waited }) => {
+                // ≥ the deadline minus kernel timer granularity.
+                assert!(waited >= Duration::from_millis(20), "{waited:?}");
+            }
+            other => panic!("expected TimedOut, got {other:?}"),
+        }
+        // The wait is bounded by the deadline, not the peer's mood.
+        assert!(start.elapsed() < Duration::from_secs(2));
+    }
+
+    #[test]
+    fn recv_deadline_times_out_mid_frame() {
+        let (mut a, mut b) = SocketChannel::pair().unwrap();
+        // Peer writes the length header and half the payload, then
+        // wedges — the budget covers the whole frame, so this is a
+        // timeout, not a success with a short buffer.
+        a.stream.write_all(&4u32.to_le_bytes()).unwrap();
+        a.stream.write_all(&[0u8; 8]).unwrap();
+        let mut got = Vec::new();
+        assert!(matches!(
+            b.recv_deadline(&mut got, Duration::from_millis(30)),
+            Err(SocketError::TimedOut { .. })
+        ));
+    }
+
+    #[test]
+    fn recv_deadline_receives_a_prompt_frame_and_restores_blocking() {
+        let (mut a, mut b) = SocketChannel::pair().unwrap();
+        a.send(&[1.0, 2.0]).unwrap();
+        let mut got = Vec::new();
+        b.recv_deadline(&mut got, Duration::from_secs(5)).unwrap();
+        assert_eq!(got, vec![1.0, 2.0]);
+        // The channel stays usable with the blocking API afterwards.
+        a.send(&[3.0]).unwrap();
+        b.recv(&mut got).unwrap();
+        assert_eq!(got, vec![3.0]);
+    }
+
+    #[test]
+    fn recv_deadline_reports_peer_close_as_io_not_timeout() {
+        let (a, mut b) = SocketChannel::pair().unwrap();
+        drop(a);
+        let mut got = Vec::new();
+        match b.recv_deadline(&mut got, Duration::from_secs(5)) {
+            Err(SocketError::Io(e)) => {
+                assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof);
+            }
+            other => panic!("expected Io(UnexpectedEof), got {other:?}"),
+        }
     }
 }

@@ -64,6 +64,20 @@
 //!   [`scheduler::Policy`], re-routes on backend refusal, fans out
 //!   cancellation, and — being a `ServingFront` itself — drops into any
 //!   driver written for one engine (`caraserve cluster` runs it live).
+//!   It is also the fault boundary: backend panics are caught at the
+//!   poll edge, a Healthy → Suspect → Down → Probation health machine
+//!   (knobs in [`server::RetryPolicy`]) quarantines failing backends,
+//!   in-flight requests fail over to a survivor with **bitwise-
+//!   identical** client streams (the resume token is rebuilt from the
+//!   client-side channel, never the dead backend), and when no healthy
+//!   backend remains, admission sheds by priority class with typed
+//!   `Overloaded` rejections instead of queueing into a dead cluster.
+//!   Faults are injected deterministically by
+//!   [`testkit::faults::ChaosFront`] — a `ServingFront` decorator
+//!   executing a seeded [`testkit::faults::FaultPlan`]
+//!   (`panic|error|die|stall|slow @ submit|poll|decode|load : n`) —
+//!   and `caraserve chaos` drives the kill-mid-decode acceptance run
+//!   against a no-fault oracle live.
 //! - [`coordinator::Coordinator`] — the §3 global coordinator over a
 //!   `ClusterFront`: computes registry-driven placements (popularity ×
 //!   rank × slot pressure), pre-warms the hot head before traffic, and
@@ -72,7 +86,10 @@
 //!   (`install_adapter` / `uninstall_adapter` / `prewarm_adapter`) —
 //!   uninstall refuses while requests are in flight, so migrations
 //!   never perturb a live token stream (`caraserve coordinator`
-//!   compares static vs coordinated placement live).
+//!   compares static vs coordinated placement live). The control plane
+//!   is crash-restartable: `save_state` snapshots the
+//!   [`scheduler::registry::GlobalRegistry`] and `load_state` rebuilds
+//!   an identically-placed coordinator over fresh backends.
 //! - [`sim::SimFront`] — the discrete-event simulator behind the same
 //!   API; [`sim::Simulation`] runs calibrated cluster experiments.
 //! - [`scheduler::RankAwareScheduler`] — Algorithm 1 over a cluster,

@@ -22,6 +22,12 @@
 //!   head-to-head against the static placement baseline on a skewed
 //!   (`--skew`) workload, printing both rows plus the coordinator's
 //!   placement/migration counters. `--smoke` is the CI configuration.
+//! - `chaos`     — the failover acceptance drill: the same live cluster
+//!   with a fault plan injected into one backend (default: a seeded
+//!   panic mid-decode), reconciled stream-for-stream against a no-fault
+//!   oracle run. Exits non-zero if any completed stream diverged from
+//!   the oracle or a panic escaped containment. `--smoke` is the CI
+//!   configuration.
 //! - `simulate`  — run a single-instance simulation of one §7.2 workload.
 //! - `schedule`  — run the §7.5 cluster scheduling simulation.
 //! - `profile`   — fit the §5 performance models and print (α, β, R²).
@@ -59,6 +65,13 @@ subcommands:
             --skew F --migrate-interval N --prewarm K --replicas N
             --mode cached|ondemand|caraserve --cpu-workers N --threads N
             --kv-pages N --pool-pages N --pace N --seed N --smoke
+  chaos     --instances N --policy NAME --requests N --adapters N
+            --fault [server:]kind@site:n[,...] --seed N --retries N
+            --mode cached|ondemand|caraserve --kv-pages N --pool-pages N
+            --pace N --smoke
+            (fault kinds: panic|error|die|stall|slow; sites:
+             submit|poll|decode|load; default: seeded panic mid-decode
+             on server 0; exits non-zero on any diverged stream)
   simulate  --mode cached|ondmd|s-lora|caraserve --rps F --rank N --secs F
   schedule  --policy rank-aware|most-idle|first-fit|random --instances N
             --kernel bgmv|mbgmv --rps F --secs F
@@ -102,6 +115,8 @@ fn run() -> anyhow::Result<()> {
         "slo-ttft-ms",
         "slo-tpot-ms",
         "skew",
+        "fault",
+        "retries",
         "migrate-interval",
         "prewarm",
         "replicas",
@@ -114,6 +129,7 @@ fn run() -> anyhow::Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("cluster") => cmd_cluster(&args),
         Some("coordinator") => cmd_coordinator(&args),
+        Some("chaos") => cmd_chaos(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("schedule") => cmd_schedule(&args),
         Some("profile") => cmd_profile(&args),
@@ -548,6 +564,108 @@ fn cmd_coordinator(args: &Args) -> anyhow::Result<()> {
             "coordinator fell behind"
         }
     );
+    Ok(())
+}
+
+fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
+    use caraserve::server::cluster::synthetic::{self, ChaosConfig, SyntheticConfig};
+    use caraserve::server::{ColdStartMode, RetryPolicy};
+    use caraserve::testkit::faults::FaultPlan;
+
+    let smoke = args.flag("smoke");
+    let mode = match args.opt_or("mode", "caraserve").as_str() {
+        "cached" => ColdStartMode::Cached,
+        "ondemand" | "ondmd" => ColdStartMode::OnDemand,
+        _ => ColdStartMode::CaraServe,
+    };
+    let cfg = SyntheticConfig {
+        instances: args
+            .opt_parse_or("instances", if smoke { 2 } else { 3 })
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        requests: args
+            .opt_parse_or("requests", if smoke { 12 } else { 32 })
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        adapters: args
+            .opt_parse_or("adapters", 12)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        seed: args.opt_parse_or("seed", 1).map_err(|e| anyhow::anyhow!("{e}"))?,
+        threads: args
+            .opt_parse_or("threads", 1)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        // Chaos runs compare streams, not latency: keep the data plane
+        // lean by default.
+        cpu_workers: args
+            .opt_parse_or("cpu-workers", 0)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        cold_start: mode,
+        kv_pages: match args
+            .opt_parse("pool-pages")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+        {
+            Some(pages) => pages,
+            None => args
+                .opt_parse_or("kv-pages", 256)
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+        },
+        polls_per_arrival: args
+            .opt_parse_or("pace", 2)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        skew: args
+            .opt_parse_or("skew", 0.0)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+    };
+    // `--fault [server:]plan` — a leading all-digit field is the victim
+    // backend index (the fault syntax itself uses `:` for counts, so
+    // only a *numeric* first field can be a server prefix).
+    let (victim, plan) = match args.opt("fault") {
+        Some(spec) => match spec.split_once(':') {
+            Some((pre, rest)) if !pre.is_empty() && pre.chars().all(|c| c.is_ascii_digit()) => {
+                (pre.parse::<usize>()?, FaultPlan::parse(rest).map_err(|e| anyhow::anyhow!(e))?)
+            }
+            _ => (0, FaultPlan::parse(&spec).map_err(|e| anyhow::anyhow!(e))?),
+        },
+        // The canonical drill: kill server 0 at a seeded decode step.
+        None => (0, FaultPlan::seeded_mid_decode_kill(cfg.seed, 2, 10)),
+    };
+    let retry = args
+        .opt_parse("retries")
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .map(|max_reroutes| RetryPolicy {
+            max_reroutes,
+            ..Default::default()
+        });
+    let chaos = ChaosConfig {
+        faults: vec![(victim, plan.clone())],
+        retry,
+    };
+    let policy = args.opt_or("policy", "rank-aware");
+
+    println!(
+        "chaos: {} native engines, {} requests, {} adapters, mode {mode:?}, \
+         policy {policy}, seed {}",
+        cfg.instances, cfg.requests, cfg.adapters, cfg.seed
+    );
+    println!("fault: server {victim} ← {plan}");
+    let (rep, oracle) = synthetic::run_chaos(&policy, &cfg, &chaos)?;
+    println!(
+        "oracle: {} finished, {} rejected (no faults)",
+        oracle.finished, oracle.rejected
+    );
+    println!(
+        "chaos:  {} finished, {} rejected — {} bitwise-stable, {} diverged, \
+         {} failed by fault",
+        rep.base.finished, rep.base.rejected, rep.stable, rep.diverged, rep.failed
+    );
+    println!(
+        "failover: {} re-placements, {} shed, final health {:?}",
+        rep.failovers, rep.shed, rep.health
+    );
+    anyhow::ensure!(
+        rep.diverged == 0,
+        "{} stream(s) diverged from the no-fault oracle — failover is not bitwise-stable",
+        rep.diverged
+    );
+    println!("every completed stream is bitwise-identical to the no-fault oracle ✓");
     Ok(())
 }
 

@@ -92,6 +92,13 @@ pub struct ServeRequest {
     pub priority: Priority,
     /// Optional latency SLO.
     pub slo: Option<SloSpec>,
+    /// `Some` when this submission *resumes* a request whose previous
+    /// backend died: the tokens already generated (and delivered to the
+    /// client). The backend re-prefills `prompt + tokens[..n-1]`, emits
+    /// nothing for the rebuilt prefix, and continues decoding at the
+    /// recorded position — so the client stream stays bitwise identical
+    /// across the failover. Fresh client submissions leave it `None`.
+    pub resume: Option<ResumeState>,
 }
 
 impl ServeRequest {
@@ -103,6 +110,7 @@ impl ServeRequest {
             sampling: SamplingParams::default(),
             priority: Priority::default(),
             slo: None,
+            resume: None,
         }
     }
 
@@ -153,6 +161,133 @@ pub enum FinishReason {
     Stop,
 }
 
+/// Why a request was refused — the typed taxonomy carried by
+/// [`RequestEvent::Rejected`]. Every [`ServingFront`] backend rejects
+/// through these variants, so the router and tests match on structure
+/// instead of substrings; `Display` renders the human-readable message
+/// the CLI and logs print.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RejectReason {
+    /// Prompt length outside `(0, max_prompt]`.
+    PromptBounds {
+        /// Submitted prompt length.
+        len: usize,
+        /// The backend's largest admissible prompt.
+        max_prompt: usize,
+    },
+    /// `max_new_tokens` < 1.
+    EmptyBudget,
+    /// `prompt + max_new_tokens` exceeds the backend's KV capacity.
+    KvCapacity {
+        /// The backend's KV token capacity.
+        kv_capacity: usize,
+    },
+    /// The adapter is not installed on the backend (engine/sim check).
+    AdapterNotInstalled {
+        /// The requested adapter id.
+        adapter: u64,
+    },
+    /// The adapter is not in the cluster's [`GlobalRegistry`]
+    /// (routing-front check).
+    ///
+    /// [`GlobalRegistry`]: crate::scheduler::registry::GlobalRegistry
+    AdapterNotRegistered {
+        /// The requested adapter id.
+        adapter: u64,
+    },
+    /// Unified pool: adapter weights + one prompt page can never fit,
+    /// even with every other page free.
+    PoolTooSmall {
+        /// The requested adapter id.
+        adapter: u64,
+        /// Total pages in the unified pool.
+        pool_pages: usize,
+    },
+    /// Routing: every candidate server refused or was excluded; carries
+    /// the last backend refusal when one was observed.
+    NoEligibleServer {
+        /// The final refusal that exhausted the candidate list.
+        last: Option<Box<RejectReason>>,
+    },
+    /// Routing: the policy re-picked a server that just refused
+    /// (policy bug surfaced as a rejection, not a livelock).
+    PolicyRepick {
+        /// The re-picked server index.
+        server: usize,
+    },
+    /// Graceful degradation: the cluster is shedding this request's
+    /// [`Priority`] class instead of queuing unboundedly.
+    Overloaded {
+        /// Backends currently able to take work.
+        healthy: usize,
+        /// The priority class being shed.
+        shed: Priority,
+    },
+    /// The owning backend died mid-flight and no surviving server
+    /// could resume the request.
+    BackendFailed {
+        /// Index of the failed backend.
+        server: usize,
+    },
+    /// Backend-specific reason outside the shared taxonomy.
+    Other(String),
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::PromptBounds { len, max_prompt } => {
+                write!(f, "prompt length {len} outside (0, {max_prompt}]")
+            }
+            RejectReason::EmptyBudget => write!(f, "must generate ≥ 1 token"),
+            RejectReason::KvCapacity { kv_capacity } => {
+                write!(f, "prompt+output exceeds KV capacity {kv_capacity}")
+            }
+            RejectReason::AdapterNotInstalled { adapter } => {
+                write!(f, "adapter {adapter} not installed")
+            }
+            RejectReason::AdapterNotRegistered { adapter } => {
+                write!(f, "adapter {adapter} not registered")
+            }
+            RejectReason::PoolTooSmall {
+                adapter,
+                pool_pages,
+            } => write!(
+                f,
+                "adapter {adapter} + prompt can never fit the {pool_pages}-page unified pool"
+            ),
+            RejectReason::NoEligibleServer { last: None } => write!(f, "no eligible server"),
+            RejectReason::NoEligibleServer { last: Some(r) } => {
+                write!(f, "no eligible server (last refusal: {r})")
+            }
+            RejectReason::PolicyRepick { server } => {
+                write!(f, "policy re-picked refusing server {server}")
+            }
+            RejectReason::Overloaded { healthy, shed } => write!(
+                f,
+                "overloaded: shedding {shed:?}-priority traffic ({healthy} healthy backends)"
+            ),
+            RejectReason::BackendFailed { server } => write!(
+                f,
+                "backend {server} failed; no surviving server could resume the request"
+            ),
+            RejectReason::Other(s) => f.write_str(s),
+        }
+    }
+}
+
+impl From<String> for RejectReason {
+    fn from(s: String) -> RejectReason {
+        RejectReason::Other(s)
+    }
+}
+
+impl From<&str> for RejectReason {
+    fn from(s: &str) -> RejectReason {
+        RejectReason::Other(s.to_string())
+    }
+}
+
 /// One step of a request's observable lifecycle.
 #[derive(Debug, Clone, PartialEq)]
 pub enum RequestEvent {
@@ -172,10 +307,21 @@ pub enum RequestEvent {
     Token(i32),
     /// Terminal: generation completed.
     Finished(FinishReason),
+    /// Re-placed on backend `to` after backend `from` died or stalled
+    /// mid-flight — non-terminal, emitted by a routing front before the
+    /// surviving backend's continuation tokens. The token stream stays
+    /// bitwise identical across it (the resume machinery re-prefills
+    /// `prompt + generated` without replaying delivered tokens).
+    Rerouted {
+        /// The failed backend the request was moved off.
+        from: usize,
+        /// The surviving backend now carrying the request.
+        to: usize,
+    },
     /// Terminal: cancelled by the client before completion.
     Cancelled,
-    /// Terminal: the backend refused the request (with the reason).
-    Rejected(String),
+    /// Terminal: the backend refused the request (with the typed reason).
+    Rejected(RejectReason),
 }
 
 impl RequestEvent {
@@ -240,7 +386,7 @@ impl EventChannel {
         );
         match &event {
             RequestEvent::Admitted => self.state = Some(LifecycleState::Queued),
-            RequestEvent::Routed { .. } => {
+            RequestEvent::Routed { .. } | RequestEvent::Rerouted { .. } => {
                 // Placement is metadata: record Queued only if nothing
                 // has run yet (re-routing must not regress a stream).
                 if self.state.is_none() {
@@ -377,19 +523,19 @@ pub fn validate_shape(
     req: &ServeRequest,
     max_prompt: usize,
     kv_capacity: usize,
-) -> Result<(), String> {
+) -> Result<(), RejectReason> {
     if req.prompt.is_empty() || req.prompt.len() > max_prompt {
-        return Err(format!(
-            "prompt length {} outside (0, {max_prompt}]",
-            req.prompt.len()
-        ));
+        return Err(RejectReason::PromptBounds {
+            len: req.prompt.len(),
+            max_prompt,
+        });
     }
     if req.sampling.max_new_tokens < 1 {
-        return Err("must generate ≥ 1 token".to_string());
+        return Err(RejectReason::EmptyBudget);
     }
     let total = req.prompt.len().saturating_add(req.sampling.max_new_tokens);
     if total > kv_capacity.saturating_add(1) {
-        return Err(format!("prompt+output exceeds KV capacity {kv_capacity}"));
+        return Err(RejectReason::KvCapacity { kv_capacity });
     }
     Ok(())
 }
@@ -456,7 +602,10 @@ pub struct ActiveRequest {
 }
 
 impl ActiveRequest {
-    /// Bind a submitted request to its backend id.
+    /// Bind a submitted request to its backend id. A failover
+    /// resubmission's [`ServeRequest::resume`] rides along, so its
+    /// re-admission prefills the rebuilt context exactly like a
+    /// preemption re-queue does.
     pub fn from_submit(id: u64, req: ServeRequest) -> ActiveRequest {
         ActiveRequest {
             id,
@@ -465,7 +614,7 @@ impl ActiveRequest {
             sampling: req.sampling,
             priority: req.priority,
             slo: req.slo,
-            resume: None,
+            resume: req.resume,
         }
     }
 
@@ -640,15 +789,51 @@ mod tests {
         let ok = ServeRequest::new(1, vec![1; 8]).max_new_tokens(4);
         assert!(validate_shape(&ok, 64, 128).is_ok());
         let empty = ServeRequest::new(1, vec![]);
-        assert!(validate_shape(&empty, 64, 128).unwrap_err().contains("prompt length"));
+        assert_eq!(
+            validate_shape(&empty, 64, 128).unwrap_err(),
+            RejectReason::PromptBounds {
+                len: 0,
+                max_prompt: 64
+            }
+        );
         let long = ServeRequest::new(1, vec![1; 65]);
         assert!(validate_shape(&long, 64, 128).is_err());
         let zero = ServeRequest::new(1, vec![1; 8]).max_new_tokens(0);
-        assert!(validate_shape(&zero, 64, 128).unwrap_err().contains("≥ 1"));
+        assert_eq!(validate_shape(&zero, 64, 128).unwrap_err(), RejectReason::EmptyBudget);
         let over = ServeRequest::new(1, vec![1; 8]).max_new_tokens(122);
-        assert!(validate_shape(&over, 64, 128).unwrap_err().contains("KV capacity"));
+        assert_eq!(
+            validate_shape(&over, 64, 128).unwrap_err(),
+            RejectReason::KvCapacity { kv_capacity: 128 }
+        );
         let fits = ServeRequest::new(1, vec![1; 8]).max_new_tokens(121);
         assert!(validate_shape(&fits, 64, 128).is_ok());
+    }
+
+    #[test]
+    fn reject_reason_renders_human_readable() {
+        assert_eq!(
+            RejectReason::PromptBounds {
+                len: 0,
+                max_prompt: 64
+            }
+            .to_string(),
+            "prompt length 0 outside (0, 64]"
+        );
+        assert_eq!(
+            RejectReason::AdapterNotInstalled { adapter: 9 }.to_string(),
+            "adapter 9 not installed"
+        );
+        let nested = RejectReason::NoEligibleServer {
+            last: Some(Box::new(RejectReason::KvCapacity { kv_capacity: 32 })),
+        };
+        assert_eq!(
+            nested.to_string(),
+            "no eligible server (last refusal: prompt+output exceeds KV capacity 32)"
+        );
+        assert_eq!(
+            RejectReason::from("engine exploded").to_string(),
+            "engine exploded"
+        );
     }
 
     #[test]
@@ -728,9 +913,26 @@ mod tests {
         assert_eq!(handle.state(), LifecycleState::Rejected);
         match handle.poll_event() {
             Some(RequestEvent::Rejected(reason)) => {
-                assert!(reason.contains("adapter"));
+                assert!(reason.to_string().contains("adapter"));
             }
             other => panic!("expected Rejected, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn rerouted_is_non_terminal_and_preserves_running_state() {
+        let (handle, chan) = RequestHandle::new(5);
+        assert!(!RequestEvent::Rerouted { from: 2, to: 0 }.is_terminal());
+        {
+            let mut c = chan.lock().unwrap();
+            c.push(RequestEvent::Admitted);
+            c.push(RequestEvent::FirstToken(3));
+            // A mid-stream failover note must not regress Running or
+            // perturb the token view.
+            c.push(RequestEvent::Rerouted { from: 2, to: 0 });
+            c.push(RequestEvent::Token(4));
+        }
+        assert_eq!(handle.state(), LifecycleState::Running);
+        assert_eq!(handle.tokens(), vec![3, 4]);
     }
 }

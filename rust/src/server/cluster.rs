@@ -10,47 +10,199 @@
 //!
 //! Request path:
 //!
-//! 1. `submit` validates the adapter against the registry, builds a
-//!    [`SchedRequest`] from the registered rank + prompt length, gathers
-//!    every backend's [`ServerStats`] (real eligibility data: local
-//!    adapter set, prompt capacity, KV headroom, preemptions), and asks
-//!    the policy to pick.
+//! 1. `submit` validates the adapter against the registry, applies the
+//!    graceful-degradation gate (see below), builds a [`SchedRequest`]
+//!    from the registered rank + prompt length, gathers every serving
+//!    backend's [`ServerStats`] (real eligibility data: local adapter
+//!    set, prompt capacity, KV headroom, preemptions), and asks the
+//!    policy to pick.
 //! 2. The chosen backend's own admission runs. If it rejects (KV bound,
 //!    missing adapter, shape), the front marks that backend ineligible
 //!    and **re-routes to the next-cheapest eligible server** instead of
 //!    surfacing a terminal `Rejected`; only when every candidate has
-//!    refused does the client see `Rejected`.
+//!    refused does the client see a typed
+//!    [`RejectReason::NoEligibleServer`].
 //! 3. On placement the client's handle receives `Admitted` followed by
 //!    the non-terminal [`RequestEvent::Routed`]`{ server }`, then the
 //!    backend's token stream is relayed verbatim (the backend's own
 //!    `Admitted` is elided — the cluster already emitted one).
 //!
-//! `poll` advances every backend one iteration and relays events;
-//! `cancel` — and client-side [`RequestHandle::cancel`] — fan out to the
-//! owning backend; `stats` aggregates the per-server snapshots into one
-//! cluster-level view (rank lists concatenated, adapter sets unioned,
-//! preemptions summed) so a `ClusterFront` can itself sit behind
-//! another router.
+//! # Fault containment, failover, and degradation
+//!
+//! Backends fail for real (a panicking runtime, a wedged IPC peer, a
+//! dead process behind a socket front). The cluster contains every
+//! failure at the poll boundary and keeps client streams intact:
+//!
+//! - **Containment.** Each backend's `poll()` runs under
+//!   `catch_unwind`, so neither an `Err` nor a panic ever escapes
+//!   `ClusterFront::poll`. A panicked backend is considered poisoned —
+//!   its locks may be unusable — and is never called again.
+//! - **Health machine.** Per backend:
+//!   `Healthy → Suspect` on the first poll error, `Suspect → Down`
+//!   after [`RetryPolicy::down_after`] consecutive errors (a panic goes
+//!   straight to `Down`, permanently). A non-poisoned `Down` backend
+//!   re-enters as `Probation` after a deterministic backoff measured in
+//!   cluster polls ([`RetryPolicy::backoff_base`], doubling per failed
+//!   probe up to [`RetryPolicy::backoff_cap`]); one clean probe poll
+//!   returns it to `Healthy`. `Down`/`Probation` backends receive no
+//!   new placements.
+//! - **Failover.** When a backend goes `Down`, every live route on it
+//!   is re-placed on a surviving server: the original request is
+//!   resubmitted with [`ServeRequest::resume`] carrying exactly the
+//!   tokens already delivered to the client, so the survivor re-prefills
+//!   `prompt + generated` and continues decoding — the client stream is
+//!   **bitwise identical** to the no-fault run (the same machinery that
+//!   makes preemption re-queues stream-invisible). The client observes
+//!   one non-terminal [`RequestEvent::Rerouted`]`{ from, to }`. Only
+//!   when no survivor can take the request (or the
+//!   [`RetryPolicy::max_reroutes`] cap is hit) does the client see a
+//!   terminal [`RejectReason::BackendFailed`].
+//! - **Stall watchdog.** A wedged backend that still claims progress is
+//!   caught per request: a route that produces no event for more polls
+//!   than its budget — [`RetryPolicy::stall_polls`], tightened for
+//!   SLO-carrying requests via [`RetryPolicy::stall_budget`] — declares
+//!   the backend wedged. Wedged backends go `Down` without probation
+//!   (they lie about progress, so a probe can't be trusted) and their
+//!   routes fail over.
+//! - **Graceful degradation.** Instead of queueing unboundedly into a
+//!   shrinking cluster, `submit` sheds load by [`Priority`] class once
+//!   the aggregate queue depth of serving backends passes a per-class
+//!   multiple of [`RetryPolicy::shed_queue_depth`] (Batch first,
+//!   Interactive last), and rejects everything with a typed
+//!   [`RejectReason::Overloaded`] when no backend is serving.
+//!
+//! `poll` advances every serving backend one iteration and relays
+//! events; `cancel` — and client-side [`RequestHandle::cancel`] — fan
+//! out to the owning backend; `stats` aggregates the per-server
+//! snapshots into one cluster-level view (rank lists concatenated,
+//! adapter sets unioned, preemptions summed) so a `ClusterFront` can
+//! itself sit behind another router.
 //!
 //! The [`synthetic`] submodule is the shared driver for the `cluster`
-//! CLI subcommand, `benches/cluster_slo.rs`, and the multi-engine
-//! integration tests: it builds N native-runtime engines with a
-//! heterogeneous-rank adapter population (mixed ranks, mixed SLOs, cold
-//! and warm adapters, partial placement) and measures per-policy TTFT /
-//! TPOT / SLO attainment / load balance.
+//! and `chaos` CLI subcommands, `benches/cluster_slo.rs`,
+//! `benches/failover.rs`, and the multi-engine integration tests: it
+//! builds N native-runtime engines with a heterogeneous-rank adapter
+//! population (mixed ranks, mixed SLOs, cold and warm adapters, partial
+//! placement), optionally wraps victims in
+//! [`crate::testkit::faults::ChaosFront`], and measures per-policy
+//! TTFT / TPOT / SLO attainment / load balance / failover outcomes.
 
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use super::api::{
-    EventChannel, LifecycleState, RequestEvent, RequestHandle, ServeRequest, ServingFront,
+    EventChannel, LifecycleState, Priority, RejectReason, RequestEvent, RequestHandle,
+    ResumeState, ServeRequest, ServingFront, SloSpec,
 };
 use super::metrics::{ColdStartStats, MetricsRecorder};
 use crate::model::LoraSpec;
 use crate::scheduler::registry::{AdapterMeta, GlobalRegistry};
 use crate::scheduler::{AdapterSet, Policy, SchedRequest, ServerStats};
+
+/// One backend's health as the cluster's poll-boundary containment
+/// loop sees it. Transitions are driven only by `poll` outcomes and the
+/// stall watchdog, so they are deterministic for a deterministic
+/// backend + fault schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    /// Polling cleanly; receives placements.
+    Healthy,
+    /// At least one recent poll error; still serving while consecutive
+    /// errors count toward [`RetryPolicy::down_after`].
+    Suspect,
+    /// Quarantined: not polled, excluded from routing, live routes
+    /// failed over. Panicked (poisoned) and watchdog-wedged backends
+    /// stay down; error-downed backends re-probe after a backoff.
+    Down,
+    /// One trial poll decides: clean ⇒ `Healthy`, error ⇒ `Down` with
+    /// the backoff doubled (capped).
+    Probation,
+}
+
+/// Retry / failover / degradation knobs for a [`ClusterFront`].
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Consecutive poll errors before a `Suspect` backend goes `Down`.
+    pub down_after: usize,
+    /// Initial probation backoff after an error-driven `Down`, in
+    /// cluster polls.
+    pub backoff_base: u64,
+    /// Backoff cap (the doubling stops here).
+    pub backoff_cap: u64,
+    /// Failovers per request before the client sees a terminal
+    /// [`RejectReason::BackendFailed`].
+    pub max_reroutes: usize,
+    /// Polls a route may go without producing an event before its
+    /// backend is declared wedged (no-SLO requests; SLO-carrying
+    /// requests tighten this via [`RetryPolicy::stall_budget`]).
+    pub stall_polls: usize,
+    /// Per-healthy-backend queue depth at which Batch traffic sheds;
+    /// Standard sheds at 2×, Interactive at 4×.
+    pub shed_queue_depth: usize,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            down_after: 3,
+            backoff_base: 8,
+            backoff_cap: 128,
+            max_reroutes: 2,
+            stall_polls: 512,
+            shed_queue_depth: 64,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The stall watchdog's idle-poll budget for one request. One
+    /// cluster poll approximates one decode iteration, so an
+    /// SLO-carrying request's budget is derived from its deadline —
+    /// `2 × (ttft_ms + tpot_ms)` polls, clamped to `[32, stall_polls]`
+    /// — while unconstrained requests get the full
+    /// [`RetryPolicy::stall_polls`].
+    pub fn stall_budget(&self, slo: Option<&SloSpec>) -> usize {
+        match slo {
+            Some(s) => {
+                let polls = ((s.ttft_ms + s.tpot_ms) * 2.0).ceil() as usize;
+                polls.clamp(32.min(self.stall_polls), self.stall_polls)
+            }
+            None => self.stall_polls,
+        }
+    }
+}
+
+/// Per-backend health bookkeeping.
+#[derive(Debug, Clone)]
+struct BackendHealth {
+    state: Health,
+    /// Consecutive failed polls (any clean poll resets).
+    errors: usize,
+    /// The backend panicked: its internal locks may be poisoned, so it
+    /// is never called again (not even `stats`).
+    poisoned: bool,
+    /// Cluster tick at which a `Down` backend re-enters `Probation`
+    /// (`u64::MAX` = never: poisoned or watchdog-wedged).
+    probe_at: u64,
+    /// Current probation backoff in cluster polls (doubles per failed
+    /// probe, capped).
+    backoff: u64,
+}
+
+impl BackendHealth {
+    fn new(retry: &RetryPolicy) -> BackendHealth {
+        BackendHealth {
+            state: Health::Healthy,
+            errors: 0,
+            poisoned: false,
+            probe_at: u64::MAX,
+            backoff: retry.backoff_base,
+        }
+    }
+}
 
 /// Book-keeping for one routed, still-live request.
 struct LiveRoute {
@@ -60,6 +212,17 @@ struct LiveRoute {
     backend: RequestHandle,
     /// The client-facing channel (cluster id space).
     chan: Arc<Mutex<EventChannel>>,
+    /// The original submission, retained for failover resubmission
+    /// (`resume` always `None` here; failover derives it from the
+    /// client channel's delivered tokens).
+    req: ServeRequest,
+    /// Registered adapter rank (for `routed_rank_sum` on failover).
+    rank: usize,
+    /// Cluster polls since this route last produced an event — the
+    /// stall watchdog's input.
+    idle_polls: usize,
+    /// Failovers so far (capped by [`RetryPolicy::max_reroutes`]).
+    reroutes: usize,
 }
 
 /// A routed cluster of [`ServingFront`] backends behind the same trait.
@@ -68,12 +231,22 @@ pub struct ClusterFront {
     policy: Box<dyn Policy>,
     registry: Arc<GlobalRegistry>,
     metrics: MetricsRecorder,
+    retry: RetryPolicy,
+    health: Vec<BackendHealth>,
+    /// Cluster poll counter — the deterministic clock probation
+    /// backoffs are measured against.
+    tick: u64,
     next_id: u64,
     live: BTreeMap<u64, LiveRoute>,
-    /// Requests routed to each backend (load-balance view).
+    /// Requests routed to each backend (load-balance view; failover
+    /// re-placements count).
     routed: Vec<usize>,
     /// Sum of routed adapter ranks per backend (rank-balance view).
     routed_rank_sum: Vec<usize>,
+    /// Successful failover re-placements.
+    failovers: usize,
+    /// Requests shed by the degradation gate.
+    shed: usize,
 }
 
 impl ClusterFront {
@@ -87,16 +260,31 @@ impl ClusterFront {
         registry: Arc<GlobalRegistry>,
     ) -> ClusterFront {
         let n = backends.len();
+        let retry = RetryPolicy::default();
         ClusterFront {
             backends,
             policy,
             registry,
             metrics: MetricsRecorder::new(),
+            health: (0..n).map(|_| BackendHealth::new(&retry)).collect(),
+            retry,
+            tick: 0,
             next_id: 0,
             live: BTreeMap::new(),
             routed: vec![0; n],
             routed_rank_sum: vec![0; n],
+            failovers: 0,
+            shed: 0,
         }
+    }
+
+    /// Replace the retry/failover/degradation policy (builder style).
+    pub fn with_retry(mut self, retry: RetryPolicy) -> ClusterFront {
+        for h in &mut self.health {
+            h.backoff = retry.backoff_base;
+        }
+        self.retry = retry;
+        self
     }
 
     /// Number of backends.
@@ -136,9 +324,58 @@ impl ClusterFront {
         &self.routed_rank_sum
     }
 
-    /// One [`ServerStats`] snapshot per backend, in backend order.
+    /// Health of one backend.
+    pub fn health_of(&self, server: usize) -> Health {
+        self.health[server].state
+    }
+
+    /// Health of every backend, in backend order.
+    pub fn health(&self) -> Vec<Health> {
+        self.health.iter().map(|h| h.state).collect()
+    }
+
+    /// Successful failover re-placements so far.
+    pub fn failovers(&self) -> usize {
+        self.failovers
+    }
+
+    /// Requests shed by the graceful-degradation gate so far.
+    pub fn shed_count(&self) -> usize {
+        self.shed
+    }
+
+    /// Is this backend taking new placements?
+    fn accepting(&self, server: usize) -> bool {
+        matches!(self.health[server].state, Health::Healthy | Health::Suspect)
+    }
+
+    /// Backends currently taking new placements.
+    fn healthy_count(&self) -> usize {
+        (0..self.backends.len())
+            .filter(|&s| self.accepting(s))
+            .count()
+    }
+
+    /// `stats()` that never calls into a poisoned backend (its locks
+    /// may be unusable after the panic): poisoned backends report an
+    /// empty adapter set, which makes them ineligible to every policy.
+    fn safe_stats(&self, server: usize) -> ServerStats {
+        if self.health[server].poisoned {
+            ServerStats {
+                adapters: AdapterSet::only(vec![]),
+                ..Default::default()
+            }
+        } else {
+            self.backends[server].stats()
+        }
+    }
+
+    /// One [`ServerStats`] snapshot per backend, in backend order
+    /// (poisoned backends report empty defaults).
     pub fn per_server_stats(&self) -> Vec<ServerStats> {
-        self.backends.iter().map(|b| b.stats()).collect()
+        (0..self.backends.len())
+            .map(|s| self.safe_stats(s))
+            .collect()
     }
 
     /// Install an adapter on one specific backend and record the
@@ -152,6 +389,10 @@ impl ClusterFront {
             server < self.backends.len(),
             "server {server} out of range ({} backends)",
             self.backends.len()
+        );
+        anyhow::ensure!(
+            !self.health[server].poisoned,
+            "server {server} is down (panicked backend)"
         );
         self.backends[server].install_adapter(spec)?;
         // Register (or refresh) the metadata only after the backend
@@ -186,6 +427,10 @@ impl ClusterFront {
             "server {server} out of range ({} backends)",
             self.backends.len()
         );
+        anyhow::ensure!(
+            !self.health[server].poisoned,
+            "server {server} is down (panicked backend)"
+        );
         self.backends[server].uninstall_adapter(adapter)?;
         self.registry.unplace(adapter, server);
         Ok(())
@@ -199,25 +444,141 @@ impl ClusterFront {
             "server {server} out of range ({} backends)",
             self.backends.len()
         );
+        anyhow::ensure!(
+            !self.health[server].poisoned,
+            "server {server} is down (panicked backend)"
+        );
         self.backends[server].prewarm_adapter(adapter)
+    }
+
+    /// Record a clean poll: consecutive errors reset; `Suspect` and a
+    /// successful `Probation` probe return to `Healthy` (backoff
+    /// reset).
+    fn record_poll_ok(&mut self, server: usize) {
+        let base = self.retry.backoff_base;
+        let h = &mut self.health[server];
+        h.errors = 0;
+        match h.state {
+            Health::Suspect => h.state = Health::Healthy,
+            Health::Probation => {
+                h.state = Health::Healthy;
+                h.backoff = base;
+                h.probe_at = u64::MAX;
+            }
+            Health::Healthy | Health::Down => {}
+        }
+    }
+
+    /// Record a failed (or panicked) poll and advance the health
+    /// machine. Panics poison permanently; probe failures double the
+    /// backoff (capped).
+    fn record_poll_error(&mut self, server: usize, poisoned: bool) {
+        let tick = self.tick;
+        let down_after = self.retry.down_after;
+        let cap = self.retry.backoff_cap;
+        let h = &mut self.health[server];
+        h.errors += 1;
+        if poisoned {
+            h.poisoned = true;
+            h.state = Health::Down;
+            h.probe_at = u64::MAX;
+            return;
+        }
+        match h.state {
+            Health::Probation => {
+                h.backoff = h.backoff.saturating_mul(2).min(cap);
+                h.state = Health::Down;
+                h.probe_at = tick.saturating_add(h.backoff);
+            }
+            Health::Healthy | Health::Suspect => {
+                if h.errors >= down_after {
+                    h.state = Health::Down;
+                    h.probe_at = tick.saturating_add(h.backoff);
+                } else {
+                    h.state = Health::Suspect;
+                }
+            }
+            Health::Down => {}
+        }
+    }
+
+    /// The watchdog's takedown: a wedged backend claims progress it
+    /// doesn't make, so a probe can't be trusted — it stays `Down`.
+    fn mark_wedged(&mut self, server: usize) {
+        let down_after = self.retry.down_after;
+        let h = &mut self.health[server];
+        h.errors = h.errors.max(down_after);
+        h.state = Health::Down;
+        h.probe_at = u64::MAX;
+    }
+
+    /// Should this submission be shed instead of queued? `stats` must
+    /// be the per-backend snapshots in backend order.
+    fn shed_reason(&self, priority: Priority, stats: &[ServerStats]) -> Option<RejectReason> {
+        let healthy = self.healthy_count();
+        if healthy == 0 {
+            return Some(RejectReason::Overloaded {
+                healthy: 0,
+                shed: priority,
+            });
+        }
+        let depth: usize = (0..self.backends.len())
+            .filter(|&s| self.accepting(s))
+            .map(|s| stats[s].total_requests())
+            .sum();
+        let mult = match priority {
+            Priority::Batch => 1,
+            Priority::Standard => 2,
+            Priority::Interactive => 4,
+        };
+        let limit = self
+            .retry
+            .shed_queue_depth
+            .saturating_mul(healthy)
+            .saturating_mul(mult);
+        (depth >= limit).then_some(RejectReason::Overloaded {
+            healthy,
+            shed: priority,
+        })
     }
 
     /// Relay pending backend events into the client-facing channels and
     /// forward client-side cancellations (`handle.cancel()`) to the
-    /// owning backends. Terminal events retire the route.
+    /// owning backends. Terminal events retire the route. Poisoned
+    /// backends' handles are never touched (their routes fail over at
+    /// this poll's end).
     fn pump(&mut self) {
         let mut done: Vec<u64> = Vec::new();
         for (&id, route) in self.live.iter_mut() {
-            {
-                let chan = route.chan.lock().unwrap();
-                if chan.cancel_requested() && !chan.is_terminal() {
-                    self.backends[route.server].cancel(route.backend.id());
-                }
+            if self.health[route.server].poisoned {
+                continue;
             }
+            let down = self.health[route.server].state == Health::Down;
+            let (cancel_wanted, had_tokens) = {
+                let chan = route.chan.lock().unwrap();
+                (
+                    chan.cancel_requested() && !chan.is_terminal(),
+                    !chan.tokens().is_empty(),
+                )
+            };
+            if cancel_wanted && !down {
+                self.backends[route.server].cancel(route.backend.id());
+            }
+            let mut relayed = false;
             while let Some(ev) = route.backend.poll_event() {
+                relayed = true;
+                // The cluster emitted its own Admitted at placement.
+                if matches!(ev, RequestEvent::Admitted) {
+                    continue;
+                }
+                // A failover continuation's first token is not the
+                // stream's first: map it so the client sees exactly one
+                // FirstToken per request.
+                let ev = match ev {
+                    RequestEvent::FirstToken(t) if had_tokens => RequestEvent::Token(t),
+                    ev => ev,
+                };
                 match &ev {
-                    // The cluster emitted its own Admitted at placement.
-                    RequestEvent::Admitted => continue,
                     RequestEvent::FirstToken(_) | RequestEvent::Token(_) => {
                         self.metrics.token(id);
                     }
@@ -237,32 +598,173 @@ impl ClusterFront {
                         self.metrics.rejected(id);
                         done.push(id);
                     }
-                    RequestEvent::Routed { .. } => {}
+                    _ => {}
                 }
                 route.chan.lock().unwrap().push(ev);
+            }
+            if relayed {
+                route.idle_polls = 0;
             }
         }
         for id in done {
             self.live.remove(&id);
         }
     }
+
+    /// Advance every route's idle counter and take wedged backends
+    /// down. Returns true when a backend was newly declared wedged.
+    fn reap_stalled(&mut self) -> bool {
+        let mut wedged: Vec<usize> = Vec::new();
+        for route in self.live.values_mut() {
+            if !matches!(
+                self.health[route.server].state,
+                Health::Healthy | Health::Suspect
+            ) {
+                continue;
+            }
+            route.idle_polls += 1;
+            if route.idle_polls > self.retry.stall_budget(route.req.slo.as_ref()) {
+                wedged.push(route.server);
+            }
+        }
+        let mut any = false;
+        for s in wedged {
+            if matches!(self.health[s].state, Health::Healthy | Health::Suspect) {
+                self.mark_wedged(s);
+                any = true;
+            }
+        }
+        any
+    }
+
+    /// Fail over every live route whose backend is `Down`. Returns true
+    /// when any route moved or terminated.
+    fn failover_down(&mut self) -> bool {
+        let dead: Vec<u64> = self
+            .live
+            .iter()
+            .filter(|(_, r)| self.health[r.server].state == Health::Down)
+            .map(|(&id, _)| id)
+            .collect();
+        let any = !dead.is_empty();
+        for id in dead {
+            self.failover_one(id);
+        }
+        any
+    }
+
+    /// Terminate a route whose failover exhausted its options.
+    fn fail_route(&mut self, id: u64, route: &LiveRoute, from: usize) {
+        self.metrics.rejected(id);
+        route
+            .chan
+            .lock()
+            .unwrap()
+            .push(RequestEvent::Rejected(RejectReason::BackendFailed {
+                server: from,
+            }));
+    }
+
+    /// Move one live route off its `Down` backend: resubmit on a
+    /// surviving server with the client's delivered tokens as the
+    /// resume state, so the stream continues bitwise identically.
+    /// Exhausting candidates (or the reroute cap) terminates the
+    /// request with [`RejectReason::BackendFailed`].
+    fn failover_one(&mut self, id: u64) {
+        let Some(mut route) = self.live.remove(&id) else {
+            return;
+        };
+        let from = route.server;
+        if route.reroutes >= self.retry.max_reroutes {
+            self.fail_route(id, &route, from);
+            return;
+        }
+        // The resume state is the *client's* view — tokens already
+        // relayed. Tokens the dead backend generated but never
+        // delivered are regenerated deterministically by the survivor.
+        let tokens = route.chan.lock().unwrap().tokens().to_vec();
+        let mut req = route.req.clone();
+        req.resume = (!tokens.is_empty()).then_some(ResumeState { tokens });
+        let sreq = SchedRequest {
+            id,
+            adapter: req.adapter,
+            rank: route.rank,
+            prompt_len: req.prompt.len(),
+        };
+        let mut stats: Vec<ServerStats> = (0..self.backends.len())
+            .map(|s| {
+                if s != from && self.accepting(s) {
+                    self.backends[s].stats()
+                } else {
+                    ServerStats {
+                        adapters: AdapterSet::only(vec![]),
+                        ..Default::default()
+                    }
+                }
+            })
+            .collect();
+        let mut attempted = vec![false; self.backends.len()];
+        loop {
+            let Some(target) = self.policy.pick(&sreq, &stats) else {
+                self.fail_route(id, &route, from);
+                return;
+            };
+            if std::mem::replace(&mut attempted[target], true) {
+                // A policy re-picking an excluded server would
+                // livelock; treat it as exhaustion.
+                self.fail_route(id, &route, from);
+                return;
+            }
+            if target == from || !self.accepting(target) {
+                stats[target].adapters = AdapterSet::only(vec![]);
+                continue;
+            }
+            let backend = self.backends[target].submit(req.clone());
+            if backend.state() == LifecycleState::Rejected {
+                let _ = backend.drain_events();
+                stats[target].adapters = AdapterSet::only(vec![]);
+                continue;
+            }
+            self.routed[target] += 1;
+            self.routed_rank_sum[target] += route.rank;
+            self.failovers += 1;
+            route
+                .chan
+                .lock()
+                .unwrap()
+                .push(RequestEvent::Rerouted { from, to: target });
+            route.server = target;
+            route.backend = backend;
+            route.idle_polls = 0;
+            route.reroutes += 1;
+            self.live.insert(id, route);
+            return;
+        }
+    }
 }
 
 impl ServingFront for ClusterFront {
-    /// Route and submit. See the module docs for the re-routing
-    /// semantics; every request still terminates in exactly one terminal
-    /// event on the returned handle.
+    /// Route and submit. See the module docs for the re-routing and
+    /// degradation semantics; every request still terminates in exactly
+    /// one terminal event on the returned handle.
     fn submit(&mut self, req: ServeRequest) -> RequestHandle {
         let id = self.next_id;
         self.next_id += 1;
         let (handle, chan) = RequestHandle::new(id);
         let Some(rank) = self.registry.rank_of(req.adapter) else {
-            chan.lock().unwrap().push(RequestEvent::Rejected(format!(
-                "adapter {} not registered",
-                req.adapter
-            )));
+            chan.lock().unwrap().push(RequestEvent::Rejected(
+                RejectReason::AdapterNotRegistered {
+                    adapter: req.adapter,
+                },
+            ));
             return handle;
         };
+        let mut stats: Vec<ServerStats> = self.per_server_stats();
+        if let Some(reason) = self.shed_reason(req.priority, &stats) {
+            self.shed += 1;
+            chan.lock().unwrap().push(RequestEvent::Rejected(reason));
+            return handle;
+        }
         // Demand signal for the coordinator's placement/migration
         // scoring: every routed submission bumps the adapter's
         // popularity counter.
@@ -273,26 +775,36 @@ impl ServingFront for ClusterFront {
             rank,
             prompt_len: req.prompt.len(),
         };
-        let mut stats: Vec<ServerStats> =
-            self.backends.iter().map(|b| b.stats()).collect();
+        // Non-serving backends are out of the candidate set.
+        for s in 0..self.backends.len() {
+            if !self.accepting(s) {
+                stats[s].adapters = AdapterSet::only(vec![]);
+            }
+        }
         let mut attempted = vec![false; self.backends.len()];
-        let mut last_reason: Option<String> = None;
+        let mut last: Option<RejectReason> = None;
         loop {
             let Some(target) = self.policy.pick(&sreq, &stats) else {
-                let reason = match last_reason {
-                    Some(r) => format!("no eligible server (last refusal: {r})"),
-                    None => "no eligible server".to_string(),
-                };
-                chan.lock().unwrap().push(RequestEvent::Rejected(reason));
+                chan.lock().unwrap().push(RequestEvent::Rejected(
+                    RejectReason::NoEligibleServer {
+                        last: last.map(Box::new),
+                    },
+                ));
                 return handle;
             };
             if std::mem::replace(&mut attempted[target], true) {
                 // A policy ignoring eligibility could loop forever on a
                 // refusing server — treat a re-pick as exhaustion.
-                chan.lock().unwrap().push(RequestEvent::Rejected(format!(
-                    "policy re-picked refusing server {target}"
-                )));
+                chan.lock().unwrap().push(RequestEvent::Rejected(
+                    RejectReason::PolicyRepick { server: target },
+                ));
                 return handle;
+            }
+            if !self.accepting(target) {
+                // Eligibility was blanked above; a policy that picked
+                // it anyway gets one more chance on the rest.
+                stats[target].adapters = AdapterSet::only(vec![]);
+                continue;
             }
             let backend = self.backends[target].submit(req.clone());
             if backend.state() == LifecycleState::Rejected {
@@ -300,7 +812,7 @@ impl ServingFront for ClusterFront {
                 // the reason, exclude the server, re-route.
                 for ev in backend.drain_events() {
                     if let RequestEvent::Rejected(r) = ev {
-                        last_reason = Some(format!("server {target}: {r}"));
+                        last = Some(r);
                     }
                 }
                 stats[target].adapters = AdapterSet::only(vec![]);
@@ -320,34 +832,62 @@ impl ServingFront for ClusterFront {
                     server: target,
                     backend,
                     chan,
+                    req,
+                    rank,
+                    idle_polls: 0,
+                    reroutes: 0,
                 },
             );
             return handle;
         }
     }
 
-    /// Advance every backend one iteration and relay events. Returns
+    /// Advance every serving backend one iteration and relay events.
+    /// Backend errors and panics are contained here and fed to the
+    /// health machine — they never propagate to the caller. Returns
     /// `false` only when the whole cluster is idle.
     fn poll(&mut self) -> Result<bool> {
         // Forward pending client cancellations first so backends reap
         // them at this iteration boundary.
         self.pump();
+        self.tick += 1;
         let mut any = false;
-        for b in self.backends.iter_mut() {
-            any |= b.poll()?;
+        for s in 0..self.backends.len() {
+            if self.health[s].state == Health::Down {
+                if self.health[s].poisoned || self.tick < self.health[s].probe_at {
+                    continue;
+                }
+                self.health[s].state = Health::Probation;
+            }
+            let backend = &mut self.backends[s];
+            match catch_unwind(AssertUnwindSafe(|| backend.poll())) {
+                Ok(Ok(progress)) => {
+                    any |= progress;
+                    self.record_poll_ok(s);
+                }
+                Ok(Err(_)) => self.record_poll_error(s, false),
+                Err(_) => self.record_poll_error(s, true),
+            }
         }
         self.pump();
+        any |= self.reap_stalled();
+        any |= self.failover_down();
         Ok(any)
     }
 
     /// Fan a cancellation out to the owning backend. The terminal
-    /// `Cancelled` is relayed at the next poll boundary.
+    /// `Cancelled` is relayed at the next poll boundary. A route whose
+    /// backend is down gets the cancel queued on the client channel, to
+    /// land on whichever backend the failover picks.
     fn cancel(&mut self, id: u64) -> bool {
         let Some(route) = self.live.get(&id) else {
             return false;
         };
         if route.chan.lock().unwrap().is_terminal() {
             return false;
+        }
+        if !self.accepting(route.server) {
+            return route.chan.lock().unwrap().try_request_cancel();
         }
         self.backends[route.server].cancel(route.backend.id())
     }
@@ -383,23 +923,22 @@ impl ServingFront for ClusterFront {
         agg
     }
 
-    /// Cluster-level install: place the adapter on the backend with the
-    /// smallest local adapter set (the least slot pressure) — ties go to
-    /// the lowest index, `AdapterSet::Any` backends (which serve
-    /// everything already) last. Use [`ClusterFront::install_on`] to
-    /// target a specific backend.
+    /// Cluster-level install: place the adapter on the serving backend
+    /// with the smallest local adapter set (the least slot pressure) —
+    /// ties go to the lowest index, `AdapterSet::Any` backends (which
+    /// serve everything already) last. Use [`ClusterFront::install_on`]
+    /// to target a specific backend.
     fn install_adapter(&mut self, spec: &LoraSpec) -> Result<()> {
         anyhow::ensure!(!self.backends.is_empty(), "cluster has no backends");
-        let target = self
-            .backends
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, b)| match b.stats().adapters {
+        let target = (0..self.backends.len())
+            .filter(|&s| self.accepting(s))
+            .min_by_key(|&s| match self.backends[s].stats().adapters {
                 AdapterSet::Only(ids) => ids.len(),
                 AdapterSet::Any => usize::MAX,
-            })
-            .map(|(i, _)| i)
-            .expect("≥ 1 backend");
+            });
+        let Some(target) = target else {
+            anyhow::bail!("cluster has no healthy backends");
+        };
         self.install_on(target, spec)
     }
 
@@ -410,7 +949,7 @@ impl ServingFront for ClusterFront {
     /// retries, with already-retired servers staying retired.
     fn uninstall_adapter(&mut self, adapter: u64) -> Result<()> {
         let hosts: Vec<usize> = (0..self.backends.len())
-            .filter(|&s| self.backends[s].stats().can_serve(adapter))
+            .filter(|&s| self.safe_stats(s).can_serve(adapter))
             .collect();
         anyhow::ensure!(!hosts.is_empty(), "adapter {adapter} not installed");
         let mut refused = Vec::new();
@@ -427,34 +966,41 @@ impl ServingFront for ClusterFront {
         Ok(())
     }
 
-    /// Pre-warm the adapter on every backend hosting it; true when at
-    /// least one backend warmed it.
+    /// Pre-warm the adapter on every serving backend hosting it; true
+    /// when at least one backend warmed it.
     fn prewarm_adapter(&mut self, adapter: u64) -> Result<bool> {
         let mut any = false;
         let mut hosted = false;
-        for backend in self.backends.iter_mut() {
-            if backend.stats().can_serve(adapter) {
+        for s in 0..self.backends.len() {
+            if self.health[s].poisoned {
+                continue;
+            }
+            if self.backends[s].stats().can_serve(adapter) {
                 hosted = true;
-                any |= backend.prewarm_adapter(adapter)?;
+                any |= self.backends[s].prewarm_adapter(adapter)?;
             }
         }
         anyhow::ensure!(hosted, "adapter {adapter} not installed");
         Ok(any)
     }
 
-    /// Aggregate cold-start counters across backends that report them.
+    /// Aggregate cold-start counters across backends that report them
+    /// (poisoned backends are skipped).
     fn cold_start_stats(&self) -> Option<ColdStartStats> {
         let mut total = ColdStartStats::default();
         let mut any = false;
-        for b in &self.backends {
-            if let Some(s) = b.cold_start_stats() {
+        for s in 0..self.backends.len() {
+            if self.health[s].poisoned {
+                continue;
+            }
+            if let Some(st) = self.backends[s].cold_start_stats() {
                 any = true;
-                total.cold_admits += s.cold_admits;
-                total.warm_admits += s.warm_admits;
-                total.cpu_assisted += s.cpu_assisted;
-                total.handoffs += s.handoffs;
-                total.deferred_collisions += s.deferred_collisions;
-                total.assist_decode_s += s.assist_decode_s;
+                total.cold_admits += st.cold_admits;
+                total.warm_admits += st.warm_admits;
+                total.cpu_assisted += st.cpu_assisted;
+                total.handoffs += st.handoffs;
+                total.deferred_collisions += st.deferred_collisions;
+                total.assist_decode_s += st.assist_decode_s;
             }
         }
         any.then_some(total)
@@ -471,7 +1017,7 @@ pub mod synthetic {
 
     use anyhow::Result;
 
-    use super::{ClusterFront, ServingFront};
+    use super::{ClusterFront, Health, RetryPolicy, ServingFront};
     use crate::config::GpuSpec;
     use crate::coordinator::{Coordinator, CoordinatorConfig};
     use crate::model::{LlamaConfig, LoraSpec};
@@ -483,6 +1029,7 @@ pub mod synthetic {
     use crate::server::engine::{ColdStartMode, EngineConfig, InferenceServer};
     use crate::server::metrics::ColdStartStats;
     use crate::sim::GpuModel;
+    use crate::testkit::faults::{ChaosFront, FaultPlan};
     use crate::util::rng::{Rng, Zipf};
     use crate::util::stats::Summary;
 
@@ -821,6 +1368,132 @@ pub mod synthetic {
         let rep = report(policy_name, coord.cluster(), &handles, wall_s)?;
         Ok((rep, coord))
     }
+
+    /// Chaos knobs for one synthetic run: per-victim fault plans plus
+    /// the cluster's retry/failover policy.
+    #[derive(Debug, Clone, Default)]
+    pub struct ChaosConfig {
+        /// `(backend index, fault plan)` — victims get a
+        /// [`ChaosFront`] wrapper executing the plan.
+        pub faults: Vec<(usize, FaultPlan)>,
+        /// Health/retry/degradation knobs for the routing front.
+        pub retry: Option<RetryPolicy>,
+    }
+
+    /// Build the static-placement cluster with chaos victims wrapped in
+    /// [`ChaosFront`] decorators.
+    pub fn build_chaos(
+        cfg: &SyntheticConfig,
+        policy: Box<dyn Policy>,
+        chaos: &ChaosConfig,
+    ) -> Result<ClusterFront> {
+        for (v, _) in &chaos.faults {
+            anyhow::ensure!(
+                *v < cfg.instances,
+                "fault victim {v} out of range ({} instances)",
+                cfg.instances
+            );
+        }
+        let registry = Arc::new(GlobalRegistry::new());
+        let mut backends: Vec<Box<dyn ServingFront>> = Vec::with_capacity(cfg.instances);
+        for s in 0..cfg.instances {
+            let mut server = engine(cfg)?;
+            for a in 0..cfg.adapters as u64 {
+                if hosts(cfg.instances, a, s) {
+                    server.install_adapter(&LoraSpec::standard(a, rank_of(a), "tiny"))?;
+                }
+            }
+            let boxed: Box<dyn ServingFront> = Box::new(server);
+            let boxed = match chaos.faults.iter().find(|(v, _)| *v == s) {
+                Some((_, plan)) => Box::new(ChaosFront::new(boxed, plan.clone())),
+                None => boxed,
+            };
+            backends.push(boxed);
+        }
+        for a in 0..cfg.adapters as u64 {
+            registry.register(AdapterMeta {
+                id: a,
+                rank: rank_of(a),
+                base_model: "tiny".into(),
+                weights_path: String::new(),
+            });
+            for s in 0..cfg.instances {
+                if hosts(cfg.instances, a, s) {
+                    registry.place(a, s);
+                }
+            }
+        }
+        let cluster = ClusterFront::new(backends, policy, registry);
+        Ok(match &chaos.retry {
+            Some(r) => cluster.with_retry(r.clone()),
+            None => cluster,
+        })
+    }
+
+    /// Results of one chaos run, reconciled against the no-fault oracle.
+    #[derive(Debug, Clone)]
+    pub struct ChaosReport {
+        /// The chaos run's ordinary per-policy report.
+        pub base: RunReport,
+        /// Finished requests whose stream is bitwise equal to the
+        /// no-fault oracle's (resumed/failed-over requests included).
+        pub stable: usize,
+        /// Finished requests whose stream diverged from the oracle —
+        /// must be 0; any other value is a failover-correctness bug.
+        pub diverged: usize,
+        /// Requests terminated by the fault (typed `BackendFailed` /
+        /// `Overloaded` rejections).
+        pub failed: usize,
+        /// Successful failover re-placements.
+        pub failovers: usize,
+        /// Requests shed by the degradation gate.
+        pub shed: usize,
+        /// Final per-backend health.
+        pub health: Vec<Health>,
+    }
+
+    /// Drive one policy over the synthetic workload with faults
+    /// injected, and reconcile every finished stream against the
+    /// no-fault oracle run (same config, no chaos). The oracle
+    /// comparison is the §failover acceptance criterion: a backend
+    /// death mid-decode must leave every completed stream bitwise
+    /// identical.
+    pub fn run_chaos(
+        policy_name: &str,
+        cfg: &SyntheticConfig,
+        chaos: &ChaosConfig,
+    ) -> Result<(ChaosReport, RunReport)> {
+        let oracle = run(policy_name, cfg)?;
+        let mut cluster = build_chaos(cfg, policy(policy_name, cfg.seed)?, chaos)?;
+        let (handles, wall_s) = drive(&mut cluster, workload(cfg), cfg.polls_per_arrival)?;
+        let base = report(policy_name, &cluster, &handles, wall_s)?;
+        let (mut stable, mut diverged, mut failed) = (0, 0, 0);
+        for (i, h) in handles.iter().enumerate() {
+            match h.state() {
+                LifecycleState::Finished if !oracle.streams[i].is_empty() => {
+                    if oracle.streams[i] == h.tokens() {
+                        stable += 1;
+                    } else {
+                        diverged += 1;
+                    }
+                }
+                // The oracle itself rejected this request (e.g. a KV
+                // bound): nothing to compare.
+                LifecycleState::Finished => stable += 1,
+                _ => failed += 1,
+            }
+        }
+        let report = ChaosReport {
+            stable,
+            diverged,
+            failed,
+            failovers: cluster.failovers(),
+            shed: cluster.shed_count(),
+            health: cluster.health(),
+            base,
+        };
+        Ok((report, oracle))
+    }
 }
 
 #[cfg(test)]
@@ -832,6 +1505,7 @@ mod tests {
     use crate::scheduler::registry::AdapterMeta;
     use crate::server::api::{FinishReason, LifecycleState};
     use crate::sim::{GpuModel, ServingMode, SimFront, SimInstance};
+    use crate::testkit::faults::{ChaosFront, FaultPlan};
 
     fn sim_backend(max_prompt: usize, adapters: &[(u64, usize)]) -> SimFront {
         let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
@@ -940,11 +1614,14 @@ mod tests {
         let h = cluster.submit(ServeRequest::new(1, vec![1; 8]).max_new_tokens(100));
         assert_eq!(h.state(), LifecycleState::Rejected);
         match h.drain_events().as_slice() {
-            [RequestEvent::Rejected(reason)] => {
-                assert!(reason.contains("no eligible server"), "{reason}");
-                assert!(reason.contains("last refusal"), "{reason}");
+            [RequestEvent::Rejected(RejectReason::NoEligibleServer { last: Some(last) })] => {
+                // The boxed refusal is the last backend's typed reason.
+                assert!(
+                    matches!(**last, RejectReason::KvCapacity { .. }),
+                    "{last:?}"
+                );
             }
-            other => panic!("expected lone Rejected, got {other:?}"),
+            other => panic!("expected typed NoEligibleServer, got {other:?}"),
         }
     }
 
@@ -1083,5 +1760,165 @@ mod tests {
         // sees both cold admits.
         let cs = cluster.cold_start_stats().unwrap();
         assert_eq!(cs.cold_admits, 2);
+    }
+
+    fn chaos_sim(plan: &str, adapters: &[(u64, usize)]) -> Box<dyn ServingFront> {
+        Box::new(ChaosFront::new(
+            Box::new(sim_backend(64, adapters)),
+            FaultPlan::parse(plan).unwrap(),
+        ))
+    }
+
+    #[test]
+    fn panic_is_contained_and_stream_survives_failover() {
+        let adapters: Vec<(u64, usize)> = vec![(1, 8)];
+        // No-fault oracle: the stream the client must see either way.
+        let mut oracle = cluster_of(
+            vec![
+                Box::new(sim_backend(64, &adapters)),
+                Box::new(sim_backend(64, &adapters)),
+            ],
+            &adapters,
+        );
+        let oh = oracle.submit(ServeRequest::new(1, vec![1; 8]).max_new_tokens(10));
+        oracle.run_until_idle().unwrap();
+        assert_eq!(oh.state(), LifecycleState::Finished);
+
+        // Same request; the owning backend panics on its 2nd decode
+        // poll. The panic must not escape, and the stream must match
+        // the oracle bitwise after failing over to backend 1.
+        let mut cluster = cluster_of(
+            vec![
+                chaos_sim("panic@decode:2", &adapters),
+                Box::new(sim_backend(64, &adapters)),
+            ],
+            &adapters,
+        );
+        let h = cluster.submit(ServeRequest::new(1, vec![1; 8]).max_new_tokens(10));
+        cluster.run_until_idle().unwrap();
+        assert_eq!(h.state(), LifecycleState::Finished);
+        assert_eq!(h.tokens(), oh.tokens(), "failover changed the stream");
+        assert_eq!(cluster.health_of(0), Health::Down);
+        assert_eq!(cluster.health_of(1), Health::Healthy);
+        assert_eq!(cluster.failovers(), 1);
+        let events = h.drain_events();
+        assert!(events.contains(&RequestEvent::Routed { server: 0 }));
+        assert!(events.contains(&RequestEvent::Rerouted { from: 0, to: 1 }));
+        // Exactly one FirstToken (the continuation's first token is
+        // relayed as a plain Token) and exactly one terminal event.
+        assert_eq!(
+            events
+                .iter()
+                .filter(|e| matches!(e, RequestEvent::FirstToken(_)))
+                .count(),
+            1
+        );
+        assert_eq!(events.iter().filter(|e| e.is_terminal()).count(), 1);
+    }
+
+    #[test]
+    fn transient_errors_recover_through_probation() {
+        let adapters: Vec<(u64, usize)> = vec![(1, 8)];
+        let mut cluster = cluster_of(
+            vec![chaos_sim(
+                "error@poll:1,error@poll:2,error@poll:3",
+                &adapters,
+            )],
+            &adapters,
+        )
+        .with_retry(RetryPolicy {
+            down_after: 3,
+            backoff_base: 2,
+            ..Default::default()
+        });
+        cluster.poll().unwrap();
+        assert_eq!(cluster.health_of(0), Health::Suspect);
+        cluster.poll().unwrap();
+        assert_eq!(cluster.health_of(0), Health::Suspect);
+        cluster.poll().unwrap();
+        assert_eq!(cluster.health_of(0), Health::Down, "3rd consecutive error");
+        cluster.poll().unwrap();
+        assert_eq!(cluster.health_of(0), Health::Down, "backoff not elapsed");
+        // Tick 5 ≥ probe_at (3 + backoff 2): probe runs clean → Healthy.
+        cluster.poll().unwrap();
+        assert_eq!(cluster.health_of(0), Health::Healthy);
+        // And it serves again.
+        let h = cluster.submit(ServeRequest::new(1, vec![1; 8]).max_new_tokens(3));
+        cluster.run_until_idle().unwrap();
+        assert_eq!(h.state(), LifecycleState::Finished);
+    }
+
+    #[test]
+    fn all_backends_down_degrades_with_typed_overload() {
+        let adapters: Vec<(u64, usize)> = vec![(1, 8)];
+        let mut cluster = cluster_of(
+            vec![
+                chaos_sim("die@poll:1", &adapters),
+                chaos_sim("die@poll:1", &adapters),
+            ],
+            &adapters,
+        )
+        .with_retry(RetryPolicy {
+            down_after: 1,
+            ..Default::default()
+        });
+        let h1 = cluster.submit(ServeRequest::new(1, vec![1; 8]).max_new_tokens(5));
+        // One poll kills both backends; the in-flight request has no
+        // survivor to resume on → typed BackendFailed terminal.
+        cluster.run_until_idle().unwrap();
+        assert_eq!(cluster.health(), vec![Health::Down, Health::Down]);
+        assert_eq!(h1.state(), LifecycleState::Rejected);
+        let events = h1.drain_events();
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, RequestEvent::Rejected(RejectReason::BackendFailed { server: 0 }))));
+        assert_eq!(events.iter().filter(|e| e.is_terminal()).count(), 1);
+        // With nothing serving, new submissions shed with a typed
+        // Overloaded instead of queueing into a dead cluster.
+        let h2 = cluster.submit(ServeRequest::new(1, vec![1; 8]).max_new_tokens(5));
+        assert_eq!(h2.state(), LifecycleState::Rejected);
+        match h2.drain_events().as_slice() {
+            [RequestEvent::Rejected(RejectReason::Overloaded { healthy: 0, .. })] => {}
+            other => panic!("expected typed Overloaded, got {other:?}"),
+        }
+        assert_eq!(cluster.shed_count(), 1);
+    }
+
+    #[test]
+    fn stall_watchdog_takes_wedged_backend_down_and_reroutes() {
+        let adapters: Vec<(u64, usize)> = vec![(1, 8)];
+        // Backend 0 wedges from its 1st poll: claims progress forever,
+        // makes none. Only the per-request stall watchdog can catch it.
+        let mut cluster = cluster_of(
+            vec![
+                chaos_sim("stall@poll:1", &adapters),
+                Box::new(sim_backend(64, &adapters)),
+            ],
+            &adapters,
+        )
+        .with_retry(RetryPolicy {
+            stall_polls: 8,
+            ..Default::default()
+        });
+        let h = cluster.submit(ServeRequest::new(1, vec![1; 8]).max_new_tokens(6));
+        cluster.run_until_idle().unwrap();
+        assert_eq!(h.state(), LifecycleState::Finished);
+        assert_eq!(h.tokens(), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(cluster.health_of(0), Health::Down, "wedged backend stays down");
+        assert!(h
+            .drain_events()
+            .contains(&RequestEvent::Rerouted { from: 0, to: 1 }));
+    }
+
+    #[test]
+    fn unregistered_adapter_gets_typed_reason() {
+        let adapters: Vec<(u64, usize)> = vec![(1, 8)];
+        let mut cluster =
+            cluster_of(vec![Box::new(sim_backend(64, &adapters))], &adapters);
+        let h = cluster.submit(ServeRequest::new(99, vec![1; 8]));
+        match h.drain_events().as_slice() {
+            [RequestEvent::Rejected(RejectReason::AdapterNotRegistered { adapter: 99 })] => {}
+            other => panic!("expected typed AdapterNotRegistered, got {other:?}"),
+        }
     }
 }

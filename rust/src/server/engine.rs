@@ -45,8 +45,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::api::{
-    ActiveRequest, EventChannel, FinishReason, RequestEvent, RequestHandle, ResumeState,
-    SamplingParams, ServeRequest, ServingFront,
+    ActiveRequest, EventChannel, FinishReason, RejectReason, RequestEvent, RequestHandle,
+    ResumeState, SamplingParams, ServeRequest, ServingFront,
 };
 use super::batcher::{Batcher, NextAction, RunningReq};
 use super::kvcache::{KvCacheManager, KvError};
@@ -483,10 +483,12 @@ impl InferenceServer {
         handle
     }
 
-    fn validate(&self, req: &ServeRequest) -> std::result::Result<(), String> {
+    fn validate(&self, req: &ServeRequest) -> std::result::Result<(), RejectReason> {
         super::api::validate_shape(req, self.max_prompt, self.cache_m)?;
         let Some(spec) = self.repo.get(req.adapter) else {
-            return Err(format!("adapter {} not installed", req.adapter));
+            return Err(RejectReason::AdapterNotInstalled {
+                adapter: req.adapter,
+            });
         };
         if self.unified {
             // Joint bound: the request's adapter weights and its prompt
@@ -497,12 +499,10 @@ impl InferenceServer {
                 .pages_for_elems(8 * self.runtime.hidden() * spec.rank.max(1));
             let p = self.kv.pages_for(req.prompt.len().max(1));
             if w + p > self.kv.total_pages() {
-                return Err(format!(
-                    "adapter {} weights ({w} pages) + prompt ({p} pages) can \
-                     never fit the {}-page unified pool",
-                    req.adapter,
-                    self.kv.total_pages()
-                ));
+                return Err(RejectReason::PoolTooSmall {
+                    adapter: req.adapter,
+                    pool_pages: self.kv.total_pages(),
+                });
             }
         }
         Ok(())

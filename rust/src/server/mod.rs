@@ -25,7 +25,11 @@
 //! - [`cluster`] — [`ClusterFront`]: the §5 rank-aware scheduler in
 //!   front of N boxed backends (real engines, simulators, or a mix),
 //!   itself a [`ServingFront`] — routing, re-routing on backend
-//!   refusal, and fan-out cancellation behind the same trait.
+//!   refusal, and fan-out cancellation behind the same trait. Backend
+//!   faults are contained (catch-unwind at the poll boundary), health
+//!   is tracked per backend (Healthy→Suspect→Down→Probation), and
+//!   in-flight requests fail over to survivors with bitwise-identical
+//!   client streams via the resume machinery.
 //! - [`metrics`] — per-request TTFT / TPOT / latency recording, SLO
 //!   attainment, the cold-start TTFT decomposition, and per-mode
 //!   cold-start counters.
@@ -38,11 +42,11 @@ pub mod kvcache;
 pub mod metrics;
 
 pub use api::{
-    FinishReason, LifecycleState, Priority, RequestEvent, RequestHandle, SamplingParams,
-    ServeRequest, ServingFront, SloSpec,
+    FinishReason, LifecycleState, Priority, RejectReason, RequestEvent, RequestHandle,
+    SamplingParams, ServeRequest, ServingFront, SloSpec,
 };
 pub use batcher::{Batcher, NextAction};
-pub use cluster::ClusterFront;
+pub use cluster::{ClusterFront, Health, RetryPolicy};
 pub use engine::{ColdStartMode, EngineConfig, InferenceServer};
 pub use kvcache::{KvCacheManager, KvError, PageWriter, PagedKv};
 pub use metrics::{ColdStartStats, MetricsRecorder, RequestRecord, TtftBreakdown};

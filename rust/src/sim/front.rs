@@ -24,8 +24,8 @@ use super::workload::WorkloadRequest;
 use crate::scheduler::registry::{AdapterMeta, GlobalRegistry};
 use crate::scheduler::ServerStats;
 use crate::server::api::{
-    EventChannel, FinishReason, Priority, RequestEvent, RequestHandle, SamplingParams,
-    ServeRequest, ServingFront, SloSpec,
+    EventChannel, FinishReason, Priority, RejectReason, RequestEvent, RequestHandle,
+    SamplingParams, ServeRequest, ServingFront, SloSpec,
 };
 
 /// Book-keeping for one live simulated request.
@@ -99,11 +99,13 @@ impl SimFront {
         &self.inst
     }
 
-    fn validate(&self, req: &ServeRequest) -> Result<usize, String> {
+    fn validate(&self, req: &ServeRequest) -> Result<usize, RejectReason> {
         crate::server::api::validate_shape(req, self.max_prompt, self.kv_capacity)?;
-        self.registry
-            .rank_of(req.adapter)
-            .ok_or_else(|| format!("adapter {} not installed", req.adapter))
+        self.registry.rank_of(req.adapter).ok_or(
+            RejectReason::AdapterNotInstalled {
+                adapter: req.adapter,
+            },
+        )
     }
 
     fn emit(&self, id: u64, event: RequestEvent) {
@@ -196,6 +198,13 @@ impl ServingFront for SimFront {
             }
         };
         channel.lock().unwrap().push(RequestEvent::Admitted);
+        // A failover resubmission resumes mid-stream: the rebuilt
+        // context (prompt + replayed tokens minus the next decode
+        // input) is re-prefilled, only the *remaining* budget is
+        // decoded, and the synthesized token counter starts where the
+        // dead backend stopped — so the deterministic 0,1,2,… stream
+        // continues bitwise across the failover.
+        let replayed = req.resume.as_ref().map_or(0, |rs| rs.tokens.len());
         // Priority insertion via the same helper as the engine's batcher
         // (unknown ids — never live here — rank highest, i.e. stay put).
         let pos = crate::server::api::priority_insert_pos(
@@ -213,8 +222,8 @@ impl ServingFront for SimFront {
                 arrival: self.clock,
                 adapter: req.adapter,
                 rank,
-                prompt_len: req.prompt.len(),
-                output_len: req.sampling.max_new_tokens,
+                prompt_len: req.prompt.len() + replayed.saturating_sub(1),
+                output_len: req.sampling.max_new_tokens.saturating_sub(replayed).max(1),
             }),
         );
         self.live.insert(
@@ -224,7 +233,7 @@ impl ServingFront for SimFront {
                 sampling: req.sampling,
                 priority: req.priority,
                 slo: req.slo,
-                emitted: 0,
+                emitted: replayed,
             },
         );
         handle
@@ -455,6 +464,22 @@ mod tests {
         let h = f.submit(request(1, 32, 50).stop_token(0));
         f.run_until_idle().unwrap();
         assert_eq!(h.tokens(), vec![0]);
+        assert_eq!(h.state(), LifecycleState::Finished);
+    }
+
+    #[test]
+    fn resume_submission_continues_deterministic_stream() {
+        use crate::server::api::ResumeState;
+        let mut f = front();
+        let mut req = request(1, 32, 8);
+        req.resume = Some(ResumeState {
+            tokens: vec![0, 1, 2],
+        });
+        let h = f.submit(req);
+        f.run_until_idle().unwrap();
+        // Tokens 0..=2 were already delivered by the previous backend;
+        // only the continuation 3..=7 lands on this fresh handle.
+        assert_eq!(h.tokens(), vec![3, 4, 5, 6, 7]);
         assert_eq!(h.state(), LifecycleState::Finished);
     }
 

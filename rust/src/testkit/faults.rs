@@ -1,0 +1,539 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Two pieces:
+//!
+//! - [`FaultPlan`] — a schedule of faults at named sites, written in a
+//!   compact text syntax (`kind@site:n[:arg]`, comma-separated) so CLI
+//!   flags, tests, and logs share one representation:
+//!
+//!   | spec                | effect                                             |
+//!   |---------------------|----------------------------------------------------|
+//!   | `panic@poll:12`     | panic inside the 12th `poll()` call                |
+//!   | `error@poll:12`     | the 12th `poll()` returns `Err` (fires once)       |
+//!   | `die@poll:12`       | from the 12th `poll()` on, every call errors       |
+//!   | `panic@decode:3`    | panic on the 3rd poll with a request mid-decode    |
+//!   | `error@submit:2`    | the 2nd `submit()` is rejected as a backend fault  |
+//!   | `panic@submit:2`    | panic inside the 2nd `submit()`                    |
+//!   | `error@load:1`      | the 1st install/prewarm call fails                 |
+//!   | `stall@poll:5`      | from the 5th poll on, claim progress but make none |
+//!   | `stall@poll:5:20`   | …for 20 polls, then recover                        |
+//!   | `slow@poll:5:4`     | from the 5th poll, forward only every 4th poll     |
+//!
+//! - [`ChaosFront`] — a decorator implementing
+//!   [`ServingFront`] around any boxed backend (sim or native engine),
+//!   executing the plan at the matching call sites. Counters are
+//!   per-front and deterministic, so a seeded plan reproduces the same
+//!   failure on every run.
+//!
+//! A backend that panicked or `die`d stays failed: every later call
+//! errors (or panics again), which is what drives the cluster's
+//! Healthy→Suspect→Down health machine. A plain `error` fault is
+//! transient — the next probe succeeds — exercising the
+//! Down→Probation→Healthy recovery path.
+
+use anyhow::anyhow;
+
+use crate::model::LoraSpec;
+use crate::scheduler::ServerStats;
+use crate::server::api::{RejectReason, RequestEvent, RequestHandle, ServeRequest, ServingFront};
+use crate::util::rng::Rng;
+
+/// Where in the serving surface a fault fires. Counts are 1-based
+/// occurrence indices of the site, not global call numbers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// The n-th `submit()` call.
+    Submit(usize),
+    /// The n-th `poll()` call.
+    Poll(usize),
+    /// The n-th `poll()` at which some request is mid-decode (running,
+    /// past prefill).
+    Decode(usize),
+    /// The n-th adapter-load management call
+    /// (`install_adapter` / `prewarm_adapter`).
+    Load(usize),
+}
+
+/// What happens when a fault's site is reached.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic at the site; the backend stays dead (later calls panic
+    /// too). Exercises catch-unwind containment.
+    Panic,
+    /// Fail the one call at the site, then behave normally — a
+    /// transient fault the health machine should recover from.
+    Error,
+    /// Fail the call at the site and every call after it — a hard
+    /// death without unwinding.
+    Die,
+    /// From the site on, `poll()` claims progress (`Ok(true)`) while
+    /// doing nothing, for `polls` polls (`0` = forever) — a wedged
+    /// backend only a stall watchdog can catch.
+    Stall {
+        /// Wedge duration in polls; `0` wedges forever.
+        polls: usize,
+    },
+    /// From the site on, forward only every `factor`-th `poll()`,
+    /// claiming empty progress for the rest — a degraded backend.
+    Slow {
+        /// Forward one poll in `factor`.
+        factor: usize,
+    },
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// What fires.
+    pub kind: FaultKind,
+    /// Where it fires.
+    pub site: FaultSite,
+}
+
+impl std::fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (kind, arg) = match self.kind {
+            FaultKind::Panic => ("panic", None),
+            FaultKind::Error => ("error", None),
+            FaultKind::Die => ("die", None),
+            FaultKind::Stall { polls: 0 } => ("stall", None),
+            FaultKind::Stall { polls } => ("stall", Some(polls)),
+            FaultKind::Slow { factor } => ("slow", Some(factor)),
+        };
+        let (site, n) = match self.site {
+            FaultSite::Submit(n) => ("submit", n),
+            FaultSite::Poll(n) => ("poll", n),
+            FaultSite::Decode(n) => ("decode", n),
+            FaultSite::Load(n) => ("load", n),
+        };
+        write!(f, "{kind}@{site}:{n}")?;
+        if let Some(a) = arg {
+            write!(f, ":{a}")?;
+        }
+        Ok(())
+    }
+}
+
+/// A deterministic schedule of faults for one backend.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// The scheduled faults (order irrelevant; sites are absolute).
+    pub faults: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// The empty plan: a `ChaosFront` with it is a transparent proxy.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// A plan with one fault.
+    pub fn one(kind: FaultKind, site: FaultSite) -> FaultPlan {
+        FaultPlan {
+            faults: vec![FaultSpec { kind, site }],
+        }
+    }
+
+    /// Parse the comma-separated `kind@site:n[:arg]` syntax (see the
+    /// module table). Whitespace around entries is ignored.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut faults = Vec::new();
+        for entry in s.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (kind_s, rest) = entry
+                .split_once('@')
+                .ok_or_else(|| format!("fault `{entry}`: expected kind@site:n"))?;
+            let mut parts = rest.split(':');
+            let site_s = parts.next().unwrap_or_default();
+            let n: usize = parts
+                .next()
+                .ok_or_else(|| format!("fault `{entry}`: missing occurrence count"))?
+                .parse()
+                .map_err(|e| format!("fault `{entry}`: bad count ({e})"))?;
+            let arg: Option<usize> = match parts.next() {
+                None => None,
+                Some(a) => Some(
+                    a.parse()
+                        .map_err(|e| format!("fault `{entry}`: bad argument ({e})"))?,
+                ),
+            };
+            if parts.next().is_some() {
+                return Err(format!("fault `{entry}`: too many fields"));
+            }
+            let kind = match (kind_s, arg) {
+                ("panic", None) => FaultKind::Panic,
+                ("error", None) => FaultKind::Error,
+                ("die", None) => FaultKind::Die,
+                ("stall", arg) => FaultKind::Stall {
+                    polls: arg.unwrap_or(0),
+                },
+                ("slow", Some(factor)) if factor >= 1 => FaultKind::Slow { factor },
+                ("slow", _) => {
+                    return Err(format!("fault `{entry}`: slow needs a factor ≥ 1"))
+                }
+                _ => return Err(format!("fault `{entry}`: unknown kind `{kind_s}`")),
+            };
+            let site = match site_s {
+                "submit" => FaultSite::Submit(n),
+                "poll" => FaultSite::Poll(n),
+                "decode" => FaultSite::Decode(n),
+                "load" => FaultSite::Load(n),
+                other => return Err(format!("fault `{entry}`: unknown site `{other}`")),
+            };
+            faults.push(FaultSpec { kind, site });
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    /// A seeded mid-decode kill: panic on the n-th decode poll, with
+    /// `n` drawn deterministically from `[lo, hi)` — the canonical
+    /// "backend dies while streaming" chaos experiment.
+    pub fn seeded_mid_decode_kill(seed: u64, lo: usize, hi: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA_017);
+        let n = if hi > lo { rng.range(lo, hi) } else { lo.max(1) };
+        FaultPlan::one(FaultKind::Panic, FaultSite::Decode(n.max(1)))
+    }
+
+    /// Is the plan empty?
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.faults.is_empty() {
+            return f.write_str("(no faults)");
+        }
+        for (i, spec) in self.faults.iter().enumerate() {
+            if i > 0 {
+                f.write_str(",")?;
+            }
+            write!(f, "{spec}")?;
+        }
+        Ok(())
+    }
+}
+
+/// How a triggered fault manifests at one call site.
+enum Fire {
+    Panic,
+    Error,
+}
+
+/// A [`ServingFront`] decorator that executes a [`FaultPlan`] against
+/// any boxed backend. Transparent when the plan is empty (or spent):
+/// every call forwards to the inner backend.
+pub struct ChaosFront {
+    inner: Box<dyn ServingFront>,
+    plan: FaultPlan,
+    polls: usize,
+    decode_polls: usize,
+    submits: usize,
+    loads: usize,
+    /// `Some(end)` while wedged: polls `< end` claim empty progress
+    /// (`usize::MAX` = wedged forever).
+    stalled_until: Option<usize>,
+    /// `Some(factor)` once a slow fault triggered.
+    slow: Option<usize>,
+    /// Set once the backend died (panic or `die`); every later call
+    /// re-fails the same way.
+    dead: Option<Fire>,
+}
+
+impl ChaosFront {
+    /// Wrap `inner` with a fault schedule.
+    pub fn new(inner: Box<dyn ServingFront>, plan: FaultPlan) -> ChaosFront {
+        ChaosFront {
+            inner,
+            plan,
+            polls: 0,
+            decode_polls: 0,
+            submits: 0,
+            loads: 0,
+            stalled_until: None,
+            slow: None,
+            dead: None,
+        }
+    }
+
+    /// `poll()` calls so far (for asserting fault timing in tests).
+    pub fn polls(&self) -> usize {
+        self.polls
+    }
+
+    /// Has a panic/die fault permanently killed this backend?
+    pub fn is_dead(&self) -> bool {
+        self.dead.is_some()
+    }
+
+    /// Check one site occurrence against the plan; returns how to fail
+    /// (if at all) and applies stateful kinds (stall/slow/die).
+    fn trigger(&mut self, hit: impl Fn(&FaultSite) -> bool) -> Option<Fire> {
+        let mut fire = None;
+        for spec in &self.plan.faults {
+            if !hit(&spec.site) {
+                continue;
+            }
+            match spec.kind {
+                FaultKind::Panic => {
+                    self.dead = Some(Fire::Panic);
+                    fire = Some(Fire::Panic);
+                }
+                FaultKind::Error => fire = fire.or(Some(Fire::Error)),
+                FaultKind::Die => {
+                    self.dead = Some(Fire::Error);
+                    fire = fire.or(Some(Fire::Error));
+                }
+                FaultKind::Stall { polls } => {
+                    self.stalled_until = Some(if polls == 0 {
+                        usize::MAX
+                    } else {
+                        self.polls.saturating_add(polls)
+                    });
+                }
+                FaultKind::Slow { factor } => self.slow = Some(factor),
+            }
+        }
+        fire
+    }
+
+    /// Fail the current call according to `fire`.
+    fn fail<T>(&self, fire: &Fire, site: &str, ok_err: impl FnOnce(String) -> T) -> T {
+        match fire {
+            Fire::Panic => panic!("chaos: injected panic at {site}"),
+            Fire::Error => ok_err(format!("chaos: injected fault at {site}")),
+        }
+    }
+}
+
+impl ServingFront for ChaosFront {
+    fn submit(&mut self, req: ServeRequest) -> RequestHandle {
+        self.submits += 1;
+        let n = self.submits;
+        if let Some(fire) =
+            self.trigger(|s| matches!(s, FaultSite::Submit(m) if *m == n))
+        {
+            return self.fail(&fire, "submit", |msg| {
+                let (handle, chan) = RequestHandle::new(u64::MAX - n as u64);
+                chan.lock()
+                    .unwrap()
+                    .push(RequestEvent::Rejected(RejectReason::Other(msg)));
+                handle
+            });
+        }
+        if let Some(fire) = &self.dead {
+            return self.fail(fire, "submit (dead backend)", |msg| {
+                let (handle, chan) = RequestHandle::new(u64::MAX - n as u64);
+                chan.lock()
+                    .unwrap()
+                    .push(RequestEvent::Rejected(RejectReason::Other(msg)));
+                handle
+            });
+        }
+        self.inner.submit(req)
+    }
+
+    fn poll(&mut self) -> anyhow::Result<bool> {
+        self.polls += 1;
+        let n = self.polls;
+        // Mid-decode means some request is past prefill (running).
+        let mid_decode = !self.inner.stats().running_ranks.is_empty();
+        if mid_decode {
+            self.decode_polls += 1;
+        }
+        let dn = self.decode_polls;
+        let fire = self.trigger(|s| {
+            matches!(s, FaultSite::Poll(m) if *m == n)
+                || (mid_decode && matches!(s, FaultSite::Decode(m) if *m == dn))
+        });
+        if let Some(fire) = fire {
+            return self.fail(&fire, "poll", |msg| Err(anyhow!(msg)));
+        }
+        if let Some(fire) = &self.dead {
+            return self.fail(fire, "poll (dead backend)", |msg| Err(anyhow!(msg)));
+        }
+        if let Some(end) = self.stalled_until {
+            if self.polls < end {
+                // Wedged: claim progress, make none.
+                return Ok(true);
+            }
+            self.stalled_until = None;
+        }
+        if let Some(factor) = self.slow {
+            if self.polls % factor != 0 {
+                // Degraded, not wedged: skip the poll, but never fake
+                // progress on an idle backend (that would wedge
+                // `run_until_idle` forever once the work drains).
+                return Ok(self.inner.stats().total_requests() > 0);
+            }
+        }
+        self.inner.poll()
+    }
+
+    fn cancel(&mut self, id: u64) -> bool {
+        self.inner.cancel(id)
+    }
+
+    fn stats(&self) -> ServerStats {
+        self.inner.stats()
+    }
+
+    fn install_adapter(&mut self, spec: &LoraSpec) -> anyhow::Result<()> {
+        self.loads += 1;
+        let n = self.loads;
+        if let Some(fire) = self.trigger(|s| matches!(s, FaultSite::Load(m) if *m == n)) {
+            return self.fail(&fire, "install_adapter", |msg| Err(anyhow!(msg)));
+        }
+        if let Some(fire) = &self.dead {
+            return self.fail(fire, "install_adapter (dead backend)", |msg| {
+                Err(anyhow!(msg))
+            });
+        }
+        self.inner.install_adapter(spec)
+    }
+
+    fn uninstall_adapter(&mut self, adapter: u64) -> anyhow::Result<()> {
+        if let Some(fire) = &self.dead {
+            return self.fail(fire, "uninstall_adapter (dead backend)", |msg| {
+                Err(anyhow!(msg))
+            });
+        }
+        self.inner.uninstall_adapter(adapter)
+    }
+
+    fn prewarm_adapter(&mut self, adapter: u64) -> anyhow::Result<bool> {
+        self.loads += 1;
+        let n = self.loads;
+        if let Some(fire) = self.trigger(|s| matches!(s, FaultSite::Load(m) if *m == n)) {
+            return self.fail(&fire, "prewarm_adapter", |msg| Err(anyhow!(msg)));
+        }
+        if let Some(fire) = &self.dead {
+            return self.fail(fire, "prewarm_adapter (dead backend)", |msg| {
+                Err(anyhow!(msg))
+            });
+        }
+        self.inner.prewarm_adapter(adapter)
+    }
+
+    fn cold_start_stats(&self) -> Option<crate::server::metrics::ColdStartStats> {
+        self.inner.cold_start_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+    use crate::model::LlamaConfig;
+    use crate::server::api::LifecycleState;
+    use crate::sim::{GpuModel, ServingMode, SimFront, SimInstance};
+
+    fn sim() -> Box<dyn ServingFront> {
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let inst = SimInstance::new(0, model, ServingMode::Cached, 8, 8, 16);
+        let mut f = SimFront::new(inst, 128);
+        f.register_adapter(1, 16);
+        Box::new(f)
+    }
+
+    #[test]
+    fn parse_roundtrips_every_kind() {
+        let s = "panic@poll:12,error@submit:2,die@poll:7,stall@poll:5:20,slow@poll:3:4,\
+                 panic@decode:1,error@load:1,stall@poll:9";
+        let plan = FaultPlan::parse(s).unwrap();
+        assert_eq!(plan.faults.len(), 8);
+        assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("panic@poll").is_err());
+        assert!(FaultPlan::parse("panic@nowhere:1").is_err());
+        assert!(FaultPlan::parse("wat@poll:1").is_err());
+        assert!(FaultPlan::parse("slow@poll:1").is_err());
+    }
+
+    #[test]
+    fn empty_plan_is_transparent() {
+        let mut chaos = ChaosFront::new(sim(), FaultPlan::none());
+        let h = chaos.submit(ServeRequest::new(1, vec![1; 8]).max_new_tokens(4));
+        chaos.run_until_idle().unwrap();
+        assert_eq!(h.state(), LifecycleState::Finished);
+        assert_eq!(h.tokens(), vec![0, 1, 2, 3]);
+        assert!(!chaos.is_dead());
+    }
+
+    #[test]
+    fn error_fault_fires_once_then_recovers() {
+        let mut chaos =
+            ChaosFront::new(sim(), FaultPlan::parse("error@poll:2").unwrap());
+        let h = chaos.submit(ServeRequest::new(1, vec![1; 8]).max_new_tokens(3));
+        assert!(chaos.poll().is_ok());
+        assert!(chaos.poll().is_err(), "2nd poll must fail");
+        assert!(!chaos.is_dead());
+        chaos.run_until_idle().unwrap();
+        assert_eq!(h.state(), LifecycleState::Finished);
+    }
+
+    #[test]
+    fn die_fault_fails_every_later_call() {
+        let mut chaos = ChaosFront::new(sim(), FaultPlan::parse("die@poll:1").unwrap());
+        let _h = chaos.submit(ServeRequest::new(1, vec![1; 8]).max_new_tokens(3));
+        assert!(chaos.poll().is_err());
+        assert!(chaos.poll().is_err());
+        assert!(chaos.is_dead());
+        assert!(chaos.install_adapter(&LoraSpec::standard(2, 8, "sim")).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "injected panic at poll")]
+    fn panic_fault_panics_at_the_scheduled_poll() {
+        let mut chaos = ChaosFront::new(sim(), FaultPlan::parse("panic@poll:2").unwrap());
+        let _h = chaos.submit(ServeRequest::new(1, vec![1; 8]).max_new_tokens(3));
+        let _ = chaos.poll();
+        let _ = chaos.poll(); // boom
+    }
+
+    #[test]
+    fn decode_site_waits_for_a_running_request() {
+        let mut chaos =
+            ChaosFront::new(sim(), FaultPlan::parse("die@decode:1").unwrap());
+        // No work: plain polls are not decode polls, nothing fires.
+        assert!(chaos.poll().is_ok());
+        let _h = chaos.submit(ServeRequest::new(1, vec![1; 8]).max_new_tokens(8));
+        // Prefill poll: still nothing running when the poll *starts*.
+        assert!(chaos.poll().is_ok());
+        // Now the request is running (mid-decode) → the fault fires.
+        assert!(chaos.poll().is_err());
+    }
+
+    #[test]
+    fn stall_claims_progress_without_making_any() {
+        let mut chaos =
+            ChaosFront::new(sim(), FaultPlan::parse("stall@poll:1:3").unwrap());
+        let h = chaos.submit(ServeRequest::new(1, vec![1; 8]).max_new_tokens(2));
+        for _ in 0..3 {
+            // Wedged: claims progress, emits nothing.
+            assert!(chaos.poll().unwrap());
+            assert!(h.tokens().is_empty());
+        }
+        // Recovered after the window.
+        chaos.run_until_idle().unwrap();
+        assert_eq!(h.state(), LifecycleState::Finished);
+    }
+
+    #[test]
+    fn seeded_mid_decode_kill_is_deterministic() {
+        let a = FaultPlan::seeded_mid_decode_kill(7, 1, 10);
+        let b = FaultPlan::seeded_mid_decode_kill(7, 1, 10);
+        assert_eq!(a, b);
+        assert!(matches!(
+            a.faults[0],
+            FaultSpec {
+                kind: FaultKind::Panic,
+                site: FaultSite::Decode(n)
+            } if (1..10).contains(&n)
+        ));
+    }
+}

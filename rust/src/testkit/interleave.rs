@@ -14,6 +14,10 @@
 //!   therefore be deterministic.
 //! - [`explore_random`] — seeded random schedules for state spaces too
 //!   large to exhaust (driving real components rather than models).
+//! - [`explore_random_indexed`] — the same, with the schedule index
+//!   passed to the factory, so each schedule can vary the model itself
+//!   deterministically (crash schedules: a different fault site per
+//!   schedule, fixed oracles).
 //!
 //! Oracles: [`Model::invariant`] is checked after every step,
 //! [`Model::finally`] once all threads finish. A step may return
@@ -272,6 +276,75 @@ pub fn explore_random<M: Model>(
     report
 }
 
+/// [`explore_random`] with the schedule index passed to the factory, so
+/// each schedule can build a *different* model deterministically —
+/// the crash-schedule pattern: schedule `i` derives a fault plan from
+/// `(seed, i)` and kills a modeled backend at a different step each
+/// time, while the oracles stay fixed.
+pub fn explore_random_indexed<M: Model>(
+    factory: impl Fn(usize) -> M,
+    schedules: usize,
+    seed: u64,
+) -> Report {
+    let mut rng = Rng::new(seed);
+    let mut report = Report {
+        schedules: 0,
+        exhausted: false,
+        violation: None,
+    };
+    for i in 0..schedules {
+        let mut m = factory(i);
+        let mut pcs = vec![0usize; m.threads()];
+        let mut trace = Vec::new();
+        loop {
+            let mut candidates: Vec<usize> = (0..m.threads())
+                .filter(|&t| pcs[t] < m.steps(t))
+                .collect();
+            if candidates.is_empty() {
+                report.schedules += 1;
+                if let Err(msg) = m.finally() {
+                    report.violation = Some(Violation {
+                        schedule: trace,
+                        message: format!("at end of schedule {i}: {msg}"),
+                    });
+                    return report;
+                }
+                break;
+            }
+            rng.shuffle(&mut candidates);
+            let mut ran = false;
+            for &t in &candidates {
+                match m.step(t, pcs[t]) {
+                    StepOutcome::Blocked => continue,
+                    StepOutcome::Ran => {
+                        pcs[t] += 1;
+                        trace.push(t);
+                        if let Err(msg) = m.invariant() {
+                            report.schedules += 1;
+                            report.violation = Some(Violation {
+                                schedule: trace,
+                                message: format!("schedule {i}: {msg}"),
+                            });
+                            return report;
+                        }
+                        ran = true;
+                        break;
+                    }
+                }
+            }
+            if !ran {
+                report.schedules += 1;
+                report.violation = Some(Violation {
+                    schedule: trace,
+                    message: format!("schedule {i} deadlock: threads {candidates:?} all blocked"),
+                });
+                return report;
+            }
+        }
+    }
+    report
+}
+
 /// Boxed step closure over shared state `S`.
 pub type Step<S> = Box<dyn Fn(&mut S) -> StepOutcome>;
 
@@ -479,6 +552,30 @@ mod tests {
     fn random_mode_catches_lost_update() {
         let report = explore_random(racy_counter, 256, 0xCA7A);
         assert!(report.violation.is_some(), "random missed the race");
+    }
+
+    #[test]
+    fn indexed_mode_varies_the_model_per_schedule() {
+        // Schedule i's model writes i; the finally oracle accepts any
+        // value < 8, so all 8 indexed schedules must run (proving the
+        // factory saw every index), then index 8 trips the oracle.
+        let factory = |i: usize| {
+            ScriptModel::new(0usize)
+                .thread(vec![always(move |s: &mut usize| *s = i)])
+                .finally(|s| {
+                    if *s < 8 {
+                        Ok(())
+                    } else {
+                        Err(format!("model saw index {s}"))
+                    }
+                })
+        };
+        let report = explore_random_indexed(factory, 8, 1);
+        assert!(report.ok(), "{report}");
+        assert_eq!(report.schedules, 8);
+        let report = explore_random_indexed(factory, 9, 1);
+        let v = report.violation.expect("index 8 not reached");
+        assert!(v.message.contains("schedule 8"), "{}", v.message);
     }
 
     #[test]

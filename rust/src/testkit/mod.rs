@@ -10,7 +10,14 @@
 //!   concurrent protocols with shadow-state oracles. Used by
 //!   `rust/tests/interleave_lifecycle.rs` on the shm SPSC/doorbell
 //!   protocol model and the request-lifecycle state machine.
+//! - [`faults`] — deterministic fault injection: a seeded
+//!   [`faults::FaultPlan`] (panic/error/die/stall/slow at submit, poll
+//!   step N, mid-decode, adapter-load sites) executed by the
+//!   [`faults::ChaosFront`] decorator around any `ServingFront`
+//!   backend. Drives the cluster failover suite
+//!   (`rust/tests/integration_failover.rs`) and `caraserve chaos`.
 
+pub mod faults;
 pub mod interleave;
 pub mod prop;
 

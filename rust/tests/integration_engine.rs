@@ -124,7 +124,7 @@ fn invalid_requests_surface_as_rejected_events() {
     let h = server.submit(ServeRequest::new(999, vec![1; 8]).max_new_tokens(4));
     match h.drain_events().as_slice() {
         [RequestEvent::Rejected(reason)] => {
-            assert!(reason.contains("adapter 999"), "{reason}");
+            assert!(reason.to_string().contains("adapter 999"), "{reason}");
         }
         other => panic!("expected lone Rejected event, got {other:?}"),
     }

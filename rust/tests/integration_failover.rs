@@ -1,0 +1,194 @@
+//! Integration: fault-tolerant cluster serving over *real* engines.
+//!
+//! The ISSUE 8 acceptance drills:
+//!
+//! 1. Kill 1 of 3 native backends mid-decode (seeded injected panic).
+//!    Every in-flight request must either complete with a token stream
+//!    bitwise-identical to a no-fault oracle run, or terminate with
+//!    exactly one typed terminal event. The panic must not escape the
+//!    `ClusterFront` poll boundary.
+//! 2. Kill the coordinator and restart it from `GlobalRegistry::save`/
+//!    `load` over fresh, empty engines: the restored placements must be
+//!    identical, and the migration engine must keep migrating.
+//! 3. Kill *every* backend: in-flight requests end with typed
+//!    `BackendFailed` rejections, and new submissions shed with typed
+//!    `Overloaded` instead of queueing into a dead cluster.
+
+use caraserve::coordinator::{Coordinator, CoordinatorConfig};
+use caraserve::runtime::{NativeConfig, NativeRuntime};
+use caraserve::server::cluster::synthetic::{self, ChaosConfig, SyntheticConfig};
+use caraserve::server::{
+    ColdStartMode, EngineConfig, Health, InferenceServer, LifecycleState, RetryPolicy,
+    ServeRequest, ServingFront,
+};
+use caraserve::testkit::faults::FaultPlan;
+
+fn base_cfg() -> SyntheticConfig {
+    SyntheticConfig {
+        instances: 3,
+        requests: 24,
+        adapters: 12,
+        seed: 7,
+        threads: 1,
+        cpu_workers: 0,
+        // Cached admits keep both runs free of wall-clock-dependent
+        // load windows: the streams are deterministic, which is what
+        // the bitwise oracle comparison needs.
+        cold_start: ColdStartMode::Cached,
+        kv_pages: 256,
+        polls_per_arrival: 2,
+        skew: 0.0,
+    }
+}
+
+#[test]
+fn backend_death_mid_decode_is_bitwise_stable() {
+    let cfg = base_cfg();
+    let chaos = ChaosConfig {
+        faults: vec![(0, FaultPlan::seeded_mid_decode_kill(cfg.seed, 2, 8))],
+        retry: None,
+    };
+    // run_chaos returning Ok at all proves the injected panic never
+    // escaped ClusterFront::poll.
+    let (rep, oracle) = synthetic::run_chaos("rank-aware", &cfg, &chaos).expect("chaos run");
+    assert_eq!(oracle.finished, cfg.requests, "oracle run lost requests");
+    // The §failover acceptance criterion: no completed stream may
+    // differ from the no-fault oracle — resumed requests regenerate
+    // their undelivered suffix deterministically on the survivor.
+    assert_eq!(rep.diverged, 0, "failover is not bitwise-stable");
+    assert_eq!(
+        rep.stable + rep.failed,
+        cfg.requests,
+        "request accounting: {rep:?}"
+    );
+    // The victim died mid-decode, so it had running requests: at least
+    // one was re-placed onto a survivor (or typed-failed if its adapter
+    // had no second copy).
+    assert!(
+        rep.failovers + rep.failed >= 1,
+        "the kill touched nothing: {rep:?}"
+    );
+    assert_eq!(rep.health[0], Health::Down, "panicked backend not quarantined");
+    assert!(
+        rep.health[1..].iter().all(|h| *h == Health::Healthy),
+        "survivors must stay healthy: {:?}",
+        rep.health
+    );
+    // Both runs fully reconcile: nothing hangs, nothing double-counts.
+    assert_eq!(rep.base.finished + rep.base.rejected, cfg.requests);
+}
+
+#[test]
+fn every_backend_dead_degrades_with_typed_shedding() {
+    let cfg = SyntheticConfig {
+        instances: 2,
+        requests: 8,
+        ..base_cfg()
+    };
+    let die = FaultPlan::parse("die@poll:1").expect("plan");
+    let chaos = ChaosConfig {
+        faults: vec![(0, die.clone()), (1, die)],
+        retry: Some(RetryPolicy {
+            down_after: 1,
+            ..Default::default()
+        }),
+    };
+    let (rep, oracle) = synthetic::run_chaos("most-idle", &cfg, &chaos).expect("chaos run");
+    assert_eq!(oracle.finished, cfg.requests);
+    // Nothing can finish on a dead cluster, but everything terminates:
+    // routed requests get typed BackendFailed, later submissions are
+    // shed with typed Overloaded rather than queueing forever.
+    assert_eq!(rep.base.finished, 0);
+    assert_eq!(rep.base.rejected, cfg.requests);
+    assert!(rep.shed >= 1, "degradation gate never shed: {rep:?}");
+    assert!(
+        rep.health.iter().all(|h| *h == Health::Down),
+        "all backends must be down: {:?}",
+        rep.health
+    );
+}
+
+fn bare_engine() -> InferenceServer {
+    InferenceServer::new(
+        NativeRuntime::new(NativeConfig::tiny()),
+        EngineConfig {
+            cold_start: ColdStartMode::Cached,
+            kv_pages: 256,
+            ..Default::default()
+        },
+    )
+    .expect("server")
+}
+
+fn placements_of(coord: &Coordinator) -> Vec<(u64, Vec<usize>)> {
+    let registry = coord.cluster().registry();
+    registry
+        .ids()
+        .into_iter()
+        .map(|id| (id, registry.servers_for(id)))
+        .collect()
+}
+
+#[test]
+fn coordinator_restart_restores_placements_and_keeps_migrating() {
+    let cfg = SyntheticConfig {
+        instances: 2,
+        requests: 16,
+        adapters: 8,
+        seed: 3,
+        skew: 1.0,
+        polls_per_arrival: 1,
+        ..base_cfg()
+    };
+    let ccfg = CoordinatorConfig {
+        migrate_interval: 4,
+        prewarm: 2,
+        replicas: 1,
+        min_imbalance: 2,
+        ..Default::default()
+    };
+    let (rep, coord) =
+        synthetic::run_coordinated("rank-aware", &cfg, ccfg.clone()).expect("coordinated run");
+    assert_eq!(rep.finished + rep.rejected, cfg.requests);
+    let before = placements_of(&coord);
+    let dir = std::env::temp_dir().join("caraserve-failover-test");
+    std::fs::create_dir_all(&dir).expect("tempdir");
+    let path = dir.join("coordinator_state.json");
+    coord.save_state(&path).expect("save");
+    drop(coord); // crash: the control plane's memory is gone
+
+    // Restart over fresh, empty native engines from the snapshot.
+    let backends: Vec<Box<dyn ServingFront>> = (0..cfg.instances)
+        .map(|_| Box::new(bare_engine()) as Box<dyn ServingFront>)
+        .collect();
+    let mut coord = Coordinator::load_state(
+        &path,
+        backends,
+        synthetic::policy("rank-aware", cfg.seed).expect("policy"),
+        ccfg,
+    )
+    .expect("restart");
+    assert_eq!(placements_of(&coord), before, "restart changed placements");
+
+    // The restarted control plane still serves and still migrates:
+    // pile load onto a single-host adapter, then rebalance.
+    let hot = before
+        .iter()
+        .find(|(_, servers)| servers.len() == 1)
+        .map(|&(id, _)| id)
+        .expect("replicas = 1 ⇒ single-host adapters exist");
+    let handles: Vec<_> = (0..6)
+        .map(|_| coord.submit(ServeRequest::new(hot, vec![1; 8]).max_new_tokens(3)))
+        .collect();
+    coord.tick().expect("tick");
+    assert!(
+        coord.coordinator_stats().migrations >= 1,
+        "restarted coordinator stopped migrating: {:?}",
+        coord.coordinator_stats()
+    );
+    coord.run_until_idle().expect("drain");
+    for h in &handles {
+        assert_eq!(h.state(), LifecycleState::Finished);
+    }
+    std::fs::remove_file(&path).ok();
+}

@@ -9,6 +9,11 @@
 //!    `ClusterFront` driven through ≥1,200 seeded random schedules of
 //!    submit/cancel/poll/install/uninstall/prewarm, with oracles for
 //!    terminal-event uniqueness and registry-placement serveability.
+//! 3. Crash schedules: the same lifecycle traffic with one cluster
+//!    backend killed (injected panic) at a seeded random decode step,
+//!    a different step per schedule. Oracles: every request still ends
+//!    with exactly one terminal event, and every registry placement on
+//!    a live backend stays serveable.
 
 use std::cell::Cell;
 use std::sync::Arc;
@@ -18,9 +23,14 @@ use caraserve::model::{LlamaConfig, LoraSpec};
 use caraserve::perfmodel::{KernelKind, PerfModel};
 use caraserve::scheduler::registry::{AdapterMeta, GlobalRegistry};
 use caraserve::scheduler::{policy_by_name, RankAwareConfig};
-use caraserve::server::{ClusterFront, RequestEvent, RequestHandle, ServeRequest, ServingFront};
+use caraserve::server::{
+    ClusterFront, Health, RequestEvent, RequestHandle, ServeRequest, ServingFront,
+};
 use caraserve::sim::{GpuModel, ServingMode, SimFront, SimInstance};
-use caraserve::testkit::interleave::{always, explore, explore_random, when, ScriptModel, Step};
+use caraserve::testkit::faults::{ChaosFront, FaultPlan};
+use caraserve::testkit::interleave::{
+    always, explore, explore_random, explore_random_indexed, when, ScriptModel, Step,
+};
 use caraserve::util::rng::Rng;
 
 // ---------------------------------------------------------------------------
@@ -474,4 +484,124 @@ fn lifecycle_schedules_hold_on_cluster_front() {
     );
     assert!(report.ok(), "{report}");
     assert_eq!(report.schedules, 600);
+}
+
+// ---------------------------------------------------------------------------
+// Part 3: crash schedules — one backend dies at a random step.
+// ---------------------------------------------------------------------------
+
+/// Like [`cluster_front`], but one randomly chosen backend is wrapped
+/// in a [`ChaosFront`] executing `plan` (a seeded panic kill).
+fn chaos_cluster_front(rng: &mut Rng, plan: &FaultPlan) -> ClusterFront {
+    let n = rng.range(2, 4);
+    let victim = rng.range(0, n);
+    let rank_of = |id: u64| [8usize, 16, 32, 64][(id % 4) as usize];
+    let mut backends: Vec<Box<dyn ServingFront>> = Vec::new();
+    for s in 0..n {
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let inst = SimInstance::new(s, model, ServingMode::CaraServe, 4, 8, 16);
+        let mut f = SimFront::new(inst, 64);
+        for id in 0..4u64 {
+            if (id as usize) % n == s || (id as usize + 1) % n == s {
+                f.register_adapter(id, rank_of(id));
+            }
+        }
+        let boxed: Box<dyn ServingFront> = Box::new(f);
+        backends.push(if s == victim {
+            Box::new(ChaosFront::new(boxed, plan.clone()))
+        } else {
+            boxed
+        });
+    }
+    let registry = Arc::new(GlobalRegistry::new());
+    for id in 0..4u64 {
+        registry.register(AdapterMeta {
+            id,
+            rank: rank_of(id),
+            base_model: "sim".into(),
+            weights_path: String::new(),
+        });
+    }
+    let pre = PerfModel::from_coefficients(KernelKind::Bgmv, 4e-5, 60e-3);
+    let dec = PerfModel::from_coefficients(KernelKind::Bgmv, 1.3e-5, 24.8e-3);
+    let name = *rng.choose(&["rank-aware", "most-idle", "first-fit", "random"]);
+    let policy = policy_by_name(name, pre, dec, RankAwareConfig::default(), 7).unwrap();
+    ClusterFront::new(backends, policy, registry)
+}
+
+/// [`lifecycle_oracle`] relaxed for schedules with an injected crash: a
+/// request may stream tokens and *then* terminate with a typed
+/// rejection (its backend died with no survivor for its adapter), so
+/// the "rejected saw no activity" clause is dropped. What must still
+/// hold under faults: a terminal state, exactly one terminal event,
+/// nothing after it, and a finished stream is non-empty.
+fn crash_oracle<F: ServingFront>(s: &Lifecycle<F>) -> Result<(), String> {
+    if !s.drained {
+        return Err("drainer thread never ran".into());
+    }
+    for h in &s.handles {
+        let state = h.state();
+        if !state.is_terminal() {
+            return Err(format!("request {} ended in {state:?}", h.id()));
+        }
+        let events = h.drain_events();
+        let terminals = events.iter().filter(|e| e.is_terminal()).count();
+        if terminals != 1 {
+            return Err(format!(
+                "request {}: {terminals} terminal events in {events:?}",
+                h.id()
+            ));
+        }
+        let last = events.last().expect("terminal implies ≥ 1 event");
+        if !last.is_terminal() {
+            return Err(format!("request {}: events after terminal", h.id()));
+        }
+        if matches!(last, RequestEvent::Finished(_)) && h.tokens().is_empty() {
+            return Err(format!("request {}: finished without tokens", h.id()));
+        }
+    }
+    Ok(())
+}
+
+/// ≥300 crash schedules: lifecycle traffic with one backend panicking
+/// at a seeded decode step that varies per schedule. No panic may
+/// escape the cluster; terminal-event uniqueness must survive the
+/// failover; registry placements on *live* backends stay serveable (a
+/// placement on the dead backend is tolerated — its copy died with it,
+/// which is exactly what the coordinator's restore path repairs).
+#[test]
+fn crash_schedules_keep_terminals_unique_and_registry_consistent() {
+    let report = explore_random_indexed(
+        |i| {
+            let seed = 0xFA_1717 + i as u64;
+            let mut rng = Rng::new(seed);
+            let plan = FaultPlan::seeded_mid_decode_kill(seed, 1, 12);
+            let front = chaos_cluster_front(&mut rng, &plan);
+            let mut m = lifecycle_model(front, random_scripts(&mut rng));
+            m = m.invariant(|s| {
+                let stats = s.front.per_server_stats();
+                for id in s.front.registry().ids() {
+                    for srv in s.front.registry().servers_for(id) {
+                        if srv >= stats.len() {
+                            return Err(format!("adapter {id} placed on ghost server {srv}"));
+                        }
+                        if matches!(s.front.health_of(srv), Health::Healthy | Health::Suspect)
+                            && !stats[srv].can_serve(id)
+                        {
+                            return Err(format!(
+                                "adapter {id} placed on live server {srv} which cannot serve it"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            });
+            // Overrides the strict lifecycle oracle set by the builder.
+            m.finally(|s| crash_oracle(s))
+        },
+        300,
+        0xFA17_5EED,
+    );
+    assert!(report.ok(), "{report}");
+    assert_eq!(report.schedules, 300);
 }
