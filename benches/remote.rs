@@ -1,0 +1,205 @@
+//! Remote fan-out cost: the ISSUE 9 distributed tier measured at the
+//! router's hot control-plane call — `ClusterFront::stats()`, which
+//! fans one Stats RPC out to every backend and aggregates the replies.
+//!
+//! Two compositions of the same 16-backend cluster are timed: all
+//! backends in-process (the PR 7 baseline) and all backends behind
+//! `RemoteFront`s over socketpairs, each served by its own host thread
+//! speaking the `remote::wire` protocol. The aggregated snapshots must
+//! be identical — the remote hop may cost time but never meaning. A
+//! short end-to-end streaming phase through the remote composition
+//! closes the loop (every request must finish).
+//!
+//! Emits `BENCH_remote.json` in the working directory (plus the
+//! standard `target/bench-reports/remote.json`); CI runs `--smoke`.
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use caraserve::config::GpuSpec;
+use caraserve::ipc::SocketChannel;
+use caraserve::model::LlamaConfig;
+use caraserve::perfmodel::{KernelKind, PerfModel};
+use caraserve::remote::client::DEFAULT_IO_TIMEOUT;
+use caraserve::remote::{serve_connection, RemoteFront};
+use caraserve::scheduler::registry::{AdapterMeta, GlobalRegistry};
+use caraserve::scheduler::{policy_by_name, RankAwareConfig};
+use caraserve::server::{ClusterFront, LifecycleState, ServeRequest, ServingFront};
+use caraserve::sim::{GpuModel, ServingMode, SimFront, SimInstance};
+use caraserve::util::json::{self, Json};
+
+const BACKENDS: usize = 16;
+const ADAPTERS: u64 = 8;
+
+fn rank_of(id: u64) -> usize {
+    [8usize, 16, 32, 64][(id % 4) as usize]
+}
+
+fn sim_front(s: usize) -> SimFront {
+    let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+    let inst = SimInstance::new(s, model, ServingMode::CaraServe, 32, 8, 64);
+    let mut f = SimFront::new(inst, 512);
+    for id in 0..ADAPTERS {
+        f.register_adapter(id, rank_of(id));
+    }
+    f
+}
+
+fn cluster(backends: Vec<Box<dyn ServingFront>>) -> ClusterFront {
+    let registry = Arc::new(GlobalRegistry::new());
+    for id in 0..ADAPTERS {
+        registry.register(AdapterMeta {
+            id,
+            rank: rank_of(id),
+            base_model: "sim".into(),
+            weights_path: String::new(),
+        });
+        for s in 0..BACKENDS {
+            registry.place(id, s);
+        }
+    }
+    let pre = PerfModel::from_coefficients(KernelKind::Bgmv, 4e-5, 60e-3);
+    let dec = PerfModel::from_coefficients(KernelKind::Bgmv, 1.3e-5, 24.8e-3);
+    let policy = policy_by_name("rank-aware", pre, dec, RankAwareConfig::default(), 7)
+        .expect("policy");
+    ClusterFront::new(backends, policy, registry)
+}
+
+fn local_cluster() -> ClusterFront {
+    cluster(
+        (0..BACKENDS)
+            .map(|s| Box::new(sim_front(s)) as Box<dyn ServingFront>)
+            .collect(),
+    )
+}
+
+/// 16 socketpair-served hosts, one OS thread each; the threads exit
+/// when the cluster (and with it every `RemoteFront`) drops.
+fn remote_cluster() -> (ClusterFront, Vec<JoinHandle<()>>) {
+    let mut backends: Vec<Box<dyn ServingFront>> = Vec::with_capacity(BACKENDS);
+    let mut hosts = Vec::with_capacity(BACKENDS);
+    for s in 0..BACKENDS {
+        let mut front = sim_front(s);
+        let (client, mut server) = SocketChannel::pair().expect("socketpair");
+        hosts.push(std::thread::spawn(move || {
+            let _ = serve_connection(&mut front, &mut server, "bench-host");
+        }));
+        let front =
+            RemoteFront::from_channel(client, &format!("router#{s}"), DEFAULT_IO_TIMEOUT)
+                .expect("handshake");
+        backends.push(Box::new(front));
+    }
+    (cluster(backends), hosts)
+}
+
+/// Time `iters` aggregations; returns (mean µs per call, a checksum of
+/// the last snapshot so the work cannot be optimized away).
+fn measure_stats(cluster: &ClusterFront, iters: usize) -> (f64, usize) {
+    let mut checksum = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let agg = cluster.stats();
+        checksum = agg.kv_free_tokens.wrapping_add(agg.total_requests());
+    }
+    (t0.elapsed().as_secs_f64() * 1e6 / iters as f64, checksum)
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("CARA_BENCH_FAST").is_ok();
+    let iters = if smoke { 200 } else { 2000 };
+    let e2e_requests = if smoke { 32 } else { 128 };
+
+    let mut report = caraserve::bench::Report::new(
+        "Remote control-plane fan-out (ClusterFront::stats over 16 backends)",
+        &["composition", "backends", "iters", "mean µs/call", "calls/s"],
+    );
+    let mut runs = Vec::new();
+
+    let local = local_cluster();
+    let local_agg = local.stats();
+    let (local_us, _) = measure_stats(&local, iters);
+
+    let (remote, hosts) = remote_cluster();
+    let remote_agg = remote.stats();
+    anyhow::ensure!(
+        remote_agg == local_agg,
+        "remote aggregation changed meaning:\n  local  {local_agg:?}\n  remote {remote_agg:?}"
+    );
+    let (remote_us, _) = measure_stats(&remote, iters);
+
+    for (name, us) in [("in-process", local_us), ("remote (wire RPC)", remote_us)] {
+        report.row(vec![
+            name.to_string(),
+            BACKENDS.to_string(),
+            iters.to_string(),
+            format!("{us:.1}"),
+            format!("{:.0}", 1e6 / us),
+        ]);
+        runs.push(json::obj(vec![
+            ("composition", json::s(name)),
+            ("backends", json::num(BACKENDS as f64)),
+            ("iters", json::num(iters as f64)),
+            ("mean_us_per_call", json::num(us)),
+            ("calls_per_s", json::num(1e6 / us)),
+        ]));
+    }
+
+    // End-to-end: stream a small workload through the remote
+    // composition; every request must finish.
+    let mut remote = remote;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..e2e_requests)
+        .map(|i| {
+            let req = ServeRequest::new(i as u64 % ADAPTERS, vec![1, 2, 3, 4])
+                .max_new_tokens(8);
+            remote.submit(req)
+        })
+        .collect();
+    remote.run_until_idle()?;
+    let e2e_wall = t0.elapsed().as_secs_f64();
+    let finished = handles
+        .iter()
+        .filter(|h| h.state() == LifecycleState::Finished)
+        .count();
+    anyhow::ensure!(
+        finished == e2e_requests,
+        "remote e2e lost requests: {finished}/{e2e_requests} finished"
+    );
+
+    report.note(format!(
+        "aggregated snapshots identical across compositions; remote hop costs \
+         {:.1}x the in-process fan-out; e2e: {finished}/{e2e_requests} streams \
+         finished over the wire in {e2e_wall:.2}s",
+        remote_us / local_us.max(1e-9),
+    ));
+    report.print();
+    report.save("remote").ok();
+
+    let top = json::obj(vec![
+        ("bench", json::s("remote")),
+        ("smoke", json::s(if smoke { "true" } else { "false" })),
+        ("backends", json::num(BACKENDS as f64)),
+        ("adapters", json::num(ADAPTERS as f64)),
+        ("stats_overhead_x", json::num(remote_us / local_us.max(1e-9))),
+        (
+            "e2e",
+            json::obj(vec![
+                ("requests", json::num(e2e_requests as f64)),
+                ("finished", json::num(finished as f64)),
+                ("wall_s", json::num(e2e_wall)),
+            ]),
+        ),
+        ("runs", Json::Arr(runs)),
+    ]);
+    std::fs::write("BENCH_remote.json", top.to_string_pretty())
+        .expect("write BENCH_remote.json");
+    println!("\nwrote BENCH_remote.json");
+
+    drop(remote);
+    for h in hosts {
+        h.join().expect("host thread");
+    }
+    Ok(())
+}

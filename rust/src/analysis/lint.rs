@@ -1,7 +1,7 @@
 //! Repo-specific source lints over `rust/src` (`caraserve lint`).
 //!
-//! Six rules, all motivated by the concurrency-heavy subsystems this
-//! tree grew in PRs 2–5:
+//! Seven rules, all motivated by the concurrency-heavy subsystems this
+//! tree grew in PRs 2–5 (and the wire codec of PR 9):
 //!
 //! - **safety-comment** — every line containing the `unsafe` keyword
 //!   must have a `// SAFETY:` comment on the same line or in the
@@ -19,6 +19,11 @@
 //!   latency bug, not a style issue).
 //! - **unsafe-op-deny** — the crate root must enforce
 //!   `#![deny(unsafe_op_in_unsafe_fn)]`.
+//! - **wire-panic-free** — no panicking construct (`unwrap`/`expect`/
+//!   `panic!`/`unreachable!`/asserts/…) in non-test code of the wire
+//!   codec (`remote/wire.rs`): the decoder consumes untrusted bytes
+//!   off a socket, so every malformed input must surface as a typed
+//!   `WireError`, never a panic.
 //! - **undeclared-crate** — every snake-case `root::…` path must
 //!   resolve to a declared dependency, a module in the tree, or a
 //!   `use`-imported name (this rule is what catches an extern crate
@@ -44,6 +49,7 @@ pub const RULES: &[&str] = &[
     "ordering-comment",
     "hot-unwrap",
     "decode-sleep",
+    "wire-panic-free",
     "unsafe-op-deny",
     "undeclared-crate",
 ];
@@ -88,6 +94,30 @@ fn is_hot_path(rel: &str) -> bool {
             rel,
             "server/engine.rs" | "server/kvcache.rs" | "server/batcher.rs"
         )
+}
+
+/// Constructs the wire codec must never contain outside tests: the
+/// decoder runs on untrusted bytes straight off a socket, so every
+/// failure must come back as a typed `WireError`, not a panic.
+/// (`debug_assert` matches the `!`/`_eq!`/`_ne!` spellings; `assert!`
+/// is listed after `debug_assert` only for reporting clarity — one
+/// violation per line, first matching pattern wins.)
+const WIRE_PANICKY: &[&str] = &[
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+    "debug_assert",
+    "assert!",
+    "assert_eq!",
+    "assert_ne!",
+    ".unwrap(",
+    ".expect(",
+];
+
+/// The wire-codec files for the panic-free rule.
+fn is_wire_codec(rel: &str) -> bool {
+    rel.ends_with("remote/wire.rs")
 }
 
 /// Decode-path modules for the sleep/busy-spin rule.
@@ -145,6 +175,7 @@ pub fn lint_source(rel: &str, src: &str, ctx: &LintContext) -> Vec<Violation> {
     }
     let hot = is_hot_path(rel);
     let decode = is_decode_path(rel);
+    let wire = is_wire_codec(rel);
     let mut out = Vec::new();
     let mut push = |rule: &'static str, line: usize, text: String| {
         out.push(Violation {
@@ -212,6 +243,9 @@ pub fn lint_source(rel: &str, src: &str, ctx: &LintContext) -> Vec<Violation> {
             && (ml.code.contains("thread::sleep") || ml.code.contains("spin_loop"))
         {
             push("decode-sleep", i + 1, raw_at(i).to_string());
+        }
+        if wire && !intest && WIRE_PANICKY.iter().any(|pat| ml.code.contains(pat)) {
+            push("wire-panic-free", i + 1, raw_at(i).to_string());
         }
         if !intest {
             for root in scan::path_roots(&ml.code) {
@@ -584,6 +618,24 @@ mod tests {
         assert!(!lint_source("sim/front.rs", src, &ctx())
             .iter()
             .any(|v| v.rule == "decode-sleep"));
+    }
+
+    #[test]
+    fn wire_panic_rule_fires_only_in_the_wire_codec() {
+        let src = "let n = bytes.first().unwrap();\npanic!(\"bad tag\");\n";
+        let v = lint_source("remote/wire.rs", src, &ctx());
+        assert_eq!(v.iter().filter(|v| v.rule == "wire-panic-free").count(), 2);
+        // Identical code elsewhere (even hot paths) is judged by the
+        // other rules, not this one.
+        assert!(!lint_source("remote/client.rs", src, &ctx())
+            .iter()
+            .any(|v| v.rule == "wire-panic-free"));
+        // Test code in the codec file may assert freely.
+        let in_test = format!("#[cfg(test)]\nmod t {{\n{src}}}\n");
+        assert!(lint_source("remote/wire.rs", &in_test, &ctx()).is_empty());
+        // Strings and comments never fire (masked view).
+        let masked = "// the decoder never calls .unwrap( here\nlet s = \"panic!\";\n";
+        assert!(lint_source("remote/wire.rs", masked, &ctx()).is_empty());
     }
 
     #[test]

@@ -10,7 +10,9 @@
 //!   unchanged across `fork()`.
 //! - [`socket`] — the Unix-domain-socket baseline used by Fig 17, with
 //!   caller-supplied receive deadlines and a typed
-//!   [`socket::SocketError::TimedOut`] for stalled-peer detection.
+//!   [`socket::SocketError::TimedOut`] for stalled-peer detection;
+//!   since PR 9 it also carries length-prefixed *byte* frames (the
+//!   [`crate::remote`] wire protocol's transport).
 //! - [`signal`] — futex-backed doorbells: the "asynchronous signaling"
 //!   half of the paper's fused memcpy+signal operator.
 
@@ -20,3 +22,4 @@ pub mod socket;
 
 pub use shm::{ShmRegion, SlotChannel};
 pub use signal::Doorbell;
+pub use socket::{SocketChannel, SocketError};

@@ -1,13 +1,29 @@
-//! Unix-domain-socket IPC baseline (Fig 17's comparator).
+//! Unix-domain-socket IPC: the Fig 17 f32 baseline plus the framed
+//! byte transport the distributed tier ([`crate::remote`]) runs on.
 //!
-//! Mirrors the message-passing IPC of existing LLM frameworks: each
-//! message is length-prefixed and the f32 payload is serialized through
-//! the kernel socket buffer — i.e. two copies plus syscalls per hop,
-//! which is exactly the overhead the shared-memory plane avoids.
+//! The f32 API mirrors the message-passing IPC of existing LLM
+//! frameworks: each message is length-prefixed and the f32 payload is
+//! serialized through the kernel socket buffer — i.e. two copies plus
+//! syscalls per hop, which is exactly the overhead the shared-memory
+//! plane avoids.
+//!
+//! The byte-frame API ([`SocketChannel::send_bytes`] /
+//! [`SocketChannel::recv_bytes`] / [`SocketChannel::recv_bytes_deadline`])
+//! generalizes the same length-prefixed framing to opaque payloads and
+//! adds **partial-frame resync**: a deadline that expires mid-frame
+//! keeps the bytes already received in an internal staging buffer, so
+//! the next receive resumes the same frame instead of desynchronizing
+//! the stream. `remote::wire` layers its versioned frame codec on top.
 
 use std::io::{Read, Write};
 use std::os::unix::net::UnixStream;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+/// Upper bound on one byte frame's payload. A declared length beyond
+/// this is a protocol violation (or a desynchronized stream) and
+/// surfaces as a typed I/O error instead of an allocation attempt.
+pub const MAX_FRAME_BYTES: usize = 16 << 20;
 
 /// Failure of a deadline-bounded receive ([`SocketChannel::recv_deadline`]).
 ///
@@ -49,16 +65,35 @@ impl std::error::Error for SocketError {
     }
 }
 
-/// One end of a framed f32 message channel over a Unix socket pair.
+/// One end of a framed message channel over a Unix stream socket:
+/// f32 messages (the Fig 17 baseline) or opaque byte frames (the
+/// distributed serving transport).
 pub struct SocketChannel {
     stream: UnixStream,
+    /// Bytes received toward the byte frame currently being read. A
+    /// deadline expiring mid-frame leaves its progress here so the next
+    /// `recv_bytes*` call resumes the same frame (resync, not desync).
+    staged: Vec<u8>,
 }
 
 impl SocketChannel {
     /// Create a connected pair (base-process end, worker end).
     pub fn pair() -> std::io::Result<(SocketChannel, SocketChannel)> {
         let (a, b) = UnixStream::pair()?;
-        Ok((SocketChannel { stream: a }, SocketChannel { stream: b }))
+        Ok((SocketChannel::from_stream(a), SocketChannel::from_stream(b)))
+    }
+
+    /// Wrap an already-connected stream (listener `accept` side).
+    pub fn from_stream(stream: UnixStream) -> SocketChannel {
+        SocketChannel {
+            stream,
+            staged: Vec::new(),
+        }
+    }
+
+    /// Connect to a listening Unix socket at `path`.
+    pub fn connect<P: AsRef<Path>>(path: P) -> std::io::Result<SocketChannel> {
+        Ok(SocketChannel::from_stream(UnixStream::connect(path)?))
     }
 
     /// Send one framed message: u32 length (f32 count) + payload bytes.
@@ -168,6 +203,125 @@ impl SocketChannel {
         }
         Ok(())
     }
+
+    /// Send one opaque byte frame: u32 little-endian payload length +
+    /// payload. Frames above [`MAX_FRAME_BYTES`] are refused before any
+    /// bytes hit the wire (a half-sent oversized frame would poison the
+    /// stream for both peers).
+    pub fn send_bytes(&mut self, payload: &[u8]) -> std::io::Result<()> {
+        if payload.len() > MAX_FRAME_BYTES {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("frame of {} bytes exceeds MAX_FRAME_BYTES", payload.len()),
+            ));
+        }
+        let len = payload.len() as u32;
+        self.stream.write_all(&len.to_le_bytes())?;
+        self.stream.write_all(payload)
+    }
+
+    /// Receive one byte frame, blocking until it is complete. Resumes a
+    /// frame a previous timed-out [`SocketChannel::recv_bytes_deadline`]
+    /// left half-read.
+    pub fn recv_bytes(&mut self) -> Result<Vec<u8>, SocketError> {
+        loop {
+            if let Some(frame) = self.take_staged_frame()? {
+                return Ok(frame);
+            }
+            let mut buf = [0u8; 4096];
+            match self.stream.read(&mut buf) {
+                Ok(0) => return Err(SocketError::Io(eof_error(&self.staged))),
+                Ok(n) => self.staged.extend_from_slice(&buf[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(SocketError::Io(e)),
+            }
+        }
+    }
+
+    /// Receive one byte frame, giving up after `deadline`. Unlike the
+    /// f32 [`SocketChannel::recv_deadline`], a timeout mid-frame keeps
+    /// the bytes already received staged, so a later receive **resumes
+    /// the same frame** — the channel re-synchronizes instead of
+    /// shifting the stream by half a frame. Blocking mode is restored
+    /// on every exit path.
+    pub fn recv_bytes_deadline(&mut self, deadline: Duration) -> Result<Vec<u8>, SocketError> {
+        let start = Instant::now();
+        let res = self.recv_bytes_by(start, deadline);
+        // Restore blocking mode whatever happened, so plain receives on
+        // this channel keep their blocking contract.
+        let _ = self.stream.set_read_timeout(None);
+        res
+    }
+
+    fn recv_bytes_by(&mut self, start: Instant, deadline: Duration) -> Result<Vec<u8>, SocketError> {
+        loop {
+            if let Some(frame) = self.take_staged_frame()? {
+                return Ok(frame);
+            }
+            let left = deadline
+                .checked_sub(start.elapsed())
+                .filter(|d| !d.is_zero())
+                .ok_or(SocketError::TimedOut {
+                    waited: start.elapsed(),
+                })?;
+            self.stream
+                .set_read_timeout(Some(left))
+                .map_err(SocketError::Io)?;
+            let mut buf = [0u8; 4096];
+            match self.stream.read(&mut buf) {
+                Ok(0) => return Err(SocketError::Io(eof_error(&self.staged))),
+                Ok(n) => self.staged.extend_from_slice(&buf[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Err(SocketError::TimedOut {
+                        waited: start.elapsed(),
+                    })
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(SocketError::Io(e)),
+            }
+        }
+    }
+
+    /// Pop one complete frame off the staging buffer, if present.
+    /// `Err` on a declared length above [`MAX_FRAME_BYTES`] — the
+    /// stream is desynchronized or the peer is violating the protocol,
+    /// and either way the connection is unusable.
+    fn take_staged_frame(&mut self) -> Result<Option<Vec<u8>>, SocketError> {
+        if self.staged.len() < 4 {
+            return Ok(None);
+        }
+        let len =
+            u32::from_le_bytes([self.staged[0], self.staged[1], self.staged[2], self.staged[3]])
+                as usize;
+        if len > MAX_FRAME_BYTES {
+            return Err(SocketError::Io(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("declared frame length {len} exceeds MAX_FRAME_BYTES"),
+            )));
+        }
+        if self.staged.len() < 4 + len {
+            return Ok(None);
+        }
+        let frame = self.staged[4..4 + len].to_vec();
+        self.staged.drain(..4 + len);
+        Ok(Some(frame))
+    }
+}
+
+/// Peer-closed error, distinguishing a clean close (between frames)
+/// from a mid-frame one.
+fn eof_error(staged: &[u8]) -> std::io::Error {
+    std::io::Error::new(
+        std::io::ErrorKind::UnexpectedEof,
+        if staged.is_empty() {
+            "peer closed"
+        } else {
+            "peer closed mid-frame"
+        },
+    )
 }
 
 #[cfg(test)]
@@ -255,6 +409,69 @@ mod tests {
         a.send(&[3.0]).unwrap();
         b.recv(&mut got).unwrap();
         assert_eq!(got, vec![3.0]);
+    }
+
+    #[test]
+    fn byte_frames_roundtrip() {
+        let (mut a, mut b) = SocketChannel::pair().unwrap();
+        a.send_bytes(&[1, 2, 3, 255]).unwrap();
+        a.send_bytes(&[]).unwrap();
+        a.send_bytes(&[9; 10_000]).unwrap();
+        assert_eq!(b.recv_bytes().unwrap(), vec![1, 2, 3, 255]);
+        assert_eq!(b.recv_bytes().unwrap(), Vec::<u8>::new());
+        assert_eq!(b.recv_bytes().unwrap(), vec![9; 10_000]);
+    }
+
+    #[test]
+    fn byte_frame_deadline_resyncs_on_partial_frame() {
+        let (mut a, mut b) = SocketChannel::pair().unwrap();
+        // Peer writes the header and half the payload, then stalls past
+        // the deadline...
+        a.stream.write_all(&8u32.to_le_bytes()).unwrap();
+        a.stream.write_all(&[1, 2, 3, 4]).unwrap();
+        assert!(matches!(
+            b.recv_bytes_deadline(Duration::from_millis(30)),
+            Err(SocketError::TimedOut { .. })
+        ));
+        // ...then completes the frame: the staged half is kept, so the
+        // next receive returns the *whole* frame, and the stream stays
+        // aligned for the frame after it.
+        a.stream.write_all(&[5, 6, 7, 8]).unwrap();
+        assert_eq!(
+            b.recv_bytes_deadline(Duration::from_secs(5)).unwrap(),
+            vec![1, 2, 3, 4, 5, 6, 7, 8]
+        );
+        a.send_bytes(&[42]).unwrap();
+        assert_eq!(b.recv_bytes().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn oversized_declared_length_is_a_typed_error() {
+        let (mut a, mut b) = SocketChannel::pair().unwrap();
+        a.stream
+            .write_all(&(u32::MAX).to_le_bytes())
+            .unwrap();
+        match b.recv_bytes() {
+            Err(SocketError::Io(e)) => {
+                assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
+            }
+            other => panic!("expected Io(InvalidData), got {other:?}"),
+        }
+        assert!(a.send_bytes(&vec![0u8; MAX_FRAME_BYTES + 1]).is_err());
+    }
+
+    #[test]
+    fn byte_frames_interleave_with_f32_frames() {
+        // Both APIs share the length-prefixed framing, so a connection
+        // can carry either — what matters is both ends agreeing per
+        // frame, which the remote protocol fixes by construction.
+        let (mut a, mut b) = SocketChannel::pair().unwrap();
+        a.send(&[1.5]).unwrap();
+        let mut f = Vec::new();
+        b.recv(&mut f).unwrap();
+        assert_eq!(f, vec![1.5]);
+        a.send_bytes(b"hello").unwrap();
+        assert_eq!(b.recv_bytes().unwrap(), b"hello".to_vec());
     }
 
     #[test]

@@ -98,6 +98,24 @@
 //!   headroom, preemptions) plus the running/queued rank lists.
 //! - [`cpu_lora::CpuLoraEngine`] — the CPU-assisted prefill engine.
 //!
+//! ## Distributed serving
+//!
+//! The [`remote`] module splits the request plane across OS processes
+//! without changing any routing code: `caraserve backend --socket
+//! /tmp/b0.sock` hosts an engine behind the [`remote::wire`] frame
+//! protocol, the router's [`remote::RemoteFront`] speaks it as an
+//! ordinary `ServingFront` (so `ClusterFront`/`Coordinator` route
+//! across processes unchanged, including PR 8 failover — plus
+//! *reconnect-with-state*: a rebooted backend re-handshakes, reports
+//! its resident adapters, and is readmitted without re-install when
+//! they survived, or re-installed from the
+//! [`scheduler::registry::GlobalRegistry`] when they did not), and
+//! `caraserve serve --remote /tmp/b0.sock,/tmp/b1.sock --http
+//! 127.0.0.1:8090` exposes the cluster over HTTP/1.1: `POST
+//! /v1/requests` streams token events as chunked JSON lines,
+//! `DELETE /v1/requests/<id>` cancels, `GET /v1/stats` aggregates
+//! ([`remote::HttpGateway`], zero new dependencies).
+//!
 //! See `examples/quickstart.rs` for a compact end-to-end run.
 //!
 //! The tree gates itself with `caraserve lint` ([`analysis`]): every
@@ -128,6 +146,7 @@ pub mod ipc;
 pub mod kernels;
 pub mod model;
 pub mod perfmodel;
+pub mod remote;
 #[warn(clippy::unwrap_used)]
 pub mod runtime;
 pub mod scheduler;

@@ -56,6 +56,15 @@ subcommands:
   serve     --runtime auto|native|pjrt --artifacts DIR --requests N
             --mode cached|ondemand|caraserve --cpu-workers N
             --threads N --load-scale F --slo-ttft-ms F --slo-tpot-ms F
+            --remote SOCK[,SOCK...] --http HOST:PORT --soak N --smoke
+            (with --remote, `serve` becomes the router process: a
+             ClusterFront over RemoteFronts speaking the wire protocol
+             to `caraserve backend` processes)
+  backend   --socket PATH --name NAME --adapters N --threads N
+            --kv-pages N --mode cached|ondemand|caraserve --sim
+            (host one engine behind the wire protocol on a unix
+             socket, in its own OS process; exits on a router
+             Shutdown frame)
   cluster   --instances N --policy rank-aware|most-idle|first-fit|random
             (comma-separate or `all` for several) --requests N
             --adapters N --mode cached|ondemand|caraserve --cpu-workers N
@@ -83,6 +92,23 @@ subcommands:
 KV pages share on the native runtime — it overrides --kv-pages, and
 under `coordinator` additionally switches placement to the memory-aware
 scorer that weighs adapter page footprints.
+
+distributed serving (two backends + a router with an HTTP front door):
+
+  caraserve backend --socket /tmp/b0.sock --name b0 &
+  caraserve backend --socket /tmp/b1.sock --name b1 &
+  caraserve serve --remote /tmp/b0.sock,/tmp/b1.sock --http 127.0.0.1:8090 &
+  curl -N -X POST http://127.0.0.1:8090/v1/requests \\
+       -d '{\"adapter\": 3, \"prompt\": [1, 2, 3], \"max_new_tokens\": 8}'
+  curl http://127.0.0.1:8090/v1/stats
+
+POST /v1/requests streams one JSON event per line (chunked transfer);
+DELETE /v1/requests/<id> cancels; GET /v1/stats reports aggregated
+cluster stats. `--soak N` drives N concurrent streaming clients
+against the front door and verifies every stream ends in exactly one
+terminal event. A killed backend rejoins with its adapters intact
+(reconnect-with-state); one that lost them is re-installed from the
+registry's placements before readmission.
 ";
 
 fn main() {
@@ -122,11 +148,17 @@ fn run() -> anyhow::Result<()> {
         "replicas",
         "root",
         "json",
+        "socket",
+        "name",
+        "remote",
+        "http",
+        "soak",
     ])
     .map_err(|e| anyhow::anyhow!("{e}"))?;
 
     match args.subcommand() {
         Some("serve") => cmd_serve(&args),
+        Some("backend") => cmd_backend(&args),
         Some("cluster") => cmd_cluster(&args),
         Some("coordinator") => cmd_coordinator(&args),
         Some("chaos") => cmd_chaos(&args),
@@ -149,6 +181,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         ColdStartMode, EngineConfig, InferenceServer, LifecycleState, ServeRequest,
         ServingFront,
     };
+    // `--remote` flips `serve` into the distributed router role.
+    if args.opt("remote").is_some() {
+        return cmd_serve_remote(args);
+    }
     let dir = args.opt_or("artifacts", "artifacts");
     let n: usize = args.opt_parse_or("requests", 16).map_err(|e| anyhow::anyhow!("{e}"))?;
     let mode = match args.opt_or("mode", "caraserve").as_str() {
@@ -292,6 +328,210 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     let (rps, tps) = m.throughput(wall);
     println!("throughput: {rps:.1} req/s, {tps:.1} tok/s (mode {mode:?})");
+    Ok(())
+}
+
+/// `caraserve backend`: host one engine behind the wire protocol on a
+/// unix socket, in its own OS process. Routers started with
+/// `caraserve serve --remote SOCK[,SOCK...]` connect to it; adapter
+/// state persists across router connections (reconnect-with-state).
+fn cmd_backend(args: &Args) -> anyhow::Result<()> {
+    use caraserve::model::LoraSpec;
+    use caraserve::runtime::{NativeConfig, NativeRuntime};
+    use caraserve::server::cluster::synthetic;
+    use caraserve::server::{ColdStartMode, EngineConfig, InferenceServer, ServingFront};
+    use caraserve::sim::SimFront;
+
+    let socket = args
+        .opt("socket")
+        .ok_or_else(|| anyhow::anyhow!("backend requires --socket PATH"))?
+        .to_string();
+    let name = args.opt_or("name", "backend");
+    let adapters: usize = args
+        .opt_parse_or("adapters", 24)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mode = match args.opt_or("mode", "caraserve").as_str() {
+        "cached" => ColdStartMode::Cached,
+        "ondemand" | "ondmd" => ColdStartMode::OnDemand,
+        _ => ColdStartMode::CaraServe,
+    };
+    let threads: usize = args
+        .opt_parse_or("threads", 1)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let kv_pages: usize = args
+        .opt_parse_or("kv-pages", 256)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // `--sim` swaps in the deterministic simulator front (token streams
+    // are the synthesized 0,1,2,… — handy for protocol debugging);
+    // default is a real native engine, same construction as `cluster`.
+    let mut front: Box<dyn ServingFront> = if args.flag("sim") {
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let inst = SimInstance::new(0, model, ServingMode::CaraServe, 32, 8, 64);
+        Box::new(SimFront::new(inst, 512))
+    } else {
+        let native = NativeRuntime::new(NativeConfig {
+            threads: threads.max(1),
+            ..NativeConfig::tiny()
+        });
+        Box::new(InferenceServer::new(
+            native,
+            EngineConfig {
+                cold_start: mode,
+                kv_pages,
+                ..Default::default()
+            },
+        )?)
+    };
+    for a in 0..adapters as u64 {
+        front.install_adapter(&LoraSpec::standard(a, synthetic::rank_of(a), "tiny"))?;
+    }
+
+    let listener = caraserve::remote::bind(&socket)?;
+    println!(
+        "backend '{name}' on {socket}: {adapters} adapters (ranks {:?}), mode {mode:?}",
+        synthetic::RANKS
+    );
+    caraserve::remote::serve_listener(front.as_mut(), &listener, &name)
+}
+
+/// `caraserve serve --remote`: the router half of the distributed
+/// tier. Builds a `ClusterFront` whose backends are `RemoteFront`s
+/// speaking the wire protocol to `caraserve backend` processes, then
+/// either drives the synthetic workload through it or serves the
+/// HTTP/JSON front door (optionally self-soaking it with `--soak N`).
+fn cmd_serve_remote(args: &Args) -> anyhow::Result<()> {
+    use caraserve::remote::{HttpGateway, RemoteFront};
+    use caraserve::scheduler::registry::{AdapterMeta, GlobalRegistry};
+    use caraserve::server::cluster::{synthetic, ClusterFront};
+    use caraserve::server::{LifecycleState, ServingFront};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let smoke = args.flag("smoke");
+    let remote = args.opt_or("remote", "");
+    let sockets: Vec<&str> = remote
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!sockets.is_empty(), "--remote needs at least one socket path");
+    let adapters: usize = args
+        .opt_parse_or("adapters", 24)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let requests: usize = args
+        .opt_parse_or("requests", if smoke { 16 } else { 48 })
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let seed: u64 = args.opt_parse_or("seed", 1).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let pace: usize = args.opt_parse_or("pace", 2).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let registry = Arc::new(GlobalRegistry::new());
+    let mut backends: Vec<Box<dyn ServingFront>> = Vec::with_capacity(sockets.len());
+    for (s, path) in sockets.iter().enumerate() {
+        let front = RemoteFront::connect(*path, &format!("router#{s}"))?;
+        println!("backend {s}: '{}' at {path}", front.server_name());
+        backends.push(Box::new(front));
+    }
+    // The backends pre-install the same synthetic catalog; mirror it
+    // (ids, ranks, placements) into the router's registry so routing
+    // and rejoin re-installs see the same world.
+    for a in 0..adapters as u64 {
+        registry.register(AdapterMeta {
+            id: a,
+            rank: synthetic::rank_of(a),
+            base_model: "tiny".into(),
+            weights_path: String::new(),
+        });
+        for s in 0..sockets.len() {
+            registry.place(a, s);
+        }
+    }
+    let policy = synthetic::policy(&args.opt_or("policy", "rank-aware"), seed)?;
+    let mut cluster = ClusterFront::new(backends, policy, registry);
+
+    if let Some(http) = args.opt("http") {
+        let gateway = HttpGateway::bind(http)?;
+        let addr = gateway.addr();
+        println!(
+            "HTTP front door on http://{addr} (POST /v1/requests streams \
+             events; DELETE /v1/requests/<id>; GET /v1/stats)"
+        );
+        let soak_clients: usize = args
+            .opt_parse_or("soak", 0)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        if soak_clients == 0 {
+            // Serve until the process is killed.
+            return gateway.run(&mut cluster, &|| false);
+        }
+        let per_client = if smoke { 2 } else { 4 };
+        let done = Arc::new(AtomicBool::new(false));
+        let soak_thread = {
+            let done = done.clone();
+            std::thread::spawn(move || {
+                let rep =
+                    caraserve::remote::soak(addr, soak_clients, per_client, adapters as u64, 8, 7);
+                done.store(true, Ordering::SeqCst);
+                rep
+            })
+        };
+        gateway.run(&mut cluster, &|| done.load(Ordering::SeqCst))?;
+        let rep = soak_thread.join().expect("soak harness panicked");
+        println!(
+            "soak: {} clients × {per_client} requests — {} completed, {} tokens, \
+             {} cancelled, {} errors, {} dropped terminals, {} multi-terminals",
+            rep.clients,
+            rep.completed,
+            rep.tokens,
+            rep.cancelled,
+            rep.errors,
+            rep.dropped_terminals,
+            rep.multi_terminals
+        );
+        anyhow::ensure!(rep.clean(), "soak saw dropped or duplicated terminal events");
+        println!("event overflows: {}", cluster.stats().event_overflows);
+        return Ok(());
+    }
+
+    // No HTTP front door: drive the synthetic workload through the
+    // remote cluster directly — the distributed twin of `cluster`.
+    let cfg = synthetic::SyntheticConfig {
+        instances: sockets.len(),
+        requests,
+        adapters,
+        seed,
+        polls_per_arrival: pace,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::with_capacity(requests);
+    for req in synthetic::workload(&cfg) {
+        handles.push(cluster.submit(req));
+        for _ in 0..pace {
+            cluster.poll()?;
+        }
+    }
+    cluster.run_until_idle()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let finished = handles
+        .iter()
+        .filter(|h| h.state() == LifecycleState::Finished)
+        .count();
+    let rejected = handles
+        .iter()
+        .filter(|h| h.state() == LifecycleState::Rejected)
+        .count();
+    let tokens: usize = handles.iter().map(|h| h.tokens().len()).sum();
+    println!(
+        "distributed: {finished}/{requests} finished ({rejected} rejected), \
+         {tokens} tokens in {wall:.2}s; routed {:?}; {} event overflows",
+        cluster.routed(),
+        cluster.stats().event_overflows
+    );
+    anyhow::ensure!(
+        finished + rejected == requests,
+        "{} streams never reached a terminal",
+        requests - finished - rejected
+    );
     Ok(())
 }
 

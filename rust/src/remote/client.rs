@@ -1,0 +1,623 @@
+//! [`RemoteFront`]: a [`ServingFront`] whose backend lives in another
+//! OS process, reached over the [`crate::remote::wire`] protocol.
+//!
+//! The router composes these exactly like in-process backends — an
+//! unchanged `ClusterFront` / `Coordinator` routes across processes.
+//! Every trait call is one strict request-reply RPC; request events
+//! arrive inside `poll`'s reply and are replayed into the same local
+//! [`EventChannel`]s an in-process front would fill, so handles, token
+//! logs, and the exactly-one-terminal contract are indistinguishable
+//! from local serving.
+//!
+//! **Failure model — reconnect-with-state vs failover.** When the
+//! connection breaks (send/receive error, reply timeout, undecodable
+//! reply), the client tears the connection down and *orphans* its
+//! in-flight channels without pushing a terminal: the next `poll`
+//! surfaces an error, the router's health machine Downs this backend,
+//! and PR 8 failover resumes each stream elsewhere from the
+//! client-side token log — a fabricated terminal here would be relayed
+//! as a real completion and defeat that. Later polls reconnect through
+//! the stored socket path and re-handshake; the `Welcome` frame
+//! reports the backend's resident adapter set, which the router's
+//! Probation readmission inspects to decide between *rejoin-with-state*
+//! (adapters survived: no re-install) and registry-driven re-install.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::wire::{self, Frame, WireError};
+use crate::ipc::socket::{SocketChannel, SocketError};
+use crate::scheduler::{AdapterSet, ServerStats};
+use crate::server::api::{
+    EventChannel, RejectReason, RequestEvent, RequestHandle, ServeRequest, ServingFront,
+};
+use crate::server::metrics::ColdStartStats;
+
+/// Reply deadline for one RPC (also the reconnect handshake bound).
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// A remote call's failure, typed so callers can tell transport death
+/// (reconnectable) from the peer refusing an operation (not).
+#[derive(Debug)]
+pub enum RemoteError {
+    /// No connection and no socket path to re-establish one.
+    Disconnected,
+    /// Transport failure (send/receive error or reply timeout). The
+    /// connection has been torn down; the next call reconnects.
+    Socket(SocketError),
+    /// The reply did not decode. Treated as transport death: a peer we
+    /// cannot parse is a peer we cannot trust to stay frame-aligned.
+    Wire(WireError),
+    /// The peer replied with a frame the protocol does not allow here.
+    Protocol {
+        expected: &'static str,
+        got: String,
+    },
+    /// The peer executed the request and reported an error (`ErrReply`).
+    /// The connection stays up.
+    Remote(String),
+}
+
+impl std::fmt::Display for RemoteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RemoteError::Disconnected => write!(f, "remote backend disconnected"),
+            RemoteError::Socket(e) => write!(f, "remote transport failed: {e}"),
+            RemoteError::Wire(e) => write!(f, "remote reply undecodable: {e}"),
+            RemoteError::Protocol { expected, got } => {
+                write!(f, "remote protocol violation: expected {expected}, got {got}")
+            }
+            RemoteError::Remote(msg) => write!(f, "remote backend error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for RemoteError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RemoteError::Socket(e) => Some(e),
+            RemoteError::Wire(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+/// Connection state behind the mutex ([`ServingFront::stats`] takes
+/// `&self`, so every call path locks).
+struct Conn {
+    /// This client's name, sent in the handshake `Hello`.
+    name: String,
+    chan: Option<SocketChannel>,
+    /// Socket path for reconnects; `None` for socketpair-mode fronts
+    /// ([`RemoteFront::from_channel`]), which cannot reconnect.
+    path: Option<PathBuf>,
+    io_timeout: Duration,
+    next_client_id: u64,
+    /// Client request id → the local event channel its events replay
+    /// into. BTreeMap for deterministic drain order.
+    live: BTreeMap<u64, Arc<Mutex<EventChannel>>>,
+    /// Resident adapter set reported by the last handshake.
+    resident: AdapterSet,
+    server_name: String,
+    /// Successful re-handshakes after the initial connect.
+    reconnects: usize,
+    heartbeat_nonce: u64,
+}
+
+impl Conn {
+    /// Tear the connection down and orphan in-flight channels — no
+    /// fabricated terminals (see the module docs' failure model).
+    fn drop_conn(&mut self) {
+        self.chan = None;
+        self.live.clear();
+    }
+
+    fn ensure_connected(&mut self) -> Result<(), RemoteError> {
+        if self.chan.is_some() {
+            return Ok(());
+        }
+        let Some(path) = self.path.clone() else {
+            return Err(RemoteError::Disconnected);
+        };
+        let mut chan = SocketChannel::connect(&path)
+            .map_err(|e| RemoteError::Socket(SocketError::Io(e)))?;
+        let (server, resident) = handshake(&mut chan, &self.name, self.io_timeout)?;
+        self.server_name = server;
+        self.resident = resident;
+        self.chan = Some(chan);
+        self.reconnects += 1;
+        Ok(())
+    }
+
+    /// One strict request-reply exchange. Any transport failure —
+    /// including a reply timeout, since a late reply would desync the
+    /// frame stream — tears the connection down.
+    fn rpc(&mut self, frame: &Frame) -> Result<Frame, RemoteError> {
+        let Some(chan) = self.chan.as_mut() else {
+            return Err(RemoteError::Disconnected);
+        };
+        if let Err(e) = chan.send_bytes(&wire::encode(frame)) {
+            self.drop_conn();
+            return Err(RemoteError::Socket(SocketError::Io(e)));
+        }
+        let bytes = match chan.recv_bytes_deadline(self.io_timeout) {
+            Ok(bytes) => bytes,
+            Err(e) => {
+                self.drop_conn();
+                return Err(RemoteError::Socket(e));
+            }
+        };
+        match wire::decode(&bytes) {
+            Ok(Frame::ErrReply { message }) => Err(RemoteError::Remote(message)),
+            Ok(reply) => Ok(reply),
+            Err(e) => {
+                self.drop_conn();
+                Err(RemoteError::Wire(e))
+            }
+        }
+    }
+
+    /// A reply frame the protocol does not allow for this request:
+    /// drop the connection (we are desynced) and build the typed error.
+    fn unexpected(&mut self, expected: &'static str, got: Frame) -> RemoteError {
+        self.drop_conn();
+        RemoteError::Protocol {
+            expected,
+            got: format!("{got:?}"),
+        }
+    }
+}
+
+/// Handshake on a fresh channel: `Hello` → `Welcome`, returning the
+/// backend's name and resident adapter set.
+fn handshake(
+    chan: &mut SocketChannel,
+    client: &str,
+    timeout: Duration,
+) -> Result<(String, AdapterSet), RemoteError> {
+    let hello = Frame::Hello {
+        client: client.to_string(),
+    };
+    chan.send_bytes(&wire::encode(&hello))
+        .map_err(|e| RemoteError::Socket(SocketError::Io(e)))?;
+    let bytes = chan.recv_bytes_deadline(timeout).map_err(RemoteError::Socket)?;
+    match wire::decode(&bytes).map_err(RemoteError::Wire)? {
+        Frame::Welcome {
+            version,
+            server,
+            resident,
+        } => {
+            if version != wire::VERSION {
+                return Err(RemoteError::Protocol {
+                    expected: "protocol version 1",
+                    got: format!("version {version}"),
+                });
+            }
+            Ok((server, resident))
+        }
+        Frame::ErrReply { message } => Err(RemoteError::Remote(message)),
+        other => Err(RemoteError::Protocol {
+            expected: "Welcome",
+            got: format!("{other:?}"),
+        }),
+    }
+}
+
+/// A `ServingFront` backed by a backend host in another process.
+pub struct RemoteFront {
+    conn: Mutex<Conn>,
+}
+
+impl RemoteFront {
+    /// Connect to a backend's Unix socket and handshake. Reconnects
+    /// through the same path after transport failures.
+    pub fn connect<P: Into<PathBuf>>(path: P, name: &str) -> anyhow::Result<RemoteFront> {
+        RemoteFront::connect_with_timeout(path, name, DEFAULT_IO_TIMEOUT)
+    }
+
+    /// [`RemoteFront::connect`] with an explicit per-RPC reply deadline.
+    pub fn connect_with_timeout<P: Into<PathBuf>>(
+        path: P,
+        name: &str,
+        io_timeout: Duration,
+    ) -> anyhow::Result<RemoteFront> {
+        let mut conn = Conn {
+            name: name.to_string(),
+            chan: None,
+            path: Some(path.into()),
+            io_timeout,
+            next_client_id: 0,
+            live: BTreeMap::new(),
+            resident: AdapterSet::only(vec![]),
+            server_name: String::new(),
+            reconnects: 0,
+            heartbeat_nonce: 0,
+        };
+        conn.ensure_connected()
+            .map_err(|e| anyhow::anyhow!("remote connect failed: {e}"))?;
+        conn.reconnects = 0; // the initial connect is not a *re*connect
+        Ok(RemoteFront {
+            conn: Mutex::new(conn),
+        })
+    }
+
+    /// Wrap one end of a socketpair whose peer is already being served
+    /// (tests, in-process harnesses). No reconnect path.
+    pub fn from_channel(
+        mut chan: SocketChannel,
+        name: &str,
+        io_timeout: Duration,
+    ) -> anyhow::Result<RemoteFront> {
+        let (server_name, resident) = handshake(&mut chan, name, io_timeout)
+            .map_err(|e| anyhow::anyhow!("remote handshake failed: {e}"))?;
+        Ok(RemoteFront {
+            conn: Mutex::new(Conn {
+                name: name.to_string(),
+                chan: Some(chan),
+                path: None,
+                io_timeout,
+                next_client_id: 0,
+                live: BTreeMap::new(),
+                resident,
+                server_name,
+                reconnects: 0,
+                heartbeat_nonce: 0,
+            }),
+        })
+    }
+
+    /// The backend's self-reported name from the last handshake.
+    pub fn server_name(&self) -> String {
+        self.conn.lock().unwrap().server_name.clone()
+    }
+
+    /// Resident adapter set reported by the last handshake — the
+    /// rejoin decision input (stale between handshakes by design; the
+    /// live set comes from [`ServingFront::stats`]).
+    pub fn resident(&self) -> AdapterSet {
+        self.conn.lock().unwrap().resident.clone()
+    }
+
+    /// Successful re-handshakes since construction.
+    pub fn reconnects(&self) -> usize {
+        self.conn.lock().unwrap().reconnects
+    }
+
+    /// Whether a connection is currently up (false after a transport
+    /// failure, until the next call reconnects).
+    pub fn is_connected(&self) -> bool {
+        self.conn.lock().unwrap().chan.is_some()
+    }
+
+    /// Liveness probe: round-trip a nonce without touching serving
+    /// state.
+    pub fn heartbeat(&self) -> Result<(), RemoteError> {
+        let mut conn = self.conn.lock().unwrap();
+        conn.heartbeat_nonce += 1;
+        let nonce = conn.heartbeat_nonce;
+        match conn.rpc(&Frame::Heartbeat { nonce })? {
+            Frame::HeartbeatAck { nonce: got } if got == nonce => Ok(()),
+            other => Err(conn.unexpected("HeartbeatAck", other)),
+        }
+    }
+
+    /// Ask the backend host to exit its listener loop, then drop the
+    /// connection.
+    pub fn shutdown(&self) -> Result<(), RemoteError> {
+        let mut conn = self.conn.lock().unwrap();
+        let reply = conn.rpc(&Frame::Shutdown);
+        conn.drop_conn();
+        match reply? {
+            Frame::OkReply => Ok(()),
+            other => Err(RemoteError::Protocol {
+                expected: "OkReply",
+                got: format!("{other:?}"),
+            }),
+        }
+    }
+}
+
+impl ServingFront for RemoteFront {
+    /// Ship the request over the wire. The reply's piggybacked events
+    /// (Admitted, or a terminal Rejected) are replayed into the local
+    /// channel before the handle is returned, so synchronous refusals
+    /// stay synchronous — the router's re-route loop depends on that.
+    /// Transport failures surface as `Rejected(Other)` on the handle:
+    /// submit cannot return an error, and the router's submit path
+    /// already treats a synchronous rejection as "pick another backend".
+    fn submit(&mut self, req: ServeRequest) -> RequestHandle {
+        let mut conn = self.conn.lock().unwrap();
+        let client_id = conn.next_client_id;
+        conn.next_client_id += 1;
+        let (handle, channel) = RequestHandle::new(client_id);
+        if let Err(e) = conn.ensure_connected() {
+            push_reject(&channel, format!("remote backend unreachable: {e}"));
+            return handle;
+        }
+        match conn.rpc(&Frame::Submit { client_id, req }) {
+            Ok(Frame::Submitted {
+                client_id: cid,
+                events,
+                ..
+            }) if cid == client_id => {
+                let mut terminal = false;
+                {
+                    let mut chan = channel.lock().unwrap();
+                    for ev in events {
+                        terminal |= ev.is_terminal();
+                        chan.push(ev);
+                    }
+                }
+                if !terminal {
+                    conn.live.insert(client_id, channel);
+                }
+            }
+            Ok(other) => {
+                let e = conn.unexpected("Submitted", other);
+                push_reject(&channel, format!("remote submit failed: {e}"));
+            }
+            Err(e) => push_reject(&channel, format!("remote submit failed: {e}")),
+        }
+        handle
+    }
+
+    /// One remote serving iteration: the backend polls its front and
+    /// returns every event that produced; we replay them into the local
+    /// channels. Errors propagate so the router's health machine sees
+    /// them (poll is also where a torn-down connection reconnects).
+    fn poll(&mut self) -> anyhow::Result<bool> {
+        let mut conn = self.conn.lock().unwrap();
+        conn.ensure_connected()
+            .map_err(|e| anyhow::anyhow!("remote reconnect failed: {e}"))?;
+        match conn.rpc(&Frame::Poll) {
+            Ok(Frame::Events { events, progressed }) => {
+                let mut retired = Vec::new();
+                for (cid, ev) in events {
+                    // Unknown ids (e.g. raced with a local drop) are
+                    // skipped, not an error.
+                    let Some(channel) = conn.live.get(&cid) else {
+                        continue;
+                    };
+                    let terminal = ev.is_terminal();
+                    channel.lock().unwrap().push(ev);
+                    if terminal {
+                        retired.push(cid);
+                    }
+                }
+                for cid in retired {
+                    conn.live.remove(&cid);
+                }
+                Ok(progressed)
+            }
+            Ok(other) => {
+                let e = conn.unexpected("Events", other);
+                anyhow::bail!("remote poll failed: {e}")
+            }
+            Err(e) => anyhow::bail!("remote poll failed: {e}"),
+        }
+    }
+
+    fn cancel(&mut self, id: u64) -> bool {
+        let mut conn = self.conn.lock().unwrap();
+        if !conn.live.contains_key(&id) {
+            return false;
+        }
+        match conn.rpc(&Frame::Cancel { client_id: id }) {
+            Ok(Frame::CancelResult { live }) => live,
+            Ok(other) => {
+                let _ = conn.unexpected("CancelResult", other);
+                false
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// The backend's stats plus this hop's own accounting
+    /// (`event_overflows` from the local replay channels). While
+    /// disconnected, reports an empty adapter set with zero capacity
+    /// headroom so eligibility-based routing skips this backend until
+    /// `poll` reconnects it.
+    fn stats(&self) -> ServerStats {
+        let mut conn = self.conn.lock().unwrap();
+        let local_overflows: usize = conn
+            .live
+            .values()
+            .map(|c| c.lock().unwrap().overflows())
+            .sum();
+        if conn.chan.is_some() {
+            match conn.rpc(&Frame::Stats) {
+                Ok(Frame::StatsReply { mut stats }) => {
+                    stats.event_overflows += local_overflows;
+                    return stats;
+                }
+                Ok(other) => {
+                    let _ = conn.unexpected("StatsReply", other);
+                }
+                Err(_) => {}
+            }
+        }
+        ServerStats {
+            adapters: AdapterSet::only(vec![]),
+            max_prompt_tokens: 0,
+            kv_free_tokens: 0,
+            event_overflows: local_overflows,
+            ..Default::default()
+        }
+    }
+
+    fn install_adapter(&mut self, spec: &crate::model::LoraSpec) -> anyhow::Result<()> {
+        let mut conn = self.conn.lock().unwrap();
+        conn.ensure_connected()
+            .map_err(|e| anyhow::anyhow!("remote install failed: {e}"))?;
+        match conn.rpc(&Frame::Install { spec: spec.clone() }) {
+            Ok(Frame::OkReply) => Ok(()),
+            Ok(other) => {
+                let e = conn.unexpected("OkReply", other);
+                anyhow::bail!("remote install failed: {e}")
+            }
+            Err(e) => anyhow::bail!("remote install failed: {e}"),
+        }
+    }
+
+    fn uninstall_adapter(&mut self, adapter: u64) -> anyhow::Result<()> {
+        let mut conn = self.conn.lock().unwrap();
+        conn.ensure_connected()
+            .map_err(|e| anyhow::anyhow!("remote uninstall failed: {e}"))?;
+        match conn.rpc(&Frame::Uninstall { adapter }) {
+            Ok(Frame::OkReply) => Ok(()),
+            Ok(other) => {
+                let e = conn.unexpected("OkReply", other);
+                anyhow::bail!("remote uninstall failed: {e}")
+            }
+            Err(e) => anyhow::bail!("remote uninstall failed: {e}"),
+        }
+    }
+
+    fn prewarm_adapter(&mut self, adapter: u64) -> anyhow::Result<bool> {
+        let mut conn = self.conn.lock().unwrap();
+        conn.ensure_connected()
+            .map_err(|e| anyhow::anyhow!("remote prewarm failed: {e}"))?;
+        match conn.rpc(&Frame::Prewarm { adapter }) {
+            Ok(Frame::PrewarmResult { warmed }) => Ok(warmed),
+            Ok(other) => {
+                let e = conn.unexpected("PrewarmResult", other);
+                anyhow::bail!("remote prewarm failed: {e}")
+            }
+            Err(e) => anyhow::bail!("remote prewarm failed: {e}"),
+        }
+    }
+
+    fn cold_start_stats(&self) -> Option<ColdStartStats> {
+        let mut conn = self.conn.lock().unwrap();
+        if conn.chan.is_none() {
+            return None;
+        }
+        match conn.rpc(&Frame::ColdStart) {
+            Ok(Frame::ColdStartReply { stats }) => stats,
+            Ok(other) => {
+                let _ = conn.unexpected("ColdStartReply", other);
+                None
+            }
+            Err(_) => None,
+        }
+    }
+}
+
+/// Terminal `Rejected(Other)` for transport-level submit failures.
+fn push_reject(channel: &Arc<Mutex<EventChannel>>, why: String) {
+    channel
+        .lock()
+        .unwrap()
+        .push(RequestEvent::Rejected(RejectReason::Other(why)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+    use crate::model::LlamaConfig;
+    use crate::remote::server::serve_connection;
+    use crate::server::api::LifecycleState;
+    use crate::sim::{GpuModel, ServingMode, SimFront, SimInstance};
+
+    /// Spawn a sim-backed host serving one socketpair connection and
+    /// hand back the client's `RemoteFront`.
+    fn remote_pair(adapters: &[(u64, usize)]) -> (RemoteFront, std::thread::JoinHandle<()>) {
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let inst = SimInstance::new(0, model, ServingMode::CaraServe, 32, 8, 64);
+        let mut front = SimFront::new(inst, 512);
+        for &(id, rank) in adapters {
+            front.register_adapter(id, rank);
+        }
+        let (client_chan, mut server_chan) = SocketChannel::pair().expect("socketpair");
+        let server = std::thread::spawn(move || {
+            serve_connection(&mut front, &mut server_chan, "sim-host");
+        });
+        let front = RemoteFront::from_channel(client_chan, "test-router", DEFAULT_IO_TIMEOUT)
+            .expect("handshake");
+        (front, server)
+    }
+
+    #[test]
+    fn end_to_end_stream_over_socketpair() {
+        let (mut front, server) = remote_pair(&[(1, 8)]);
+        assert_eq!(front.server_name(), "sim-host");
+        assert!(front.resident().contains(1));
+
+        let handle = front.submit(ServeRequest::new(1, vec![1, 2, 3]).max_new_tokens(5));
+        assert_eq!(handle.state(), LifecycleState::Queued);
+        front.run_until_idle().expect("run");
+        assert_eq!(handle.state(), LifecycleState::Finished);
+        // The simulator synthesizes tokens 0,1,2,… — the remote hop
+        // must not perturb them.
+        assert_eq!(handle.tokens(), vec![0, 1, 2, 3, 4]);
+        let stats = front.stats();
+        assert!(stats.can_serve(1));
+
+        front.heartbeat().expect("heartbeat");
+        front.shutdown().expect("shutdown");
+        server.join().expect("server thread");
+    }
+
+    #[test]
+    fn synchronous_rejection_stays_synchronous() {
+        let (mut front, server) = remote_pair(&[(1, 8)]);
+        // Unregistered adapter: the rejection must be visible before
+        // submit returns (the router's re-pick loop reads it).
+        let handle = front.submit(ServeRequest::new(99, vec![1]));
+        assert_eq!(handle.state(), LifecycleState::Rejected);
+        front.shutdown().expect("shutdown");
+        server.join().expect("server thread");
+    }
+
+    #[test]
+    fn cancel_round_trips() {
+        let (mut front, server) = remote_pair(&[(1, 8)]);
+        let handle = front.submit(ServeRequest::new(1, vec![1, 2]).max_new_tokens(30));
+        assert!(front.cancel(handle.id()));
+        front.run_until_idle().expect("run");
+        assert_eq!(handle.state(), LifecycleState::Cancelled);
+        assert!(!front.cancel(handle.id()), "retired ids report false");
+        front.shutdown().expect("shutdown");
+        server.join().expect("server thread");
+    }
+
+    #[test]
+    fn transport_death_orphans_streams_without_fake_terminals() {
+        let (mut front, server) = remote_pair(&[(1, 8)]);
+        let handle = front.submit(ServeRequest::new(1, vec![1, 2]).max_new_tokens(30));
+        front.poll().expect("first poll");
+        // Kill the host side; socketpair mode has no reconnect path.
+        front.shutdown().expect("shutdown");
+        server.join().expect("server thread");
+        assert!(front.poll().is_err(), "poll must surface the disconnect");
+        assert!(
+            !handle.is_terminal(),
+            "no fabricated terminal: failover owns this stream now"
+        );
+        // Disconnected stats advertise nothing servable.
+        let stats = front.stats();
+        assert!(!stats.can_serve(1));
+        // Submit after death rejects synchronously instead of hanging.
+        let dead = front.submit(ServeRequest::new(1, vec![1]));
+        assert_eq!(dead.state(), LifecycleState::Rejected);
+    }
+
+    #[test]
+    fn install_uninstall_and_prewarm_round_trip() {
+        let (mut front, server) = remote_pair(&[(1, 8)]);
+        let spec = crate::model::LoraSpec::standard(7, 16, "llama2-7b");
+        front.install_adapter(&spec).expect("install");
+        assert!(front.stats().can_serve(7));
+        assert!(front.prewarm_adapter(7).expect("prewarm"));
+        front.uninstall_adapter(7).expect("uninstall");
+        assert!(!front.stats().can_serve(7));
+        // Remote-side refusals surface as errors, connection intact.
+        assert!(front.uninstall_adapter(42).is_err());
+        assert!(front.is_connected());
+        front.shutdown().expect("shutdown");
+        server.join().expect("server thread");
+    }
+}

@@ -1,0 +1,790 @@
+//! The HTTP/1.1 JSON front door: the externally-reachable edge of the
+//! distributed tier, hand-rolled over [`std::net::TcpListener`] (zero
+//! new dependencies).
+//!
+//! Endpoints:
+//!
+//! - `POST /v1/requests` — body `{"adapter": 3, "prompt": [1,2,3],
+//!   "max_new_tokens": 16, ...}`; replies `Transfer-Encoding: chunked`
+//!   with one JSON line per request event (`{"id":N}` first, then
+//!   `{"event":"token","token":t}` … ending in exactly one terminal
+//!   event line), streaming tokens as the engine produces them.
+//! - `DELETE /v1/requests/<id>` — cancel; replies `{"cancelled":bool}`.
+//! - `GET /v1/stats` — the front's aggregated [`ServerStats`].
+//!
+//! Threading model: connection handler threads never touch the
+//! [`ServingFront`] — they enqueue [`Cmd`]s over an mpsc channel and
+//! the single serving thread ([`HttpGateway::run`]) drains them
+//! between `poll`s, exactly like the CLI's existing drive loops. Token
+//! streaming needs no cross-thread coordination because a
+//! [`RequestHandle`]'s event channel is already `Arc<Mutex<…>>`-shared.
+//!
+//! [`soak`] is the load harness: N concurrent streaming clients, each
+//! verifying its stream carries exactly one terminal event — the
+//! acceptance oracle for "zero dropped terminals under load".
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::time::{Duration, Instant};
+
+use crate::scheduler::ServerStats;
+use crate::server::api::{Priority, RequestEvent, RequestHandle, ServeRequest, ServingFront};
+use crate::util::json::{self, Json};
+
+/// How long a handler waits for the serving thread to act on its
+/// command before replying 503.
+const CMD_TIMEOUT: Duration = Duration::from_secs(10);
+/// Per-stream progress deadline: a stream with no event for this long
+/// is closed (the client's exactly-one-terminal check then fails it
+/// loudly rather than hanging forever).
+const STREAM_STALL: Duration = Duration::from_secs(120);
+/// Handler-side socket read timeout (slowloris bound).
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+/// Largest accepted request body.
+const MAX_BODY: usize = 1 << 20;
+
+/// A connection handler's request to the serving thread.
+enum Cmd {
+    Submit {
+        req: ServeRequest,
+        reply: SyncSender<RequestHandle>,
+    },
+    Cancel {
+        id: u64,
+        reply: SyncSender<bool>,
+    },
+    Stats {
+        reply: SyncSender<ServerStats>,
+    },
+}
+
+/// The listening front door. Construct with [`HttpGateway::bind`],
+/// then drive the serving side with [`HttpGateway::run`] (or
+/// [`HttpGateway::pump`] from an existing drive loop).
+pub struct HttpGateway {
+    addr: SocketAddr,
+    cmds: Receiver<Cmd>,
+}
+
+impl HttpGateway {
+    /// Bind the listener and start the accept loop (a detached thread
+    /// spawning one handler thread per connection; it lives until the
+    /// process exits). `addr` is e.g. `"127.0.0.1:8090"` — pass port 0
+    /// to let the kernel pick, then read [`HttpGateway::addr`].
+    pub fn bind(addr: &str) -> anyhow::Result<HttpGateway> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let (tx, cmds) = mpsc::channel::<Cmd>();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { continue };
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_connection(stream, &tx);
+                });
+            }
+        });
+        Ok(HttpGateway { addr, cmds })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Drain pending handler commands into the front; returns how many
+    /// were served. Call between `poll`s when embedding the gateway in
+    /// an existing drive loop.
+    pub fn pump(&self, front: &mut dyn ServingFront) -> usize {
+        let mut served = 0;
+        while let Ok(cmd) = self.cmds.try_recv() {
+            served += 1;
+            match cmd {
+                Cmd::Submit { req, reply } => {
+                    let _ = reply.send(front.submit(req));
+                }
+                Cmd::Cancel { id, reply } => {
+                    let _ = reply.send(front.cancel(id));
+                }
+                Cmd::Stats { reply } => {
+                    let _ = reply.send(front.stats());
+                }
+            }
+        }
+        served
+    }
+
+    /// Serve until `stop()` returns true: pump commands, poll the
+    /// front, sleep briefly when idle. This is the backend router
+    /// process's main loop under `caraserve serve --http`.
+    pub fn run(&self, front: &mut dyn ServingFront, stop: &dyn Fn() -> bool) -> anyhow::Result<()> {
+        while !stop() {
+            let served = self.pump(front);
+            let progressed = front.poll()?;
+            if served == 0 && !progressed {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection handling
+// ---------------------------------------------------------------------------
+
+/// Minimal parsed request: method, path, body.
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+/// Read one HTTP/1.1 request (head + `Content-Length` body).
+fn read_request(stream: &mut TcpStream) -> anyhow::Result<HttpRequest> {
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    let mut buf = Vec::new();
+    let head_end = loop {
+        let mut chunk = [0u8; 1024];
+        let n = stream.read(&mut chunk)?;
+        anyhow::ensure!(n > 0, "connection closed before request head");
+        buf.extend_from_slice(&chunk[..n]);
+        if let Some(pos) = find_crlfcrlf(&buf) {
+            break pos;
+        }
+        anyhow::ensure!(buf.len() <= MAX_BODY, "request head too large");
+    };
+    let head = std::str::from_utf8(&buf[..head_end])?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    anyhow::ensure!(!method.is_empty() && !path.is_empty(), "bad request line");
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    anyhow::ensure!(content_length <= MAX_BODY, "request body too large");
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk)?;
+        anyhow::ensure!(n > 0, "connection closed mid-body");
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok(HttpRequest { method, path, body })
+}
+
+fn find_crlfcrlf(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn write_response(stream: &mut TcpStream, status: &str, body: &str) -> std::io::Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+fn write_chunk(stream: &mut TcpStream, data: &[u8]) -> std::io::Result<()> {
+    write!(stream, "{:x}\r\n", data.len())?;
+    stream.write_all(data)?;
+    stream.write_all(b"\r\n")
+}
+
+fn error_body(message: &str) -> String {
+    json::obj(vec![("error", json::s(message))]).to_string_compact()
+}
+
+fn handle_connection(mut stream: TcpStream, tx: &Sender<Cmd>) -> anyhow::Result<()> {
+    let req = match read_request(&mut stream) {
+        Ok(req) => req,
+        Err(e) => {
+            let _ = write_response(&mut stream, "400 Bad Request", &error_body(&format!("{e}")));
+            return Ok(());
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/requests") => handle_submit(&mut stream, tx, &req.body),
+        ("GET", "/v1/stats") => handle_stats(&mut stream, tx),
+        ("DELETE", path) if path.starts_with("/v1/requests/") => {
+            handle_cancel(&mut stream, tx, path)
+        }
+        _ => {
+            let _ = write_response(&mut stream, "404 Not Found", &error_body("no such endpoint"));
+            Ok(())
+        }
+    }
+}
+
+/// Submit + stream: chunked JSON lines until the terminal event.
+fn handle_submit(stream: &mut TcpStream, tx: &Sender<Cmd>, body: &[u8]) -> anyhow::Result<()> {
+    let req = match parse_serve_request(body) {
+        Ok(req) => req,
+        Err(msg) => {
+            let _ = write_response(stream, "400 Bad Request", &error_body(&msg));
+            return Ok(());
+        }
+    };
+    let (reply, rx) = mpsc::sync_channel(1);
+    let handle = match tx
+        .send(Cmd::Submit { req, reply })
+        .ok()
+        .and_then(|()| rx.recv_timeout(CMD_TIMEOUT).ok())
+    {
+        Some(handle) => handle,
+        None => {
+            let _ = write_response(
+                stream,
+                "503 Service Unavailable",
+                &error_body("serving loop unavailable"),
+            );
+            return Ok(());
+        }
+    };
+    write!(
+        stream,
+        "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+    )?;
+    let first = json::obj(vec![("id", json::num(handle.id() as f64))]).to_string_compact();
+    write_chunk(stream, format!("{first}\n").as_bytes())?;
+    let mut last_progress = Instant::now();
+    loop {
+        let mut emitted = false;
+        while let Some(event) = handle.poll_event() {
+            emitted = true;
+            let line = event_json(&event).to_string_compact();
+            write_chunk(stream, format!("{line}\n").as_bytes())?;
+            if event.is_terminal() {
+                write!(stream, "0\r\n\r\n")?;
+                return Ok(());
+            }
+        }
+        if emitted {
+            last_progress = Instant::now();
+        } else {
+            if last_progress.elapsed() > STREAM_STALL {
+                // Close without the final 0-chunk: the client sees a
+                // truncated stream and fails its terminal check loudly.
+                return Ok(());
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+}
+
+fn handle_stats(stream: &mut TcpStream, tx: &Sender<Cmd>) -> anyhow::Result<()> {
+    let (reply, rx) = mpsc::sync_channel(1);
+    let stats = tx
+        .send(Cmd::Stats { reply })
+        .ok()
+        .and_then(|()| rx.recv_timeout(CMD_TIMEOUT).ok());
+    match stats {
+        Some(stats) => {
+            let body = stats_json(&stats).to_string_compact();
+            let _ = write_response(stream, "200 OK", &body);
+        }
+        None => {
+            let _ = write_response(
+                stream,
+                "503 Service Unavailable",
+                &error_body("serving loop unavailable"),
+            );
+        }
+    }
+    Ok(())
+}
+
+fn handle_cancel(stream: &mut TcpStream, tx: &Sender<Cmd>, path: &str) -> anyhow::Result<()> {
+    let id: u64 = match path.trim_start_matches("/v1/requests/").parse() {
+        Ok(id) => id,
+        Err(_) => {
+            let _ = write_response(stream, "400 Bad Request", &error_body("bad request id"));
+            return Ok(());
+        }
+    };
+    let (reply, rx) = mpsc::sync_channel(1);
+    let cancelled = tx
+        .send(Cmd::Cancel { id, reply })
+        .ok()
+        .and_then(|()| rx.recv_timeout(CMD_TIMEOUT).ok());
+    match cancelled {
+        Some(live) => {
+            let body = json::obj(vec![("cancelled", Json::Bool(live))]).to_string_compact();
+            let _ = write_response(stream, "200 OK", &body);
+        }
+        None => {
+            let _ = write_response(
+                stream,
+                "503 Service Unavailable",
+                &error_body("serving loop unavailable"),
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// JSON mapping
+// ---------------------------------------------------------------------------
+
+/// Decode a `POST /v1/requests` body into a [`ServeRequest`].
+fn parse_serve_request(body: &[u8]) -> Result<ServeRequest, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let j = Json::parse(text).map_err(|e| format!("bad json: {e}"))?;
+    let adapter = j
+        .get("adapter")
+        .and_then(Json::as_f64)
+        .ok_or("missing numeric field: adapter")? as u64;
+    let prompt: Vec<i32> = j
+        .get("prompt")
+        .and_then(Json::as_arr)
+        .ok_or("missing array field: prompt")?
+        .iter()
+        .map(|t| t.as_f64().map(|v| v as i32).ok_or("non-numeric prompt token"))
+        .collect::<Result<_, _>>()?;
+    if prompt.is_empty() {
+        return Err("prompt must be non-empty".to_string());
+    }
+    let mut req = ServeRequest::new(adapter, prompt);
+    if let Some(n) = j.get("max_new_tokens").and_then(Json::as_usize) {
+        req = req.max_new_tokens(n);
+    }
+    if let Some(stops) = j.get("stop_tokens").and_then(Json::as_arr) {
+        for t in stops {
+            let t = t.as_f64().ok_or("non-numeric stop token")?;
+            req = req.stop_token(t as i32);
+        }
+    }
+    if let Some(k) = j.get("top_k").and_then(Json::as_usize) {
+        req.sampling.top_k = k;
+    }
+    if let Some(seed) = j.get("seed").and_then(Json::as_f64) {
+        req.sampling.seed = seed as u64;
+    }
+    if let Some(p) = j.get("priority").and_then(Json::as_str) {
+        req = req.priority(match p {
+            "batch" => Priority::Batch,
+            "standard" => Priority::Standard,
+            "interactive" => Priority::Interactive,
+            other => return Err(format!("unknown priority {other:?}")),
+        });
+    }
+    let ttft = j.get("ttft_ms").and_then(Json::as_f64);
+    let tpot = j.get("tpot_ms").and_then(Json::as_f64);
+    if let (Some(ttft_ms), Some(tpot_ms)) = (ttft, tpot) {
+        req = req.slo(ttft_ms, tpot_ms);
+    }
+    Ok(req)
+}
+
+/// One request event as a JSON line object.
+fn event_json(event: &RequestEvent) -> Json {
+    match event {
+        RequestEvent::Admitted => json::obj(vec![("event", json::s("admitted"))]),
+        RequestEvent::Routed { server } => json::obj(vec![
+            ("event", json::s("routed")),
+            ("server", json::num(*server as f64)),
+        ]),
+        RequestEvent::FirstToken(t) => json::obj(vec![
+            ("event", json::s("first_token")),
+            ("token", json::num(*t as f64)),
+        ]),
+        RequestEvent::Token(t) => json::obj(vec![
+            ("event", json::s("token")),
+            ("token", json::num(*t as f64)),
+        ]),
+        RequestEvent::Finished(reason) => json::obj(vec![
+            ("event", json::s("finished")),
+            ("reason", json::s(&format!("{reason:?}").to_lowercase())),
+        ]),
+        RequestEvent::Rerouted { from, to } => json::obj(vec![
+            ("event", json::s("rerouted")),
+            ("from", json::num(*from as f64)),
+            ("to", json::num(*to as f64)),
+        ]),
+        RequestEvent::Cancelled => json::obj(vec![("event", json::s("cancelled"))]),
+        RequestEvent::Rejected(reason) => json::obj(vec![
+            ("event", json::s("rejected")),
+            ("reason", json::s(&format!("{reason:?}"))),
+        ]),
+    }
+}
+
+/// The stats surface exposed at `GET /v1/stats`.
+fn stats_json(stats: &ServerStats) -> Json {
+    fn bounded(v: usize) -> Json {
+        if v == usize::MAX {
+            Json::Null
+        } else {
+            json::num(v as f64)
+        }
+    }
+    json::obj(vec![
+        ("running", json::num(stats.running_ranks.len() as f64)),
+        ("queued", json::num(stats.queued_ranks.len() as f64)),
+        ("max_prompt_tokens", bounded(stats.max_prompt_tokens)),
+        ("kv_free_tokens", bounded(stats.kv_free_tokens)),
+        ("preemptions", json::num(stats.preemptions as f64)),
+        ("event_overflows", json::num(stats.event_overflows as f64)),
+        ("adapter_evictions", json::num(stats.adapter_evictions as f64)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Soak harness
+// ---------------------------------------------------------------------------
+
+/// Aggregate outcome of a [`soak`] run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SoakReport {
+    pub clients: usize,
+    pub requests: usize,
+    /// Streams read to a clean end-of-response.
+    pub completed: usize,
+    /// Total terminal event lines observed.
+    pub terminals: usize,
+    /// Token events observed (first_token + token).
+    pub tokens: usize,
+    /// Streams that ended in `cancelled`.
+    pub cancelled: usize,
+    /// Transport / HTTP / JSON failures.
+    pub errors: usize,
+    /// Streams that ended with **no** terminal event — the acceptance
+    /// criterion requires this to be zero.
+    pub dropped_terminals: usize,
+    /// Streams carrying more than one terminal event (must be zero).
+    pub multi_terminals: usize,
+}
+
+impl SoakReport {
+    /// The acceptance oracle: every stream completed with exactly one
+    /// terminal.
+    pub fn clean(&self) -> bool {
+        self.errors == 0 && self.dropped_terminals == 0 && self.multi_terminals == 0
+    }
+}
+
+/// Drive `clients` concurrent streaming clients against a gateway,
+/// `requests_per_client` sequential requests each, verifying the
+/// exactly-one-terminal contract per stream. Every `cancel_every`-th
+/// request (0 = never) is cancelled mid-stream over a second
+/// connection, exercising DELETE under load.
+pub fn soak(
+    addr: SocketAddr,
+    clients: usize,
+    requests_per_client: usize,
+    adapters: u64,
+    max_new_tokens: usize,
+    cancel_every: usize,
+) -> SoakReport {
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut part = SoakReport::default();
+                for i in 0..requests_per_client {
+                    let seq = c * requests_per_client + i;
+                    let adapter = (seq as u64) % adapters.max(1);
+                    let cancel = cancel_every > 0 && seq % cancel_every == cancel_every - 1;
+                    part.requests += 1;
+                    match stream_one(addr, adapter, max_new_tokens, cancel) {
+                        Ok(s) => {
+                            part.completed += 1;
+                            part.terminals += s.terminals;
+                            part.tokens += s.tokens;
+                            part.cancelled += usize::from(s.saw_cancelled);
+                            match s.terminals {
+                                0 => part.dropped_terminals += 1,
+                                1 => {}
+                                _ => part.multi_terminals += 1,
+                            }
+                        }
+                        Err(_) => part.errors += 1,
+                    }
+                }
+                part
+            })
+        })
+        .collect();
+    let mut report = SoakReport {
+        clients,
+        ..SoakReport::default()
+    };
+    for worker in workers {
+        let Ok(part) = worker.join() else {
+            report.errors += 1;
+            continue;
+        };
+        report.requests += part.requests;
+        report.completed += part.completed;
+        report.terminals += part.terminals;
+        report.tokens += part.tokens;
+        report.cancelled += part.cancelled;
+        report.errors += part.errors;
+        report.dropped_terminals += part.dropped_terminals;
+        report.multi_terminals += part.multi_terminals;
+    }
+    report
+}
+
+/// One client stream's tally.
+struct StreamOutcome {
+    terminals: usize,
+    tokens: usize,
+    saw_cancelled: bool,
+}
+
+/// POST one request, stream the chunked reply to its end, optionally
+/// firing a DELETE once the request id is known.
+fn stream_one(
+    addr: SocketAddr,
+    adapter: u64,
+    max_new_tokens: usize,
+    cancel: bool,
+) -> anyhow::Result<StreamOutcome> {
+    let body = json::obj(vec![
+        ("adapter", json::num(adapter as f64)),
+        (
+            "prompt",
+            Json::Arr((0..8).map(|t| json::num(t as f64)).collect()),
+        ),
+        ("max_new_tokens", json::num(max_new_tokens as f64)),
+    ])
+    .to_string_compact();
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    write!(
+        stream,
+        "POST /v1/requests HTTP/1.1\r\nHost: caraserve\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut reader = ChunkReader::new(stream)?;
+    anyhow::ensure!(
+        reader.status == 200,
+        "unexpected status {}: {}",
+        reader.status,
+        String::from_utf8_lossy(&reader.buf)
+    );
+    let mut outcome = StreamOutcome {
+        terminals: 0,
+        tokens: 0,
+        saw_cancelled: false,
+    };
+    let mut first = true;
+    while let Some(chunk) = reader.next_chunk()? {
+        for line in chunk.split(|&b| b == b'\n').filter(|l| !l.is_empty()) {
+            let text = std::str::from_utf8(line)?;
+            let j = Json::parse(text).map_err(|e| anyhow::anyhow!("bad event json: {e}"))?;
+            if first {
+                first = false;
+                let id = j
+                    .get("id")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow::anyhow!("first line is not the id"))?
+                    as u64;
+                if cancel {
+                    cancel_one(addr, id)?;
+                }
+                continue;
+            }
+            match j.get("event").and_then(Json::as_str) {
+                Some("token") | Some("first_token") => outcome.tokens += 1,
+                Some("finished") | Some("rejected") => outcome.terminals += 1,
+                Some("cancelled") => {
+                    outcome.terminals += 1;
+                    outcome.saw_cancelled = true;
+                }
+                _ => {}
+            }
+        }
+    }
+    Ok(outcome)
+}
+
+/// Fire `DELETE /v1/requests/<id>` over a fresh connection.
+fn cancel_one(addr: SocketAddr, id: u64) -> anyhow::Result<()> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    write!(
+        stream,
+        "DELETE /v1/requests/{id} HTTP/1.1\r\nHost: caraserve\r\nConnection: close\r\n\r\n"
+    )?;
+    let mut drain = Vec::new();
+    let _ = stream.read_to_end(&mut drain);
+    Ok(())
+}
+
+/// Incremental chunked-transfer decoder over a client socket: parses
+/// the response head, then yields chunk payloads until the 0-chunk.
+struct ChunkReader {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    status: u16,
+}
+
+impl ChunkReader {
+    fn new(mut stream: TcpStream) -> anyhow::Result<ChunkReader> {
+        let mut buf = Vec::new();
+        let head_end = loop {
+            if let Some(pos) = find_crlfcrlf(&buf) {
+                break pos;
+            }
+            let mut chunk = [0u8; 1024];
+            let n = stream.read(&mut chunk)?;
+            anyhow::ensure!(n > 0, "connection closed before response head");
+            buf.extend_from_slice(&chunk[..n]);
+        };
+        let head = std::str::from_utf8(&buf[..head_end])?.to_string();
+        let status: u16 = head
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("bad status line: {head}"))?;
+        buf.drain(..head_end + 4);
+        Ok(ChunkReader { stream, buf, status })
+    }
+
+    /// The next chunk payload, or `None` after the terminating 0-chunk.
+    fn next_chunk(&mut self) -> anyhow::Result<Option<Vec<u8>>> {
+        loop {
+            // "<hex>\r\n<payload>\r\n"
+            if let Some(line_end) = self.buf.windows(2).position(|w| w == b"\r\n") {
+                let size = usize::from_str_radix(
+                    std::str::from_utf8(&self.buf[..line_end])?.trim(),
+                    16,
+                )?;
+                let need = line_end + 2 + size + 2;
+                if size == 0 {
+                    return Ok(None);
+                }
+                if self.buf.len() >= need {
+                    let payload = self.buf[line_end + 2..line_end + 2 + size].to_vec();
+                    self.buf.drain(..need);
+                    return Ok(Some(payload));
+                }
+            }
+            let mut chunk = [0u8; 4096];
+            let n = self.stream.read(&mut chunk)?;
+            anyhow::ensure!(n > 0, "connection closed mid-stream (truncated chunk)");
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+    use crate::model::LlamaConfig;
+    use crate::sim::{GpuModel, ServingMode, SimFront, SimInstance};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    fn gateway_over_sim(adapters: u64) -> (Arc<AtomicBool>, SocketAddr, std::thread::JoinHandle<()>) {
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let inst = SimInstance::new(0, model, ServingMode::CaraServe, 64, 8, 512);
+        let mut front = SimFront::new(inst, 512);
+        for id in 0..adapters {
+            front.register_adapter(id, 16);
+        }
+        let gateway = HttpGateway::bind("127.0.0.1:0").expect("bind");
+        let addr = gateway.addr();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let serving = std::thread::spawn(move || {
+            gateway
+                .run(&mut front, &|| stop2.load(Ordering::Relaxed))
+                .expect("serving loop");
+        });
+        (stop, addr, serving)
+    }
+
+    #[test]
+    fn soak_streams_have_exactly_one_terminal() {
+        let (stop, addr, serving) = gateway_over_sim(4);
+        let report = soak(addr, 8, 2, 4, 6, 0);
+        stop.store(true, Ordering::Relaxed);
+        serving.join().expect("serving thread");
+        assert!(report.clean(), "soak not clean: {report:?}");
+        assert_eq!(report.completed, 16);
+        assert_eq!(report.terminals, 16);
+        assert!(report.tokens > 0);
+    }
+
+    #[test]
+    fn cancel_and_stats_endpoints_work_under_streaming() {
+        let (stop, addr, serving) = gateway_over_sim(2);
+        // Every 2nd request cancelled mid-stream over DELETE; long
+        // budgets so cancels land before natural completion.
+        let report = soak(addr, 4, 2, 2, 64, 2);
+        // Stats endpoint round-trips while streams run.
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        write!(
+            stream,
+            "GET /v1/stats HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n"
+        )
+        .expect("write");
+        let mut raw = Vec::new();
+        stream.read_to_end(&mut raw).expect("read");
+        let text = String::from_utf8_lossy(&raw);
+        let body = text.split("\r\n\r\n").nth(1).expect("body");
+        let j = Json::parse(body).expect("stats json");
+        assert!(j.get("event_overflows").is_some());
+        stop.store(true, Ordering::Relaxed);
+        serving.join().expect("serving thread");
+        assert!(report.clean(), "soak not clean: {report:?}");
+        assert!(report.cancelled >= 1, "no cancel landed: {report:?}");
+    }
+
+    #[test]
+    fn bad_requests_get_typed_errors() {
+        let (stop, addr, serving) = gateway_over_sim(1);
+        for (req, want) in [
+            (
+                "POST /v1/requests HTTP/1.1\r\nContent-Length: 9\r\n\r\n{\"bad\": 1",
+                "400",
+            ),
+            ("GET /nope HTTP/1.1\r\n\r\n", "404"),
+            ("DELETE /v1/requests/zzz HTTP/1.1\r\n\r\n", "400"),
+        ] {
+            let mut stream = TcpStream::connect(addr).expect("connect");
+            stream.write_all(req.as_bytes()).expect("write");
+            let mut raw = Vec::new();
+            stream.read_to_end(&mut raw).expect("read");
+            let text = String::from_utf8_lossy(&raw);
+            assert!(
+                text.starts_with(&format!("HTTP/1.1 {want}")),
+                "want {want} for {req:?}, got: {text}"
+            );
+        }
+        stop.store(true, Ordering::Relaxed);
+        serving.join().expect("serving thread");
+    }
+
+    #[test]
+    fn parse_serve_request_covers_the_surface() {
+        let body = br#"{"adapter": 3, "prompt": [1, 2], "max_new_tokens": 4,
+            "stop_tokens": [7], "top_k": 2, "seed": 9,
+            "priority": "interactive", "ttft_ms": 500, "tpot_ms": 50}"#;
+        let req = parse_serve_request(body).expect("parse");
+        assert_eq!(req.adapter, 3);
+        assert_eq!(req.prompt, vec![1, 2]);
+        assert_eq!(req.sampling.max_new_tokens, 4);
+        assert_eq!(req.sampling.stop_tokens, vec![7]);
+        assert_eq!(req.sampling.top_k, 2);
+        assert_eq!(req.sampling.seed, 9);
+        assert_eq!(req.priority, Priority::Interactive);
+        let slo = req.slo.expect("slo parsed");
+        assert_eq!((slo.ttft_ms, slo.tpot_ms), (500.0, 50.0));
+        assert!(parse_serve_request(b"{}").is_err());
+        assert!(parse_serve_request(b"{\"adapter\":1,\"prompt\":[]}").is_err());
+    }
+}

@@ -1,0 +1,37 @@
+//! The distributed serving tier: CaraServe's request plane split
+//! across OS processes.
+//!
+//! Everything below the [`crate::server::ServingFront`] trait —
+//! engines, simulators, the rank-aware `ClusterFront`, the §3
+//! coordinator — was built process-local. This module is the transport
+//! that carries that exact trait surface between processes, so the
+//! router composes remote backends with **unchanged** routing,
+//! failover, and placement code:
+//!
+//! - [`wire`] — the length-prefixed, versioned frame protocol: the
+//!   full `ServingFront` surface (submit / poll-events / cancel /
+//!   stats / install / uninstall / prewarm / cold-start stats) plus
+//!   handshake and heartbeat frames, encoded dependency-free and
+//!   decoded with typed errors, never panics.
+//! - [`server`] — the backend host: wraps any `ServingFront` and
+//!   serves the protocol from a Unix-socket listener loop
+//!   (`caraserve backend` runs one per process).
+//! - [`client`] — [`client::RemoteFront`], the `ServingFront` proxy
+//!   the router holds; replays remote events into ordinary local
+//!   [`crate::server::RequestHandle`]s and reconnects-with-state after
+//!   transport failures (distinguished from failover: a rejoining
+//!   backend re-handshakes and reports its resident adapters, so the
+//!   router readmits it without re-install when state survived).
+//! - [`http`] — the HTTP/1.1 JSON front door over
+//!   `std::net::TcpListener`: `POST /v1/requests` streams token events
+//!   as chunked JSON lines, `DELETE` cancels, `GET /v1/stats` reports,
+//!   and [`http::soak`] is the concurrent-streaming load oracle.
+
+pub mod client;
+pub mod http;
+pub mod server;
+pub mod wire;
+
+pub use client::{RemoteError, RemoteFront};
+pub use http::{soak, HttpGateway, SoakReport};
+pub use server::{bind, serve_connection, serve_listener, ConnExit};

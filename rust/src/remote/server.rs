@@ -1,0 +1,350 @@
+//! The backend host: serves the [`crate::remote::wire`] protocol over a
+//! Unix socket in front of any [`ServingFront`] (native engine,
+//! simulator, even a whole `ClusterFront`) — the process the
+//! `caraserve backend` subcommand runs.
+//!
+//! The protocol is strict request-reply: every client frame gets
+//! exactly one reply frame, and request events only flow inside the
+//! reply to `Poll`. That keeps the host single-threaded (the front is
+//! `&mut` throughout) and makes the router's deadline handling trivial.
+//!
+//! **Reconnect-with-state**: the listener loop serves one router
+//! connection at a time; when a connection drops, in-flight requests
+//! are cancelled and drained (their router failed them over already),
+//! but the front itself — installed adapters, device residency, warm
+//! caches — survives untouched. The next handshake's `Welcome` frame
+//! reports the resident adapter set, which is what lets the router's
+//! Probation→Healthy readmission skip re-installs when state survived
+//! (and re-install from the registry when it did not).
+
+use std::collections::BTreeMap;
+use std::os::unix::net::UnixListener;
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::wire::{self, Frame, WireError, VERSION};
+use crate::ipc::SocketChannel;
+use crate::server::api::{RequestHandle, ServingFront};
+
+/// Why [`serve_connection`] returned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConnExit {
+    /// The peer disconnected (or its stream broke). The front's state
+    /// survives; the listener loop accepts the next connection.
+    Disconnected,
+    /// The peer sent `Shutdown`: exit the listener loop.
+    ShutdownRequested,
+}
+
+/// Bind the backend's listening socket, replacing a stale socket file
+/// from a previous (killed) incarnation — exactly the restart path the
+/// rejoin machinery exercises.
+pub fn bind<P: AsRef<Path>>(path: P) -> Result<UnixListener> {
+    let path = path.as_ref();
+    if path.exists() {
+        std::fs::remove_file(path)?;
+    }
+    Ok(UnixListener::bind(path)?)
+}
+
+/// Accept-and-serve loop: one router connection at a time, each served
+/// by [`serve_connection`], until a `Shutdown` frame (or a listener
+/// error). Adapter state persists across connections.
+pub fn serve_listener(
+    front: &mut dyn ServingFront,
+    listener: &UnixListener,
+    name: &str,
+) -> Result<()> {
+    loop {
+        let (stream, _) = listener.accept()?;
+        let mut chan = SocketChannel::from_stream(stream);
+        match serve_connection(front, &mut chan, name) {
+            ConnExit::Disconnected => continue,
+            ConnExit::ShutdownRequested => return Ok(()),
+        }
+    }
+}
+
+/// Serve one connection's frames until the peer disconnects or asks
+/// for shutdown. Never returns an error: a broken stream is a normal
+/// [`ConnExit::Disconnected`] (the front outlives its connections).
+pub fn serve_connection(
+    front: &mut dyn ServingFront,
+    chan: &mut SocketChannel,
+    name: &str,
+) -> ConnExit {
+    // client request id → live handle; BTreeMap so Events frames list
+    // requests in a deterministic order.
+    let mut live: BTreeMap<u64, RequestHandle> = BTreeMap::new();
+    loop {
+        let bytes = match chan.recv_bytes() {
+            Ok(b) => b,
+            Err(_) => {
+                quiesce(front, &mut live);
+                return ConnExit::Disconnected;
+            }
+        };
+        let (reply, exit) = match wire::decode(&bytes) {
+            Ok(frame) => dispatch(front, &mut live, frame, name),
+            // The socket layer delimits frames, so one undecodable
+            // frame doesn't desynchronize the stream: report and keep
+            // serving.
+            Err(e) => (err_reply(&e), None),
+        };
+        if chan.send_bytes(&wire::encode(&reply)).is_err() {
+            quiesce(front, &mut live);
+            return ConnExit::Disconnected;
+        }
+        if let Some(exit) = exit {
+            if exit == ConnExit::Disconnected {
+                quiesce(front, &mut live);
+            }
+            return exit;
+        }
+    }
+}
+
+fn err_reply(e: &dyn std::fmt::Display) -> Frame {
+    Frame::ErrReply {
+        message: format!("{e}"),
+    }
+}
+
+/// Handle one decoded frame; returns the reply and, when the
+/// connection should end after it, the exit kind.
+fn dispatch(
+    front: &mut dyn ServingFront,
+    live: &mut BTreeMap<u64, RequestHandle>,
+    frame: Frame,
+    name: &str,
+) -> (Frame, Option<ConnExit>) {
+    let reply = match frame {
+        Frame::Hello { client: _ } => Frame::Welcome {
+            version: VERSION,
+            server: name.to_string(),
+            resident: front.stats().adapters,
+        },
+        Frame::Submit { client_id, req } => {
+            if live.contains_key(&client_id) {
+                err_reply(&format_args!("client request id {client_id} already live"))
+            } else {
+                let handle = front.submit(req);
+                // Synchronous lifecycle output (Admitted, or a terminal
+                // Rejected) rides back on the reply so the router's
+                // re-route loop sees refusals immediately.
+                let events = handle.drain_events();
+                let backend_id = handle.id();
+                if !handle.is_terminal() {
+                    live.insert(client_id, handle);
+                }
+                Frame::Submitted {
+                    client_id,
+                    backend_id,
+                    events,
+                }
+            }
+        }
+        Frame::Poll => match front.poll() {
+            Ok(progressed) => {
+                let mut events = Vec::new();
+                let mut done = Vec::new();
+                for (&cid, handle) in live.iter() {
+                    for ev in handle.drain_events() {
+                        events.push((cid, ev));
+                    }
+                    if handle.is_terminal() {
+                        done.push(cid);
+                    }
+                }
+                for cid in done {
+                    live.remove(&cid);
+                }
+                Frame::Events { events, progressed }
+            }
+            Err(e) => err_reply(&format_args!("{e:#}")),
+        },
+        Frame::Cancel { client_id } => Frame::CancelResult {
+            live: match live.get(&client_id) {
+                Some(handle) => front.cancel(handle.id()),
+                None => false,
+            },
+        },
+        Frame::Stats => Frame::StatsReply {
+            stats: front.stats(),
+        },
+        Frame::Install { spec } => match front.install_adapter(&spec) {
+            Ok(()) => Frame::OkReply,
+            Err(e) => err_reply(&format_args!("{e:#}")),
+        },
+        Frame::Uninstall { adapter } => match front.uninstall_adapter(adapter) {
+            Ok(()) => Frame::OkReply,
+            Err(e) => err_reply(&format_args!("{e:#}")),
+        },
+        Frame::Prewarm { adapter } => match front.prewarm_adapter(adapter) {
+            Ok(warmed) => Frame::PrewarmResult { warmed },
+            Err(e) => err_reply(&format_args!("{e:#}")),
+        },
+        Frame::ColdStart => Frame::ColdStartReply {
+            stats: front.cold_start_stats(),
+        },
+        Frame::Heartbeat { nonce } => Frame::HeartbeatAck { nonce },
+        Frame::Shutdown => return (Frame::OkReply, Some(ConnExit::ShutdownRequested)),
+        // Reply-direction frames arriving as requests are a peer bug.
+        other => err_reply(&format_args!("unexpected frame {other:?}")),
+    };
+    (reply, None)
+}
+
+/// Cancel and drain every request the departed connection left in
+/// flight, so the next connection (and the front's own queues) start
+/// clean. Adapter state is deliberately untouched — that is the
+/// "with-state" half of reconnect-with-state.
+fn quiesce(front: &mut dyn ServingFront, live: &mut BTreeMap<u64, RequestHandle>) {
+    for handle in live.values() {
+        front.cancel(handle.id());
+    }
+    // Drive the cancellations to their terminal events; a front erroring
+    // here has nothing further to drain.
+    let _ = front.run_until_idle();
+    for handle in live.values() {
+        let _ = handle.drain_events();
+    }
+    live.clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+    use crate::model::LlamaConfig;
+    use crate::server::api::{LifecycleState, RequestEvent, ServeRequest};
+    use crate::sim::{GpuModel, ServingMode, SimFront, SimInstance};
+
+    fn sim_front() -> SimFront {
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let inst = SimInstance::new(0, model, ServingMode::CaraServe, 32, 8, 64);
+        let mut front = SimFront::new(inst, 512);
+        front.register_adapter(1, 8);
+        front
+    }
+
+    fn rpc(front: &mut dyn ServingFront, live: &mut BTreeMap<u64, RequestHandle>, f: Frame) -> Frame {
+        let (reply, exit) = dispatch(front, live, f, "test-backend");
+        assert!(exit.is_none());
+        reply
+    }
+
+    #[test]
+    fn submit_poll_drain_lifecycle() {
+        let mut front = sim_front();
+        let mut live = BTreeMap::new();
+        let req = ServeRequest::new(1, vec![1, 2, 3]).max_new_tokens(4);
+        let reply = rpc(
+            &mut front,
+            &mut live,
+            Frame::Submit { client_id: 10, req },
+        );
+        let Frame::Submitted {
+            client_id, events, ..
+        } = reply
+        else {
+            panic!("expected Submitted, got {reply:?}");
+        };
+        assert_eq!(client_id, 10);
+        assert_eq!(events, vec![RequestEvent::Admitted]);
+        assert!(live.contains_key(&10));
+
+        let mut seen = Vec::new();
+        for _ in 0..64 {
+            let reply = rpc(&mut front, &mut live, Frame::Poll);
+            let Frame::Events { events, .. } = reply else {
+                panic!("expected Events, got {reply:?}");
+            };
+            seen.extend(events);
+            if live.is_empty() {
+                break;
+            }
+        }
+        assert!(live.is_empty(), "request never terminated");
+        assert!(seen.iter().all(|(cid, _)| *cid == 10));
+        assert_eq!(
+            seen.iter().filter(|(_, ev)| ev.is_terminal()).count(),
+            1,
+            "exactly one terminal: {seen:?}"
+        );
+    }
+
+    #[test]
+    fn synchronous_rejection_rides_the_submit_reply() {
+        let mut front = sim_front();
+        let mut live = BTreeMap::new();
+        // Adapter 9 is not registered: SimFront rejects at submit.
+        let req = ServeRequest::new(9, vec![1]);
+        let reply = rpc(&mut front, &mut live, Frame::Submit { client_id: 1, req });
+        let Frame::Submitted { events, .. } = reply else {
+            panic!("expected Submitted, got {reply:?}");
+        };
+        assert!(
+            events.iter().any(|ev| ev.is_terminal()),
+            "rejection must be synchronous: {events:?}"
+        );
+        assert!(live.is_empty(), "terminal request must not stay live");
+    }
+
+    #[test]
+    fn quiesce_cancels_in_flight_and_preserves_adapters() {
+        let mut front = sim_front();
+        let mut live = BTreeMap::new();
+        let req = ServeRequest::new(1, vec![1, 2]).max_new_tokens(8);
+        rpc(&mut front, &mut live, Frame::Submit { client_id: 5, req });
+        // Keep a view of the backend handle to check the terminal.
+        let handle = live.get(&5).unwrap().clone();
+        quiesce(&mut front, &mut live);
+        assert!(live.is_empty());
+        assert_eq!(handle.state(), LifecycleState::Cancelled);
+        // The "state" in reconnect-with-state: adapters survive.
+        assert!(front.stats().can_serve(1));
+    }
+
+    #[test]
+    fn hello_reports_resident_adapters() {
+        let mut front = sim_front();
+        let mut live = BTreeMap::new();
+        let reply = rpc(
+            &mut front,
+            &mut live,
+            Frame::Hello {
+                client: "router".into(),
+            },
+        );
+        let Frame::Welcome {
+            version, resident, ..
+        } = reply
+        else {
+            panic!("expected Welcome, got {reply:?}");
+        };
+        assert_eq!(version, VERSION);
+        assert!(resident.contains(1));
+        assert!(!resident.contains(2));
+    }
+
+    #[test]
+    fn shutdown_and_unknown_frames() {
+        let mut front = sim_front();
+        let mut live = BTreeMap::new();
+        let (reply, exit) = dispatch(&mut front, &mut live, Frame::Shutdown, "b");
+        assert_eq!(reply, Frame::OkReply);
+        assert_eq!(exit, Some(ConnExit::ShutdownRequested));
+        let reply = rpc(&mut front, &mut live, Frame::OkReply);
+        assert!(matches!(reply, Frame::ErrReply { .. }));
+    }
+
+    #[test]
+    fn wire_error_display_is_reported_not_panicked() {
+        // serve_connection path for a bad frame goes through err_reply;
+        // exercise the formatting here.
+        let reply = err_reply(&WireError::BadMagic { got: 7 });
+        assert!(matches!(reply, Frame::ErrReply { .. }));
+    }
+}

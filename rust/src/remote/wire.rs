@@ -1,0 +1,1149 @@
+//! The versioned frame codec of the distributed serving tier.
+//!
+//! Every message between a router-side [`crate::remote::RemoteFront`]
+//! and a backend host ([`crate::remote::server`]) is one byte frame
+//! (shipped via [`crate::ipc::SocketChannel::send_bytes`]) holding:
+//!
+//! ```text
+//! [magic u16 LE][version u16 LE][tag u8][payload ...]
+//! ```
+//!
+//! The payload is a hand-rolled little-endian encoding of the [`Frame`]
+//! variant's fields — the full [`crate::server::ServingFront`] surface
+//! (submit / poll-events / cancel / stats / install / uninstall /
+//! prewarm / cold-start counters) plus the handshake and heartbeat
+//! frames the reconnect-with-state protocol needs.
+//!
+//! **Decode never panics.** Corrupt, truncated, oversized, or
+//! wrong-version frames surface as a typed [`WireError`]; every length
+//! is validated against the bytes actually present before any
+//! allocation, and the recursive [`RejectReason`] decoder is
+//! depth-bounded. The `caraserve lint` `wire-panic-free` rule holds
+//! this file to that contract textually (no `unwrap`/`expect`/`panic!`/
+//! asserts outside tests), and `rust/tests/prop_wire.rs` holds it to it
+//! behaviorally (round-trip + mutation property tests).
+
+use crate::model::{LoraSpec, TargetMatrix};
+use crate::scheduler::{AdapterSet, ServerStats};
+use crate::server::api::{
+    FinishReason, Priority, RejectReason, RequestEvent, ResumeState, SamplingParams, ServeRequest,
+    SloSpec,
+};
+use crate::server::metrics::ColdStartStats;
+
+/// Frame preamble: "CaraSErve" — a cheap guard against a desynchronized
+/// or foreign byte stream being interpreted as a frame.
+pub const MAGIC: u16 = 0xCA5E;
+
+/// Protocol version carried by every frame. Peers refuse frames from a
+/// different version with [`WireError::UnknownVersion`] instead of
+/// misparsing them.
+pub const VERSION: u16 = 1;
+
+/// Maximum [`RejectReason`] nesting the decoder will follow
+/// (`NoEligibleServer { last }` is recursive). Honest encoders produce
+/// depth ≤ 2; the bound turns a malicious deep frame into a typed error
+/// instead of a stack overflow.
+const MAX_REASON_DEPTH: u8 = 8;
+
+/// Typed decode failure. Every variant is a *protocol* outcome the
+/// caller can branch on — nothing in this module panics on wire data.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireError {
+    /// The frame ended before a declared field: `need` more bytes were
+    /// required, `have` remained.
+    Truncated { need: usize, have: usize },
+    /// The first two bytes are not [`MAGIC`].
+    BadMagic { got: u16 },
+    /// The frame's version word differs from [`VERSION`].
+    UnknownVersion { got: u16 },
+    /// The frame tag (or a nested enum discriminant) is not one this
+    /// version defines.
+    UnknownTag { tag: u8, context: &'static str },
+    /// A declared element count implies more bytes than the frame
+    /// carries (or overflows) — refused before allocation.
+    Oversized { declared: usize, have: usize },
+    /// A field held a value outside its domain (bad bool byte, usize
+    /// overflow, reason nesting past [`MAX_REASON_DEPTH`]).
+    BadValue { what: &'static str, got: u64 },
+    /// A string field was not valid UTF-8.
+    BadString,
+    /// Bytes remained after a complete frame was decoded.
+    Trailing { extra: usize },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { need, have } => {
+                write!(f, "frame truncated: need {need} more bytes, have {have}")
+            }
+            WireError::BadMagic { got } => write!(f, "bad frame magic {got:#06x}"),
+            WireError::UnknownVersion { got } => {
+                write!(f, "unknown protocol version {got} (speaking {VERSION})")
+            }
+            WireError::UnknownTag { tag, context } => {
+                write!(f, "unknown {context} tag {tag}")
+            }
+            WireError::Oversized { declared, have } => {
+                write!(f, "declared length {declared} exceeds frame ({have} bytes left)")
+            }
+            WireError::BadValue { what, got } => write!(f, "bad {what} value {got}"),
+            WireError::BadString => write!(f, "string field is not valid UTF-8"),
+            WireError::Trailing { extra } => write!(f, "{extra} trailing bytes after frame"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// One protocol message. Client→server requests first, server→client
+/// replies second; the protocol is strict request-reply (every client
+/// frame gets exactly one reply), so a variant's direction is fixed by
+/// construction even though the codec is shared.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    // ---- client → server ------------------------------------------------
+    /// Handshake opener; `client` names the router for logs.
+    Hello { client: String },
+    /// Submit a request under the router-chosen `client_id` (the id the
+    /// events for this request will carry back).
+    Submit { client_id: u64, req: ServeRequest },
+    /// Advance the backend one iteration and drain pending events.
+    Poll,
+    /// Cancel the request submitted as `client_id`.
+    Cancel { client_id: u64 },
+    /// Fetch the backend's [`ServerStats`].
+    Stats,
+    /// Install an adapter (the coordinator's management surface).
+    Install { spec: LoraSpec },
+    /// Uninstall an adapter.
+    Uninstall { adapter: u64 },
+    /// Pre-warm an installed adapter.
+    Prewarm { adapter: u64 },
+    /// Fetch cold-start counters.
+    ColdStart,
+    /// Liveness probe; the reply echoes `nonce`.
+    Heartbeat { nonce: u64 },
+    /// Ask the backend host process to exit its listener loop.
+    Shutdown,
+
+    // ---- server → client ------------------------------------------------
+    /// Handshake reply: the backend's protocol version, display name,
+    /// and — the reconnect-with-state payload — the adapter set still
+    /// resident from before the connection was lost.
+    Welcome {
+        version: u16,
+        server: String,
+        resident: AdapterSet,
+    },
+    /// Submit reply; `backend_id` is the backend-local request id and
+    /// `events` are the lifecycle events the submission produced
+    /// *synchronously* (`Admitted`, or a terminal `Rejected`) — carried
+    /// here so a backend's synchronous admission refusal is visible to
+    /// the router's re-route loop immediately, exactly as in-process.
+    Submitted {
+        client_id: u64,
+        backend_id: u64,
+        events: Vec<RequestEvent>,
+    },
+    /// Poll reply: undelivered events per client request id, plus the
+    /// backend's `poll()` progress flag.
+    Events {
+        events: Vec<(u64, RequestEvent)>,
+        progressed: bool,
+    },
+    /// Cancel reply: was the request still live?
+    CancelResult { live: bool },
+    /// Stats reply.
+    StatsReply { stats: ServerStats },
+    /// Prewarm reply: did the backend warm it?
+    PrewarmResult { warmed: bool },
+    /// Cold-start counters reply (`None` when the backend tracks none).
+    ColdStartReply { stats: Option<ColdStartStats> },
+    /// Heartbeat reply.
+    HeartbeatAck { nonce: u64 },
+    /// Generic success reply (install / uninstall / shutdown).
+    OkReply,
+    /// Generic failure reply; `message` is the backend error rendered.
+    ErrReply { message: String },
+}
+
+// Frame tags. Client requests are 1.., replies 64.. — disjoint ranges
+// so a misdirected frame decodes to an unmistakably wrong variant
+// rather than a plausible one.
+const TAG_HELLO: u8 = 1;
+const TAG_SUBMIT: u8 = 2;
+const TAG_POLL: u8 = 3;
+const TAG_CANCEL: u8 = 4;
+const TAG_STATS: u8 = 5;
+const TAG_INSTALL: u8 = 6;
+const TAG_UNINSTALL: u8 = 7;
+const TAG_PREWARM: u8 = 8;
+const TAG_COLD_START: u8 = 9;
+const TAG_HEARTBEAT: u8 = 10;
+const TAG_SHUTDOWN: u8 = 11;
+const TAG_WELCOME: u8 = 64;
+const TAG_SUBMITTED: u8 = 65;
+const TAG_EVENTS: u8 = 66;
+const TAG_CANCEL_RESULT: u8 = 67;
+const TAG_STATS_REPLY: u8 = 68;
+const TAG_PREWARM_RESULT: u8 = 69;
+const TAG_COLD_START_REPLY: u8 = 70;
+const TAG_HEARTBEAT_ACK: u8 = 71;
+const TAG_OK: u8 = 72;
+const TAG_ERR: u8 = 73;
+
+/// Encode one frame to bytes (header + payload). Encoding is total —
+/// it cannot fail and never panics.
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u16(MAGIC);
+    w.u16(VERSION);
+    match frame {
+        Frame::Hello { client } => {
+            w.u8(TAG_HELLO);
+            w.string(client);
+        }
+        Frame::Submit { client_id, req } => {
+            w.u8(TAG_SUBMIT);
+            w.u64(*client_id);
+            put_request(&mut w, req);
+        }
+        Frame::Poll => w.u8(TAG_POLL),
+        Frame::Cancel { client_id } => {
+            w.u8(TAG_CANCEL);
+            w.u64(*client_id);
+        }
+        Frame::Stats => w.u8(TAG_STATS),
+        Frame::Install { spec } => {
+            w.u8(TAG_INSTALL);
+            put_spec(&mut w, spec);
+        }
+        Frame::Uninstall { adapter } => {
+            w.u8(TAG_UNINSTALL);
+            w.u64(*adapter);
+        }
+        Frame::Prewarm { adapter } => {
+            w.u8(TAG_PREWARM);
+            w.u64(*adapter);
+        }
+        Frame::ColdStart => w.u8(TAG_COLD_START),
+        Frame::Heartbeat { nonce } => {
+            w.u8(TAG_HEARTBEAT);
+            w.u64(*nonce);
+        }
+        Frame::Shutdown => w.u8(TAG_SHUTDOWN),
+        Frame::Welcome {
+            version,
+            server,
+            resident,
+        } => {
+            w.u8(TAG_WELCOME);
+            w.u16(*version);
+            w.string(server);
+            put_adapter_set(&mut w, resident);
+        }
+        Frame::Submitted {
+            client_id,
+            backend_id,
+            events,
+        } => {
+            w.u8(TAG_SUBMITTED);
+            w.u64(*client_id);
+            w.u64(*backend_id);
+            w.u32(events.len() as u32);
+            for ev in events {
+                put_event(&mut w, ev);
+            }
+        }
+        Frame::Events { events, progressed } => {
+            w.u8(TAG_EVENTS);
+            w.u32(events.len() as u32);
+            for (id, ev) in events {
+                w.u64(*id);
+                put_event(&mut w, ev);
+            }
+            w.bool(*progressed);
+        }
+        Frame::CancelResult { live } => {
+            w.u8(TAG_CANCEL_RESULT);
+            w.bool(*live);
+        }
+        Frame::StatsReply { stats } => {
+            w.u8(TAG_STATS_REPLY);
+            put_stats(&mut w, stats);
+        }
+        Frame::PrewarmResult { warmed } => {
+            w.u8(TAG_PREWARM_RESULT);
+            w.bool(*warmed);
+        }
+        Frame::ColdStartReply { stats } => {
+            w.u8(TAG_COLD_START_REPLY);
+            match stats {
+                None => w.u8(0),
+                Some(s) => {
+                    w.u8(1);
+                    w.usize(s.cold_admits);
+                    w.usize(s.warm_admits);
+                    w.usize(s.cpu_assisted);
+                    w.usize(s.handoffs);
+                    w.usize(s.deferred_collisions);
+                    w.f64(s.assist_decode_s);
+                }
+            }
+        }
+        Frame::HeartbeatAck { nonce } => {
+            w.u8(TAG_HEARTBEAT_ACK);
+            w.u64(*nonce);
+        }
+        Frame::OkReply => w.u8(TAG_OK),
+        Frame::ErrReply { message } => {
+            w.u8(TAG_ERR);
+            w.string(message);
+        }
+    }
+    w.out
+}
+
+/// Decode one frame. Never panics: every malformed input maps to a
+/// [`WireError`].
+pub fn decode(bytes: &[u8]) -> Result<Frame, WireError> {
+    let mut r = Reader::new(bytes);
+    let magic = r.u16()?;
+    if magic != MAGIC {
+        return Err(WireError::BadMagic { got: magic });
+    }
+    let version = r.u16()?;
+    if version != VERSION {
+        return Err(WireError::UnknownVersion { got: version });
+    }
+    let tag = r.u8()?;
+    let frame = match tag {
+        TAG_HELLO => Frame::Hello { client: r.string()? },
+        TAG_SUBMIT => Frame::Submit {
+            client_id: r.u64()?,
+            req: get_request(&mut r)?,
+        },
+        TAG_POLL => Frame::Poll,
+        TAG_CANCEL => Frame::Cancel { client_id: r.u64()? },
+        TAG_STATS => Frame::Stats,
+        TAG_INSTALL => Frame::Install {
+            spec: get_spec(&mut r)?,
+        },
+        TAG_UNINSTALL => Frame::Uninstall { adapter: r.u64()? },
+        TAG_PREWARM => Frame::Prewarm { adapter: r.u64()? },
+        TAG_COLD_START => Frame::ColdStart,
+        TAG_HEARTBEAT => Frame::Heartbeat { nonce: r.u64()? },
+        TAG_SHUTDOWN => Frame::Shutdown,
+        TAG_WELCOME => Frame::Welcome {
+            version: r.u16()?,
+            server: r.string()?,
+            resident: get_adapter_set(&mut r)?,
+        },
+        TAG_SUBMITTED => {
+            let client_id = r.u64()?;
+            let backend_id = r.u64()?;
+            let n = r.counted(1)?;
+            let mut events = Vec::with_capacity(n);
+            for _ in 0..n {
+                events.push(get_event(&mut r)?);
+            }
+            Frame::Submitted {
+                client_id,
+                backend_id,
+                events,
+            }
+        }
+        TAG_EVENTS => {
+            // Minimum 9 bytes per entry (u64 id + 1-byte event tag).
+            let n = r.counted(9)?;
+            let mut events = Vec::with_capacity(n);
+            for _ in 0..n {
+                let id = r.u64()?;
+                events.push((id, get_event(&mut r)?));
+            }
+            Frame::Events {
+                events,
+                progressed: r.bool()?,
+            }
+        }
+        TAG_CANCEL_RESULT => Frame::CancelResult { live: r.bool()? },
+        TAG_STATS_REPLY => Frame::StatsReply {
+            stats: get_stats(&mut r)?,
+        },
+        TAG_PREWARM_RESULT => Frame::PrewarmResult { warmed: r.bool()? },
+        TAG_COLD_START_REPLY => Frame::ColdStartReply {
+            stats: match r.u8()? {
+                0 => None,
+                1 => Some(ColdStartStats {
+                    cold_admits: r.usize()?,
+                    warm_admits: r.usize()?,
+                    cpu_assisted: r.usize()?,
+                    handoffs: r.usize()?,
+                    deferred_collisions: r.usize()?,
+                    assist_decode_s: r.f64()?,
+                }),
+                got => {
+                    return Err(WireError::BadValue {
+                        what: "option",
+                        got: got as u64,
+                    })
+                }
+            },
+        },
+        TAG_HEARTBEAT_ACK => Frame::HeartbeatAck { nonce: r.u64()? },
+        TAG_OK => Frame::OkReply,
+        TAG_ERR => Frame::ErrReply {
+            message: r.string()?,
+        },
+        tag => return Err(WireError::UnknownTag { tag, context: "frame" }),
+    };
+    let extra = r.remaining();
+    if extra > 0 {
+        return Err(WireError::Trailing { extra });
+    }
+    Ok(frame)
+}
+
+// ---------------------------------------------------------------------------
+// Field codecs
+// ---------------------------------------------------------------------------
+
+fn put_request(w: &mut Writer, req: &ServeRequest) {
+    w.u64(req.adapter);
+    w.vec_i32(&req.prompt);
+    w.usize(req.sampling.max_new_tokens);
+    w.vec_i32(&req.sampling.stop_tokens);
+    w.usize(req.sampling.top_k);
+    w.u64(req.sampling.seed);
+    w.u8(match req.priority {
+        Priority::Batch => 0,
+        Priority::Standard => 1,
+        Priority::Interactive => 2,
+    });
+    match &req.slo {
+        None => w.u8(0),
+        Some(s) => {
+            w.u8(1);
+            w.f64(s.ttft_ms);
+            w.f64(s.tpot_ms);
+        }
+    }
+    match &req.resume {
+        None => w.u8(0),
+        Some(rs) => {
+            w.u8(1);
+            w.vec_i32(&rs.tokens);
+        }
+    }
+}
+
+fn get_request(r: &mut Reader) -> Result<ServeRequest, WireError> {
+    let adapter = r.u64()?;
+    let prompt = r.vec_i32()?;
+    let sampling = SamplingParams {
+        max_new_tokens: r.usize()?,
+        stop_tokens: r.vec_i32()?,
+        top_k: r.usize()?,
+        seed: r.u64()?,
+    };
+    let priority = match r.u8()? {
+        0 => Priority::Batch,
+        1 => Priority::Standard,
+        2 => Priority::Interactive,
+        tag => return Err(WireError::UnknownTag { tag, context: "priority" }),
+    };
+    let slo = match r.u8()? {
+        0 => None,
+        1 => Some(SloSpec {
+            ttft_ms: r.f64()?,
+            tpot_ms: r.f64()?,
+        }),
+        got => {
+            return Err(WireError::BadValue {
+                what: "option",
+                got: got as u64,
+            })
+        }
+    };
+    let resume = match r.u8()? {
+        0 => None,
+        1 => Some(ResumeState {
+            tokens: r.vec_i32()?,
+        }),
+        got => {
+            return Err(WireError::BadValue {
+                what: "option",
+                got: got as u64,
+            })
+        }
+    };
+    Ok(ServeRequest {
+        adapter,
+        prompt,
+        sampling,
+        priority,
+        slo,
+        resume,
+    })
+}
+
+fn put_spec(w: &mut Writer, spec: &LoraSpec) {
+    w.u64(spec.id);
+    w.usize(spec.rank);
+    w.string(&spec.base_model);
+    w.u32(spec.targets.len() as u32);
+    for t in &spec.targets {
+        w.u8(match t {
+            TargetMatrix::Q => 0,
+            TargetMatrix::K => 1,
+            TargetMatrix::V => 2,
+            TargetMatrix::O => 3,
+        });
+    }
+}
+
+fn get_spec(r: &mut Reader) -> Result<LoraSpec, WireError> {
+    let id = r.u64()?;
+    let rank = r.usize()?;
+    let base_model = r.string()?;
+    let n = r.counted(1)?;
+    let mut targets = Vec::with_capacity(n);
+    for _ in 0..n {
+        targets.push(match r.u8()? {
+            0 => TargetMatrix::Q,
+            1 => TargetMatrix::K,
+            2 => TargetMatrix::V,
+            3 => TargetMatrix::O,
+            tag => return Err(WireError::UnknownTag { tag, context: "target" }),
+        });
+    }
+    Ok(LoraSpec {
+        id,
+        rank,
+        targets,
+        base_model,
+    })
+}
+
+fn put_event(w: &mut Writer, ev: &RequestEvent) {
+    match ev {
+        RequestEvent::Admitted => w.u8(0),
+        RequestEvent::Routed { server } => {
+            w.u8(1);
+            w.usize(*server);
+        }
+        RequestEvent::FirstToken(t) => {
+            w.u8(2);
+            w.i32(*t);
+        }
+        RequestEvent::Token(t) => {
+            w.u8(3);
+            w.i32(*t);
+        }
+        RequestEvent::Finished(reason) => {
+            w.u8(4);
+            w.u8(match reason {
+                FinishReason::Length => 0,
+                FinishReason::Stop => 1,
+            });
+        }
+        RequestEvent::Rerouted { from, to } => {
+            w.u8(5);
+            w.usize(*from);
+            w.usize(*to);
+        }
+        RequestEvent::Cancelled => w.u8(6),
+        RequestEvent::Rejected(reason) => {
+            w.u8(7);
+            put_reason(w, reason);
+        }
+    }
+}
+
+fn get_event(r: &mut Reader) -> Result<RequestEvent, WireError> {
+    Ok(match r.u8()? {
+        0 => RequestEvent::Admitted,
+        1 => RequestEvent::Routed { server: r.usize()? },
+        2 => RequestEvent::FirstToken(r.i32()?),
+        3 => RequestEvent::Token(r.i32()?),
+        4 => RequestEvent::Finished(match r.u8()? {
+            0 => FinishReason::Length,
+            1 => FinishReason::Stop,
+            tag => return Err(WireError::UnknownTag { tag, context: "finish-reason" }),
+        }),
+        5 => RequestEvent::Rerouted {
+            from: r.usize()?,
+            to: r.usize()?,
+        },
+        6 => RequestEvent::Cancelled,
+        7 => RequestEvent::Rejected(get_reason(r, 0)?),
+        tag => return Err(WireError::UnknownTag { tag, context: "event" }),
+    })
+}
+
+fn put_reason(w: &mut Writer, reason: &RejectReason) {
+    match reason {
+        RejectReason::PromptBounds { len, max_prompt } => {
+            w.u8(0);
+            w.usize(*len);
+            w.usize(*max_prompt);
+        }
+        RejectReason::EmptyBudget => w.u8(1),
+        RejectReason::KvCapacity { kv_capacity } => {
+            w.u8(2);
+            w.usize(*kv_capacity);
+        }
+        RejectReason::AdapterNotInstalled { adapter } => {
+            w.u8(3);
+            w.u64(*adapter);
+        }
+        RejectReason::AdapterNotRegistered { adapter } => {
+            w.u8(4);
+            w.u64(*adapter);
+        }
+        RejectReason::PoolTooSmall {
+            adapter,
+            pool_pages,
+        } => {
+            w.u8(5);
+            w.u64(*adapter);
+            w.usize(*pool_pages);
+        }
+        RejectReason::NoEligibleServer { last } => {
+            w.u8(6);
+            match last {
+                None => w.u8(0),
+                Some(inner) => {
+                    w.u8(1);
+                    put_reason(w, inner);
+                }
+            }
+        }
+        RejectReason::PolicyRepick { server } => {
+            w.u8(7);
+            w.usize(*server);
+        }
+        RejectReason::Overloaded { healthy, shed } => {
+            w.u8(8);
+            w.usize(*healthy);
+            w.u8(match shed {
+                Priority::Batch => 0,
+                Priority::Standard => 1,
+                Priority::Interactive => 2,
+            });
+        }
+        RejectReason::BackendFailed { server } => {
+            w.u8(9);
+            w.usize(*server);
+        }
+        RejectReason::Other(s) => {
+            w.u8(10);
+            w.string(s);
+        }
+    }
+}
+
+fn get_reason(r: &mut Reader, depth: u8) -> Result<RejectReason, WireError> {
+    if depth >= MAX_REASON_DEPTH {
+        return Err(WireError::BadValue {
+            what: "reason-depth",
+            got: depth as u64,
+        });
+    }
+    Ok(match r.u8()? {
+        0 => RejectReason::PromptBounds {
+            len: r.usize()?,
+            max_prompt: r.usize()?,
+        },
+        1 => RejectReason::EmptyBudget,
+        2 => RejectReason::KvCapacity {
+            kv_capacity: r.usize()?,
+        },
+        3 => RejectReason::AdapterNotInstalled { adapter: r.u64()? },
+        4 => RejectReason::AdapterNotRegistered { adapter: r.u64()? },
+        5 => RejectReason::PoolTooSmall {
+            adapter: r.u64()?,
+            pool_pages: r.usize()?,
+        },
+        6 => RejectReason::NoEligibleServer {
+            last: match r.u8()? {
+                0 => None,
+                1 => Some(Box::new(get_reason(r, depth + 1)?)),
+                got => {
+                    return Err(WireError::BadValue {
+                        what: "option",
+                        got: got as u64,
+                    })
+                }
+            },
+        },
+        7 => RejectReason::PolicyRepick { server: r.usize()? },
+        8 => RejectReason::Overloaded {
+            healthy: r.usize()?,
+            shed: match r.u8()? {
+                0 => Priority::Batch,
+                1 => Priority::Standard,
+                2 => Priority::Interactive,
+                tag => return Err(WireError::UnknownTag { tag, context: "priority" }),
+            },
+        },
+        9 => RejectReason::BackendFailed { server: r.usize()? },
+        10 => RejectReason::Other(r.string()?),
+        tag => return Err(WireError::UnknownTag { tag, context: "reject-reason" }),
+    })
+}
+
+fn put_adapter_set(w: &mut Writer, set: &AdapterSet) {
+    match set {
+        AdapterSet::Any => w.u8(0),
+        AdapterSet::Only(ids) => {
+            w.u8(1);
+            w.u32(ids.len() as u32);
+            for id in ids {
+                w.u64(*id);
+            }
+        }
+    }
+}
+
+fn get_adapter_set(r: &mut Reader) -> Result<AdapterSet, WireError> {
+    match r.u8()? {
+        0 => Ok(AdapterSet::Any),
+        1 => {
+            let n = r.counted(8)?;
+            let mut ids = Vec::with_capacity(n);
+            for _ in 0..n {
+                ids.push(r.u64()?);
+            }
+            // Re-sort/dedup on the way in: the invariant is the
+            // receiver's to uphold, not the wire's to promise.
+            Ok(AdapterSet::only(ids))
+        }
+        tag => Err(WireError::UnknownTag { tag, context: "adapter-set" }),
+    }
+}
+
+fn put_stats(w: &mut Writer, s: &ServerStats) {
+    w.u32(s.running_ranks.len() as u32);
+    for rank in &s.running_ranks {
+        w.usize(*rank);
+    }
+    w.u32(s.queued_ranks.len() as u32);
+    for rank in &s.queued_ranks {
+        w.usize(*rank);
+    }
+    put_adapter_set(w, &s.adapters);
+    w.usize(s.max_prompt_tokens);
+    w.usize(s.kv_free_tokens);
+    match s.tpot_slo {
+        None => w.u8(0),
+        Some(v) => {
+            w.u8(1);
+            w.f64(v);
+        }
+    }
+    w.usize(s.preemptions);
+    w.usize(s.pool_pages);
+    w.usize(s.kv_held_pages);
+    w.usize(s.adapter_held_pages);
+    w.usize(s.adapter_evictions);
+    w.usize(s.event_overflows);
+}
+
+fn get_stats(r: &mut Reader) -> Result<ServerStats, WireError> {
+    let n = r.counted(8)?;
+    let mut running_ranks = Vec::with_capacity(n);
+    for _ in 0..n {
+        running_ranks.push(r.usize()?);
+    }
+    let n = r.counted(8)?;
+    let mut queued_ranks = Vec::with_capacity(n);
+    for _ in 0..n {
+        queued_ranks.push(r.usize()?);
+    }
+    let adapters = get_adapter_set(r)?;
+    let max_prompt_tokens = r.usize()?;
+    let kv_free_tokens = r.usize()?;
+    let tpot_slo = match r.u8()? {
+        0 => None,
+        1 => Some(r.f64()?),
+        got => {
+            return Err(WireError::BadValue {
+                what: "option",
+                got: got as u64,
+            })
+        }
+    };
+    Ok(ServerStats {
+        running_ranks,
+        queued_ranks,
+        adapters,
+        max_prompt_tokens,
+        kv_free_tokens,
+        tpot_slo,
+        preemptions: r.usize()?,
+        pool_pages: r.usize()?,
+        kv_held_pages: r.usize()?,
+        adapter_held_pages: r.usize()?,
+        adapter_evictions: r.usize()?,
+        event_overflows: r.usize()?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Primitive writer/reader
+// ---------------------------------------------------------------------------
+
+struct Writer {
+    out: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Writer {
+        Writer { out: Vec::new() }
+    }
+    fn u8(&mut self, v: u8) {
+        self.out.push(v);
+    }
+    fn bool(&mut self, v: bool) {
+        self.out.push(v as u8);
+    }
+    fn u16(&mut self, v: u16) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i32(&mut self, v: i32) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+    /// usize as u64 — `usize::MAX` (the "unmodeled" sentinel in
+    /// [`ServerStats`]) maps to `u64::MAX` and back losslessly on
+    /// 64-bit targets.
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    fn string(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.out.extend_from_slice(s.as_bytes());
+    }
+    fn vec_i32(&mut self, v: &[i32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.i32(*x);
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len().saturating_sub(self.pos)
+    }
+
+    /// Take the next `n` bytes, or a typed `Truncated` error.
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if n > self.remaining() {
+            return Err(WireError::Truncated {
+                need: n,
+                have: self.remaining(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read a u32 element count and validate it against the bytes
+    /// actually left (each element needs ≥ `min_elem_bytes`), so a
+    /// corrupt count can never trigger a giant allocation.
+    fn counted(&mut self, min_elem_bytes: usize) -> Result<usize, WireError> {
+        let n = self.u32()? as usize;
+        let need = n.checked_mul(min_elem_bytes);
+        match need {
+            Some(need) if need <= self.remaining() => Ok(n),
+            _ => Err(WireError::Oversized {
+                declared: n,
+                have: self.remaining(),
+            }),
+        }
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn bool(&mut self) -> Result<bool, WireError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            got => Err(WireError::BadValue {
+                what: "bool",
+                got: got as u64,
+            }),
+        }
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ]))
+    }
+
+    fn i32(&mut self) -> Result<i32, WireError> {
+        let s = self.take(4)?;
+        Ok(i32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn usize(&mut self) -> Result<usize, WireError> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| WireError::BadValue { what: "usize", got: v })
+    }
+
+    fn string(&mut self) -> Result<String, WireError> {
+        let n = self.counted(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadString)
+    }
+
+    fn vec_i32(&mut self) -> Result<Vec<i32>, WireError> {
+        let n = self.counted(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.i32()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: Frame) {
+        let bytes = encode(&f);
+        assert_eq!(decode(&bytes), Ok(f), "roundtrip through {bytes:?}");
+    }
+
+    #[test]
+    fn simple_frames_roundtrip() {
+        roundtrip(Frame::Hello {
+            client: "router-0".into(),
+        });
+        roundtrip(Frame::Poll);
+        roundtrip(Frame::Stats);
+        roundtrip(Frame::ColdStart);
+        roundtrip(Frame::Shutdown);
+        roundtrip(Frame::OkReply);
+        roundtrip(Frame::Cancel { client_id: 7 });
+        roundtrip(Frame::Heartbeat { nonce: u64::MAX });
+        roundtrip(Frame::HeartbeatAck { nonce: 0 });
+        roundtrip(Frame::CancelResult { live: true });
+        roundtrip(Frame::PrewarmResult { warmed: false });
+        roundtrip(Frame::Submitted {
+            client_id: 12,
+            backend_id: 99,
+            events: vec![
+                RequestEvent::Admitted,
+                RequestEvent::Rejected(RejectReason::EmptyBudget),
+            ],
+        });
+        roundtrip(Frame::ColdStartReply { stats: None });
+        roundtrip(Frame::ColdStartReply {
+            stats: Some(ColdStartStats {
+                cold_admits: 3,
+                warm_admits: 9,
+                cpu_assisted: 2,
+                handoffs: 1,
+                deferred_collisions: 0,
+                assist_decode_s: 0.25,
+            }),
+        });
+        roundtrip(Frame::Welcome {
+            version: VERSION,
+            server: "backend-1".into(),
+            resident: AdapterSet::only(vec![4, 8]),
+        });
+        roundtrip(Frame::Welcome {
+            version: VERSION,
+            server: String::new(),
+            resident: AdapterSet::Any,
+        });
+        roundtrip(Frame::Install {
+            spec: LoraSpec::standard(5, 16, "tiny"),
+        });
+        roundtrip(Frame::Uninstall { adapter: 5 });
+        roundtrip(Frame::Prewarm { adapter: 5 });
+        roundtrip(Frame::ErrReply {
+            message: "adapter 3 busy: 2 in-flight requests".into(),
+        });
+    }
+
+    #[test]
+    fn submit_roundtrips_every_field() {
+        let req = ServeRequest::new(9, vec![1, -2, 3])
+            .max_new_tokens(17)
+            .stop_token(2)
+            .top_k(4, 99)
+            .priority(Priority::Interactive)
+            .slo(150.0, 40.0);
+        let mut req = req;
+        req.resume = Some(ResumeState {
+            tokens: vec![5, 6, 7],
+        });
+        roundtrip(Frame::Submit { client_id: 3, req });
+    }
+
+    #[test]
+    fn stats_reply_roundtrips_sentinels() {
+        roundtrip(Frame::StatsReply {
+            stats: ServerStats::default(),
+        });
+        roundtrip(Frame::StatsReply {
+            stats: ServerStats {
+                running_ranks: vec![8, 64],
+                queued_ranks: vec![16],
+                adapters: AdapterSet::only(vec![3, 1, 1]),
+                max_prompt_tokens: usize::MAX,
+                kv_free_tokens: 4096,
+                tpot_slo: Some(0.04),
+                preemptions: 2,
+                pool_pages: 40,
+                kv_held_pages: 11,
+                adapter_held_pages: 5,
+                adapter_evictions: 1,
+                event_overflows: 9,
+            },
+        });
+    }
+
+    #[test]
+    fn nested_reject_reason_roundtrips() {
+        let ev = RequestEvent::Rejected(RejectReason::NoEligibleServer {
+            last: Some(Box::new(RejectReason::Overloaded {
+                healthy: 1,
+                shed: Priority::Batch,
+            })),
+        });
+        roundtrip(Frame::Events {
+            events: vec![(1, ev), (2, RequestEvent::Token(-5))],
+            progressed: true,
+        });
+    }
+
+    #[test]
+    fn wrong_magic_version_and_tag_are_typed() {
+        let mut bytes = encode(&Frame::Poll);
+        bytes[0] ^= 0xFF;
+        assert!(matches!(decode(&bytes), Err(WireError::BadMagic { .. })));
+
+        let mut bytes = encode(&Frame::Poll);
+        bytes[2] = 0xEE;
+        assert!(matches!(
+            decode(&bytes),
+            Err(WireError::UnknownVersion { .. })
+        ));
+
+        let mut bytes = encode(&Frame::Poll);
+        bytes[4] = 200;
+        assert!(matches!(decode(&bytes), Err(WireError::UnknownTag { .. })));
+    }
+
+    #[test]
+    fn truncation_and_trailing_are_typed() {
+        let bytes = encode(&Frame::Hello {
+            client: "abcdef".into(),
+        });
+        for cut in 0..bytes.len() {
+            let r = decode(&bytes[..cut]);
+            assert!(r.is_err(), "prefix of {cut} bytes decoded to {r:?}");
+        }
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert_eq!(decode(&padded), Err(WireError::Trailing { extra: 1 }));
+    }
+
+    #[test]
+    fn oversized_declared_count_is_refused_before_allocation() {
+        // A Hello whose string claims u32::MAX bytes in a tiny frame.
+        let mut w = Writer::new();
+        w.u16(MAGIC);
+        w.u16(VERSION);
+        w.u8(TAG_HELLO);
+        w.u32(u32::MAX);
+        w.u8(b'x');
+        assert!(matches!(
+            decode(&w.out),
+            Err(WireError::Oversized { .. })
+        ));
+    }
+
+    #[test]
+    fn reason_recursion_is_depth_bounded() {
+        // Hand-build an Events frame with a reject reason nested past
+        // the bound: NoEligibleServer{Some(NoEligibleServer{Some(...)}}.
+        let mut w = Writer::new();
+        w.u16(MAGIC);
+        w.u16(VERSION);
+        w.u8(TAG_EVENTS);
+        w.u32(1);
+        w.u64(1);
+        w.u8(7); // Rejected
+        for _ in 0..40 {
+            w.u8(6); // NoEligibleServer
+            w.u8(1); // Some(..)
+        }
+        w.u8(1); // EmptyBudget terminates the chain
+        w.bool(true);
+        assert_eq!(
+            decode(&w.out),
+            Err(WireError::BadValue {
+                what: "reason-depth",
+                got: MAX_REASON_DEPTH as u64,
+            })
+        );
+    }
+
+    #[test]
+    fn non_utf8_string_is_typed() {
+        let mut w = Writer::new();
+        w.u16(MAGIC);
+        w.u16(VERSION);
+        w.u8(TAG_ERR);
+        w.u32(2);
+        w.u8(0xFF);
+        w.u8(0xFE);
+        assert_eq!(decode(&w.out), Err(WireError::BadString));
+    }
+}

@@ -125,6 +125,12 @@ pub struct ServerStats {
     /// pages reclaimed to admit KV or a different adapter). Like
     /// `preemptions`, a monotone churn signal.
     pub adapter_evictions: usize,
+    /// `Token` events coalesced away by bounded per-request event
+    /// buffers (see `server::api::EventChannel`): each one a consumer
+    /// that fell behind its stream. Token *values* are never lost —
+    /// only event granularity — so this is a consumer-health signal,
+    /// not a correctness one.
+    pub event_overflows: usize,
 }
 
 impl Default for ServerStats {
@@ -141,6 +147,7 @@ impl Default for ServerStats {
             kv_held_pages: 0,
             adapter_held_pages: 0,
             adapter_evictions: 0,
+            event_overflows: 0,
         }
     }
 }

@@ -80,7 +80,7 @@ impl Default for SamplingParams {
 ///     .slo(200.0, 50.0);
 /// let handle = front.submit(req);
 /// ```
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServeRequest {
     /// LoRA adapter id (must be installed/registered on the backend).
     pub adapter: u64,
@@ -359,18 +359,51 @@ impl LifecycleState {
     }
 }
 
+/// Default bound on an [`EventChannel`]'s undelivered-event buffer.
+/// Past it, consecutive `Token` events coalesce (see
+/// [`EventChannel::push`]); the token *values* always survive in the
+/// channel's token log.
+pub const DEFAULT_EVENT_CAP: usize = 1024;
+
 /// The shared per-request channel between a backend and its
 /// [`RequestHandle`]: the backend pushes events, the handle polls them.
 ///
 /// Public so [`ServingFront`] backends outside this module (the
 /// simulator front) can emit events; user code only ever touches
 /// [`RequestHandle`].
-#[derive(Debug, Default)]
+///
+/// The undelivered-event buffer is bounded: a consumer that stops
+/// polling (a stalled remote router, a hung HTTP client) must not grow
+/// it without limit. Past the cap, consecutive `Token` events coalesce
+/// — the newest token overwrites the buffered one and the overflow is
+/// counted — while lifecycle events (and every terminal) always
+/// enqueue, so the exactly-one-terminal contract is never traded for
+/// the bound.
+#[derive(Debug)]
 pub struct EventChannel {
     events: VecDeque<RequestEvent>,
     tokens: Vec<i32>,
     cancel_requested: bool,
     state: Option<LifecycleState>,
+    /// Buffer bound; `Token` events coalesce past it.
+    cap: usize,
+    /// `Token` events coalesced away by the cap (each one a token the
+    /// consumer will not see as its own event, though its value is in
+    /// `tokens`). Surfaced as `ServerStats::event_overflows`.
+    overflows: usize,
+}
+
+impl Default for EventChannel {
+    fn default() -> EventChannel {
+        EventChannel {
+            events: VecDeque::new(),
+            tokens: Vec::new(),
+            cancel_requested: false,
+            state: None,
+            cap: DEFAULT_EVENT_CAP,
+            overflows: 0,
+        }
+    }
 }
 
 impl EventChannel {
@@ -401,7 +434,34 @@ impl EventChannel {
             RequestEvent::Cancelled => self.state = Some(LifecycleState::Cancelled),
             RequestEvent::Rejected(_) => self.state = Some(LifecycleState::Rejected),
         }
-        self.events.push_back(event);
+        // Buffer bound: a plain Token landing on a full buffer whose
+        // newest entry is also a plain Token coalesces into it. Only
+        // this pairing is eligible — FirstToken, placement events, and
+        // terminals always enqueue — so a drained prefix of the stream
+        // never changes shape, only how many interior Token events
+        // represent the (fully preserved) token log.
+        let coalesce = self.events.len() >= self.cap
+            && matches!(event, RequestEvent::Token(_))
+            && matches!(self.events.back(), Some(RequestEvent::Token(_)));
+        if coalesce {
+            if let Some(back) = self.events.back_mut() {
+                *back = event;
+            }
+            self.overflows += 1;
+        } else {
+            self.events.push_back(event);
+        }
+    }
+
+    /// `Token` events coalesced away by the buffer bound so far.
+    pub fn overflows(&self) -> usize {
+        self.overflows
+    }
+
+    /// Override the undelivered-event buffer bound (tests; tiny caps
+    /// make the coalescing path observable).
+    pub fn set_event_cap(&mut self, cap: usize) {
+        self.cap = cap.max(1);
     }
 
     /// Has the client requested cancellation?
@@ -576,7 +636,7 @@ where
 /// state it held, emits nothing for the rebuilt prefix, and resumes
 /// decoding with `tokens[n-1]` as the next input — so the client-visible
 /// stream is bitwise unaffected by the preemption.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ResumeState {
     /// All tokens generated before preemption (never empty: a request
     /// only becomes preemptible after its first token).
@@ -743,6 +803,54 @@ mod tests {
         assert!(Priority::Interactive > Priority::Standard);
         assert!(Priority::Standard > Priority::Batch);
         assert_eq!(Priority::default(), Priority::Standard);
+    }
+
+    #[test]
+    fn event_buffer_cap_coalesces_tokens_but_never_terminals() {
+        let mut c = EventChannel::default();
+        c.set_event_cap(3);
+        c.push(RequestEvent::Admitted);
+        c.push(RequestEvent::FirstToken(0));
+        for t in 1..10 {
+            c.push(RequestEvent::Token(t));
+        }
+        c.push(RequestEvent::Finished(FinishReason::Length));
+        // Token values always survive in the log...
+        assert_eq!(c.tokens(), (0..10).collect::<Vec<i32>>());
+        // ...while interior Token events coalesced: buffer holds
+        // Admitted, FirstToken(0), Token(9) — then the terminal, which
+        // must enqueue past the cap rather than drop.
+        assert_eq!(c.overflows(), 8);
+        let mut drained = Vec::new();
+        while let Some(ev) = c.pop_event() {
+            drained.push(ev);
+        }
+        assert_eq!(
+            drained,
+            vec![
+                RequestEvent::Admitted,
+                RequestEvent::FirstToken(0),
+                RequestEvent::Token(9),
+                RequestEvent::Finished(FinishReason::Length),
+            ]
+        );
+        assert_eq!(c.state(), LifecycleState::Finished);
+    }
+
+    #[test]
+    fn event_buffer_cap_spares_drained_consumers() {
+        // A consumer that keeps up never overflows, whatever the cap.
+        let mut c = EventChannel::default();
+        c.set_event_cap(1);
+        c.push(RequestEvent::Admitted);
+        assert!(c.pop_event().is_some());
+        c.push(RequestEvent::FirstToken(0));
+        assert!(c.pop_event().is_some());
+        for t in 1..5 {
+            c.push(RequestEvent::Token(t));
+            assert!(c.pop_event().is_some());
+        }
+        assert_eq!(c.overflows(), 0);
     }
 
     #[test]

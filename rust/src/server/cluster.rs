@@ -247,6 +247,9 @@ pub struct ClusterFront {
     failovers: usize,
     /// Requests shed by the degradation gate.
     shed: usize,
+    /// Adapters re-installed onto rejoining Probation backends from
+    /// registry placements (the rejoin-*without*-state path).
+    rejoin_reinstalls: usize,
 }
 
 impl ClusterFront {
@@ -275,6 +278,7 @@ impl ClusterFront {
             routed_rank_sum: vec![0; n],
             failovers: 0,
             shed: 0,
+            rejoin_reinstalls: 0,
         }
     }
 
@@ -342,6 +346,12 @@ impl ClusterFront {
     /// Requests shed by the graceful-degradation gate so far.
     pub fn shed_count(&self) -> usize {
         self.shed
+    }
+
+    /// Adapters re-installed onto rejoining backends so far (see
+    /// [`ClusterFront::restore_placements`]).
+    pub fn rejoin_reinstalls(&self) -> usize {
+        self.rejoin_reinstalls
     }
 
     /// Is this backend taking new placements?
@@ -451,19 +461,51 @@ impl ClusterFront {
         self.backends[server].prewarm_adapter(adapter)
     }
 
+    /// Re-install this backend's registry placements that are missing
+    /// from its live adapter set — the readmission gate for a backend
+    /// that rejoined *without* its state (process restart, wiped
+    /// device). A backend whose adapters survived (reconnect-with-state
+    /// — e.g. a `RemoteFront` re-handshaking with a living host)
+    /// reports them in `stats().adapters` and nothing is re-installed.
+    /// Returns true when every placement is resident afterwards.
+    pub fn restore_placements(&mut self, server: usize) -> bool {
+        let resident = self.backends[server].stats().adapters;
+        let mut complete = true;
+        for id in self.registry.ids() {
+            if !self.registry.servers_for(id).contains(&server) || resident.contains(id) {
+                continue;
+            }
+            let Some(meta) = self.registry.get(id) else {
+                continue;
+            };
+            let spec = LoraSpec::standard(id, meta.rank, &meta.base_model);
+            match self.backends[server].install_adapter(&spec) {
+                Ok(()) => self.rejoin_reinstalls += 1,
+                Err(_) => complete = false,
+            }
+        }
+        complete
+    }
+
     /// Record a clean poll: consecutive errors reset; `Suspect` and a
     /// successful `Probation` probe return to `Healthy` (backoff
-    /// reset).
+    /// reset). Probation readmission additionally restores any registry
+    /// placements the rejoining backend lost; until they are all
+    /// resident again the backend stays in Probation (probed — and
+    /// retried — every tick) so routing never sees a placement its
+    /// server cannot serve.
     fn record_poll_ok(&mut self, server: usize) {
         let base = self.retry.backoff_base;
-        let h = &mut self.health[server];
-        h.errors = 0;
-        match h.state {
-            Health::Suspect => h.state = Health::Healthy,
+        self.health[server].errors = 0;
+        match self.health[server].state {
+            Health::Suspect => self.health[server].state = Health::Healthy,
             Health::Probation => {
-                h.state = Health::Healthy;
-                h.backoff = base;
-                h.probe_at = u64::MAX;
+                if self.restore_placements(server) {
+                    let h = &mut self.health[server];
+                    h.state = Health::Healthy;
+                    h.backoff = base;
+                    h.probe_at = u64::MAX;
+                }
             }
             Health::Healthy | Health::Down => {}
         }
@@ -919,7 +961,15 @@ impl ServingFront for ClusterFront {
             agg.kv_held_pages += s.kv_held_pages;
             agg.adapter_held_pages += s.adapter_held_pages;
             agg.adapter_evictions += s.adapter_evictions;
+            agg.event_overflows += s.event_overflows;
         }
+        // The cluster's own client-facing channels are a second place a
+        // stalled consumer can fall behind its stream.
+        agg.event_overflows += self
+            .live
+            .values()
+            .map(|route| route.chan.lock().unwrap().overflows())
+            .sum::<usize>();
         agg
     }
 
@@ -1660,6 +1710,44 @@ mod tests {
         assert!(running.tokens().len() < 30);
         assert!(!cluster.cancel(queued.id()), "dead ids report false");
         assert!(!cluster.cancel(12345));
+    }
+
+    #[test]
+    fn probation_rejoin_reinstalls_lost_placements() {
+        let adapters: Vec<(u64, usize)> = (0..3).map(|id| (id, 16)).collect();
+        let mut cluster = cluster_of(
+            vec![
+                Box::new(sim_backend(64, &adapters)),
+                Box::new(sim_backend(64, &adapters)),
+            ],
+            &adapters,
+        );
+        for &(id, _) in &adapters {
+            cluster.registry.place(id, 0);
+            cluster.registry.place(id, 1);
+        }
+        // Backend 0 "reboots" without its state: wipe its local adapter
+        // set directly, bypassing the registry, exactly as a process
+        // restart would.
+        for &(id, _) in &adapters {
+            cluster.backends[0].uninstall_adapter(id).unwrap();
+        }
+        assert!(!cluster.backends[0].stats().can_serve(1));
+        cluster.health[0].state = Health::Probation;
+        cluster.record_poll_ok(0);
+        assert_eq!(
+            cluster.health_of(0),
+            Health::Healthy,
+            "readmitted only after placements are restored"
+        );
+        assert_eq!(cluster.rejoin_reinstalls(), 3);
+        assert!(cluster.backends[0].stats().can_serve(0));
+        assert!(cluster.backends[0].stats().can_serve(2));
+        // Rejoin *with* state: everything resident, nothing re-installed.
+        cluster.health[1].state = Health::Probation;
+        cluster.record_poll_ok(1);
+        assert_eq!(cluster.health_of(1), Health::Healthy);
+        assert_eq!(cluster.rejoin_reinstalls(), 3);
     }
 
     #[test]

@@ -179,6 +179,10 @@ pub struct InferenceServer {
     deferred_ids: std::collections::HashSet<u64>,
     /// Event channels of live (non-terminal) requests.
     handles: HashMap<u64, Arc<Mutex<EventChannel>>>,
+    /// Event-buffer overflows accumulated from already-retired
+    /// handles, so `stats().event_overflows` stays monotone after
+    /// requests complete.
+    retired_overflows: usize,
     /// Next engine-assigned request id.
     next_id: u64,
     /// Per-request device slot.
@@ -243,6 +247,7 @@ impl InferenceServer {
             loads: AsyncLoader::new(),
             deferred_ids: std::collections::HashSet::new(),
             handles: HashMap::new(),
+            retired_overflows: 0,
             next_id: 0,
             slots: HashMap::new(),
             max_prompt,
@@ -583,6 +588,12 @@ impl InferenceServer {
             kv_held_pages: self.kv.kv_held_pages(),
             adapter_held_pages: self.kv.adapter_held_pages(),
             adapter_evictions: self.metrics.adapter_evictions(),
+            event_overflows: self.retired_overflows
+                + self
+                    .handles
+                    .values()
+                    .map(|c| c.lock().unwrap().overflows())
+                    .sum::<usize>(),
         }
     }
 
@@ -659,6 +670,14 @@ impl InferenceServer {
         }
     }
 
+    /// Drop a terminal request's handle, folding its event-buffer
+    /// overflow count into the server's running total.
+    fn retire_handle(&mut self, id: u64) {
+        if let Some(chan) = self.handles.remove(&id) {
+            self.retired_overflows += chan.lock().unwrap().overflows();
+        }
+    }
+
     /// Remove requests whose handles requested cancellation: queued ones
     /// simply leave the queue; running ones free their KV pages and
     /// device slot. Each gets exactly one terminal `Cancelled` event.
@@ -684,7 +703,7 @@ impl InferenceServer {
             self.metrics.cancelled(id);
             self.deferred_ids.remove(&id);
             Self::emit_to(&self.handles, id, RequestEvent::Cancelled);
-            self.handles.remove(&id);
+            self.retire_handle(id);
         }
         Ok(())
     }
@@ -1307,7 +1326,7 @@ impl InferenceServer {
             FinishReason::Length
         };
         Self::emit_to(&self.handles, r.id, RequestEvent::Finished(reason));
-        self.handles.remove(&r.id);
+        self.retire_handle(r.id);
         Ok(())
     }
 }

@@ -43,7 +43,7 @@ pub mod metrics;
 
 pub use api::{
     FinishReason, LifecycleState, Priority, RejectReason, RequestEvent, RequestHandle,
-    SamplingParams, ServeRequest, ServingFront, SloSpec,
+    ResumeState, SamplingParams, ServeRequest, ServingFront, SloSpec,
 };
 pub use batcher::{Batcher, NextAction};
 pub use cluster::{ClusterFront, Health, RetryPolicy};

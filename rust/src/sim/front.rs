@@ -53,6 +53,9 @@ pub struct SimFront {
     /// Per-request token capacity (mirrors the engine's KV bound
     /// `prompt + output ≤ capacity + 1`); unbounded by default.
     kv_capacity: usize,
+    /// Event-buffer overflows from retired requests (mirrors the
+    /// engine's monotone `event_overflows` accounting).
+    retired_overflows: usize,
 }
 
 impl SimFront {
@@ -66,6 +69,7 @@ impl SimFront {
             live: HashMap::new(),
             max_prompt,
             kv_capacity: usize::MAX,
+            retired_overflows: 0,
         }
     }
 
@@ -137,7 +141,15 @@ impl SimFront {
                 continue; // mid-iteration; retry at the next boundary
             }
             self.emit(id, RequestEvent::Cancelled);
-            self.live.remove(&id);
+            self.retire(id);
+        }
+    }
+
+    /// Drop a terminal request, folding its event-buffer overflow count
+    /// into the front's running total.
+    fn retire(&mut self, id: u64) {
+        if let Some(req) = self.live.remove(&id) {
+            self.retired_overflows += req.channel.lock().unwrap().overflows();
         }
     }
 
@@ -179,7 +191,7 @@ impl SimFront {
                 }
             }
             if stop || budget_done {
-                self.live.remove(&id);
+                self.retire(id);
             }
         }
     }
@@ -306,6 +318,12 @@ impl ServingFront for SimFront {
             tpot_slo: crate::server::api::tightest_tpot_slo(
                 self.live.values().map(|r| &r.slo),
             ),
+            event_overflows: self.retired_overflows
+                + self
+                    .live
+                    .values()
+                    .map(|r| r.channel.lock().unwrap().overflows())
+                    .sum::<usize>(),
             ..Default::default()
         }
     }

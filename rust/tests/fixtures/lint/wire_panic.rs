@@ -1,0 +1,19 @@
+//! Seeded fixture: panicking constructs in what pretends to be the
+//! wire codec's non-test code. Every construct here must fire
+//! `wire-panic-free` when scanned as `remote/wire.rs` — and nothing
+//! anywhere else (the decoder's typed-error contract is scoped to the
+//! codec file, not the whole tree).
+
+pub fn frame_len(bytes: &[u8]) -> usize {
+    let head: [u8; 4] = bytes[..4].try_into().unwrap();
+    u32::from_le_bytes(head) as usize
+}
+
+pub fn tag_of(frame: u8) -> u8 {
+    assert!(frame < 128, "tag overflow");
+    frame
+}
+
+pub fn reserved() -> u8 {
+    unreachable!("decoder state machine escaped");
+}

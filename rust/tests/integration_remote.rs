@@ -1,0 +1,614 @@
+//! The distributed serving tier end to end (PR 9):
+//!
+//! 1. Interleave schedules (`testkit::interleave`) driving the full
+//!    submit/cancel/poll/install/uninstall/prewarm surface through a
+//!    `RemoteFront` over a socketpair — alone and as a `ClusterFront`
+//!    of two remote backends — with the exactly-one-terminal oracle
+//!    from `interleave_lifecycle`.
+//! 2. Two real `caraserve backend` OS processes hosting native engines
+//!    behind a routed `ClusterFront`: token streams must be bitwise
+//!    identical to the in-process composition (`synthetic::run`), both
+//!    on the clean path and through a SIGKILL of one backend mid-run
+//!    followed by a state-less respawn — which must be readmitted only
+//!    after registry-driven re-installation (`restore_placements`).
+
+use std::cell::{Cell, RefCell};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use caraserve::config::GpuSpec;
+use caraserve::ipc::SocketChannel;
+use caraserve::model::{LlamaConfig, LoraSpec};
+use caraserve::perfmodel::{KernelKind, PerfModel};
+use caraserve::remote::client::DEFAULT_IO_TIMEOUT;
+use caraserve::remote::{serve_connection, RemoteFront};
+use caraserve::scheduler::registry::{AdapterMeta, GlobalRegistry};
+use caraserve::scheduler::{policy_by_name, RankAwareConfig};
+use caraserve::server::cluster::synthetic::{self, SyntheticConfig};
+use caraserve::server::{
+    ClusterFront, ColdStartMode, Health, LifecycleState, RequestEvent, RequestHandle,
+    ServeRequest, ServingFront,
+};
+use caraserve::sim::{GpuModel, ServingMode, SimFront, SimInstance};
+use caraserve::testkit::interleave::{always, explore_random, when, ScriptModel, Step};
+use caraserve::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Part 1: lifecycle schedules over a socketpair (same Op machinery as
+// interleave_lifecycle — the remote hop must be invisible to it).
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+enum Op {
+    Submit {
+        adapter: u64,
+        prompt: usize,
+        max_new: usize,
+        stop: Option<i32>,
+    },
+    Cancel(usize),
+    Poll,
+    Install(u64, usize),
+    Uninstall(u64),
+    Prewarm(u64),
+}
+
+fn random_op(rng: &mut Rng) -> Op {
+    match rng.range(0, 10) {
+        0..=3 => Op::Submit {
+            // Ids 4–5 start unregistered → Rejected unless installed
+            // by an earlier Install op in the same schedule.
+            adapter: rng.range(0, 6) as u64,
+            prompt: rng.range(1, 32),
+            max_new: rng.range(1, 8),
+            stop: if rng.chance(0.25) {
+                Some(rng.range(0, 10) as i32)
+            } else {
+                None
+            },
+        },
+        4 => Op::Cancel(rng.range(0, 16)),
+        5 | 6 => Op::Poll,
+        7 => Op::Install(rng.range(0, 6) as u64, *rng.choose(&[8usize, 16, 32, 64])),
+        8 => Op::Uninstall(rng.range(0, 6) as u64),
+        _ => Op::Prewarm(rng.range(0, 6) as u64),
+    }
+}
+
+struct Lifecycle<F: ServingFront> {
+    front: F,
+    handles: Vec<RequestHandle>,
+    steps_done: usize,
+    drained: bool,
+}
+
+/// Apply one op. Management-surface refusals must be the documented
+/// ones — over the wire they arrive wrapped ("remote … failed: remote
+/// backend error: …"), but the original text must survive inside.
+fn apply_op<F: ServingFront>(s: &mut Lifecycle<F>, op: &Op) {
+    s.steps_done += 1;
+    match op {
+        Op::Submit {
+            adapter,
+            prompt,
+            max_new,
+            stop,
+        } => {
+            let mut req =
+                ServeRequest::new(*adapter, vec![1; *prompt]).max_new_tokens(*max_new);
+            if let Some(t) = stop {
+                req = req.stop_token(*t);
+            }
+            let h = s.front.submit(req);
+            s.handles.push(h);
+        }
+        Op::Cancel(i) => {
+            if !s.handles.is_empty() {
+                let id = s.handles[i % s.handles.len()].id();
+                let _ = s.front.cancel(id);
+            }
+        }
+        Op::Poll => {
+            s.front.poll().expect("poll must not fail");
+        }
+        Op::Install(id, rank) => {
+            s.front
+                .install_adapter(&LoraSpec::standard(*id, *rank, "sim"))
+                .expect("install must not fail");
+        }
+        Op::Uninstall(id) => {
+            if let Err(e) = s.front.uninstall_adapter(*id) {
+                let msg = e.to_string();
+                assert!(
+                    msg.contains("busy") || msg.contains("not installed"),
+                    "unexpected uninstall refusal: {msg}"
+                );
+            }
+        }
+        Op::Prewarm(id) => {
+            if let Err(e) = s.front.prewarm_adapter(*id) {
+                let msg = e.to_string();
+                assert!(
+                    msg.contains("not installed"),
+                    "unexpected prewarm refusal: {msg}"
+                );
+            }
+        }
+    }
+}
+
+/// The exactly-one-terminal oracle: every submission ends terminal,
+/// with exactly one terminal event and nothing after it, and the token
+/// stream is consistent with the terminal reason.
+fn lifecycle_oracle<F: ServingFront>(s: &Lifecycle<F>) -> Result<(), String> {
+    if !s.drained {
+        return Err("drainer thread never ran".into());
+    }
+    for h in &s.handles {
+        let state = h.state();
+        if !state.is_terminal() {
+            return Err(format!("request {} ended in {state:?}", h.id()));
+        }
+        let events = h.drain_events();
+        let terminals = events.iter().filter(|e| e.is_terminal()).count();
+        if terminals != 1 {
+            return Err(format!(
+                "request {}: {terminals} terminal events in {events:?}",
+                h.id()
+            ));
+        }
+        let last = events.last().expect("terminal implies ≥ 1 event");
+        if !last.is_terminal() {
+            return Err(format!("request {}: events after terminal", h.id()));
+        }
+        let tokens = h.tokens();
+        match last {
+            RequestEvent::Rejected(_) => {
+                if !tokens.is_empty() || events.len() != 1 {
+                    return Err(format!("request {}: rejected saw activity", h.id()));
+                }
+            }
+            RequestEvent::Finished(_) => {
+                if tokens.is_empty() {
+                    return Err(format!("request {}: finished without tokens", h.id()));
+                }
+            }
+            RequestEvent::Cancelled => {}
+            other => return Err(format!("non-terminal last event {other:?}")),
+        }
+    }
+    Ok(())
+}
+
+fn lifecycle_model<F: ServingFront + 'static>(
+    front: F,
+    ops: Vec<Vec<Op>>,
+) -> ScriptModel<Lifecycle<F>> {
+    let total: usize = ops.iter().map(Vec::len).sum();
+    let mut m = ScriptModel::new(Lifecycle {
+        front,
+        handles: Vec::new(),
+        steps_done: 0,
+        drained: false,
+    });
+    for script in ops {
+        let steps: Vec<Step<Lifecycle<F>>> = script
+            .into_iter()
+            .map(|op| always(move |s: &mut Lifecycle<F>| apply_op(s, &op)))
+            .collect();
+        m = m.thread(steps);
+    }
+    m.thread(vec![when(
+        move |s: &Lifecycle<F>| s.steps_done == total,
+        |s| {
+            s.front.run_until_idle().expect("drain must not fail");
+            s.drained = true;
+        },
+    )])
+    .finally(|s| lifecycle_oracle(s))
+}
+
+fn random_scripts(rng: &mut Rng) -> Vec<Vec<Op>> {
+    (0..3)
+        .map(|_| (0..rng.range(3, 9)).map(|_| random_op(rng)).collect())
+        .collect()
+}
+
+/// One simulator backend served over a socketpair on its own OS
+/// thread; the returned `RemoteFront` is the schedule's front. The
+/// host thread exits when the front drops (recv error → quiesce).
+fn remote_sim_front(rng: &mut Rng, hosts: &RefCell<Vec<JoinHandle<()>>>) -> RemoteFront {
+    let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+    let inst = SimInstance::new(0, model, ServingMode::CaraServe, rng.range(1, 6), 8, 16);
+    let mut front = SimFront::new(inst, 64);
+    for id in 0..4 {
+        front.register_adapter(id, *rng.choose(&[8, 16, 32, 64]));
+    }
+    let (client, mut server) = SocketChannel::pair().expect("socketpair");
+    hosts.borrow_mut().push(std::thread::spawn(move || {
+        let _ = serve_connection(&mut front, &mut server, "sim-host");
+    }));
+    RemoteFront::from_channel(client, "sched-router", DEFAULT_IO_TIMEOUT).expect("handshake")
+}
+
+/// ≥150 seeded random schedules of mixed traffic + management ops
+/// through one `RemoteFront` over a socketpair.
+#[test]
+fn lifecycle_schedules_hold_over_a_remote_socketpair() {
+    let hosts = RefCell::new(Vec::new());
+    let next = Cell::new(0u64);
+    let report = explore_random(
+        || {
+            let seed = 0x9E_0001 + next.get();
+            next.set(next.get() + 1);
+            let mut rng = Rng::new(seed);
+            let front = remote_sim_front(&mut rng, &hosts);
+            lifecycle_model(front, random_scripts(&mut rng))
+        },
+        150,
+        0x9E40_5EED,
+    );
+    assert!(report.ok(), "{report}");
+    assert_eq!(report.schedules, 150);
+    for h in hosts.into_inner() {
+        h.join().expect("host thread");
+    }
+}
+
+/// A routed `ClusterFront` whose two backends are both `RemoteFront`s
+/// over socketpairs — the "unchanged router across processes" claim,
+/// exercised at schedule granularity.
+fn remote_cluster_pair(rng: &mut Rng, hosts: &RefCell<Vec<JoinHandle<()>>>) -> ClusterFront {
+    let rank_of = |id: u64| [8usize, 16, 32, 64][(id % 4) as usize];
+    let mut backends: Vec<Box<dyn ServingFront>> = Vec::new();
+    for s in 0..2usize {
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let inst = SimInstance::new(s, model, ServingMode::CaraServe, 4, 8, 16);
+        let mut f = SimFront::new(inst, 64);
+        for id in 0..4u64 {
+            f.register_adapter(id, rank_of(id));
+        }
+        let (client, mut server) = SocketChannel::pair().expect("socketpair");
+        hosts.borrow_mut().push(std::thread::spawn(move || {
+            let _ = serve_connection(&mut f, &mut server, "sim-host");
+        }));
+        let front = RemoteFront::from_channel(client, &format!("router#{s}"), DEFAULT_IO_TIMEOUT)
+            .expect("handshake");
+        backends.push(Box::new(front));
+    }
+    let registry = Arc::new(GlobalRegistry::new());
+    for id in 0..4u64 {
+        registry.register(AdapterMeta {
+            id,
+            rank: rank_of(id),
+            base_model: "sim".into(),
+            weights_path: String::new(),
+        });
+    }
+    let pre = PerfModel::from_coefficients(KernelKind::Bgmv, 4e-5, 60e-3);
+    let dec = PerfModel::from_coefficients(KernelKind::Bgmv, 1.3e-5, 24.8e-3);
+    let name = *rng.choose(&["rank-aware", "most-idle", "first-fit", "random"]);
+    let policy = policy_by_name(name, pre, dec, RankAwareConfig::default(), 7).unwrap();
+    ClusterFront::new(backends, policy, registry)
+}
+
+/// ≥80 schedules against the cluster-of-remotes pair, with the
+/// registry-placement serveability invariant checked after every step
+/// (each check round-trips Stats frames to both hosts).
+#[test]
+fn lifecycle_schedules_hold_on_a_cluster_of_remote_fronts() {
+    let hosts = RefCell::new(Vec::new());
+    let next = Cell::new(0u64);
+    let report = explore_random(
+        || {
+            let seed = 0x9E_1001 + next.get();
+            next.set(next.get() + 1);
+            let mut rng = Rng::new(seed);
+            let front = remote_cluster_pair(&mut rng, &hosts);
+            lifecycle_model(front, random_scripts(&mut rng)).invariant(|s| {
+                let stats = s.front.per_server_stats();
+                for id in s.front.registry().ids() {
+                    for srv in s.front.registry().servers_for(id) {
+                        if srv >= stats.len() || !stats[srv].can_serve(id) {
+                            return Err(format!(
+                                "adapter {id} placed on server {srv} which cannot serve it"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            })
+        },
+        80,
+        0x9E80_5EED,
+    );
+    assert!(report.ok(), "{report}");
+    assert_eq!(report.schedules, 80);
+    for h in hosts.into_inner() {
+        h.join().expect("host thread");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Part 2: real OS processes — `caraserve backend` children hosting
+// native engines, routed by an in-test `ClusterFront` of `RemoteFront`s.
+// ---------------------------------------------------------------------------
+
+/// The proven bitwise-oracle configuration (integration_failover):
+/// `Cached` admits keep both runs free of wall-clock-dependent load
+/// windows, so streams are deterministic and comparable bit for bit.
+fn base_cfg() -> SyntheticConfig {
+    SyntheticConfig {
+        instances: 2,
+        requests: 24,
+        adapters: 12,
+        seed: 7,
+        threads: 1,
+        cpu_workers: 0,
+        cold_start: ColdStartMode::Cached,
+        kv_pages: 256,
+        polls_per_arrival: 2,
+        skew: 0.0,
+    }
+}
+
+/// Kill-and-reap children and remove their socket files on every exit
+/// path (including assertion panics).
+struct Fleet {
+    children: Vec<Child>,
+    socks: Vec<PathBuf>,
+    dir: PathBuf,
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+        for s in &self.socks {
+            let _ = std::fs::remove_file(s);
+        }
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+fn spawn_backend(sock: &Path, cfg: &SyntheticConfig, adapters: usize, name: &str) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_caraserve"))
+        .arg("backend")
+        .arg("--socket")
+        .arg(sock)
+        .args(["--name", name])
+        .args(["--adapters", &adapters.to_string()])
+        .args(["--mode", "cached"])
+        .args(["--threads", &cfg.threads.to_string()])
+        .args(["--kv-pages", &cfg.kv_pages.to_string()])
+        .stdout(Stdio::null())
+        .spawn()
+        .expect("spawn caraserve backend")
+}
+
+/// Two backend processes on fresh sockets, each pre-installing the
+/// synthetic catalog — the process-boundary twin of `synthetic::build`.
+fn spawn_fleet(tag: &str, cfg: &SyntheticConfig) -> Fleet {
+    let dir = std::env::temp_dir().join(format!("caraserve-remote-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    let socks: Vec<PathBuf> = (0..cfg.instances)
+        .map(|s| dir.join(format!("b{s}.sock")))
+        .collect();
+    let children = socks
+        .iter()
+        .enumerate()
+        .map(|(s, p)| spawn_backend(p, cfg, cfg.adapters, &format!("backend#{s}")))
+        .collect();
+    Fleet {
+        children,
+        socks,
+        dir,
+    }
+}
+
+/// Connect with retries: the child needs time to build its engine and
+/// install the catalog before it binds the socket.
+fn connect_retry(path: &Path, name: &str) -> RemoteFront {
+    let mut last = String::new();
+    for _ in 0..750 {
+        match RemoteFront::connect(path, name) {
+            Ok(front) => return front,
+            Err(e) => last = format!("{e:#}"),
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    panic!("backend at {} never came up: {last}", path.display());
+}
+
+/// Wait for a (re)spawned backend to accept connections; the probe
+/// connection is dropped immediately, which the host treats as a
+/// normal disconnect.
+fn wait_ready(path: &Path) {
+    for _ in 0..750 {
+        if std::os::unix::net::UnixStream::connect(path).is_ok() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    panic!("backend at {} never bound its socket", path.display());
+}
+
+/// The router half: a `ClusterFront` of connected `RemoteFront`s with
+/// the same registry contents `synthetic::build` would install.
+fn remote_cluster(fleet: &Fleet, cfg: &SyntheticConfig) -> ClusterFront {
+    let registry = Arc::new(GlobalRegistry::new());
+    for a in 0..cfg.adapters as u64 {
+        registry.register(AdapterMeta {
+            id: a,
+            rank: synthetic::rank_of(a),
+            base_model: "tiny".into(),
+            weights_path: String::new(),
+        });
+        for s in 0..cfg.instances {
+            registry.place(a, s);
+        }
+    }
+    let backends: Vec<Box<dyn ServingFront>> = fleet
+        .socks
+        .iter()
+        .enumerate()
+        .map(|(s, p)| {
+            Box::new(connect_retry(p, &format!("router#{s}"))) as Box<dyn ServingFront>
+        })
+        .collect();
+    let policy = synthetic::policy("rank-aware", cfg.seed).expect("policy");
+    ClusterFront::new(backends, policy, registry)
+}
+
+/// `synthetic::drive`'s pacing, inlined so the process-backed run
+/// drives the exact same submit/poll sequence as the in-process oracle.
+fn drive_paced(
+    cluster: &mut ClusterFront,
+    reqs: &[ServeRequest],
+    pace: usize,
+    handles: &mut Vec<RequestHandle>,
+) {
+    for req in reqs {
+        handles.push(cluster.submit(req.clone()));
+        for _ in 0..pace {
+            cluster.poll().expect("cluster poll");
+        }
+    }
+}
+
+fn assert_streams_match(handles: &[RequestHandle], oracle: &[Vec<i32>]) {
+    assert_eq!(handles.len(), oracle.len());
+    for (i, h) in handles.iter().enumerate() {
+        assert_eq!(
+            h.state(),
+            LifecycleState::Finished,
+            "request {i} ended {:?} across the process boundary",
+            h.state()
+        );
+        assert_eq!(
+            h.tokens(),
+            oracle[i],
+            "request {i}: stream diverged across the process boundary"
+        );
+    }
+}
+
+/// Acceptance: a `ClusterFront` over two `RemoteFront`s backed by live
+/// native engines in separate OS processes produces token streams
+/// bitwise identical to the in-process composition.
+#[test]
+fn two_process_native_cluster_is_bitwise_identical_to_in_process() {
+    let cfg = base_cfg();
+    let oracle = synthetic::run("rank-aware", &cfg).expect("in-process oracle run");
+    assert_eq!(
+        oracle.rejected, 0,
+        "oracle config must finish everything for a stream-by-stream comparison"
+    );
+
+    let fleet = spawn_fleet("bitwise", &cfg);
+    let mut cluster = remote_cluster(&fleet, &cfg);
+    let mut handles = Vec::with_capacity(cfg.requests);
+    drive_paced(
+        &mut cluster,
+        &synthetic::workload(&cfg),
+        cfg.polls_per_arrival,
+        &mut handles,
+    );
+    cluster.run_until_idle().expect("drain");
+
+    assert_streams_match(&handles, &oracle.streams);
+    assert_eq!(
+        cluster.routed().iter().sum::<usize>(),
+        cfg.requests,
+        "every request must have been routed exactly once"
+    );
+    assert_eq!(cluster.stats().event_overflows, 0);
+}
+
+/// Acceptance: the same comparison through a SIGKILL of backend 0
+/// mid-run. In-flight streams fail over to the survivor and continue
+/// bitwise identically; the respawned process — deliberately started
+/// with an *empty* adapter catalog — is readmitted only after the
+/// router re-installs every registry placement (`restore_placements`),
+/// and then serves post-rejoin traffic.
+#[test]
+fn backend_kill_and_stateless_rejoin_keeps_streams_bitwise_identical() {
+    let cfg = base_cfg();
+    let oracle = synthetic::run("rank-aware", &cfg).expect("in-process oracle run");
+    assert_eq!(oracle.rejected, 0);
+
+    let mut fleet = spawn_fleet("rejoin", &cfg);
+    let mut cluster = remote_cluster(&fleet, &cfg);
+    let reqs = synthetic::workload(&cfg);
+    let (first, rest) = reqs.split_at(cfg.requests / 2);
+    let mut handles = Vec::with_capacity(cfg.requests);
+    drive_paced(&mut cluster, first, cfg.polls_per_arrival, &mut handles);
+    let live_at_kill = handles.iter().filter(|h| !h.is_terminal()).count();
+    assert!(
+        live_at_kill > 0,
+        "pacing left nothing in flight — the kill would exercise no failover"
+    );
+
+    // SIGKILL one backend with streams in flight.
+    fleet.children[0].kill().expect("kill backend 0");
+    fleet.children[0].wait().expect("reap backend 0");
+    // Let the health machine count consecutive errors all the way to
+    // Down *before* the replacement appears: a respawn racing the
+    // Suspect window would be readmitted without the Probation
+    // re-install gate this test is about.
+    for _ in 0..64 {
+        if cluster.health_of(0) == Health::Down {
+            break;
+        }
+        cluster.poll().expect("cluster poll");
+    }
+    assert_eq!(cluster.health_of(0), Health::Down);
+
+    // Respawn on the same socket with NO adapters: rejoin without
+    // state, the case registry-driven re-install exists for.
+    fleet.children[0] = spawn_backend(&fleet.socks[0], &cfg, 0, "backend#0-respawn");
+    wait_ready(&fleet.socks[0]);
+
+    drive_paced(&mut cluster, rest, cfg.polls_per_arrival, &mut handles);
+    cluster.run_until_idle().expect("drain");
+    // Keep ticking until the probation probe reconnects, re-installs,
+    // and readmits the backend (backoff doubles per failed probe, so
+    // give it room).
+    for _ in 0..2048 {
+        if cluster.health_of(0) == Health::Healthy {
+            break;
+        }
+        cluster.poll().expect("cluster poll");
+    }
+    assert_eq!(
+        cluster.health_of(0),
+        Health::Healthy,
+        "rejoined backend was never readmitted"
+    );
+    assert_eq!(
+        cluster.rejoin_reinstalls(),
+        cfg.adapters,
+        "readmission must re-install every registry placement on the stateless rejoiner"
+    );
+
+    assert_streams_match(&handles, &oracle.streams);
+
+    // Post-rejoin traffic must land cleanly on the restored cluster.
+    let extra: Vec<RequestHandle> = (0..4)
+        .map(|a| cluster.submit(ServeRequest::new(a as u64, vec![1, 2, 3]).max_new_tokens(4)))
+        .collect();
+    cluster.run_until_idle().expect("post-rejoin drain");
+    for (i, h) in extra.iter().enumerate() {
+        assert_eq!(
+            h.state(),
+            LifecycleState::Finished,
+            "post-rejoin request {i} ended {:?}",
+            h.state()
+        );
+    }
+}

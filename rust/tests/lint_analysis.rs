@@ -48,6 +48,30 @@ fn seeded_fixtures_fire_their_rule() {
     }
 }
 
+/// The wire codec's panic-free contract (PR 9): panicking constructs
+/// in non-test code fire `wire-panic-free` when the file is the codec
+/// itself, and are left to the other rules everywhere else.
+#[test]
+fn wire_panic_fixture_scoped_to_the_wire_codec() {
+    assert!(RULES.contains(&"wire-panic-free"));
+    let src = fixture("wire_panic.rs");
+    let v = lint_source("remote/wire.rs", &src, &ctx());
+    assert!(
+        v.iter().filter(|v| v.rule == "wire-panic-free").count() >= 3,
+        "expected unwrap/assert/unreachable to fire, got {v:?}"
+    );
+    assert!(
+        v.iter().all(|v| v.rule == "wire-panic-free"),
+        "unexpected extra rules in {v:?}"
+    );
+    // Identical source under any other path is this rule's business
+    // nowhere else — and remote/ is not a hot path, so nothing fires.
+    assert!(lint_source("remote/client.rs", &src, &ctx()).is_empty());
+    // Codec test code may assert freely.
+    let in_test = format!("#[cfg(test)]\nmod tests {{\n{src}}}\n");
+    assert!(lint_source("remote/wire.rs", &in_test, &ctx()).is_empty());
+}
+
 #[test]
 fn clean_fixture_passes_every_rule() {
     let v = lint_source("runtime/clean.rs", &fixture("clean.rs"), &ctx());

@@ -1,0 +1,398 @@
+//! Property tests for the distributed tier's frame codec
+//! (`caraserve::remote::wire`): seeded-random frames of every variant
+//! round-trip bitwise, and no mutilation of the byte stream —
+//! truncation, bit flips, random soup, oversized declared counts,
+//! foreign versions — ever panics the decoder. Failures print the seed
+//! so a counterexample replays deterministically.
+
+use caraserve::model::{LoraSpec, TargetMatrix};
+use caraserve::remote::wire::{decode, encode, Frame, WireError, MAGIC, VERSION};
+use caraserve::scheduler::{AdapterSet, ServerStats};
+use caraserve::server::metrics::ColdStartStats;
+use caraserve::server::{
+    FinishReason, Priority, RejectReason, RequestEvent, ResumeState, ServeRequest,
+};
+use caraserve::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Frame generator
+// ---------------------------------------------------------------------------
+
+fn arb_string(rng: &mut Rng) -> String {
+    let len = rng.range(0, 24);
+    (0..len)
+        .map(|_| {
+            // Mix ASCII with multi-byte code points so string length
+            // (bytes) and char count disagree.
+            if rng.chance(0.2) {
+                'é'
+            } else {
+                (b'a' + rng.range(0, 26) as u8) as char
+            }
+        })
+        .collect()
+}
+
+fn arb_tokens(rng: &mut Rng) -> Vec<i32> {
+    let len = rng.range(0, 12);
+    (0..len).map(|_| rng.next_u64() as i32).collect()
+}
+
+fn arb_reason(rng: &mut Rng, depth: usize) -> RejectReason {
+    // The recursive variant only below the honest-encoder depth.
+    let top = if depth == 0 { 11 } else { 10 };
+    match rng.range(0, top) {
+        0 => RejectReason::PromptBounds {
+            len: rng.range(0, 10_000),
+            max_prompt: rng.range(0, 10_000),
+        },
+        1 => RejectReason::EmptyBudget,
+        2 => RejectReason::KvCapacity {
+            kv_capacity: rng.range(0, 1 << 20),
+        },
+        3 => RejectReason::AdapterNotInstalled {
+            adapter: rng.next_u64(),
+        },
+        4 => RejectReason::AdapterNotRegistered {
+            adapter: rng.next_u64(),
+        },
+        5 => RejectReason::PoolTooSmall {
+            adapter: rng.next_u64(),
+            pool_pages: rng.range(0, 4096),
+        },
+        6 => RejectReason::NoEligibleServer { last: None },
+        7 => RejectReason::PolicyRepick {
+            server: rng.range(0, 64),
+        },
+        8 => RejectReason::Overloaded {
+            healthy: rng.range(0, 64),
+            shed: arb_priority(rng),
+        },
+        9 => RejectReason::BackendFailed {
+            server: rng.range(0, 64),
+        },
+        _ => RejectReason::NoEligibleServer {
+            last: Some(Box::new(arb_reason(rng, depth + 1))),
+        },
+    }
+}
+
+fn arb_priority(rng: &mut Rng) -> Priority {
+    match rng.range(0, 3) {
+        0 => Priority::Batch,
+        1 => Priority::Standard,
+        _ => Priority::Interactive,
+    }
+}
+
+fn arb_event(rng: &mut Rng) -> RequestEvent {
+    match rng.range(0, 8) {
+        0 => RequestEvent::Admitted,
+        1 => RequestEvent::Routed {
+            server: rng.range(0, 64),
+        },
+        2 => RequestEvent::FirstToken(rng.next_u64() as i32),
+        3 => RequestEvent::Token(rng.next_u64() as i32),
+        4 => RequestEvent::Finished(if rng.chance(0.5) {
+            FinishReason::Length
+        } else {
+            FinishReason::Stop
+        }),
+        5 => RequestEvent::Rerouted {
+            from: rng.range(0, 64),
+            to: rng.range(0, 64),
+        },
+        6 => RequestEvent::Cancelled,
+        _ => RequestEvent::Rejected(arb_reason(rng, 0)),
+    }
+}
+
+fn arb_request(rng: &mut Rng) -> ServeRequest {
+    let mut req = ServeRequest::new(rng.next_u64(), arb_tokens(rng))
+        .max_new_tokens(rng.range(0, 64))
+        .priority(arb_priority(rng));
+    for _ in 0..rng.range(0, 3) {
+        req = req.stop_token(rng.next_u64() as i32);
+    }
+    if rng.chance(0.5) {
+        req = req.top_k(rng.range(0, 40), rng.next_u64());
+    }
+    if rng.chance(0.5) {
+        req = req.slo(rng.uniform(1.0, 1000.0), rng.uniform(1.0, 200.0));
+    }
+    if rng.chance(0.3) {
+        req.resume = Some(ResumeState {
+            tokens: arb_tokens(rng),
+        });
+    }
+    req
+}
+
+fn arb_adapter_set(rng: &mut Rng) -> AdapterSet {
+    if rng.chance(0.3) {
+        AdapterSet::Any
+    } else {
+        let n = rng.range(0, 8);
+        AdapterSet::only((0..n).map(|_| rng.below(100)).collect())
+    }
+}
+
+fn arb_usizes(rng: &mut Rng) -> Vec<usize> {
+    let n = rng.range(0, 6);
+    (0..n).map(|_| rng.range(0, 128)).collect()
+}
+
+fn arb_stats(rng: &mut Rng) -> ServerStats {
+    ServerStats {
+        running_ranks: arb_usizes(rng),
+        queued_ranks: arb_usizes(rng),
+        adapters: arb_adapter_set(rng),
+        // usize::MAX is the "unbounded" sentinel both fields document —
+        // keep it in the generated population.
+        max_prompt_tokens: if rng.chance(0.2) {
+            usize::MAX
+        } else {
+            rng.range(0, 1 << 16)
+        },
+        kv_free_tokens: if rng.chance(0.2) {
+            usize::MAX
+        } else {
+            rng.range(0, 1 << 16)
+        },
+        tpot_slo: rng.chance(0.5).then(|| rng.uniform(0.001, 0.5)),
+        preemptions: rng.range(0, 100),
+        pool_pages: rng.range(0, 4096),
+        kv_held_pages: rng.range(0, 4096),
+        adapter_held_pages: rng.range(0, 4096),
+        adapter_evictions: rng.range(0, 100),
+        event_overflows: rng.range(0, 100),
+    }
+}
+
+fn arb_spec(rng: &mut Rng) -> LoraSpec {
+    let mut spec = LoraSpec::standard(
+        rng.next_u64(),
+        [8, 16, 32, 64][rng.range(0, 4)],
+        &arb_string(rng),
+    );
+    if rng.chance(0.3) {
+        spec.targets = vec![TargetMatrix::Q, TargetMatrix::K, TargetMatrix::V, TargetMatrix::O];
+    }
+    spec
+}
+
+/// One random frame, uniform over all 21 variants.
+fn arb_frame(rng: &mut Rng) -> Frame {
+    match rng.range(0, 21) {
+        0 => Frame::Hello {
+            client: arb_string(rng),
+        },
+        1 => Frame::Submit {
+            client_id: rng.next_u64(),
+            req: arb_request(rng),
+        },
+        2 => Frame::Poll,
+        3 => Frame::Cancel {
+            client_id: rng.next_u64(),
+        },
+        4 => Frame::Stats,
+        5 => Frame::Install {
+            spec: arb_spec(rng),
+        },
+        6 => Frame::Uninstall {
+            adapter: rng.next_u64(),
+        },
+        7 => Frame::Prewarm {
+            adapter: rng.next_u64(),
+        },
+        8 => Frame::ColdStart,
+        9 => Frame::Heartbeat {
+            nonce: rng.next_u64(),
+        },
+        10 => Frame::Shutdown,
+        11 => Frame::Welcome {
+            version: VERSION,
+            server: arb_string(rng),
+            resident: arb_adapter_set(rng),
+        },
+        12 => Frame::Submitted {
+            client_id: rng.next_u64(),
+            backend_id: rng.next_u64(),
+            events: (0..rng.range(0, 4)).map(|_| arb_event(rng)).collect(),
+        },
+        13 => Frame::Events {
+            events: (0..rng.range(0, 6))
+                .map(|_| (rng.next_u64(), arb_event(rng)))
+                .collect(),
+            progressed: rng.chance(0.5),
+        },
+        14 => Frame::CancelResult {
+            live: rng.chance(0.5),
+        },
+        15 => Frame::StatsReply {
+            stats: arb_stats(rng),
+        },
+        16 => Frame::PrewarmResult {
+            warmed: rng.chance(0.5),
+        },
+        17 => Frame::ColdStartReply {
+            stats: rng.chance(0.5).then(|| ColdStartStats {
+                cold_admits: rng.range(0, 100),
+                warm_admits: rng.range(0, 100),
+                cpu_assisted: rng.range(0, 100),
+                handoffs: rng.range(0, 100),
+                deferred_collisions: rng.range(0, 100),
+                assist_decode_s: rng.uniform(0.0, 10.0),
+            }),
+        },
+        18 => Frame::HeartbeatAck {
+            nonce: rng.next_u64(),
+        },
+        19 => Frame::OkReply,
+        _ => Frame::ErrReply {
+            message: arb_string(rng),
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn random_frames_roundtrip_bitwise() {
+    let mut rng = Rng::new(0xCA5E);
+    for case in 0..2000 {
+        let frame = arb_frame(&mut rng);
+        let bytes = encode(&frame);
+        let back = decode(&bytes);
+        assert_eq!(
+            back,
+            Ok(frame),
+            "case {case}: decode(encode(f)) != f through {} bytes",
+            bytes.len()
+        );
+    }
+}
+
+/// Every strict prefix of a valid frame is a typed error — the decoder
+/// validates lengths before trusting them, so truncation can never
+/// panic (or, worse, succeed).
+#[test]
+fn every_truncation_is_a_typed_error() {
+    let mut rng = Rng::new(7);
+    for _ in 0..300 {
+        let bytes = encode(&arb_frame(&mut rng));
+        for cut in 0..bytes.len() {
+            let r = decode(&bytes[..cut]);
+            assert!(
+                r.is_err(),
+                "prefix {cut}/{} decoded to {r:?}",
+                bytes.len()
+            );
+        }
+    }
+}
+
+/// Single-byte corruption of a valid frame either still decodes (the
+/// byte was slack a different value also encodes to) or fails typed —
+/// it never panics. This is the fuzz pass the panic-free lint rule is
+/// the static twin of.
+#[test]
+fn single_byte_corruption_never_panics() {
+    let mut rng = Rng::new(99);
+    for _ in 0..400 {
+        let bytes = encode(&arb_frame(&mut rng));
+        if bytes.is_empty() {
+            continue;
+        }
+        let mut mutated = bytes.clone();
+        let at = rng.range(0, mutated.len());
+        mutated[at] ^= (1 + rng.below(255)) as u8;
+        let _ = decode(&mutated); // Ok or Err — both fine; no panic.
+    }
+}
+
+/// Pure random byte soup never panics the decoder.
+#[test]
+fn random_soup_never_panics() {
+    let mut rng = Rng::new(3);
+    for _ in 0..2000 {
+        let len = rng.range(0, 64);
+        let soup: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let _ = decode(&soup);
+    }
+    // Worst case: a valid header welded onto random payload bytes.
+    for _ in 0..2000 {
+        let mut bytes = vec![
+            (MAGIC & 0xFF) as u8,
+            (MAGIC >> 8) as u8,
+            (VERSION & 0xFF) as u8,
+            (VERSION >> 8) as u8,
+            rng.below(80) as u8,
+        ];
+        bytes.extend((0..rng.range(0, 48)).map(|_| rng.next_u64() as u8));
+        let _ = decode(&bytes);
+    }
+}
+
+/// A declared element count far beyond the frame's actual bytes is
+/// refused as `Oversized` before any allocation happens.
+#[test]
+fn oversized_declared_counts_are_refused() {
+    // Events frame claiming u32::MAX entries in a 4-byte payload.
+    let mut bytes = vec![
+        (MAGIC & 0xFF) as u8,
+        (MAGIC >> 8) as u8,
+        (VERSION & 0xFF) as u8,
+        (VERSION >> 8) as u8,
+        66, // TAG_EVENTS
+    ];
+    bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert!(matches!(decode(&bytes), Err(WireError::Oversized { .. })));
+
+    // Same for a string field (ErrReply message).
+    let mut bytes = vec![
+        (MAGIC & 0xFF) as u8,
+        (MAGIC >> 8) as u8,
+        (VERSION & 0xFF) as u8,
+        (VERSION >> 8) as u8,
+        73, // TAG_ERR
+    ];
+    bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+    bytes.push(b'x');
+    assert!(matches!(decode(&bytes), Err(WireError::Oversized { .. })));
+}
+
+/// Every version word other than [`VERSION`] is refused typed, and
+/// every tag outside the defined ranges is `UnknownTag` — across the
+/// whole u8 space, not just a sampled corner.
+#[test]
+fn foreign_versions_and_tags_are_typed() {
+    let mut rng = Rng::new(11);
+    for _ in 0..200 {
+        let mut bytes = encode(&arb_frame(&mut rng));
+        let v = (1 + rng.below(u16::MAX as u64 - 1)) as u16;
+        let got = VERSION.wrapping_add(v);
+        bytes[2] = (got & 0xFF) as u8;
+        bytes[3] = (got >> 8) as u8;
+        assert_eq!(decode(&bytes), Err(WireError::UnknownVersion { got }));
+    }
+    let valid = |t: u8| (1..=11).contains(&t) || (64..=73).contains(&t);
+    for tag in 0..=u8::MAX {
+        if valid(tag) {
+            continue;
+        }
+        let bytes = vec![
+            (MAGIC & 0xFF) as u8,
+            (MAGIC >> 8) as u8,
+            (VERSION & 0xFF) as u8,
+            (VERSION >> 8) as u8,
+            tag,
+        ];
+        assert!(
+            matches!(decode(&bytes), Err(WireError::UnknownTag { tag: t, .. }) if t == tag),
+            "tag {tag} not refused as UnknownTag"
+        );
+    }
+}
