@@ -1,0 +1,976 @@
+//! Content-addressed adapter artifact store (the deployment pipeline).
+//!
+//! Before this subsystem, every cross-server install re-seeded
+//! *synthetic* weights on the target — the cluster had no way to move
+//! actual adapter bytes between processes. The store models the OCI
+//! artifact shape: an adapter is a hand-rolled-JSON **manifest**
+//! ([`Manifest`]: adapter id, rank, base model, per-tensor blob digests
+//! + sizes) pointing at **digest-addressed blobs** (raw little-endian
+//! f32 runs of each target's `(A, B)` pair, addressed by their
+//! [`sha256`] hex digest). Two adapters sharing a tensor share the blob
+//! file — dedup falls out of content addressing; integrity falls out of
+//! re-hashing on every read.
+//!
+//! On disk a store is a directory:
+//!
+//! ```text
+//! <root>/index.json        adapter id → manifest digest (byte-stable
+//!                          re-saves, like GlobalRegistry::save)
+//! <root>/blobs/<digest>    tensor blobs AND manifest documents, both
+//!                          addressed by content
+//! ```
+//!
+//! Refcounted GC: a blob is *live* while any indexed manifest references
+//! it (manifest documents are live while the index references them).
+//! [`ArtifactStore::gc`] deletes only dead blob files, so a placed
+//! adapter can never lose its weights to collection.
+//!
+//! The wire layer ([`crate::remote::wire`]) streams blobs between
+//! processes in digest-verified chunks; [`ArtifactStore::ingest_chunk`]
+//! is the receiving half (strictly sequential offsets, whole-blob digest
+//! check before the file is committed). [`crate::server::InferenceServer`]
+//! sources install weights from an attached store (counted by
+//! [`ArtifactStore::store_hits`]) and only falls back to synthetic
+//! seeding when the store has no manifest for the adapter — which is how
+//! the acceptance assertion "zero synthetic re-seeding on a migration
+//! target" is made checkable over the wire.
+
+pub mod sha256;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::kernels::bgmv::AdapterWeights;
+use crate::util::json::{self, Json};
+
+pub use sha256::{hex_digest, Sha256};
+
+/// Canonical per-target blob order in every manifest: Q, K, V, O.
+pub const TARGET_NAMES: [&str; 4] = ["q", "k", "v", "o"];
+
+/// Typed store failure. Every variant is an outcome the caller can
+/// branch on — corrupt data is a *rejection*, never a panic.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StoreError {
+    /// Filesystem error, with the operation that hit it.
+    Io { op: &'static str, detail: String },
+    /// A blob's bytes no longer hash to its address.
+    Corrupt { digest: String, got: String },
+    /// A referenced blob is not in the store.
+    MissingBlob { digest: String },
+    /// No manifest for this adapter in the index.
+    NotFound { adapter: u64 },
+    /// A manifest or index document failed to parse or validate.
+    BadManifest { detail: String },
+    /// A blob's size disagrees with its manifest entry (or a chunked
+    /// transfer overran its declared total).
+    SizeMismatch {
+        digest: String,
+        expected: u64,
+        got: u64,
+    },
+    /// A streamed chunk arrived at the wrong offset.
+    ChunkOutOfOrder {
+        digest: String,
+        expected: u64,
+        got: u64,
+    },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io { op, detail } => write!(f, "artifact store {op}: {detail}"),
+            StoreError::Corrupt { digest, got } => {
+                write!(f, "blob {digest} is corrupt (content hashes to {got})")
+            }
+            StoreError::MissingBlob { digest } => write!(f, "blob {digest} not in store"),
+            StoreError::NotFound { adapter } => {
+                write!(f, "adapter {adapter} not in artifact store")
+            }
+            StoreError::BadManifest { detail } => write!(f, "bad manifest: {detail}"),
+            StoreError::SizeMismatch {
+                digest,
+                expected,
+                got,
+            } => write!(f, "blob {digest} size {got} != declared {expected}"),
+            StoreError::ChunkOutOfOrder {
+                digest,
+                expected,
+                got,
+            } => write!(f, "chunk for {digest} at offset {got}, expected {expected}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+fn io_err(op: &'static str, e: std::io::Error) -> StoreError {
+    StoreError::Io {
+        op,
+        detail: e.to_string(),
+    }
+}
+
+/// One tensor blob a manifest references.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlobDesc {
+    /// Which target matrix pair this blob holds (`"q" | "k" | "v" | "o"`).
+    pub target: String,
+    /// SHA-256 hex of the blob bytes — its address under `blobs/`.
+    pub digest: String,
+    /// Blob size in bytes (`8 · hidden · rank`: the `(A, B)` f32 pair).
+    pub size: u64,
+}
+
+/// A content-addressed adapter description: what [`ArtifactStore`]
+/// indexes and what [`crate::remote::wire`] ships as JSON text (the
+/// text's digest is the manifest's identity, so receivers re-verify it
+/// byte-for-byte).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub adapter: u64,
+    pub rank: usize,
+    pub base_model: String,
+    /// Per-target blobs, always in [`TARGET_NAMES`] order.
+    pub blobs: Vec<BlobDesc>,
+}
+
+impl Manifest {
+    /// Canonical JSON document. Field order is fixed and the printer is
+    /// deterministic, so equal manifests serialize to equal bytes —
+    /// the digest is stable across processes and re-saves.
+    pub fn to_json(&self) -> Json {
+        let blobs: Vec<Json> = self
+            .blobs
+            .iter()
+            .map(|b| {
+                json::obj(vec![
+                    ("target", json::s(&b.target)),
+                    ("digest", json::s(&b.digest)),
+                    ("size", json::num(b.size as f64)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("adapter", json::num(self.adapter as f64)),
+            ("rank", json::num(self.rank as f64)),
+            ("base_model", json::s(&self.base_model)),
+            ("blobs", Json::Arr(blobs)),
+        ])
+    }
+
+    /// The canonical serialized form whose hash addresses this manifest.
+    pub fn canonical(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    /// The manifest's content address.
+    pub fn digest(&self) -> String {
+        hex_digest(self.canonical().as_bytes())
+    }
+
+    /// Parse a manifest document and validate its shape: four blobs in
+    /// [`TARGET_NAMES`] order, 64-char hex digests, sizes consistent
+    /// with one `(A, B)` f32 pair of the declared rank.
+    pub fn parse(text: &str) -> Result<Manifest, StoreError> {
+        let bad = |detail: String| StoreError::BadManifest { detail };
+        let j = Json::parse(text).map_err(|e| bad(e.to_string()))?;
+        let adapter = j
+            .get("adapter")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| bad("missing adapter id".into()))? as u64;
+        let rank = j
+            .get("rank")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| bad("missing rank".into()))?;
+        if rank == 0 {
+            return Err(bad("rank 0".into()));
+        }
+        let base_model = j
+            .get("base_model")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("missing base_model".into()))?
+            .to_string();
+        let raw = j
+            .get("blobs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("missing blobs".into()))?;
+        if raw.len() != TARGET_NAMES.len() {
+            return Err(bad(format!("{} blobs, expected 4", raw.len())));
+        }
+        let mut blobs = Vec::with_capacity(4);
+        for (i, item) in raw.iter().enumerate() {
+            let target = item
+                .get("target")
+                .and_then(Json::as_str)
+                .ok_or_else(|| bad("blob missing target".into()))?
+                .to_string();
+            if target != TARGET_NAMES[i] {
+                return Err(bad(format!(
+                    "blob {i} targets {target:?}, expected {:?}",
+                    TARGET_NAMES[i]
+                )));
+            }
+            let digest = item
+                .get("digest")
+                .and_then(Json::as_str)
+                .ok_or_else(|| bad("blob missing digest".into()))?
+                .to_string();
+            if !is_hex_digest(&digest) {
+                return Err(bad(format!("blob digest {digest:?} is not 64-char hex")));
+            }
+            let size = item
+                .get("size")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| bad("blob missing size".into()))? as u64;
+            // One (A, B) pair: 2 · hidden · rank f32s = 8 · hidden · rank
+            // bytes, so the size must be a positive multiple of 8 · rank.
+            if size == 0 || size % (8 * rank as u64) != 0 {
+                return Err(bad(format!(
+                    "blob size {size} not a positive multiple of 8·rank ({rank})"
+                )));
+            }
+            blobs.push(BlobDesc {
+                target,
+                digest,
+                size,
+            });
+        }
+        Ok(Manifest {
+            adapter,
+            rank,
+            base_model,
+            blobs,
+        })
+    }
+
+    /// The hidden dimension the blob sizes imply (all four targets must
+    /// agree — [`Manifest::parse`] guarantees divisibility, this checks
+    /// agreement).
+    pub fn hidden(&self) -> Result<usize, StoreError> {
+        let h0 = (self.blobs[0].size / (8 * self.rank as u64)) as usize;
+        for b in &self.blobs {
+            if b.size != 8 * self.rank as u64 * h0 as u64 {
+                return Err(StoreError::BadManifest {
+                    detail: format!("blob sizes disagree on hidden dim (target {})", b.target),
+                });
+            }
+        }
+        Ok(h0)
+    }
+}
+
+fn is_hex_digest(s: &str) -> bool {
+    s.len() == 64 && s.bytes().all(|b| matches!(b, b'0'..=b'9' | b'a'..=b'f'))
+}
+
+/// Serialize one target's `(A, B)` pair as the raw little-endian f32
+/// run its blob holds. Inverse of [`weights_from_blob`]; both are
+/// bitwise-lossless, which is what keeps token streams computed from
+/// transferred weights identical to the publisher's.
+pub fn blob_bytes(w: &AdapterWeights) -> Vec<u8> {
+    let mut out = Vec::with_capacity((w.a.len() + w.b.len()) * 4);
+    for x in w.a.iter().chain(w.b.iter()) {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Rebuild one target's weights from its blob bytes.
+pub fn weights_from_blob(
+    bytes: &[u8],
+    hidden: usize,
+    rank: usize,
+) -> Result<AdapterWeights, StoreError> {
+    let a_len = hidden * rank;
+    if bytes.len() != 8 * a_len {
+        return Err(StoreError::SizeMismatch {
+            digest: String::new(),
+            expected: 8 * a_len as u64,
+            got: bytes.len() as u64,
+        });
+    }
+    let floats: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(AdapterWeights {
+        rank,
+        a: floats[..a_len].to_vec(),
+        b: floats[a_len..].to_vec(),
+        h1: hidden,
+        h2: hidden,
+    })
+}
+
+/// A blob mid-stream: chunks accepted so far plus the declared total.
+struct Staged {
+    total: u64,
+    buf: Vec<u8>,
+}
+
+/// The filesystem-backed content-addressed store. Not internally
+/// synchronized — share it as `Arc<Mutex<ArtifactStore>>` (the engine
+/// and the wire dispatch do).
+pub struct ArtifactStore {
+    root: PathBuf,
+    /// adapter id → manifest digest (what `index.json` persists).
+    index: BTreeMap<u64, String>,
+    /// manifest digest → parsed manifest, for every indexed adapter.
+    manifests: BTreeMap<String, Manifest>,
+    /// Blobs mid-transfer (nothing on disk until complete + verified).
+    staging: BTreeMap<String, Staged>,
+    /// Successful weight loads served from this store (the acceptance
+    /// counter: a migration target with `store_hits > 0` and zero
+    /// synthetic seeds installed real transferred weights).
+    hits: AtomicU64,
+}
+
+impl ArtifactStore {
+    /// Open (or create) a store rooted at `root`.
+    pub fn open(root: &Path) -> Result<ArtifactStore, StoreError> {
+        std::fs::create_dir_all(root.join("blobs")).map_err(|e| io_err("create", e))?;
+        let mut store = ArtifactStore {
+            root: root.to_path_buf(),
+            index: BTreeMap::new(),
+            manifests: BTreeMap::new(),
+            staging: BTreeMap::new(),
+            hits: AtomicU64::new(0),
+        };
+        let index_path = store.index_path();
+        if index_path.exists() {
+            let text =
+                std::fs::read_to_string(&index_path).map_err(|e| io_err("read index", e))?;
+            let j = Json::parse(&text).map_err(|e| StoreError::BadManifest {
+                detail: format!("index.json: {e}"),
+            })?;
+            let entries = j
+                .get("adapters")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| StoreError::BadManifest {
+                    detail: "index.json missing adapters".into(),
+                })?;
+            for item in entries {
+                let id = item
+                    .get("id")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| StoreError::BadManifest {
+                        detail: "index entry missing id".into(),
+                    })? as u64;
+                let digest = item
+                    .get("manifest")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| StoreError::BadManifest {
+                        detail: "index entry missing manifest digest".into(),
+                    })?
+                    .to_string();
+                // Loading re-verifies the manifest document against its
+                // address — a tampered index or manifest is a typed
+                // rejection at open, not a later surprise.
+                let manifest = store.read_manifest(&digest)?;
+                store.index.insert(id, digest.clone());
+                store.manifests.insert(digest, manifest);
+            }
+        }
+        Ok(store)
+    }
+
+    fn index_path(&self) -> PathBuf {
+        self.root.join("index.json")
+    }
+
+    /// The file a digest addresses.
+    pub fn blob_path(&self, digest: &str) -> PathBuf {
+        self.root.join("blobs").join(digest)
+    }
+
+    /// Is a blob present (committed, not merely staged)?
+    pub fn has_blob(&self, digest: &str) -> bool {
+        is_hex_digest(digest) && self.blob_path(digest).exists()
+    }
+
+    /// Read a blob and verify it still hashes to its address.
+    pub fn read_blob(&self, digest: &str) -> Result<Vec<u8>, StoreError> {
+        if !self.has_blob(digest) {
+            return Err(StoreError::MissingBlob {
+                digest: digest.to_string(),
+            });
+        }
+        let bytes = std::fs::read(self.blob_path(digest)).map_err(|e| io_err("read blob", e))?;
+        let got = hex_digest(&bytes);
+        if got != digest {
+            return Err(StoreError::Corrupt {
+                digest: digest.to_string(),
+                got,
+            });
+        }
+        Ok(bytes)
+    }
+
+    /// Store bytes under their content address. Writing an already-
+    /// present blob is a no-op — the dedup path: the second adapter
+    /// referencing a shared tensor stores nothing.
+    pub fn put_blob(&mut self, bytes: &[u8]) -> Result<String, StoreError> {
+        let digest = hex_digest(bytes);
+        let path = self.blob_path(&digest);
+        if !path.exists() {
+            std::fs::write(&path, bytes).map_err(|e| io_err("write blob", e))?;
+        }
+        Ok(digest)
+    }
+
+    /// One chunk of a blob, plus the blob's total size — the serving
+    /// half of the wire transfer. The whole blob is re-verified on every
+    /// call (blobs are small; integrity beats cleverness here).
+    pub fn chunk_of(
+        &self,
+        digest: &str,
+        offset: u64,
+        len: usize,
+    ) -> Result<(Vec<u8>, u64), StoreError> {
+        let bytes = self.read_blob(digest)?;
+        let total = bytes.len() as u64;
+        if offset > total {
+            return Err(StoreError::ChunkOutOfOrder {
+                digest: digest.to_string(),
+                expected: total,
+                got: offset,
+            });
+        }
+        let start = offset as usize;
+        let end = (start + len).min(bytes.len());
+        Ok((bytes[start..end].to_vec(), total))
+    }
+
+    /// Accept one streamed chunk (strictly sequential offsets). On the
+    /// final chunk the assembled bytes are verified against `digest`
+    /// and committed to disk; `Ok(true)` means the blob is now stored.
+    /// Any error drops the staging buffer — a corrupt stream can be
+    /// retried from offset 0.
+    pub fn ingest_chunk(
+        &mut self,
+        digest: &str,
+        offset: u64,
+        total: u64,
+        bytes: &[u8],
+    ) -> Result<bool, StoreError> {
+        if !is_hex_digest(digest) {
+            return Err(StoreError::BadManifest {
+                detail: format!("chunk digest {digest:?} is not 64-char hex"),
+            });
+        }
+        if self.has_blob(digest) {
+            // Already committed (dedup): accept and ignore the bytes.
+            return Ok(true);
+        }
+        let (have, declared) = match self.staging.get(digest) {
+            Some(s) => (s.buf.len() as u64, s.total),
+            None => {
+                self.staging.insert(
+                    digest.to_string(),
+                    Staged {
+                        total,
+                        buf: Vec::new(),
+                    },
+                );
+                (0, total)
+            }
+        };
+        // Any protocol violation drops the staging buffer so the sender
+        // can retry from offset 0.
+        if declared != total {
+            self.staging.remove(digest);
+            return Err(StoreError::SizeMismatch {
+                digest: digest.to_string(),
+                expected: declared,
+                got: total,
+            });
+        }
+        if have != offset {
+            self.staging.remove(digest);
+            return Err(StoreError::ChunkOutOfOrder {
+                digest: digest.to_string(),
+                expected: have,
+                got: offset,
+            });
+        }
+        if have + bytes.len() as u64 > total {
+            self.staging.remove(digest);
+            return Err(StoreError::SizeMismatch {
+                digest: digest.to_string(),
+                expected: total,
+                got: have + bytes.len() as u64,
+            });
+        }
+        let done = {
+            let staged = match self.staging.get_mut(digest) {
+                Some(s) => s,
+                None => {
+                    // Unreachable: the entry was ensured above.
+                    return Err(StoreError::MissingBlob {
+                        digest: digest.to_string(),
+                    });
+                }
+            };
+            staged.buf.extend_from_slice(bytes);
+            staged.buf.len() as u64 == total
+        };
+        if done {
+            let buf = self.staging.remove(digest).map(|s| s.buf).unwrap_or_default();
+            let got = hex_digest(&buf);
+            if got != digest {
+                return Err(StoreError::Corrupt {
+                    digest: digest.to_string(),
+                    got,
+                });
+            }
+            self.put_blob(&buf)?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Bytes staged so far for an in-flight blob (the push protocol's
+    /// progress echo).
+    pub fn staged_len(&self, digest: &str) -> u64 {
+        self.staging.get(digest).map(|s| s.buf.len() as u64).unwrap_or(0)
+    }
+
+    fn read_manifest(&self, digest: &str) -> Result<Manifest, StoreError> {
+        let bytes = self.read_blob(digest)?;
+        let text = String::from_utf8(bytes).map_err(|_| StoreError::BadManifest {
+            detail: format!("manifest {digest} is not UTF-8"),
+        })?;
+        Manifest::parse(&text)
+    }
+
+    /// Publish an adapter's full Q/K/V/O stack: write its tensor blobs
+    /// (dedup against existing ones), write the manifest document, index
+    /// it, and persist the index. Returns the manifest digest.
+    pub fn publish(
+        &mut self,
+        adapter: u64,
+        rank: usize,
+        base_model: &str,
+        stack: &[AdapterWeights; 4],
+    ) -> Result<String, StoreError> {
+        let mut blobs = Vec::with_capacity(4);
+        for (name, w) in TARGET_NAMES.iter().zip(stack.iter()) {
+            let bytes = blob_bytes(w);
+            let size = bytes.len() as u64;
+            let digest = self.put_blob(&bytes)?;
+            blobs.push(BlobDesc {
+                target: (*name).to_string(),
+                digest,
+                size,
+            });
+        }
+        let manifest = Manifest {
+            adapter,
+            rank,
+            base_model: base_model.to_string(),
+            blobs,
+        };
+        let text = manifest.canonical();
+        let digest = self.put_blob(text.as_bytes())?;
+        self.index.insert(adapter, digest.clone());
+        self.manifests.insert(digest.clone(), manifest);
+        self.save_index()?;
+        Ok(digest)
+    }
+
+    /// Install a manifest document received over the wire: verify the
+    /// text against its claimed digest, parse + validate it, require
+    /// every referenced blob to be present and intact, then index it.
+    /// Returns the adapter id it describes.
+    pub fn publish_manifest(&mut self, text: &str, digest: &str) -> Result<u64, StoreError> {
+        let got = hex_digest(text.as_bytes());
+        if got != digest {
+            return Err(StoreError::Corrupt {
+                digest: digest.to_string(),
+                got,
+            });
+        }
+        let manifest = Manifest::parse(text)?;
+        for b in &manifest.blobs {
+            let bytes = self.read_blob(&b.digest)?;
+            if bytes.len() as u64 != b.size {
+                return Err(StoreError::SizeMismatch {
+                    digest: b.digest.clone(),
+                    expected: b.size,
+                    got: bytes.len() as u64,
+                });
+            }
+        }
+        let adapter = manifest.adapter;
+        self.put_blob(text.as_bytes())?;
+        self.index.insert(adapter, digest.to_string());
+        self.manifests.insert(digest.to_string(), manifest);
+        self.save_index()?;
+        Ok(adapter)
+    }
+
+    /// The indexed manifest (and its digest) for an adapter.
+    pub fn manifest_of(&self, adapter: u64) -> Option<(&str, &Manifest)> {
+        let digest = self.index.get(&adapter)?;
+        let m = self.manifests.get(digest)?;
+        Some((digest.as_str(), m))
+    }
+
+    /// The canonical manifest text for an adapter (what the wire ships).
+    pub fn manifest_text(&self, adapter: u64) -> Result<(String, String), StoreError> {
+        let (digest, m) = self
+            .manifest_of(adapter)
+            .ok_or(StoreError::NotFound { adapter })?;
+        Ok((m.canonical(), digest.to_string()))
+    }
+
+    /// Load an adapter's Q/K/V/O stack, verifying every blob against its
+    /// digest and the manifest's declared sizes. `hidden` must match the
+    /// dimension the blob sizes imply (the consumer's model width).
+    /// Success bumps [`Self::store_hits`].
+    pub fn load_stack(
+        &self,
+        adapter: u64,
+        hidden: usize,
+    ) -> Result<(usize, [AdapterWeights; 4]), StoreError> {
+        let (_, manifest) = self
+            .manifest_of(adapter)
+            .ok_or(StoreError::NotFound { adapter })?;
+        let rank = manifest.rank;
+        let implied = manifest.hidden()?;
+        if implied != hidden {
+            return Err(StoreError::BadManifest {
+                detail: format!("manifest hidden {implied} != model hidden {hidden}"),
+            });
+        }
+        let mut out: Vec<AdapterWeights> = Vec::with_capacity(4);
+        for b in &manifest.blobs {
+            let bytes = self.read_blob(&b.digest)?;
+            if bytes.len() as u64 != b.size {
+                return Err(StoreError::SizeMismatch {
+                    digest: b.digest.clone(),
+                    expected: b.size,
+                    got: bytes.len() as u64,
+                });
+            }
+            out.push(weights_from_blob(&bytes, hidden, rank)?);
+        }
+        let stack: [AdapterWeights; 4] = match out.try_into() {
+            Ok(s) => s,
+            Err(_) => {
+                // Unreachable: parse() pins exactly 4 blobs.
+                return Err(StoreError::BadManifest {
+                    detail: "manifest does not hold 4 blobs".into(),
+                });
+            }
+        };
+        self.hits.fetch_add(1, Ordering::Relaxed); // ORDERING: independent counter, no ordering with other memory
+        Ok((rank, stack))
+    }
+
+    /// Successful [`Self::load_stack`] calls — the store-hit counter the
+    /// migration acceptance test reads over the wire.
+    pub fn store_hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed) // ORDERING: independent counter, no ordering with other memory
+    }
+
+    /// Drop an adapter from the index (its blobs stay until [`Self::gc`]).
+    pub fn remove(&mut self, adapter: u64) -> Result<bool, StoreError> {
+        let Some(digest) = self.index.remove(&adapter) else {
+            return Ok(false);
+        };
+        // The manifest document stays cached only while some index entry
+        // still points at it.
+        if !self.index.values().any(|d| *d == digest) {
+            self.manifests.remove(&digest);
+        }
+        self.save_index()?;
+        Ok(true)
+    }
+
+    /// How many indexed manifests reference a blob (manifest documents
+    /// count their index entries). 0 means [`Self::gc`] would collect it.
+    pub fn refcount(&self, digest: &str) -> usize {
+        let as_manifest = self.index.values().filter(|d| *d == digest).count();
+        let as_tensor = self
+            .index
+            .values()
+            .filter_map(|d| self.manifests.get(d))
+            .flat_map(|m| m.blobs.iter())
+            .filter(|b| b.digest == digest)
+            .count();
+        as_manifest + as_tensor
+    }
+
+    /// Delete every blob file no indexed manifest references. Returns
+    /// the collected digests (sorted). Placed adapters are safe by
+    /// construction: their manifests are in the index, so everything
+    /// they reference is live.
+    pub fn gc(&mut self) -> Result<Vec<String>, StoreError> {
+        let mut live: BTreeSet<String> = self.index.values().cloned().collect();
+        for digest in self.index.values() {
+            if let Some(m) = self.manifests.get(digest) {
+                for b in &m.blobs {
+                    live.insert(b.digest.clone());
+                }
+            }
+        }
+        let mut collected = Vec::new();
+        let dir = std::fs::read_dir(self.root.join("blobs")).map_err(|e| io_err("list blobs", e))?;
+        for entry in dir {
+            let entry = entry.map_err(|e| io_err("list blobs", e))?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if !live.contains(&name) {
+                std::fs::remove_file(entry.path()).map_err(|e| io_err("gc blob", e))?;
+                collected.push(name);
+            }
+        }
+        collected.sort();
+        Ok(collected)
+    }
+
+    /// Verify every indexed manifest and every blob it references.
+    /// Returns the number of blob files checked (manifests included).
+    pub fn verify_all(&self) -> Result<usize, StoreError> {
+        let mut checked = BTreeSet::new();
+        for (adapter, digest) in &self.index {
+            let manifest = self.read_manifest(digest)?;
+            if manifest.adapter != *adapter {
+                return Err(StoreError::BadManifest {
+                    detail: format!(
+                        "index entry {adapter} points at manifest for adapter {}",
+                        manifest.adapter
+                    ),
+                });
+            }
+            checked.insert(digest.clone());
+            for b in &manifest.blobs {
+                let bytes = self.read_blob(&b.digest)?;
+                if bytes.len() as u64 != b.size {
+                    return Err(StoreError::SizeMismatch {
+                        digest: b.digest.clone(),
+                        expected: b.size,
+                        got: bytes.len() as u64,
+                    });
+                }
+                checked.insert(b.digest.clone());
+            }
+        }
+        Ok(checked.len())
+    }
+
+    /// Indexed adapter ids, ascending.
+    pub fn adapters(&self) -> Vec<u64> {
+        self.index.keys().copied().collect()
+    }
+
+    /// Number of indexed adapters.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    /// True when nothing is indexed.
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Number of committed blob files on disk.
+    pub fn blob_count(&self) -> Result<usize, StoreError> {
+        let dir = std::fs::read_dir(self.root.join("blobs")).map_err(|e| io_err("list blobs", e))?;
+        let mut n = 0;
+        for entry in dir {
+            entry.map_err(|e| io_err("list blobs", e))?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Persist `index.json` (BTreeMap order → byte-stable re-saves,
+    /// the `GlobalRegistry::save` discipline).
+    fn save_index(&self) -> Result<(), StoreError> {
+        let entries: Vec<Json> = self
+            .index
+            .iter()
+            .map(|(id, digest)| {
+                json::obj(vec![
+                    ("id", json::num(*id as f64)),
+                    ("manifest", json::s(digest)),
+                ])
+            })
+            .collect();
+        let doc = json::obj(vec![("adapters", Json::Arr(entries))]);
+        std::fs::write(self.index_path(), doc.to_string_pretty())
+            .map_err(|e| io_err("write index", e))
+    }
+}
+
+/// The synthetic Q/K/V/O stack the engine seeds for an adapter when no
+/// store manifest covers it — and the generator `caraserve artifacts
+/// seed` publishes *into* a store. One definition keeps the two paths
+/// bitwise-identical, which is what makes streams from transferred
+/// weights indistinguishable from locally-seeded ones.
+pub fn synthetic_stack(id: u64, hidden: usize, rank: usize) -> [AdapterWeights; 4] {
+    std::array::from_fn(|t| AdapterWeights::synthetic(id * 31 + t as u64, hidden, hidden, rank))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join("caraserve-artifacts-unit")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn publish_load_roundtrip_is_bitwise() {
+        let root = tmp("roundtrip");
+        let mut store = ArtifactStore::open(&root).unwrap();
+        let stack = synthetic_stack(7, 32, 8);
+        let digest = store.publish(7, 8, "tiny", &stack).unwrap();
+        assert!(is_hex_digest(&digest));
+        let (rank, back) = store.load_stack(7, 32).unwrap();
+        assert_eq!(rank, 8);
+        for (orig, re) in stack.iter().zip(back.iter()) {
+            assert!(orig.a.iter().zip(&re.a).all(|(x, y)| x.to_bits() == y.to_bits()));
+            assert!(orig.b.iter().zip(&re.b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+        assert_eq!(store.store_hits(), 1);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn manifest_canonical_text_parses_back_and_digests_stably() {
+        let root = tmp("manifest");
+        let mut store = ArtifactStore::open(&root).unwrap();
+        store.publish(3, 16, "tiny", &synthetic_stack(3, 16, 16)).unwrap();
+        let (text, digest) = store.manifest_text(3).unwrap();
+        assert_eq!(hex_digest(text.as_bytes()), digest);
+        let m = Manifest::parse(&text).unwrap();
+        assert_eq!(m.adapter, 3);
+        assert_eq!(m.rank, 16);
+        assert_eq!(m.digest(), digest);
+        assert_eq!(m.hidden().unwrap(), 16);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn reopen_preserves_index_and_digests() {
+        let root = tmp("reopen");
+        let d1;
+        {
+            let mut store = ArtifactStore::open(&root).unwrap();
+            d1 = store.publish(1, 8, "tiny", &synthetic_stack(1, 16, 8)).unwrap();
+        }
+        let store = ArtifactStore::open(&root).unwrap();
+        assert_eq!(store.adapters(), vec![1]);
+        assert_eq!(store.manifest_of(1).unwrap().0, d1);
+        assert_eq!(store.verify_all().unwrap(), 5); // manifest + 4 tensors
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn shared_stack_stores_blobs_exactly_once() {
+        let root = tmp("dedup");
+        let mut store = ArtifactStore::open(&root).unwrap();
+        let stack = synthetic_stack(5, 16, 8);
+        store.publish(5, 8, "tiny", &stack).unwrap();
+        let before = store.blob_count().unwrap();
+        // A second adapter publishing the identical tensors adds only
+        // its manifest document (different adapter id → different
+        // manifest digest), never a second copy of a tensor blob.
+        store.publish(6, 8, "tiny", &stack).unwrap();
+        assert_eq!(store.blob_count().unwrap(), before + 1);
+        for b in &store.manifest_of(5).unwrap().1.blobs.clone() {
+            assert_eq!(store.refcount(&b.digest), 2);
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn gc_collects_only_unreferenced_blobs() {
+        let root = tmp("gc");
+        let mut store = ArtifactStore::open(&root).unwrap();
+        store.publish(1, 8, "tiny", &synthetic_stack(1, 16, 8)).unwrap();
+        store.publish(2, 8, "tiny", &synthetic_stack(2, 16, 8)).unwrap();
+        assert!(store.gc().unwrap().is_empty()); // everything placed is live
+        store.remove(2).unwrap();
+        let collected = store.gc().unwrap();
+        assert_eq!(collected.len(), 5); // adapter 2's manifest + 4 tensors
+        // Adapter 1 survives intact.
+        assert!(store.load_stack(1, 16).is_ok());
+        assert_eq!(store.verify_all().unwrap(), 5);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn corrupt_blob_is_a_typed_rejection() {
+        let root = tmp("corrupt");
+        let mut store = ArtifactStore::open(&root).unwrap();
+        store.publish(9, 8, "tiny", &synthetic_stack(9, 16, 8)).unwrap();
+        let victim = store.manifest_of(9).unwrap().1.blobs[2].digest.clone();
+        let path = store.blob_path(&victim);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        match store.load_stack(9, 16) {
+            Err(StoreError::Corrupt { digest, .. }) => assert_eq!(digest, victim),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        assert_eq!(store.store_hits(), 0);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn ingest_chunks_commit_only_on_verified_completion() {
+        let root = tmp("ingest");
+        let mut store = ArtifactStore::open(&root).unwrap();
+        let payload: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        let digest = hex_digest(&payload);
+        let total = payload.len() as u64;
+        assert!(!store.ingest_chunk(&digest, 0, total, &payload[..400]).unwrap());
+        assert_eq!(store.staged_len(&digest), 400);
+        assert!(!store.has_blob(&digest));
+        // Wrong offset: typed, and the stream resets.
+        match store.ingest_chunk(&digest, 900, total, &payload[900..]) {
+            Err(StoreError::ChunkOutOfOrder { expected, got, .. }) => {
+                assert_eq!((expected, got), (400, 900));
+            }
+            other => panic!("expected ChunkOutOfOrder, got {other:?}"),
+        }
+        assert_eq!(store.staged_len(&digest), 0);
+        // Clean sequential retry commits and verifies.
+        assert!(!store.ingest_chunk(&digest, 0, total, &payload[..512]).unwrap());
+        assert!(store.ingest_chunk(&digest, 512, total, &payload[512..]).unwrap());
+        assert_eq!(store.read_blob(&digest).unwrap(), payload);
+        // A stream whose bytes don't hash to the address is refused.
+        let mut wrong = payload.clone();
+        wrong[0] ^= 1;
+        let bad = hex_digest(&payload[..1]); // valid hex, wrong content
+        match store.ingest_chunk(&bad, 0, wrong.len() as u64, &wrong) {
+            Err(StoreError::Corrupt { .. }) => {}
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn index_resaves_are_byte_stable() {
+        let root = tmp("stable");
+        let mut store = ArtifactStore::open(&root).unwrap();
+        store.publish(2, 8, "tiny", &synthetic_stack(2, 16, 8)).unwrap();
+        store.publish(1, 16, "tiny", &synthetic_stack(1, 16, 16)).unwrap();
+        let first = std::fs::read_to_string(root.join("index.json")).unwrap();
+        let mut store2 = ArtifactStore::open(&root).unwrap();
+        store2.save_index().unwrap();
+        let second = std::fs::read_to_string(root.join("index.json")).unwrap();
+        assert_eq!(first, second);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -42,7 +42,7 @@ use anyhow::Result;
 use crate::model::LoraSpec;
 use crate::scheduler::registry::GlobalRegistry;
 use crate::scheduler::ServerStats;
-use crate::server::api::{RequestHandle, ServeRequest, ServingFront};
+use crate::server::api::{InstallSourceStats, RequestHandle, ServeRequest, ServingFront};
 use crate::server::metrics::ColdStartStats;
 use crate::server::ClusterFront;
 use self::placement::{PagedPlacementInput, PlacementConfig, PlacementInput};
@@ -468,6 +468,14 @@ impl ServingFront for Coordinator {
 
     fn cold_start_stats(&self) -> Option<ColdStartStats> {
         self.cluster.cold_start_stats()
+    }
+
+    /// Cluster-wide install provenance. After a migration whose target
+    /// was fed by a streamed artifact push, `synthetic_seeds` on that
+    /// backend stays zero — the acceptance signal that weights moved
+    /// by digest, not by re-seeding.
+    fn install_source_stats(&self) -> InstallSourceStats {
+        self.cluster.install_source_stats()
     }
 }
 

@@ -52,12 +52,20 @@ impl AdapterTable {
         Self::default()
     }
 
+    /// Install an explicit Q/K/V/O weight stack for adapter `id` — the
+    /// path real weights take when the engine sources them from the
+    /// content-addressed artifact store.
+    pub fn install(&self, id: u64, stack: [AdapterWeights; 4]) {
+        self.inner.write().unwrap().insert(id, Arc::new(stack));
+    }
+
     /// Install synthetic weights for adapter `id` with `rank` at `hidden`.
     /// Targets Q/K/V/O all get weights (O unused in the standard config).
+    /// Delegates to [`crate::artifacts::synthetic_stack`] so the seeded
+    /// stacks the artifact pipeline publishes are bitwise-identical to
+    /// what this installs.
     pub fn install_synthetic(&self, id: u64, hidden: usize, rank: usize) {
-        let mk = |t: u64| AdapterWeights::synthetic(id * 31 + t, hidden, hidden, rank);
-        let entry = Arc::new([mk(0), mk(1), mk(2), mk(3)]);
-        self.inner.write().unwrap().insert(id, entry);
+        self.install(id, crate::artifacts::synthetic_stack(id, hidden, rank));
     }
 
     /// Fetch an adapter's weights.

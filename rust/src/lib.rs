@@ -116,6 +116,28 @@
 //! `DELETE /v1/requests/<id>` cancels, `GET /v1/stats` aggregates
 //! ([`remote::HttpGateway`], zero new dependencies).
 //!
+//! ## Adapter artifacts
+//!
+//! The [`artifacts`] module is the deployment pipeline the distributed
+//! tier installs from: an [`artifacts::ArtifactStore`] is a directory of
+//! digest-addressed blobs (`blobs/<sha256>`, hand-rolled
+//! [`artifacts::sha256`] on `std`) indexed by hand-rolled-JSON
+//! [`artifacts::Manifest`]s (adapter id, rank, base model, per-tensor
+//! blob digests + sizes — the OCI artifact shape). Content addressing
+//! gives dedup for free (two adapters sharing a tensor store it once),
+//! every read re-verifies bytes against their digest, and
+//! [`artifacts::ArtifactStore::gc`] refcounts blobs so a placed adapter
+//! can never lose its weights. `caraserve artifacts
+//! seed|push|pull|verify|gc` drives the pipeline from the CLI, the
+//! engine sources `install_adapter` weights from an attached store
+//! (falling back to synthetic seeding only when no manifest covers the
+//! adapter — counted by [`server::InstallSourceStats`]), and
+//! [`remote::RemoteFront`] streams manifests + chunked, per-chunk-
+//! digest-verified blobs over the wire so coordinator migrations move
+//! *real* weights between processes, overlapping the transfer with the
+//! CPU-assist prefill window so target TTFT is `max(transfer, prefill)`
+//! rather than their sum.
+//!
 //! See `examples/quickstart.rs` for a compact end-to-end run.
 //!
 //! The tree gates itself with `caraserve lint` ([`analysis`]): every
@@ -134,6 +156,7 @@
 
 pub mod adapters;
 pub mod analysis;
+pub mod artifacts;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -28,6 +28,11 @@
 //!   oracle run. Exits non-zero if any completed stream diverged from
 //!   the oracle or a panic escaped containment. `--smoke` is the CI
 //!   configuration.
+//! - `artifacts` — the content-addressed adapter store pipeline:
+//!   `seed` publishes the synthetic catalog as manifests + SHA-256
+//!   blobs, `push`/`pull` stream digest-verified chunks to/from a
+//!   running backend, `verify` re-hashes the store, `gc` collects
+//!   unreferenced blobs.
 //! - `simulate`  — run a single-instance simulation of one §7.2 workload.
 //! - `schedule`  — run the §7.5 cluster scheduling simulation.
 //! - `profile`   — fit the §5 performance models and print (α, β, R²).
@@ -57,14 +62,30 @@ subcommands:
             --mode cached|ondemand|caraserve --cpu-workers N
             --threads N --load-scale F --slo-ttft-ms F --slo-tpot-ms F
             --remote SOCK[,SOCK...] --http HOST:PORT --soak N --smoke
+            --store DIR
             (with --remote, `serve` becomes the router process: a
              ClusterFront over RemoteFronts speaking the wire protocol
-             to `caraserve backend` processes)
+             to `caraserve backend` processes; with --store, installs
+             and migrations stream real weights to backends by digest
+             before the install frame lands)
   backend   --socket PATH --name NAME --adapters N --threads N
             --kv-pages N --mode cached|ondemand|caraserve --sim
+            --store DIR
             (host one engine behind the wire protocol on a unix
              socket, in its own OS process; exits on a router
-             Shutdown frame)
+             Shutdown frame; with --store, installs load weights
+             from the content-addressed artifact store — synthetic
+             seeding only when the store has no manifest — and the
+             wire serves artifact fetch/push frames from it)
+  artifacts seed   --store DIR --adapters N --hidden N
+            push   --store DIR --socket PATH --adapter N
+            pull   --store DIR --socket PATH --adapter N
+            verify --store DIR
+            gc     --store DIR
+            (content-addressed adapter store: a JSON manifest per
+             adapter pointing at SHA-256-addressed blobs, deduped
+             across adapters; push/pull stream digest-verified
+             chunks to/from a running backend)
   cluster   --instances N --policy rank-aware|most-idle|first-fit|random
             (comma-separate or `all` for several) --requests N
             --adapters N --mode cached|ondemand|caraserve --cpu-workers N
@@ -109,6 +130,26 @@ against the front door and verifies every stream ends in exactly one
 terminal event. A killed backend rejoins with its adapters intact
 (reconnect-with-state); one that lost them is re-installed from the
 registry's placements before readmission.
+
+artifact pipeline (seed a store, stream weights between processes):
+
+  caraserve artifacts seed --store /tmp/router-store --adapters 8
+  caraserve backend --socket /tmp/b0.sock --store /tmp/b0-store \\
+       --adapters 0 &
+  caraserve artifacts push --store /tmp/router-store \\
+       --socket /tmp/b0.sock --adapter 3
+  caraserve artifacts pull --store /tmp/fresh-store \\
+       --socket /tmp/b0.sock --adapter 3
+  caraserve artifacts verify --store /tmp/fresh-store
+  caraserve artifacts gc --store /tmp/router-store
+
+Blobs are SHA-256-addressed: adapters sharing weights store each blob
+once, pushes skip blobs the receiver already holds, and every chunk is
+digest-checked in flight. A router started with `--store` streams the
+store's weights to backends on install and migration, so a migration
+target seeds nothing synthetically — its engine loads the exact bytes
+the source served (TTFT overlaps transfer with the CPU-assist window:
+max(transfer, prefill), not their sum).
 ";
 
 fn main() {
@@ -153,12 +194,16 @@ fn run() -> anyhow::Result<()> {
         "remote",
         "http",
         "soak",
+        "store",
+        "hidden",
+        "adapter",
     ])
     .map_err(|e| anyhow::anyhow!("{e}"))?;
 
     match args.subcommand() {
         Some("serve") => cmd_serve(&args),
         Some("backend") => cmd_backend(&args),
+        Some("artifacts") => cmd_artifacts(&args),
         Some("cluster") => cmd_cluster(&args),
         Some("coordinator") => cmd_coordinator(&args),
         Some("chaos") => cmd_chaos(&args),
@@ -336,11 +381,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// `caraserve serve --remote SOCK[,SOCK...]` connect to it; adapter
 /// state persists across router connections (reconnect-with-state).
 fn cmd_backend(args: &Args) -> anyhow::Result<()> {
+    use caraserve::artifacts::ArtifactStore;
     use caraserve::model::LoraSpec;
     use caraserve::runtime::{NativeConfig, NativeRuntime};
     use caraserve::server::cluster::synthetic;
     use caraserve::server::{ColdStartMode, EngineConfig, InferenceServer, ServingFront};
     use caraserve::sim::SimFront;
+    use std::sync::{Arc, Mutex};
 
     let socket = args
         .opt("socket")
@@ -361,6 +408,15 @@ fn cmd_backend(args: &Args) -> anyhow::Result<()> {
     let kv_pages: usize = args
         .opt_parse_or("kv-pages", 256)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
+    // `--store DIR` opens a content-addressed artifact store: installs
+    // source weights from it (store hit) instead of synthetic seeding,
+    // and the wire serves manifest/chunk fetch + push frames from it.
+    let store: Option<Arc<Mutex<ArtifactStore>>> = match args.opt("store") {
+        Some(dir) => Some(Arc::new(Mutex::new(ArtifactStore::open(
+            std::path::Path::new(dir),
+        )?))),
+        None => None,
+    };
 
     // `--sim` swaps in the deterministic simulator front (token streams
     // are the synthesized 0,1,2,… — handy for protocol debugging);
@@ -374,14 +430,18 @@ fn cmd_backend(args: &Args) -> anyhow::Result<()> {
             threads: threads.max(1),
             ..NativeConfig::tiny()
         });
-        Box::new(InferenceServer::new(
+        let mut engine = InferenceServer::new(
             native,
             EngineConfig {
                 cold_start: mode,
                 kv_pages,
                 ..Default::default()
             },
-        )?)
+        )?;
+        if let Some(store) = &store {
+            engine.attach_store(Arc::clone(store));
+        }
+        Box::new(engine)
     };
     for a in 0..adapters as u64 {
         front.install_adapter(&LoraSpec::standard(a, synthetic::rank_of(a), "tiny"))?;
@@ -389,10 +449,121 @@ fn cmd_backend(args: &Args) -> anyhow::Result<()> {
 
     let listener = caraserve::remote::bind(&socket)?;
     println!(
-        "backend '{name}' on {socket}: {adapters} adapters (ranks {:?}), mode {mode:?}",
-        synthetic::RANKS
+        "backend '{name}' on {socket}: {adapters} adapters (ranks {:?}), mode {mode:?}{}",
+        synthetic::RANKS,
+        if store.is_some() {
+            ", artifact store attached"
+        } else {
+            ""
+        }
     );
-    caraserve::remote::serve_listener(front.as_mut(), &listener, &name)
+    caraserve::remote::serve_listener_with_store(
+        front.as_mut(),
+        &listener,
+        &name,
+        store.as_deref(),
+    )
+}
+
+/// `caraserve artifacts <seed|push|pull|verify|gc>`: the adapter
+/// artifact pipeline against a content-addressed store directory.
+/// `seed` publishes the synthetic catalog (the same weights
+/// `install_synthetic` seeds, so streamed installs are
+/// bitwise-identical to in-process ones); `push`/`pull` stream an
+/// adapter to/from a running `caraserve backend --store` over the
+/// wire, deduped by blob digest; `verify` re-hashes every indexed
+/// manifest and blob; `gc` drops unreferenced blobs.
+fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
+    use caraserve::artifacts::{synthetic_stack, ArtifactStore};
+    use caraserve::remote::RemoteFront;
+    use caraserve::server::cluster::synthetic;
+    use std::sync::{Arc, Mutex};
+
+    let action = args
+        .positional()
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("")
+        .to_string();
+    let store_dir = args
+        .opt("store")
+        .ok_or_else(|| anyhow::anyhow!("artifacts requires --store DIR"))?
+        .to_string();
+    let mut store = ArtifactStore::open(std::path::Path::new(&store_dir))?;
+
+    match action.as_str() {
+        "seed" => {
+            let adapters: usize = args
+                .opt_parse_or("adapters", 24)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            // Default matches `NativeConfig::tiny()`, the backend the
+            // distributed tier runs.
+            let hidden: usize = args
+                .opt_parse_or("hidden", 256)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            for a in 0..adapters as u64 {
+                let rank = synthetic::rank_of(a);
+                let digest = store.publish(a, rank, "tiny", &synthetic_stack(a, hidden, rank))?;
+                println!("seeded adapter {a} rank {rank}: manifest {digest}");
+            }
+            println!(
+                "store {store_dir}: {} adapters, {} blobs",
+                store.len(),
+                store.blob_count()?
+            );
+        }
+        "push" | "pull" => {
+            let socket = args
+                .opt("socket")
+                .ok_or_else(|| anyhow::anyhow!("artifacts {action} requires --socket PATH"))?;
+            let adapter: u64 = args
+                .opt_parse("adapter")
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .ok_or_else(|| anyhow::anyhow!("artifacts {action} requires --adapter N"))?;
+            let mut front = RemoteFront::connect(socket, "artifacts-cli")?;
+            if action == "push" {
+                let store = Arc::new(Mutex::new(store));
+                front.attach_store(Arc::clone(&store));
+                let mut session = front.push_session(adapter)?;
+                let total = session.total_bytes();
+                while !front.push_step(&mut session)? {}
+                println!(
+                    "pushed adapter {adapter}: manifest {}, {total} blob bytes \
+                     after dedup ({} sent)",
+                    session.manifest_digest(),
+                    session.sent_bytes()
+                );
+            } else {
+                let store = Mutex::new(store);
+                let digest = front.pull_adapter(adapter, &store)?;
+                let store = store.lock().unwrap();
+                println!(
+                    "pulled adapter {adapter}: manifest {digest}; store now \
+                     {} adapters, {} blobs",
+                    store.len(),
+                    store.blob_count()?
+                );
+            }
+        }
+        "verify" => {
+            let blobs = store.verify_all()?;
+            println!(
+                "store {store_dir}: {} manifests, {blobs} blobs — every digest matches",
+                store.len()
+            );
+        }
+        "gc" => {
+            let collected = store.gc()?;
+            println!("gc: {} unreferenced blobs collected", collected.len());
+            for d in &collected {
+                println!("  {d}");
+            }
+        }
+        other => anyhow::bail!(
+            "unknown artifacts action '{other}' (expected seed | push | pull | verify | gc)"
+        ),
+    }
+    Ok(())
 }
 
 /// `caraserve serve --remote`: the router half of the distributed
@@ -425,22 +596,46 @@ fn cmd_serve_remote(args: &Args) -> anyhow::Result<()> {
     let seed: u64 = args.opt_parse_or("seed", 1).map_err(|e| anyhow::anyhow!("{e}"))?;
     let pace: usize = args.opt_parse_or("pace", 2).map_err(|e| anyhow::anyhow!("{e}"))?;
 
+    // `--store DIR` attaches a router-side artifact store: installs
+    // (including rejoin re-installs and migrations) stream the real
+    // weights to the backend by digest before the Install frame lands.
+    let store = match args.opt("store") {
+        Some(dir) => Some(Arc::new(std::sync::Mutex::new(
+            caraserve::artifacts::ArtifactStore::open(std::path::Path::new(dir))?,
+        ))),
+        None => None,
+    };
+
     let registry = Arc::new(GlobalRegistry::new());
     let mut backends: Vec<Box<dyn ServingFront>> = Vec::with_capacity(sockets.len());
     for (s, path) in sockets.iter().enumerate() {
-        let front = RemoteFront::connect(*path, &format!("router#{s}"))?;
+        let mut front = RemoteFront::connect(*path, &format!("router#{s}"))?;
+        if let Some(store) = &store {
+            front.attach_store(Arc::clone(store));
+        }
         println!("backend {s}: '{}' at {path}", front.server_name());
         backends.push(Box::new(front));
     }
     // The backends pre-install the same synthetic catalog; mirror it
     // (ids, ranks, placements) into the router's registry so routing
-    // and rejoin re-installs see the same world.
+    // and rejoin re-installs see the same world. Adapters the artifact
+    // store holds get a `cas:<manifest-digest>` weights path — the
+    // durable pointer a registry save/load round-trips.
     for a in 0..adapters as u64 {
+        let weights_path = match &store {
+            Some(store) => store
+                .lock()
+                .unwrap()
+                .manifest_of(a)
+                .map(|(d, _)| format!("cas:{d}"))
+                .unwrap_or_default(),
+            None => String::new(),
+        };
         registry.register(AdapterMeta {
             id: a,
             rank: synthetic::rank_of(a),
             base_model: "tiny".into(),
-            weights_path: String::new(),
+            weights_path,
         });
         for s in 0..sockets.len() {
             registry.place(a, s);

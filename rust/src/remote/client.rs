@@ -27,16 +27,24 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use super::wire::{self, Frame, WireError};
+use super::wire::{self, Frame, WireError, MAX_CHUNK_BYTES};
+use crate::artifacts::{hex_digest, ArtifactStore, Manifest};
 use crate::ipc::socket::{SocketChannel, SocketError};
 use crate::scheduler::{AdapterSet, ServerStats};
 use crate::server::api::{
-    EventChannel, RejectReason, RequestEvent, RequestHandle, ServeRequest, ServingFront,
+    EventChannel, InstallSourceStats, RejectReason, RequestEvent, RequestHandle, ServeRequest,
+    ServingFront,
 };
 use crate::server::metrics::ColdStartStats;
 
 /// Reply deadline for one RPC (also the reconnect handshake bound).
 pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Bytes per streamed artifact chunk. Small enough that a
+/// [`RemoteFront::push_step`] call returns quickly (the overlap path
+/// pumps one step between engine polls), comfortably under the
+/// decoder's [`MAX_CHUNK_BYTES`] cap.
+pub const DEFAULT_CHUNK_BYTES: usize = 32 << 10;
 
 /// A remote call's failure, typed so callers can tell transport death
 /// (reconnectable) from the peer refusing an operation (not).
@@ -58,6 +66,10 @@ pub enum RemoteError {
     /// The peer executed the request and reported an error (`ErrReply`).
     /// The connection stays up.
     Remote(String),
+    /// An artifact transfer failed integrity or store validation on
+    /// *this* side (chunk digest mismatch, bad manifest, local store
+    /// rejection). The connection stays up; the transfer can retry.
+    Store(String),
 }
 
 impl std::fmt::Display for RemoteError {
@@ -70,6 +82,7 @@ impl std::fmt::Display for RemoteError {
                 write!(f, "remote protocol violation: expected {expected}, got {got}")
             }
             RemoteError::Remote(msg) => write!(f, "remote backend error: {msg}"),
+            RemoteError::Store(msg) => write!(f, "artifact transfer failed: {msg}"),
         }
     }
 }
@@ -208,6 +221,11 @@ fn handshake(
 /// A `ServingFront` backed by a backend host in another process.
 pub struct RemoteFront {
     conn: Mutex<Conn>,
+    /// Router-side artifact store. When attached and holding a manifest
+    /// for an adapter being installed, [`ServingFront::install_adapter`]
+    /// streams the adapter's blobs to the backend *before* the Install
+    /// frame — the migration weight-transfer path.
+    store: Option<Arc<Mutex<ArtifactStore>>>,
 }
 
 impl RemoteFront {
@@ -240,6 +258,7 @@ impl RemoteFront {
         conn.reconnects = 0; // the initial connect is not a *re*connect
         Ok(RemoteFront {
             conn: Mutex::new(conn),
+            store: None,
         })
     }
 
@@ -265,7 +284,14 @@ impl RemoteFront {
                 reconnects: 0,
                 heartbeat_nonce: 0,
             }),
+            store: None,
         })
+    }
+
+    /// Attach the router-side artifact store this front sources
+    /// streamed installs from (see the `store` field docs).
+    pub fn attach_store(&mut self, store: Arc<Mutex<ArtifactStore>>) {
+        self.store = Some(store);
     }
 
     /// The backend's self-reported name from the last handshake.
@@ -316,6 +342,306 @@ impl RemoteFront {
                 got: format!("{other:?}"),
             }),
         }
+    }
+
+    // ---- artifact transfer ------------------------------------------------
+
+    /// Fetch the backend store's manifest for `adapter`:
+    /// `Some((canonical_json, digest))`, or `None` when the backend has
+    /// no manifest for it. The text is verified against the digest
+    /// before it is returned.
+    pub fn fetch_manifest(&self, adapter: u64) -> Result<Option<(String, String)>, RemoteError> {
+        let mut conn = self.conn.lock().unwrap();
+        conn.ensure_connected()?;
+        match conn.rpc(&Frame::FetchManifest { adapter })? {
+            Frame::ManifestReply { found: false, .. } => Ok(None),
+            Frame::ManifestReply {
+                found: true,
+                json,
+                digest,
+            } => {
+                let got = hex_digest(json.as_bytes());
+                if got != digest {
+                    return Err(RemoteError::Store(format!(
+                        "manifest for adapter {adapter} hashes to {got}, peer claims {digest}"
+                    )));
+                }
+                Ok(Some((json, digest)))
+            }
+            other => Err(conn.unexpected("ManifestReply", other)),
+        }
+    }
+
+    /// Stream blob `digest` from the backend into `store`, chunk by
+    /// chunk, verifying the per-chunk digest on every reply; the store
+    /// verifies the assembled blob against `digest` before committing.
+    /// Returns the blob's total size (0 if it was already present).
+    pub fn fetch_blob(
+        &self,
+        digest: &str,
+        store: &mut ArtifactStore,
+    ) -> Result<u64, RemoteError> {
+        if store.has_blob(digest) {
+            return Ok(0);
+        }
+        let mut offset = 0u64;
+        loop {
+            let mut conn = self.conn.lock().unwrap();
+            conn.ensure_connected()?;
+            let reply = conn.rpc(&Frame::FetchChunk {
+                digest: digest.to_string(),
+                offset,
+                len: DEFAULT_CHUNK_BYTES.min(MAX_CHUNK_BYTES) as u32,
+            })?;
+            let (r_digest, r_offset, total, bytes, chunk_digest) = match reply {
+                Frame::ChunkReply {
+                    digest,
+                    offset,
+                    total,
+                    bytes,
+                    chunk_digest,
+                } => (digest, offset, total, bytes, chunk_digest),
+                other => return Err(conn.unexpected("ChunkReply", other)),
+            };
+            drop(conn);
+            if r_digest != digest || r_offset != offset {
+                return Err(RemoteError::Store(format!(
+                    "chunk reply for blob {r_digest} @ {r_offset}, asked {digest} @ {offset}"
+                )));
+            }
+            if hex_digest(&bytes) != chunk_digest {
+                return Err(RemoteError::Store(format!(
+                    "chunk at offset {offset} of blob {digest} failed its digest"
+                )));
+            }
+            if bytes.is_empty() && offset < total {
+                // Progress guard: an empty mid-blob chunk would loop
+                // forever.
+                return Err(RemoteError::Store(format!(
+                    "empty chunk at offset {offset} of {total}-byte blob {digest}"
+                )));
+            }
+            let complete = store
+                .ingest_chunk(digest, offset, total, &bytes)
+                .map_err(|e| RemoteError::Store(e.to_string()))?;
+            offset += bytes.len() as u64;
+            if complete {
+                return Ok(total);
+            }
+        }
+    }
+
+    /// Pull `adapter` from the backend's store into `store`: manifest,
+    /// then every blob the local store is missing (content addressing
+    /// makes already-present blobs free), then the verified manifest
+    /// install. Returns the manifest digest.
+    pub fn pull_adapter(
+        &self,
+        adapter: u64,
+        store: &Mutex<ArtifactStore>,
+    ) -> Result<String, RemoteError> {
+        let Some((json, digest)) = self.fetch_manifest(adapter)? else {
+            return Err(RemoteError::Store(format!(
+                "remote has no manifest for adapter {adapter}"
+            )));
+        };
+        let manifest =
+            Manifest::parse(&json).map_err(|e| RemoteError::Store(e.to_string()))?;
+        for b in &manifest.blobs {
+            let mut s = store.lock().unwrap();
+            self.fetch_blob(&b.digest, &mut s)?;
+        }
+        store
+            .lock()
+            .unwrap()
+            .publish_manifest(&json, &digest)
+            .map_err(|e| RemoteError::Store(e.to_string()))?;
+        Ok(digest)
+    }
+
+    /// Open a chunk-at-a-time push of `adapter` from the attached store
+    /// to the backend. Blobs the backend already holds are detected via
+    /// a zero-length fetch probe and skipped — cross-process dedup.
+    /// Drive with [`RemoteFront::push_step`]; the overlap path
+    /// interleaves steps with [`ServingFront::poll`] so the transfer
+    /// rides inside the CPU-assist window.
+    pub fn push_session(&self, adapter: u64) -> Result<PushSession, RemoteError> {
+        let Some(store) = &self.store else {
+            return Err(RemoteError::Store(
+                "no artifact store attached to this RemoteFront".into(),
+            ));
+        };
+        let (json, digest, blob_digests) = {
+            let s = store.lock().unwrap();
+            let (json, digest) = s
+                .manifest_text(adapter)
+                .map_err(|e| RemoteError::Store(e.to_string()))?;
+            let blobs: Vec<String> = match s.manifest_of(adapter) {
+                Some((_, m)) => m.blobs.iter().map(|b| b.digest.clone()).collect(),
+                None => Vec::new(),
+            };
+            (json, digest, blobs)
+        };
+        let mut blobs = Vec::new();
+        for bd in blob_digests {
+            if self.remote_has_blob(&bd)? {
+                continue;
+            }
+            let bytes = store
+                .lock()
+                .unwrap()
+                .read_blob(&bd)
+                .map_err(|e| RemoteError::Store(e.to_string()))?;
+            blobs.push((bd, bytes));
+        }
+        let total_bytes = blobs.iter().map(|(_, b)| b.len() as u64).sum();
+        Ok(PushSession {
+            adapter,
+            manifest_json: json,
+            manifest_digest: digest,
+            blobs,
+            current: 0,
+            offset: 0,
+            manifest_sent: false,
+            total_bytes,
+            sent_bytes: 0,
+        })
+    }
+
+    /// Does the backend's store already hold a blob? Probed with a
+    /// zero-length chunk fetch: present blobs answer `ChunkReply`,
+    /// missing ones a remote store error.
+    fn remote_has_blob(&self, digest: &str) -> Result<bool, RemoteError> {
+        let mut conn = self.conn.lock().unwrap();
+        conn.ensure_connected()?;
+        match conn.rpc(&Frame::FetchChunk {
+            digest: digest.to_string(),
+            offset: 0,
+            len: 0,
+        }) {
+            Ok(Frame::ChunkReply { .. }) => Ok(true),
+            Ok(other) => Err(conn.unexpected("ChunkReply", other)),
+            Err(RemoteError::Remote(_)) => Ok(false),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Advance a push by one protocol exchange (one chunk, or the final
+    /// manifest install). Returns `true` when the session is complete.
+    pub fn push_step(&self, session: &mut PushSession) -> Result<bool, RemoteError> {
+        if session.manifest_sent {
+            return Ok(true);
+        }
+        if let Some((digest, bytes)) = session.blobs.get(session.current) {
+            let total = bytes.len() as u64;
+            let end = (session.offset + DEFAULT_CHUNK_BYTES).min(bytes.len());
+            let chunk = &bytes[session.offset..end];
+            let frame = Frame::PushChunk {
+                digest: digest.clone(),
+                offset: session.offset as u64,
+                total,
+                bytes: chunk.to_vec(),
+                chunk_digest: hex_digest(chunk),
+            };
+            let mut conn = self.conn.lock().unwrap();
+            conn.ensure_connected()?;
+            let ack = match conn.rpc(&frame)? {
+                Frame::PushAck { complete, have } => (complete, have),
+                other => return Err(conn.unexpected("PushAck", other)),
+            };
+            drop(conn);
+            session.offset = end;
+            session.sent_bytes += chunk.len() as u64;
+            let (complete, have) = ack;
+            if complete {
+                // Committed (possibly early, when the backend already
+                // held the blob): move to the next one.
+                session.current += 1;
+                session.offset = 0;
+            } else if have != end as u64 {
+                return Err(RemoteError::Store(format!(
+                    "push of blob {digest} desynced: backend staged {have}, sent {end}"
+                )));
+            }
+            return Ok(false);
+        }
+        // All blobs delivered: install the manifest.
+        let frame = Frame::PushManifest {
+            json: session.manifest_json.clone(),
+            digest: session.manifest_digest.clone(),
+        };
+        let mut conn = self.conn.lock().unwrap();
+        conn.ensure_connected()?;
+        match conn.rpc(&frame)? {
+            Frame::OkReply => {
+                session.manifest_sent = true;
+                Ok(true)
+            }
+            other => Err(conn.unexpected("OkReply", other)),
+        }
+    }
+
+    /// Push `adapter` to the backend in one blocking call (the
+    /// serialized path; the overlap path drives [`RemoteFront::push_step`]
+    /// itself). Returns the manifest digest.
+    pub fn push_adapter(&self, adapter: u64) -> Result<String, RemoteError> {
+        let mut session = self.push_session(adapter)?;
+        while !self.push_step(&mut session)? {}
+        Ok(session.manifest_digest)
+    }
+
+    /// The backend's install-provenance counters and blob census:
+    /// `(store_hits, synthetic_seeds, blobs)`.
+    pub fn artifact_stat(&self) -> Result<(u64, u64, u64), RemoteError> {
+        let mut conn = self.conn.lock().unwrap();
+        conn.ensure_connected()?;
+        match conn.rpc(&Frame::ArtifactStat)? {
+            Frame::ArtifactStatReply {
+                store_hits,
+                synthetic_seeds,
+                blobs,
+            } => Ok((store_hits, synthetic_seeds, blobs)),
+            other => Err(conn.unexpected("ArtifactStatReply", other)),
+        }
+    }
+}
+
+/// An in-flight adapter push (see [`RemoteFront::push_session`]).
+/// Holding it costs the undelivered blob bytes; chunking is bounded by
+/// [`DEFAULT_CHUNK_BYTES`] ≤ [`MAX_CHUNK_BYTES`].
+pub struct PushSession {
+    adapter: u64,
+    manifest_json: String,
+    manifest_digest: String,
+    /// Blobs the backend was missing at session open: (digest, bytes).
+    blobs: Vec<(String, Vec<u8>)>,
+    current: usize,
+    offset: usize,
+    manifest_sent: bool,
+    total_bytes: u64,
+    sent_bytes: u64,
+}
+
+impl PushSession {
+    /// The adapter being pushed.
+    pub fn adapter(&self) -> u64 {
+        self.adapter
+    }
+    /// Blob bytes this session must deliver (deduped blobs excluded).
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+    /// Blob bytes delivered so far.
+    pub fn sent_bytes(&self) -> u64 {
+        self.sent_bytes
+    }
+    /// Manifest digest being installed.
+    pub fn manifest_digest(&self) -> &str {
+        &self.manifest_digest
+    }
+    /// True once the manifest install acked.
+    pub fn is_complete(&self) -> bool {
+        self.manifest_sent
     }
 }
 
@@ -447,7 +773,19 @@ impl ServingFront for RemoteFront {
         }
     }
 
+    /// Install on the backend. When a local artifact store is attached
+    /// and holds a manifest for the adapter, the weights are streamed
+    /// to the backend first (deduped, digest-verified) so the Install
+    /// frame lands as a store hit there, not a synthetic re-seed.
     fn install_adapter(&mut self, spec: &crate::model::LoraSpec) -> anyhow::Result<()> {
+        let has_manifest = match &self.store {
+            Some(store) => store.lock().unwrap().manifest_of(spec.id).is_some(),
+            None => false,
+        };
+        if has_manifest {
+            self.push_adapter(spec.id)
+                .map_err(|e| anyhow::anyhow!("artifact push before install failed: {e}"))?;
+        }
         let mut conn = self.conn.lock().unwrap();
         conn.ensure_connected()
             .map_err(|e| anyhow::anyhow!("remote install failed: {e}"))?;
@@ -501,6 +839,18 @@ impl ServingFront for RemoteFront {
                 None
             }
             Err(_) => None,
+        }
+    }
+
+    /// The backend's install-provenance counters (zeros while
+    /// disconnected or against a pre-artifacts backend).
+    fn install_source_stats(&self) -> InstallSourceStats {
+        match self.artifact_stat() {
+            Ok((store_hits, synthetic_seeds, _)) => InstallSourceStats {
+                store_hits,
+                synthetic_seeds,
+            },
+            Err(_) => InstallSourceStats::default(),
         }
     }
 }
@@ -619,5 +969,96 @@ mod tests {
         assert!(front.is_connected());
         front.shutdown().expect("shutdown");
         server.join().expect("server thread");
+    }
+
+    /// Push and pull between two real stores over a socketpair:
+    /// streamed blobs arrive bitwise-identical, shared blobs dedup to
+    /// zero transfer bytes, and absent manifests are `None` not errors.
+    #[test]
+    fn artifact_push_pull_round_trip_with_dedup() {
+        use crate::artifacts::{synthetic_stack, ArtifactStore};
+        use crate::remote::server::serve_connection_with_store;
+
+        let base = std::env::temp_dir()
+            .join("caraserve-client-artifacts")
+            .join(format!("pair-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let router_store = Arc::new(Mutex::new(
+            ArtifactStore::open(&base.join("router")).expect("router store"),
+        ));
+        let backend_store = Arc::new(Mutex::new(
+            ArtifactStore::open(&base.join("backend")).expect("backend store"),
+        ));
+
+        // Router store: adapter 7, plus adapter 9 published from the
+        // *same* stack so the two manifests share all four blobs.
+        let hidden = 16;
+        let stack = synthetic_stack(7, hidden, 8);
+        let mut rs = router_store.lock().unwrap();
+        rs.publish(7, 8, "tiny", &stack).expect("publish 7");
+        rs.publish(9, 8, "tiny", &stack).expect("publish 9");
+        drop(rs);
+        // Backend store: adapter 11, for the pull direction.
+        let stack11 = synthetic_stack(11, hidden, 8);
+        backend_store
+            .lock()
+            .unwrap()
+            .publish(11, 8, "tiny", &stack11)
+            .expect("publish 11");
+
+        let model = GpuModel::new(LlamaConfig::llama2_7b(), GpuSpec::a10(), 1);
+        let inst = SimInstance::new(0, model, ServingMode::CaraServe, 32, 8, 64);
+        let mut sim = SimFront::new(inst, 512);
+        let (client_chan, mut server_chan) = SocketChannel::pair().expect("socketpair");
+        let server_store = Arc::clone(&backend_store);
+        let server = std::thread::spawn(move || {
+            serve_connection_with_store(&mut sim, &mut server_chan, "sim-host", Some(&server_store));
+        });
+        let mut front = RemoteFront::from_channel(client_chan, "test-router", DEFAULT_IO_TIMEOUT)
+            .expect("handshake");
+        front.attach_store(Arc::clone(&router_store));
+
+        // Push adapter 7: four blobs stream over, then the manifest.
+        let digest7 = front.push_adapter(7).expect("push 7");
+        {
+            let bs = backend_store.lock().unwrap();
+            let (d, _) = bs.manifest_of(7).expect("backend has manifest 7");
+            assert_eq!(d, digest7);
+        }
+        let blobs_after_7 = backend_store.lock().unwrap().blob_count().expect("count");
+
+        // Adapter 9 shares every blob with 7: the existence probe
+        // dedups the payload down to just the manifest frame.
+        let session = front.push_session(9).expect("session 9");
+        assert_eq!(session.total_bytes(), 0);
+        front.push_adapter(9).expect("push 9");
+        assert_eq!(
+            backend_store.lock().unwrap().blob_count().expect("count"),
+            blobs_after_7
+        );
+
+        // Pull adapter 11 the other way: weights bitwise-identical.
+        front.pull_adapter(11, &router_store).expect("pull 11");
+        let rs = router_store.lock().unwrap();
+        let (rank, pulled) = rs.load_stack(11, hidden).expect("load 11");
+        assert_eq!(rank, 8);
+        for (got, want) in pulled.iter().zip(stack11.iter()) {
+            assert_eq!(got.a, want.a);
+            assert_eq!(got.b, want.b);
+        }
+        drop(rs);
+
+        // Absent manifest is a protocol outcome, not an error; the
+        // stat frame reports the backend's blob census.
+        assert!(front.fetch_manifest(999).expect("absent").is_none());
+        let (_, _, blobs) = front.artifact_stat().expect("stat");
+        assert_eq!(
+            blobs,
+            backend_store.lock().unwrap().blob_count().expect("count") as u64
+        );
+
+        front.shutdown().expect("shutdown");
+        server.join().expect("server thread");
+        let _ = std::fs::remove_dir_all(&base);
     }
 }

@@ -26,12 +26,23 @@
 //!   `std::net::TcpListener`: `POST /v1/requests` streams token events
 //!   as chunked JSON lines, `DELETE` cancels, `GET /v1/stats` reports,
 //!   and [`http::soak`] is the concurrent-streaming load oracle.
+//!
+//! The wire also carries the [`crate::artifacts`] transfer plane:
+//! manifest fetch and chunked, digest-verified blob push/pull frames,
+//! so installs and migrations stream real weights between processes
+//! (client [`client::PushSession`] ↔ a store attached to the host via
+//! [`server::serve_listener_with_store`]). Per-chunk digests catch
+//! corruption at the chunk that carried it; content addressing dedups
+//! blobs already present on the receiving side.
 
 pub mod client;
 pub mod http;
 pub mod server;
 pub mod wire;
 
-pub use client::{RemoteError, RemoteFront};
+pub use client::{PushSession, RemoteError, RemoteFront, DEFAULT_CHUNK_BYTES};
 pub use http::{soak, HttpGateway, SoakReport};
-pub use server::{bind, serve_connection, serve_listener, ConnExit};
+pub use server::{
+    bind, serve_connection, serve_connection_with_store, serve_listener,
+    serve_listener_with_store, ConnExit,
+};

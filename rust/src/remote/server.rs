@@ -20,10 +20,12 @@
 use std::collections::BTreeMap;
 use std::os::unix::net::UnixListener;
 use std::path::Path;
+use std::sync::Mutex;
 
 use anyhow::Result;
 
 use super::wire::{self, Frame, WireError, VERSION};
+use crate::artifacts::{hex_digest, ArtifactStore, StoreError};
 use crate::ipc::SocketChannel;
 use crate::server::api::{RequestHandle, ServingFront};
 
@@ -56,10 +58,23 @@ pub fn serve_listener(
     listener: &UnixListener,
     name: &str,
 ) -> Result<()> {
+    serve_listener_with_store(front, listener, name, None)
+}
+
+/// [`serve_listener`] with an attached [`ArtifactStore`]: the artifact
+/// frames (`FetchManifest` / `FetchChunk` / `PushManifest` /
+/// `PushChunk` / `ArtifactStat`) are served from/into it. Without a
+/// store they answer with a typed `ErrReply`.
+pub fn serve_listener_with_store(
+    front: &mut dyn ServingFront,
+    listener: &UnixListener,
+    name: &str,
+    store: Option<&Mutex<ArtifactStore>>,
+) -> Result<()> {
     loop {
         let (stream, _) = listener.accept()?;
         let mut chan = SocketChannel::from_stream(stream);
-        match serve_connection(front, &mut chan, name) {
+        match serve_connection_with_store(front, &mut chan, name, store) {
             ConnExit::Disconnected => continue,
             ConnExit::ShutdownRequested => return Ok(()),
         }
@@ -74,6 +89,17 @@ pub fn serve_connection(
     chan: &mut SocketChannel,
     name: &str,
 ) -> ConnExit {
+    serve_connection_with_store(front, chan, name, None)
+}
+
+/// [`serve_connection`] with an attached [`ArtifactStore`] (see
+/// [`serve_listener_with_store`]).
+pub fn serve_connection_with_store(
+    front: &mut dyn ServingFront,
+    chan: &mut SocketChannel,
+    name: &str,
+    store: Option<&Mutex<ArtifactStore>>,
+) -> ConnExit {
     // client request id → live handle; BTreeMap so Events frames list
     // requests in a deterministic order.
     let mut live: BTreeMap<u64, RequestHandle> = BTreeMap::new();
@@ -86,7 +112,7 @@ pub fn serve_connection(
             }
         };
         let (reply, exit) = match wire::decode(&bytes) {
-            Ok(frame) => dispatch(front, &mut live, frame, name),
+            Ok(frame) => dispatch_with_store(front, &mut live, frame, name, store),
             // The socket layer delimits frames, so one undecodable
             // frame doesn't desynchronize the stream: report and keep
             // serving.
@@ -111,13 +137,29 @@ fn err_reply(e: &dyn std::fmt::Display) -> Frame {
     }
 }
 
+/// Run an artifact-frame handler against the attached store, mapping
+/// "no store" and a poisoned lock to typed `ErrReply` frames.
+fn with_store(
+    store: Option<&Mutex<ArtifactStore>>,
+    f: impl FnOnce(&mut ArtifactStore) -> Frame,
+) -> Frame {
+    match store {
+        None => err_reply(&format_args!("no artifact store attached to this backend")),
+        Some(m) => match m.lock() {
+            Ok(mut s) => f(&mut s),
+            Err(_) => err_reply(&format_args!("artifact store lock poisoned")),
+        },
+    }
+}
+
 /// Handle one decoded frame; returns the reply and, when the
 /// connection should end after it, the exit kind.
-fn dispatch(
+fn dispatch_with_store(
     front: &mut dyn ServingFront,
     live: &mut BTreeMap<u64, RequestHandle>,
     frame: Frame,
     name: &str,
+    store: Option<&Mutex<ArtifactStore>>,
 ) -> (Frame, Option<ConnExit>) {
     let reply = match frame {
         Frame::Hello { client: _ } => Frame::Welcome {
@@ -190,6 +232,84 @@ fn dispatch(
         },
         Frame::Heartbeat { nonce } => Frame::HeartbeatAck { nonce },
         Frame::Shutdown => return (Frame::OkReply, Some(ConnExit::ShutdownRequested)),
+        Frame::FetchManifest { adapter } => with_store(store, |s| {
+            match s.manifest_text(adapter) {
+                Ok((json, digest)) => Frame::ManifestReply {
+                    found: true,
+                    json,
+                    digest,
+                },
+                // Absence is a protocol outcome the router probes for,
+                // not an error.
+                Err(StoreError::NotFound { .. }) => Frame::ManifestReply {
+                    found: false,
+                    json: String::new(),
+                    digest: String::new(),
+                },
+                Err(e) => err_reply(&e),
+            }
+        }),
+        Frame::FetchChunk {
+            digest,
+            offset,
+            len,
+        } => with_store(store, |s| match s.chunk_of(&digest, offset, len as usize) {
+            Ok((bytes, total)) => {
+                let chunk_digest = hex_digest(&bytes);
+                Frame::ChunkReply {
+                    digest: digest.clone(),
+                    offset,
+                    total,
+                    bytes,
+                    chunk_digest,
+                }
+            }
+            Err(e) => err_reply(&e),
+        }),
+        Frame::PushManifest { json, digest } => {
+            with_store(store, |s| match s.publish_manifest(&json, &digest) {
+                Ok(_adapter) => Frame::OkReply,
+                Err(e) => err_reply(&e),
+            })
+        }
+        Frame::PushChunk {
+            digest,
+            offset,
+            total,
+            bytes,
+            chunk_digest,
+        } => with_store(store, |s| {
+            // Per-chunk integrity before any staging: a flipped bit is
+            // caught at the chunk that carried it, not at blob commit.
+            let got = hex_digest(&bytes);
+            if got != chunk_digest {
+                return err_reply(&format_args!(
+                    "chunk at offset {offset} of blob {digest} is corrupt (hashes to {got})"
+                ));
+            }
+            match s.ingest_chunk(&digest, offset, total, &bytes) {
+                Ok(complete) => Frame::PushAck {
+                    complete,
+                    have: if complete { total } else { s.staged_len(&digest) },
+                },
+                Err(e) => err_reply(&e),
+            }
+        }),
+        Frame::ArtifactStat => {
+            let sources = front.install_source_stats();
+            let blobs = match store {
+                Some(m) => match m.lock() {
+                    Ok(s) => s.blob_count().unwrap_or(0) as u64,
+                    Err(_) => 0,
+                },
+                None => 0,
+            };
+            Frame::ArtifactStatReply {
+                store_hits: sources.store_hits,
+                synthetic_seeds: sources.synthetic_seeds,
+                blobs,
+            }
+        }
         // Reply-direction frames arriving as requests are a peer bug.
         other => err_reply(&format_args!("unexpected frame {other:?}")),
     };
@@ -230,7 +350,7 @@ mod tests {
     }
 
     fn rpc(front: &mut dyn ServingFront, live: &mut BTreeMap<u64, RequestHandle>, f: Frame) -> Frame {
-        let (reply, exit) = dispatch(front, live, f, "test-backend");
+        let (reply, exit) = dispatch_with_store(front, live, f, "test-backend", None);
         assert!(exit.is_none());
         reply
     }
@@ -333,11 +453,101 @@ mod tests {
     fn shutdown_and_unknown_frames() {
         let mut front = sim_front();
         let mut live = BTreeMap::new();
-        let (reply, exit) = dispatch(&mut front, &mut live, Frame::Shutdown, "b");
+        let (reply, exit) = dispatch_with_store(&mut front, &mut live, Frame::Shutdown, "b", None);
         assert_eq!(reply, Frame::OkReply);
         assert_eq!(exit, Some(ConnExit::ShutdownRequested));
         let reply = rpc(&mut front, &mut live, Frame::OkReply);
         assert!(matches!(reply, Frame::ErrReply { .. }));
+    }
+
+    #[test]
+    fn artifact_frames_serve_from_the_attached_store() {
+        use crate::artifacts::synthetic_stack;
+
+        let root = std::env::temp_dir()
+            .join("caraserve-server-artifacts")
+            .join(format!("dispatch-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let mut src = ArtifactStore::open(&root).unwrap();
+        src.publish(1, 8, "tiny", &synthetic_stack(1, 16, 8)).unwrap();
+        let (json, digest) = src.manifest_text(1).unwrap();
+        let blob = src.manifest_of(1).unwrap().1.blobs[0].clone();
+        let store = Mutex::new(src);
+
+        let mut front = sim_front();
+        let mut live = BTreeMap::new();
+        let mut rpc = |f: Frame| {
+            let (reply, exit) =
+                dispatch_with_store(&mut front, &mut live, f, "b", Some(&store));
+            assert!(exit.is_none());
+            reply
+        };
+
+        // Manifest fetch: present and absent.
+        assert_eq!(
+            rpc(Frame::FetchManifest { adapter: 1 }),
+            Frame::ManifestReply {
+                found: true,
+                json: json.clone(),
+                digest: digest.clone(),
+            }
+        );
+        assert_eq!(
+            rpc(Frame::FetchManifest { adapter: 9 }),
+            Frame::ManifestReply {
+                found: false,
+                json: String::new(),
+                digest: String::new(),
+            }
+        );
+
+        // Chunk fetch carries a verifiable per-chunk digest.
+        let reply = rpc(Frame::FetchChunk {
+            digest: blob.digest.clone(),
+            offset: 0,
+            len: 64,
+        });
+        let Frame::ChunkReply {
+            bytes,
+            chunk_digest,
+            total,
+            ..
+        } = reply
+        else {
+            panic!("expected ChunkReply, got {reply:?}");
+        };
+        assert_eq!(total, blob.size);
+        assert_eq!(hex_digest(&bytes), chunk_digest);
+
+        // A corrupt pushed chunk is refused with an ErrReply.
+        let reply = rpc(Frame::PushChunk {
+            digest: "ab".repeat(32),
+            offset: 0,
+            total: 4,
+            bytes: vec![1, 2, 3, 4],
+            chunk_digest: "cd".repeat(32),
+        });
+        assert!(matches!(reply, Frame::ErrReply { .. }), "got {reply:?}");
+
+        // ArtifactStat reports the store's blob census.
+        let reply = rpc(Frame::ArtifactStat);
+        let Frame::ArtifactStatReply { blobs, .. } = reply else {
+            panic!("expected ArtifactStatReply, got {reply:?}");
+        };
+        assert_eq!(blobs, 5); // manifest + 4 tensors
+
+        // Without a store every artifact frame is a typed refusal.
+        let mut live2 = BTreeMap::new();
+        let mut front2 = sim_front();
+        let (reply, _) = dispatch_with_store(
+            &mut front2,
+            &mut live2,
+            Frame::FetchManifest { adapter: 1 },
+            "b",
+            None,
+        );
+        assert!(matches!(reply, Frame::ErrReply { .. }));
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

@@ -46,6 +46,14 @@ pub const VERSION: u16 = 1;
 /// instead of a stack overflow.
 const MAX_REASON_DEPTH: u8 = 8;
 
+/// Hard cap on one artifact chunk's byte payload (1 MiB). The decoder
+/// refuses a larger declared length with [`WireError::ChunkTooLarge`]
+/// *before* allocating — a hostile length prefix can therefore never
+/// stage more than this per chunk, independent of how large the
+/// enclosing socket frame is allowed to be. Senders honor the same
+/// constant, so honest transfers never trip it.
+pub const MAX_CHUNK_BYTES: usize = 1 << 20;
+
 /// Typed decode failure. Every variant is a *protocol* outcome the
 /// caller can branch on — nothing in this module panics on wire data.
 #[derive(Debug, Clone, PartialEq)]
@@ -70,6 +78,9 @@ pub enum WireError {
     BadString,
     /// Bytes remained after a complete frame was decoded.
     Trailing { extra: usize },
+    /// An artifact chunk declared a payload larger than
+    /// [`MAX_CHUNK_BYTES`] — refused before allocation.
+    ChunkTooLarge { declared: usize, max: usize },
 }
 
 impl std::fmt::Display for WireError {
@@ -91,6 +102,9 @@ impl std::fmt::Display for WireError {
             WireError::BadValue { what, got } => write!(f, "bad {what} value {got}"),
             WireError::BadString => write!(f, "string field is not valid UTF-8"),
             WireError::Trailing { extra } => write!(f, "{extra} trailing bytes after frame"),
+            WireError::ChunkTooLarge { declared, max } => {
+                write!(f, "chunk payload of {declared} bytes exceeds cap {max}")
+            }
         }
     }
 }
@@ -127,6 +141,36 @@ pub enum Frame {
     Heartbeat { nonce: u64 },
     /// Ask the backend host process to exit its listener loop.
     Shutdown,
+    /// Artifact pipeline: ask for the manifest of `adapter` from the
+    /// backend's attached [`crate::artifacts::ArtifactStore`].
+    FetchManifest { adapter: u64 },
+    /// Artifact pipeline: ask for `len` bytes of blob `digest` starting
+    /// at `offset`. `len` is capped at [`MAX_CHUNK_BYTES`] on decode.
+    FetchChunk {
+        digest: String,
+        offset: u64,
+        len: u32,
+    },
+    /// Artifact pipeline: install a manifest document (canonical JSON
+    /// text + its digest) into the backend's store. Sent *after* every
+    /// blob it references has been pushed; the backend verifies text
+    /// against digest and blobs against the manifest before indexing.
+    PushManifest { json: String, digest: String },
+    /// Artifact pipeline: one streamed chunk of blob `digest`.
+    /// `chunk_digest` is the SHA-256 of `bytes` alone (per-chunk
+    /// integrity + progress), `total` the full blob size; the backend
+    /// commits only after the assembled bytes hash to `digest`.
+    PushChunk {
+        digest: String,
+        offset: u64,
+        total: u64,
+        bytes: Vec<u8>,
+        chunk_digest: String,
+    },
+    /// Artifact pipeline: fetch the backend's install-source counters
+    /// (how many installs were served from the store vs synthetically
+    /// seeded) — the migration acceptance probe.
+    ArtifactStat,
 
     // ---- server → client ------------------------------------------------
     /// Handshake reply: the backend's protocol version, display name,
@@ -167,6 +211,33 @@ pub enum Frame {
     OkReply,
     /// Generic failure reply; `message` is the backend error rendered.
     ErrReply { message: String },
+    /// [`Frame::FetchManifest`] reply. `found: false` (with empty
+    /// `json`/`digest`) means the store has no manifest for the adapter
+    /// — a protocol outcome, not an error.
+    ManifestReply {
+        found: bool,
+        json: String,
+        digest: String,
+    },
+    /// [`Frame::FetchChunk`] reply: the requested slice (possibly
+    /// shorter at end-of-blob), the blob's `total` size, and the
+    /// per-chunk digest of `bytes`.
+    ChunkReply {
+        digest: String,
+        offset: u64,
+        total: u64,
+        bytes: Vec<u8>,
+        chunk_digest: String,
+    },
+    /// [`Frame::PushChunk`] reply: `have` bytes staged (or committed)
+    /// so far; `complete` once the blob is verified and stored.
+    PushAck { complete: bool, have: u64 },
+    /// [`Frame::ArtifactStat`] reply.
+    ArtifactStatReply {
+        store_hits: u64,
+        synthetic_seeds: u64,
+        blobs: u64,
+    },
 }
 
 // Frame tags. Client requests are 1.., replies 64.. — disjoint ranges
@@ -183,6 +254,11 @@ const TAG_PREWARM: u8 = 8;
 const TAG_COLD_START: u8 = 9;
 const TAG_HEARTBEAT: u8 = 10;
 const TAG_SHUTDOWN: u8 = 11;
+const TAG_FETCH_MANIFEST: u8 = 12;
+const TAG_FETCH_CHUNK: u8 = 13;
+const TAG_PUSH_MANIFEST: u8 = 14;
+const TAG_PUSH_CHUNK: u8 = 15;
+const TAG_ARTIFACT_STAT: u8 = 16;
 const TAG_WELCOME: u8 = 64;
 const TAG_SUBMITTED: u8 = 65;
 const TAG_EVENTS: u8 = 66;
@@ -193,6 +269,10 @@ const TAG_COLD_START_REPLY: u8 = 70;
 const TAG_HEARTBEAT_ACK: u8 = 71;
 const TAG_OK: u8 = 72;
 const TAG_ERR: u8 = 73;
+const TAG_MANIFEST_REPLY: u8 = 74;
+const TAG_CHUNK_REPLY: u8 = 75;
+const TAG_PUSH_ACK: u8 = 76;
+const TAG_ARTIFACT_STAT_REPLY: u8 = 77;
 
 /// Encode one frame to bytes (header + payload). Encoding is total —
 /// it cannot fail and never panics.
@@ -234,6 +314,40 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             w.u64(*nonce);
         }
         Frame::Shutdown => w.u8(TAG_SHUTDOWN),
+        Frame::FetchManifest { adapter } => {
+            w.u8(TAG_FETCH_MANIFEST);
+            w.u64(*adapter);
+        }
+        Frame::FetchChunk {
+            digest,
+            offset,
+            len,
+        } => {
+            w.u8(TAG_FETCH_CHUNK);
+            w.string(digest);
+            w.u64(*offset);
+            w.u32(*len);
+        }
+        Frame::PushManifest { json, digest } => {
+            w.u8(TAG_PUSH_MANIFEST);
+            w.string(json);
+            w.string(digest);
+        }
+        Frame::PushChunk {
+            digest,
+            offset,
+            total,
+            bytes,
+            chunk_digest,
+        } => {
+            w.u8(TAG_PUSH_CHUNK);
+            w.string(digest);
+            w.u64(*offset);
+            w.u64(*total);
+            w.bytes(bytes);
+            w.string(chunk_digest);
+        }
+        Frame::ArtifactStat => w.u8(TAG_ARTIFACT_STAT),
         Frame::Welcome {
             version,
             server,
@@ -302,6 +416,45 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             w.u8(TAG_ERR);
             w.string(message);
         }
+        Frame::ManifestReply {
+            found,
+            json,
+            digest,
+        } => {
+            w.u8(TAG_MANIFEST_REPLY);
+            w.bool(*found);
+            w.string(json);
+            w.string(digest);
+        }
+        Frame::ChunkReply {
+            digest,
+            offset,
+            total,
+            bytes,
+            chunk_digest,
+        } => {
+            w.u8(TAG_CHUNK_REPLY);
+            w.string(digest);
+            w.u64(*offset);
+            w.u64(*total);
+            w.bytes(bytes);
+            w.string(chunk_digest);
+        }
+        Frame::PushAck { complete, have } => {
+            w.u8(TAG_PUSH_ACK);
+            w.bool(*complete);
+            w.u64(*have);
+        }
+        Frame::ArtifactStatReply {
+            store_hits,
+            synthetic_seeds,
+            blobs,
+        } => {
+            w.u8(TAG_ARTIFACT_STAT_REPLY);
+            w.u64(*store_hits);
+            w.u64(*synthetic_seeds);
+            w.u64(*blobs);
+        }
     }
     w.out
 }
@@ -336,6 +489,37 @@ pub fn decode(bytes: &[u8]) -> Result<Frame, WireError> {
         TAG_COLD_START => Frame::ColdStart,
         TAG_HEARTBEAT => Frame::Heartbeat { nonce: r.u64()? },
         TAG_SHUTDOWN => Frame::Shutdown,
+        TAG_FETCH_MANIFEST => Frame::FetchManifest { adapter: r.u64()? },
+        TAG_FETCH_CHUNK => {
+            let digest = r.string()?;
+            let offset = r.u64()?;
+            let len = r.u32()?;
+            // The *request* is also capped: a hostile fetch cannot ask
+            // the server to materialize an oversized reply chunk.
+            if len as usize > MAX_CHUNK_BYTES {
+                return Err(WireError::ChunkTooLarge {
+                    declared: len as usize,
+                    max: MAX_CHUNK_BYTES,
+                });
+            }
+            Frame::FetchChunk {
+                digest,
+                offset,
+                len,
+            }
+        }
+        TAG_PUSH_MANIFEST => Frame::PushManifest {
+            json: r.string()?,
+            digest: r.string()?,
+        },
+        TAG_PUSH_CHUNK => Frame::PushChunk {
+            digest: r.string()?,
+            offset: r.u64()?,
+            total: r.u64()?,
+            bytes: r.bytes()?,
+            chunk_digest: r.string()?,
+        },
+        TAG_ARTIFACT_STAT => Frame::ArtifactStat,
         TAG_WELCOME => Frame::Welcome {
             version: r.u16()?,
             server: r.string()?,
@@ -396,6 +580,27 @@ pub fn decode(bytes: &[u8]) -> Result<Frame, WireError> {
         TAG_OK => Frame::OkReply,
         TAG_ERR => Frame::ErrReply {
             message: r.string()?,
+        },
+        TAG_MANIFEST_REPLY => Frame::ManifestReply {
+            found: r.bool()?,
+            json: r.string()?,
+            digest: r.string()?,
+        },
+        TAG_CHUNK_REPLY => Frame::ChunkReply {
+            digest: r.string()?,
+            offset: r.u64()?,
+            total: r.u64()?,
+            bytes: r.bytes()?,
+            chunk_digest: r.string()?,
+        },
+        TAG_PUSH_ACK => Frame::PushAck {
+            complete: r.bool()?,
+            have: r.u64()?,
+        },
+        TAG_ARTIFACT_STAT_REPLY => Frame::ArtifactStatReply {
+            store_hits: r.u64()?,
+            synthetic_seeds: r.u64()?,
+            blobs: r.u64()?,
         },
         tag => return Err(WireError::UnknownTag { tag, context: "frame" }),
     };
@@ -835,6 +1040,13 @@ impl Writer {
         self.u32(s.len() as u32);
         self.out.extend_from_slice(s.as_bytes());
     }
+    /// Raw byte payload (artifact chunks). Encoding is total; the
+    /// *decoder* enforces [`MAX_CHUNK_BYTES`], and honest senders chunk
+    /// below it.
+    fn bytes(&mut self, b: &[u8]) {
+        self.u32(b.len() as u32);
+        self.out.extend_from_slice(b);
+    }
     fn vec_i32(&mut self, v: &[i32]) {
         self.u32(v.len() as u32);
         for x in v {
@@ -935,6 +1147,21 @@ impl<'a> Reader<'a> {
         let n = self.counted(1)?;
         let bytes = self.take(n)?;
         String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadString)
+    }
+
+    /// Raw byte payload with an absolute size cap: the declared length
+    /// is checked against [`MAX_CHUNK_BYTES`] *before* the bytes-present
+    /// check, so a hostile prefix is a typed [`WireError::ChunkTooLarge`]
+    /// no matter how large the enclosing frame is.
+    fn bytes(&mut self) -> Result<Vec<u8>, WireError> {
+        let n = self.u32()? as usize;
+        if n > MAX_CHUNK_BYTES {
+            return Err(WireError::ChunkTooLarge {
+                declared: n,
+                max: MAX_CHUNK_BYTES,
+            });
+        }
+        Ok(self.take(n)?.to_vec())
     }
 
     fn vec_i32(&mut self) -> Result<Vec<i32>, WireError> {
@@ -1131,6 +1358,92 @@ mod tests {
             Err(WireError::BadValue {
                 what: "reason-depth",
                 got: MAX_REASON_DEPTH as u64,
+            })
+        );
+    }
+
+    #[test]
+    fn artifact_frames_roundtrip() {
+        roundtrip(Frame::FetchManifest { adapter: 42 });
+        roundtrip(Frame::FetchChunk {
+            digest: "ab".repeat(32),
+            offset: 1 << 40,
+            len: MAX_CHUNK_BYTES as u32,
+        });
+        roundtrip(Frame::PushManifest {
+            json: "{\n  \"adapter\": 1\n}".into(),
+            digest: "0f".repeat(32),
+        });
+        roundtrip(Frame::PushChunk {
+            digest: "12".repeat(32),
+            offset: 0,
+            total: 1024,
+            bytes: (0..255u8).collect(),
+            chunk_digest: "34".repeat(32),
+        });
+        roundtrip(Frame::ArtifactStat);
+        roundtrip(Frame::ManifestReply {
+            found: false,
+            json: String::new(),
+            digest: String::new(),
+        });
+        roundtrip(Frame::ManifestReply {
+            found: true,
+            json: "{}".into(),
+            digest: "aa".repeat(32),
+        });
+        roundtrip(Frame::ChunkReply {
+            digest: "bc".repeat(32),
+            offset: 512,
+            total: 4096,
+            bytes: vec![],
+            chunk_digest: "de".repeat(32),
+        });
+        roundtrip(Frame::PushAck {
+            complete: true,
+            have: u64::MAX,
+        });
+        roundtrip(Frame::ArtifactStatReply {
+            store_hits: 3,
+            synthetic_seeds: 0,
+            blobs: 17,
+        });
+    }
+
+    #[test]
+    fn hostile_chunk_length_is_capped_before_allocation() {
+        // A PushChunk whose byte payload declares > MAX_CHUNK_BYTES:
+        // typed ChunkTooLarge, checked before the bytes-present check.
+        let mut w = Writer::new();
+        w.u16(MAGIC);
+        w.u16(VERSION);
+        w.u8(TAG_PUSH_CHUNK);
+        w.string(&"ab".repeat(32));
+        w.u64(0);
+        w.u64(1 << 30);
+        w.u32((MAX_CHUNK_BYTES + 1) as u32); // hostile length prefix
+        w.u8(0xAA); // almost no actual payload
+        assert_eq!(
+            decode(&w.out),
+            Err(WireError::ChunkTooLarge {
+                declared: MAX_CHUNK_BYTES + 1,
+                max: MAX_CHUNK_BYTES,
+            })
+        );
+
+        // Same cap on the *request* side: an oversized FetchChunk len.
+        let mut w = Writer::new();
+        w.u16(MAGIC);
+        w.u16(VERSION);
+        w.u8(TAG_FETCH_CHUNK);
+        w.string(&"cd".repeat(32));
+        w.u64(0);
+        w.u32(u32::MAX);
+        assert_eq!(
+            decode(&w.out),
+            Err(WireError::ChunkTooLarge {
+                declared: u32::MAX as usize,
+                max: MAX_CHUNK_BYTES,
             })
         );
     }

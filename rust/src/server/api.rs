@@ -763,10 +763,42 @@ pub trait ServingFront {
         None
     }
 
+    /// Where this front's `install_adapter` calls sourced their weights:
+    /// the content-addressed [`crate::artifacts::ArtifactStore`] vs
+    /// synthetic re-seeding. Backends without install tracking report
+    /// zeros; cluster fronts aggregate. The migration acceptance
+    /// assertion — "zero synthetic re-seeding on the target" — reads
+    /// these counters.
+    fn install_source_stats(&self) -> InstallSourceStats {
+        InstallSourceStats::default()
+    }
+
     /// Drive iterations until idle.
     fn run_until_idle(&mut self) -> anyhow::Result<()> {
         while self.poll()? {}
         Ok(())
+    }
+}
+
+/// Install provenance counters (see
+/// [`ServingFront::install_source_stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct InstallSourceStats {
+    /// Installs whose weights came from the artifact store, digest-
+    /// verified.
+    pub store_hits: u64,
+    /// Installs that fell back to synthetic seeding (no manifest in the
+    /// store, or no store attached).
+    pub synthetic_seeds: u64,
+}
+
+impl InstallSourceStats {
+    /// Component-wise sum — cluster aggregation.
+    pub fn merge(&self, other: &InstallSourceStats) -> InstallSourceStats {
+        InstallSourceStats {
+            store_hits: self.store_hits + other.store_hits,
+            synthetic_seeds: self.synthetic_seeds + other.synthetic_seeds,
+        }
     }
 }
 

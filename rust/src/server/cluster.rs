@@ -94,8 +94,8 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use super::api::{
-    EventChannel, LifecycleState, Priority, RejectReason, RequestEvent, RequestHandle,
-    ResumeState, ServeRequest, ServingFront, SloSpec,
+    EventChannel, InstallSourceStats, LifecycleState, Priority, RejectReason, RequestEvent,
+    RequestHandle, ResumeState, ServeRequest, ServingFront, SloSpec,
 };
 use super::metrics::{ColdStartStats, MetricsRecorder};
 use crate::model::LoraSpec;
@@ -1054,6 +1054,20 @@ impl ServingFront for ClusterFront {
             }
         }
         any.then_some(total)
+    }
+
+    /// Aggregate install-provenance counters across backends (poisoned
+    /// backends are skipped). The migration acceptance check — zero
+    /// synthetic re-seeds on a streamed-install target — reads this.
+    fn install_source_stats(&self) -> InstallSourceStats {
+        let mut total = InstallSourceStats::default();
+        for s in 0..self.backends.len() {
+            if self.health[s].poisoned {
+                continue;
+            }
+            total = total.merge(self.backends[s].install_source_stats());
+        }
+        total
     }
 }
 

@@ -45,9 +45,10 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::api::{
-    ActiveRequest, EventChannel, FinishReason, RejectReason, RequestEvent, RequestHandle,
-    ResumeState, SamplingParams, ServeRequest, ServingFront,
+    ActiveRequest, EventChannel, FinishReason, InstallSourceStats, RejectReason, RequestEvent,
+    RequestHandle, ResumeState, SamplingParams, ServeRequest, ServingFront,
 };
+use crate::artifacts::{ArtifactStore, StoreError};
 use super::batcher::{Batcher, NextAction, RunningReq};
 use super::kvcache::{KvCacheManager, KvError};
 use super::metrics::{ColdStartStats, MetricsRecorder, TtftBreakdown};
@@ -172,6 +173,12 @@ pub struct InferenceServer {
     /// CPU-LoRA worker pool (None ⇒ CaraServe falls back to the modeled
     /// overlap).
     cpu: Option<CpuLoraEngine>,
+    /// Content-addressed artifact store installs source weights from
+    /// (None ⇒ every install seeds synthetically). Shared with the wire
+    /// serving loop so streamed blobs become installable immediately.
+    store: Option<Arc<Mutex<ArtifactStore>>>,
+    /// Install provenance counters (store vs synthetic).
+    install_sources: InstallSourceStats,
     /// In-flight adapter load windows (real CaraServe path).
     loads: AsyncLoader,
     /// Requests already counted in the deferred-collision metric (each
@@ -244,6 +251,8 @@ impl InferenceServer {
             metrics: MetricsRecorder::new(),
             table: Arc::new(AdapterTable::new()),
             cpu: None,
+            store: None,
+            install_sources: InstallSourceStats::default(),
             loads: AsyncLoader::new(),
             deferred_ids: std::collections::HashSet::new(),
             handles: HashMap::new(),
@@ -284,6 +293,17 @@ impl InferenceServer {
     /// a per-layer LoRA seam)?
     pub fn cpu_assist_active(&self) -> bool {
         self.cpu.is_some() && self.runtime.supports_cpu_assist()
+    }
+
+    /// Attach a content-addressed artifact store:
+    /// [`ServingFront::install_adapter`] sources weights from it
+    /// (digest-verified on every read) and falls back to synthetic
+    /// seeding only for adapters the store has no manifest for. The
+    /// store is shared (`Arc<Mutex<..>>`) with the wire serving loop,
+    /// so blobs a router pushes mid-flight become installable without a
+    /// restart — the streamed-migration path.
+    pub fn attach_store(&mut self, store: Arc<Mutex<ArtifactStore>>) {
+        self.store = Some(store);
     }
 
     /// Requests (queued or running) currently bound to `adapter` — what
@@ -1349,7 +1369,10 @@ impl ServingFront for InferenceServer {
     }
 
     /// Register the adapter in the host repository and install its
-    /// (synthetic, seeded) weights in the shared host-memory table.
+    /// weights in the shared host-memory table — digest-verified from
+    /// the attached artifact store when it holds a manifest for the
+    /// adapter, synthetically seeded otherwise (provenance counted in
+    /// [`ServingFront::install_source_stats`]).
     /// Requests against uninstalled adapters are rejected at submission.
     /// Callable at any point in the server's lifetime — the coordinator
     /// installs adapters on live servers during migration. Re-installing
@@ -1370,8 +1393,41 @@ impl ServingFront for InferenceServer {
             }
             None => {}
         }
-        self.table
-            .install_synthetic(spec.id, self.runtime.hidden(), spec.rank);
+        let hidden = self.runtime.hidden();
+        let stored = match &self.store {
+            Some(store) => {
+                // The lock-idiom `.unwrap()` the hot-path lint exempts:
+                // a poisoned store lock is unrecoverable process state.
+                match store.lock().unwrap().load_stack(spec.id, hidden) {
+                    Ok((rank, stack)) => {
+                        anyhow::ensure!(
+                            rank == spec.rank,
+                            "artifact store holds adapter {} at rank {rank}, spec says {}",
+                            spec.id,
+                            spec.rank
+                        );
+                        Some(stack)
+                    }
+                    // No manifest ⇒ the synthetic fallback below. Every
+                    // *other* store failure (corrupt blob, size
+                    // mismatch) must refuse the install: serving wrong
+                    // bytes is worse than refusing.
+                    Err(StoreError::NotFound { .. }) => None,
+                    Err(e) => return Err(anyhow!("artifact store: {e}")),
+                }
+            }
+            None => None,
+        };
+        match stored {
+            Some(stack) => {
+                self.table.install(spec.id, stack);
+                self.install_sources.store_hits += 1;
+            }
+            None => {
+                self.table.install_synthetic(spec.id, hidden, spec.rank);
+                self.install_sources.synthetic_seeds += 1;
+            }
+        }
         self.repo.install(spec.clone());
         if self.unified {
             // A spec change invalidates any paged residency (the rank —
@@ -1448,6 +1504,10 @@ impl ServingFront for InferenceServer {
 
     fn cold_start_stats(&self) -> Option<ColdStartStats> {
         Some(self.metrics.cold_start().clone())
+    }
+
+    fn install_source_stats(&self) -> InstallSourceStats {
+        self.install_sources
     }
 }
 

@@ -42,8 +42,8 @@ pub mod kvcache;
 pub mod metrics;
 
 pub use api::{
-    FinishReason, LifecycleState, Priority, RejectReason, RequestEvent, RequestHandle,
-    ResumeState, SamplingParams, ServeRequest, ServingFront, SloSpec,
+    FinishReason, InstallSourceStats, LifecycleState, Priority, RejectReason, RequestEvent,
+    RequestHandle, ResumeState, SamplingParams, ServeRequest, ServingFront, SloSpec,
 };
 pub use batcher::{Batcher, NextAction};
 pub use cluster::{ClusterFront, Health, RetryPolicy};

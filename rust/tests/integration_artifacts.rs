@@ -1,0 +1,335 @@
+//! The artifact pipeline end to end, across real OS processes (PR 10):
+//!
+//! 1. A coordinator-driven migration between two `caraserve backend`
+//!    processes moves an adapter by streaming digest-verified blobs
+//!    from the router's content-addressed store — the target installs
+//!    with **zero** synthetic re-seeding (asserted via the wire's
+//!    install-provenance counters) and every in-flight token stream
+//!    stays bitwise identical to the no-migration in-process oracle.
+//! 2. The `caraserve artifacts` CLI round-trips: seed → push to a live
+//!    backend → pull into a fresh store → verify → gc, with pulled
+//!    weights bitwise identical to the seeded generator's.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::Duration;
+
+use caraserve::artifacts::{synthetic_stack, ArtifactStore};
+use caraserve::model::LoraSpec;
+use caraserve::coordinator::{Coordinator, CoordinatorConfig};
+use caraserve::remote::RemoteFront;
+use caraserve::scheduler::registry::{AdapterMeta, GlobalRegistry};
+use caraserve::server::cluster::synthetic::{self, SyntheticConfig};
+use caraserve::server::{ClusterFront, ColdStartMode, LifecycleState, RequestHandle, ServingFront};
+
+/// `NativeConfig::tiny()`'s hidden size — the backends the children run.
+const HIDDEN: usize = 256;
+
+fn base_cfg() -> SyntheticConfig {
+    SyntheticConfig {
+        instances: 2,
+        requests: 16,
+        adapters: 8,
+        seed: 7,
+        threads: 1,
+        cpu_workers: 0,
+        cold_start: ColdStartMode::Cached,
+        kv_pages: 256,
+        polls_per_arrival: 2,
+        skew: 0.0,
+    }
+}
+
+/// Kill-and-reap children and remove scratch state on every exit path.
+struct Fleet {
+    children: Vec<Child>,
+    socks: Vec<PathBuf>,
+    dir: PathBuf,
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+        for s in &self.socks {
+            let _ = std::fs::remove_file(s);
+        }
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+/// Publish the synthetic catalog into a store directory — what
+/// `caraserve artifacts seed` does, via the same `synthetic_stack`
+/// generator the engines' fallback seeding uses.
+fn seed_store(dir: &Path, adapters: usize) {
+    let mut store = ArtifactStore::open(dir).expect("open store");
+    for a in 0..adapters as u64 {
+        let rank = synthetic::rank_of(a);
+        store
+            .publish(a, rank, "tiny", &synthetic_stack(a, HIDDEN, rank))
+            .expect("publish");
+    }
+}
+
+fn spawn_backend(sock: &Path, adapters: usize, store: Option<&Path>, name: &str) -> Child {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_caraserve"));
+    cmd.arg("backend")
+        .arg("--socket")
+        .arg(sock)
+        .args(["--name", name])
+        .args(["--adapters", &adapters.to_string()])
+        .args(["--mode", "cached"])
+        .args(["--threads", "1"])
+        .args(["--kv-pages", "256"]);
+    if let Some(dir) = store {
+        cmd.arg("--store").arg(dir);
+    }
+    cmd.stdout(Stdio::null()).spawn().expect("spawn caraserve backend")
+}
+
+fn connect_retry(path: &Path, name: &str) -> RemoteFront {
+    let mut last = String::new();
+    for _ in 0..750 {
+        match RemoteFront::connect(path, name) {
+            Ok(front) => return front,
+            Err(e) => last = format!("{e:#}"),
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    panic!("backend at {} never came up: {last}", path.display());
+}
+
+/// Coordinator-driven migration across process boundaries: the source
+/// backend installs its whole catalog from its own store (store hits),
+/// the target starts empty, and `install_on` — the exact call the
+/// rebalance tick makes — streams the adapter's blobs to the target
+/// before its install frame lands. Provenance counters prove no
+/// synthetic weights were fabricated anywhere, and streams match the
+/// in-process no-migration oracle bit for bit.
+#[test]
+fn coordinator_migration_streams_weights_with_zero_synthetic_reseeds() {
+    let cfg = base_cfg();
+    let oracle = synthetic::run("rank-aware", &cfg).expect("in-process oracle");
+    assert_eq!(oracle.rejected, 0, "oracle must finish everything");
+
+    let dir = std::env::temp_dir().join(format!(
+        "caraserve-artifacts-migration-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    // Three stores: the source backend's (full catalog), the target's
+    // (empty), the router's (full catalog — migration source of truth).
+    seed_store(&dir.join("store-b0"), cfg.adapters);
+    seed_store(&dir.join("store-router"), cfg.adapters);
+    let router_store = Arc::new(std::sync::Mutex::new(
+        ArtifactStore::open(&dir.join("store-router")).expect("router store"),
+    ));
+
+    let socks = vec![dir.join("b0.sock"), dir.join("b1.sock")];
+    let children = vec![
+        spawn_backend(&socks[0], cfg.adapters, Some(&dir.join("store-b0")), "b0"),
+        spawn_backend(&socks[1], 0, Some(&dir.join("store-b1")), "b1"),
+    ];
+    let fleet = Fleet {
+        children,
+        socks,
+        dir: dir.clone(),
+    };
+
+    // Router: every adapter placed on backend 0 only; the registry
+    // carries the content address (`cas:<digest>`) as its weights path.
+    let registry = Arc::new(GlobalRegistry::new());
+    for a in 0..cfg.adapters as u64 {
+        let weights_path = {
+            let s = router_store.lock().unwrap();
+            let (d, _) = s.manifest_of(a).expect("seeded");
+            format!("cas:{d}")
+        };
+        registry.register(AdapterMeta {
+            id: a,
+            rank: synthetic::rank_of(a),
+            base_model: "tiny".into(),
+            weights_path,
+        });
+        registry.place(a, 0);
+    }
+    let backends: Vec<Box<dyn ServingFront>> = fleet
+        .socks
+        .iter()
+        .enumerate()
+        .map(|(s, p)| {
+            let mut front = connect_retry(p, &format!("router#{s}"));
+            front.attach_store(Arc::clone(&router_store));
+            Box::new(front) as Box<dyn ServingFront>
+        })
+        .collect();
+    let policy = synthetic::policy("rank-aware", cfg.seed).expect("policy");
+    let cluster = ClusterFront::new(backends, policy, registry);
+    let mut coord = Coordinator::new(
+        cluster,
+        CoordinatorConfig {
+            migrate_interval: 0, // migrations driven explicitly below
+            ..Default::default()
+        },
+    );
+
+    // Everything the fleet has installed so far came from a store.
+    let before = coord.install_source_stats();
+    assert_eq!(
+        (before.store_hits, before.synthetic_seeds),
+        (cfg.adapters as u64, 0),
+        "source backend must have installed its catalog from its store"
+    );
+
+    // First half of the workload in flight…
+    let reqs = synthetic::workload(&cfg);
+    let (first, rest) = reqs.split_at(cfg.requests / 2);
+    let mut handles: Vec<RequestHandle> = Vec::with_capacity(cfg.requests);
+    for req in first {
+        handles.push(coord.submit(req.clone()));
+        for _ in 0..cfg.polls_per_arrival {
+            coord.poll().expect("poll");
+        }
+    }
+    let live = handles.iter().filter(|h| !h.is_terminal()).count();
+    assert!(live > 0, "pacing left nothing in flight at migration time");
+
+    // …then the coordinator migrates an adapter to the empty target:
+    // the same `install_on` its rebalance tick issues. The router
+    // streams blobs by digest first, so the target's engine install is
+    // a store hit, not a synthetic seed.
+    let migrated = 3u64;
+    let spec = LoraSpec::standard(migrated, synthetic::rank_of(migrated), "tiny");
+    coord.cluster_mut().install_on(1, &spec).expect("migration install");
+
+    for req in rest {
+        handles.push(coord.submit(req.clone()));
+        for _ in 0..cfg.polls_per_arrival {
+            coord.poll().expect("poll");
+        }
+    }
+    coord.run_until_idle().expect("drain");
+
+    // Acceptance: the target holds the adapter, installed from
+    // streamed digest-verified blobs — zero synthetic re-seeding
+    // anywhere in the fleet.
+    let after = coord.install_source_stats();
+    assert_eq!(
+        after.synthetic_seeds, 0,
+        "a migration target must never fabricate weights"
+    );
+    assert_eq!(
+        after.store_hits,
+        cfg.adapters as u64 + 1,
+        "the migrated install must be a store hit on the target"
+    );
+    {
+        let target = ArtifactStore::open(&dir.join("store-b1")).expect("target store");
+        let (rank, stack) = target.load_stack(migrated, HIDDEN).expect("migrated blobs");
+        assert_eq!(rank, synthetic::rank_of(migrated));
+        let want = synthetic_stack(migrated, HIDDEN, rank);
+        for (g, w) in stack.iter().zip(want.iter()) {
+            assert_eq!(g.a, w.a, "streamed A matrix diverged");
+            assert_eq!(g.b, w.b, "streamed B matrix diverged");
+        }
+        // Exactly one adapter's worth of blobs: 4 tensors + 1 manifest.
+        assert_eq!(target.blob_count().expect("count"), 5);
+    }
+
+    // In-flight and post-migration streams are bitwise identical to
+    // the no-migration oracle.
+    assert_eq!(handles.len(), oracle.streams.len());
+    for (i, h) in handles.iter().enumerate() {
+        assert_eq!(
+            h.state(),
+            LifecycleState::Finished,
+            "request {i} ended {:?} across the migration",
+            h.state()
+        );
+        assert_eq!(
+            h.tokens(),
+            oracle.streams[i],
+            "request {i}: stream diverged across the migration"
+        );
+    }
+    drop(coord);
+    drop(fleet);
+}
+
+/// The CLI pipeline: `seed → push → pull → verify → gc` against a live
+/// backend process, with pulled weights bitwise identical to seeded.
+#[test]
+fn artifacts_cli_seed_push_pull_verify_gc_round_trip() {
+    let dir = std::env::temp_dir().join(format!("caraserve-artifacts-cli-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    let bin = env!("CARGO_BIN_EXE_caraserve");
+    let run = |args: &[&str]| {
+        let out = Command::new(bin).args(args).output().expect("run caraserve");
+        assert!(
+            out.status.success(),
+            "caraserve {args:?} failed:\n{}\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+    };
+    let seed_dir = dir.join("seeded");
+    let seed_dir_s = seed_dir.to_str().unwrap().to_string();
+    // Small hidden keeps the CLI round-trip quick; the generator is
+    // hidden-agnostic, bitwise equality below pins it.
+    run(&["artifacts", "seed", "--store", &seed_dir_s, "--adapters", "4", "--hidden", "64"]);
+    run(&["artifacts", "verify", "--store", &seed_dir_s]);
+
+    // A sim backend with an (empty) attached store to push into.
+    let sock = dir.join("b.sock");
+    let backend_store = dir.join("store-backend");
+    let mut child = Command::new(bin)
+        .arg("backend")
+        .arg("--socket")
+        .arg(&sock)
+        .args(["--name", "cli-host", "--adapters", "0", "--sim"])
+        .arg("--store")
+        .arg(&backend_store)
+        .stdout(Stdio::null())
+        .spawn()
+        .expect("spawn backend");
+    for _ in 0..750 {
+        if std::os::unix::net::UnixStream::connect(&sock).is_ok() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    let sock_s = sock.to_str().unwrap().to_string();
+    run(&["artifacts", "push", "--store", &seed_dir_s, "--socket", &sock_s, "--adapter", "2"]);
+    let fresh = dir.join("fresh");
+    let fresh_s = fresh.to_str().unwrap().to_string();
+    run(&["artifacts", "pull", "--store", &fresh_s, "--socket", &sock_s, "--adapter", "2"]);
+    run(&["artifacts", "verify", "--store", &fresh_s]);
+
+    // Pulled weights are bitwise what the generator seeds.
+    let store = ArtifactStore::open(&fresh).expect("open pulled store");
+    let rank = synthetic::rank_of(2);
+    let (got_rank, stack) = store.load_stack(2, 64).expect("load pulled");
+    assert_eq!(got_rank, rank);
+    let want = synthetic_stack(2, 64, rank);
+    for (g, w) in stack.iter().zip(want.iter()) {
+        assert_eq!(g.a, w.a, "pulled A matrix diverged from seeded");
+        assert_eq!(g.b, w.b, "pulled B matrix diverged from seeded");
+    }
+    drop(store);
+
+    // gc on a store with no dangling blobs collects nothing and exits 0.
+    run(&["artifacts", "gc", "--store", &fresh_s]);
+    let store = ArtifactStore::open(&fresh).expect("reopen");
+    assert_eq!(store.len(), 1);
+    assert_eq!(store.blob_count().expect("count"), 5);
+
+    let _ = child.kill();
+    let _ = child.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}

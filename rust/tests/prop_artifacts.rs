@@ -1,0 +1,303 @@
+//! Property tests for the content-addressed artifact store
+//! (`caraserve::artifacts`): digest stability across re-saves, dedup
+//! refcounting, GC safety under random publish/remove interleavings,
+//! typed rejection of corrupted blobs, chunking-independence of
+//! streamed ingest, and the engine's install-provenance counters when
+//! a store is attached. Seeded RNG throughout so failures replay.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use caraserve::artifacts::{synthetic_stack, ArtifactStore, StoreError};
+use caraserve::util::rng::Rng;
+
+/// Fresh per-test store root under the system temp dir.
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("caraserve-prop-artifacts")
+        .join(format!("{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+const HIDDEN: usize = 32;
+
+/// Random (adapter, rank, stack-seed) population. Distinct adapters
+/// sometimes share a stack seed, so dedup paths get exercised.
+fn arb_catalog(rng: &mut Rng, n: usize) -> Vec<(u64, usize, u64)> {
+    (0..n as u64)
+        .map(|a| {
+            let rank = [8usize, 16, 32, 64][rng.range(0, 4)];
+            let seed = rng.below(4) as u64; // few seeds → forced sharing
+            (a, rank, seed)
+        })
+        .collect()
+}
+
+#[test]
+fn digests_are_stable_across_resaves_and_reopens() {
+    let dir = tmp("stable");
+    let mut rng = Rng::new(0xD16E57);
+    let catalog = arb_catalog(&mut rng, 12);
+
+    let mut store = ArtifactStore::open(&dir).expect("open");
+    let mut digests = Vec::new();
+    for (a, rank, seed) in &catalog {
+        let stack = synthetic_stack(*seed, HIDDEN, *rank);
+        digests.push(store.publish(*a, *rank, "tiny", &stack).expect("publish"));
+    }
+    let index_bytes = std::fs::read(dir.join("index.json")).expect("index");
+    drop(store);
+
+    // Ten reopen cycles: the index re-save is byte-stable and every
+    // manifest digest is unchanged (content addressing means any drift
+    // would be a broken canonical form).
+    for cycle in 0..10 {
+        let store = ArtifactStore::open(&dir).expect("reopen");
+        for ((a, _, _), want) in catalog.iter().zip(&digests) {
+            let (got, _) = store.manifest_of(*a).expect("indexed");
+            assert_eq!(got, want, "cycle {cycle}: adapter {a} digest drifted");
+        }
+        drop(store);
+        let again = std::fs::read(dir.join("index.json")).expect("index");
+        assert_eq!(again, index_bytes, "cycle {cycle}: index re-save not byte-stable");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dedup_refcounts_match_manifest_references() {
+    let dir = tmp("refcount");
+    let mut rng = Rng::new(0x5EED);
+    let catalog = arb_catalog(&mut rng, 16);
+
+    let mut store = ArtifactStore::open(&dir).expect("open");
+    for (a, rank, seed) in &catalog {
+        let stack = synthetic_stack(*seed, HIDDEN, *rank);
+        store.publish(*a, *rank, "tiny", &stack).expect("publish");
+    }
+    // Distinct (seed, rank) pairs give 4 tensor blobs each; identical
+    // pairs share all four. blob files = 4·distinct + one manifest per
+    // distinct manifest digest.
+    let mut distinct_stacks = std::collections::BTreeSet::new();
+    let mut distinct_manifests = std::collections::BTreeSet::new();
+    for (a, rank, seed) in &catalog {
+        distinct_stacks.insert((*seed, *rank));
+        distinct_manifests.insert(store.manifest_of(*a).expect("indexed").0.to_string());
+    }
+    assert_eq!(
+        store.blob_count().expect("count"),
+        4 * distinct_stacks.len() + distinct_manifests.len(),
+        "shared stacks must store each tensor blob exactly once"
+    );
+    // Every tensor blob's refcount equals the number of indexed
+    // manifests that reference it.
+    for (a, _, _) in &catalog {
+        let blobs: Vec<_> = {
+            let (_, m) = store.manifest_of(*a).expect("indexed");
+            m.blobs.iter().map(|b| b.digest.clone()).collect()
+        };
+        for digest in blobs {
+            let want = catalog
+                .iter()
+                .filter(|(other, _, _)| {
+                    let (_, m) = store.manifest_of(*other).expect("indexed");
+                    m.blobs.iter().any(|b| b.digest == digest)
+                })
+                .count();
+            assert_eq!(store.refcount(&digest), want, "blob {digest}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// GC safety as a property: under random publish/remove/gc
+/// interleavings, an indexed ("placed") adapter always survives GC
+/// with every blob intact, and GC'd bytes never resurface.
+#[test]
+fn gc_never_collects_a_placed_adapter() {
+    let dir = tmp("gc-safety");
+    let mut rng = Rng::new(0x6C);
+    let mut store = ArtifactStore::open(&dir).expect("open");
+    let mut placed: Vec<(u64, usize, u64)> = Vec::new();
+    let mut next_adapter = 0u64;
+
+    for step in 0..120 {
+        match rng.range(0, 3) {
+            0 => {
+                let rank = [8usize, 16, 32, 64][rng.range(0, 4)];
+                let seed = rng.below(6) as u64;
+                let stack = synthetic_stack(seed, HIDDEN, rank);
+                store
+                    .publish(next_adapter, rank, "tiny", &stack)
+                    .expect("publish");
+                placed.push((next_adapter, rank, seed));
+                next_adapter += 1;
+            }
+            1 if !placed.is_empty() => {
+                let at = rng.range(0, placed.len());
+                let (a, _, _) = placed.swap_remove(at);
+                assert!(store.remove(a).expect("remove"));
+            }
+            _ => {
+                store.gc().expect("gc");
+                // Every placed adapter must still load, bitwise.
+                for (a, rank, seed) in &placed {
+                    let (r, stack) = store
+                        .load_stack(*a, HIDDEN)
+                        .unwrap_or_else(|e| panic!("step {step}: adapter {a} lost to gc: {e}"));
+                    assert_eq!(r, *rank);
+                    let want = synthetic_stack(*seed, HIDDEN, *rank);
+                    for (g, w) in stack.iter().zip(want.iter()) {
+                        assert_eq!(g.a, w.a, "step {step}: adapter {a} A matrix diverged");
+                        assert_eq!(g.b, w.b, "step {step}: adapter {a} B matrix diverged");
+                    }
+                }
+            }
+        }
+    }
+    // Final drain: removing everything and GC'ing empties the blob dir.
+    for (a, _, _) in placed.drain(..) {
+        store.remove(a).expect("remove");
+    }
+    store.gc().expect("final gc");
+    assert_eq!(store.blob_count().expect("count"), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_blobs_are_typed_rejections_not_panics() {
+    let dir = tmp("corrupt");
+    let mut store = ArtifactStore::open(&dir).expect("open");
+    let stack = synthetic_stack(3, HIDDEN, 16);
+    store.publish(3, 16, "tiny", &stack).expect("publish");
+    let first_blob = {
+        let (_, m) = store.manifest_of(3).expect("indexed");
+        m.blobs[0].digest.clone()
+    };
+
+    // Flip one byte of the blob on disk. Install must refuse with the
+    // typed Corrupt error naming the digest — never serve wrong bytes.
+    let path = dir.join("blobs").join(&first_blob);
+    let mut bytes = std::fs::read(&path).expect("read blob");
+    bytes[0] ^= 0x01;
+    std::fs::write(&path, &bytes).expect("rewrite blob");
+
+    match store.load_stack(3, HIDDEN) {
+        Err(StoreError::Corrupt { digest, .. }) => assert_eq!(digest, first_blob),
+        other => panic!("corrupted blob gave {other:?}, wanted StoreError::Corrupt"),
+    }
+    // verify_all sees it too.
+    assert!(matches!(
+        store.verify_all(),
+        Err(StoreError::Corrupt { .. })
+    ));
+    // store_hits never advanced: the corruption was caught pre-serve.
+    assert_eq!(store.store_hits(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Streamed ingest is chunking-independent: any random split of a blob
+/// commits bytes identical to a direct `put_blob`, out-of-order chunks
+/// are typed rejections that reset staging, and nothing commits early.
+#[test]
+fn ingest_is_chunking_independent_and_strictly_sequential() {
+    let dir = tmp("ingest");
+    let mut rng = Rng::new(0x1157);
+    let mut store = ArtifactStore::open(&dir).expect("open");
+
+    for case in 0..40 {
+        let len = 1 + rng.range(0, 4096);
+        let blob: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let digest = caraserve::artifacts::hex_digest(&blob);
+
+        let mut offset = 0usize;
+        while offset < blob.len() {
+            let take = (1 + rng.range(0, 512)).min(blob.len() - offset);
+            let done = store
+                .ingest_chunk(&digest, offset as u64, blob.len() as u64, &blob[offset..offset + take])
+                .expect("ingest");
+            offset += take;
+            assert_eq!(
+                done,
+                offset == blob.len(),
+                "case {case}: commit signal at wrong offset {offset}"
+            );
+            assert_eq!(store.has_blob(&digest), offset == blob.len());
+        }
+        assert_eq!(store.read_blob(&digest).expect("read"), blob, "case {case}");
+    }
+
+    // Out-of-order offset: typed rejection, staging reset to zero.
+    let blob = vec![7u8; 1024];
+    let digest = caraserve::artifacts::hex_digest(&blob);
+    store
+        .ingest_chunk(&digest, 0, 1024, &blob[..256])
+        .expect("first chunk");
+    assert_eq!(store.staged_len(&digest), 256);
+    match store.ingest_chunk(&digest, 512, 1024, &blob[512..768]) {
+        Err(StoreError::ChunkOutOfOrder { expected, got, .. }) => {
+            assert_eq!((expected, got), (256, 512));
+        }
+        other => panic!("out-of-order chunk gave {other:?}"),
+    }
+    assert_eq!(store.staged_len(&digest), 0, "violation must drop staging");
+    assert!(!store.has_blob(&digest), "nothing may commit early");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The engine's install provenance: with a store attached, an adapter
+/// the store holds installs as a store hit; one it lacks falls back to
+/// synthetic seeding; a rank mismatch between manifest and spec is a
+/// refusal, not a silent re-seed.
+#[test]
+fn engine_install_counts_store_hits_and_synthetic_seeds() {
+    use caraserve::model::LoraSpec;
+    use caraserve::runtime::{NativeConfig, NativeRuntime};
+    use caraserve::server::{EngineConfig, InferenceServer, ServingFront};
+
+    let dir = tmp("engine-counters");
+    let cfg = NativeConfig::tiny();
+    let hidden = cfg.hidden;
+    let mut store = ArtifactStore::open(&dir).expect("open");
+    store
+        .publish(1, 8, "tiny", &synthetic_stack(1, hidden, 8))
+        .expect("publish 1");
+    store
+        .publish(2, 16, "tiny", &synthetic_stack(2, hidden, 16))
+        .expect("publish 2");
+    let store = Arc::new(Mutex::new(store));
+
+    let mut engine = InferenceServer::new(
+        NativeRuntime::new(cfg),
+        EngineConfig::default(),
+    )
+    .expect("engine");
+    engine.attach_store(Arc::clone(&store));
+
+    engine
+        .install_adapter(&LoraSpec::standard(1, 8, "tiny"))
+        .expect("store-backed install");
+    engine
+        .install_adapter(&LoraSpec::standard(9, 8, "tiny"))
+        .expect("synthetic fallback install");
+    let stats = engine.install_source_stats();
+    assert_eq!(
+        (stats.store_hits, stats.synthetic_seeds),
+        (1, 1),
+        "one install from the store, one seeded"
+    );
+    assert_eq!(store.lock().unwrap().store_hits(), 1);
+
+    // Manifest says rank 16; the spec claims 8. Refusal, not re-seed.
+    let err = engine
+        .install_adapter(&LoraSpec::standard(2, 8, "tiny"))
+        .expect_err("rank mismatch must refuse");
+    assert!(
+        err.to_string().contains("rank"),
+        "error should name the rank conflict: {err}"
+    );
+    let stats = engine.install_source_stats();
+    assert_eq!((stats.store_hits, stats.synthetic_seeds), (1, 1));
+    let _ = std::fs::remove_dir_all(&dir);
+}

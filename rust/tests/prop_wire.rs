@@ -6,7 +6,7 @@
 //! so a counterexample replays deterministically.
 
 use caraserve::model::{LoraSpec, TargetMatrix};
-use caraserve::remote::wire::{decode, encode, Frame, WireError, MAGIC, VERSION};
+use caraserve::remote::wire::{decode, encode, Frame, WireError, MAGIC, MAX_CHUNK_BYTES, VERSION};
 use caraserve::scheduler::{AdapterSet, ServerStats};
 use caraserve::server::metrics::ColdStartStats;
 use caraserve::server::{
@@ -181,9 +181,31 @@ fn arb_spec(rng: &mut Rng) -> LoraSpec {
     spec
 }
 
-/// One random frame, uniform over all 21 variants.
+/// A digest-shaped string: usually 64 lowercase hex chars, sometimes
+/// arbitrary text (the codec carries digests opaquely; validation is
+/// the store's job).
+fn arb_digest(rng: &mut Rng) -> String {
+    if rng.chance(0.3) {
+        return arb_string(rng);
+    }
+    (0..64)
+        .map(|_| {
+            let d = rng.below(16) as u32;
+            char::from_digit(d, 16).unwrap()
+        })
+        .collect()
+}
+
+/// A chunk payload within the decoder's cap (frames declaring more
+/// than [`MAX_CHUNK_BYTES`] are refused by design — tested separately).
+fn arb_chunk_bytes(rng: &mut Rng) -> Vec<u8> {
+    let len = rng.range(0, 256);
+    (0..len).map(|_| rng.next_u64() as u8).collect()
+}
+
+/// One random frame, uniform over all 30 variants.
 fn arb_frame(rng: &mut Rng) -> Frame {
-    match rng.range(0, 21) {
+    match rng.range(0, 30) {
         0 => Frame::Hello {
             client: arb_string(rng),
         },
@@ -249,8 +271,49 @@ fn arb_frame(rng: &mut Rng) -> Frame {
             nonce: rng.next_u64(),
         },
         19 => Frame::OkReply,
-        _ => Frame::ErrReply {
+        20 => Frame::ErrReply {
             message: arb_string(rng),
+        },
+        21 => Frame::FetchManifest {
+            adapter: rng.next_u64(),
+        },
+        22 => Frame::FetchChunk {
+            digest: arb_digest(rng),
+            offset: rng.next_u64(),
+            len: rng.range(0, MAX_CHUNK_BYTES + 1) as u32,
+        },
+        23 => Frame::PushManifest {
+            json: arb_string(rng),
+            digest: arb_digest(rng),
+        },
+        24 => Frame::PushChunk {
+            digest: arb_digest(rng),
+            offset: rng.next_u64(),
+            total: rng.next_u64(),
+            bytes: arb_chunk_bytes(rng),
+            chunk_digest: arb_digest(rng),
+        },
+        25 => Frame::ArtifactStat,
+        26 => Frame::ManifestReply {
+            found: rng.chance(0.5),
+            json: arb_string(rng),
+            digest: arb_digest(rng),
+        },
+        27 => Frame::ChunkReply {
+            digest: arb_digest(rng),
+            offset: rng.next_u64(),
+            total: rng.next_u64(),
+            bytes: arb_chunk_bytes(rng),
+            chunk_digest: arb_digest(rng),
+        },
+        28 => Frame::PushAck {
+            complete: rng.chance(0.5),
+            have: rng.next_u64(),
+        },
+        _ => Frame::ArtifactStatReply {
+            store_hits: rng.next_u64(),
+            synthetic_seeds: rng.next_u64(),
+            blobs: rng.next_u64(),
         },
     }
 }
@@ -364,6 +427,40 @@ fn oversized_declared_counts_are_refused() {
     assert!(matches!(decode(&bytes), Err(WireError::Oversized { .. })));
 }
 
+/// A hostile chunk-length prefix — any declared size over the cap, on
+/// either the push or the reply frame — is refused as `ChunkTooLarge`
+/// before any allocation, regardless of how many payload bytes follow.
+#[test]
+fn hostile_chunk_lengths_are_capped() {
+    let mut rng = Rng::new(0xB10B);
+    for _ in 0..300 {
+        let tag = if rng.chance(0.5) { 15 } else { 75 }; // PushChunk | ChunkReply
+        let declared = MAX_CHUNK_BYTES + 1 + rng.range(0, 1 << 10);
+        let mut bytes = vec![
+            (MAGIC & 0xFF) as u8,
+            (MAGIC >> 8) as u8,
+            (VERSION & 0xFF) as u8,
+            (VERSION >> 8) as u8,
+            tag,
+        ];
+        // digest: empty string (u32 len = 0), then offset + total.
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&rng.next_u64().to_le_bytes());
+        bytes.extend_from_slice(&rng.next_u64().to_le_bytes());
+        // The hostile length prefix, backed by a few real bytes only.
+        bytes.extend_from_slice(&(declared as u32).to_le_bytes());
+        bytes.extend((0..rng.range(0, 16)).map(|_| rng.next_u64() as u8));
+        assert_eq!(
+            decode(&bytes),
+            Err(WireError::ChunkTooLarge {
+                declared,
+                max: MAX_CHUNK_BYTES,
+            }),
+            "tag {tag} declaring {declared}"
+        );
+    }
+}
+
 /// Every version word other than [`VERSION`] is refused typed, and
 /// every tag outside the defined ranges is `UnknownTag` — across the
 /// whole u8 space, not just a sampled corner.
@@ -378,7 +475,7 @@ fn foreign_versions_and_tags_are_typed() {
         bytes[3] = (got >> 8) as u8;
         assert_eq!(decode(&bytes), Err(WireError::UnknownVersion { got }));
     }
-    let valid = |t: u8| (1..=11).contains(&t) || (64..=73).contains(&t);
+    let valid = |t: u8| (1..=16).contains(&t) || (64..=77).contains(&t);
     for tag in 0..=u8::MAX {
         if valid(tag) {
             continue;
